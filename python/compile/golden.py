@@ -1,0 +1,71 @@
+"""Golden-vector export for cross-layer validation.
+
+Generates deterministic (seeded) weights + inputs for the smallest AOT
+variant, evaluates the L2 JAX model, and writes everything as JSON.  The
+Rust tests (``rust/tests/pjrt_cross_check.rs``) then assert that
+
+  1. the PJRT-loaded HLO artifact reproduces these probabilities, and
+  2. the native Rust forward pass (fed the same tables in direct-index
+     mode) reproduces them too,
+
+closing the L1 (pallas) == L2 (jax) == L3 (rust) triangle.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (DeepFfmConfig, deep_ffm_forward, example_args,
+                           mlp_param_shapes)
+
+GOLDEN_CFG = DeepFfmConfig(fields=4, latent_dim=2, buckets=256,
+                           hidden=(8,), batch=8)
+GOLDEN_FFM_CFG = DeepFfmConfig(fields=4, latent_dim=2, buckets=256,
+                               hidden=(), batch=8)
+
+
+def flat(a) -> list:
+    return np.asarray(a, dtype=np.float64).reshape(-1).tolist()
+
+
+def export(cfg: DeepFfmConfig, seed: int) -> dict:
+    lr_table, ffm_table, mlp, idx, vals = example_args(cfg, seed=seed)
+    # Non-trivial values exercise the x_i * x_j product path.
+    vals = vals * (1.0 + 0.25 * jnp.arange(cfg.fields, dtype=jnp.float32))
+    probs = deep_ffm_forward(cfg, lr_table, ffm_table, mlp, idx, vals)
+    return {
+        "name": cfg.name(),
+        "seed": seed,
+        "fields": cfg.fields,
+        "latent_dim": cfg.latent_dim,
+        "buckets": cfg.buckets,
+        "hidden": list(cfg.hidden),
+        "batch": cfg.batch,
+        "lr_table": flat(lr_table),
+        "ffm_table": flat(ffm_table),
+        "mlp": [flat(p) for p in mlp],
+        "mlp_shapes": [list(s) for s in mlp_param_shapes(cfg)],
+        "idx": np.asarray(idx).reshape(-1).tolist(),
+        "vals": flat(vals),
+        "probs": flat(probs),
+    }
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    os.makedirs(out_dir, exist_ok=True)
+    goldens = [export(GOLDEN_CFG, seed=7), export(GOLDEN_FFM_CFG, seed=11)]
+    path = os.path.join(out_dir, "golden.json")
+    with open(path, "w") as f:
+        json.dump(goldens, f)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Pallas kernel for the field-aware FFM pairwise interaction (L1).
+
+The compute hot-spot of the DeepFFM forward pass is the field-aware
+pairwise interaction with the DiagMask:
+
+    out[b, i, j] = <emb[b, i, j, :], emb[b, j, i, :]> * x_i * x_j   (i < j)
+
+Hardware adaptation (§Hardware-Adaptation in DESIGN.md): the paper's
+production engine vectorizes this on CPU SIMD by laying latents out
+field-major so the inner dot product is a stride-1 K-loop.  On TPU the
+same insight becomes a VMEM-tiled batched contraction: the grid iterates
+over the batch dimension, one example's [F, F, K] latent block is staged
+into VMEM (F=39, K=4 -> ~24 KB in f32, far below VMEM capacity, leaving
+room for multi-example batch tiles), and the K-axis contraction
+``einsum('ijk,jik->ij')`` maps onto the MXU/VPU as a transposed
+elementwise-multiply + reduce.  BlockSpec expresses the HBM->VMEM
+schedule that the CPU code expresses with cache-blocked loops.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO so
+the AOT artifact runs anywhere (including the Rust xla-crate client).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffm_kernel(emb_ref, vals_ref, out_ref):
+    """One grid step: a [TB, F, F, K] tile of examples.
+
+    emb_ref:  [TB, F, F, K] VMEM tile of field-aware latents.
+    vals_ref: [TB, F]       feature values.
+    out_ref:  [TB, F, F]    masked pair interactions.
+    """
+    emb = emb_ref[...]
+    vals = vals_ref[...]
+    tb, f, _, k = emb.shape
+    # Transposed-field dot product over K: <emb[b,i,j], emb[b,j,i]>.
+    # jnp.swapaxes keeps this a fused multiply+reduce on the VPU; the
+    # contraction is K-minor so it vectorizes along the lane dimension.
+    dots = jnp.sum(emb * jnp.swapaxes(emb, 1, 2), axis=-1)  # [TB, F, F]
+    # Value outer product x_i * x_j.
+    xx = vals[:, :, None] * vals[:, None, :]
+    # DiagMask: strict upper triangle only (halves downstream combos).
+    rows = jax.lax.broadcasted_iota(jnp.int32, (f, f), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (f, f), 1)
+    mask = (rows < cols).astype(emb.dtype)
+    out_ref[...] = dots * xx * mask[None, :, :]
+
+
+def ffm_interaction(emb: jnp.ndarray, vals: jnp.ndarray,
+                    batch_tile: int = 8) -> jnp.ndarray:
+    """Pallas field-aware interaction. emb [B,F,F,K], vals [B,F] -> [B,F,F].
+
+    The grid tiles the batch dimension; each step keeps one tile's latent
+    block resident in VMEM.  ``batch_tile`` must divide B (callers pad).
+    """
+    b, f, f2, k = emb.shape
+    assert f == f2, "latent tensor must be [B, F, F, K]"
+    if b % batch_tile != 0:
+        batch_tile = 1
+    grid = (b // batch_tile,)
+    return pl.pallas_call(
+        _ffm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch_tile, f, f, k), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((batch_tile, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch_tile, f, f), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f, f), emb.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(emb, vals)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile",))
+def ffm_interaction_jit(emb, vals, batch_tile: int = 8):
+    """Jitted wrapper used by tests and by the L2 model."""
+    return ffm_interaction(emb, vals, batch_tile=batch_tile)
+
+
+def vmem_bytes_per_tile(f: int, k: int, batch_tile: int,
+                        dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (for §Perf).
+
+    emb tile + vals tile + out tile, all resident simultaneously.
+    """
+    emb_b = batch_tile * f * f * k * dtype_bytes
+    vals_b = batch_tile * f * dtype_bytes
+    out_b = batch_tile * f * f * dtype_bytes
+    return emb_b + vals_b + out_b

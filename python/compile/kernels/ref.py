@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the field-aware FFM interaction (DiagMask variant).
+
+This is the correctness reference for the Pallas kernel in
+``ffm_interaction.py`` and (via exported golden vectors) for the Rust
+native forward pass.  Semantics follow §2.1 of the paper:
+
+    FFM(w, x) = sum_{j1 < j2} <w_{j1,f(j2)}, w_{j2,f(j1)}> * x_{j1} x_{j2}
+
+with one feature per field (the production layout of Fwumious Wabbit),
+so f(j) == j and the latent tensor for one example is ``emb[F, F, K]``
+where ``emb[i, g, :]`` is the latent vector of the feature in field ``i``
+used when interacting with field ``g``.
+
+The *DiagMask* keeps only the strict upper triangle (i < j), halving the
+number of pair combinations that downstream blocks must process.  The
+kernel therefore emits the full ``[F, F]`` interaction matrix with the
+lower triangle and diagonal zeroed; the model flattens the upper
+triangle into the MergeNormLayer input.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ffm_interaction_ref(emb: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """Reference field-aware interaction.
+
+    Args:
+      emb:  [B, F, F, K] latent vectors; emb[b, i, g] = latents of the
+            field-i feature oriented toward field g.
+      vals: [B, F] feature values (1.0 for plain categorical one-hots).
+
+    Returns:
+      [B, F, F] with out[b, i, j] = <emb[b,i,j], emb[b,j,i]> * x_i * x_j
+      for i < j, zero elsewhere (DiagMask).
+    """
+    b, f, f2, k = emb.shape
+    assert f == f2, "latent tensor must be [B, F, F, K]"
+    # <emb[b,i,j,:], emb[b,j,i,:]>  -> einsum over k with transposed fields
+    dots = jnp.einsum("bijk,bjik->bij", emb, emb)
+    xx = vals[:, :, None] * vals[:, None, :]  # [B, F, F]
+    mask = jnp.triu(jnp.ones((f, f), dtype=emb.dtype), k=1)
+    return dots * xx * mask[None, :, :]
+
+
+def ffm_scalar_ref(emb: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """Scalar FFM output: sum of the masked pair interactions. [B]."""
+    return ffm_interaction_ref(emb, vals).sum(axis=(1, 2))
+
+
+def triu_flatten(pair_mat: jnp.ndarray) -> jnp.ndarray:
+    """Flatten the strict upper triangle of [B, F, F] into [B, F*(F-1)/2].
+
+    Row-major order: (0,1), (0,2), ..., (0,F-1), (1,2), ...  This order is
+    part of the cross-layer ABI — rust/src/model/block_ffm.rs emits pair
+    outputs in the same order.
+    """
+    b, f, _ = pair_mat.shape
+    iu = jnp.triu_indices(f, k=1)
+    return pair_mat[:, iu[0], iu[1]]

@@ -1,0 +1,169 @@
+"""L2: the DeepFFM forward graph in JAX (build-time only).
+
+Mirrors §2.1 of the paper:
+
+    Dffm(W, w_b, w_c, x) = ffnn(W, MergeNormLayer(lr(w_b, x),
+                                 DiagMask(ffm(w_c, x))))
+
+and mirrors, *bit-for-bit in structure*, the Rust native forward pass in
+``rust/src/model/`` — the integration test
+``rust/tests/pjrt_cross_check.rs`` feeds identical weights/indices to
+both and asserts agreement.  Any change to the spec below must be made
+in both places (the spec constants are exported through the artifact
+manifest).
+
+Cross-layer ABI (shared with rust/src/model/*.rs):
+  * feature order     — one feature per field, fields 0..F-1
+  * pair order        — strict upper triangle, row-major
+  * MergeNormLayer    — concat([lr_out, ffm_pairs]) then RMS-normalize
+                        with eps=1e-6
+  * hidden activation — ReLU
+  * output            — sigmoid(h @ w_out + b_out + lr_out)  (residual LR)
+
+The FFM interaction itself is the L1 Pallas kernel, so lowering this
+function produces a single HLO module containing the kernel body.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.ffm_interaction import ffm_interaction
+from compile.kernels.ref import triu_flatten
+
+MERGE_NORM_EPS = 1e-6
+
+
+class DeepFfmConfig(NamedTuple):
+    """Static architecture description (baked into the HLO artifact)."""
+
+    fields: int          # F
+    latent_dim: int      # K
+    buckets: int         # N — hashed weight rows per table
+    hidden: tuple        # hidden layer widths, () for pure FFM
+    batch: int           # B — the AOT batch size
+
+    @property
+    def pairs(self) -> int:
+        return self.fields * (self.fields - 1) // 2
+
+    @property
+    def merged_dim(self) -> int:
+        return 1 + self.pairs
+
+    def name(self) -> str:
+        h = "x".join(str(w) for w in self.hidden) if self.hidden else "ffm"
+        return (f"deepffm_f{self.fields}_k{self.latent_dim}"
+                f"_n{self.buckets}_h{h}_b{self.batch}")
+
+
+def mlp_param_shapes(cfg: DeepFfmConfig) -> List[tuple]:
+    """Ordered MLP parameter shapes: (W1, b1, ..., Wn, bn, w_out, b_out).
+
+    Empty for a pure-FFM config (no neural block).
+    """
+    if not cfg.hidden:
+        return []
+    shapes = []
+    prev = cfg.merged_dim
+    for h in cfg.hidden:
+        shapes.append((prev, h))
+        shapes.append((h,))
+        prev = h
+    shapes.append((prev,))   # w_out
+    shapes.append(())        # b_out
+    return shapes
+
+
+def lr_forward(lr_table: jnp.ndarray, idx: jnp.ndarray,
+               vals: jnp.ndarray) -> jnp.ndarray:
+    """Logistic-regression block: sum_f w[idx[b,f]] * x[b,f].  [B]."""
+    return jnp.sum(lr_table[idx] * vals, axis=1)
+
+
+def merge_norm_layer(lr_out: jnp.ndarray,
+                     ffm_flat: jnp.ndarray) -> jnp.ndarray:
+    """MergeNormLayer: concat LR + masked FFM outputs, RMS-normalize."""
+    merged = jnp.concatenate([lr_out[:, None], ffm_flat], axis=1)
+    rms = jnp.sqrt(jnp.mean(merged * merged, axis=1, keepdims=True)
+                   + MERGE_NORM_EPS)
+    return merged / rms
+
+
+def deep_ffm_forward(cfg: DeepFfmConfig,
+                     lr_table: jnp.ndarray,
+                     ffm_table: jnp.ndarray,
+                     mlp_params: Sequence[jnp.ndarray],
+                     idx: jnp.ndarray,
+                     vals: jnp.ndarray) -> jnp.ndarray:
+    """Full DeepFFM forward: probabilities [B].
+
+    Args:
+      lr_table:   [N] hashed LR weights.
+      ffm_table:  [N, F, K] hashed field-aware latents.
+      mlp_params: flat list matching ``mlp_param_shapes`` ([] for FFM).
+      idx:        [B, F] int32 hashed bucket per field.
+      vals:       [B, F] f32 feature values.
+    """
+    lr_out = lr_forward(lr_table, idx, vals)                 # [B]
+    emb = ffm_table[idx]                                     # [B, F, F, K]
+    pairs = ffm_interaction(emb, vals)                       # [B, F, F]
+    ffm_flat = triu_flatten(pairs)                           # [B, P]
+
+    if not cfg.hidden:
+        # Pure FFM: logit = LR + sum of pair interactions.
+        return jax.nn.sigmoid(lr_out + jnp.sum(ffm_flat, axis=1))
+
+    h = merge_norm_layer(lr_out, ffm_flat)                   # [B, 1+P]
+    params = list(mlp_params)
+    for _ in cfg.hidden:
+        w, b = params.pop(0), params.pop(0)
+        h = jax.nn.relu(h @ w + b)
+    w_out, b_out = params.pop(0), params.pop(0)
+    logit = h @ w_out + b_out + lr_out                       # residual LR
+    return jax.nn.sigmoid(logit)
+
+
+def make_batched_fn(cfg: DeepFfmConfig):
+    """Return fn(lr_table, ffm_table, *mlp, idx, vals) -> (probs,) for AOT.
+
+    The 1-tuple return matches the rust loader's ``to_tuple1`` unwrap.
+    """
+
+    def fn(lr_table, ffm_table, *rest):
+        *mlp, idx, vals = rest
+        return (deep_ffm_forward(cfg, lr_table, ffm_table, mlp, idx, vals),)
+
+    return fn
+
+
+def example_args(cfg: DeepFfmConfig, seed: int = 0):
+    """Concrete small example arguments (used by tests, not by AOT)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8)
+    lr_table = jax.random.normal(ks[0], (cfg.buckets,)) * 0.1
+    ffm_table = jax.random.normal(
+        ks[1], (cfg.buckets, cfg.fields, cfg.latent_dim)) * 0.1
+    mlp = []
+    for i, shape in enumerate(mlp_param_shapes(cfg)):
+        mlp.append(jax.random.normal(ks[2 + i % 5], shape) * 0.1)
+    idx = jax.random.randint(ks[6], (cfg.batch, cfg.fields), 0, cfg.buckets)
+    vals = jnp.ones((cfg.batch, cfg.fields), jnp.float32)
+    return lr_table, ffm_table, mlp, idx, vals
+
+
+def arg_specs(cfg: DeepFfmConfig):
+    """ShapeDtypeStructs in AOT argument order."""
+    specs = [
+        jax.ShapeDtypeStruct((cfg.buckets,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.buckets, cfg.fields, cfg.latent_dim),
+                             jnp.float32),
+    ]
+    for shape in mlp_param_shapes(cfg):
+        specs.append(jax.ShapeDtypeStruct(shape, jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, cfg.fields), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, cfg.fields), jnp.float32))
+    return specs

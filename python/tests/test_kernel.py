@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas FFM-interaction kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel — hypothesis sweeps
+shapes, dtypes, batch tilings and value distributions and asserts
+allclose against ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ffm_interaction import (ffm_interaction,
+                                             vmem_bytes_per_tile)
+from compile.kernels.ref import (ffm_interaction_ref, ffm_scalar_ref,
+                                 triu_flatten)
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def _case(b, f, k, seed, dtype=jnp.float32, val_scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    emb = _rand(k1, (b, f, f, k), dtype)
+    vals = _rand(k2, (b, f), dtype, scale=val_scale)
+    return emb, vals
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("b,f,k", [(1, 2, 1), (4, 4, 2), (8, 8, 4),
+                                       (16, 39, 4), (3, 5, 7)])
+    def test_matches_ref(self, b, f, k):
+        emb, vals = _case(b, f, k, seed=b * 100 + f * 10 + k)
+        got = ffm_interaction(emb, vals)
+        want = ffm_interaction_ref(emb, vals)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_diag_and_lower_triangle_zero(self):
+        emb, vals = _case(4, 6, 3, seed=1)
+        out = np.asarray(ffm_interaction(emb, vals))
+        for i in range(6):
+            for j in range(i + 1):
+                assert (out[:, i, j] == 0).all(), (i, j)
+
+    def test_batch_tile_invariance(self):
+        emb, vals = _case(16, 5, 3, seed=3)
+        full = ffm_interaction(emb, vals, batch_tile=16)
+        tiled = ffm_interaction(emb, vals, batch_tile=4)
+        single = ffm_interaction(emb, vals, batch_tile=1)
+        np.testing.assert_allclose(full, tiled, rtol=1e-6)
+        np.testing.assert_allclose(full, single, rtol=1e-6)
+
+    def test_non_divisible_batch_falls_back(self):
+        emb, vals = _case(7, 4, 2, seed=5)
+        got = ffm_interaction(emb, vals, batch_tile=8)  # 8 does not divide 7
+        want = ffm_interaction_ref(emb, vals)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_value_scaling_bilinear(self):
+        """out(c*x) == c^2-scaled pairwise: interaction is bilinear in x."""
+        emb, vals = _case(2, 4, 2, seed=9)
+        base = np.asarray(ffm_interaction(emb, vals))
+        scaled = np.asarray(ffm_interaction(emb, vals * 2.0))
+        np.testing.assert_allclose(scaled, base * 4.0, rtol=1e-5)
+
+    def test_zero_values_zero_output(self):
+        emb, vals = _case(2, 4, 2, seed=10)
+        out = ffm_interaction(emb, jnp.zeros_like(vals))
+        assert np.abs(np.asarray(out)).max() == 0.0
+
+    def test_symmetric_pair_semantics(self):
+        """out[i,j] uses <emb[i,j], emb[j,i]>, not <emb[i,j], emb[i,j]>."""
+        b, f, k = 1, 3, 2
+        emb = jnp.zeros((b, f, f, k), jnp.float32)
+        emb = emb.at[0, 0, 1].set(jnp.array([1.0, 2.0]))
+        emb = emb.at[0, 1, 0].set(jnp.array([3.0, 4.0]))
+        # the "wrong" orientation — must NOT contribute to out[0,0,1]
+        emb = emb.at[0, 0, 2].set(jnp.array([100.0, 100.0]))
+        vals = jnp.ones((b, f), jnp.float32)
+        out = np.asarray(ffm_interaction(emb, vals))
+        np.testing.assert_allclose(out[0, 0, 1], 1 * 3 + 2 * 4, rtol=1e-6)
+        np.testing.assert_allclose(out[0, 1, 2], 0.0, atol=1e-7)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    f=st.integers(2, 10),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    val_scale=st.sampled_from([0.0, 0.1, 1.0, 10.0]),
+)
+def test_kernel_matches_ref_hypothesis(b, f, k, seed, val_scale):
+    emb, vals = _case(b, f, k, seed=seed, val_scale=val_scale)
+    got = ffm_interaction(emb, vals)
+    want = ffm_interaction_ref(emb, vals)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 8), f=st.integers(2, 8), k=st.integers(1, 4),
+       seed=st.integers(0, 10**6))
+def test_scalar_ffm_equals_masked_sum(b, f, k, seed):
+    emb, vals = _case(b, f, k, seed=seed)
+    total = ffm_scalar_ref(emb, vals)
+    flat = triu_flatten(ffm_interaction(emb, vals))
+    np.testing.assert_allclose(np.asarray(flat).sum(axis=1),
+                               np.asarray(total), rtol=1e-4, atol=1e-5)
+
+
+def test_triu_flatten_order():
+    """Pair order is part of the cross-layer ABI: row-major upper triangle."""
+    f = 4
+    mat = jnp.arange(f * f, dtype=jnp.float32).reshape(1, f, f)
+    flat = np.asarray(triu_flatten(mat))[0]
+    # (0,1)=1 (0,2)=2 (0,3)=3 (1,2)=6 (1,3)=7 (2,3)=11
+    np.testing.assert_array_equal(flat, [1, 2, 3, 6, 7, 11])
+
+
+def test_vmem_estimate_fits_tpu_vmem():
+    """Production shape (F=39, K=4, tile=8) must fit well under 16 MB VMEM."""
+    assert vmem_bytes_per_tile(39, 4, 8) < 16 * 2**20 // 4

@@ -1,0 +1,150 @@
+"""L2 correctness: DeepFFM graph shapes, semantics, and AOT round-trip."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (MERGE_NORM_EPS, DeepFfmConfig, arg_specs,
+                           deep_ffm_forward, example_args, lr_forward,
+                           make_batched_fn, merge_norm_layer,
+                           mlp_param_shapes)
+
+
+def small_cfg(hidden=(8,), batch=8):
+    return DeepFfmConfig(fields=4, latent_dim=2, buckets=64,
+                         hidden=hidden, batch=batch)
+
+
+class TestConfig:
+    def test_pairs_and_merged_dim(self):
+        cfg = DeepFfmConfig(fields=8, latent_dim=4, buckets=16,
+                            hidden=(16,), batch=4)
+        assert cfg.pairs == 28
+        assert cfg.merged_dim == 29
+
+    def test_name_encodes_architecture(self):
+        assert "h16x16" in DeepFfmConfig(8, 4, 16, (16, 16), 4).name()
+        assert "hffm" in DeepFfmConfig(8, 4, 16, (), 4).name()
+
+    def test_mlp_param_shapes(self):
+        cfg = small_cfg(hidden=(8, 5))
+        shapes = mlp_param_shapes(cfg)
+        d = cfg.merged_dim
+        assert shapes == [(d, 8), (8,), (8, 5), (5,), (5,), ()]
+
+    def test_ffm_config_has_no_mlp(self):
+        assert mlp_param_shapes(small_cfg(hidden=())) == []
+
+
+class TestForward:
+    def test_output_shape_and_range(self):
+        cfg = small_cfg()
+        lr, ffm, mlp, idx, vals = example_args(cfg)
+        p = deep_ffm_forward(cfg, lr, ffm, mlp, idx, vals)
+        assert p.shape == (cfg.batch,)
+        assert ((p > 0) & (p < 1)).all()
+
+    def test_lr_forward_matches_manual(self):
+        table = jnp.array([0.5, -1.0, 2.0, 0.0])
+        idx = jnp.array([[0, 2], [1, 3]], jnp.int32)
+        vals = jnp.array([[1.0, 2.0], [3.0, 1.0]])
+        out = lr_forward(table, idx, vals)
+        np.testing.assert_allclose(out, [0.5 + 4.0, -3.0], rtol=1e-6)
+
+    def test_merge_norm_rms_is_one(self):
+        lr_out = jnp.array([2.0, -1.0])
+        ffm = jnp.array([[1.0, 0.5, -2.0], [0.0, 0.0, 0.0]])
+        m = merge_norm_layer(lr_out, ffm)
+        rms = np.sqrt((np.asarray(m) ** 2).mean(axis=1))
+        np.testing.assert_allclose(rms[0], 1.0, rtol=1e-4)
+        # all-zero-except-lr row still finite thanks to eps
+        assert np.isfinite(np.asarray(m)).all()
+
+    def test_pure_ffm_logit_decomposition(self):
+        """Pure FFM config: p == sigmoid(lr + sum pairs)."""
+        cfg = small_cfg(hidden=())
+        lr, ffm, mlp, idx, vals = example_args(cfg, seed=3)
+        from compile.kernels.ref import ffm_scalar_ref
+        emb = ffm[idx]
+        manual = jax.nn.sigmoid(lr_forward(lr, idx, vals)
+                                + ffm_scalar_ref(emb, vals))
+        got = deep_ffm_forward(cfg, lr, ffm, [], idx, vals)
+        np.testing.assert_allclose(got, manual, rtol=1e-5)
+
+    def test_two_hidden_layers_run(self):
+        cfg = small_cfg(hidden=(8, 4))
+        lr, ffm, mlp, idx, vals = example_args(cfg, seed=5)
+        p = deep_ffm_forward(cfg, lr, ffm, mlp, idx, vals)
+        assert p.shape == (cfg.batch,)
+
+    def test_batched_fn_returns_1tuple(self):
+        cfg = small_cfg()
+        lr, ffm, mlp, idx, vals = example_args(cfg)
+        out = make_batched_fn(cfg)(lr, ffm, *mlp, idx, vals)
+        assert isinstance(out, tuple) and len(out) == 1
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10**6), f=st.integers(2, 6),
+           k=st.integers(1, 4), h=st.sampled_from([(), (4,), (8, 4)]))
+    def test_forward_finite_hypothesis(self, seed, f, k, h):
+        cfg = DeepFfmConfig(fields=f, latent_dim=k, buckets=32,
+                            hidden=h, batch=4)
+        lr, ffm, mlp, idx, vals = example_args(cfg, seed=seed)
+        p = deep_ffm_forward(cfg, lr, ffm, mlp, idx, vals)
+        assert np.isfinite(np.asarray(p)).all()
+        assert ((np.asarray(p) >= 0) & (np.asarray(p) <= 1)).all()
+
+
+class TestAot:
+    def test_lowering_produces_hlo_text(self):
+        from compile.aot import lower_variant
+        cfg = small_cfg()
+        text = lower_variant(cfg)
+        assert "ENTRY" in text and "HloModule" in text
+
+    def test_lowering_deterministic(self):
+        from compile.aot import lower_variant
+        cfg = small_cfg(hidden=())
+        assert lower_variant(cfg) == lower_variant(cfg)
+
+    def test_manifest_entry_schema(self):
+        from compile.aot import manifest_entry
+        cfg = small_cfg()
+        e = manifest_entry(cfg)
+        assert e["args"][0]["name"] == "lr_table"
+        assert e["args"][-1]["name"] == "vals"
+        assert e["output"]["shape"] == [cfg.batch]
+        # arg count: 2 tables + mlp params + idx + vals
+        assert len(e["args"]) == 2 + len(mlp_param_shapes(cfg)) + 2
+
+    def test_arg_specs_match_example_args(self):
+        cfg = small_cfg()
+        specs = arg_specs(cfg)
+        lr, ffm, mlp, idx, vals = example_args(cfg)
+        flat = [lr, ffm, *mlp, idx, vals]
+        assert len(specs) == len(flat)
+        for s, a in zip(specs, flat):
+            assert tuple(s.shape) == tuple(a.shape)
+
+
+class TestGolden:
+    def test_golden_export_is_consistent(self):
+        from compile.golden import GOLDEN_CFG, export
+        g = export(GOLDEN_CFG, seed=7)
+        assert len(g["probs"]) == GOLDEN_CFG.batch
+        assert len(g["lr_table"]) == GOLDEN_CFG.buckets
+        assert len(g["ffm_table"]) == (GOLDEN_CFG.buckets
+                                       * GOLDEN_CFG.fields
+                                       * GOLDEN_CFG.latent_dim)
+        assert all(0.0 < p < 1.0 for p in g["probs"])
+
+    def test_golden_deterministic(self):
+        from compile.golden import GOLDEN_CFG, export
+        a = export(GOLDEN_CFG, seed=7)
+        b = export(GOLDEN_CFG, seed=7)
+        assert a["probs"] == b["probs"]

@@ -1,0 +1,267 @@
+//! §2.2 — AutoML: hyperparameter / architecture search.
+//!
+//! The paper's Table 1 and Figure 3 aggregate "tens of thousands of
+//! runs that represented different algorithm configurations (both
+//! hyperparameters and field specifications)".  This module is that
+//! harness: a seeded random search over the engine's hyperparameter
+//! space, executed across worker threads, producing per-configuration
+//! rolling-AUC traces and the stability table.
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use crate::baselines::OnlineModel;
+use crate::eval::{RollingAuc, StabilityStats};
+use crate::feature::Example;
+use crate::util::rng::Pcg32;
+
+/// One point in the search space (engine-agnostic: the factory closure
+/// interprets it).
+#[derive(Clone, Debug)]
+pub struct CandidateConfig {
+    pub id: usize,
+    pub lr: f32,
+    pub ffm_lr: f32,
+    pub nn_lr: f32,
+    pub power_t: f32,
+    pub l2: f32,
+    pub latent_dim: usize,
+    pub hidden: Vec<usize>,
+    pub seed: u64,
+}
+
+/// Search-space bounds for random sampling.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub lr: (f32, f32),
+    pub power_t: (f32, f32),
+    pub latent_dims: Vec<usize>,
+    pub hidden_options: Vec<Vec<usize>>,
+    pub l2: (f32, f32),
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace {
+            lr: (0.01, 0.5),
+            power_t: (0.2, 0.6),
+            latent_dims: vec![2, 4, 8],
+            hidden_options: vec![vec![8], vec![16], vec![16, 16], vec![32]],
+            l2: (0.0, 1e-4),
+        }
+    }
+}
+
+impl SearchSpace {
+    /// Sample one configuration.
+    pub fn sample(&self, id: usize, rng: &mut Pcg32) -> CandidateConfig {
+        CandidateConfig {
+            id,
+            lr: rng.range_f32(self.lr.0, self.lr.1),
+            ffm_lr: rng.range_f32(self.lr.0, self.lr.1) * 0.5,
+            nn_lr: rng.range_f32(self.lr.0, self.lr.1) * 0.25,
+            power_t: rng.range_f32(self.power_t.0, self.power_t.1),
+            l2: rng.range_f32(self.l2.0, self.l2.1),
+            latent_dim: *rng.choose(&self.latent_dims),
+            hidden: rng.choose(&self.hidden_options).clone(),
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+/// Result of evaluating one candidate: its rolling trace + stability.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub config: CandidateConfig,
+    pub trace: Vec<f64>,
+    pub stats: StabilityStats,
+    pub mean_logloss: f64,
+    pub rig: f64,
+    pub train_seconds: f64,
+}
+
+/// Drive one model over a stream, single pass, returning its result.
+pub fn evaluate_model<M: OnlineModel>(
+    config: CandidateConfig,
+    mut model: M,
+    train: &[Example],
+    test: &[Example],
+    window: usize,
+) -> RunResult {
+    let t = std::time::Instant::now();
+    let mut roll = RollingAuc::new(window);
+    for ex in train {
+        let p = model.learn(ex);
+        roll.add(p, ex.label);
+    }
+    roll.finish();
+    let mut scores = Vec::with_capacity(test.len());
+    let mut labels = Vec::with_capacity(test.len());
+    for ex in test {
+        scores.push(model.predict(ex));
+        labels.push(ex.label);
+    }
+    let test_auc = crate::eval::auc(&scores, &labels);
+    RunResult {
+        config,
+        stats: StabilityStats::from_trace(&roll.points, test_auc),
+        mean_logloss: roll.mean_logloss(),
+        rig: roll.rig(),
+        trace: roll.points,
+        train_seconds: t.elapsed().as_secs_f64(),
+    }
+}
+
+/// Random search: sample `n_configs`, evaluate each on its own copy of
+/// the data across `threads` workers.
+///
+/// `factory(config) -> model` builds the engine under test; the same
+/// search harness therefore sweeps FW variants *and* baselines.
+pub fn random_search<F, M>(
+    space: &SearchSpace,
+    n_configs: usize,
+    threads: usize,
+    seed: u64,
+    train: Arc<Vec<Example>>,
+    test: Arc<Vec<Example>>,
+    window: usize,
+    factory: F,
+) -> Vec<RunResult>
+where
+    F: Fn(&CandidateConfig) -> M + Send + Sync,
+    M: OnlineModel,
+{
+    let mut rng = Pcg32::seeded(seed);
+    let configs: Vec<CandidateConfig> =
+        (0..n_configs).map(|i| space.sample(i, &mut rng)).collect();
+    let work = Arc::new(Mutex::new(configs));
+    let (tx, rx) = channel::<RunResult>();
+    let factory = &factory;
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            let work = work.clone();
+            let tx = tx.clone();
+            let train = train.clone();
+            let test = test.clone();
+            scope.spawn(move || loop {
+                let cfg = {
+                    let mut q = work.lock().expect("automl queue");
+                    match q.pop() {
+                        Some(c) => c,
+                        None => return,
+                    }
+                };
+                let model = factory(&cfg);
+                let result = evaluate_model(cfg, model, &train, &test, window);
+                if tx.send(result).is_err() {
+                    return;
+                }
+            });
+        }
+        drop(tx);
+    });
+    let mut results: Vec<RunResult> = rx.into_iter().collect();
+    results.sort_by_key(|r| r.config.id);
+    results
+}
+
+/// Aggregate many runs of one engine into a single Table-1 row: the
+/// paper pools all configurations' window AUCs ("traces of all trained
+/// models (per engine)").
+pub fn pooled_stats(results: &[RunResult]) -> StabilityStats {
+    let pooled: Vec<f64> =
+        results.iter().flat_map(|r| r.trace.iter().cloned()).collect();
+    let best_test = results
+        .iter()
+        .map(|r| r.stats.test)
+        .fold(f64::MIN, f64::max);
+    StabilityStats::from_trace(&pooled, best_test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::FwModel;
+    use crate::config::ModelConfig;
+    use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+    use crate::model::regressor::Regressor;
+
+    fn data(n: usize, seed: u64) -> Arc<Vec<Example>> {
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), seed, 256);
+        Arc::new(s.take_examples(n))
+    }
+
+    fn ffm_factory(c: &CandidateConfig) -> FwModel {
+        let mut cfg = ModelConfig::ffm(4, c.latent_dim, 256);
+        cfg.lr = c.lr;
+        cfg.ffm_lr = c.ffm_lr;
+        cfg.power_t = c.power_t;
+        cfg.seed = c.seed;
+        FwModel::new("FW-FFM", Regressor::new(&cfg))
+    }
+
+    #[test]
+    fn search_returns_all_configs_in_order() {
+        let train = data(3000, 1);
+        let test = data(500, 2);
+        let results = random_search(
+            &SearchSpace::default(),
+            6,
+            3,
+            99,
+            train,
+            test,
+            1000,
+            ffm_factory,
+        );
+        assert_eq!(results.len(), 6);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.config.id, i);
+            assert!(!r.trace.is_empty());
+            assert!(r.stats.test > 0.3 && r.stats.test < 1.0);
+        }
+    }
+
+    #[test]
+    fn search_deterministic_configs() {
+        let space = SearchSpace::default();
+        let mut a = Pcg32::seeded(5);
+        let mut b = Pcg32::seeded(5);
+        let ca = space.sample(0, &mut a);
+        let cb = space.sample(0, &mut b);
+        assert_eq!(ca.lr, cb.lr);
+        assert_eq!(ca.hidden, cb.hidden);
+    }
+
+    #[test]
+    fn pooled_stats_cover_all_traces() {
+        let train = data(2500, 3);
+        let test = data(400, 4);
+        let results = random_search(
+            &SearchSpace::default(),
+            4,
+            2,
+            7,
+            train,
+            test,
+            500,
+            ffm_factory,
+        );
+        let pooled = pooled_stats(&results);
+        let n_points: usize = results.iter().map(|r| r.trace.len()).sum();
+        assert!(n_points >= 16);
+        assert!(pooled.max >= pooled.avg && pooled.avg >= pooled.min);
+        assert!(pooled.test >= results.iter().map(|r| r.stats.test).fold(f64::MIN, f64::max) - 1e-12);
+    }
+
+    #[test]
+    fn evaluate_reports_costs() {
+        let train = data(1000, 5);
+        let test = data(200, 6);
+        let cfg = SearchSpace::default().sample(0, &mut Pcg32::seeded(1));
+        let r = evaluate_model(cfg.clone(), ffm_factory(&cfg), &train, &test, 300);
+        assert!(r.train_seconds > 0.0);
+        assert!(r.mean_logloss > 0.0);
+        assert!(r.rig.abs() < 1.0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Baseline engines for the §2.2 benchmark (Table 1 / Figure 3):
+//! VW-style linear and MLP models, and a native-Rust DCNv2.
+//!
+//! All engines (including the FW regressor) implement [`OnlineModel`]
+//! so the benchmark harness can drive them uniformly, single-pass with
+//! progressive validation — the paper's protocol.
+
+pub mod dcnv2;
+pub mod vw_linear;
+pub mod vw_mlp;
+
+use crate::feature::Example;
+use crate::model::regressor::Regressor;
+use crate::model::Workspace;
+
+/// A single-pass online binary classifier.
+pub trait OnlineModel: Send {
+    /// Name used in report rows ("FW-DeepFFM", "VW-linear", ...).
+    fn name(&self) -> &str;
+    /// Learn one example, returning the pre-update prediction.
+    fn learn(&mut self, ex: &Example) -> f32;
+    /// Predict without learning.
+    fn predict(&mut self, ex: &Example) -> f32;
+    /// Parameter count (for reports).
+    fn num_weights(&self) -> usize;
+}
+
+/// FW engines (our regressor) as an [`OnlineModel`].
+pub struct FwModel {
+    pub name: String,
+    pub reg: Regressor,
+    ws: Workspace,
+}
+
+impl FwModel {
+    pub fn new(name: &str, reg: Regressor) -> Self {
+        FwModel { name: name.to_string(), reg, ws: Workspace::new() }
+    }
+}
+
+impl OnlineModel for FwModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn learn(&mut self, ex: &Example) -> f32 {
+        self.reg.learn(ex, &mut self.ws)
+    }
+
+    fn predict(&mut self, ex: &Example) -> f32 {
+        self.reg.predict(ex, &mut self.ws)
+    }
+
+    fn num_weights(&self) -> usize {
+        self.reg.num_weights()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+
+    #[test]
+    fn fw_model_wraps_regressor() {
+        let cfg = ModelConfig::ffm(4, 2, 256);
+        let mut m = FwModel::new("FW-FFM", Regressor::new(&cfg));
+        assert_eq!(m.name(), "FW-FFM");
+        assert!(m.num_weights() > 0);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 2, 256);
+        let ex = s.next_example();
+        let p1 = m.predict(&ex);
+        let p2 = m.learn(&ex);
+        assert_eq!(p1, p2);
+    }
+}

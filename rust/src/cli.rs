@@ -1,0 +1,151 @@
+//! Minimal argument parsing for the `fw` launcher (clap is unavailable
+//! in the offline build environment).
+//!
+//! Grammar: `fw <subcommand> [--flag value]... [--switch]... [positional]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        match it.next() {
+            Some(s) if !s.starts_with('-') => args.subcommand = s,
+            Some(s) => return Err(format!("expected subcommand, got '{s}'")),
+            None => return Err("missing subcommand".into()),
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.flags.insert(name.to_string(), v);
+                        }
+                        _ => args.switches.push(name.to_string()),
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flag(name) {
+            Some(v) => v.parse().map_err(|_| format!("--{name} wants an integer, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flag(name) {
+            Some(v) => v.parse().map_err(|_| format!("--{name} wants a number, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+fwumious (fw) — CPU-based Deep FFMs at scale
+
+USAGE:
+    fw <subcommand> [options]
+
+SUBCOMMANDS:
+    train      single-pass online training on a synthetic stream
+               --dataset criteo|avazu|kdd|tiny  --examples N
+               --arch linear|ffm|deepffm  --threads N (hogwild)
+               --prefetch N  --out model.fw
+    serve      score a synthetic request trace through the serving engine
+               --model model.fw  --requests N  --workers N
+               --no-context-cache  --no-simd
+    automl     random hyperparameter search (Table 1 protocol)
+               --configs N  --threads N  --dataset ...  --examples N
+    quantize   quantize a model file        --in a.fw --out a.fwq
+    patch      diff two model files         --old a.fw --new b.fw --out p.fwp
+    apply      apply a patch                --old a.fw --patch p.fwp --out c.fw
+    pjrt       run an AOT artifact against golden vectors
+               --artifacts DIR
+    bench      alias pointing at `cargo bench` harnesses
+    help       this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn basic_parse() {
+        // NOTE: a `--name` followed by a non-flag token binds as a
+        // flag+value pair; bare switches go last (or use `--a --b`).
+        let a = parse(&["train", "--examples", "1000", "pos1", "--fast"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.flag("examples"), Some("1000"));
+        assert!(a.has("fast"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["serve", "--workers=8"]);
+        assert_eq!(a.usize_flag("workers", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["serve", "--no-simd"]);
+        assert!(a.has("no-simd"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["train"]);
+        assert_eq!(a.usize_flag("examples", 5).unwrap(), 5);
+        assert_eq!(a.flag_or("dataset", "tiny"), "tiny");
+        let a = parse(&["train", "--examples", "NaNv"]);
+        assert!(a.usize_flag("examples", 5).is_err());
+        assert!(Args::parse(std::iter::empty()).is_err());
+        assert!(Args::parse(vec!["--x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_switch() {
+        let a = parse(&["serve", "--no-simd", "--workers", "4"]);
+        assert!(a.has("no-simd"));
+        assert_eq!(a.flag("workers"), Some("4"));
+    }
+}

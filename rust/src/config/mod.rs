@@ -1,0 +1,211 @@
+//! Model / training / serving configuration.
+//!
+//! Hyperparameters mirror the paper's search space (§2.2): "power of t,
+//! learning rates for different types of blocks (ffm, lr),
+//! regularization amount".
+
+pub mod parse;
+
+/// Which architecture a [`crate::model::regressor::Regressor`] builds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Architecture {
+    /// Logistic regression only (VW-linear class).
+    Linear,
+    /// LR + FFM (FW-FFM).
+    Ffm,
+    /// LR + FFM + MLP over MergeNorm (FW-DeepFFM).
+    DeepFfm,
+}
+
+/// Full model configuration.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub arch: Architecture,
+    /// Number of FFM fields (namespaces).
+    pub fields: usize,
+    /// FFM latent dimension K.
+    pub latent_dim: usize,
+    /// Hashed bucket count (power of two) shared by LR and FFM tables.
+    pub buckets: u32,
+    /// Hidden layer widths of the neural block (empty = none).
+    pub hidden: Vec<usize>,
+    /// LR-block learning rate.
+    pub lr: f32,
+    /// FFM-block learning rate.
+    pub ffm_lr: f32,
+    /// Neural-block learning rate.
+    pub nn_lr: f32,
+    /// AdaGrad power_t (0.5 = classic AdaGrad, 0 = plain SGD scaling).
+    pub power_t: f32,
+    /// L2 regularization (applied to gradients VW-style).
+    pub l2: f32,
+    /// FFM latent init span: U(-x, x).
+    pub init_ffm: f32,
+    /// §4.3 — skip zero-global-gradient branches in the neural block.
+    pub sparse_updates: bool,
+    /// Seed for weight init.
+    pub seed: u64,
+}
+
+impl ModelConfig {
+    pub fn deep_ffm(fields: usize, latent_dim: usize, buckets: u32, hidden: &[usize]) -> Self {
+        ModelConfig {
+            arch: Architecture::DeepFfm,
+            fields,
+            latent_dim,
+            buckets,
+            hidden: hidden.to_vec(),
+            ..Self::defaults(fields, latent_dim, buckets)
+        }
+    }
+
+    pub fn ffm(fields: usize, latent_dim: usize, buckets: u32) -> Self {
+        ModelConfig {
+            arch: Architecture::Ffm,
+            hidden: vec![],
+            ..Self::defaults(fields, latent_dim, buckets)
+        }
+    }
+
+    pub fn linear(fields: usize, buckets: u32) -> Self {
+        ModelConfig {
+            arch: Architecture::Linear,
+            latent_dim: 0,
+            hidden: vec![],
+            ..Self::defaults(fields, 0, buckets)
+        }
+    }
+
+    fn defaults(fields: usize, latent_dim: usize, buckets: u32) -> Self {
+        assert!(buckets.is_power_of_two(), "buckets must be 2^n");
+        ModelConfig {
+            arch: Architecture::DeepFfm,
+            fields,
+            latent_dim,
+            buckets,
+            hidden: vec![16],
+            lr: 0.1,
+            ffm_lr: 0.05,
+            nn_lr: 0.02,
+            power_t: 0.4,
+            l2: 0.0,
+            init_ffm: 0.1,
+            sparse_updates: true,
+            seed: 0xf00d,
+        }
+    }
+
+    /// Number of strict-upper-triangle field pairs P.
+    pub fn pairs(&self) -> usize {
+        self.fields * (self.fields - 1) / 2
+    }
+
+    /// MergeNormLayer width D = 1 + P.
+    pub fn merged_dim(&self) -> usize {
+        1 + self.pairs()
+    }
+
+    /// Sanity-check invariants; returns an explanation on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.fields < 1 {
+            return Err("fields must be >= 1".into());
+        }
+        if !self.buckets.is_power_of_two() {
+            return Err("buckets must be a power of two".into());
+        }
+        match self.arch {
+            Architecture::Linear => {
+                if !self.hidden.is_empty() {
+                    return Err("linear arch cannot have hidden layers".into());
+                }
+            }
+            Architecture::Ffm => {
+                if self.latent_dim == 0 {
+                    return Err("ffm arch needs latent_dim > 0".into());
+                }
+                if !self.hidden.is_empty() {
+                    return Err("ffm arch cannot have hidden layers".into());
+                }
+            }
+            Architecture::DeepFfm => {
+                if self.latent_dim == 0 {
+                    return Err("deepffm arch needs latent_dim > 0".into());
+                }
+                if self.hidden.is_empty() {
+                    return Err("deepffm arch needs >=1 hidden layer".into());
+                }
+                if self.fields < 2 {
+                    return Err("deepffm needs >=2 fields".into());
+                }
+            }
+        }
+        if !(0.0..=1.0).contains(&self.power_t) {
+            return Err("power_t must be in [0,1]".into());
+        }
+        Ok(())
+    }
+}
+
+/// Serving-layer configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads in the inference pool.
+    pub workers: usize,
+    /// Dynamic batcher: max candidates per batch.
+    pub max_batch: usize,
+    /// Dynamic batcher: max linger before a partial batch is flushed.
+    pub max_wait_us: u64,
+    /// Context-cache capacity (entries); 0 disables caching.
+    pub context_cache_entries: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            max_batch: 256,
+            max_wait_us: 200,
+            context_cache_entries: 65_536,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_validate() {
+        assert!(ModelConfig::deep_ffm(8, 4, 1 << 10, &[16]).validate().is_ok());
+        assert!(ModelConfig::ffm(8, 4, 1 << 10).validate().is_ok());
+        assert!(ModelConfig::linear(8, 1 << 10).validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ModelConfig::deep_ffm(8, 4, 1 << 10, &[16]);
+        c.hidden.clear();
+        assert!(c.validate().is_err());
+
+        let mut c = ModelConfig::ffm(8, 4, 1 << 10);
+        c.latent_dim = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ModelConfig::linear(8, 1 << 10);
+        c.power_t = 2.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_buckets_panic() {
+        ModelConfig::linear(4, 1000);
+    }
+
+    #[test]
+    fn derived_dims() {
+        let c = ModelConfig::deep_ffm(8, 4, 1 << 10, &[16]);
+        assert_eq!(c.pairs(), 28);
+        assert_eq!(c.merged_dim(), 29);
+    }
+}

@@ -1,0 +1,140 @@
+//! Key=value config parsing for the CLI and AutoML spec files.
+//!
+//! Format: one `key = value` per line, `#` comments, sections ignored.
+//! This replaces a TOML/serde dependency (unavailable offline) with the
+//! subset the launcher actually needs.
+
+use std::collections::BTreeMap;
+
+use crate::config::{Architecture, ModelConfig};
+
+/// Parse `key = value` text into a map.
+pub fn parse_kv(text: &str) -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || line.starts_with('[') {
+            continue;
+        }
+        if let Some((k, v)) = line.split_once('=') {
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    map
+}
+
+fn get_f32(map: &BTreeMap<String, String>, key: &str, default: f32) -> Result<f32, String> {
+    match map.get(key) {
+        Some(v) => v.parse().map_err(|_| format!("bad f32 for {key}: '{v}'")),
+        None => Ok(default),
+    }
+}
+
+fn get_usize(map: &BTreeMap<String, String>, key: &str, default: usize) -> Result<usize, String> {
+    match map.get(key) {
+        Some(v) => v.parse().map_err(|_| format!("bad usize for {key}: '{v}'")),
+        None => Ok(default),
+    }
+}
+
+/// Build a [`ModelConfig`] from parsed keys, starting from defaults.
+///
+/// Recognized keys: `arch` (linear|ffm|deepffm), `fields`, `latent_dim`
+/// (aka `k`), `bits` (buckets = 2^bits), `hidden` (comma list), `lr`,
+/// `ffm_lr`, `nn_lr`, `power_t`, `l2`, `init_ffm`, `sparse_updates`,
+/// `seed`.
+pub fn model_config_from_kv(map: &BTreeMap<String, String>) -> Result<ModelConfig, String> {
+    let fields = get_usize(map, "fields", 8)?;
+    let latent = match map.get("latent_dim").or_else(|| map.get("k")) {
+        Some(v) => v.parse().map_err(|_| format!("bad latent_dim '{v}'"))?,
+        None => 4,
+    };
+    let bits = get_usize(map, "bits", 18)?;
+    if bits > 30 {
+        return Err("bits too large (max 30)".into());
+    }
+    let hidden: Vec<usize> = match map.get("hidden") {
+        Some(v) if !v.is_empty() => v
+            .split(',')
+            .map(|t| t.trim().parse().map_err(|_| format!("bad hidden '{v}'")))
+            .collect::<Result<_, _>>()?,
+        _ => vec![16],
+    };
+    let arch = match map.get("arch").map(|s| s.as_str()) {
+        None | Some("deepffm") => Architecture::DeepFfm,
+        Some("ffm") => Architecture::Ffm,
+        Some("linear") => Architecture::Linear,
+        Some(other) => return Err(format!("unknown arch '{other}'")),
+    };
+    let mut cfg = match arch {
+        Architecture::DeepFfm => ModelConfig::deep_ffm(fields, latent, 1 << bits, &hidden),
+        Architecture::Ffm | Architecture::Linear => {
+            if map.contains_key("hidden") {
+                return Err(format!("arch {arch:?} cannot take hidden layers"));
+            }
+            if arch == Architecture::Ffm {
+                ModelConfig::ffm(fields, latent, 1 << bits)
+            } else {
+                ModelConfig::linear(fields, 1 << bits)
+            }
+        }
+    };
+    cfg.lr = get_f32(map, "lr", cfg.lr)?;
+    cfg.ffm_lr = get_f32(map, "ffm_lr", cfg.ffm_lr)?;
+    cfg.nn_lr = get_f32(map, "nn_lr", cfg.nn_lr)?;
+    cfg.power_t = get_f32(map, "power_t", cfg.power_t)?;
+    cfg.l2 = get_f32(map, "l2", cfg.l2)?;
+    cfg.init_ffm = get_f32(map, "init_ffm", cfg.init_ffm)?;
+    if let Some(v) = map.get("sparse_updates") {
+        cfg.sparse_updates = v == "true" || v == "1";
+    }
+    if let Some(v) = map.get("seed") {
+        cfg.seed = v.parse().map_err(|_| format!("bad seed '{v}'"))?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_parsing_with_comments() {
+        let m = parse_kv("a = 1 # comment\n# whole line\n[section]\nb=x y\n");
+        assert_eq!(m.get("a").unwrap(), "1");
+        assert_eq!(m.get("b").unwrap(), "x y");
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn full_model_config() {
+        let m = parse_kv(
+            "arch = deepffm\nfields = 10\nk = 8\nbits = 12\nhidden = 32,16\nlr = 0.2\npower_t = 0.5\nsparse_updates = false\nseed = 99\n",
+        );
+        let cfg = model_config_from_kv(&m).unwrap();
+        assert_eq!(cfg.fields, 10);
+        assert_eq!(cfg.latent_dim, 8);
+        assert_eq!(cfg.buckets, 4096);
+        assert_eq!(cfg.hidden, vec![32, 16]);
+        assert_eq!(cfg.lr, 0.2);
+        assert!(!cfg.sparse_updates);
+        assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = model_config_from_kv(&parse_kv("")).unwrap();
+        assert_eq!(cfg.fields, 8);
+        assert_eq!(cfg.buckets, 1 << 18);
+    }
+
+    #[test]
+    fn errors_reported() {
+        assert!(model_config_from_kv(&parse_kv("arch = quantum")).is_err());
+        assert!(model_config_from_kv(&parse_kv("lr = fast")).is_err());
+        assert!(model_config_from_kv(&parse_kv("bits = 40")).is_err());
+        // linear arch with explicit hidden -> validation error
+        assert!(model_config_from_kv(&parse_kv("arch = linear\nhidden = 4")).is_err());
+    }
+}

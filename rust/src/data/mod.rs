@@ -1,0 +1,62 @@
+//! Data plane: synthetic CTR stream generators (substituting the
+//! Criteo/Avazu/KDD2012 Kaggle dumps, see DESIGN.md §3), chunked
+//! readers and the §4.1 asynchronous prefetcher.
+
+pub mod prefetch;
+pub mod synthetic;
+
+use crate::feature::Example;
+
+/// A source of training examples, consumed in chunks.  Implemented by
+/// the synthetic generators and by file readers; the prefetcher wraps
+/// any `DataSource` to overlap generation/IO with learning (§4.1).
+pub trait DataSource: Send {
+    /// Fill `out` with up to `n` examples; returns how many were
+    /// produced.  0 means the stream is exhausted.
+    fn next_chunk(&mut self, n: usize, out: &mut Vec<Example>) -> usize;
+}
+
+/// Adapter: any iterator of examples is a source.
+pub struct IterSource<I: Iterator<Item = Example> + Send> {
+    iter: I,
+}
+
+impl<I: Iterator<Item = Example> + Send> IterSource<I> {
+    pub fn new(iter: I) -> Self {
+        IterSource { iter }
+    }
+}
+
+impl<I: Iterator<Item = Example> + Send> DataSource for IterSource<I> {
+    fn next_chunk(&mut self, n: usize, out: &mut Vec<Example>) -> usize {
+        let mut produced = 0;
+        for _ in 0..n {
+            match self.iter.next() {
+                Some(ex) => {
+                    out.push(ex);
+                    produced += 1;
+                }
+                None => break,
+            }
+        }
+        produced
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::feature::Example;
+
+    #[test]
+    fn iter_source_chunks() {
+        let exs: Vec<Example> = (0..10).map(|_| Example::empty(3)).collect();
+        let mut src = IterSource::new(exs.into_iter());
+        let mut buf = Vec::new();
+        assert_eq!(src.next_chunk(4, &mut buf), 4);
+        assert_eq!(src.next_chunk(4, &mut buf), 4);
+        assert_eq!(src.next_chunk(4, &mut buf), 2);
+        assert_eq!(src.next_chunk(4, &mut buf), 0);
+        assert_eq!(buf.len(), 10);
+    }
+}

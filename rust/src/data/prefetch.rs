@@ -1,0 +1,185 @@
+//! §4.1 — asynchronous data prefetching for model warm-up.
+//!
+//! "By implementing async learning cycles, multiple rounds of 'future'
+//! data can be downloaded upfront, making sure the learning engine has
+//! constant influx of data.  Data pre-fetch in practice results in up
+//! to 4x faster pre-warming."
+//!
+//! A background thread pulls chunks from the wrapped [`DataSource`]
+//! into a bounded queue (`std::sync::mpsc::sync_channel`), so chunk
+//! production (downloading / parsing / generation) overlaps with the
+//! learner consuming previous chunks.  `depth` bounds the number of
+//! in-flight chunks — the paper's "multiple rounds of future data".
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+use crate::data::DataSource;
+use crate::feature::Example;
+
+/// A chunk of prefetched examples.
+pub type Chunk = Vec<Example>;
+
+/// Background prefetcher over any [`DataSource`].
+pub struct Prefetcher {
+    rx: Receiver<Chunk>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn the producer thread.
+    ///
+    /// * `chunk_size` — examples per chunk.
+    /// * `depth` — max queued chunks (back-pressure bound).
+    /// * `limit` — total examples to produce (None = until exhausted).
+    pub fn spawn<S: DataSource + 'static>(
+        mut source: S,
+        chunk_size: usize,
+        depth: usize,
+        limit: Option<usize>,
+    ) -> Self {
+        let (tx, rx) = sync_channel::<Chunk>(depth.max(1));
+        let handle = std::thread::Builder::new()
+            .name("fw-prefetch".into())
+            .spawn(move || {
+                let mut remaining = limit.unwrap_or(usize::MAX);
+                while remaining > 0 {
+                    let want = chunk_size.min(remaining);
+                    let mut chunk = Vec::with_capacity(want);
+                    let got = source.next_chunk(want, &mut chunk);
+                    if got == 0 {
+                        break;
+                    }
+                    remaining -= got;
+                    if tx.send(chunk).is_err() {
+                        break; // consumer dropped
+                    }
+                }
+            })
+            .expect("spawn prefetch thread");
+        Prefetcher { rx, handle: Some(handle) }
+    }
+
+    /// Blocking pull of the next chunk; `None` when the stream ends.
+    pub fn next_chunk(&mut self) -> Option<Chunk> {
+        self.rx.recv().ok()
+    }
+
+    /// Iterate over all chunks.
+    pub fn chunks(&mut self) -> impl Iterator<Item = Chunk> + '_ {
+        std::iter::from_fn(move || self.next_chunk())
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Draining the receiver unblocks a producer stuck on send.
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, {
+            let (_tx, rx) = sync_channel(1);
+            rx
+        }));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A [`DataSource`] with a configurable per-chunk production delay —
+/// models the "download" cost that prefetching hides.  Used by
+/// `bench_table2_hogwild` and the warm-up tests.
+pub struct DelayedSource<S: DataSource> {
+    inner: S,
+    delay: std::time::Duration,
+}
+
+impl<S: DataSource> DelayedSource<S> {
+    pub fn new(inner: S, delay: std::time::Duration) -> Self {
+        DelayedSource { inner, delay }
+    }
+}
+
+impl<S: DataSource> DataSource for DelayedSource<S> {
+    fn next_chunk(&mut self, n: usize, out: &mut Vec<Example>) -> usize {
+        std::thread::sleep(self.delay);
+        self.inner.next_chunk(n, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+    use crate::data::IterSource;
+    use std::time::Duration;
+
+    #[test]
+    fn delivers_all_examples_in_order_of_chunks() {
+        let src = SyntheticStream::new(DatasetSpec::tiny(), 3);
+        let mut pf = Prefetcher::spawn(src, 100, 4, Some(1000));
+        let total: usize = pf.chunks().map(|c| c.len()).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn respects_limit_and_chunk_size() {
+        let src = SyntheticStream::new(DatasetSpec::tiny(), 4);
+        let mut pf = Prefetcher::spawn(src, 64, 2, Some(130));
+        let sizes: Vec<usize> = pf.chunks().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![64, 64, 2]);
+    }
+
+    #[test]
+    fn finite_source_terminates() {
+        let exs: Vec<_> =
+            (0..10).map(|_| crate::feature::Example::empty(2)).collect();
+        let mut pf =
+            Prefetcher::spawn(IterSource::new(exs.into_iter()), 4, 2, None);
+        let total: usize = pf.chunks().map(|c| c.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn prefetch_overlaps_slow_production() {
+        // With production delay D per chunk and consumption delay C,
+        // prefetching should bring total wall time near max-side rather
+        // than the sum. Generous bounds keep this robust on CI.
+        let delay = Duration::from_millis(5);
+        let chunks = 8;
+        let make = || {
+            DelayedSource::new(
+                SyntheticStream::new(DatasetSpec::tiny(), 5),
+                delay,
+            )
+        };
+        // Sequential: produce then consume.
+        let t0 = std::time::Instant::now();
+        let mut src = make();
+        let mut buf = Vec::new();
+        for _ in 0..chunks {
+            src.next_chunk(10, &mut buf);
+            std::thread::sleep(delay); // consume
+        }
+        let seq = t0.elapsed();
+
+        // Prefetched: producer thread runs ahead.
+        let t0 = std::time::Instant::now();
+        let mut pf = Prefetcher::spawn(make(), 10, 4, Some(80));
+        while let Some(_c) = pf.next_chunk() {
+            std::thread::sleep(delay); // consume
+        }
+        let pre = t0.elapsed();
+        assert!(
+            pre < seq,
+            "prefetch {pre:?} not faster than sequential {seq:?}"
+        );
+    }
+
+    #[test]
+    fn drop_mid_stream_does_not_hang() {
+        let src = SyntheticStream::new(DatasetSpec::tiny(), 6);
+        let mut pf = Prefetcher::spawn(src, 100, 2, Some(1_000_000));
+        let _ = pf.next_chunk();
+        drop(pf); // must join cleanly
+    }
+}

@@ -1,0 +1,265 @@
+//! Evaluation: streaming AUC in rolling windows (the paper's Figure 3 /
+//! Table 1 protocol — "AUC scores computed in a rolling window of 30k
+//! instances"), logloss, RIG, and the stability statistics table.
+
+use crate::util::math::{logloss, mean_std, median, rig};
+
+/// Exact AUC of a (score, label) set via rank statistics.
+/// Ties share the average rank.  Returns 0.5 for degenerate sets.
+pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let pos = labels.iter().filter(|&&y| y > 0.5).count();
+    let neg = n - pos;
+    if pos == 0 || neg == 0 {
+        return 0.5;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // sum of positive ranks with tie averaging
+    let mut rank_sum = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            if labels[k] > 0.5 {
+                rank_sum += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    (rank_sum - (pos as f64 * (pos as f64 + 1.0)) / 2.0)
+        / (pos as f64 * neg as f64)
+}
+
+/// Rolling-window evaluator: accumulates (score, label) pairs, emits
+/// one AUC point per full window (non-overlapping tumbling windows of
+/// `window` instances, matching the paper's per-window traces).
+pub struct RollingAuc {
+    window: usize,
+    scores: Vec<f32>,
+    labels: Vec<f32>,
+    /// AUC per completed window.
+    pub points: Vec<f64>,
+    /// Sum of logloss over everything seen.
+    total_ll: f64,
+    total_n: usize,
+    total_pos: usize,
+}
+
+impl RollingAuc {
+    pub fn new(window: usize) -> Self {
+        RollingAuc {
+            window: window.max(2),
+            scores: Vec::new(),
+            labels: Vec::new(),
+            points: Vec::new(),
+            total_ll: 0.0,
+            total_n: 0,
+            total_pos: 0,
+        }
+    }
+
+    /// Record one prediction (before-the-label, progressive validation).
+    pub fn add(&mut self, score: f32, label: f32) {
+        self.total_ll += logloss(score, label);
+        self.total_n += 1;
+        if label > 0.5 {
+            self.total_pos += 1;
+        }
+        self.scores.push(score);
+        self.labels.push(label);
+        if self.scores.len() >= self.window {
+            self.points.push(auc(&self.scores, &self.labels));
+            self.scores.clear();
+            self.labels.clear();
+        }
+    }
+
+    /// Flush a final partial window (if it holds both classes).
+    pub fn finish(&mut self) {
+        if self.scores.len() >= 100 {
+            self.points.push(auc(&self.scores, &self.labels));
+            self.scores.clear();
+            self.labels.clear();
+        }
+    }
+
+    pub fn seen(&self) -> usize {
+        self.total_n
+    }
+
+    pub fn mean_logloss(&self) -> f64 {
+        if self.total_n == 0 {
+            0.0
+        } else {
+            self.total_ll / self.total_n as f64
+        }
+    }
+
+    /// Relative information gain vs the observed base rate.
+    pub fn rig(&self) -> f64 {
+        if self.total_n == 0 {
+            return 0.0;
+        }
+        rig(
+            self.total_ll,
+            self.total_pos as f64 / self.total_n as f64,
+            self.total_n,
+        )
+    }
+}
+
+/// The Table-1 row: stability statistics of a rolling-AUC trace plus a
+/// held-out test AUC.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StabilityStats {
+    pub avg: f64,
+    pub median: f64,
+    pub max: f64,
+    pub std: f64,
+    pub min: f64,
+    pub test: f64,
+}
+
+impl StabilityStats {
+    pub fn from_trace(points: &[f64], test_auc: f64) -> Self {
+        if points.is_empty() {
+            return StabilityStats {
+                avg: 0.5,
+                median: 0.5,
+                max: 0.5,
+                std: 0.0,
+                min: 0.5,
+                test: test_auc,
+            };
+        }
+        let (avg, std) = mean_std(points);
+        StabilityStats {
+            avg,
+            median: median(points),
+            max: points.iter().cloned().fold(f64::MIN, f64::max),
+            std,
+            min: points.iter().cloned().fold(f64::MAX, f64::min),
+            test: test_auc,
+        }
+    }
+
+    /// Table row in the paper's column order.
+    pub fn row(&self, algo: &str) -> String {
+        format!(
+            "{:<12} {:>7.4} {:>7.4} {:>7.4} {:>7.4} {:>7.4} {:>7.4}",
+            algo, self.avg, self.median, self.max, self.std, self.min, self.test
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let s = [0.1f32, 0.2, 0.8, 0.9];
+        let y = [0.0f32, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&s, &y), 1.0);
+        let y_inv = [1.0f32, 1.0, 0.0, 0.0];
+        assert_eq!(auc(&s, &y_inv), 0.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        let mut rng = Pcg32::seeded(1);
+        let n = 20_000;
+        let s: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let y: Vec<f32> = (0..n)
+            .map(|_| if rng.coin(0.3) { 1.0 } else { 0.0 })
+            .collect();
+        let a = auc(&s, &y);
+        assert!((a - 0.5).abs() < 0.02, "auc={a}");
+    }
+
+    #[test]
+    fn auc_ties_averaged() {
+        // all scores equal -> AUC must be exactly 0.5
+        let s = [0.7f32; 10];
+        let y = [1.0f32, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        assert!((auc(&s, &y) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_single_class() {
+        assert_eq!(auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+        assert_eq!(auc(&[], &[]), 0.5);
+    }
+
+    #[test]
+    fn auc_invariant_to_monotone_transform() {
+        let mut rng = Pcg32::seeded(2);
+        let s: Vec<f32> = (0..500).map(|_| rng.next_f32()).collect();
+        let y: Vec<f32> = (0..500)
+            .map(|i| if (s[i] + 0.3 * rng.normal()) > 0.5 { 1.0 } else { 0.0 })
+            .collect();
+        let a1 = auc(&s, &y);
+        // affine transform: exactly order-preserving in f32
+        let s2: Vec<f32> = s.iter().map(|v| v * 0.5 + 0.25).collect();
+        let a2 = auc(&s2, &y);
+        assert!((a1 - a2).abs() < 1e-12);
+        // nonlinear monotone transform: small tolerance for f32 ties
+        let s3: Vec<f32> = s.iter().map(|v| v.exp()).collect();
+        let a3 = auc(&s3, &y);
+        assert!((a1 - a3).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rolling_windows_emit_points() {
+        let mut r = RollingAuc::new(100);
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..1050 {
+            let y = if rng.coin(0.4) { 1.0 } else { 0.0 };
+            let s = 0.3 + 0.4 * y + 0.2 * rng.normal();
+            r.add(s.clamp(0.001, 0.999), y);
+        }
+        assert_eq!(r.points.len(), 10);
+        r.finish(); // 50 leftovers < 100 min -> no extra point
+        assert_eq!(r.points.len(), 10);
+        assert!(r.points.iter().all(|&a| a > 0.6), "{:?}", r.points);
+        assert_eq!(r.seen(), 1050);
+        assert!(r.mean_logloss() > 0.0);
+    }
+
+    #[test]
+    fn rig_positive_for_informed_model() {
+        let mut r = RollingAuc::new(1000);
+        let mut rng = Pcg32::seeded(4);
+        for _ in 0..5000 {
+            let y = if rng.coin(0.3) { 1.0f32 } else { 0.0 };
+            r.add(if y > 0.5 { 0.6 } else { 0.15 }, y);
+        }
+        assert!(r.rig() > 0.1, "rig={}", r.rig());
+    }
+
+    #[test]
+    fn stability_stats_from_trace() {
+        let trace = [0.7, 0.75, 0.8, 0.65, 0.72];
+        let st = StabilityStats::from_trace(&trace, 0.77);
+        assert_eq!(st.max, 0.8);
+        assert_eq!(st.min, 0.65);
+        assert_eq!(st.median, 0.72);
+        assert!((st.avg - 0.724).abs() < 1e-9);
+        assert_eq!(st.test, 0.77);
+        assert!(st.row("FW-DeepFFM").contains("FW-DeepFFM"));
+    }
+
+    #[test]
+    fn stability_stats_empty_trace() {
+        let st = StabilityStats::from_trace(&[], 0.6);
+        assert_eq!(st.avg, 0.5);
+        assert_eq!(st.test, 0.6);
+    }
+}

@@ -1,0 +1,120 @@
+//! Feature hashing — MurmurHash3 (x86 32-bit finalizer variant), the
+//! same family VW and Fwumious Wabbit use, so hashed models are stable
+//! across runs, machines and releases (a requirement for the byte-level
+//! weight patcher: identical feature→bucket mapping keeps weight files
+//! structurally aligned between training rounds).
+
+/// MurmurHash3 x86_32.
+pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
+    const C1: u32 = 0xcc9e2d51;
+    const C2: u32 = 0x1b873593;
+    let mut h = seed;
+    let chunks = data.chunks_exact(4);
+    let tail = chunks.remainder();
+    for chunk in chunks {
+        let mut k = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        k = k.wrapping_mul(C1).rotate_left(15).wrapping_mul(C2);
+        h ^= k;
+        h = h.rotate_left(13).wrapping_mul(5).wrapping_add(0xe6546b64);
+    }
+    let mut k: u32 = 0;
+    for (i, &b) in tail.iter().enumerate() {
+        k |= (b as u32) << (8 * i);
+    }
+    if !tail.is_empty() {
+        k = k.wrapping_mul(C1).rotate_left(15).wrapping_mul(C2);
+        h ^= k;
+    }
+    h ^= data.len() as u32;
+    // fmix32
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85ebca6b);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xc2b2ae35);
+    h ^= h >> 16;
+    h
+}
+
+/// Hash a (namespace, feature-name) pair into the model bucket space.
+/// The namespace seed keeps identical tokens in different fields from
+/// colliding systematically.
+#[inline]
+pub fn feature_bucket(namespace_seed: u32, token: &str, mask: u32) -> u32 {
+    murmur3_32(token.as_bytes(), namespace_seed) & mask
+}
+
+/// Hash a raw integer id (synthetic data path) into the bucket space.
+#[inline]
+pub fn id_bucket(namespace_seed: u32, id: u64, mask: u32) -> u32 {
+    murmur3_32(&id.to_le_bytes(), namespace_seed) & mask
+}
+
+/// Derive a per-namespace seed from its single-char name.
+#[inline]
+pub fn namespace_seed(name: &str) -> u32 {
+    murmur3_32(name.as_bytes(), 0x5eed_5eed)
+}
+
+/// Combine two bucket hashes (quadratic/interacting namespaces).
+#[inline]
+pub fn combine(a: u32, b: u32, mask: u32) -> u32 {
+    // 32-bit mix of the pair, VW-style multiply-shift.
+    let x = (a as u64).wrapping_mul(0x9e3779b97f4a7c15) ^ (b as u64);
+    ((x ^ (x >> 29)) as u32) & mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn murmur_known_vectors() {
+        // Reference vectors for MurmurHash3 x86_32.
+        assert_eq!(murmur3_32(b"", 0), 0);
+        assert_eq!(murmur3_32(b"", 1), 0x514E28B7);
+        assert_eq!(murmur3_32(b"abcd", 0x9747b28c), 0xF0478627);
+        assert_eq!(murmur3_32(b"Hello, world!", 0x9747b28c), 0x24884CBA);
+    }
+
+    #[test]
+    fn deterministic_and_masked() {
+        let mask = (1 << 18) - 1;
+        let a = feature_bucket(7, "user=123", mask);
+        let b = feature_bucket(7, "user=123", mask);
+        assert_eq!(a, b);
+        assert!(a <= mask);
+    }
+
+    #[test]
+    fn namespace_seed_separates_fields() {
+        let mask = (1 << 20) - 1;
+        let s1 = namespace_seed("A");
+        let s2 = namespace_seed("B");
+        assert_ne!(s1, s2);
+        let collisions = (0..1000)
+            .filter(|i| {
+                feature_bucket(s1, &format!("f{i}"), mask)
+                    == feature_bucket(s2, &format!("f{i}"), mask)
+            })
+            .count();
+        assert!(collisions < 5, "systematic collisions: {collisions}");
+    }
+
+    #[test]
+    fn spread_over_buckets() {
+        let mask = 1023;
+        let mut hist = [0u32; 1024];
+        for i in 0..100_000u64 {
+            hist[id_bucket(3, i, mask) as usize] += 1;
+        }
+        let max = *hist.iter().max().unwrap();
+        let min = *hist.iter().min().unwrap();
+        assert!(min > 40 && max < 200, "min={min} max={max}");
+    }
+
+    #[test]
+    fn combine_depends_on_order() {
+        let mask = u32::MAX;
+        assert_ne!(combine(1, 2, mask), combine(2, 1, mask));
+    }
+}

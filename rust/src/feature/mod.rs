@@ -1,0 +1,71 @@
+//! Feature extraction: murmur-style hashing, the Vowpal-Wabbit-inspired
+//! text input format, and namespace (field) descriptors.
+//!
+//! Fwumious Wabbit inherits VW's input conventions: one example per
+//! line, `|NS feat[:value] ...` groups, hashed into a fixed bucket
+//! space.  One namespace maps to one FFM *field*.
+
+pub mod hash;
+pub mod namespace;
+pub mod parser;
+
+/// A single (field, bucket, value) occurrence after hashing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FeatureSlot {
+    /// Field (namespace) index, 0-based, < ModelConfig::fields.
+    pub field: u16,
+    /// Hashed bucket index, already masked to the model's bucket space.
+    pub bucket: u32,
+    /// Feature value (1.0 for plain categoricals, log-transformed for
+    /// continuous features per the paper's preprocessing).
+    pub value: f32,
+}
+
+/// A parsed, hashed training/serving example: exactly one feature per
+/// field (the production layout; absent fields carry value 0.0 so they
+/// contribute nothing to any block).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    /// Click label: 1.0 / 0.0.  Serving-time examples carry NaN.
+    pub label: f32,
+    /// Importance weight (1.0 default).
+    pub importance: f32,
+    /// One slot per field, index == field id.
+    pub slots: Vec<FeatureSlot>,
+}
+
+impl Example {
+    /// An empty example with `fields` zero-valued slots.
+    pub fn empty(fields: usize) -> Self {
+        Example {
+            label: f32::NAN,
+            importance: 1.0,
+            slots: (0..fields)
+                .map(|f| FeatureSlot { field: f as u16, bucket: 0, value: 0.0 })
+                .collect(),
+        }
+    }
+
+    pub fn fields(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when a label is attached (training examples).
+    pub fn is_labeled(&self) -> bool {
+        !self.label.is_nan()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_example_contributes_nothing() {
+        let e = Example::empty(5);
+        assert_eq!(e.fields(), 5);
+        assert!(!e.is_labeled());
+        assert!(e.slots.iter().all(|s| s.value == 0.0));
+        assert_eq!(e.slots[3].field, 3);
+    }
+}

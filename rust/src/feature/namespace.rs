@@ -1,0 +1,139 @@
+//! Namespace (field) descriptors: how raw input groups map onto the
+//! model's FFM fields, including value transforms.
+//!
+//! The paper's preprocessing is deliberately minimal: "log transform of
+//! continuous features was conducted and no additional data pruning".
+
+use crate::feature::hash;
+
+/// Value transform applied to a namespace's feature values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transform {
+    /// Keep the parsed value (default 1.0 for bare categoricals).
+    None,
+    /// ln(1 + max(v, 0)) — the paper's continuous-feature treatment.
+    Log1p,
+    /// Clamp negatives to zero then sqrt (useful for count features).
+    Sqrt,
+    /// Treat as categorical: value forced to 1.0, the number becomes
+    /// part of the token identity.
+    Categorical,
+}
+
+impl Transform {
+    #[inline]
+    pub fn apply(&self, v: f32) -> f32 {
+        match self {
+            Transform::None => v,
+            Transform::Log1p => (1.0 + v.max(0.0)).ln(),
+            Transform::Sqrt => v.max(0.0).sqrt(),
+            Transform::Categorical => 1.0,
+        }
+    }
+}
+
+/// One field's descriptor.
+#[derive(Clone, Debug)]
+pub struct Namespace {
+    /// Single-letter name in the vw-format input (`|A ...`).
+    pub name: String,
+    /// Field index in the model.
+    pub field: u16,
+    /// Hash seed derived from the name.
+    pub seed: u32,
+    /// Value transform.
+    pub transform: Transform,
+}
+
+/// The full input schema: an ordered set of namespaces.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    pub namespaces: Vec<Namespace>,
+}
+
+impl Schema {
+    /// Build a schema from namespace names, all-categorical.
+    pub fn categorical(names: &[&str]) -> Self {
+        Schema {
+            namespaces: names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| Namespace {
+                    name: n.to_string(),
+                    field: i as u16,
+                    seed: hash::namespace_seed(n),
+                    transform: Transform::Categorical,
+                })
+                .collect(),
+        }
+    }
+
+    /// Criteo-style schema: `num_cont` Log1p namespaces then
+    /// `num_cat` categorical ones, named I1.. / C1.. .
+    pub fn ctr_style(num_cont: usize, num_cat: usize) -> Self {
+        let mut namespaces = Vec::new();
+        for i in 0..num_cont {
+            let name = format!("I{}", i + 1);
+            namespaces.push(Namespace {
+                seed: hash::namespace_seed(&name),
+                name,
+                field: i as u16,
+                transform: Transform::Log1p,
+            });
+        }
+        for i in 0..num_cat {
+            let name = format!("C{}", i + 1);
+            namespaces.push(Namespace {
+                seed: hash::namespace_seed(&name),
+                name,
+                field: (num_cont + i) as u16,
+                transform: Transform::Categorical,
+            });
+        }
+        Schema { namespaces }
+    }
+
+    pub fn fields(&self) -> usize {
+        self.namespaces.len()
+    }
+
+    /// Find a namespace by name.
+    pub fn by_name(&self, name: &str) -> Option<&Namespace> {
+        self.namespaces.iter().find(|n| n.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transforms() {
+        assert_eq!(Transform::None.apply(2.5), 2.5);
+        assert!((Transform::Log1p.apply(0.0)).abs() < 1e-7);
+        assert!((Transform::Log1p.apply((1f32).exp() - 1.0) - 1.0).abs() < 1e-6);
+        assert_eq!(Transform::Log1p.apply(-5.0), 0.0);
+        assert_eq!(Transform::Sqrt.apply(9.0), 3.0);
+        assert_eq!(Transform::Categorical.apply(42.0), 1.0);
+    }
+
+    #[test]
+    fn ctr_schema_layout() {
+        let s = Schema::ctr_style(13, 26);
+        assert_eq!(s.fields(), 39);
+        assert_eq!(s.namespaces[0].name, "I1");
+        assert_eq!(s.namespaces[0].transform, Transform::Log1p);
+        assert_eq!(s.namespaces[13].name, "C1");
+        assert_eq!(s.namespaces[13].transform, Transform::Categorical);
+        assert_eq!(s.namespaces[38].field, 38);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        let s = Schema::categorical(&["A", "B", "C"]);
+        assert_eq!(s.by_name("B").unwrap().field, 1);
+        assert!(s.by_name("Z").is_none());
+        // distinct hash seeds per namespace
+        assert_ne!(s.namespaces[0].seed, s.namespaces[1].seed);
+    }
+}

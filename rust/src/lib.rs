@@ -1,0 +1,40 @@
+//! # Fwumious — CPU-based Deep FFMs at 300M+ predictions per second
+//!
+//! A full reproduction of the system described in *"A Bag of Tricks for
+//! Scaling CPU-based Deep FFMs to more than 300m Predictions per Second"*
+//! (Škrlj et al., KDD '24): a Rust, CPU-only Deep Field-aware
+//! Factorization Machine engine with online (single-pass) training,
+//! Hogwild multithreading, ReLU-aware sparse weight updates, a serving
+//! layer with context caching and runtime SIMD dispatch, and a weight
+//! transfer plane built on 16-bit dynamic quantization plus byte-level
+//! model patching.
+//!
+//! ## Layering
+//!
+//! * **L3 (this crate)** — the coordinator and the paper's contribution:
+//!   training, serving, quantization/patching, AutoML, evaluation.
+//! * **L2/L1 (`python/compile`)** — the same DeepFFM forward expressed in
+//!   JAX with the FFM interaction as a Pallas kernel, AOT-lowered to HLO
+//!   text artifacts which [`runtime`] loads through PJRT for
+//!   cross-validation and accelerator-offload deployments.
+//!
+//! Python never runs on the request path; the serving binary is
+//! self-contained once `make artifacts` has produced the HLO files.
+
+pub mod automl;
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod feature;
+pub mod model;
+pub mod patch;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod simd;
+pub mod testutil;
+pub mod train;
+pub mod transfer;
+pub mod util;

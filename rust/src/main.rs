@@ -1,0 +1,360 @@
+//! `fw` — the launcher binary for the Fwumious reproduction.
+//!
+//! Wires the library's subsystems into operator-facing subcommands:
+//! training (with Hogwild + prefetch), serving (context cache + SIMD),
+//! AutoML sweeps, quantization/patching utilities, and the PJRT
+//! artifact runner.  See `fw help`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fwumious::baselines::FwModel;
+use fwumious::cli::{Args, USAGE};
+use fwumious::config::{ModelConfig, ServeConfig};
+use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
+use fwumious::model::regressor::Regressor;
+use fwumious::model::{io, Workspace};
+use fwumious::patch::{apply_patch, make_patch, Compression, Patch};
+use fwumious::quant;
+use fwumious::serve::router::Router;
+use fwumious::serve::server::ServingEngine;
+use fwumious::serve::trace::TraceGenerator;
+use fwumious::serve::ModelHandle;
+use fwumious::train::warmup::{warmup, WarmupConfig};
+use fwumious::util::timer::fmt_duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dataset(name: &str) -> Result<DatasetSpec, String> {
+    Ok(match name {
+        "criteo" => DatasetSpec::criteo_like(),
+        "avazu" => DatasetSpec::avazu_like(),
+        "kdd" => DatasetSpec::kdd_like(),
+        "tiny" => DatasetSpec::tiny(),
+        other => return Err(format!("unknown dataset '{other}'")),
+    })
+}
+
+fn run(raw: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(raw)?;
+    match args.subcommand.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "automl" => cmd_automl(&args),
+        "quantize" => cmd_quantize(&args),
+        "patch" => cmd_patch(&args),
+        "apply" => cmd_apply(&args),
+        "pjrt" => cmd_pjrt(&args),
+        "bench" => {
+            println!("run `cargo bench` — one harness per paper table/figure");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'")),
+    }
+}
+
+fn model_cfg_from_args(args: &Args, spec: &DatasetSpec) -> Result<ModelConfig, String> {
+    let bits = args.usize_flag("bits", 18)?;
+    let k = args.usize_flag("k", 4)?;
+    let fields = spec.fields();
+    let cfg = match args.flag_or("arch", "deepffm").as_str() {
+        "linear" => ModelConfig::linear(fields, 1 << bits),
+        "ffm" => ModelConfig::ffm(fields, k, 1 << bits),
+        "deepffm" => {
+            let hidden: Vec<usize> = args
+                .flag_or("hidden", "16")
+                .split(',')
+                .map(|t| t.parse().map_err(|_| "bad --hidden".to_string()))
+                .collect::<Result<_, _>>()?;
+            ModelConfig::deep_ffm(fields, k, 1 << bits, &hidden)
+        }
+        other => return Err(format!("unknown arch '{other}'")),
+    };
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let spec = dataset(&args.flag_or("dataset", "criteo"))?;
+    let examples = args.usize_flag("examples", 200_000)?;
+    let threads = args.usize_flag("threads", 1)?;
+    let prefetch = args.usize_flag("prefetch", 4)?;
+    let seed = args.usize_flag("seed", 42)? as u64;
+    let cfg = model_cfg_from_args(args, &spec)?;
+    let stream = SyntheticStream::with_buckets(spec.clone(), seed, cfg.buckets);
+    println!(
+        "training {:?} on {} ({} fields), {} examples, {} thread(s), prefetch depth {}",
+        cfg.arch,
+        spec.name,
+        spec.fields(),
+        examples,
+        threads,
+        prefetch
+    );
+    let mut reg = Regressor::new(&cfg);
+    let report = warmup(
+        &mut reg,
+        stream,
+        WarmupConfig {
+            chunk_size: 8192,
+            prefetch_depth: prefetch,
+            threads,
+            total: examples,
+        },
+    );
+    let rate = report.examples as f64 / report.wall_seconds;
+    println!(
+        "trained {} examples in {} ({:.0} ex/s)",
+        report.examples,
+        fmt_duration(report.wall_seconds),
+        rate
+    );
+    // held-out eval on fresh data
+    let mut eval_stream =
+        SyntheticStream::with_buckets(spec, seed ^ 0xe7a1, cfg.buckets);
+    let mut ws = Workspace::new();
+    let test = eval_stream.take_examples(30_000);
+    let mut scores = Vec::new();
+    let mut labels = Vec::new();
+    for ex in &test {
+        scores.push(reg.predict(ex, &mut ws));
+        labels.push(ex.label);
+    }
+    println!("held-out AUC: {:.4}", fwumious::eval::auc(&scores, &labels));
+    if let Some(path) = args.flag("out") {
+        io::save(&reg, &PathBuf::from(path), args.has("with-optimizer"))
+            .map_err(|e| e.to_string())?;
+        println!("saved model to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let workers = args.usize_flag("workers", 4)?;
+    let requests = args.usize_flag("requests", 100_000)?;
+    let fanout = args.usize_flag("fanout", 8)?;
+    if args.has("no-simd") {
+        fwumious::simd::force_scalar(true);
+    }
+    println!("SIMD path: {}", fwumious::simd::isa_name());
+
+    let reg = match args.flag("model") {
+        Some(path) => io::load(&PathBuf::from(path)).map_err(|e| e.to_string())?,
+        None => {
+            // train a quick model so the command is self-contained
+            let spec = dataset(&args.flag_or("dataset", "criteo"))?;
+            let cfg = model_cfg_from_args(args, &spec)?;
+            let mut reg = Regressor::new(&cfg);
+            let stream = SyntheticStream::with_buckets(spec, 7, cfg.buckets);
+            warmup(
+                &mut reg,
+                stream,
+                WarmupConfig {
+                    chunk_size: 8192,
+                    prefetch_depth: 2,
+                    threads: 1,
+                    total: args.usize_flag("warm-examples", 50_000)?,
+                },
+            );
+            reg
+        }
+    };
+    let fields = reg.cfg.fields;
+    let buckets = reg.cfg.buckets;
+    let ctx_fields = args.usize_flag("ctx-fields", (fields / 2).max(1))?;
+    let cache_entries = if args.has("no-context-cache") { 0 } else { 65_536 };
+
+    let router = Router::new(workers);
+    router.register("ctr", ModelHandle::new(reg));
+    let engine = ServingEngine::start(
+        router,
+        ServeConfig {
+            workers,
+            max_batch: args.usize_flag("max-batch", 256)?,
+            max_wait_us: args.usize_flag("max-wait-us", 200)? as u64,
+            context_cache_entries: cache_entries,
+        },
+    );
+    let mut gen = TraceGenerator::new(11, fields, ctx_fields, buckets, fanout);
+    let t = std::time::Instant::now();
+    let mut inflight = Vec::with_capacity(1024);
+    let mut scored = 0u64;
+    for i in 0..requests {
+        inflight.push(engine.submit(gen.next_request("ctr"))?);
+        if inflight.len() >= 1024 || i + 1 == requests {
+            for rx in inflight.drain(..) {
+                let resp = rx.recv().map_err(|_| "reply dropped".to_string())??;
+                scored += resp.scores.len() as u64;
+            }
+        }
+    }
+    let secs = t.elapsed().as_secs_f64();
+    let stats = engine.shutdown();
+    println!(
+        "{requests} requests / {scored} candidates in {} — {:.0} req/s, {:.0} preds/s",
+        fmt_duration(secs),
+        requests as f64 / secs,
+        scored as f64 / secs
+    );
+    println!(
+        "cache hit rate {:.1}%  batches {}  errors {}",
+        stats.cache_hit_rate() * 100.0,
+        stats.batches,
+        stats.errors
+    );
+    if let Some(l) = &stats.latency {
+        println!("latency: {}", l.summary());
+    }
+    Ok(())
+}
+
+fn cmd_automl(args: &Args) -> Result<(), String> {
+    use fwumious::automl::{pooled_stats, random_search, SearchSpace};
+    let spec = dataset(&args.flag_or("dataset", "tiny"))?;
+    let examples = args.usize_flag("examples", 50_000)?;
+    let configs = args.usize_flag("configs", 16)?;
+    let threads = args.usize_flag("threads", 4)?;
+    let buckets = 1u32 << args.usize_flag("bits", 14)?;
+    let fields = spec.fields();
+    let mut s = SyntheticStream::with_buckets(spec.clone(), 5, buckets);
+    let train = Arc::new(s.take_examples(examples));
+    let test = Arc::new(s.take_examples(examples / 5));
+    println!(
+        "automl: {} configs × {} examples on {} ({} threads)",
+        configs, examples, spec.name, threads
+    );
+    let results = random_search(
+        &SearchSpace::default(),
+        configs,
+        threads,
+        99,
+        train,
+        test,
+        args.usize_flag("window", 10_000)?,
+        |c| {
+            let mut cfg = ModelConfig::deep_ffm(fields, c.latent_dim, buckets, &c.hidden);
+            cfg.lr = c.lr;
+            cfg.ffm_lr = c.ffm_lr;
+            cfg.nn_lr = c.nn_lr;
+            cfg.power_t = c.power_t;
+            cfg.l2 = c.l2;
+            cfg.seed = c.seed;
+            FwModel::new("FW-DeepFFM", Regressor::new(&cfg))
+        },
+    );
+    println!(
+        "{:<6} {:>7} {:>7} {:>8} {:>9} {:>8}",
+        "id", "test", "avg", "std", "logloss", "seconds"
+    );
+    for r in &results {
+        println!(
+            "{:<6} {:>7.4} {:>7.4} {:>8.4} {:>9.4} {:>8.2}",
+            r.config.id,
+            r.stats.test,
+            r.stats.avg,
+            r.stats.std,
+            r.mean_logloss,
+            r.train_seconds
+        );
+    }
+    let pooled = pooled_stats(&results);
+    println!("pooled: {}", pooled.row("FW-DeepFFM"));
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<(), String> {
+    let input = args.flag("in").ok_or("--in required")?;
+    let output = args.flag("out").ok_or("--out required")?;
+    let reg = io::load(&PathBuf::from(input)).map_err(|e| e.to_string())?;
+    let t = std::time::Instant::now();
+    let bytes = quant::quantize_to_bytes(&reg.pool.weights, 2, 2);
+    let secs = t.elapsed().as_secs_f64();
+    std::fs::write(output, &bytes).map_err(|e| e.to_string())?;
+    println!(
+        "quantized {} weights ({} -> {} bytes, {:.1}%) in {}",
+        reg.pool.weights.len(),
+        reg.pool.weights.len() * 4,
+        bytes.len(),
+        bytes.len() as f64 / (reg.pool.weights.len() * 4) as f64 * 100.0,
+        fmt_duration(secs)
+    );
+    Ok(())
+}
+
+fn cmd_patch(args: &Args) -> Result<(), String> {
+    let old = std::fs::read(args.flag("old").ok_or("--old required")?)
+        .map_err(|e| e.to_string())?;
+    let new = std::fs::read(args.flag("new").ok_or("--new required")?)
+        .map_err(|e| e.to_string())?;
+    let out = args.flag("out").ok_or("--out required")?;
+    let t = std::time::Instant::now();
+    let p = make_patch(&old, &new, Compression::Gzip);
+    std::fs::write(out, p.to_wire()).map_err(|e| e.to_string())?;
+    println!(
+        "patch {} bytes ({:.2}% of new file) in {}",
+        p.wire_bytes(),
+        p.wire_bytes() as f64 / new.len().max(1) as f64 * 100.0,
+        fmt_duration(t.elapsed().as_secs_f64())
+    );
+    Ok(())
+}
+
+fn cmd_apply(args: &Args) -> Result<(), String> {
+    let old = std::fs::read(args.flag("old").ok_or("--old required")?)
+        .map_err(|e| e.to_string())?;
+    let pbytes = std::fs::read(args.flag("patch").ok_or("--patch required")?)
+        .map_err(|e| e.to_string())?;
+    let out = args.flag("out").ok_or("--out required")?;
+    let p = Patch::from_wire(&pbytes)?;
+    let new = apply_patch(&old, &p)?;
+    std::fs::write(out, &new).map_err(|e| e.to_string())?;
+    println!("applied patch -> {} bytes", new.len());
+    Ok(())
+}
+
+fn cmd_pjrt(args: &Args) -> Result<(), String> {
+    use fwumious::runtime::{default_artifact_dir, load_goldens, ArgValue, Manifest, PjrtEngine};
+    let dir = args
+        .flag("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let manifest = Manifest::load(&dir).map_err(|e| e.to_string())?;
+    let goldens = load_goldens(&dir).map_err(|e| e.to_string())?;
+    let engine = PjrtEngine::cpu().map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", engine.platform());
+    for g in &goldens {
+        let compiled = engine.compile(&manifest, &g.name).map_err(|e| e.to_string())?;
+        let mut argv = vec![ArgValue::F32(g.lr_table.clone()), ArgValue::F32(g.ffm_table.clone())];
+        for m in &g.mlp {
+            argv.push(ArgValue::F32(m.clone()));
+        }
+        argv.push(ArgValue::I32(g.idx.clone()));
+        argv.push(ArgValue::F32(g.vals.clone()));
+        let probs = compiled.run(&argv).map_err(|e| e.to_string())?;
+        let max_err = probs
+            .iter()
+            .zip(&g.probs)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("{}: max |pjrt - golden| = {max_err:.2e}", g.name);
+        if max_err > 1e-4 {
+            return Err(format!("{}: PJRT output deviates from golden", g.name));
+        }
+    }
+    println!("all artifacts reproduce golden vectors");
+    Ok(())
+}

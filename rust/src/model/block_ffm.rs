@@ -1,0 +1,500 @@
+//! Field-aware factorization block (the red block of Figure 2):
+//!
+//! `ffm(w, x) = Σ_{j1<j2} ⟨w_{j1,f2}, w_{j2,f1}⟩ · x_{j1} x_{j2}`
+//!
+//! with the *DiagMask* — only the strict upper triangle of field pairs
+//! is produced, "inducing half smaller number of combinations requiring
+//! down-stream processing".
+//!
+//! Layout: the latent row of a bucket is `[fields * k]` floats,
+//! field-major (`toward_field * k + kk`), so the inner dot product of a
+//! pair is two contiguous stride-1 K-vectors — the property both the
+//! CPU SIMD path (rust) and the Pallas kernel's VMEM tiling (python)
+//! exploit.  Pair emission order (row-major upper triangle) is part of
+//! the cross-layer ABI shared with `python/compile/kernels/ref.py`.
+
+use crate::feature::Example;
+use crate::model::optimizer::UpdateRule;
+use crate::model::weights::Layout;
+use crate::simd::dot;
+
+/// Compute all pair interactions into `pairs` (len = F*(F-1)/2).
+/// Returns the scalar FFM output (sum of pairs).
+///
+/// SIMD dispatch happens once per example (§5): the AVX2 kernels below
+/// prefetch every latent row up front (the pair loop's gathers are the
+/// dominant memory cost) and keep the whole O(F²) loop inside one
+/// `#[target_feature]` region.
+pub fn forward(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ex: &Example,
+    pairs: &mut [f32],
+) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if crate::simd::isa_level() == crate::simd::IsaLevel::Avx2Fma
+        && (k == 4 || k % 8 == 0)
+    {
+        return unsafe { forward_avx2(weights, layout, fields, k, ex, pairs) };
+    }
+    forward_generic(weights, layout, fields, k, ex, pairs)
+}
+
+/// Portable pair loop (also the SIMD-disabled control arm of Fig. 5).
+pub fn forward_generic(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ex: &Example,
+    pairs: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(pairs.len(), fields * (fields - 1) / 2);
+    let fk = fields * k;
+    let base = layout.ffm_off;
+    let mut total = 0.0f32;
+    let mut p = 0;
+    for i in 0..fields {
+        let si = &ex.slots[i];
+        if si.value == 0.0 {
+            // whole row of pairs is zero
+            for j in (i + 1)..fields {
+                pairs[p] = 0.0;
+                p += 1;
+                let _ = j;
+            }
+            continue;
+        }
+        let row_i = base + si.bucket as usize * fk;
+        for j in (i + 1)..fields {
+            let sj = &ex.slots[j];
+            if sj.value == 0.0 {
+                pairs[p] = 0.0;
+                p += 1;
+                continue;
+            }
+            let row_j = base + sj.bucket as usize * fk;
+            // ⟨w_{i, toward j}, w_{j, toward i}⟩
+            let a = &weights[row_i + j * k..row_i + j * k + k];
+            let b = &weights[row_j + i * k..row_j + i * k + k];
+            let v = dot::dot(a, b) * si.value * sj.value;
+            pairs[p] = v;
+            total += v;
+            p += 1;
+        }
+    }
+    total
+}
+
+/// Whole-loop AVX2 kernel: prefetches all F latent rows, then runs the
+/// masked pair loop with vector dots (SSE4.1 `dpps` for K=4, 256-bit
+/// FMA + horizontal sum for K multiple of 8).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma,sse4.1")]
+unsafe fn forward_avx2(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ex: &Example,
+    pairs: &mut [f32],
+) -> f32 {
+    use std::arch::x86_64::*;
+    let fk = fields * k;
+    let base = layout.ffm_off;
+    // Prefetch every row referenced by this example: the pair loop
+    // reads F*(F-1) scattered K-strips; issuing the loads early
+    // overlaps the misses with compute.
+    for s in &ex.slots {
+        if s.value != 0.0 {
+            let row = weights.as_ptr().add(base + s.bucket as usize * fk);
+            let mut off = 0usize;
+            while off < fk {
+                _mm_prefetch::<_MM_HINT_T0>(row.add(off) as *const i8);
+                off += 16; // one cache line of f32
+            }
+        }
+    }
+    let mut total = 0.0f32;
+    let mut p = 0usize;
+    for i in 0..fields {
+        let si = &ex.slots[i];
+        if si.value == 0.0 {
+            for _ in (i + 1)..fields {
+                pairs[p] = 0.0;
+                p += 1;
+            }
+            continue;
+        }
+        let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
+        for j in (i + 1)..fields {
+            let sj = &ex.slots[j];
+            if sj.value == 0.0 {
+                pairs[p] = 0.0;
+                p += 1;
+                continue;
+            }
+            let row_j = weights.as_ptr().add(base + sj.bucket as usize * fk);
+            let a = row_i.add(j * k);
+            let b = row_j.add(i * k);
+            let d = if k == 4 {
+                let va = _mm_loadu_ps(a);
+                let vb = _mm_loadu_ps(b);
+                _mm_cvtss_f32(_mm_dp_ps::<0xF1>(va, vb))
+            } else {
+                // k % 8 == 0
+                let mut acc = _mm256_setzero_ps();
+                let mut kk = 0;
+                while kk < k {
+                    let va = _mm256_loadu_ps(a.add(kk));
+                    let vb = _mm256_loadu_ps(b.add(kk));
+                    acc = _mm256_fmadd_ps(va, vb, acc);
+                    kk += 8;
+                }
+                let hi = _mm256_extractf128_ps::<1>(acc);
+                let lo = _mm256_castps256_ps128(acc);
+                let s4 = _mm_add_ps(hi, lo);
+                let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+                _mm_cvtss_f32(_mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2)))
+            };
+            let v = d * si.value * sj.value;
+            pairs[p] = v;
+            total += v;
+            p += 1;
+        }
+    }
+    total
+}
+
+/// Partial pair computation for the §5 context cache: computes only
+/// the pairs involving at least one CANDIDATE field (j >= ctx_len),
+/// leaving the context×context entries of `pairs` untouched (the
+/// caller fills those from the cached partial).  `all_slots` must hold
+/// context slots in fields `0..ctx_len` and candidate slots after.
+pub fn forward_partial(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    all_slots: &[crate::feature::FeatureSlot],
+    pairs: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if crate::simd::isa_level() == crate::simd::IsaLevel::Avx2Fma
+        && (k == 4 || k % 8 == 0)
+    {
+        unsafe {
+            forward_partial_avx2(weights, layout, fields, k, ctx_len, all_slots, pairs)
+        };
+        return;
+    }
+    forward_partial_generic(weights, layout, fields, k, ctx_len, all_slots, pairs);
+}
+
+/// Portable partial pair loop.
+pub fn forward_partial_generic(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    all_slots: &[crate::feature::FeatureSlot],
+    pairs: &mut [f32],
+) {
+    let fk = fields * k;
+    let base = layout.ffm_off;
+    for i in 0..fields {
+        let si = &all_slots[i];
+        let j0 = (i + 1).max(ctx_len);
+        // row-major upper triangle: indices for fixed i are contiguous
+        let row_base = i * (2 * fields - i - 1) / 2;
+        if si.value == 0.0 {
+            for j in j0..fields {
+                pairs[row_base + (j - i - 1)] = 0.0;
+            }
+            continue;
+        }
+        let row_i = base + si.bucket as usize * fk;
+        for j in j0..fields {
+            let sj = &all_slots[j];
+            let pi = row_base + (j - i - 1);
+            if sj.value == 0.0 {
+                pairs[pi] = 0.0;
+                continue;
+            }
+            let row_j = base + sj.bucket as usize * fk;
+            let a = &weights[row_i + j * k..row_i + j * k + k];
+            let b = &weights[row_j + i * k..row_j + i * k + k];
+            pairs[pi] = dot::dot(a, b) * si.value * sj.value;
+        }
+    }
+}
+
+/// AVX2 partial pair loop with candidate-row prefetch.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma,sse4.1")]
+unsafe fn forward_partial_avx2(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    all_slots: &[crate::feature::FeatureSlot],
+    pairs: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let fk = fields * k;
+    let base = layout.ffm_off;
+    for s in &all_slots[ctx_len..] {
+        if s.value != 0.0 {
+            let row = weights.as_ptr().add(base + s.bucket as usize * fk);
+            let mut off = 0usize;
+            while off < fk {
+                _mm_prefetch::<_MM_HINT_T0>(row.add(off) as *const i8);
+                off += 16;
+            }
+        }
+    }
+    for i in 0..fields {
+        let si = &all_slots[i];
+        let j0 = (i + 1).max(ctx_len);
+        let row_base = i * (2 * fields - i - 1) / 2;
+        if si.value == 0.0 {
+            for j in j0..fields {
+                pairs[row_base + (j - i - 1)] = 0.0;
+            }
+            continue;
+        }
+        let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
+        for j in j0..fields {
+            let sj = &all_slots[j];
+            let pi = row_base + (j - i - 1);
+            if sj.value == 0.0 {
+                pairs[pi] = 0.0;
+                continue;
+            }
+            let row_j = weights.as_ptr().add(base + sj.bucket as usize * fk);
+            let a = row_i.add(j * k);
+            let b = row_j.add(i * k);
+            let d = if k == 4 {
+                _mm_cvtss_f32(_mm_dp_ps::<0xF1>(_mm_loadu_ps(a), _mm_loadu_ps(b)))
+            } else {
+                let mut acc = _mm256_setzero_ps();
+                let mut kk = 0;
+                while kk < k {
+                    acc = _mm256_fmadd_ps(
+                        _mm256_loadu_ps(a.add(kk)),
+                        _mm256_loadu_ps(b.add(kk)),
+                        acc,
+                    );
+                    kk += 8;
+                }
+                let hi = _mm256_extractf128_ps::<1>(acc);
+                let lo = _mm256_castps256_ps128(acc);
+                let s4 = _mm_add_ps(hi, lo);
+                let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+                _mm_cvtss_f32(_mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2)))
+            };
+            pairs[pi] = d * si.value * sj.value;
+        }
+    }
+}
+
+/// Backward from per-pair gradients `dpairs` (same order as `forward`).
+///
+/// For pair (i, j):
+///   d w_{i,j,kk} = dpair · w_{j,i,kk} · x_i x_j
+///   d w_{j,i,kk} = dpair · w_{i,j,kk} · x_i x_j
+///
+/// Both sides read the *pre-update* latent values (copied to a small
+/// stack buffer before updating), matching the analytic gradient.
+pub fn backward<U: UpdateRule>(
+    weights: &mut [f32],
+    acc: &mut [f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ex: &Example,
+    dpairs: &[f32],
+    rule: &mut U,
+) {
+    debug_assert_eq!(dpairs.len(), fields * (fields - 1) / 2);
+    let fk = fields * k;
+    let base = layout.ffm_off;
+    let mut buf = [0f32; 64];
+    let mut p = 0;
+    for i in 0..fields {
+        let (vi, bi) = (ex.slots[i].value, ex.slots[i].bucket);
+        for j in (i + 1)..fields {
+            let g = dpairs[p];
+            p += 1;
+            let (vj, bj) = (ex.slots[j].value, ex.slots[j].bucket);
+            if g == 0.0 || vi == 0.0 || vj == 0.0 {
+                continue;
+            }
+            let scale = g * vi * vj;
+            let off_i = base + bi as usize * fk + j * k;
+            let off_j = base + bj as usize * fk + i * k;
+            debug_assert!(k <= 64, "latent dim > stack buffer");
+            buf[..k].copy_from_slice(&weights[off_i..off_i + k]);
+            for kk in 0..k {
+                let gj = scale * buf[kk]; // uses pre-update w_i
+                let gi = scale * weights[off_j + kk];
+                rule.update(off_i + kk, &mut weights[off_i + kk], &mut acc[off_i + kk], gi);
+                rule.update(off_j + kk, &mut weights[off_j + kk], &mut acc[off_j + kk], gj);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::feature::{Example, FeatureSlot};
+    use crate::model::optimizer::GradRecorder;
+    use crate::model::weights::{Layout, WeightPool};
+    use crate::util::rng::Pcg32;
+
+    fn setup(fields: usize, k: usize) -> (ModelConfig, Layout, WeightPool, Example) {
+        let cfg = ModelConfig::ffm(fields, k, 32);
+        let layout = Layout::new(&cfg);
+        let mut pool = WeightPool::init(&cfg, &layout);
+        let mut rng = Pcg32::seeded(42);
+        for w in &mut pool.weights[layout.ffm_off..] {
+            *w = rng.normal() * 0.3;
+        }
+        let slots = (0..fields)
+            .map(|f| FeatureSlot {
+                field: f as u16,
+                bucket: rng.below(32),
+                value: 0.5 + rng.next_f32(),
+            })
+            .collect();
+        (cfg, layout, pool, Example { label: 1.0, importance: 1.0, slots })
+    }
+
+    #[test]
+    fn forward_matches_naive() {
+        let (cfg, layout, pool, ex) = setup(5, 3);
+        let mut pairs = vec![0f32; cfg.pairs()];
+        let total = forward(&pool.weights, &layout, 5, 3, &ex, &mut pairs);
+        // naive recomputation
+        let fk = 5 * 3;
+        let mut want_total = 0.0;
+        let mut p = 0;
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                let wi = layout.ffm_off + ex.slots[i].bucket as usize * fk + j * 3;
+                let wj = layout.ffm_off + ex.slots[j].bucket as usize * fk + i * 3;
+                let mut d = 0.0;
+                for kk in 0..3 {
+                    d += pool.weights[wi + kk] * pool.weights[wj + kk];
+                }
+                let v = d * ex.slots[i].value * ex.slots[j].value;
+                assert!((pairs[p] - v).abs() < 1e-5, "pair {p}");
+                want_total += v;
+                p += 1;
+            }
+        }
+        assert!((total - want_total).abs() < 1e-4);
+    }
+
+    #[test]
+    fn simd_kernel_matches_generic() {
+        for k in [4usize, 8, 16] {
+            let (cfg, layout, pool, ex) = setup(5, k);
+            let mut pairs_simd = vec![0f32; cfg.pairs()];
+            let mut pairs_gen = vec![0f32; cfg.pairs()];
+            let t1 = forward(&pool.weights, &layout, 5, k, &ex, &mut pairs_simd);
+            let t2 =
+                forward_generic(&pool.weights, &layout, 5, k, &ex, &mut pairs_gen);
+            assert!((t1 - t2).abs() < 1e-4 * (1.0 + t2.abs()), "k={k}");
+            for (a, b) in pairs_simd.iter().zip(&pairs_gen) {
+                assert!((a - b).abs() < 1e-5, "k={k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn absent_field_zeroes_its_pairs() {
+        let (cfg, layout, pool, mut ex) = setup(4, 2);
+        ex.slots[1].value = 0.0;
+        let mut pairs = vec![0f32; cfg.pairs()];
+        forward(&pool.weights, &layout, 4, 2, &ex, &mut pairs);
+        // pairs touching field 1: (0,1)=idx0, (1,2)=idx3, (1,3)=idx4
+        assert_eq!(pairs[0], 0.0);
+        assert_eq!(pairs[3], 0.0);
+        assert_eq!(pairs[4], 0.0);
+        assert_ne!(pairs[1], 0.0); // (0,2)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (cfg, layout, mut pool, ex) = setup(4, 2);
+        let f = |w: &[f32]| -> f32 {
+            let mut pairs = vec![0f32; cfg.pairs()];
+            // loss = weighted sum of pairs with fixed coefficients
+            forward(w, &layout, 4, 2, &ex, &mut pairs);
+            pairs
+                .iter()
+                .enumerate()
+                .map(|(p, v)| (p as f32 * 0.3 - 0.7) * v)
+                .sum()
+        };
+        let dpairs: Vec<f32> =
+            (0..cfg.pairs()).map(|p| p as f32 * 0.3 - 0.7).collect();
+        let mut rec = GradRecorder::default();
+        let mut acc = pool.acc.clone();
+        let w0 = pool.weights.clone();
+        backward(&mut pool.weights, &mut acc, &layout, 4, 2, &ex, &dpairs, &mut rec);
+        assert_eq!(pool.weights, w0, "recorder must not mutate");
+        let analytic = rec.dense(layout.total);
+        let eps = 1e-3;
+        let mut checked = 0;
+        for idx in layout.ffm_off..layout.total {
+            if analytic[idx] == 0.0 {
+                continue;
+            }
+            let mut wp = w0.clone();
+            wp[idx] += eps;
+            let mut wm = w0.clone();
+            wm[idx] -= eps;
+            let numeric = (f(&wp) - f(&wm)) / (2.0 * eps);
+            assert!(
+                (numeric - analytic[idx]).abs() < 2e-2 * (1.0 + numeric.abs()),
+                "idx={idx} numeric={numeric} analytic={}",
+                analytic[idx]
+            );
+            checked += 1;
+        }
+        assert!(checked >= 8, "checked only {checked} coords");
+    }
+
+    #[test]
+    fn shared_bucket_pair_gradients_accumulate() {
+        // Two fields hashed to the SAME bucket: gradients touch the
+        // same latent row twice and must both apply.
+        let cfg = ModelConfig::ffm(2, 2, 8);
+        let layout = Layout::new(&cfg);
+        let mut pool = WeightPool::init(&cfg, &layout);
+        for (i, w) in pool.weights[layout.ffm_off..].iter_mut().enumerate() {
+            *w = 0.1 * (i as f32 + 1.0);
+        }
+        let ex = Example {
+            label: 1.0,
+            importance: 1.0,
+            slots: vec![
+                FeatureSlot { field: 0, bucket: 3, value: 1.0 },
+                FeatureSlot { field: 1, bucket: 3, value: 1.0 },
+            ],
+        };
+        let mut rec = GradRecorder::default();
+        let mut acc = pool.acc.clone();
+        backward(&mut pool.weights, &mut acc, &layout, 2, 2, &ex, &[1.0], &mut rec);
+        assert_eq!(rec.grads.len(), 4); // 2 sides * k=2
+    }
+}

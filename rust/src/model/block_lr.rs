@@ -1,0 +1,108 @@
+//! Logistic-regression block: `lr(w_b, x) = Σ_f w[bucket_f] · x_f`.
+//!
+//! The yellow block of Figure 2 — hashed linear weights, one per
+//! bucket, shared across fields.
+
+use crate::feature::Example;
+use crate::model::optimizer::UpdateRule;
+use crate::model::weights::Layout;
+
+/// Forward: weighted sum of the example's LR weights.
+#[inline]
+pub fn forward(weights: &[f32], layout: &Layout, ex: &Example) -> f32 {
+    let mut sum = 0.0f32;
+    for slot in &ex.slots {
+        if slot.value != 0.0 {
+            sum += weights[layout.lr_idx(slot.bucket)] * slot.value;
+        }
+    }
+    sum
+}
+
+/// Backward: `dL/dw[bucket_f] = g · x_f` where `g = dL/d lr_out`.
+#[inline]
+pub fn backward<U: UpdateRule>(
+    weights: &mut [f32],
+    acc: &mut [f32],
+    layout: &Layout,
+    ex: &Example,
+    g: f32,
+    rule: &mut U,
+) {
+    if g == 0.0 {
+        return;
+    }
+    for slot in &ex.slots {
+        if slot.value != 0.0 {
+            let idx = layout.lr_idx(slot.bucket);
+            let (w, a) = (&mut weights[idx], &mut acc[idx]);
+            rule.update(idx, w, a, g * slot.value);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::feature::{Example, FeatureSlot};
+    use crate::model::optimizer::{GradRecorder, Sgd};
+    use crate::model::weights::{Layout, WeightPool};
+
+    fn setup() -> (Layout, WeightPool, Example) {
+        let cfg = ModelConfig::linear(3, 16);
+        let layout = Layout::new(&cfg);
+        let mut pool = WeightPool::init(&cfg, &layout);
+        for (i, w) in pool.weights.iter_mut().enumerate() {
+            *w = i as f32 * 0.1;
+        }
+        let ex = Example {
+            label: 1.0,
+            importance: 1.0,
+            slots: vec![
+                FeatureSlot { field: 0, bucket: 2, value: 1.0 },
+                FeatureSlot { field: 1, bucket: 5, value: 2.0 },
+                FeatureSlot { field: 2, bucket: 0, value: 0.0 }, // absent
+            ],
+        };
+        (layout, pool, ex)
+    }
+
+    #[test]
+    fn forward_weighted_sum() {
+        let (layout, pool, ex) = setup();
+        // 0.2*1 + 0.5*2 = 1.2; absent field contributes nothing
+        assert!((forward(&pool.weights, &layout, &ex) - 1.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn backward_grad_is_g_times_value() {
+        let (layout, mut pool, ex) = setup();
+        let mut rec = GradRecorder::default();
+        let mut acc = pool.acc.clone();
+        backward(&mut pool.weights, &mut acc, &layout, &ex, 0.5, &mut rec);
+        let dense = rec.dense(layout.total);
+        assert!((dense[2] - 0.5).abs() < 1e-6);
+        assert!((dense[5] - 1.0).abs() < 1e-6);
+        assert_eq!(dense[0], 0.0);
+    }
+
+    #[test]
+    fn backward_zero_grad_noop() {
+        let (layout, mut pool, ex) = setup();
+        let before = pool.weights.clone();
+        let mut acc = pool.acc.clone();
+        backward(&mut pool.weights, &mut acc, &layout, &ex, 0.0, &mut Sgd { lr: 1.0 });
+        assert_eq!(pool.weights, before);
+    }
+
+    #[test]
+    fn sgd_moves_weights_down_gradient() {
+        let (layout, mut pool, ex) = setup();
+        let mut acc = pool.acc.clone();
+        backward(&mut pool.weights, &mut acc, &layout, &ex, 1.0, &mut Sgd { lr: 0.1 });
+        // w[2] -= 0.1 * 1.0 ; w[5] -= 0.1 * 2.0
+        assert!((pool.weights[2] - (0.2 - 0.1)).abs() < 1e-6);
+        assert!((pool.weights[5] - (0.5 - 0.2)).abs() < 1e-6);
+    }
+}

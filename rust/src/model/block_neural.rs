@@ -1,0 +1,424 @@
+//! Neural block (the gray block of Figure 2): an MLP over the
+//! MergeNormLayer output, ReLU activations, scalar head.
+//!
+//! Implements §4.3 — **sparse weight updates**: "by realizing that we
+//! can identify *zero global gradient* scenarios upfront, prior to
+//! updating any weights, we could skip whole branches of computation
+//! with no impact on learning. [...] This optimization was possible due
+//! to ReLU's nature; this activation maps weights to zeros, effectively
+//! enabling identification of compute branches that need to be skipped
+//! during updates."
+//!
+//! Concretely, in `backward`:
+//! * units with ReLU output 0 have zero pre-activation gradient — their
+//!   bias, their entire incoming weight column, and their contribution
+//!   to upstream gradients are skipped;
+//! * inputs that are 0 (frequent: the previous layer is also ReLU) get
+//!   their whole weight *row* update skipped;
+//! * if a layer has no active units at all, the entire remaining
+//!   backward branch is cut.
+//!
+//! `sparse: false` runs the same math without the skips (the control
+//! arm of Table 3).
+
+use crate::model::optimizer::UpdateRule;
+use crate::model::weights::{LayerLayout, Layout};
+use crate::simd::dot;
+use crate::util::math::relu;
+
+/// The MLP + head, operating on slices of the shared weight pool.
+#[derive(Clone, Debug)]
+pub struct NeuralBlock {
+    pub layers: Vec<LayerLayout>,
+    pub w_out_off: usize,
+    pub w_out_len: usize,
+    pub b_out_off: usize,
+    /// §4.3 sparse updates on/off.
+    pub sparse: bool,
+    /// Scratch: active-unit indices per layer (reused across calls).
+    active_scratch: Vec<Vec<u32>>,
+}
+
+impl NeuralBlock {
+    pub fn new(layout: &Layout, sparse: bool) -> Self {
+        NeuralBlock {
+            layers: layout.layers.clone(),
+            w_out_off: layout.w_out_off,
+            w_out_len: layout.w_out_len,
+            b_out_off: layout.b_out_off,
+            sparse,
+            active_scratch: vec![Vec::new(); layout.layers.len()],
+        }
+    }
+
+    /// Forward pass.  `activations[l]` receives layer `l`'s ReLU
+    /// output; returns the scalar head value.
+    pub fn forward(
+        &self,
+        weights: &[f32],
+        input: &[f32],
+        activations: &mut Vec<Vec<f32>>,
+    ) -> f32 {
+        activations.resize(self.layers.len(), Vec::new());
+        for (l, lay) in self.layers.iter().enumerate() {
+            let (prev, cur) = activations.split_at_mut(l);
+            let x: &[f32] = if l == 0 { input } else { &prev[l - 1] };
+            debug_assert_eq!(x.len(), lay.rows);
+            let out = &mut cur[0];
+            out.resize(lay.cols, 0.0);
+            let w = &weights[lay.w_off..lay.w_off + lay.rows * lay.cols];
+            let b = &weights[lay.b_off..lay.b_off + lay.cols];
+            dot::matvec_rowmajor(x, w, Some(b), out);
+            for v in out.iter_mut() {
+                *v = relu(*v);
+            }
+        }
+        let x: &[f32] = match activations.last() {
+            Some(last) => last,
+            None => input,
+        };
+        let w_out = &weights[self.w_out_off..self.w_out_off + self.w_out_len];
+        dot::dot(x, w_out) + weights[self.b_out_off]
+    }
+
+    /// Backward pass + in-place updates.
+    ///
+    /// * `d_head` — dL/d(head output).
+    /// * `dinput` — receives dL/d(block input).
+    ///
+    /// Returns the number of weight updates applied (the Table-3
+    /// speedup is visible directly in this count).
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward<U: UpdateRule>(
+        &mut self,
+        weights: &mut [f32],
+        acc: &mut [f32],
+        input: &[f32],
+        activations: &[Vec<f32>],
+        d_head: f32,
+        dinput: &mut [f32],
+        grad_bufs: &mut Vec<Vec<f32>>,
+        rule: &mut U,
+    ) -> usize {
+        let nl = self.layers.len();
+        grad_bufs.resize(nl, Vec::new());
+        let mut updates = 0usize;
+
+        // Head: dh_last = d_head * w_out (pre-update), then update head.
+        let last = if nl == 0 { input } else { &activations[nl - 1] };
+        let mut dh: Vec<f32> = weights
+            [self.w_out_off..self.w_out_off + self.w_out_len]
+            .iter()
+            .map(|&w| d_head * w)
+            .collect();
+        for (j, &hj) in last.iter().enumerate() {
+            if !self.sparse || hj != 0.0 {
+                let idx = self.w_out_off + j;
+                rule.update(idx, &mut weights[idx], &mut acc[idx], d_head * hj);
+                updates += 1;
+            }
+        }
+        {
+            let idx = self.b_out_off;
+            rule.update(idx, &mut weights[idx], &mut acc[idx], d_head);
+            updates += 1;
+        }
+        if nl == 0 {
+            dinput.copy_from_slice(&dh);
+            return updates;
+        }
+
+        // Hidden layers, last to first.
+        for l in (0..nl).rev() {
+            let lay = self.layers[l];
+            let h = &activations[l];
+            let x: &[f32] = if l == 0 { input } else { &activations[l - 1] };
+
+            // ReLU gate -> pre-activation gradient; collect active units.
+            let mut active = std::mem::take(&mut self.active_scratch[l]);
+            active.clear();
+            let mut dpre = std::mem::take(&mut grad_bufs[l]);
+            dpre.resize(lay.cols, 0.0);
+            for j in 0..lay.cols {
+                if h[j] > 0.0 {
+                    dpre[j] = dh[j];
+                    if dh[j] != 0.0 {
+                        active.push(j as u32);
+                    }
+                } else {
+                    dpre[j] = 0.0;
+                }
+            }
+
+            let dx_needed = l > 0 || !dinput.is_empty();
+            let mut dx = vec![0f32; lay.rows];
+
+            if self.sparse {
+                // §4.3: zero global gradient -> cut the whole branch.
+                if active.is_empty() {
+                    self.active_scratch[l] = active;
+                    grad_bufs[l] = dpre;
+                    if dx_needed && l == 0 {
+                        dinput.fill(0.0);
+                    }
+                    // upstream layers receive zero gradient: done.
+                    if l == 0 {
+                        return updates;
+                    }
+                    dh = dx; // all zeros propagate
+                    continue;
+                }
+                for i in 0..lay.rows {
+                    let row = lay.w_off + i * lay.cols;
+                    let xi = x[i];
+                    // dx[i] = Σ_active W[i,j] dpre[j] (pre-update W)
+                    if dx_needed {
+                        let mut s = 0.0f32;
+                        for &ju in &active {
+                            s += weights[row + ju as usize] * dpre[ju as usize];
+                        }
+                        dx[i] = s;
+                    }
+                    // row update only when the input is non-zero
+                    if xi != 0.0 {
+                        for &ju in &active {
+                            let idx = row + ju as usize;
+                            rule.update(
+                                idx,
+                                &mut weights[idx],
+                                &mut acc[idx],
+                                xi * dpre[ju as usize],
+                            );
+                            updates += 1;
+                        }
+                    }
+                }
+                for &ju in &active {
+                    let idx = lay.b_off + ju as usize;
+                    rule.update(idx, &mut weights[idx], &mut acc[idx], dpre[ju as usize]);
+                    updates += 1;
+                }
+            } else {
+                // Dense control: touch every coordinate.
+                for i in 0..lay.rows {
+                    let row = lay.w_off + i * lay.cols;
+                    let xi = x[i];
+                    if dx_needed {
+                        dx[i] = dot::dot(&weights[row..row + lay.cols], &dpre);
+                    }
+                    for j in 0..lay.cols {
+                        let idx = row + j;
+                        rule.update(idx, &mut weights[idx], &mut acc[idx], xi * dpre[j]);
+                        updates += 1;
+                    }
+                }
+                for j in 0..lay.cols {
+                    let idx = lay.b_off + j;
+                    rule.update(idx, &mut weights[idx], &mut acc[idx], dpre[j]);
+                    updates += 1;
+                }
+            }
+
+            self.active_scratch[l] = active;
+            grad_bufs[l] = dpre;
+            if l == 0 {
+                dinput.copy_from_slice(&dx);
+            } else {
+                dh = dx;
+            }
+        }
+        updates
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::optimizer::GradRecorder;
+    use crate::model::weights::{Layout, WeightPool};
+    use crate::util::rng::Pcg32;
+
+    fn setup(hidden: &[usize]) -> (ModelConfig, Layout, WeightPool) {
+        let cfg = ModelConfig::deep_ffm(4, 2, 16, hidden);
+        let layout = Layout::new(&cfg);
+        let pool = WeightPool::init(&cfg, &layout);
+        (cfg, layout, pool)
+    }
+
+    fn rand_input(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.normal() * 0.5).collect()
+    }
+
+    #[test]
+    fn forward_manual_single_layer() {
+        let (cfg, layout, mut pool) = setup(&[3]);
+        let d = cfg.merged_dim();
+        // deterministic weights
+        for (i, w) in pool.weights.iter_mut().enumerate() {
+            *w = ((i % 7) as f32 - 3.0) * 0.1;
+        }
+        let nb = NeuralBlock::new(&layout, true);
+        let x = rand_input(d, 3);
+        let mut acts = Vec::new();
+        let head = nb.forward(&pool.weights, &x, &mut acts);
+        // manual
+        let lay = layout.layers[0];
+        let mut h = vec![0f32; 3];
+        for j in 0..3 {
+            let mut s = pool.weights[lay.b_off + j];
+            for i in 0..d {
+                s += x[i] * pool.weights[lay.w_off + i * 3 + j];
+            }
+            h[j] = s.max(0.0);
+        }
+        let mut want = pool.weights[layout.b_out_off];
+        for j in 0..3 {
+            want += h[j] * pool.weights[layout.w_out_off + j];
+        }
+        assert!((head - want).abs() < 1e-5);
+        assert_eq!(acts[0], h);
+    }
+
+    #[test]
+    fn gradients_match_finite_difference_two_layers() {
+        let (cfg, layout, pool) = setup(&[6, 4]);
+        let d = cfg.merged_dim();
+        let x = rand_input(d, 7);
+        let f = |w: &[f32]| -> f32 {
+            let nb = NeuralBlock::new(&layout, true);
+            let mut acts = Vec::new();
+            nb.forward(w, &x, &mut acts)
+        };
+        let w0 = pool.weights.clone();
+        let mut w = w0.clone();
+        let mut acc = pool.acc.clone();
+        let mut nb = NeuralBlock::new(&layout, true);
+        let mut acts = Vec::new();
+        nb.forward(&w, &x, &mut acts);
+        let mut rec = GradRecorder::default();
+        let mut dinput = vec![0f32; d];
+        let mut bufs = Vec::new();
+        nb.backward(&mut w, &mut acc, &x, &acts, 1.0, &mut dinput, &mut bufs, &mut rec);
+        assert_eq!(w, w0);
+        let analytic = rec.dense(layout.total);
+        let eps = 1e-3;
+        // check a sample of weight coords incl. both layers + head
+        let lay0 = layout.layers[0];
+        let lay1 = layout.layers[1];
+        let coords = [
+            lay0.w_off,
+            lay0.w_off + 5,
+            lay0.b_off + 1,
+            lay1.w_off + 3,
+            lay1.b_off,
+            layout.w_out_off + 2,
+            layout.b_out_off,
+        ];
+        for &idx in &coords {
+            let mut wp = w0.clone();
+            wp[idx] += eps;
+            let mut wm = w0.clone();
+            wm[idx] -= eps;
+            let numeric = (f(&wp) - f(&wm)) / (2.0 * eps);
+            assert!(
+                (numeric - analytic[idx]).abs() < 2e-2 * (1.0 + numeric.abs()),
+                "idx={idx} numeric={numeric} analytic={}",
+                analytic[idx]
+            );
+        }
+        // input gradient
+        for i in [0usize, d / 2, d - 1] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fi = |xx: &Vec<f32>| {
+                let nb = NeuralBlock::new(&layout, true);
+                let mut acts = Vec::new();
+                nb.forward(&w0, xx, &mut acts)
+            };
+            let numeric = (fi(&xp) - fi(&xm)) / (2.0 * eps);
+            assert!(
+                (numeric - dinput[i]).abs() < 2e-2 * (1.0 + numeric.abs()),
+                "input {i}: numeric={numeric} analytic={}",
+                dinput[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_and_dense_agree() {
+        let (cfg, layout, pool) = setup(&[8, 5]);
+        let d = cfg.merged_dim();
+        let x = rand_input(d, 11);
+        let run = |sparse: bool| -> (Vec<f32>, Vec<f32>) {
+            let mut w = pool.weights.clone();
+            let mut acc = pool.acc.clone();
+            let mut nb = NeuralBlock::new(&layout, sparse);
+            let mut acts = Vec::new();
+            nb.forward(&w, &x, &mut acts);
+            let mut rec = GradRecorder::default();
+            let mut dinput = vec![0f32; d];
+            let mut bufs = Vec::new();
+            nb.backward(&mut w, &mut acc, &x, &acts, 0.7, &mut dinput, &mut bufs, &mut rec);
+            (rec.dense(layout.total), dinput)
+        };
+        let (gs, dis) = run(true);
+        let (gd, did) = run(false);
+        for i in 0..gs.len() {
+            assert!((gs[i] - gd[i]).abs() < 1e-5, "grad {i}: {} vs {}", gs[i], gd[i]);
+        }
+        for i in 0..dis.len() {
+            assert!((dis[i] - did[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sparse_applies_fewer_updates() {
+        let (cfg, layout, pool) = setup(&[16, 16]);
+        let d = cfg.merged_dim();
+        let x = rand_input(d, 13);
+        let count = |sparse: bool| -> usize {
+            let mut w = pool.weights.clone();
+            let mut acc = pool.acc.clone();
+            let mut nb = NeuralBlock::new(&layout, sparse);
+            let mut acts = Vec::new();
+            nb.forward(&w, &x, &mut acts);
+            let mut rec = GradRecorder::default();
+            let mut dinput = vec![0f32; d];
+            let mut bufs = Vec::new();
+            nb.backward(&mut w, &mut acc, &x, &acts, 1.0, &mut dinput, &mut bufs, &mut rec)
+        };
+        let dense = count(false);
+        let sparse = count(true);
+        assert!(sparse < dense, "sparse={sparse} dense={dense}");
+    }
+
+    #[test]
+    fn dead_layer_cuts_branch() {
+        let (cfg, layout, mut pool) = setup(&[4]);
+        let d = cfg.merged_dim();
+        // Force all hidden pre-activations negative: big negative biases.
+        let lay = layout.layers[0];
+        for j in 0..lay.cols {
+            pool.weights[lay.b_off + j] = -100.0;
+        }
+        let x = rand_input(d, 17);
+        let mut w = pool.weights.clone();
+        let mut acc = pool.acc.clone();
+        let mut nb = NeuralBlock::new(&layout, true);
+        let mut acts = Vec::new();
+        let head = nb.forward(&w, &x, &mut acts);
+        // head = b_out only
+        assert!((head - pool.weights[layout.b_out_off]).abs() < 1e-6);
+        let mut rec = GradRecorder::default();
+        let mut dinput = vec![0f32; d];
+        let mut bufs = Vec::new();
+        let n = nb.backward(&mut w, &mut acc, &x, &acts, 1.0, &mut dinput, &mut bufs, &mut rec);
+        // only head w_out (all-zero activations are skipped) + b_out
+        assert!(n <= 1 + 1, "updates={n}");
+        assert!(dinput.iter().all(|&v| v == 0.0));
+    }
+}

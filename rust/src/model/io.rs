@@ -1,0 +1,340 @@
+//! Binary model serialization — the `FWMODEL1` format.
+//!
+//! Design constraints from §6 of the paper:
+//!
+//! * **Consistent memory-level structure**: the same config always
+//!   produces byte-identical layout, so two training rounds differ only
+//!   in the bytes of weights that actually moved — the property the
+//!   byte-level patcher exploits.
+//! * **Optimizer state is optional**: inference files carry weights
+//!   only ("the latter are not required for actual inference, which
+//!   immediately reduces the required space by half").
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic    [8]  b"FWMODEL1"
+//! version  u32
+//! arch     u8   (0 linear / 1 ffm / 2 deepffm)
+//! has_acc  u8
+//! sparse   u8
+//! _pad     u8
+//! fields   u32
+//! latent   u32
+//! buckets  u32
+//! n_hidden u32, hidden[i] u32 ...
+//! lr, ffm_lr, nn_lr, power_t, l2, init_ffm   f32 each
+//! seed     u64
+//! n_weights u64
+//! weights  [n_weights * 4] raw f32
+//! acc      [n_weights * 4] raw f32            (if has_acc)
+//! ```
+
+use std::io::{self, Read, Write};
+
+use crate::config::{Architecture, ModelConfig};
+use crate::model::regressor::Regressor;
+use crate::model::weights::{Layout, WeightPool};
+
+pub const MAGIC: &[u8; 8] = b"FWMODEL1";
+pub const VERSION: u32 = 1;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "truncated model file",
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> io::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Serialize a model to bytes.  `include_optimizer` keeps AdaGrad state
+/// (training checkpoints); inference deployments drop it.
+pub fn to_bytes(reg: &Regressor, include_optimizer: bool) -> Vec<u8> {
+    let cfg = &reg.cfg;
+    let include_acc = include_optimizer && reg.pool.has_optimizer_state();
+    let mut out = Vec::with_capacity(64 + reg.pool.weights.len() * 8);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    out.push(match cfg.arch {
+        Architecture::Linear => 0,
+        Architecture::Ffm => 1,
+        Architecture::DeepFfm => 2,
+    });
+    out.push(include_acc as u8);
+    out.push(cfg.sparse_updates as u8);
+    out.push(0);
+    put_u32(&mut out, cfg.fields as u32);
+    put_u32(&mut out, cfg.latent_dim as u32);
+    put_u32(&mut out, cfg.buckets);
+    put_u32(&mut out, cfg.hidden.len() as u32);
+    for &h in &cfg.hidden {
+        put_u32(&mut out, h as u32);
+    }
+    for v in [cfg.lr, cfg.ffm_lr, cfg.nn_lr, cfg.power_t, cfg.l2, cfg.init_ffm] {
+        put_f32(&mut out, v);
+    }
+    out.extend_from_slice(&cfg.seed.to_le_bytes());
+    out.extend_from_slice(&(reg.pool.weights.len() as u64).to_le_bytes());
+    for &w in &reg.pool.weights {
+        put_f32(&mut out, w);
+    }
+    if include_acc {
+        for &a in &reg.pool.acc {
+            put_f32(&mut out, a);
+        }
+    }
+    out
+}
+
+/// Deserialize a model from bytes.
+pub fn from_bytes(buf: &[u8]) -> io::Result<Regressor> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.take(8)? != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unsupported version {version}"),
+        ));
+    }
+    let arch = match r.u8()? {
+        0 => Architecture::Linear,
+        1 => Architecture::Ffm,
+        2 => Architecture::DeepFfm,
+        a => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad arch byte {a}"),
+            ))
+        }
+    };
+    let has_acc = r.u8()? != 0;
+    let sparse = r.u8()? != 0;
+    let _pad = r.u8()?;
+    let fields = r.u32()? as usize;
+    let latent = r.u32()? as usize;
+    let buckets = r.u32()?;
+    let n_hidden = r.u32()? as usize;
+    if n_hidden > 64 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "too many layers"));
+    }
+    let mut hidden = Vec::with_capacity(n_hidden);
+    for _ in 0..n_hidden {
+        hidden.push(r.u32()? as usize);
+    }
+    let mut cfg = match arch {
+        Architecture::Linear => ModelConfig::linear(fields, buckets),
+        Architecture::Ffm => ModelConfig::ffm(fields, latent, buckets),
+        Architecture::DeepFfm => ModelConfig::deep_ffm(fields, latent, buckets, &hidden),
+    };
+    cfg.lr = r.f32()?;
+    cfg.ffm_lr = r.f32()?;
+    cfg.nn_lr = r.f32()?;
+    cfg.power_t = r.f32()?;
+    cfg.l2 = r.f32()?;
+    cfg.init_ffm = r.f32()?;
+    cfg.seed = r.u64()?;
+    cfg.sparse_updates = sparse;
+    cfg.validate()
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    let n = r.u64()? as usize;
+    let layout = Layout::new(&cfg);
+    if n != layout.total {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("weight count {n} != layout {}", layout.total),
+        ));
+    }
+    let mut weights = Vec::with_capacity(n);
+    let wbytes = r.take(n * 4)?;
+    for c in wbytes.chunks_exact(4) {
+        weights.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    let acc = if has_acc {
+        let abytes = r.take(n * 4)?;
+        abytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    if r.pos != buf.len() {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "trailing bytes"));
+    }
+    Ok(Regressor::from_parts(cfg, WeightPool { weights, acc }))
+}
+
+/// Save to a file.
+pub fn save(reg: &Regressor, path: &std::path::Path, include_optimizer: bool) -> io::Result<()> {
+    let bytes = to_bytes(reg, include_optimizer);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&bytes)
+}
+
+/// Load from a file.
+pub fn load(path: &std::path::Path) -> io::Result<Regressor> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    from_bytes(&buf)
+}
+
+/// Byte offset where the weight payload starts (header size).  The
+/// quantizer needs this to slice the payload out of a serialized model.
+pub fn payload_offset(cfg: &ModelConfig) -> usize {
+    8 + 4 + 4 + 4 * 4 + 4 * cfg.hidden.len() + 6 * 4 + 8 + 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+    use crate::model::Workspace;
+
+    fn trained(arch: u8) -> Regressor {
+        let cfg = match arch {
+            0 => ModelConfig::linear(4, 256),
+            1 => ModelConfig::ffm(4, 2, 256),
+            _ => ModelConfig::deep_ffm(4, 2, 256, &[8]),
+        };
+        let mut reg = Regressor::new(&cfg);
+        let mut ws = Workspace::new();
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 9, 256);
+        for _ in 0..500 {
+            let ex = s.next_example();
+            reg.learn(&ex, &mut ws);
+        }
+        reg
+    }
+
+    #[test]
+    fn roundtrip_all_archs_with_optimizer() {
+        for arch in 0..3u8 {
+            let reg = trained(arch);
+            let bytes = to_bytes(&reg, true);
+            let back = from_bytes(&bytes).unwrap();
+            assert_eq!(back.pool.weights, reg.pool.weights);
+            assert_eq!(back.pool.acc, reg.pool.acc);
+            assert_eq!(back.cfg.fields, reg.cfg.fields);
+            assert_eq!(back.cfg.hidden, reg.cfg.hidden);
+        }
+    }
+
+    #[test]
+    fn inference_file_half_size() {
+        let reg = trained(2);
+        let full = to_bytes(&reg, true);
+        let inf = to_bytes(&reg, false);
+        // weights-only payload is half the weights+acc payload
+        let header = payload_offset(&reg.cfg);
+        assert_eq!(full.len() - header, 2 * (inf.len() - header));
+        let back = from_bytes(&inf).unwrap();
+        assert!(!back.pool.has_optimizer_state());
+        assert_eq!(back.pool.weights, reg.pool.weights);
+    }
+
+    #[test]
+    fn payload_offset_matches_format() {
+        let reg = trained(2);
+        let bytes = to_bytes(&reg, false);
+        let off = payload_offset(&reg.cfg);
+        // first weight must round-trip from the computed offset
+        let w0 = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        assert_eq!(w0, reg.pool.weights[0]);
+    }
+
+    #[test]
+    fn same_config_same_byte_layout() {
+        // §6 precondition: two training rounds of the same config have
+        // byte-aligned files (same length, same header).
+        let a = trained(2);
+        let mut b = trained(2);
+        // perturb one weight: files must differ in exactly 4 bytes
+        let idx = b.layout.ffm_off + 10;
+        b.pool.weights[idx] += 1.0;
+        let ba = to_bytes(&a, false);
+        let bb = to_bytes(&b, false);
+        assert_eq!(ba.len(), bb.len());
+        let diff: usize = ba.iter().zip(&bb).filter(|(x, y)| x != y).count();
+        assert!(diff <= 4 && diff > 0, "diff bytes = {diff}");
+    }
+
+    #[test]
+    fn corrupt_inputs_rejected() {
+        let reg = trained(1);
+        let bytes = to_bytes(&reg, true);
+        assert!(from_bytes(&bytes[..bytes.len() - 1]).is_err()); // truncated
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(from_bytes(&bad_magic).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(from_bytes(&extra).is_err());
+        let mut bad_arch = bytes.clone();
+        bad_arch[12] = 9;
+        assert!(from_bytes(&bad_arch).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("fw_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.fw");
+        let reg = trained(2);
+        save(&reg, &path, true).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.pool.weights, reg.pool.weights);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loaded_model_predicts_identically() {
+        let reg = trained(2);
+        let back = from_bytes(&to_bytes(&reg, false)).unwrap();
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 10, 256);
+        let mut w1 = Workspace::new();
+        let mut w2 = Workspace::new();
+        for _ in 0..50 {
+            let ex = s.next_example();
+            assert_eq!(reg.predict(&ex, &mut w1), back.predict(&ex, &mut w2));
+        }
+    }
+}

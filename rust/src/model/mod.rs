@@ -1,0 +1,47 @@
+//! The DeepFFM model core: weight layout/pool, AdaGrad optimizer, and
+//! the LR / FFM / neural blocks composed by [`regressor::Regressor`].
+//!
+//! Blocks mirror the structure of the production engine (block_ffm.rs,
+//! block_neural.rs, regressor.rs in Fwumious Wabbit); each implements a
+//! hand-derived backward pass and is validated by finite-difference
+//! gradient checks in its unit tests.
+
+pub mod block_ffm;
+pub mod block_lr;
+pub mod block_neural;
+pub mod io;
+pub mod optimizer;
+pub mod regressor;
+pub mod weights;
+
+/// Reusable per-thread scratch space.  All forward/backward temporaries
+/// live here so the hot path performs zero allocations per example.
+#[derive(Clone, Debug, Default)]
+pub struct Workspace {
+    /// FFM pair interaction values, strict upper triangle, row-major.
+    pub pairs: Vec<f32>,
+    /// MergeNormLayer output [1 + P].
+    pub merged: Vec<f32>,
+    /// Pre-norm merged vector (needed by the RMS-norm backward).
+    pub merged_raw: Vec<f32>,
+    /// RMS of merged_raw.
+    pub rms: f32,
+    /// Per-layer post-activation outputs.
+    pub activations: Vec<Vec<f32>>,
+    /// LR block output.
+    pub lr_out: f32,
+    /// Final logit.
+    pub logit: f32,
+    /// Gradient scratch, one buffer per layer boundary.
+    pub grad_bufs: Vec<Vec<f32>>,
+    /// Gradient w.r.t. merged (post-norm).
+    pub dmerged: Vec<f32>,
+    /// Assembled ctx+candidate slots for the context-cache fast path.
+    pub partial_slots: Vec<crate::feature::FeatureSlot>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}

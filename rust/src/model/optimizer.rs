@@ -1,0 +1,155 @@
+//! Per-coordinate update rules.
+//!
+//! The engine uses VW-style adaptive (AdaGrad) updates with a tunable
+//! `power_t` — one of the hyperparameters the paper's model search
+//! sweeps ("power of t, learning rates for different types of blocks").
+//!
+//! Blocks are generic over [`UpdateRule`] so the same backward code
+//! serves the AdaGrad hot path, plain SGD, and the gradient recorder
+//! used by finite-difference tests.
+
+/// A per-coordinate update applied at gradient-sink time.
+pub trait UpdateRule {
+    /// Apply the update for pool index `idx` given gradient `g`.
+    fn update(&mut self, idx: usize, w: &mut f32, acc: &mut f32, g: f32);
+}
+
+/// AdaGrad with power_t and optional L2-on-gradient.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaGrad {
+    pub lr: f32,
+    pub power_t: f32,
+    pub l2: f32,
+}
+
+impl AdaGrad {
+    pub fn new(lr: f32, power_t: f32, l2: f32) -> Self {
+        AdaGrad { lr, power_t, l2 }
+    }
+}
+
+impl UpdateRule for AdaGrad {
+    #[inline]
+    fn update(&mut self, _idx: usize, w: &mut f32, acc: &mut f32, g: f32) {
+        let g = g + self.l2 * *w;
+        *acc += g * g;
+        // step = lr * g / acc^power_t; power_t in [0, 1].
+        let denom = if self.power_t == 0.5 {
+            acc.sqrt()
+        } else if self.power_t == 0.0 {
+            1.0
+        } else {
+            acc.powf(self.power_t)
+        };
+        *w -= self.lr * g / denom;
+    }
+}
+
+/// Plain SGD (power_t = 0 AdaGrad without accumulator churn).
+#[derive(Clone, Copy, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl UpdateRule for Sgd {
+    #[inline]
+    fn update(&mut self, _idx: usize, w: &mut f32, _acc: &mut f32, g: f32) {
+        *w -= self.lr * g;
+    }
+}
+
+/// Records gradients instead of updating — the finite-difference
+/// harness compares these against numeric gradients.
+#[derive(Clone, Debug, Default)]
+pub struct GradRecorder {
+    /// (pool index, gradient) in emission order.
+    pub grads: Vec<(usize, f32)>,
+}
+
+impl GradRecorder {
+    pub fn dense(&self, total: usize) -> Vec<f32> {
+        let mut out = vec![0f32; total];
+        for &(i, g) in &self.grads {
+            out[i] += g;
+        }
+        out
+    }
+}
+
+impl UpdateRule for GradRecorder {
+    #[inline]
+    fn update(&mut self, idx: usize, _w: &mut f32, _acc: &mut f32, g: f32) {
+        self.grads.push((idx, g));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adagrad_first_step_is_lr_g() {
+        let mut opt = AdaGrad::new(0.1, 0.5, 0.0);
+        let mut w = 0.0f32;
+        let mut acc = 0.0f32;
+        opt.update(0, &mut w, &mut acc, 1.0);
+        // acc becomes 1.0, denom 1.0 -> step = lr
+        assert!((w + 0.1).abs() < 1e-6, "w={w}");
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn adagrad_steps_shrink() {
+        let mut opt = AdaGrad::new(0.1, 0.5, 0.0);
+        let mut w = 0.0f32;
+        let mut acc = 1.0f32;
+        let mut prev_step = f32::MAX;
+        for _ in 0..10 {
+            let before = w;
+            opt.update(0, &mut w, &mut acc, 1.0);
+            let step = (before - w).abs();
+            assert!(step <= prev_step + 1e-9);
+            prev_step = step;
+        }
+    }
+
+    #[test]
+    fn power_t_zero_is_constant_rate() {
+        let mut opt = AdaGrad::new(0.2, 0.0, 0.0);
+        let mut w = 0.0f32;
+        let mut acc = 1.0f32;
+        opt.update(0, &mut w, &mut acc, 1.0);
+        opt.update(0, &mut w, &mut acc, 1.0);
+        assert!((w + 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2_pulls_towards_zero() {
+        let mut opt = AdaGrad::new(0.1, 0.0, 0.5);
+        let mut w = 1.0f32;
+        let mut acc = 1.0f32;
+        opt.update(0, &mut w, &mut acc, 0.0);
+        assert!(w < 1.0);
+    }
+
+    #[test]
+    fn sgd_simple() {
+        let mut opt = Sgd { lr: 0.5 };
+        let (mut w, mut acc) = (1.0f32, 0.0f32);
+        opt.update(3, &mut w, &mut acc, 0.4);
+        assert!((w - 0.8).abs() < 1e-7);
+        assert_eq!(acc, 0.0);
+    }
+
+    #[test]
+    fn recorder_accumulates() {
+        let mut r = GradRecorder::default();
+        let (mut w, mut acc) = (1.0f32, 1.0f32);
+        r.update(2, &mut w, &mut acc, 0.5);
+        r.update(2, &mut w, &mut acc, 0.25);
+        r.update(0, &mut w, &mut acc, -1.0);
+        assert_eq!(w, 1.0); // untouched
+        let dense = r.dense(4);
+        assert_eq!(dense, vec![-1.0, 0.0, 0.75, 0.0]);
+    }
+}

@@ -1,0 +1,620 @@
+//! The composed model (Figure 2): LR + FFM + MergeNormLayer + neural
+//! block, with logistic loss and single-pass online learning.
+//!
+//! Forward spec (bit-identical in structure to `python/compile/model.py`
+//! — the PJRT cross-check test holds the two to rtol 1e-5):
+//!
+//! ```text
+//! lr_out  = Σ_f w_lr[bucket_f] · x_f
+//! pairs   = DiagMask(FFM(w_ffm, x))              (upper triangle, row-major)
+//! merged  = [lr_out, pairs...] / rms             (MergeNormLayer, eps 1e-6)
+//! h       = ReLU MLP(merged)
+//! logit   = h·w_out + b_out + lr_out             (residual LR)
+//! p       = σ(logit)
+//! ```
+//!
+//! For `Architecture::Ffm`: `logit = lr_out + Σ pairs`;
+//! for `Architecture::Linear`: `logit = lr_out`.
+
+use crate::config::{Architecture, ModelConfig};
+use crate::feature::{Example, FeatureSlot};
+use crate::model::block_neural::NeuralBlock;
+use crate::model::optimizer::{AdaGrad, UpdateRule};
+use crate::model::weights::{Layout, WeightPool};
+use crate::model::{block_ffm, block_lr, Workspace};
+use crate::simd::dot;
+use crate::util::math::sigmoid;
+
+/// MergeNormLayer epsilon — part of the cross-layer ABI.
+pub const MERGE_NORM_EPS: f32 = 1e-6;
+
+/// Index of pair (i, j), i < j, in the row-major upper triangle.
+#[inline]
+pub fn pair_index(i: usize, j: usize, fields: usize) -> usize {
+    debug_assert!(i < j && j < fields);
+    i * (2 * fields - i - 1) / 2 + (j - i - 1)
+}
+
+/// Cached partial forward state for a request context (§5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ContextPartial {
+    /// Number of context fields C (fields 0..C).
+    pub ctx_fields: usize,
+    /// LR contribution of the context fields.
+    pub lr_sum: f32,
+    /// Pair values for context×context pairs, indexed by
+    /// `pair_index(i, j, fields)` order (compacted, C*(C-1)/2 entries).
+    pub ctx_pairs: Vec<f32>,
+    /// Context slots (buckets + values) for the ctx×candidate pairs.
+    pub slots: Vec<FeatureSlot>,
+}
+
+/// The online regressor.
+#[derive(Clone, Debug)]
+pub struct Regressor {
+    pub cfg: ModelConfig,
+    pub layout: Layout,
+    pub pool: WeightPool,
+    nn: Option<NeuralBlock>,
+}
+
+impl Regressor {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        cfg.validate().expect("invalid model config");
+        let layout = Layout::new(cfg);
+        let pool = WeightPool::init(cfg, &layout);
+        let nn = match cfg.arch {
+            Architecture::DeepFfm => Some(NeuralBlock::new(&layout, cfg.sparse_updates)),
+            _ => None,
+        };
+        Regressor { cfg: cfg.clone(), layout, pool, nn }
+    }
+
+    /// Rebuild from existing parts (model loading).
+    pub fn from_parts(cfg: ModelConfig, pool: WeightPool) -> Self {
+        let layout = Layout::new(&cfg);
+        assert_eq!(pool.weights.len(), layout.total, "pool/layout mismatch");
+        let nn = match cfg.arch {
+            Architecture::DeepFfm => Some(NeuralBlock::new(&layout, cfg.sparse_updates)),
+            _ => None,
+        };
+        Regressor { cfg, layout, pool, nn }
+    }
+
+    /// Toggle §4.3 sparse updates (Table 3's two arms).
+    pub fn set_sparse_updates(&mut self, sparse: bool) {
+        self.cfg.sparse_updates = sparse;
+        if let Some(nn) = &mut self.nn {
+            nn.sparse = sparse;
+        }
+    }
+
+    // ------------------------------------------------------------ forward
+
+    /// Predict the click probability for an example.
+    pub fn predict(&self, ex: &Example, ws: &mut Workspace) -> f32 {
+        debug_assert_eq!(ex.slots.len(), self.cfg.fields);
+        let w = &self.pool.weights;
+        let lr_out = block_lr::forward(w, &self.layout, ex);
+        if self.cfg.arch == Architecture::Linear {
+            ws.lr_out = lr_out;
+            ws.logit = lr_out;
+            return sigmoid(lr_out);
+        }
+        ws.pairs.resize(self.cfg.pairs(), 0.0);
+        block_ffm::forward(
+            w,
+            &self.layout,
+            self.cfg.fields,
+            self.cfg.latent_dim,
+            ex,
+            &mut ws.pairs,
+        );
+        self.finish_forward(lr_out, ws)
+    }
+
+    /// Shared tail: MergeNorm + neural head (or plain FFM sum).
+    /// `ws.pairs` must already hold the pair interactions.
+    fn finish_forward(&self, lr_out: f32, ws: &mut Workspace) -> f32 {
+        ws.lr_out = lr_out;
+        match self.cfg.arch {
+            Architecture::Linear => unreachable!(),
+            Architecture::Ffm => {
+                let s: f32 = ws.pairs.iter().sum();
+                ws.logit = lr_out + s;
+            }
+            Architecture::DeepFfm => {
+                let d = self.cfg.merged_dim();
+                ws.merged_raw.resize(d, 0.0);
+                ws.merged_raw[0] = lr_out;
+                ws.merged_raw[1..].copy_from_slice(&ws.pairs);
+                let ssq = dot::dot(&ws.merged_raw, &ws.merged_raw);
+                let rms = (ssq / d as f32 + MERGE_NORM_EPS).sqrt();
+                ws.rms = rms;
+                ws.merged.resize(d, 0.0);
+                let inv = 1.0 / rms;
+                for (m, &r) in ws.merged.iter_mut().zip(&ws.merged_raw) {
+                    *m = r * inv;
+                }
+                let nn = self.nn.as_ref().expect("deepffm has nn");
+                let head =
+                    nn.forward(&self.pool.weights, &ws.merged, &mut ws.activations);
+                ws.logit = head + lr_out;
+            }
+        }
+        sigmoid(ws.logit)
+    }
+
+    // ----------------------------------------------------------- learning
+
+    /// One online learning step; returns the *pre-update* prediction
+    /// (progressive validation score).
+    pub fn learn(&mut self, ex: &Example, ws: &mut Workspace) -> f32 {
+        debug_assert!(ex.is_labeled(), "learn needs a labeled example");
+        let p = self.predict(ex, ws);
+        let d = (p - ex.label) * ex.importance; // dL/dlogit
+        let mut lr_rule = AdaGrad::new(self.cfg.lr, self.cfg.power_t, self.cfg.l2);
+        let mut ffm_rule =
+            AdaGrad::new(self.cfg.ffm_lr, self.cfg.power_t, self.cfg.l2);
+        let mut nn_rule = AdaGrad::new(self.cfg.nn_lr, self.cfg.power_t, self.cfg.l2);
+        self.backward(ex, ws, d, &mut lr_rule, &mut ffm_rule, &mut nn_rule);
+        p
+    }
+
+    /// Backward pass with caller-supplied update rules (used by tests
+    /// with a [`GradRecorder`](crate::model::optimizer::GradRecorder)).
+    pub fn backward<U: UpdateRule>(
+        &mut self,
+        ex: &Example,
+        ws: &mut Workspace,
+        d: f32,
+        lr_rule: &mut U,
+        ffm_rule: &mut U,
+        nn_rule: &mut U,
+    ) {
+        let layout = &self.layout;
+        let (weights, acc) = (&mut self.pool.weights, &mut self.pool.acc);
+        debug_assert!(!acc.is_empty(), "inference pool cannot learn");
+        match self.cfg.arch {
+            Architecture::Linear => {
+                block_lr::backward(weights, acc, layout, ex, d, lr_rule);
+            }
+            Architecture::Ffm => {
+                // logit = lr_out + Σ pairs -> every pair grad is d
+                let np = self.cfg.pairs();
+                ws.dmerged.clear();
+                ws.dmerged.resize(np, d);
+                block_ffm::backward(
+                    weights,
+                    acc,
+                    layout,
+                    self.cfg.fields,
+                    self.cfg.latent_dim,
+                    ex,
+                    &ws.dmerged,
+                    ffm_rule,
+                );
+                block_lr::backward(weights, acc, layout, ex, d, lr_rule);
+            }
+            Architecture::DeepFfm => {
+                let dim = self.cfg.merged_dim();
+                ws.dmerged.resize(dim, 0.0);
+                let nn = self.nn.as_mut().expect("deepffm has nn");
+                nn.backward(
+                    weights,
+                    acc,
+                    &ws.merged,
+                    &ws.activations,
+                    d,
+                    &mut ws.dmerged,
+                    &mut ws.grad_bufs,
+                    nn_rule,
+                );
+                // RMS-norm backward: draw = (g - m * <g,m>/D) / rms
+                let s = dot::dot(&ws.dmerged, &ws.merged);
+                let inv = 1.0 / ws.rms;
+                let sd = s / dim as f32;
+                // reuse dmerged in place as draw
+                for i in 0..dim {
+                    ws.dmerged[i] = (ws.dmerged[i] - ws.merged[i] * sd) * inv;
+                }
+                let d_lr = d + ws.dmerged[0]; // residual + through merge
+                block_ffm::backward(
+                    weights,
+                    acc,
+                    layout,
+                    self.cfg.fields,
+                    self.cfg.latent_dim,
+                    ex,
+                    &ws.dmerged[1..],
+                    ffm_rule,
+                );
+                block_lr::backward(weights, acc, layout, ex, d_lr, lr_rule);
+            }
+        }
+    }
+
+    // ----------------------------------------------- context caching (§5)
+
+    /// Precompute the reusable part of a request context: fields
+    /// `0..ctx_slots.len()` of the model.
+    pub fn context_partial(&self, ctx_slots: &[FeatureSlot]) -> ContextPartial {
+        let c = ctx_slots.len();
+        debug_assert!(c <= self.cfg.fields);
+        let w = &self.pool.weights;
+        let mut lr_sum = 0.0f32;
+        for s in ctx_slots {
+            if s.value != 0.0 {
+                lr_sum += w[self.layout.lr_idx(s.bucket)] * s.value;
+            }
+        }
+        let mut ctx_pairs = Vec::with_capacity(c.saturating_sub(1) * c / 2);
+        if self.cfg.arch != Architecture::Linear {
+            let k = self.cfg.latent_dim;
+            let fk = self.cfg.fields * k;
+            for i in 0..c {
+                for j in (i + 1)..c {
+                    let (si, sj) = (&ctx_slots[i], &ctx_slots[j]);
+                    if si.value == 0.0 || sj.value == 0.0 {
+                        ctx_pairs.push(0.0);
+                        continue;
+                    }
+                    let ri = self.layout.ffm_off + si.bucket as usize * fk + j * k;
+                    let rj = self.layout.ffm_off + sj.bucket as usize * fk + i * k;
+                    ctx_pairs.push(
+                        dot::dot(&w[ri..ri + k], &w[rj..rj + k])
+                            * si.value
+                            * sj.value,
+                    );
+                }
+            }
+        }
+        ContextPartial {
+            ctx_fields: c,
+            lr_sum,
+            ctx_pairs,
+            slots: ctx_slots.to_vec(),
+        }
+    }
+
+    /// Score one candidate given a cached context partial.
+    /// `cand_slots` covers fields `C..fields` (in order).
+    pub fn predict_with_partial(
+        &self,
+        cp: &ContextPartial,
+        cand_slots: &[FeatureSlot],
+        ws: &mut Workspace,
+    ) -> f32 {
+        let f = self.cfg.fields;
+        let c = cp.ctx_fields;
+        debug_assert_eq!(c + cand_slots.len(), f);
+        let w = &self.pool.weights;
+        // LR: cached context sum + candidate sum.
+        let mut lr_out = cp.lr_sum;
+        for s in cand_slots {
+            if s.value != 0.0 {
+                lr_out += w[self.layout.lr_idx(s.bucket)] * s.value;
+            }
+        }
+        if self.cfg.arch == Architecture::Linear {
+            ws.lr_out = lr_out;
+            ws.logit = lr_out;
+            return sigmoid(lr_out);
+        }
+        let k = self.cfg.latent_dim;
+        ws.pairs.resize(self.cfg.pairs(), 0.0);
+        // ctx×ctx from cache (row-major contiguous per context row).
+        let mut cp_i = 0;
+        for i in 0..c {
+            let row_base = i * (2 * f - i - 1) / 2;
+            for j in (i + 1)..c {
+                ws.pairs[row_base + (j - i - 1)] = cp.ctx_pairs[cp_i];
+                cp_i += 1;
+            }
+        }
+        // ctx×cand and cand×cand computed fresh through the SIMD-
+        // dispatched partial kernel (needs all slots in field order).
+        ws.partial_slots.clear();
+        ws.partial_slots.extend_from_slice(&cp.slots);
+        ws.partial_slots.extend_from_slice(cand_slots);
+        block_ffm::forward_partial(
+            w,
+            &self.layout,
+            f,
+            k,
+            c,
+            &ws.partial_slots,
+            &mut ws.pairs,
+        );
+        self.finish_forward(lr_out, ws)
+    }
+
+    /// Total parameter count (inference weights).
+    pub fn num_weights(&self) -> usize {
+        self.layout.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+    use crate::eval::RollingAuc;
+    use crate::model::optimizer::GradRecorder;
+    use crate::util::math::logloss;
+
+    fn tiny_cfg(arch: Architecture) -> ModelConfig {
+        let mut cfg = match arch {
+            Architecture::Linear => ModelConfig::linear(4, 256),
+            Architecture::Ffm => ModelConfig::ffm(4, 2, 256),
+            Architecture::DeepFfm => ModelConfig::deep_ffm(4, 2, 256, &[8]),
+        };
+        cfg.seed = 77;
+        cfg
+    }
+
+    fn stream() -> SyntheticStream {
+        SyntheticStream::with_buckets(DatasetSpec::tiny(), 21, 256)
+    }
+
+    #[test]
+    fn pair_index_rowmajor() {
+        let f = 5;
+        let mut expect = 0;
+        for i in 0..f {
+            for j in (i + 1)..f {
+                assert_eq!(pair_index(i, j, f), expect);
+                expect += 1;
+            }
+        }
+        assert_eq!(expect, f * (f - 1) / 2);
+    }
+
+    #[test]
+    fn predictions_in_unit_interval() {
+        for arch in [Architecture::Linear, Architecture::Ffm, Architecture::DeepFfm] {
+            let r = Regressor::new(&tiny_cfg(arch));
+            let mut ws = Workspace::new();
+            let mut s = stream();
+            for _ in 0..50 {
+                let p = r.predict(&s.next_example(), &mut ws);
+                assert!((0.0..=1.0).contains(&p), "{arch:?} p={p}");
+                assert!(p.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn full_gradient_matches_finite_difference_deepffm() {
+        let cfg = tiny_cfg(Architecture::DeepFfm);
+        let mut reg = Regressor::new(&cfg);
+        let mut s = stream();
+        let ex = s.next_example();
+        let mut ws = Workspace::new();
+        // loss(w) with frozen structure
+        let snapshot = reg.clone();
+        let ex_c = ex.clone();
+        let loss = move |weights: &[f32]| -> f64 {
+            let mut r2 = snapshot.clone();
+            r2.pool.weights = weights.to_vec();
+            let mut w2 = Workspace::new();
+            let p = r2.predict(&ex_c, &mut w2);
+            logloss(p, ex_c.label)
+        };
+        let w0 = reg.pool.weights.clone();
+        let p = reg.predict(&ex, &mut ws);
+        let d = p - ex.label;
+        let mut rec_lr = GradRecorder::default();
+        let mut rec_ffm = GradRecorder::default();
+        let mut rec_nn = GradRecorder::default();
+        reg.backward(&ex, &mut ws, d, &mut rec_lr, &mut rec_ffm, &mut rec_nn);
+        let mut analytic = rec_lr.dense(reg.layout.total);
+        for (a, b) in analytic.iter_mut().zip(rec_ffm.dense(reg.layout.total)) {
+            *a += b;
+        }
+        for (a, b) in analytic.iter_mut().zip(rec_nn.dense(reg.layout.total)) {
+            *a += b;
+        }
+        let mut checked = 0;
+        for idx in 0..reg.layout.total {
+            if analytic[idx].abs() < 1e-8 {
+                continue;
+            }
+            // scale eps down for steep coordinates: the quadratic
+            // truncation error of the central difference grows with
+            // curvature, which tracks |grad| under sigmoid+logloss
+            let eps: f32 = if analytic[idx].abs() > 5.0 { 1e-4 } else { 1e-3 };
+            let mut wp = w0.clone();
+            wp[idx] += eps;
+            let mut wm = w0.clone();
+            wm[idx] -= eps;
+            let numeric = ((loss(&wp) - loss(&wm)) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (numeric - analytic[idx]).abs() < 4e-2 * (1.0 + numeric.abs()),
+                "idx={idx} numeric={numeric} analytic={}",
+                analytic[idx]
+            );
+            checked += 1;
+            if checked > 120 {
+                break; // enough coverage, keep the test fast
+            }
+        }
+        assert!(checked >= 30, "only {checked} coords checked");
+    }
+
+    #[test]
+    fn full_gradient_matches_finite_difference_ffm() {
+        let cfg = tiny_cfg(Architecture::Ffm);
+        let mut reg = Regressor::new(&cfg);
+        let mut s = stream();
+        let ex = s.next_example();
+        let mut ws = Workspace::new();
+        let snapshot = reg.clone();
+        let ex_c = ex.clone();
+        let loss = move |weights: &[f32]| -> f64 {
+            let mut r2 = snapshot.clone();
+            r2.pool.weights = weights.to_vec();
+            let mut w2 = Workspace::new();
+            logloss(r2.predict(&ex_c, &mut w2), ex_c.label)
+        };
+        let w0 = reg.pool.weights.clone();
+        let p = reg.predict(&ex, &mut ws);
+        let d = p - ex.label;
+        let mut rec_lr = GradRecorder::default();
+        let mut rec_ffm = GradRecorder::default();
+        let mut rec_nn = GradRecorder::default();
+        reg.backward(&ex, &mut ws, d, &mut rec_lr, &mut rec_ffm, &mut rec_nn);
+        let mut analytic = rec_lr.dense(reg.layout.total);
+        for (a, b) in analytic.iter_mut().zip(rec_ffm.dense(reg.layout.total)) {
+            *a += b;
+        }
+        for (a, b) in analytic.iter_mut().zip(rec_nn.dense(reg.layout.total)) {
+            *a += b;
+        }
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for idx in 0..reg.layout.total {
+            if analytic[idx].abs() < 1e-8 {
+                continue;
+            }
+            let mut wp = w0.clone();
+            wp[idx] += eps;
+            let mut wm = w0.clone();
+            wm[idx] -= eps;
+            let numeric = ((loss(&wp) - loss(&wm)) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (numeric - analytic[idx]).abs() < 2e-2 * (1.0 + numeric.abs()),
+                "idx={idx} numeric={numeric} analytic={}",
+                analytic[idx]
+            );
+            checked += 1;
+        }
+        assert!(checked >= 10);
+    }
+
+    #[test]
+    fn learning_beats_base_rate() {
+        for arch in [Architecture::Linear, Architecture::Ffm, Architecture::DeepFfm] {
+            let mut reg = Regressor::new(&tiny_cfg(arch));
+            let mut ws = Workspace::new();
+            let mut s = stream();
+            let mut roll = RollingAuc::new(2000);
+            for _ in 0..20_000 {
+                let ex = s.next_example();
+                let p = reg.learn(&ex, &mut ws);
+                roll.add(p, ex.label);
+            }
+            let late: Vec<f64> =
+                roll.points.iter().rev().take(4).cloned().collect();
+            let avg = late.iter().sum::<f64>() / late.len() as f64;
+            assert!(avg > 0.58, "{arch:?} late AUC {avg}");
+        }
+    }
+
+    #[test]
+    fn deepffm_beats_linear_on_interactions() {
+        // Interactions dominate: tiny spec has pair terms; DeepFFM/FFM
+        // must end ahead of pure LR.
+        let run = |arch: Architecture| -> f64 {
+            let mut reg = Regressor::new(&tiny_cfg(arch));
+            let mut ws = Workspace::new();
+            let mut s = SyntheticStream::with_buckets(
+                {
+                    let mut sp = DatasetSpec::tiny();
+                    sp.interaction_scale = 2.5;
+                    sp
+                },
+                33,
+                256,
+            );
+            let mut roll = RollingAuc::new(2000);
+            for _ in 0..30_000 {
+                let ex = s.next_example();
+                let p = reg.learn(&ex, &mut ws);
+                roll.add(p, ex.label);
+            }
+            let late: Vec<f64> = roll.points.iter().rev().take(5).cloned().collect();
+            late.iter().sum::<f64>() / late.len() as f64
+        };
+        let lin = run(Architecture::Linear);
+        let ffm = run(Architecture::Ffm);
+        assert!(
+            ffm > lin + 0.01,
+            "ffm {ffm} should beat linear {lin} on interaction data"
+        );
+    }
+
+    #[test]
+    fn context_partial_equals_full_prediction() {
+        for arch in [Architecture::Linear, Architecture::Ffm, Architecture::DeepFfm] {
+            let mut reg = Regressor::new(&tiny_cfg(arch));
+            let mut ws = Workspace::new();
+            let mut s = stream();
+            // train a bit so weights are non-trivial
+            for _ in 0..2000 {
+                let ex = s.next_example();
+                reg.learn(&ex, &mut ws);
+            }
+            for _ in 0..100 {
+                let ex = s.next_example();
+                let full = reg.predict(&ex, &mut ws);
+                let c = 2; // first 2 fields are "context"
+                let cp = reg.context_partial(&ex.slots[..c]);
+                let mut ws2 = Workspace::new();
+                let via_cache =
+                    reg.predict_with_partial(&cp, &ex.slots[c..], &mut ws2);
+                assert!(
+                    (full - via_cache).abs() < 1e-5,
+                    "{arch:?}: full={full} cached={via_cache}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn learn_returns_pre_update_prediction() {
+        // DeepFFM: return value is the pre-update score.
+        let mut reg = Regressor::new(&tiny_cfg(Architecture::DeepFfm));
+        let mut ws = Workspace::new();
+        let mut s = stream();
+        let ex = s.next_example();
+        let before = reg.predict(&ex, &mut ws);
+        let returned = reg.learn(&ex, &mut ws);
+        assert_eq!(before, returned);
+        // after the update the prediction must have moved
+        let after = reg.predict(&ex, &mut ws);
+        assert_ne!(after, before);
+
+        // Linear: a single step strictly moves toward the label (no
+        // renormalization effects).
+        let mut reg = Regressor::new(&tiny_cfg(Architecture::Linear));
+        let ex = s.next_example();
+        let before = reg.predict(&ex, &mut ws);
+        reg.learn(&ex, &mut ws);
+        let after = reg.predict(&ex, &mut ws);
+        if ex.label > 0.5 {
+            assert!(after >= before);
+        } else {
+            assert!(after <= before);
+        }
+    }
+
+    #[test]
+    fn importance_weight_scales_update() {
+        let cfg = tiny_cfg(Architecture::Linear);
+        let mut s = stream();
+        let mut ex = s.next_example();
+        ex.label = 1.0;
+        let delta = |imp: f32| -> f32 {
+            let mut reg = Regressor::new(&cfg);
+            let mut ws = Workspace::new();
+            let mut e2 = ex.clone();
+            e2.importance = imp;
+            let before = reg.predict(&e2, &mut ws);
+            reg.learn(&e2, &mut ws);
+            reg.predict(&e2, &mut ws) - before
+        };
+        assert!(delta(4.0) > delta(1.0));
+    }
+}

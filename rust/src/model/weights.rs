@@ -1,0 +1,256 @@
+//! Flat weight pool and its byte-stable layout.
+//!
+//! All model parameters live in one contiguous `Vec<f32>` with a fixed,
+//! deterministic layout derived from the [`ModelConfig`].  That
+//! "consistent memory-level structure of weight files" (§6) is what
+//! makes the byte-level patcher work: two training rounds of the same
+//! config produce files whose differing bytes are exactly the weights
+//! that moved.
+//!
+//! Optimizer (AdaGrad accumulator) state lives in a *separate* pool of
+//! the same geometry — "the latter are not required for actual
+//! inference, which immediately reduces the required space by half."
+
+use crate::config::{Architecture, ModelConfig};
+use crate::util::rng::Pcg32;
+
+/// Offsets of one dense layer inside the MLP section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerLayout {
+    /// Input width.
+    pub rows: usize,
+    /// Output width.
+    pub cols: usize,
+    /// Pool offset of the row-major weight matrix `[rows * cols]`.
+    pub w_off: usize,
+    /// Pool offset of the bias `[cols]`.
+    pub b_off: usize,
+}
+
+/// Pool offsets for every section.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Layout {
+    /// LR table offset (always 0) and length (`buckets`).
+    pub lr_off: usize,
+    pub lr_len: usize,
+    /// FFM table offset; length `buckets * fields * latent_dim`.
+    pub ffm_off: usize,
+    pub ffm_len: usize,
+    /// Hidden layers.
+    pub layers: Vec<LayerLayout>,
+    /// Output head: weight vector offset/len and bias offset.
+    pub w_out_off: usize,
+    pub w_out_len: usize,
+    pub b_out_off: usize,
+    /// Total pool length.
+    pub total: usize,
+}
+
+impl Layout {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let lr_off = 0;
+        let lr_len = cfg.buckets as usize;
+        let ffm_off = lr_off + lr_len;
+        let ffm_len = match cfg.arch {
+            Architecture::Linear => 0,
+            _ => cfg.buckets as usize * cfg.fields * cfg.latent_dim,
+        };
+        let mut cursor = ffm_off + ffm_len;
+        let mut layers = Vec::new();
+        let mut w_out_off = cursor;
+        let mut w_out_len = 0;
+        let mut b_out_off = cursor;
+        if cfg.arch == Architecture::DeepFfm {
+            let mut prev = cfg.merged_dim();
+            for &h in &cfg.hidden {
+                let w_off = cursor;
+                cursor += prev * h;
+                let b_off = cursor;
+                cursor += h;
+                layers.push(LayerLayout { rows: prev, cols: h, w_off, b_off });
+                prev = h;
+            }
+            w_out_off = cursor;
+            w_out_len = prev;
+            cursor += prev;
+            b_out_off = cursor;
+            cursor += 1;
+        }
+        Layout {
+            lr_off,
+            lr_len,
+            ffm_off,
+            ffm_len,
+            layers,
+            w_out_off,
+            w_out_len,
+            b_out_off,
+            total: cursor,
+        }
+    }
+
+    /// Global pool index of the LR weight for `bucket`.
+    #[inline]
+    pub fn lr_idx(&self, bucket: u32) -> usize {
+        self.lr_off + bucket as usize
+    }
+
+    /// Global pool index of latent element `(bucket, toward_field, k)`.
+    #[inline]
+    pub fn ffm_idx(&self, bucket: u32, fields: usize, k: usize, toward: usize, kk: usize) -> usize {
+        self.ffm_off + bucket as usize * fields * k + toward * k + kk
+    }
+}
+
+/// The weight pool: inference weights plus (optional) optimizer state.
+#[derive(Clone, Debug)]
+pub struct WeightPool {
+    pub weights: Vec<f32>,
+    /// AdaGrad accumulators, same geometry as `weights`; empty for
+    /// inference-only pools.
+    pub acc: Vec<f32>,
+}
+
+impl WeightPool {
+    /// Allocate and initialize per the config's seed.
+    pub fn init(cfg: &ModelConfig, layout: &Layout) -> Self {
+        let mut w = vec![0f32; layout.total];
+        let mut rng = Pcg32::new(cfg.seed, 0x3133_7);
+        // LR weights start at zero (VW convention).
+        // FFM latents: U(-init_ffm, init_ffm).
+        for v in &mut w[layout.ffm_off..layout.ffm_off + layout.ffm_len] {
+            *v = rng.range_f32(-cfg.init_ffm, cfg.init_ffm);
+        }
+        // MLP: uniform He-style init, biases zero.
+        for l in &layout.layers {
+            let span = (6.0 / l.rows as f32).sqrt();
+            for i in 0..l.rows * l.cols {
+                w[l.w_off + i] = rng.range_f32(-span, span);
+            }
+        }
+        if layout.w_out_len > 0 {
+            let span = (1.0 / layout.w_out_len as f32).sqrt();
+            for i in 0..layout.w_out_len {
+                w[layout.w_out_off + i] = rng.range_f32(-span, span);
+            }
+        }
+        // AdaGrad accumulators start at 1.0: the first update is then
+        // exactly lr * g and the step size decays from there.
+        let acc = vec![1f32; layout.total];
+        WeightPool { weights: w, acc }
+    }
+
+    /// Strip optimizer state (inference deployment).
+    pub fn to_inference(&self) -> WeightPool {
+        WeightPool { weights: self.weights.clone(), acc: Vec::new() }
+    }
+
+    pub fn has_optimizer_state(&self) -> bool {
+        !self.acc.is_empty()
+    }
+
+    /// Bytes of the inference weights (used by Table 4 size accounting).
+    pub fn inference_bytes(&self) -> usize {
+        self.weights.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn layout_deepffm_sections_contiguous() {
+        let cfg = ModelConfig::deep_ffm(4, 2, 64, &[8, 4]);
+        let l = Layout::new(&cfg);
+        assert_eq!(l.lr_off, 0);
+        assert_eq!(l.lr_len, 64);
+        assert_eq!(l.ffm_off, 64);
+        assert_eq!(l.ffm_len, 64 * 4 * 2);
+        let d = cfg.merged_dim(); // 1 + 6 = 7
+        assert_eq!(l.layers.len(), 2);
+        assert_eq!(l.layers[0].rows, d);
+        assert_eq!(l.layers[0].cols, 8);
+        assert_eq!(l.layers[0].w_off, 64 + 512);
+        assert_eq!(l.layers[0].b_off, 64 + 512 + d * 8);
+        assert_eq!(l.layers[1].rows, 8);
+        assert_eq!(l.layers[1].cols, 4);
+        assert_eq!(l.w_out_len, 4);
+        assert_eq!(l.b_out_off + 1, l.total);
+    }
+
+    #[test]
+    fn layout_linear_has_only_lr() {
+        let cfg = ModelConfig::linear(8, 128);
+        let l = Layout::new(&cfg);
+        assert_eq!(l.total, 128);
+        assert_eq!(l.ffm_len, 0);
+        assert!(l.layers.is_empty());
+        assert_eq!(l.w_out_len, 0);
+    }
+
+    #[test]
+    fn layout_ffm_no_mlp() {
+        let cfg = ModelConfig::ffm(4, 2, 64);
+        let l = Layout::new(&cfg);
+        assert_eq!(l.total, 64 + 64 * 8);
+        assert!(l.layers.is_empty());
+    }
+
+    #[test]
+    fn ffm_idx_math() {
+        let cfg = ModelConfig::ffm(4, 2, 64);
+        let l = Layout::new(&cfg);
+        // bucket 3, toward field 2, component 1
+        assert_eq!(l.ffm_idx(3, 4, 2, 2, 1), 64 + 3 * 8 + 2 * 2 + 1);
+    }
+
+    #[test]
+    fn init_deterministic_and_seed_sensitive() {
+        let cfg = ModelConfig::deep_ffm(4, 2, 64, &[8]);
+        let l = Layout::new(&cfg);
+        let a = WeightPool::init(&cfg, &l);
+        let b = WeightPool::init(&cfg, &l);
+        assert_eq!(a.weights, b.weights);
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 1;
+        let c = WeightPool::init(&cfg2, &l);
+        assert_ne!(a.weights, c.weights);
+    }
+
+    #[test]
+    fn init_ranges() {
+        let cfg = ModelConfig::deep_ffm(4, 2, 64, &[8]);
+        let l = Layout::new(&cfg);
+        let p = WeightPool::init(&cfg, &l);
+        // LR zeros
+        assert!(p.weights[..64].iter().all(|&w| w == 0.0));
+        // FFM within init span
+        assert!(p.weights[l.ffm_off..l.ffm_off + l.ffm_len]
+            .iter()
+            .all(|&w| w.abs() <= cfg.init_ffm));
+        // not all zero
+        assert!(p.weights[l.ffm_off..l.ffm_off + l.ffm_len]
+            .iter()
+            .any(|&w| w != 0.0));
+        // biases zero
+        let lay = l.layers[0];
+        assert!(p.weights[lay.b_off..lay.b_off + lay.cols]
+            .iter()
+            .all(|&w| w == 0.0));
+        // acc starts at 1
+        assert!(p.acc.iter().all(|&a| a == 1.0));
+    }
+
+    #[test]
+    fn inference_pool_drops_acc() {
+        let cfg = ModelConfig::ffm(4, 2, 64);
+        let l = Layout::new(&cfg);
+        let p = WeightPool::init(&cfg, &l);
+        let inf = p.to_inference();
+        assert!(!inf.has_optimizer_state());
+        assert_eq!(inf.weights, p.weights);
+        assert_eq!(inf.inference_bytes(), l.total * 4);
+    }
+}

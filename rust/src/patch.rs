@@ -1,0 +1,394 @@
+//! §6 — byte-level model patching.
+//!
+//! "Each subsequent inference weights update first computes *model
+//! diff* — byte-level difference between old and new weights.  This is
+//! possible due to a consistent memory-level structure of weight files.
+//! The diffs are compressed, sent to the serving layer, unpacked and
+//! applied to previous weights file to obtain the new set of weights."
+//!
+//! Encoding choices straight from the paper:
+//! * "instead of storing absolute indices of bytes that change,
+//!   **relative locations** are stored" — each op's offset is a delta
+//!   from the end of the previous op;
+//! * "small integers denoting these differences are stored as a
+//!   **custom integer type**" — LEB128 varints (see `util::varint`);
+//! * the op stream is **compressed** (deflate via flate2, or zstd).
+//!
+//! Patch stream format (before compression):
+//! ```text
+//! magic   [4] b"FWP1"
+//! old_len varint
+//! new_len varint
+//! ops     ( skip varint, run_len varint, run_len bytes )*
+//! ```
+//! `skip` bytes are copied from the old file, then `run_len` literal
+//! bytes replace the corresponding old bytes.  A final implicit skip
+//! copies the tail.  Since training rounds keep the file length fixed,
+//! old_len == new_len in production; the format still supports growth
+//! (appended bytes ride in a final run).
+
+use std::io::{Read, Write};
+
+use crate::util::varint;
+
+pub const MAGIC: &[u8; 4] = b"FWP1";
+
+/// Compression applied to the op stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    None,
+    Gzip,
+    Zstd,
+}
+
+/// A computed patch, ready for the wire.
+#[derive(Clone, Debug)]
+pub struct Patch {
+    pub compression: Compression,
+    /// Compressed (or raw) op stream.
+    pub payload: Vec<u8>,
+    /// Uncompressed op-stream size (for reporting).
+    pub raw_len: usize,
+}
+
+impl Patch {
+    /// Bytes on the wire (payload + 1 tag byte).
+    pub fn wire_bytes(&self) -> usize {
+        self.payload.len() + 1
+    }
+
+    /// Serialize with a leading compression tag.
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.push(match self.compression {
+            Compression::None => 0,
+            Compression::Gzip => 1,
+            Compression::Zstd => 2,
+        });
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse a wire buffer.
+    pub fn from_wire(buf: &[u8]) -> Result<Patch, String> {
+        let (&tag, payload) = buf.split_first().ok_or("empty patch")?;
+        let compression = match tag {
+            0 => Compression::None,
+            1 => Compression::Gzip,
+            2 => Compression::Zstd,
+            t => return Err(format!("bad compression tag {t}")),
+        };
+        Ok(Patch {
+            compression,
+            payload: payload.to_vec(),
+            raw_len: 0,
+        })
+    }
+}
+
+/// Compute the byte diff between two buffers as a raw op stream.
+///
+/// Runs of differing bytes are merged when the gap between them is
+/// smaller than the varint overhead of starting a new op (8 bytes) —
+/// fewer, longer ops compress better.
+pub fn diff_ops(old: &[u8], new: &[u8]) -> Vec<u8> {
+    const MERGE_GAP: usize = 8;
+    let mut ops = Vec::new();
+    ops.extend_from_slice(MAGIC);
+    varint::write_u64(&mut ops, old.len() as u64);
+    varint::write_u64(&mut ops, new.len() as u64);
+
+    let common = old.len().min(new.len());
+    let mut cursor = 0usize; // position after the last emitted op
+    let mut i = 0usize;
+    while i < common {
+        if old[i] == new[i] {
+            i += 1;
+            continue;
+        }
+        // start of a differing run
+        let start = i;
+        let mut end = i + 1;
+        let mut gap = 0;
+        while end < common {
+            if old[end] != new[end] {
+                end += 1;
+                gap = 0;
+            } else {
+                gap += 1;
+                end += 1;
+                if gap > MERGE_GAP {
+                    break;
+                }
+            }
+        }
+        let run_end = end - gap; // trim trailing equal bytes
+        varint::write_u64(&mut ops, (start - cursor) as u64); // relative skip
+        varint::write_u64(&mut ops, (run_end - start) as u64);
+        ops.extend_from_slice(&new[start..run_end]);
+        cursor = run_end;
+        i = run_end;
+    }
+    if new.len() > common {
+        // appended tail
+        varint::write_u64(&mut ops, (common - cursor) as u64);
+        varint::write_u64(&mut ops, (new.len() - common) as u64);
+        ops.extend_from_slice(&new[common..]);
+    }
+    ops
+}
+
+/// Apply a raw op stream to `old`, producing the new buffer.
+pub fn apply_ops(old: &[u8], ops: &[u8]) -> Result<Vec<u8>, String> {
+    if ops.len() < 4 || &ops[..4] != MAGIC {
+        return Err("bad patch magic".into());
+    }
+    let mut pos = 4usize;
+    let old_len = varint::read_u64(ops, &mut pos).ok_or("truncated old_len")?;
+    let new_len = varint::read_u64(ops, &mut pos).ok_or("truncated new_len")?;
+    if old_len as usize != old.len() {
+        return Err(format!(
+            "patch expects old of {} bytes, got {}",
+            old_len,
+            old.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(new_len as usize);
+    let mut cursor = 0usize;
+    while pos < ops.len() {
+        let skip = varint::read_u64(ops, &mut pos).ok_or("truncated skip")? as usize;
+        let run = varint::read_u64(ops, &mut pos).ok_or("truncated run")? as usize;
+        let copy_end = cursor + skip;
+        if copy_end > old.len() {
+            return Err("skip past end of old".into());
+        }
+        out.extend_from_slice(&old[cursor..copy_end]);
+        if pos + run > ops.len() {
+            return Err("run past end of patch".into());
+        }
+        out.extend_from_slice(&ops[pos..pos + run]);
+        pos += run;
+        cursor = copy_end + run; // replaced bytes consumed from old
+    }
+    // implicit tail copy
+    if cursor < old.len() && out.len() < new_len as usize {
+        let need = new_len as usize - out.len();
+        let take = need.min(old.len() - cursor);
+        out.extend_from_slice(&old[cursor..cursor + take]);
+    }
+    if out.len() != new_len as usize {
+        return Err(format!(
+            "patched length {} != expected {}",
+            out.len(),
+            new_len
+        ));
+    }
+    Ok(out)
+}
+
+fn compress(data: &[u8], c: Compression) -> Vec<u8> {
+    match c {
+        Compression::None => data.to_vec(),
+        Compression::Gzip => {
+            let mut enc = flate2::write::GzEncoder::new(
+                Vec::new(),
+                flate2::Compression::fast(),
+            );
+            enc.write_all(data).expect("gzip write");
+            enc.finish().expect("gzip finish")
+        }
+        Compression::Zstd => zstd::bulk::compress(data, 3).expect("zstd"),
+    }
+}
+
+fn decompress(data: &[u8], c: Compression) -> Result<Vec<u8>, String> {
+    match c {
+        Compression::None => Ok(data.to_vec()),
+        Compression::Gzip => {
+            let mut dec = flate2::read::GzDecoder::new(data);
+            let mut out = Vec::new();
+            dec.read_to_end(&mut out).map_err(|e| e.to_string())?;
+            Ok(out)
+        }
+        Compression::Zstd => {
+            // stream decoder grows the buffer dynamically (bulk would
+            // need a preallocated worst-case capacity)
+            zstd::stream::decode_all(data).map_err(|e| e.to_string())
+        }
+    }
+}
+
+/// Full pipeline: diff two buffers and compress the op stream.
+pub fn make_patch(old: &[u8], new: &[u8], c: Compression) -> Patch {
+    let ops = diff_ops(old, new);
+    let raw_len = ops.len();
+    Patch { compression: c, payload: compress(&ops, c), raw_len }
+}
+
+/// Full pipeline inverse: decompress and apply.
+pub fn apply_patch(old: &[u8], patch: &Patch) -> Result<Vec<u8>, String> {
+    let ops = decompress(&patch.payload, patch.compression)?;
+    apply_ops(old, &ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+    use crate::util::rng::Pcg32;
+
+    fn roundtrip(old: &[u8], new: &[u8], c: Compression) {
+        let p = make_patch(old, new, c);
+        let got = apply_patch(old, &p).unwrap();
+        assert_eq!(got, new);
+    }
+
+    #[test]
+    fn identical_buffers_tiny_patch() {
+        let data = vec![7u8; 100_000];
+        let p = make_patch(&data, &data, Compression::Gzip);
+        let got = apply_patch(&data, &p).unwrap();
+        assert_eq!(got, data);
+        assert!(p.wire_bytes() < 100, "patch {} bytes", p.wire_bytes());
+    }
+
+    #[test]
+    fn single_byte_change() {
+        let old = vec![0u8; 10_000];
+        let mut new = old.clone();
+        new[5123] = 42;
+        roundtrip(&old, &new, Compression::None);
+        let p = make_patch(&old, &new, Compression::None);
+        // varint relative offset keeps this tiny
+        assert!(p.raw_len < 32, "raw {} bytes", p.raw_len);
+    }
+
+    #[test]
+    fn all_compressions_roundtrip() {
+        let mut rng = Pcg32::seeded(1);
+        let old: Vec<u8> = (0..50_000).map(|_| rng.next_u32() as u8).collect();
+        let mut new = old.clone();
+        for _ in 0..500 {
+            let i = rng.below(50_000) as usize;
+            new[i] = new[i].wrapping_add(1 + rng.below(255) as u8);
+        }
+        for c in [Compression::None, Compression::Gzip, Compression::Zstd] {
+            roundtrip(&old, &new, c);
+        }
+    }
+
+    #[test]
+    fn sparse_changes_much_smaller_than_full_file() {
+        let mut rng = Pcg32::seeded(2);
+        // simulate a weight file: 1M bytes, 1% of 4-byte words changed
+        let old: Vec<u8> = (0..1_000_000).map(|_| rng.next_u32() as u8).collect();
+        let mut new = old.clone();
+        for _ in 0..2500 {
+            let w = rng.below(250_000) as usize * 4;
+            for b in 0..4 {
+                new[w + b] = rng.next_u32() as u8;
+            }
+        }
+        let p = make_patch(&old, &new, Compression::Gzip);
+        assert!(
+            p.wire_bytes() < old.len() / 10,
+            "patch {} vs file {}",
+            p.wire_bytes(),
+            old.len()
+        );
+    }
+
+    #[test]
+    fn growth_and_shrink() {
+        let old = b"hello old world".to_vec();
+        let grown = b"hello NEW world plus tail".to_vec();
+        roundtrip(&old, &grown, Compression::None);
+        let shrunk = b"hello".to_vec();
+        roundtrip(&old, &shrunk, Compression::None);
+        roundtrip(&[], &old, Compression::None);
+        roundtrip(&old, &[], Compression::None);
+    }
+
+    #[test]
+    fn wrong_base_rejected() {
+        let old = vec![1u8; 100];
+        let new = vec![2u8; 100];
+        let p = make_patch(&old, &new, Compression::None);
+        let other = vec![1u8; 99];
+        assert!(apply_patch(&other, &p).is_err());
+    }
+
+    #[test]
+    fn corrupt_patch_rejected() {
+        let old = vec![1u8; 100];
+        let mut new = old.clone();
+        new[50] = 9;
+        let p = make_patch(&old, &new, Compression::None);
+        let mut bad = p.clone();
+        bad.payload.truncate(bad.payload.len() - 1);
+        assert!(apply_patch(&old, &bad).is_err());
+        assert!(apply_ops(&old, b"XXXX").is_err());
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let old = vec![3u8; 1000];
+        let mut new = old.clone();
+        new[1] = 7;
+        let p = make_patch(&old, &new, Compression::Zstd);
+        let wire = p.to_wire();
+        let back = Patch::from_wire(&wire).unwrap();
+        assert_eq!(back.compression, Compression::Zstd);
+        assert_eq!(apply_patch(&old, &back).unwrap(), new);
+    }
+
+    #[test]
+    fn prop_patch_apply_inverts_diff() {
+        prop(60, |g| {
+            let old = g.bytes(0..2000);
+            let mut new = old.clone();
+            // random mutations: point edits, block edits, resize
+            match g.usize_in(0..3) {
+                0 => {
+                    for _ in 0..g.usize_in(0..50) {
+                        if new.is_empty() {
+                            break;
+                        }
+                        let n = new.len();
+                        let i = g.usize_in(0..n);
+                        new[i] = g.u32() as u8;
+                    }
+                }
+                1 => {
+                    new.extend(g.bytes(0..300));
+                }
+                _ => {
+                    let n = new.len();
+                    new.truncate(g.usize_in(0..n.max(1)));
+                }
+            }
+            for c in [Compression::None, Compression::Gzip] {
+                let p = make_patch(&old, &new, c);
+                assert_eq!(apply_patch(&old, &p).unwrap(), new);
+            }
+        });
+    }
+
+    #[test]
+    fn merged_runs_have_fewer_ops_than_naive() {
+        // clustered changes: 100 dirty 4-byte words in one 4KB region
+        let old = vec![0u8; 100_000];
+        let mut new = old.clone();
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..100 {
+            let i = 50_000 + (rng.below(1000) as usize) * 4;
+            for b in 0..4 {
+                new[i + b] = 0xAB;
+            }
+        }
+        let ops = diff_ops(&old, &new);
+        // merging nearby runs: op stream should be near the dirty-region
+        // size, far below per-word op overhead
+        assert!(ops.len() < 8_000, "ops {} bytes", ops.len());
+    }
+}

@@ -1,0 +1,340 @@
+//! §6 — 16-bit dynamic-range weight quantization.
+//!
+//! Designed around the paper's three use-case constraints:
+//!
+//! 1. *Consistently small weight patches* — quantizing to a coarse,
+//!    **stable** grid means small weight drift between training rounds
+//!    maps to identical or near-identical u16 codes, so the byte diff
+//!    of consecutive quantized files is tiny.
+//! 2. *Fast* — quantization/dequantization are single passes ("the
+//!    procedure has tens of seconds at most at its disposal for the
+//!    full weight space"; here: hundreds of MB/s).
+//! 3. *Dynamic ranges* — each update re-scans min/max because "weight
+//!    update sizes [vary] based on e.g. time of the day".
+//!
+//! Bounds are **rounded to α (max) and β (min) decimals** before the
+//! bucket size is computed — full-precision bounds made patch sizes
+//! fluctuate ("quantization output tended to fluctuate more"), while
+//! rounded bounds keep the grid stable across rounds.
+//!
+//! File format (little-endian):
+//! ```text
+//! magic  [4] b"FWQ1"
+//! n      u64   weight count
+//! min    f32   rounded minimum
+//! bucket f32   bucket size
+//! alpha  u8, beta u8, _pad u16
+//! codes  [n * 2] u16
+//! ```
+//! "the original weights file is enriched with a header that contains
+//! the bucket size and weight minimum — these two properties are
+//! sufficient for efficient weight reconstruction."
+
+use crate::util::math::round_decimals;
+
+pub const MAGIC: &[u8; 4] = b"FWQ1";
+/// Number of representable buckets ("the amount of possible values for
+/// 16b representation is small (around 65k)").
+pub const B_MAX: u32 = 65_535;
+
+/// Quantization parameters (the file header).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantHeader {
+    pub n: u64,
+    pub min: f32,
+    pub bucket: f32,
+    pub alpha: u8,
+    pub beta: u8,
+}
+
+/// Quantize `weights` to u16 codes.  `alpha`/`beta` are the decimal
+/// precisions for the max/min bounds.
+pub fn quantize(weights: &[f32], alpha: u8, beta: u8) -> (QuantHeader, Vec<u16>) {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &w in weights {
+        lo = lo.min(w);
+        hi = hi.max(w);
+    }
+    if weights.is_empty() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    // Round bounds outward at the requested precisions so every weight
+    // stays inside [min_r, max_r].
+    let step_b = 10f32.powi(-(beta as i32));
+    let step_a = 10f32.powi(-(alpha as i32));
+    let mut min_r = round_decimals(lo, beta as u32);
+    if min_r > lo {
+        min_r -= step_b;
+    }
+    let mut max_r = round_decimals(hi, alpha as u32);
+    if max_r < hi {
+        max_r += step_a;
+    }
+    let bucket = if max_r > min_r {
+        (max_r - min_r) / B_MAX as f32
+    } else {
+        1.0 // degenerate range: all codes 0
+    };
+    let inv = 1.0 / bucket;
+    let codes = weights
+        .iter()
+        .map(|&w| {
+            let q = ((w - min_r) * inv).round();
+            q.clamp(0.0, B_MAX as f32) as u16
+        })
+        .collect();
+    (
+        QuantHeader { n: weights.len() as u64, min: min_r, bucket, alpha, beta },
+        codes,
+    )
+}
+
+/// True when this header's representable range covers `[lo, hi]`.
+impl QuantHeader {
+    pub fn covers(&self, lo: f32, hi: f32) -> bool {
+        lo >= self.min && hi <= self.min + self.bucket * B_MAX as f32
+    }
+}
+
+/// Quantize against an existing grid (grid reuse keeps consecutive
+/// rounds' codes aligned, which is what makes quantized patches tiny —
+/// the "dynamically select viable weight ranges" requirement of §6).
+/// Returns `None` when the weights escape the grid's range.
+pub fn quantize_with(header: &QuantHeader, weights: &[f32]) -> Option<Vec<u16>> {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &w in weights {
+        lo = lo.min(w);
+        hi = hi.max(w);
+    }
+    if weights.is_empty() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    if !header.covers(lo, hi) || weights.len() as u64 != header.n {
+        return None;
+    }
+    let inv = 1.0 / header.bucket;
+    Some(
+        weights
+            .iter()
+            .map(|&w| ((w - header.min) * inv).round().clamp(0.0, B_MAX as f32) as u16)
+            .collect(),
+    )
+}
+
+/// Like [`quantize`], but widens the rounded bounds by `headroom`
+/// (fraction of the span) so a slowly drifting weight distribution
+/// stays inside the grid across many rounds.
+pub fn quantize_headroom(
+    weights: &[f32],
+    alpha: u8,
+    beta: u8,
+    headroom: f32,
+) -> (QuantHeader, Vec<u16>) {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &w in weights {
+        lo = lo.min(w);
+        hi = hi.max(w);
+    }
+    if weights.is_empty() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let span = (hi - lo).max(1e-6);
+    let padded: Vec<f32> = vec![lo - span * headroom, hi + span * headroom];
+    // reuse quantize()'s rounding on the padded bounds
+    let (mut h, _) = quantize(&padded, alpha, beta);
+    h.n = weights.len() as u64;
+    let codes = quantize_with(&h, weights).expect("padded grid must cover");
+    (h, codes)
+}
+
+/// Reconstruct weights from codes: `w = min + code * bucket`.
+pub fn dequantize(header: &QuantHeader, codes: &[u16]) -> Vec<f32> {
+    debug_assert_eq!(codes.len() as u64, header.n);
+    codes
+        .iter()
+        .map(|&c| header.min + c as f32 * header.bucket)
+        .collect()
+}
+
+/// Serialize header + codes into the FWQ1 byte format.
+pub fn to_bytes(header: &QuantHeader, codes: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + codes.len() * 2);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&header.n.to_le_bytes());
+    out.extend_from_slice(&header.min.to_le_bytes());
+    out.extend_from_slice(&header.bucket.to_le_bytes());
+    out.push(header.alpha);
+    out.push(header.beta);
+    out.extend_from_slice(&[0u8; 2]);
+    for &c in codes {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    out
+}
+
+/// Parse the FWQ1 byte format.
+pub fn from_bytes(buf: &[u8]) -> Result<(QuantHeader, Vec<u16>), String> {
+    if buf.len() < 24 || &buf[..4] != MAGIC {
+        return Err("bad FWQ1 header".into());
+    }
+    let n = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    let min = f32::from_le_bytes(buf[12..16].try_into().unwrap());
+    let bucket = f32::from_le_bytes(buf[16..20].try_into().unwrap());
+    let alpha = buf[20];
+    let beta = buf[21];
+    let payload = &buf[24..];
+    if payload.len() != n as usize * 2 {
+        return Err(format!(
+            "payload {} bytes != 2 * n ({n})",
+            payload.len()
+        ));
+    }
+    let codes = payload
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((QuantHeader { n, min, bucket, alpha, beta }, codes))
+}
+
+/// One-shot: quantize weights straight to bytes (the online pipeline).
+pub fn quantize_to_bytes(weights: &[f32], alpha: u8, beta: u8) -> Vec<u8> {
+    let (h, codes) = quantize(weights, alpha, beta);
+    to_bytes(&h, &codes)
+}
+
+/// One-shot inverse.
+pub fn dequantize_from_bytes(buf: &[u8]) -> Result<Vec<f32>, String> {
+    let (h, codes) = from_bytes(buf)?;
+    Ok(dequantize(&h, &codes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+    use crate::util::rng::Pcg32;
+
+    fn randw(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_bucket() {
+        let w = randw(10_000, 1, 0.5);
+        let (h, codes) = quantize(&w, 2, 2);
+        let back = dequantize(&h, &codes);
+        for (a, b) in w.iter().zip(&back) {
+            assert!(
+                (a - b).abs() <= h.bucket * 0.5 + 1e-6,
+                "{a} vs {b} bucket {}",
+                h.bucket
+            );
+        }
+    }
+
+    #[test]
+    fn bounds_cover_all_weights() {
+        let w = randw(1000, 2, 3.0);
+        let (h, codes) = quantize(&w, 1, 1);
+        let lo = w.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = w.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(h.min <= lo);
+        assert!(h.min + B_MAX as f32 * h.bucket >= hi - 1e-4);
+        // codes span a good part of the range
+        assert!(*codes.iter().max().unwrap() > 30_000);
+    }
+
+    #[test]
+    fn bytes_half_of_f32() {
+        let w = randw(5000, 3, 1.0);
+        let bytes = quantize_to_bytes(&w, 2, 2);
+        assert_eq!(bytes.len(), 24 + 2 * 5000);
+        assert!(bytes.len() * 2 < w.len() * 4 + 100);
+    }
+
+    #[test]
+    fn byte_format_roundtrip() {
+        let w = randw(777, 4, 0.2);
+        let bytes = quantize_to_bytes(&w, 3, 2);
+        let back = dequantize_from_bytes(&bytes).unwrap();
+        let direct = {
+            let (h, c) = quantize(&w, 3, 2);
+            dequantize(&h, &c)
+        };
+        assert_eq!(back, direct);
+    }
+
+    #[test]
+    fn rounded_bounds_are_stable_across_small_drift() {
+        // the α/β rounding means a slightly drifted weight set maps to
+        // the SAME grid -> most codes identical (small patches).
+        let w1 = randw(20_000, 5, 0.5);
+        let mut w2 = w1.clone();
+        let mut rng = Pcg32::seeded(6);
+        for w in w2.iter_mut().take(200) {
+            *w += rng.normal() * 1e-4;
+        }
+        let (h1, c1) = quantize(&w1, 2, 2);
+        let (h2, c2) = quantize(&w2, 2, 2);
+        assert_eq!(h1.min, h2.min, "grid must not move under tiny drift");
+        assert_eq!(h1.bucket, h2.bucket);
+        let changed = c1.iter().zip(&c2).filter(|(a, b)| a != b).count();
+        assert!(changed <= 400, "changed codes {changed}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        // constant weights
+        let w = vec![0.25f32; 100];
+        let (h, codes) = quantize(&w, 2, 2);
+        let back = dequantize(&h, &codes);
+        for b in back {
+            assert!((b - 0.25).abs() <= h.bucket * 0.5 + 1e-6);
+        }
+        // empty
+        let (h, codes) = quantize(&[], 2, 2);
+        assert_eq!(h.n, 0);
+        assert!(codes.is_empty());
+        assert_eq!(dequantize(&h, &codes), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn corrupt_bytes_rejected() {
+        assert!(from_bytes(b"nope").is_err());
+        let w = randw(10, 7, 1.0);
+        let mut bytes = quantize_to_bytes(&w, 2, 2);
+        bytes.pop();
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_error_bound() {
+        prop(40, |g| {
+            let scale = g.f32_in(0.01, 10.0);
+            let w = g.vec_normal(1..2000, scale);
+            let alpha = g.usize_in(1..5) as u8;
+            let beta = g.usize_in(1..5) as u8;
+            let (h, codes) = quantize(&w, alpha, beta);
+            let back = dequantize(&h, &codes);
+            for (a, b) in w.iter().zip(&back) {
+                assert!((a - b).abs() <= h.bucket * 0.5 + 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn quantization_throughput_fast_enough() {
+        // §6: "procedure has tens of seconds at most"; we check the
+        // in-process path handles ~40 MB of weights in well under 2 s.
+        let w = randw(10_000_000, 8, 0.3);
+        let t = std::time::Instant::now();
+        let bytes = quantize_to_bytes(&w, 2, 2);
+        let secs = t.elapsed().as_secs_f64();
+        assert!(bytes.len() > 0);
+        assert!(secs < 2.0, "quantize took {secs}s");
+    }
+}

@@ -1,0 +1,288 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile`
+//! (JAX DeepFFM with the Pallas FFM kernel, lowered to HLO text) and
+//! execute them on the CPU PJRT client via the `xla` crate.
+//!
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md §2 and the aot recipe).
+//!
+//! Used for (a) the L1==L2==L3 cross-check tests against
+//! `artifacts/golden.json` and (b) accelerator-offload deployments of
+//! the serving engine.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// One argument slot of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry describing one compiled model variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub fields: usize,
+    pub latent_dim: usize,
+    pub buckets: usize,
+    pub hidden: Vec<usize>,
+    pub batch: usize,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let v = parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts").as_arr().unwrap_or(&[]) {
+            let args = a
+                .get("args")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|arg| ArgSpec {
+                    name: arg.get("name").as_str().unwrap_or("").to_string(),
+                    shape: arg
+                        .get("shape")
+                        .f64_vec()
+                        .iter()
+                        .map(|&x| x as usize)
+                        .collect(),
+                    dtype: arg.get("dtype").as_str().unwrap_or("f32").to_string(),
+                })
+                .collect();
+            artifacts.push(ArtifactSpec {
+                name: a.get("name").as_str().unwrap_or("").to_string(),
+                file: a.get("file").as_str().unwrap_or("").to_string(),
+                fields: a.get("fields").as_usize().unwrap_or(0),
+                latent_dim: a.get("latent_dim").as_usize().unwrap_or(0),
+                buckets: a.get("buckets").as_usize().unwrap_or(0),
+                hidden: a
+                    .get("hidden")
+                    .f64_vec()
+                    .iter()
+                    .map(|&x| x as usize)
+                    .collect(),
+                batch: a.get("batch").as_usize().unwrap_or(0),
+                args,
+            });
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// Concrete argument value for execution.
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// The PJRT engine: one CPU client, many compiled executables.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+impl PjrtEngine {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtEngine { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn compile(&self, manifest: &Manifest, name: &str) -> Result<CompiledModel> {
+        let spec = manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(CompiledModel { spec, exe })
+    }
+}
+
+/// A compiled model variant, ready to execute.
+pub struct CompiledModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledModel {
+    /// Execute with positional arguments matching the manifest's arg
+    /// specs.  Returns the probability vector `[batch]`.
+    pub fn run(&self, args: &[ArgValue]) -> Result<Vec<f32>> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "artifact '{}' takes {} args, got {}",
+                self.spec.name,
+                self.spec.args.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (spec, arg) in self.spec.args.iter().zip(args) {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (spec.dtype.as_str(), arg) {
+                ("f32", ArgValue::F32(v)) => {
+                    if v.len() != spec.elements() {
+                        bail!(
+                            "arg '{}' wants {} elements, got {}",
+                            spec.name,
+                            spec.elements(),
+                            v.len()
+                        );
+                    }
+                    let lit = xla::Literal::vec1(v);
+                    if dims.len() > 1 { lit.reshape(&dims)? } else { lit }
+                }
+                ("i32", ArgValue::I32(v)) => {
+                    if v.len() != spec.elements() {
+                        bail!(
+                            "arg '{}' wants {} elements, got {}",
+                            spec.name,
+                            spec.elements(),
+                            v.len()
+                        );
+                    }
+                    let lit = xla::Literal::vec1(v);
+                    if dims.len() > 1 { lit.reshape(&dims)? } else { lit }
+                }
+                (dt, _) => bail!("arg '{}' dtype mismatch ({dt})", spec.name),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Default artifact directory (crate root / artifacts).
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+/// Golden vectors exported by `python/compile/golden.py`.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub name: String,
+    pub fields: usize,
+    pub latent_dim: usize,
+    pub buckets: usize,
+    pub hidden: Vec<usize>,
+    pub batch: usize,
+    pub lr_table: Vec<f32>,
+    pub ffm_table: Vec<f32>,
+    pub mlp: Vec<Vec<f32>>,
+    pub idx: Vec<i32>,
+    pub vals: Vec<f32>,
+    pub probs: Vec<f32>,
+}
+
+/// Load `artifacts/golden.json`.
+pub fn load_goldens(dir: &Path) -> Result<Vec<Golden>> {
+    let text = std::fs::read_to_string(dir.join("golden.json"))
+        .with_context(|| format!("reading {}/golden.json", dir.display()))?;
+    let v = parse(&text).map_err(|e| anyhow!("golden parse: {e}"))?;
+    let f32s = |j: &Json| -> Vec<f32> { j.f64_vec().iter().map(|&x| x as f32).collect() };
+    let mut out = Vec::new();
+    for g in v.as_arr().unwrap_or(&[]) {
+        out.push(Golden {
+            name: g.get("name").as_str().unwrap_or("").to_string(),
+            fields: g.get("fields").as_usize().unwrap_or(0),
+            latent_dim: g.get("latent_dim").as_usize().unwrap_or(0),
+            buckets: g.get("buckets").as_usize().unwrap_or(0),
+            hidden: g.get("hidden").f64_vec().iter().map(|&x| x as usize).collect(),
+            batch: g.get("batch").as_usize().unwrap_or(0),
+            lr_table: f32s(g.get("lr_table")),
+            ffm_table: f32s(g.get("ffm_table")),
+            mlp: g
+                .get("mlp")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(f32s)
+                .collect(),
+            idx: g.get("idx").f64_vec().iter().map(|&x| x as i32).collect(),
+            vals: f32s(g.get("vals")),
+            probs: f32s(g.get("probs")),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        default_artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&default_artifact_dir()).unwrap();
+        assert!(m.artifacts.len() >= 3);
+        let a = &m.artifacts[0];
+        assert_eq!(a.args.first().unwrap().name, "lr_table");
+        assert_eq!(a.args.last().unwrap().name, "vals");
+        assert!(m.find(&a.name).is_some());
+        assert!(m.find("nonexistent").is_none());
+    }
+
+    #[test]
+    fn goldens_parse() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let gs = load_goldens(&default_artifact_dir()).unwrap();
+        assert_eq!(gs.len(), 2);
+        let g = &gs[0];
+        assert_eq!(g.probs.len(), g.batch);
+        assert_eq!(g.lr_table.len(), g.buckets);
+        assert_eq!(g.idx.len(), g.batch * g.fields);
+    }
+
+    // Full PJRT execution is exercised by rust/tests/pjrt_cross_check.rs
+    // (integration test) to keep unit-test cycles fast.
+}

@@ -1,0 +1,177 @@
+//! Dynamic candidate batching.
+//!
+//! Requests queue until either `max_batch` candidates have accumulated
+//! or the oldest queued request has lingered `max_wait`; then the batch
+//! flushes to a scoring worker.  Small linger bounds tail latency while
+//! batching amortizes per-request overhead — the standard serving
+//! trade-off (vLLM-router-style).
+
+use std::time::{Duration, Instant};
+
+use crate::serve::Request;
+
+/// A flushed batch of requests.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<(Request, T)>,
+    /// Total candidates across the batch.
+    pub candidates: usize,
+    /// Why the batch flushed (observability / tests).
+    pub reason: FlushReason,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// Candidate budget reached.
+    Full,
+    /// Oldest request exceeded the linger deadline.
+    Deadline,
+    /// Explicit drain (shutdown).
+    Drain,
+}
+
+/// Accumulates requests into batches.  `T` is an opaque per-request
+/// tag (the server threads use reply channels).
+pub struct DynamicBatcher<T> {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    queue: Vec<(Request, T)>,
+    queued_candidates: usize,
+    oldest: Option<Instant>,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        DynamicBatcher {
+            max_batch: max_batch.max(1),
+            max_wait,
+            queue: Vec::new(),
+            queued_candidates: 0,
+            oldest: None,
+        }
+    }
+
+    pub fn queued_requests(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queued_candidates(&self) -> usize {
+        self.queued_candidates
+    }
+
+    /// Enqueue a request; returns a batch if the push filled it.
+    pub fn push(&mut self, req: Request, tag: T) -> Option<Batch<T>> {
+        self.queued_candidates += req.candidates.len();
+        if self.queue.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.queue.push((req, tag));
+        if self.queued_candidates >= self.max_batch {
+            return Some(self.flush(FlushReason::Full));
+        }
+        None
+    }
+
+    /// Time left until the deadline flush (None when queue is empty).
+    pub fn time_until_deadline(&self) -> Option<Duration> {
+        self.oldest
+            .map(|t| self.max_wait.saturating_sub(t.elapsed()))
+    }
+
+    /// Flush if the oldest request has waited past the linger budget.
+    pub fn poll_deadline(&mut self) -> Option<Batch<T>> {
+        match self.oldest {
+            Some(t) if t.elapsed() >= self.max_wait && !self.queue.is_empty() => {
+                Some(self.flush(FlushReason::Deadline))
+            }
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (shutdown path).
+    pub fn drain(&mut self) -> Option<Batch<T>> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.flush(FlushReason::Drain))
+        }
+    }
+
+    fn flush(&mut self, reason: FlushReason) -> Batch<T> {
+        let items = std::mem::take(&mut self.queue);
+        let candidates = self.queued_candidates;
+        self.queued_candidates = 0;
+        self.oldest = None;
+        Batch { items, candidates, reason }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::feature::FeatureSlot;
+
+    fn req(n_cands: usize) -> Request {
+        Request {
+            model: "m".into(),
+            context: vec![FeatureSlot { field: 0, bucket: 1, value: 1.0 }],
+            candidates: (0..n_cands)
+                .map(|i| vec![FeatureSlot { field: 1, bucket: i as u32, value: 1.0 }])
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = DynamicBatcher::new(10, Duration::from_secs(10));
+        assert!(b.push(req(4), 0u32).is_none());
+        assert!(b.push(req(4), 1).is_none());
+        let batch = b.push(req(4), 2).expect("should flush");
+        assert_eq!(batch.reason, FlushReason::Full);
+        assert_eq!(batch.candidates, 12);
+        assert_eq!(batch.items.len(), 3);
+        assert_eq!(b.queued_requests(), 0);
+        assert_eq!(b.queued_candidates(), 0);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = DynamicBatcher::new(1000, Duration::from_millis(5));
+        b.push(req(2), 0u32);
+        assert!(b.poll_deadline().is_none());
+        std::thread::sleep(Duration::from_millis(7));
+        let batch = b.poll_deadline().expect("deadline batch");
+        assert_eq!(batch.reason, FlushReason::Deadline);
+        assert_eq!(batch.items.len(), 1);
+    }
+
+    #[test]
+    fn deadline_from_oldest_not_newest() {
+        let mut b = DynamicBatcher::new(1000, Duration::from_millis(20));
+        b.push(req(1), 0u32);
+        std::thread::sleep(Duration::from_millis(12));
+        b.push(req(1), 1); // newer request must not reset the clock
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(b.poll_deadline().is_some());
+    }
+
+    #[test]
+    fn drain_and_empty_behaviour() {
+        let mut b: DynamicBatcher<u32> =
+            DynamicBatcher::new(10, Duration::from_secs(1));
+        assert!(b.drain().is_none());
+        assert!(b.poll_deadline().is_none());
+        assert!(b.time_until_deadline().is_none());
+        b.push(req(1), 7);
+        let batch = b.drain().unwrap();
+        assert_eq!(batch.reason, FlushReason::Drain);
+        assert_eq!(batch.items[0].1, 7);
+    }
+
+    #[test]
+    fn single_oversized_request_flushes_immediately() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(1));
+        let batch = b.push(req(9), 0u32).expect("flush");
+        assert_eq!(batch.candidates, 9);
+    }
+}

@@ -1,0 +1,428 @@
+//! §5 — context caching over a radix tree.
+//!
+//! "FW does an additional pass only with the context part, where it
+//! identifies and caches frequent parts of the context.  On subsequent
+//! candidate passes it reuses this information on-the-fly instead of
+//! re-calculating it for each context-candidate pair."
+//!
+//! The cached value is a [`ContextPartial`]: the context's LR partial
+//! sum and the context×context FFM pair interactions — everything in
+//! the forward pass that does not involve candidate features.  Keys are
+//! the context's (bucket, value) byte string; lookups run over a
+//! path-compressed radix tree (the production engine's
+//! `src/radix_tree.rs`).
+//!
+//! Eviction is epoch-based: when the entry count exceeds capacity the
+//! tree is cleared wholesale.  With Zipf-repeated contexts the hit rate
+//! recovers within a few thousand requests, and clearing is O(1) —
+//! matching the production engine's tolerance for approximate caching.
+//! A swap of the underlying model weights also clears the cache (stale
+//! partials must never be served).
+
+use std::sync::Arc;
+
+use crate::feature::FeatureSlot;
+use crate::model::regressor::{ContextPartial, Regressor};
+
+/// Path-compressed radix (prefix) tree over byte keys.
+pub struct RadixTree<V> {
+    root: Node<V>,
+    len: usize,
+}
+
+struct Node<V> {
+    /// Compressed edge label leading INTO this node.
+    label: Vec<u8>,
+    value: Option<V>,
+    children: Vec<Node<V>>,
+}
+
+impl<V> Node<V> {
+    fn new(label: Vec<u8>) -> Self {
+        Node { label, value: None, children: Vec::new() }
+    }
+
+    fn child_starting(&self, b: u8) -> Option<usize> {
+        self.children.iter().position(|c| c.label.first() == Some(&b))
+    }
+}
+
+impl<V> Default for RadixTree<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> RadixTree<V> {
+    pub fn new() -> Self {
+        RadixTree { root: Node::new(Vec::new()), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.root = Node::new(Vec::new());
+        self.len = 0;
+    }
+
+    /// Longest common prefix length of two slices.
+    fn lcp(a: &[u8], b: &[u8]) -> usize {
+        a.iter().zip(b).take_while(|(x, y)| x == y).count()
+    }
+
+    pub fn insert(&mut self, key: &[u8], value: V) -> Option<V> {
+        let mut node = &mut self.root;
+        let mut rest = key;
+        loop {
+            if rest.is_empty() {
+                let old = node.value.replace(value);
+                if old.is_none() {
+                    self.len += 1;
+                }
+                return old;
+            }
+            match node.child_starting(rest[0]) {
+                None => {
+                    let mut leaf = Node::new(rest.to_vec());
+                    leaf.value = Some(value);
+                    node.children.push(leaf);
+                    self.len += 1;
+                    return None;
+                }
+                Some(ci) => {
+                    let lcp = Self::lcp(&node.children[ci].label, rest);
+                    let child_label_len = node.children[ci].label.len();
+                    if lcp == child_label_len {
+                        // descend
+                        node = &mut node.children[ci];
+                        rest = &rest[lcp..];
+                    } else {
+                        // split the edge
+                        let child = node.children.remove(ci);
+                        let mut mid = Node::new(child.label[..lcp].to_vec());
+                        let mut tail = child;
+                        tail.label = tail.label[lcp..].to_vec();
+                        mid.children.push(tail);
+                        if rest.len() == lcp {
+                            mid.value = Some(value);
+                            self.len += 1;
+                            node.children.push(mid);
+                            return None;
+                        }
+                        let mut leaf = Node::new(rest[lcp..].to_vec());
+                        leaf.value = Some(value);
+                        mid.children.push(leaf);
+                        node.children.push(mid);
+                        self.len += 1;
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn get(&self, key: &[u8]) -> Option<&V> {
+        let mut node = &self.root;
+        let mut rest = key;
+        loop {
+            if rest.is_empty() {
+                return node.value.as_ref();
+            }
+            let ci = node.child_starting(rest[0])?;
+            let child = &node.children[ci];
+            if rest.len() < child.label.len()
+                || rest[..child.label.len()] != child.label[..]
+            {
+                return None;
+            }
+            rest = &rest[child.label.len()..];
+            node = child;
+        }
+    }
+}
+
+/// Serving-level context cache.
+pub struct ContextCache {
+    tree: RadixTree<Arc<ContextPartial>>,
+    /// Max entries before an epoch clear; 0 disables caching entirely.
+    pub capacity: usize,
+    /// Model version the cached partials were computed against.
+    model_version: u64,
+    pub hits: u64,
+    pub misses: u64,
+    key_buf: Vec<u8>,
+}
+
+impl ContextCache {
+    pub fn new(capacity: usize) -> Self {
+        ContextCache {
+            tree: RadixTree::new(),
+            capacity,
+            model_version: 0,
+            hits: 0,
+            misses: 0,
+            key_buf: Vec::new(),
+        }
+    }
+
+    /// Byte key of a context: model name + weight version, then
+    /// (bucket, value-bits) per slot.  Versioned keys make partials
+    /// computed against swapped-out weights unreachable immediately (no
+    /// cross-model or cross-version mixing); the epoch clear reclaims
+    /// their memory.
+    fn key(buf: &mut Vec<u8>, model: &str, version: u64, ctx: &[FeatureSlot]) {
+        buf.clear();
+        buf.extend_from_slice(model.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(&version.to_le_bytes());
+        for s in ctx {
+            buf.extend_from_slice(&s.bucket.to_le_bytes());
+            buf.extend_from_slice(&s.value.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Fetch (or compute and insert) the partial forward for `ctx`
+    /// against `reg` at `model_version`.
+    pub fn get_or_compute(
+        &mut self,
+        reg: &Regressor,
+        model_version: u64,
+        ctx: &[FeatureSlot],
+    ) -> Arc<ContextPartial> {
+        self.get_or_compute_named(reg, "", model_version, ctx)
+    }
+
+    /// Multi-model variant: `model` disambiguates cache entries.
+    pub fn get_or_compute_named(
+        &mut self,
+        reg: &Regressor,
+        model: &str,
+        model_version: u64,
+        ctx: &[FeatureSlot],
+    ) -> Arc<ContextPartial> {
+        if self.capacity == 0 {
+            self.misses += 1;
+            return Arc::new(reg.context_partial(ctx));
+        }
+        let _ = &self.model_version; // kept for observability
+        self.model_version = model_version;
+        let mut key = std::mem::take(&mut self.key_buf);
+        Self::key(&mut key, model, model_version, ctx);
+        if let Some(v) = self.tree.get(&key) {
+            self.hits += 1;
+            let out = v.clone();
+            self.key_buf = key;
+            return out;
+        }
+        self.misses += 1;
+        let cp = Arc::new(reg.context_partial(ctx));
+        if self.tree.len() >= self.capacity {
+            self.tree.clear(); // epoch eviction
+        }
+        self.tree.insert(&key, cp.clone());
+        self.key_buf = key;
+        cp
+    }
+
+    /// Raw-key variant (§5's production path): the UNHASHED context
+    /// bytes are the cache key, so a cache hit skips context feature
+    /// hashing, slot assembly AND the partial forward.  `compute` runs
+    /// only on miss.
+    pub fn get_or_compute_keyed(
+        &mut self,
+        key: &[u8],
+        compute: impl FnOnce() -> ContextPartial,
+    ) -> Arc<ContextPartial> {
+        if self.capacity == 0 {
+            self.misses += 1;
+            return Arc::new(compute());
+        }
+        if let Some(v) = self.tree.get(key) {
+            self.hits += 1;
+            return v.clone();
+        }
+        self.misses += 1;
+        let cp = Arc::new(compute());
+        if self.tree.len() >= self.capacity {
+            self.tree.clear();
+        }
+        self.tree.insert(key, cp.clone());
+        cp
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn entries(&self) -> usize {
+        self.tree.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::testutil::prop;
+
+    #[test]
+    fn radix_insert_get_basic() {
+        let mut t = RadixTree::new();
+        assert!(t.is_empty());
+        assert_eq!(t.insert(b"romane", 1), None);
+        assert_eq!(t.insert(b"romanus", 2), None);
+        assert_eq!(t.insert(b"romulus", 3), None);
+        assert_eq!(t.insert(b"rubens", 4), None);
+        assert_eq!(t.insert(b"ruber", 5), None);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.get(b"romane"), Some(&1));
+        assert_eq!(t.get(b"romanus"), Some(&2));
+        assert_eq!(t.get(b"romulus"), Some(&3));
+        assert_eq!(t.get(b"rubens"), Some(&4));
+        assert_eq!(t.get(b"ruber"), Some(&5));
+        assert_eq!(t.get(b"roman"), None); // interior, no value
+        assert_eq!(t.get(b"rom"), None);
+        assert_eq!(t.get(b"x"), None);
+    }
+
+    #[test]
+    fn radix_overwrite_and_prefix_values() {
+        let mut t = RadixTree::new();
+        t.insert(b"ab", 1);
+        t.insert(b"abc", 2);
+        t.insert(b"a", 3);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.insert(b"ab", 9), Some(1));
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.get(b"a"), Some(&3));
+        assert_eq!(t.get(b"ab"), Some(&9));
+        assert_eq!(t.get(b"abc"), Some(&2));
+        assert_eq!(t.get(b""), None);
+        t.insert(b"", 0);
+        assert_eq!(t.get(b""), Some(&0));
+    }
+
+    #[test]
+    fn radix_prop_matches_hashmap() {
+        prop(40, |g| {
+            let mut t = RadixTree::new();
+            let mut m = std::collections::HashMap::new();
+            for _ in 0..g.usize_in(1..200) {
+                let key = g.bytes(0..12);
+                let v = g.u32();
+                t.insert(&key, v);
+                m.insert(key, v);
+            }
+            assert_eq!(t.len(), m.len());
+            for (k, v) in &m {
+                assert_eq!(t.get(k), Some(v), "key {k:?}");
+            }
+            // absent keys
+            for _ in 0..20 {
+                let k = g.bytes(13..20);
+                assert_eq!(t.get(&k), m.get(&k));
+            }
+        });
+    }
+
+    fn trained_regressor() -> Regressor {
+        use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+        use crate::model::Workspace;
+        let cfg = ModelConfig::deep_ffm(4, 2, 256, &[8]);
+        let mut reg = Regressor::new(&cfg);
+        let mut ws = Workspace::new();
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 41, 256);
+        for _ in 0..2000 {
+            let ex = s.next_example();
+            reg.learn(&ex, &mut ws);
+        }
+        reg
+    }
+
+    #[test]
+    fn cache_hits_on_repeated_context() {
+        use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+        let reg = trained_regressor();
+        let mut cache = ContextCache::new(1024);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 42, 256);
+        let ex = s.next_example();
+        let ctx = &ex.slots[..2];
+        let a = cache.get_or_compute(&reg, 1, ctx);
+        let b = cache.get_or_compute(&reg, 1, ctx);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(*a, *b);
+    }
+
+    #[test]
+    fn cache_scores_match_uncached() {
+        use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+        use crate::model::Workspace;
+        let reg = trained_regressor();
+        let mut cache = ContextCache::new(64);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 43, 256);
+        let mut ws = Workspace::new();
+        for _ in 0..300 {
+            let ex = s.next_example();
+            let cp = cache.get_or_compute(&reg, 1, &ex.slots[..2]);
+            let cached = reg.predict_with_partial(&cp, &ex.slots[2..], &mut ws);
+            let full = reg.predict(&ex, &mut ws);
+            assert!((cached - full).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn version_change_invalidates() {
+        use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+        let reg = trained_regressor();
+        let mut cache = ContextCache::new(1024);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 44, 256);
+        let ex = s.next_example();
+        cache.get_or_compute(&reg, 1, &ex.slots[..2]);
+        assert_eq!(cache.entries(), 1);
+        // new model version -> versioned key misses (no stale reuse)
+        cache.get_or_compute(&reg, 2, &ex.slots[..2]);
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.hits, 0);
+        // old-version entry is unreachable but still counted until the
+        // epoch clear reclaims it
+        assert_eq!(cache.entries(), 2);
+    }
+
+    #[test]
+    fn capacity_zero_disables() {
+        use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+        let reg = trained_regressor();
+        let mut cache = ContextCache::new(0);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 45, 256);
+        let ex = s.next_example();
+        cache.get_or_compute(&reg, 1, &ex.slots[..2]);
+        cache.get_or_compute(&reg, 1, &ex.slots[..2]);
+        assert_eq!(cache.hits, 0);
+        assert_eq!(cache.entries(), 0);
+    }
+
+    #[test]
+    fn epoch_eviction_bounds_entries() {
+        use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+        let reg = trained_regressor();
+        let mut cache = ContextCache::new(16);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 46, 256);
+        for _ in 0..200 {
+            let ex = s.next_example();
+            cache.get_or_compute(&reg, 1, &ex.slots[..2]);
+        }
+        assert!(cache.entries() <= 16);
+    }
+}

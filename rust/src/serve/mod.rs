@@ -1,0 +1,113 @@
+//! §5 — the serving layer.
+//!
+//! "Each request can be separated into context and candidates.  For all
+//! candidates in the request, the context is the same" — the serving
+//! types below encode that split directly, and the per-worker
+//! [`context_cache`] exploits it.
+//!
+//! Components:
+//! * [`ModelHandle`] — hot-swappable model slot (the §6 update pipeline
+//!   swaps a new weight set in without pausing serving).
+//! * [`router`] — model registry + context-affinity worker sharding.
+//! * [`batcher`] — dynamic candidate batching with linger deadline.
+//! * [`context_cache`] — radix-tree cache of partial forwards.
+//! * [`server`] — the thread-pool serving engine with latency metrics.
+//! * [`trace`] — synthetic production-traffic generator (Figures 4/5).
+
+pub mod batcher;
+pub mod context_cache;
+pub mod router;
+pub mod server;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::feature::FeatureSlot;
+use crate::model::regressor::Regressor;
+
+/// A scoring request: one shared context, many candidates.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Model to score with (registered name).
+    pub model: String,
+    /// Context feature slots (fields `0..C` of the model).
+    pub context: Vec<FeatureSlot>,
+    /// Candidate slot groups (fields `C..F` each).
+    pub candidates: Vec<Vec<FeatureSlot>>,
+}
+
+/// Scores for one request's candidates, in order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub scores: Vec<f32>,
+}
+
+/// Hot-swappable model slot.
+///
+/// Readers take a cheap `Arc` clone of the current model; the update
+/// pipeline swaps in a new `Arc` atomically and bumps the version so
+/// caches keyed on stale weights invalidate themselves.
+#[derive(Clone)]
+pub struct ModelHandle {
+    inner: Arc<RwLock<Arc<Regressor>>>,
+    version: Arc<AtomicU64>,
+}
+
+impl ModelHandle {
+    pub fn new(reg: Regressor) -> Self {
+        ModelHandle {
+            inner: Arc::new(RwLock::new(Arc::new(reg))),
+            version: Arc::new(AtomicU64::new(1)),
+        }
+    }
+
+    /// Current model snapshot.
+    pub fn load(&self) -> Arc<Regressor> {
+        self.inner.read().expect("model lock poisoned").clone()
+    }
+
+    /// Swap in a new model (returns the new version).
+    pub fn swap(&self, reg: Regressor) -> u64 {
+        let mut slot = self.inner.write().expect("model lock poisoned");
+        *slot = Arc::new(reg);
+        self.version.fetch_add(1, Ordering::Release) + 1
+    }
+
+    /// Monotonic version, bumped on every swap.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn model_handle_swap_bumps_version() {
+        let cfg = ModelConfig::linear(4, 256);
+        let h = ModelHandle::new(Regressor::new(&cfg));
+        assert_eq!(h.version(), 1);
+        let m1 = h.load();
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 9;
+        let v = h.swap(Regressor::new(&cfg2));
+        assert_eq!(v, 2);
+        assert_eq!(h.version(), 2);
+        let m2 = h.load();
+        // old snapshot still alive (readers never block swaps)
+        assert_eq!(m1.cfg.seed, cfg.seed);
+        assert_eq!(m2.cfg.seed, 9);
+    }
+
+    #[test]
+    fn handle_clones_share_state() {
+        let cfg = ModelConfig::linear(4, 256);
+        let h = ModelHandle::new(Regressor::new(&cfg));
+        let h2 = h.clone();
+        h.swap(Regressor::new(&cfg));
+        assert_eq!(h2.version(), 2);
+    }
+}

@@ -1,0 +1,136 @@
+//! Request routing: model registry plus context-affinity sharding.
+//!
+//! The engine serves "more than a hundred models" concurrently; the
+//! router resolves a request's model name to its [`ModelHandle`] and
+//! picks a worker shard.  Sharding hashes the *context* so repeated
+//! contexts land on the same worker — maximizing that worker's
+//! context-cache hit rate (§5).
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::feature::hash::murmur3_32;
+use crate::feature::FeatureSlot;
+use crate::serve::{ModelHandle, Request};
+
+/// Thread-safe model registry + shard picker.
+#[derive(Clone)]
+pub struct Router {
+    models: Arc<RwLock<HashMap<String, ModelHandle>>>,
+    pub shards: usize,
+}
+
+impl Router {
+    pub fn new(shards: usize) -> Self {
+        Router {
+            models: Arc::new(RwLock::new(HashMap::new())),
+            shards: shards.max(1),
+        }
+    }
+
+    /// Register (or replace) a model under `name`.
+    pub fn register(&self, name: &str, handle: ModelHandle) {
+        self.models
+            .write()
+            .expect("router lock")
+            .insert(name.to_string(), handle);
+    }
+
+    /// Remove a model; returns whether it existed.
+    pub fn deregister(&self, name: &str) -> bool {
+        self.models.write().expect("router lock").remove(name).is_some()
+    }
+
+    /// Look up a model handle.
+    pub fn resolve(&self, name: &str) -> Option<ModelHandle> {
+        self.models.read().expect("router lock").get(name).cloned()
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.models.read().expect("router lock").keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Context-affinity shard for a request.
+    pub fn shard_for(&self, req: &Request) -> usize {
+        Self::shard_for_context(&req.context, self.shards)
+    }
+
+    /// Hash a context's buckets into a shard id.
+    pub fn shard_for_context(ctx: &[FeatureSlot], shards: usize) -> usize {
+        let mut bytes = Vec::with_capacity(ctx.len() * 4);
+        for s in ctx {
+            bytes.extend_from_slice(&s.bucket.to_le_bytes());
+        }
+        (murmur3_32(&bytes, 0x5a5a) as usize) % shards.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::regressor::Regressor;
+
+    fn handle() -> ModelHandle {
+        ModelHandle::new(Regressor::new(&ModelConfig::linear(4, 256)))
+    }
+
+    fn ctx(buckets: &[u32]) -> Vec<FeatureSlot> {
+        buckets
+            .iter()
+            .enumerate()
+            .map(|(f, &b)| FeatureSlot { field: f as u16, bucket: b, value: 1.0 })
+            .collect()
+    }
+
+    #[test]
+    fn register_resolve_deregister() {
+        let r = Router::new(4);
+        assert!(r.resolve("ctr").is_none());
+        r.register("ctr", handle());
+        r.register("cvr", handle());
+        assert!(r.resolve("ctr").is_some());
+        assert_eq!(r.model_names(), vec!["ctr", "cvr"]);
+        assert!(r.deregister("ctr"));
+        assert!(!r.deregister("ctr"));
+        assert!(r.resolve("ctr").is_none());
+    }
+
+    #[test]
+    fn same_context_same_shard() {
+        let r = Router::new(8);
+        let req = Request {
+            model: "m".into(),
+            context: ctx(&[1, 2, 3]),
+            candidates: vec![],
+        };
+        let a = r.shard_for(&req);
+        let b = r.shard_for(&req);
+        assert_eq!(a, b);
+        assert!(a < 8);
+    }
+
+    #[test]
+    fn different_contexts_spread() {
+        let shards = 8;
+        let mut counts = vec![0usize; shards];
+        for i in 0..8000u32 {
+            let c = ctx(&[i, i * 7 + 1]);
+            counts[Router::shard_for_context(&c, shards)] += 1;
+        }
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        assert!(min > 700 && max < 1400, "skewed shards: {counts:?}");
+    }
+
+    #[test]
+    fn registry_shared_across_clones() {
+        let r = Router::new(2);
+        let r2 = r.clone();
+        r.register("m", handle());
+        assert!(r2.resolve("m").is_some());
+    }
+}

@@ -1,0 +1,148 @@
+//! Synthetic production request traces (DESIGN.md §3).
+//!
+//! Models the §5 traffic shape: each request carries one *context*
+//! (user/page features) and N *candidates* (item features).  Contexts
+//! repeat with a Zipf distribution — "part of the feature space is very
+//! consistent for each candidate batch" — which is precisely what makes
+//! context caching pay off (Figure 4).
+
+use crate::feature::{hash, FeatureSlot};
+use crate::serve::Request;
+use crate::util::rng::{Pcg32, Zipf};
+
+/// Generates a stream of requests against a model with `fields` total
+/// fields, the first `ctx_fields` of which are context.
+pub struct TraceGenerator {
+    rng: Pcg32,
+    ctx_zipf: Zipf,
+    cand_zipf: Zipf,
+    pub fields: usize,
+    pub ctx_fields: usize,
+    mask: u32,
+    /// Candidates per request.
+    pub fanout: usize,
+    /// Number of distinct context identities.
+    pub ctx_universe: u64,
+}
+
+impl TraceGenerator {
+    /// `buckets` must match the served model's bucket count.
+    pub fn new(seed: u64, fields: usize, ctx_fields: usize, buckets: u32, fanout: usize) -> Self {
+        assert!(ctx_fields < fields);
+        assert!(buckets.is_power_of_two());
+        TraceGenerator {
+            rng: Pcg32::new(seed, 0x7ace),
+            ctx_zipf: Zipf::new(5_000, 1.2),
+            cand_zipf: Zipf::new(100_000, 1.1),
+            fields,
+            ctx_fields,
+            mask: buckets - 1,
+            fanout,
+            ctx_universe: 5_000,
+        }
+    }
+
+    /// Tune context repetition (smaller universe / higher skew = more
+    /// cache hits; the Figure-4 sweep varies this).
+    pub fn set_context_skew(&mut self, universe: u64, zipf_s: f64) {
+        self.ctx_universe = universe;
+        self.ctx_zipf = Zipf::new(universe, zipf_s);
+    }
+
+    fn slots_for(&mut self, identity: u64, fields: std::ops::Range<usize>, salt: u32) -> Vec<FeatureSlot> {
+        fields
+            .map(|f| {
+                // each field's raw id derives deterministically from the
+                // identity, so a repeated context reproduces identical slots
+                let id = identity
+                    .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                    .wrapping_add(f as u64);
+                FeatureSlot {
+                    field: f as u16,
+                    bucket: hash::id_bucket(salt + f as u32, id, self.mask),
+                    value: 1.0,
+                }
+            })
+            .collect()
+    }
+
+    /// Next request for `model`.
+    pub fn next_request(&mut self, model: &str) -> Request {
+        let ctx_id = self.ctx_zipf.sample(&mut self.rng);
+        let context = self.slots_for(ctx_id, 0..self.ctx_fields, 0xc0);
+        let candidates = (0..self.fanout)
+            .map(|_| {
+                let cand_id = self.cand_zipf.sample(&mut self.rng);
+                self.slots_for(cand_id, self.ctx_fields..self.fields, 0xca)
+            })
+            .collect();
+        Request { model: model.to_string(), context, candidates }
+    }
+
+    /// Generate a whole trace.
+    pub fn take(&mut self, n: usize, model: &str) -> Vec<Request> {
+        (0..n).map(|_| self.next_request(model)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_shape() {
+        let mut g = TraceGenerator::new(1, 8, 3, 1 << 10, 5);
+        let r = g.next_request("m");
+        assert_eq!(r.context.len(), 3);
+        assert_eq!(r.candidates.len(), 5);
+        assert!(r.candidates.iter().all(|c| c.len() == 5));
+        // fields numbered correctly
+        assert_eq!(r.context[0].field, 0);
+        assert_eq!(r.candidates[0][0].field, 3);
+        assert!(r.context.iter().all(|s| s.bucket < (1 << 10)));
+    }
+
+    #[test]
+    fn contexts_repeat_candidates_vary() {
+        let mut g = TraceGenerator::new(2, 6, 2, 1 << 10, 3);
+        let reqs = g.take(2000, "m");
+        let mut ctx_seen = std::collections::HashSet::new();
+        let mut cand_seen = std::collections::HashSet::new();
+        for r in &reqs {
+            ctx_seen.insert(
+                r.context.iter().map(|s| s.bucket).collect::<Vec<_>>(),
+            );
+            for c in &r.candidates {
+                cand_seen.insert(c.iter().map(|s| s.bucket).collect::<Vec<_>>());
+            }
+        }
+        // Zipf contexts collapse to far fewer distinct identities than
+        // requests; candidates stay diverse.
+        assert!(ctx_seen.len() < 1200, "contexts {}", ctx_seen.len());
+        assert!(cand_seen.len() > 2000, "candidates {}", cand_seen.len());
+    }
+
+    #[test]
+    fn same_identity_same_slots() {
+        let mut a = TraceGenerator::new(3, 6, 2, 1 << 10, 1);
+        let mut b = TraceGenerator::new(3, 6, 2, 1 << 10, 1);
+        let ra = a.next_request("m");
+        let rb = b.next_request("m");
+        assert_eq!(ra.context, rb.context);
+    }
+
+    #[test]
+    fn skew_control_changes_repetition() {
+        let distinct = |universe, s| {
+            let mut g = TraceGenerator::new(4, 6, 2, 1 << 10, 1);
+            g.set_context_skew(universe, s);
+            let reqs = g.take(3000, "m");
+            let mut seen = std::collections::HashSet::new();
+            for r in &reqs {
+                seen.insert(r.context[0].bucket);
+            }
+            seen.len()
+        };
+        assert!(distinct(50, 1.4) < distinct(50_000, 1.01));
+    }
+}

@@ -1,0 +1,328 @@
+//! Vector kernels with runtime scalar/AVX2+FMA dispatch.
+//!
+//! These are the inner loops of both training and inference: FFM latent
+//! dot products, LR accumulation, and the neural block's dense matvec
+//! (the paper reached for BLAS here; our hand-rolled FMA matvec serves
+//! the same role without an external dependency).
+
+use super::{isa_level, IsaLevel};
+
+/// Below this length the vector path loses to the scalar loop: the
+/// `#[target_feature]` call boundary (never inlined into plain-ABI
+/// callers) plus the horizontal reduction cost more than a handful of
+/// scalar FMAs.  FFM latent dots (K = 2..8) take the scalar path; the
+/// MergeNorm/ MLP vectors (D, H = 16..) take the wide path.
+const SIMD_MIN_LEN: usize = 32;
+
+/// `sum_i a[i] * b[i]`
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.len() < SIMD_MIN_LEN {
+        return dot_scalar(a, b);
+    }
+    match isa_level() {
+        IsaLevel::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2Fma => unsafe { dot_avx2(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// `y[i] += alpha * x[i]`
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    if x.len() < SIMD_MIN_LEN {
+        return axpy_scalar(alpha, x, y);
+    }
+    match isa_level() {
+        IsaLevel::Scalar => axpy_scalar(alpha, x, y),
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2Fma => unsafe { axpy_avx2(alpha, x, y) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => axpy_scalar(alpha, x, y),
+    }
+}
+
+/// Dense matvec: `out[j] = sum_i x[i] * w[i*cols + j]` (+ optional bias).
+/// Row-major `w` of shape `[rows=x.len(), cols=out.len()]` — the layout
+/// used by the neural block so a *row* of `w` is the fan-out of one
+/// input unit (enables §4.3 sparse skipping of zero inputs).
+///
+/// Dispatch happens ONCE per call, not per row — the AVX2 kernel keeps
+/// the accumulator in registers across all rows (the `#[target_feature]`
+/// call boundary is too expensive to pay per row).
+pub fn matvec_rowmajor(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
+    let cols = out.len();
+    debug_assert_eq!(w.len(), x.len() * cols);
+    #[cfg(target_arch = "x86_64")]
+    if cols >= 8 && isa_level() == IsaLevel::Avx2Fma {
+        unsafe { matvec_avx2(x, w, bias, out) };
+        return;
+    }
+    matvec_scalar(x, w, bias, out);
+}
+
+/// Scalar matvec (also the non-x86 fallback).
+pub fn matvec_scalar(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
+    let cols = out.len();
+    match bias {
+        Some(b) => out.copy_from_slice(b),
+        None => out.fill(0.0),
+    }
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue; // sparse input skip (ReLU outputs are often 0)
+        }
+        axpy_scalar(xi, &w[i * cols..(i + 1) * cols], out);
+    }
+}
+
+// ---------------------------------------------------------------- scalar
+
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+pub fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+// ------------------------------------------------------------------ avx2
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0;
+    // two accumulators hide FMA latency
+    while i + 16 <= n {
+        let va0 = _mm256_loadu_ps(a.as_ptr().add(i));
+        let vb0 = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc0 = _mm256_fmadd_ps(va0, vb0, acc0);
+        let va1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
+        let vb1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
+        acc1 = _mm256_fmadd_ps(va1, vb1, acc1);
+        i += 16;
+    }
+    while i + 8 <= n {
+        let va = _mm256_loadu_ps(a.as_ptr().add(i));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc0 = _mm256_fmadd_ps(va, vb, acc0);
+        i += 8;
+    }
+    let acc = _mm256_add_ps(acc0, acc1);
+    let hi = _mm256_extractf128_ps(acc, 1);
+    let lo = _mm256_castps256_ps128(acc);
+    let s4 = _mm_add_ps(hi, lo);
+    let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+    let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 1));
+    let mut s = _mm_cvtss_f32(s1);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let va = _mm256_set1_ps(alpha);
+    let mut i = 0;
+    while i + 8 <= n {
+        let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+        let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(va, vx, vy));
+        i += 8;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+/// Register-blocked AVX2 matvec: for cols ≤ 64 the whole output vector
+/// lives in ymm accumulators across all rows (one load+store of `out`
+/// total); wider outputs fall back to an in-function row/axpy loop.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matvec_avx2(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let cols = out.len();
+    let vec_cols = cols & !7; // multiple of 8 part
+    if cols % 8 == 0 && cols <= 64 {
+        let nacc = cols / 8;
+        let mut acc = [_mm256_setzero_ps(); 8];
+        if let Some(b) = bias {
+            for (k, a) in acc.iter_mut().enumerate().take(nacc) {
+                *a = _mm256_loadu_ps(b.as_ptr().add(k * 8));
+            }
+        }
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let vx = _mm256_set1_ps(xi);
+            let row = w.as_ptr().add(i * cols);
+            for (k, a) in acc.iter_mut().enumerate().take(nacc) {
+                *a = _mm256_fmadd_ps(vx, _mm256_loadu_ps(row.add(k * 8)), *a);
+            }
+        }
+        for (k, a) in acc.iter().enumerate().take(nacc) {
+            _mm256_storeu_ps(out.as_mut_ptr().add(k * 8), *a);
+        }
+        return;
+    }
+    // general shape: bias copy then fused per-row AXPY (still one
+    // target_feature entry for the whole matvec)
+    match bias {
+        Some(b) => out.copy_from_slice(b),
+        None => out.fill(0.0),
+    }
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = w.as_ptr().add(i * cols);
+        let vx = _mm256_set1_ps(xi);
+        let mut j = 0;
+        while j < vec_cols {
+            let vy = _mm256_loadu_ps(out.as_ptr().add(j));
+            let vw = _mm256_loadu_ps(row.add(j));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_fmadd_ps(vx, vw, vy));
+            j += 8;
+        }
+        while j < cols {
+            out[j] += xi * *row.add(j);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::force_scalar;
+    use crate::util::rng::Pcg32;
+
+    fn randvec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn dot_matches_scalar_all_lengths() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 100, 1000] {
+            let a = randvec(&mut rng, n);
+            let b = randvec(&mut rng, n);
+            let want = dot_scalar(&a, &b);
+            let got = dot(&a, &b);
+            assert!(
+                (want - got).abs() <= 1e-3 * (1.0 + want.abs()),
+                "n={n} want={want} got={got}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar() {
+        let mut rng = Pcg32::seeded(2);
+        for n in [0, 1, 5, 8, 13, 32, 100] {
+            let x = randvec(&mut rng, n);
+            let mut y1 = randvec(&mut rng, n);
+            let mut y2 = y1.clone();
+            axpy_scalar(0.37, &x, &mut y1);
+            axpy(0.37, &x, &mut y2);
+            for i in 0..n {
+                assert!((y1[i] - y2[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_naive() {
+        let mut rng = Pcg32::seeded(3);
+        // cover: scalar (<8), register-blocked (8..=64 mult of 8),
+        // general avx2 (non-multiple / wide)
+        for (rows, cols) in [(13, 7), (13, 16), (29, 64), (13, 20), (7, 72)] {
+            let x = randvec(&mut rng, rows);
+            let w = randvec(&mut rng, rows * cols);
+            let b = randvec(&mut rng, cols);
+            let mut out = vec![0.0; cols];
+            matvec_rowmajor(&x, &w, Some(&b), &mut out);
+            for j in 0..cols {
+                let mut want = b[j];
+                for i in 0..rows {
+                    want += x[i] * w[i * cols + j];
+                }
+                assert!(
+                    (out[j] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                    "rows={rows} cols={cols} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_simd_equals_scalar() {
+        let mut rng = Pcg32::seeded(9);
+        for (rows, cols) in [(79, 16), (16, 16), (33, 40), (5, 128)] {
+            let x = randvec(&mut rng, rows);
+            let w = randvec(&mut rng, rows * cols);
+            let mut simd = vec![0.0; cols];
+            matvec_rowmajor(&x, &w, None, &mut simd);
+            let mut scalar = vec![0.0; cols];
+            matvec_scalar(&x, &w, None, &mut scalar);
+            for j in 0..cols {
+                assert!((simd[j] - scalar[j]).abs() < 1e-3 * (1.0 + scalar[j].abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_skips_zero_inputs_correctly() {
+        let mut rng = Pcg32::seeded(4);
+        let (rows, cols) = (6, 4);
+        let mut x = randvec(&mut rng, rows);
+        x[1] = 0.0;
+        x[4] = 0.0;
+        let w = randvec(&mut rng, rows * cols);
+        let mut fast = vec![0.0; cols];
+        matvec_rowmajor(&x, &w, None, &mut fast);
+        let mut naive = vec![0.0; cols];
+        for j in 0..cols {
+            for i in 0..rows {
+                naive[j] += x[i] * w[i * cols + j];
+            }
+        }
+        for j in 0..cols {
+            assert!((fast[j] - naive[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn forced_scalar_equals_simd_numerics() {
+        let mut rng = Pcg32::seeded(5);
+        let a = randvec(&mut rng, 256);
+        let b = randvec(&mut rng, 256);
+        force_scalar(true);
+        let s = dot(&a, &b);
+        force_scalar(false);
+        let v = dot(&a, &b);
+        assert!((s - v).abs() < 1e-2 * (1.0 + s.abs()), "s={s} v={v}");
+    }
+}

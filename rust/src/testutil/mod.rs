@@ -1,0 +1,126 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! A property runs against many generated cases; on failure the seed
+//! is reported so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't inherit the xla rpath rustflags
+//! use fwumious::testutil::{prop, Gen};
+//! prop(100, |g: &mut Gen| {
+//!     let xs = g.vec_f32(0..64, -10.0, 10.0);
+//!     let sum: f32 = xs.iter().sum();
+//!     assert!(sum.is_finite());
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Pcg32,
+    pub case: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        if range.is_empty() {
+            return range.start;
+        }
+        range.start + self.rng.below((range.end - range.start) as u32) as usize
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+
+    /// Random byte vector with length drawn from `len`.
+    pub fn bytes(&mut self, len: std::ops::Range<usize>) -> Vec<u8> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| (self.rng.next_u32() & 0xff) as u8).collect()
+    }
+
+    /// Random f32 vector with length drawn from `len`.
+    pub fn vec_f32(&mut self, len: std::ops::Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Random normal-distributed f32 vector.
+    pub fn vec_normal(&mut self, len: std::ops::Range<usize>, scale: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.normal() * scale).collect()
+    }
+}
+
+/// Run `f` against `cases` generated cases.  Panics (with the failing
+/// seed) on the first failure.  Set `FW_PROP_SEED` to replay one case.
+pub fn prop(cases: usize, mut f: impl FnMut(&mut Gen)) {
+    if let Ok(seed_str) = std::env::var("FW_PROP_SEED") {
+        let seed: u64 = seed_str.parse().expect("FW_PROP_SEED must be u64");
+        let mut g = Gen { rng: Pcg32::seeded(seed), case: 0, seed };
+        f(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        let mut g = Gen { rng: Pcg32::seeded(seed), case, seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut g)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case} — replay with FW_PROP_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_runs_all_cases() {
+        let mut n = 0;
+        prop(25, |_g| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        prop(50, |g| {
+            let x = g.usize_in(3..10);
+            assert!((3..10).contains(&x));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.bytes(0..16);
+            assert!(v.len() < 16);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        prop(10, |g| {
+            assert!(g.case < 5, "deliberate failure");
+        });
+    }
+}

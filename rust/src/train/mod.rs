@@ -1,0 +1,103 @@
+//! Training jobs: single-pass online trainer, §4.2 Hogwild
+//! multithreaded trainer, and the §4.1 prefetched warm-up driver.
+
+pub mod hogwild;
+pub mod warmup;
+
+use crate::eval::RollingAuc;
+use crate::feature::Example;
+use crate::model::regressor::Regressor;
+use crate::model::Workspace;
+
+/// Single-threaded online trainer with progressive validation.
+pub struct Trainer {
+    pub reg: Regressor,
+    pub ws: Workspace,
+    pub eval: RollingAuc,
+    pub examples_seen: usize,
+}
+
+impl Trainer {
+    pub fn new(reg: Regressor) -> Self {
+        Self::with_window(reg, 30_000)
+    }
+
+    /// `window` — rolling-AUC window (the paper uses 30k).
+    pub fn with_window(reg: Regressor, window: usize) -> Self {
+        Trainer {
+            reg,
+            ws: Workspace::new(),
+            eval: RollingAuc::new(window),
+            examples_seen: 0,
+        }
+    }
+
+    /// Learn one example; returns the progressive-validation score.
+    #[inline]
+    pub fn learn(&mut self, ex: &Example) -> f32 {
+        let p = self.reg.learn(ex, &mut self.ws);
+        self.eval.add(p, ex.label);
+        self.examples_seen += 1;
+        p
+    }
+
+    /// Learn a chunk.
+    pub fn learn_chunk(&mut self, chunk: &[Example]) {
+        for ex in chunk {
+            self.learn(ex);
+        }
+    }
+
+    /// Evaluate (without learning) on a held-out slice; returns AUC.
+    pub fn test_auc(&mut self, test: &[Example]) -> f64 {
+        let mut scores = Vec::with_capacity(test.len());
+        let mut labels = Vec::with_capacity(test.len());
+        for ex in test {
+            scores.push(self.reg.predict(ex, &mut self.ws));
+            labels.push(ex.label);
+        }
+        crate::eval::auc(&scores, &labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+
+    #[test]
+    fn trainer_improves_over_stream() {
+        let cfg = ModelConfig::ffm(4, 2, 256);
+        let mut t = Trainer::with_window(Regressor::new(&cfg), 2000);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 5, 256);
+        for _ in 0..16_000 {
+            let ex = s.next_example();
+            t.learn(&ex);
+        }
+        assert_eq!(t.examples_seen, 16_000);
+        let pts = &t.eval.points;
+        assert!(pts.len() >= 7);
+        let early = pts[0];
+        let late = pts[pts.len() - 1];
+        assert!(late > early, "late {late} <= early {early}");
+    }
+
+    #[test]
+    fn test_auc_does_not_learn() {
+        let cfg = ModelConfig::ffm(4, 2, 256);
+        let mut t = Trainer::new(Regressor::new(&cfg));
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 6, 256);
+        for _ in 0..4000 {
+            let ex = s.next_example();
+            t.learn(&ex);
+        }
+        let test: Vec<_> = (0..2000).map(|_| s.next_example()).collect();
+        let w_before = t.reg.pool.weights.clone();
+        let a1 = t.test_auc(&test);
+        let a2 = t.test_auc(&test);
+        assert_eq!(a1, a2);
+        assert_eq!(t.reg.pool.weights, w_before);
+        assert!(a1 > 0.55, "test auc {a1}");
+    }
+}

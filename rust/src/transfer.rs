@@ -1,0 +1,403 @@
+//! §6 — the weight transfer plane between training and serving.
+//!
+//! "Hundreds of live models that take up to 10G of memory (per update)
+//! are constantly transferred across the network" — this module is the
+//! in-process simulation of that plane (DESIGN.md §3): a training job
+//! produces weight snapshots every round; an [`UpdatePipeline`] encodes
+//! them (raw / quantized / patched / quantized+patched — Table 4's four
+//! rows), ships them over a [`SimulatedChannel`] that accounts bytes
+//! and models bandwidth, and an [`UpdateReceiver`] reconstructs the
+//! inference weights for hot-swapping into the serving layer.
+
+use std::time::Instant;
+
+use crate::model::io;
+use crate::model::regressor::Regressor;
+use crate::patch::{self, Compression, Patch};
+use crate::quant;
+
+/// Encoding strategy for one update — the four arms of Table 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UpdateMode {
+    /// Ship the full inference weight file.
+    Raw,
+    /// Ship the quantized weight file (fw-quantization).
+    Quant,
+    /// Ship a byte patch against the previous raw file (fw-patcher).
+    PatchOnly,
+    /// Quantize, then patch against the previous quantized file
+    /// (fw-patcher + fw-quantization — the production configuration).
+    QuantPatch,
+}
+
+impl UpdateMode {
+    pub const ALL: [UpdateMode; 4] = [
+        UpdateMode::Raw,
+        UpdateMode::Quant,
+        UpdateMode::PatchOnly,
+        UpdateMode::QuantPatch,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            UpdateMode::Raw => "no processing (baseline)",
+            UpdateMode::Quant => "fw-quantization",
+            UpdateMode::PatchOnly => "fw-patcher",
+            UpdateMode::QuantPatch => "fw-patcher + fw-quantization",
+        }
+    }
+}
+
+/// One encoded update as it crosses the wire.
+#[derive(Clone, Debug)]
+pub struct WireUpdate {
+    pub mode: UpdateMode,
+    pub bytes: Vec<u8>,
+    /// Encoder wall time (Table 4's "Avg. time spent").
+    pub encode_seconds: f64,
+}
+
+/// Sender state: remembers the previous round's encodings for diffing.
+pub struct UpdatePipeline {
+    pub mode: UpdateMode,
+    pub compression: Compression,
+    /// α/β bound precisions for the quantizer.
+    pub alpha: u8,
+    pub beta: u8,
+    prev_raw: Option<Vec<u8>>,
+    prev_quant: Option<Vec<u8>>,
+    /// Grid reuse across rounds (§6 "dynamically select viable weight
+    /// ranges"): keep quantizing on the same grid while the weights
+    /// stay inside it, so consecutive quantized files differ only where
+    /// weights actually moved.
+    prev_grid: Option<quant::QuantHeader>,
+}
+
+impl UpdatePipeline {
+    pub fn new(mode: UpdateMode) -> Self {
+        UpdatePipeline {
+            mode,
+            compression: Compression::Gzip,
+            alpha: 2,
+            beta: 2,
+            prev_raw: None,
+            prev_quant: None,
+            prev_grid: None,
+        }
+    }
+
+    /// Quantize on a stable grid: reuse the previous round's grid while
+    /// it still covers the weights; re-derive (with 25% headroom) when
+    /// the distribution escapes.
+    fn quantize_stable(&mut self, weights: &[f32]) -> Vec<u8> {
+        if let Some(grid) = &self.prev_grid {
+            if let Some(codes) = quant::quantize_with(grid, weights) {
+                return quant::to_bytes(grid, &codes);
+            }
+        }
+        let (h, codes) =
+            quant::quantize_headroom(weights, self.alpha, self.beta, 0.25);
+        let out = quant::to_bytes(&h, &codes);
+        self.prev_grid = Some(h);
+        out
+    }
+
+    /// Encode the current model state for the wire.  The first round
+    /// has no base to diff against, so patch modes fall back to full
+    /// files (exactly like production bootstrap).
+    pub fn encode(&mut self, reg: &Regressor) -> WireUpdate {
+        let t = Instant::now();
+        // Inference weights only (optimizer state never ships — §6).
+        let raw = io::to_bytes(reg, false);
+        let out = match self.mode {
+            UpdateMode::Raw => raw.clone(),
+            UpdateMode::Quant => self.quantize_stable(&reg.pool.weights),
+            UpdateMode::PatchOnly => match &self.prev_raw {
+                Some(prev) => {
+                    patch::make_patch(prev, &raw, self.compression).to_wire()
+                }
+                None => raw.clone(),
+            },
+            UpdateMode::QuantPatch => {
+                let q = self.quantize_stable(&reg.pool.weights);
+                let wire = match &self.prev_quant {
+                    Some(prev) => {
+                        patch::make_patch(prev, &q, self.compression).to_wire()
+                    }
+                    None => q.clone(),
+                };
+                self.prev_quant = Some(q);
+                wire
+            }
+        };
+        self.prev_raw = Some(raw);
+        WireUpdate {
+            mode: self.mode,
+            bytes: out,
+            encode_seconds: t.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Receiver state: reconstructs inference weights from wire updates.
+pub struct UpdateReceiver {
+    mode: UpdateMode,
+    base_raw: Option<Vec<u8>>,
+    base_quant: Option<Vec<u8>>,
+    /// Structural template cloned when decoding weight-only (quantized)
+    /// payloads — the serving layer always knows its model skeleton.
+    template: Option<Regressor>,
+}
+
+impl UpdateReceiver {
+    pub fn new(mode: UpdateMode) -> Self {
+        UpdateReceiver { mode, base_raw: None, base_quant: None, template: None }
+    }
+
+    /// Install the structural template for weight-only payloads.
+    pub fn set_template(&mut self, template: Regressor) {
+        self.template = Some(template);
+    }
+
+    /// Apply one wire update; returns the reconstructed inference model.
+    pub fn apply(&mut self, update: &WireUpdate) -> Result<Regressor, String> {
+        assert_eq!(update.mode, self.mode, "pipeline/receiver mode mismatch");
+        match self.mode {
+            UpdateMode::Raw => {
+                self.base_raw = Some(update.bytes.clone());
+                io::from_bytes(&update.bytes).map_err(|e| e.to_string())
+            }
+            UpdateMode::Quant => self.decode_quant_model(&update.bytes.clone()),
+            UpdateMode::PatchOnly => {
+                let full = match &self.base_raw {
+                    Some(prev) => {
+                        let p = Patch::from_wire(&update.bytes)?;
+                        patch::apply_patch(prev, &p)?
+                    }
+                    None => update.bytes.clone(),
+                };
+                self.base_raw = Some(full.clone());
+                io::from_bytes(&full).map_err(|e| e.to_string())
+            }
+            UpdateMode::QuantPatch => {
+                let q = match &self.base_quant {
+                    Some(prev) => {
+                        let p = Patch::from_wire(&update.bytes)?;
+                        patch::apply_patch(prev, &p)?
+                    }
+                    None => update.bytes.clone(),
+                };
+                self.base_quant = Some(q.clone());
+                self.decode_quant_model(&q)
+            }
+        }
+    }
+
+    fn decode_quant_model(&mut self, qbytes: &[u8]) -> Result<Regressor, String> {
+        let weights = quant::dequantize_from_bytes(qbytes)?;
+        let template = self
+            .template
+            .as_ref()
+            .ok_or("receiver missing model template (call set_template)")?;
+        let mut reg = template.clone();
+        if weights.len() != reg.pool.weights.len() {
+            return Err(format!(
+                "quantized weight count {} != template {}",
+                weights.len(),
+                reg.pool.weights.len()
+            ));
+        }
+        reg.pool.weights = weights;
+        reg.pool.acc = Vec::new();
+        Ok(reg)
+    }
+}
+
+/// Simulated inter-DC link: counts bytes and models transfer time at a
+/// configured bandwidth + RTT.  (The bandwidth bill is the paper's
+/// headline §6 metric; time here is derived, not slept.)
+#[derive(Clone, Debug)]
+pub struct SimulatedChannel {
+    /// Link bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-message round-trip overhead in seconds.
+    pub rtt_seconds: f64,
+    /// Ledger: total bytes shipped.
+    pub total_bytes: u64,
+    /// Ledger: total simulated seconds spent on the wire.
+    pub total_seconds: f64,
+    /// Messages shipped.
+    pub messages: u64,
+}
+
+impl SimulatedChannel {
+    /// 1 Gbps, 30 ms RTT defaults.
+    pub fn new() -> Self {
+        Self::with_bandwidth(125_000_000.0, 0.03)
+    }
+
+    pub fn with_bandwidth(bandwidth_bps: f64, rtt_seconds: f64) -> Self {
+        SimulatedChannel {
+            bandwidth_bps,
+            rtt_seconds,
+            total_bytes: 0,
+            total_seconds: 0.0,
+            messages: 0,
+        }
+    }
+
+    /// Ship an update; returns the simulated transfer seconds.
+    pub fn ship(&mut self, update: &WireUpdate) -> f64 {
+        let secs = self.rtt_seconds + update.bytes.len() as f64 / self.bandwidth_bps;
+        self.total_bytes += update.bytes.len() as u64;
+        self.total_seconds += secs;
+        self.messages += 1;
+        secs
+    }
+}
+
+impl Default for SimulatedChannel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+    use crate::model::Workspace;
+
+    fn trained_rounds(rounds: usize, per_round: usize) -> Vec<Regressor> {
+        let cfg = ModelConfig::deep_ffm(4, 2, 1 << 10, &[8]);
+        let mut reg = Regressor::new(&cfg);
+        let mut ws = Workspace::new();
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 31, 1 << 10);
+        let mut out = Vec::new();
+        for _ in 0..rounds {
+            for _ in 0..per_round {
+                let ex = s.next_example();
+                reg.learn(&ex, &mut ws);
+            }
+            out.push(reg.clone());
+        }
+        out
+    }
+
+    #[test]
+    fn raw_mode_roundtrip() {
+        let snaps = trained_rounds(2, 500);
+        let mut pipe = UpdatePipeline::new(UpdateMode::Raw);
+        let mut recv = UpdateReceiver::new(UpdateMode::Raw);
+        for snap in &snaps {
+            let u = pipe.encode(snap);
+            let got = recv.apply(&u).unwrap();
+            assert_eq!(got.pool.weights, snap.pool.weights);
+        }
+    }
+
+    #[test]
+    fn patch_mode_reconstructs_exactly() {
+        let snaps = trained_rounds(4, 300);
+        let mut pipe = UpdatePipeline::new(UpdateMode::PatchOnly);
+        let mut recv = UpdateReceiver::new(UpdateMode::PatchOnly);
+        for snap in &snaps {
+            let u = pipe.encode(snap);
+            let got = recv.apply(&u).unwrap();
+            assert_eq!(got.pool.weights, snap.pool.weights);
+            assert!(!got.pool.has_optimizer_state());
+        }
+    }
+
+    #[test]
+    fn quant_modes_reconstruct_within_bucket() {
+        for mode in [UpdateMode::Quant, UpdateMode::QuantPatch] {
+            let snaps = trained_rounds(3, 300);
+            let mut pipe = UpdatePipeline::new(mode);
+            let mut recv = UpdateReceiver::new(mode);
+            recv.set_template(snaps[0].clone());
+            for snap in &snaps {
+                let u = pipe.encode(snap);
+                let got = recv.apply(&u).unwrap();
+                let max_err = got
+                    .pool
+                    .weights
+                    .iter()
+                    .zip(&snap.pool.weights)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(max_err < 1e-3, "{mode:?} max_err {max_err}");
+            }
+        }
+    }
+
+    #[test]
+    fn table4_ordering_of_update_sizes() {
+        // steady-state rounds: raw > quant > patch > quant+patch
+        let snaps = trained_rounds(3, 400);
+        let mut sizes = std::collections::HashMap::new();
+        for mode in UpdateMode::ALL {
+            let mut pipe = UpdatePipeline::new(mode);
+            let mut last = 0usize;
+            for snap in &snaps {
+                last = pipe.encode(snap).bytes.len();
+            }
+            sizes.insert(mode, last);
+        }
+        let raw = sizes[&UpdateMode::Raw];
+        let q = sizes[&UpdateMode::Quant];
+        let p = sizes[&UpdateMode::PatchOnly];
+        let qp = sizes[&UpdateMode::QuantPatch];
+        assert!(q < raw, "quant {q} !< raw {raw}");
+        assert!(p < raw, "patch {p} !< raw {raw}");
+        assert!(qp < q && qp < p, "q+p {qp} !< min(q {q}, p {p})");
+    }
+
+    #[test]
+    fn channel_ledger() {
+        let mut ch = SimulatedChannel::with_bandwidth(1_000_000.0, 0.01);
+        let u = WireUpdate {
+            mode: UpdateMode::Raw,
+            bytes: vec![0; 500_000],
+            encode_seconds: 0.0,
+        };
+        let secs = ch.ship(&u);
+        assert!((secs - 0.51).abs() < 1e-9);
+        ch.ship(&u);
+        assert_eq!(ch.total_bytes, 1_000_000);
+        assert_eq!(ch.messages, 2);
+    }
+
+    #[test]
+    fn receiver_without_template_errors_gracefully() {
+        let snaps = trained_rounds(1, 100);
+        let mut pipe = UpdatePipeline::new(UpdateMode::Quant);
+        let mut recv = UpdateReceiver::new(UpdateMode::Quant);
+        let u = pipe.encode(&snaps[0]);
+        assert!(recv.apply(&u).is_err());
+    }
+
+    #[test]
+    fn reconstructed_model_predicts_close_to_original() {
+        let snaps = trained_rounds(2, 2000);
+        let mut pipe = UpdatePipeline::new(UpdateMode::QuantPatch);
+        let mut recv = UpdateReceiver::new(UpdateMode::QuantPatch);
+        recv.set_template(snaps[0].clone());
+        let mut got = None;
+        for snap in &snaps {
+            got = Some(recv.apply(&pipe.encode(snap)).unwrap());
+        }
+        let got = got.unwrap();
+        let orig = snaps.last().unwrap();
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 32, 1 << 10);
+        let mut w1 = Workspace::new();
+        let mut w2 = Workspace::new();
+        for _ in 0..200 {
+            let ex = s.next_example();
+            let a = orig.predict(&ex, &mut w1);
+            let b = got.predict(&ex, &mut w2);
+            assert!((a - b).abs() < 0.01, "pred drift {a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Log-bucketed latency histogram for serving metrics (p50/p90/p99).
+//!
+//! Serving latencies span nanoseconds to milliseconds, so buckets grow
+//! geometrically: bucket i covers [lo * g^i, lo * g^(i+1)).
+
+/// Fixed-size geometric histogram over nanosecond values.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u128,
+    max_ns: u64,
+    min_ns: u64,
+    lo_ns: f64,
+    growth: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// 128 buckets from 50 ns to ~1.7 s with ~14% resolution.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; 128],
+            total: 0,
+            sum_ns: 0,
+            max_ns: 0,
+            min_ns: u64::MAX,
+            lo_ns: 50.0,
+            growth: 1.14,
+        }
+    }
+
+    fn bucket(&self, ns: u64) -> usize {
+        if (ns as f64) < self.lo_ns {
+            return 0;
+        }
+        let b = ((ns as f64 / self.lo_ns).ln() / self.growth.ln()) as usize;
+        b.min(self.counts.len() - 1)
+    }
+
+    /// Record one observation in nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        let b = self.bucket(ns);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+        self.min_ns = self.min_ns.min(ns);
+    }
+
+    /// Record a `Duration`.
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.total as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Approximate quantile (upper edge of the containing bucket).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.lo_ns * self.growth.powi(i as i32 + 1);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    /// Merge another histogram into this one (same geometry by
+    /// construction).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p90={:.1}us p99={:.1}us max={:.1}us",
+            self.total,
+            self.mean_ns() / 1e3,
+            self.quantile_ns(0.50) / 1e3,
+            self.quantile_ns(0.90) / 1e3,
+            self.quantile_ns(0.99) / 1e3,
+            self.max_ns as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0.0);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record_ns(i * 100);
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p90 = h.quantile_ns(0.9);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        // p50 of uniform 100ns..1ms should land near 500_000ns (±bucket).
+        assert!((300_000.0..800_000.0).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(100);
+        h.record_ns(300);
+        assert_eq!(h.mean_ns(), 200.0);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for _ in 0..50 {
+            a.record_ns(1_000);
+            b.record_ns(100_000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert!(a.quantile_ns(0.9) > 50_000.0);
+    }
+
+    #[test]
+    fn huge_values_clamp_to_last_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(u64::MAX / 2);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_ns(1.0) > 0.0);
+    }
+}

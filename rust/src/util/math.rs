@@ -1,0 +1,140 @@
+//! Numerically careful scalar math shared across blocks and evaluators.
+
+/// Logistic sigmoid with clamping to avoid overflow in `exp`.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    let x = x.clamp(-30.0, 30.0);
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Binary cross-entropy for a predicted probability `p` and label `y`
+/// in {0, 1}.  Probabilities are clamped away from 0/1.
+#[inline]
+pub fn logloss(p: f32, y: f32) -> f64 {
+    let p = p.clamp(1e-7, 1.0 - 1e-7) as f64;
+    let y = y as f64;
+    -(y * p.ln() + (1.0 - y) * (1.0 - p).ln())
+}
+
+/// Relative Information Gain against a base rate: 1 - LL(model)/LL(base).
+/// The paper reports RIG alongside AUC/logloss.
+pub fn rig(model_ll: f64, base_rate: f64, n: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let b = base_rate.clamp(1e-7, 1.0 - 1e-7);
+    let base_ll = -(b * b.ln() + (1.0 - b) * (1.0 - b).ln());
+    if base_ll == 0.0 {
+        return 0.0;
+    }
+    1.0 - (model_ll / n as f64) / base_ll
+}
+
+/// `round` to a number of decimal places — the paper's α/β rounding of
+/// quantization bounds ("minimum and maximum are rounded to α and β
+/// decimals").
+#[inline]
+pub fn round_decimals(x: f32, decimals: u32) -> f32 {
+    let m = 10f64.powi(decimals as i32);
+    ((x as f64 * m).round() / m) as f32
+}
+
+/// ReLU.
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    if x > 0.0 {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Mean and (population) standard deviation of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Median of a slice (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let m = v.len() / 2;
+    if v.len() % 2 == 1 {
+        v[m]
+    } else {
+        0.5 * (v[m - 1] + v[m])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+        assert!(sigmoid(100.0) > 0.999);
+        assert!(sigmoid(-100.0) < 0.001);
+        assert!(sigmoid(f32::MAX).is_finite());
+    }
+
+    #[test]
+    fn sigmoid_monotone() {
+        let mut prev = sigmoid(-10.0);
+        for i in -99..100 {
+            let cur = sigmoid(i as f32 * 0.1);
+            assert!(cur >= prev);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn logloss_perfect_and_wrong() {
+        assert!(logloss(0.999999, 1.0) < 1e-4);
+        assert!(logloss(0.000001, 1.0) > 10.0);
+        assert!(logloss(0.5, 1.0) > 0.69 && logloss(0.5, 1.0) < 0.70);
+    }
+
+    #[test]
+    fn logloss_finite_at_extremes() {
+        assert!(logloss(0.0, 1.0).is_finite());
+        assert!(logloss(1.0, 0.0).is_finite());
+    }
+
+    #[test]
+    fn rig_zero_for_base_rate_predictor() {
+        // A model predicting exactly the base rate has RIG 0.
+        let n = 1000;
+        let base = 0.3;
+        let ll: f64 = (0..n)
+            .map(|i| logloss(0.3, if i < 300 { 1.0 } else { 0.0 }))
+            .sum();
+        let r = rig(ll, base, n);
+        assert!(r.abs() < 1e-3, "rig={r}");
+    }
+
+    #[test]
+    fn round_decimals_works() {
+        assert_eq!(round_decimals(1.23456, 2), 1.23);
+        assert_eq!(round_decimals(-0.0049, 2), -0.0);
+        assert_eq!(round_decimals(9.996, 2), 10.0);
+    }
+
+    #[test]
+    fn median_and_mean_std() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-9);
+        assert!((s - 2.0).abs() < 1e-9);
+    }
+}

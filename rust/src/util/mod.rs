@@ -1,0 +1,10 @@
+//! Small self-contained utilities: PRNG, math, histograms, varints,
+//! JSON, timing.  The offline build environment ships no `rand`,
+//! `serde` or `criterion`, so these substrates are implemented here.
+
+pub mod histogram;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod timer;
+pub mod varint;

@@ -1,0 +1,255 @@
+//! Deterministic PRNG (PCG-XSH-RR 64/32) plus sampling helpers.
+//!
+//! Everything in the engine that needs randomness — weight init,
+//! synthetic data, AutoML search, property tests — goes through this so
+//! runs are reproducible from a single seed.
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid for our purposes.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Seed-only constructor (stream 54).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 54)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with f64 resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f32().max(1e-12);
+        let u2 = self.next_f32();
+        (-2.0 * (u1 as f64).ln()).sqrt() as f32
+            * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Pick a uniformly random element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len() as u32) as usize]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            items.swap(i, j);
+        }
+    }
+}
+
+/// Zipf-like sampler over `n` ranks with exponent `s`, using the
+/// rejection-inversion method of Hörmann & Derflinger.  Categorical
+/// feature values in CTR traffic are heavily skewed; this drives the
+/// synthetic generators.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dist: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1);
+        let h = |x: f64, s: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                x.ln()
+            } else {
+                (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        let h_x1 = h(1.5, s) - 1.0f64.powf(-s);
+        let h_n = h(n as f64 + 0.5, s);
+        Zipf { n, s, h_x1, h_n, dist: h_n - h_x1 }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        if (self.s - 1.0).abs() < 1e-9 {
+            x.exp()
+        } else {
+            (1.0 + x * (1.0 - self.s)).powf(1.0 / (1.0 - self.s))
+        }
+    }
+
+    /// Draw a rank in [1, n], rank 1 most likely.
+    pub fn sample(&self, rng: &mut Pcg32) -> u64 {
+        loop {
+            let u = self.h_x1 + rng.next_f64() * self.dist;
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            // Accept k with probability proportional to its true mass.
+            let ratio = (k).powf(-self.s);
+            let approx = self.h_inv(self.h_x1 + rng.next_f64() * self.dist);
+            if (k - x).abs() <= 0.5 || ratio >= approx.powf(-self.s) * 0.5 {
+                return k as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg32::seeded(9);
+        let mut b = Pcg32::seeded(9);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg32::seeded(3);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Pcg32::seeded(4);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut r = Pcg32::seeded(5);
+        let n = 50_000;
+        let (mut s, mut s2) = (0f64, 0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_rank1_most_frequent() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = Pcg32::seeded(6);
+        let mut c1 = 0;
+        let mut c100 = 0;
+        for _ in 0..20_000 {
+            match z.sample(&mut r) {
+                1 => c1 += 1,
+                100 => c100 += 1,
+                _ => {}
+            }
+        }
+        assert!(c1 > c100 * 5, "c1={c1} c100={c100}");
+    }
+
+    #[test]
+    fn zipf_in_range() {
+        let z = Zipf::new(50, 1.3);
+        let mut r = Pcg32::seeded(7);
+        for _ in 0..10_000 {
+            let k = z.sample(&mut r);
+            assert!((1..=50).contains(&k));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(8);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

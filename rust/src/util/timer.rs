@@ -1,0 +1,108 @@
+//! Timing helpers for benchmarks and perf logging.
+
+use std::time::{Duration, Instant};
+
+/// Scoped stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed().as_secs_f64())
+}
+
+/// Measure a closure's median runtime over `reps` repetitions after
+/// `warmup` unmeasured runs.  The poor man's criterion used by the
+/// `benches/` harness (criterion is unavailable offline).
+pub fn median_time<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Pretty-print a duration in adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else if secs < 7200.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else if secs < 48.0 * 3600.0 {
+        format!("{:.1}h", secs / 3600.0)
+    } else {
+        format!("{:.1}d", secs / 86400.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let s = Stopwatch::new();
+        let a = s.elapsed();
+        let b = s.elapsed();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn median_time_positive() {
+        let t = median_time(1, 5, || (0..1000).sum::<u64>());
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("us"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+        assert!(fmt_duration(300.0).ends_with('m'));
+        assert!(fmt_duration(7200.0).ends_with('h'));
+        assert!(fmt_duration(200_000.0).ends_with('d'));
+    }
+}

@@ -1,0 +1,133 @@
+//! LEB128-style variable-length integers.
+//!
+//! The weight patcher (§6 of the paper) stores *relative* byte offsets
+//! and run lengths as "custom integer types — instead of storing whole
+//! ints, compressed versions (small ints are impacted the most) are
+//! stored".  This module is that custom integer type: unsigned LEB128,
+//! 7 bits per byte, little-endian groups, high bit = continuation.
+
+/// Append `v` to `out` as LEB128. Returns the number of bytes written.
+pub fn write_u64(out: &mut Vec<u8>, mut v: u64) -> usize {
+    let mut n = 0;
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        n += 1;
+        if v == 0 {
+            out.push(byte);
+            return n;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode a LEB128 value from `buf[pos..]`, advancing `pos`.
+/// Returns `None` on truncated or oversized (>10 byte) input.
+pub fn read_u64(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf.get(*pos)?;
+        *pos += 1;
+        if shift == 63 && byte > 1 {
+            return None; // overflow
+        }
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return None;
+        }
+    }
+}
+
+/// Encoded size without writing.
+pub fn size_u64(v: u64) -> usize {
+    if v == 0 {
+        return 1;
+    }
+    (64 - v.leading_zeros() as usize).div_ceil(7)
+}
+
+/// ZigZag-encode a signed value so small magnitudes stay small.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_edges() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            let n = write_u64(&mut buf, v);
+            assert_eq!(n, buf.len());
+            assert_eq!(n, size_u64(v));
+            let mut pos = 0;
+            assert_eq!(read_u64(&buf, &mut pos), Some(v));
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn small_values_one_byte() {
+        for v in 0..128u64 {
+            assert_eq!(size_u64(v), 1);
+        }
+        assert_eq!(size_u64(128), 2);
+    }
+
+    #[test]
+    fn truncated_returns_none() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX);
+        buf.pop();
+        let mut pos = 0;
+        assert_eq!(read_u64(&buf, &mut pos), None);
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        let mut pos = 0;
+        assert_eq!(read_u64(&[], &mut pos), None);
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, -1, 1, -64, 63, i64::MIN, i64::MAX, -123456789] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        // small negatives stay small
+        assert!(size_u64(zigzag(-1)) == 1);
+        assert!(size_u64(zigzag(-60)) == 1);
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        let mut rng = Pcg32::seeded(11);
+        let mut buf = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..1000 {
+            let v = rng.next_u64() >> (rng.below(64));
+            vals.push(v);
+            write_u64(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(read_u64(&buf, &mut pos), Some(v));
+        }
+        assert_eq!(pos, buf.len());
+    }
+}

@@ -1,0 +1,186 @@
+//! End-to-end production-loop integration test:
+//!
+//!   online train → snapshot → quantize → patch → ship over simulated
+//!   channel → apply at the serving DC → hot-swap → serve
+//!
+//! asserting (a) reconstruction fidelity, (b) Table-4-shaped bandwidth
+//! savings, (c) the swapped model actually serves the new weights.
+
+use std::sync::Arc;
+
+use fwumious::config::{ModelConfig, ServeConfig};
+use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
+use fwumious::model::regressor::Regressor;
+use fwumious::model::Workspace;
+use fwumious::serve::router::Router;
+use fwumious::serve::server::ServingEngine;
+use fwumious::serve::trace::TraceGenerator;
+use fwumious::serve::ModelHandle;
+use fwumious::transfer::{
+    SimulatedChannel, UpdateMode, UpdatePipeline, UpdateReceiver,
+};
+
+#[test]
+fn online_rounds_through_quant_patch_channel_to_serving() {
+    // Production regime: the hashed weight space is much larger than
+    // the per-round update footprint (the paper's 5-minute windows
+    // touch a small fraction of a multi-GB model).
+    let buckets = 1u32 << 15;
+    let cfg = ModelConfig::deep_ffm(6, 2, buckets, &[8]);
+    let mut trainer_reg = Regressor::new(&cfg);
+    let mut ws = Workspace::new();
+    let mut stream =
+        SyntheticStream::with_buckets(DatasetSpec::tiny(), 77, buckets);
+    // tiny spec has 4 fields; rebuild a 6-field-compatible stream by
+    // using criteo-like shrunk spec instead
+    let mut spec = DatasetSpec::tiny();
+    spec.cat_fields = 5; // 1 cont + 5 cat = 6 fields
+    stream = SyntheticStream::with_buckets(spec, 77, buckets);
+
+    // serving side
+    let handle = ModelHandle::new(trainer_reg.clone());
+    let router = Router::new(2);
+    router.register("ctr", handle.clone());
+    let engine = ServingEngine::start(
+        router,
+        ServeConfig {
+            workers: 2,
+            max_batch: 64,
+            max_wait_us: 100,
+            context_cache_entries: 1024,
+        },
+    );
+
+    // transfer plane
+    let mut pipe = UpdatePipeline::new(UpdateMode::QuantPatch);
+    let mut recv = UpdateReceiver::new(UpdateMode::QuantPatch);
+    recv.set_template(trainer_reg.clone());
+    let mut channel = SimulatedChannel::with_bandwidth(10_000_000.0, 0.01);
+    let mut raw_channel = SimulatedChannel::with_bandwidth(10_000_000.0, 0.01);
+
+    let mut gen = TraceGenerator::new(5, 6, 3, buckets, 4);
+    let mut update_sizes = Vec::new();
+
+    for round in 0..4 {
+        // 1. online training round (small relative to the weight space)
+        for _ in 0..1000 {
+            let ex = stream.next_example();
+            trainer_reg.learn(&ex, &mut ws);
+        }
+        // 2. encode + ship
+        let update = pipe.encode(&trainer_reg);
+        update_sizes.push(update.bytes.len());
+        channel.ship(&update);
+        raw_channel.ship(&fwumious::transfer::WireUpdate {
+            mode: UpdateMode::Raw,
+            bytes: fwumious::model::io::to_bytes(&trainer_reg, false),
+            encode_seconds: 0.0,
+        });
+        // 3. receive + reconstruct + hot-swap
+        let reconstructed = recv.apply(&update).unwrap();
+        let max_err = reconstructed
+            .pool
+            .weights
+            .iter()
+            .zip(&trainer_reg.pool.weights)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "round {round}: reconstruction err {max_err}");
+        handle.swap(reconstructed);
+
+        // 4. serve against the fresh weights
+        let req = gen.next_request("ctr");
+        let resp = engine.score(req.clone()).unwrap();
+        assert_eq!(resp.scores.len(), 4);
+        // serving scores match the reconstructed-model scores (within
+        // quantization error translated through sigmoid)
+        let current = handle.load();
+        let mut ws2 = Workspace::new();
+        let cp = current.context_partial(&req.context);
+        for (i, cand) in req.candidates.iter().enumerate() {
+            let direct = current.predict_with_partial(&cp, cand, &mut ws2);
+            assert!((direct - resp.scores[i]).abs() < 1e-6);
+        }
+    }
+
+    // Table-4 shape: steady-state quant+patch updates are far smaller
+    // than raw weight files.
+    let steady = *update_sizes.last().unwrap();
+    let raw_per_round = raw_channel.total_bytes / raw_channel.messages;
+    assert!(
+        (steady as u64) < raw_per_round / 4,
+        "quant+patch {steady} bytes !≪ raw {raw_per_round} bytes"
+    );
+    // bandwidth ledger consistency
+    assert_eq!(channel.messages, 4);
+    assert!(channel.total_bytes < raw_channel.total_bytes);
+
+    let stats = engine.shutdown();
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.requests, 4);
+}
+
+#[test]
+fn all_update_modes_converge_to_same_serving_behaviour() {
+    let buckets = 1u32 << 10;
+    let cfg = ModelConfig::ffm(4, 2, buckets);
+    // train one model
+    let mut reg = Regressor::new(&cfg);
+    let mut ws = Workspace::new();
+    let mut stream = SyntheticStream::with_buckets(DatasetSpec::tiny(), 9, buckets);
+    for _ in 0..3000 {
+        let ex = stream.next_example();
+        reg.learn(&ex, &mut ws);
+    }
+    // ship through each mode; all reconstructions must agree within
+    // quantization tolerance
+    let test: Vec<_> = (0..300).map(|_| stream.next_example()).collect();
+    let mut baseline: Option<Vec<f32>> = None;
+    for mode in UpdateMode::ALL {
+        let mut pipe = UpdatePipeline::new(mode);
+        let mut recv = UpdateReceiver::new(mode);
+        recv.set_template(Regressor::new(&cfg));
+        let got = recv.apply(&pipe.encode(&reg)).unwrap();
+        let scores: Vec<f32> = test
+            .iter()
+            .map(|ex| got.predict(ex, &mut ws))
+            .collect();
+        match &baseline {
+            None => baseline = Some(scores),
+            Some(base) => {
+                for (a, b) in base.iter().zip(&scores) {
+                    assert!((a - b).abs() < 5e-3, "{mode:?}: {a} vs {b}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hogwild_then_transfer_then_serve() {
+    use fwumious::train::hogwild::{train_chunk, HogwildConfig};
+    let buckets = 1u32 << 10;
+    let cfg = ModelConfig::deep_ffm(4, 2, buckets, &[8]);
+    let mut reg = Regressor::new(&cfg);
+    let mut stream = SyntheticStream::with_buckets(DatasetSpec::tiny(), 11, buckets);
+    let chunk = stream.take_examples(10_000);
+    let stats = train_chunk(&mut reg, &chunk, HogwildConfig { threads: 4 }, 2000);
+    assert_eq!(stats.examples, 10_000);
+
+    let mut pipe = UpdatePipeline::new(UpdateMode::PatchOnly);
+    let mut recv = UpdateReceiver::new(UpdateMode::PatchOnly);
+    let served = recv.apply(&pipe.encode(&reg)).unwrap();
+    assert_eq!(served.pool.weights, reg.pool.weights);
+
+    let handle = ModelHandle::new(served);
+    let router = Router::new(1);
+    router.register("m", handle);
+    let engine = ServingEngine::start(router, ServeConfig::default());
+    let mut gen = TraceGenerator::new(3, 4, 2, buckets, 8);
+    for _ in 0..50 {
+        let req = gen.next_request("m");
+        let resp = engine.score(req).unwrap();
+        assert!(resp.scores.iter().all(|s| s.is_finite()));
+    }
+    assert_eq!(engine.shutdown().errors, 0);
+}

@@ -1,0 +1,180 @@
+//! The three-layer equivalence triangle (DESIGN.md §2):
+//!
+//!   L1 (Pallas kernel) == L2 (JAX model)  — checked by pytest
+//!   L2 (JAX model)     == golden vectors  — `python -m compile.golden`
+//!   golden             == PJRT execution  — `pjrt_matches_golden`
+//!   golden             == Rust native     — `native_forward_matches_golden`
+//!
+//! Passing all four proves the Rust serving hot path computes exactly
+//! the same function as the JAX/Pallas definition, and that the AOT
+//! artifact loaded through the xla crate is faithful.
+//!
+//! Requires `make artifacts` (tests self-skip when artifacts are absent).
+
+use fwumious::config::ModelConfig;
+use fwumious::feature::{Example, FeatureSlot};
+use fwumious::model::regressor::Regressor;
+use fwumious::model::Workspace;
+use fwumious::runtime::{
+    default_artifact_dir, load_goldens, ArgValue, Golden, Manifest, PjrtEngine,
+};
+
+fn artifacts_ready() -> bool {
+    default_artifact_dir().join("golden.json").exists()
+}
+
+/// Build a native Regressor whose weight pool holds the golden tables,
+/// in direct-index mode (golden idx values ARE bucket indices).
+fn native_from_golden(g: &Golden) -> Regressor {
+    let cfg = if g.hidden.is_empty() {
+        ModelConfig::ffm(g.fields, g.latent_dim, g.buckets as u32)
+    } else {
+        ModelConfig::deep_ffm(g.fields, g.latent_dim, g.buckets as u32, &g.hidden)
+    };
+    let mut reg = Regressor::new(&cfg);
+    let l = reg.layout.clone();
+    // LR table
+    reg.pool.weights[l.lr_off..l.lr_off + l.lr_len].copy_from_slice(&g.lr_table);
+    // FFM table: [N, F, K] row-major == pool's (bucket, toward, k) order
+    reg.pool.weights[l.ffm_off..l.ffm_off + l.ffm_len].copy_from_slice(&g.ffm_table);
+    // MLP params: (W1, b1, ..., w_out, b_out) in layout order
+    let mut mi = 0;
+    for lay in &l.layers {
+        let w = &g.mlp[mi];
+        reg.pool.weights[lay.w_off..lay.w_off + lay.rows * lay.cols]
+            .copy_from_slice(w);
+        let b = &g.mlp[mi + 1];
+        reg.pool.weights[lay.b_off..lay.b_off + lay.cols].copy_from_slice(b);
+        mi += 2;
+    }
+    if !g.hidden.is_empty() {
+        reg.pool.weights[l.w_out_off..l.w_out_off + l.w_out_len]
+            .copy_from_slice(&g.mlp[mi]);
+        reg.pool.weights[l.b_out_off] = g.mlp[mi + 1][0];
+    }
+    reg
+}
+
+fn golden_example(g: &Golden, b: usize) -> Example {
+    let slots = (0..g.fields)
+        .map(|f| FeatureSlot {
+            field: f as u16,
+            bucket: g.idx[b * g.fields + f] as u32,
+            value: g.vals[b * g.fields + f],
+        })
+        .collect();
+    Example { label: f32::NAN, importance: 1.0, slots }
+}
+
+#[test]
+fn native_forward_matches_golden() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let goldens = load_goldens(&default_artifact_dir()).unwrap();
+    assert!(goldens.len() >= 2, "want deep + ffm goldens");
+    for g in &goldens {
+        let reg = native_from_golden(g);
+        let mut ws = Workspace::new();
+        for b in 0..g.batch {
+            let ex = golden_example(g, b);
+            let p = reg.predict(&ex, &mut ws);
+            let want = g.probs[b];
+            assert!(
+                (p - want).abs() < 1e-5,
+                "{} example {b}: native {p} vs golden {want}",
+                g.name
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_golden() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir).unwrap();
+    let goldens = load_goldens(&dir).unwrap();
+    let engine = PjrtEngine::cpu().unwrap();
+    for g in &goldens {
+        let compiled = engine.compile(&manifest, &g.name).unwrap();
+        let mut argv = vec![
+            ArgValue::F32(g.lr_table.clone()),
+            ArgValue::F32(g.ffm_table.clone()),
+        ];
+        for m in &g.mlp {
+            argv.push(ArgValue::F32(m.clone()));
+        }
+        argv.push(ArgValue::I32(g.idx.clone()));
+        argv.push(ArgValue::F32(g.vals.clone()));
+        let probs = compiled.run(&argv).unwrap();
+        assert_eq!(probs.len(), g.batch);
+        for (b, (&got, &want)) in probs.iter().zip(&g.probs).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-5,
+                "{} example {b}: pjrt {got} vs golden {want}",
+                g.name
+            );
+        }
+    }
+}
+
+#[test]
+fn native_and_pjrt_agree_on_fresh_inputs() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Same golden weights, NEW random indices/values: agreement must
+    // hold beyond the exported batch.
+    use fwumious::util::rng::Pcg32;
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir).unwrap();
+    let goldens = load_goldens(&dir).unwrap();
+    let engine = PjrtEngine::cpu().unwrap();
+    let mut rng = Pcg32::seeded(2024);
+    for g in &goldens {
+        let reg = native_from_golden(g);
+        let compiled = engine.compile(&manifest, &g.name).unwrap();
+        let mut ws = Workspace::new();
+        for _round in 0..3 {
+            let idx: Vec<i32> = (0..g.batch * g.fields)
+                .map(|_| rng.below(g.buckets as u32) as i32)
+                .collect();
+            let vals: Vec<f32> = (0..g.batch * g.fields)
+                .map(|_| rng.range_f32(0.1, 2.0))
+                .collect();
+            let mut argv = vec![
+                ArgValue::F32(g.lr_table.clone()),
+                ArgValue::F32(g.ffm_table.clone()),
+            ];
+            for m in &g.mlp {
+                argv.push(ArgValue::F32(m.clone()));
+            }
+            argv.push(ArgValue::I32(idx.clone()));
+            argv.push(ArgValue::F32(vals.clone()));
+            let pjrt = compiled.run(&argv).unwrap();
+            for b in 0..g.batch {
+                let slots = (0..g.fields)
+                    .map(|f| FeatureSlot {
+                        field: f as u16,
+                        bucket: idx[b * g.fields + f] as u32,
+                        value: vals[b * g.fields + f],
+                    })
+                    .collect();
+                let ex = Example { label: f32::NAN, importance: 1.0, slots };
+                let native = reg.predict(&ex, &mut ws);
+                assert!(
+                    (native - pjrt[b]).abs() < 1e-5,
+                    "{} fresh example {b}: native {native} vs pjrt {}",
+                    g.name,
+                    pjrt[b]
+                );
+            }
+        }
+    }
+}

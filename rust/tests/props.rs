@@ -1,0 +1,216 @@
+//! Cross-module property tests (the offline stand-in for proptest; see
+//! `fwumious::testutil::prop`).  Each property states a system
+//! invariant the paper's machinery depends on.
+
+use fwumious::config::ModelConfig;
+use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
+use fwumious::eval::auc;
+use fwumious::model::io;
+use fwumious::model::regressor::Regressor;
+use fwumious::model::Workspace;
+use fwumious::patch::{apply_patch, make_patch, Compression};
+use fwumious::quant;
+use fwumious::testutil::prop;
+use fwumious::util::varint;
+
+/// §6: apply(old, diff(old, new)) == new for arbitrary buffers.
+#[test]
+fn prop_patch_identity() {
+    prop(80, |g| {
+        let old = g.bytes(0..4096);
+        let mut new = old.clone();
+        // structured mutations typical of weight drift: 4-byte words
+        for _ in 0..g.usize_in(0..100) {
+            if new.len() < 4 {
+                break;
+            }
+            let i = g.usize_in(0..new.len() - 3);
+            for b in 0..4 {
+                new[i + b] = g.u32() as u8;
+            }
+        }
+        let p = make_patch(&old, &new, Compression::Gzip);
+        assert_eq!(apply_patch(&old, &p).unwrap(), new);
+    });
+}
+
+/// §6: quant error ≤ bucket/2 and dequant(quant(x)) is idempotent
+/// (quantizing an already-quantized vector is lossless).
+#[test]
+fn prop_quant_idempotent() {
+    prop(40, |g| {
+        let scale = g.f32_in(0.05, 4.0);
+        let w = g.vec_normal(1..1500, scale);
+        let (h, c) = quant::quantize(&w, 2, 2);
+        let w1 = quant::dequantize(&h, &c);
+        for (a, b) in w.iter().zip(&w1) {
+            assert!((a - b).abs() <= h.bucket * 0.5 + 1e-5);
+        }
+        let (h2, c2) = quant::quantize(&w1, 2, 2);
+        let w2 = quant::dequantize(&h2, &c2);
+        for (a, b) in w1.iter().zip(&w2) {
+            assert!(
+                (a - b).abs() <= h2.bucket + 1e-5,
+                "re-quantization drifted: {a} vs {b}"
+            );
+        }
+    });
+}
+
+/// Model serialization: from_bytes(to_bytes(m)) == m for random
+/// trained models of every architecture.
+#[test]
+fn prop_model_io_roundtrip() {
+    prop(12, |g| {
+        let buckets = 1u32 << g.usize_in(6..10);
+        let fields = g.usize_in(2..6);
+        let k = g.usize_in(1..4);
+        let cfg = match g.usize_in(0..3) {
+            0 => ModelConfig::linear(fields, buckets),
+            1 => ModelConfig::ffm(fields, k, buckets),
+            _ => {
+                let h = vec![g.usize_in(2..10)];
+                ModelConfig::deep_ffm(fields, k, buckets, &h)
+            }
+        };
+        let mut reg = Regressor::new(&cfg);
+        let mut ws = Workspace::new();
+        let mut spec = DatasetSpec::tiny();
+        spec.cont_fields = 1.min(fields - 1);
+        spec.cat_fields = fields - spec.cont_fields;
+        let mut s = SyntheticStream::with_buckets(spec, g.u64(), buckets);
+        for _ in 0..200 {
+            let ex = s.next_example();
+            reg.learn(&ex, &mut ws);
+        }
+        let back = io::from_bytes(&io::to_bytes(&reg, true)).unwrap();
+        assert_eq!(back.pool.weights, reg.pool.weights);
+        assert_eq!(back.pool.acc, reg.pool.acc);
+    });
+}
+
+/// AUC invariances: monotone-affine score transforms preserve AUC;
+/// label flip maps a to 1-a.
+#[test]
+fn prop_auc_invariances() {
+    prop(40, |g| {
+        let n = g.usize_in(10..400);
+        let scores: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+        let labels: Vec<f32> = (0..n)
+            .map(|_| if g.bool() { 1.0 } else { 0.0 })
+            .collect();
+        let a = auc(&scores, &labels);
+        assert!((0.0..=1.0).contains(&a));
+        // affine transform
+        let s2: Vec<f32> = scores.iter().map(|v| v * 3.0 + 0.5).collect();
+        assert!((auc(&s2, &labels) - a).abs() < 1e-12);
+        // label flip
+        let flipped: Vec<f32> = labels.iter().map(|y| 1.0 - y).collect();
+        assert!((auc(&scores, &flipped) - (1.0 - a)).abs() < 1e-9);
+    });
+}
+
+/// Context-cache equivalence: for any split point C, cached partial +
+/// candidate completion == full forward.
+#[test]
+fn prop_context_split_equivalence() {
+    prop(15, |g| {
+        let buckets = 1u32 << 8;
+        let fields = g.usize_in(3..7);
+        let cfg = match g.usize_in(0..2) {
+            0 => ModelConfig::ffm(fields, g.usize_in(1..4), buckets),
+            _ => ModelConfig::deep_ffm(fields, g.usize_in(1..4), buckets, &[6]),
+        };
+        let mut reg = Regressor::new(&cfg);
+        let mut ws = Workspace::new();
+        let mut spec = DatasetSpec::tiny();
+        spec.cont_fields = 0;
+        spec.cat_fields = fields;
+        let mut s = SyntheticStream::with_buckets(spec, g.u64(), buckets);
+        for _ in 0..300 {
+            let ex = s.next_example();
+            reg.learn(&ex, &mut ws);
+        }
+        for _ in 0..20 {
+            let ex = s.next_example();
+            let c = g.usize_in(1..fields);
+            let full = reg.predict(&ex, &mut ws);
+            let cp = reg.context_partial(&ex.slots[..c]);
+            let via = reg.predict_with_partial(&cp, &ex.slots[c..], &mut ws);
+            assert!((full - via).abs() < 1e-5, "split {c}: {full} vs {via}");
+        }
+    });
+}
+
+/// Varint + zigzag total round-trip over adversarial values.
+#[test]
+fn prop_varint_roundtrip() {
+    prop(60, |g| {
+        let mut buf = Vec::new();
+        let vals: Vec<u64> = (0..g.usize_in(1..200))
+            .map(|_| g.u64() >> g.usize_in(0..64))
+            .collect();
+        for &v in &vals {
+            varint::write_u64(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(varint::read_u64(&buf, &mut pos), Some(v));
+        }
+        assert_eq!(pos, buf.len());
+        // zigzag
+        let signed: Vec<i64> = (0..50).map(|_| g.u64() as i64).collect();
+        for &s in &signed {
+            assert_eq!(varint::unzigzag(varint::zigzag(s)), s);
+        }
+    });
+}
+
+/// Training stability: no weight ever becomes non-finite across random
+/// hyperparameters (clamped sigmoid + AdaGrad must keep things sane).
+#[test]
+fn prop_training_stays_finite() {
+    prop(10, |g| {
+        let buckets = 1u32 << 8;
+        let mut cfg = ModelConfig::deep_ffm(4, 2, buckets, &[g.usize_in(2..12)]);
+        cfg.lr = g.f32_in(0.01, 0.9);
+        cfg.ffm_lr = g.f32_in(0.01, 0.9);
+        cfg.nn_lr = g.f32_in(0.01, 0.5);
+        cfg.power_t = g.f32_in(0.0, 0.6);
+        cfg.seed = g.u64();
+        let mut reg = Regressor::new(&cfg);
+        let mut ws = Workspace::new();
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), g.u64(), buckets);
+        for _ in 0..1500 {
+            let ex = s.next_example();
+            let p = reg.learn(&ex, &mut ws);
+            assert!(p.is_finite());
+        }
+        assert!(reg.pool.weights.iter().all(|w| w.is_finite()));
+    });
+}
+
+/// Hogwild with any thread count produces a usable (finite, learning)
+/// model — lost updates are tolerated, corruption is not.
+#[test]
+fn prop_hogwild_robustness() {
+    use fwumious::train::hogwild::{train_chunk, HogwildConfig};
+    prop(6, |g| {
+        let buckets = 1u32 << 8;
+        let cfg = ModelConfig::ffm(4, 2, buckets);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), g.u64(), buckets);
+        let chunk = s.take_examples(4000);
+        let mut reg = Regressor::new(&cfg);
+        let threads = g.usize_in(1..9);
+        train_chunk(&mut reg, &chunk, HogwildConfig { threads }, 1000);
+        assert!(reg.pool.weights.iter().all(|w| w.is_finite()));
+        // still predicts both classes
+        let mut ws = Workspace::new();
+        let preds: Vec<f32> = (0..200)
+            .map(|_| reg.predict(&s.next_example(), &mut ws))
+            .collect();
+        let spread = preds.iter().cloned().fold(f32::MIN, f32::max)
+            - preds.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread > 1e-4, "degenerate constant predictor");
+    });
+}

@@ -1,0 +1,164 @@
+//! Serving-layer integration: context-cache equivalence under load,
+//! SIMD on/off numeric agreement, multi-model routing, and throughput
+//! sanity on the full engine.
+
+use fwumious::config::{ModelConfig, ServeConfig};
+use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
+use fwumious::model::regressor::Regressor;
+use fwumious::model::Workspace;
+use fwumious::serve::router::Router;
+use fwumious::serve::server::ServingEngine;
+use fwumious::serve::trace::TraceGenerator;
+use fwumious::serve::{ModelHandle, Request};
+
+fn trained(cfg: &ModelConfig, seed: u64, n: usize) -> Regressor {
+    let mut reg = Regressor::new(cfg);
+    let mut ws = Workspace::new();
+    let mut spec = DatasetSpec::tiny();
+    spec.cat_fields = cfg.fields - spec.cont_fields;
+    let mut s = SyntheticStream::with_buckets(spec, seed, cfg.buckets);
+    for _ in 0..n {
+        let ex = s.next_example();
+        reg.learn(&ex, &mut ws);
+    }
+    reg
+}
+
+#[test]
+fn cached_and_uncached_engines_agree() {
+    let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+    let reg = trained(&cfg, 21, 3000);
+
+    let run = |cache: usize, trace_seed: u64| -> Vec<f32> {
+        let router = Router::new(2);
+        router.register("m", ModelHandle::new(reg.clone()));
+        let engine = ServingEngine::start(
+            router,
+            ServeConfig {
+                workers: 2,
+                max_batch: 32,
+                max_wait_us: 50,
+                context_cache_entries: cache,
+            },
+        );
+        let mut gen = TraceGenerator::new(trace_seed, 6, 3, 1 << 10, 4);
+        let mut all = Vec::new();
+        for _ in 0..300 {
+            let resp = engine.score(gen.next_request("m")).unwrap();
+            all.extend(resp.scores);
+        }
+        engine.shutdown();
+        all
+    };
+    let with_cache = run(4096, 5);
+    let without = run(0, 5);
+    assert_eq!(with_cache.len(), without.len());
+    for (a, b) in with_cache.iter().zip(&without) {
+        assert!((a - b).abs() < 1e-6, "cache changed scores: {a} vs {b}");
+    }
+}
+
+#[test]
+fn simd_and_scalar_serving_agree() {
+    let cfg = ModelConfig::deep_ffm(6, 4, 1 << 10, &[16]);
+    let reg = trained(&cfg, 23, 3000);
+    let mut gen = TraceGenerator::new(9, 6, 3, 1 << 10, 4);
+    let reqs: Vec<Request> = (0..100).map(|_| gen.next_request("m")).collect();
+
+    let run = |scalar: bool| -> Vec<f32> {
+        fwumious::simd::force_scalar(scalar);
+        let mut ws = Workspace::new();
+        let mut out = Vec::new();
+        for r in &reqs {
+            let cp = reg.context_partial(&r.context);
+            for c in &r.candidates {
+                out.push(reg.predict_with_partial(&cp, c, &mut ws));
+            }
+        }
+        fwumious::simd::force_scalar(false);
+        out
+    };
+    let simd = run(false);
+    let scalar = run(true);
+    for (a, b) in simd.iter().zip(&scalar) {
+        assert!((a - b).abs() < 1e-4, "simd {a} vs scalar {b}");
+    }
+}
+
+#[test]
+fn multi_model_routing() {
+    let cfg_a = ModelConfig::ffm(6, 2, 1 << 10);
+    let mut cfg_b = cfg_a.clone();
+    cfg_b.seed = 4242;
+    let reg_a = trained(&cfg_a, 31, 2000);
+    let reg_b = trained(&cfg_b, 32, 2000);
+    let router = Router::new(2);
+    router.register("a", ModelHandle::new(reg_a.clone()));
+    router.register("b", ModelHandle::new(reg_b.clone()));
+    let engine = ServingEngine::start(
+        router,
+        ServeConfig { workers: 2, ..Default::default() },
+    );
+    let mut gen = TraceGenerator::new(10, 6, 3, 1 << 10, 2);
+    let mut diffs = 0;
+    for _ in 0..100 {
+        let mut req = gen.next_request("a");
+        let ra = engine.score(req.clone()).unwrap();
+        req.model = "b".into();
+        let rb = engine.score(req).unwrap();
+        if ra
+            .scores
+            .iter()
+            .zip(&rb.scores)
+            .any(|(x, y)| (x - y).abs() > 1e-6)
+        {
+            diffs += 1;
+        }
+    }
+    assert!(diffs > 90, "different models must score differently ({diffs})");
+    assert_eq!(engine.shutdown().errors, 0);
+}
+
+#[test]
+fn engine_sustains_load_across_many_workers() {
+    let cfg = ModelConfig::deep_ffm(6, 2, 1 << 12, &[8]);
+    let reg = trained(&cfg, 41, 2000);
+    let router = Router::new(4);
+    router.register("m", ModelHandle::new(reg));
+    let engine = ServingEngine::start(
+        router,
+        ServeConfig {
+            workers: 4,
+            max_batch: 128,
+            max_wait_us: 100,
+            context_cache_entries: 8192,
+        },
+    );
+    let mut gen = TraceGenerator::new(12, 6, 3, 1 << 12, 8);
+    let n = 2000;
+    let t = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        pending.push(engine.submit(gen.next_request("m")).unwrap());
+        if pending.len() >= 256 {
+            for rx in pending.drain(..) {
+                rx.recv().unwrap().unwrap();
+            }
+        }
+    }
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let secs = t.elapsed().as_secs_f64();
+    let stats = engine.shutdown();
+    assert_eq!(stats.requests, n as u64);
+    assert_eq!(stats.candidates, (n * 8) as u64);
+    assert_eq!(stats.errors, 0);
+    assert!(stats.latency.as_ref().unwrap().count() == n as u64);
+    // loose sanity: thousands of requests per second even in debug
+    assert!(
+        (n as f64 / secs) > 500.0,
+        "throughput {:.0} req/s suspiciously low",
+        n as f64 / secs
+    );
+}
