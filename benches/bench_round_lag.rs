@@ -1,0 +1,82 @@
+//! Round-lag benchmark for the online deployment plane (§3 + §6).
+//!
+//! The operational metric of the always-online regime is the *publish
+//! lag*: how long after a training round closes is the serving layer
+//! scoring on the new weights?  lag = encode + wire + decode + swap.
+//! This bench drives [`fwumious::deploy::DeploymentLoop`] through
+//! steady-state rounds under each of the four Table-4 wire modes and
+//! reports the per-stage breakdown plus the bandwidth bill.
+//!
+//! Paper-shaped expectation: quantization + patching cut both bytes on
+//! the wire and wire seconds by ~an order of magnitude at the cost of
+//! milliseconds of encode/decode — so the lag is dominated by the link
+//! for Raw and by (cheap) CPU work for QuantPatch.
+
+use fwumious::config::{ModelConfig, ServeConfig};
+use fwumious::data::synthetic::DatasetSpec;
+use fwumious::deploy::{DeployConfig, DeploymentLoop};
+use fwumious::transfer::UpdateMode;
+use fwumious::util::math::median;
+
+fn main() {
+    let spec = DatasetSpec::criteo_like();
+    let buckets = 1u32 << 18;
+    let model = ModelConfig::deep_ffm(spec.fields(), 4, buckets, &[16]);
+    let rounds = 6;
+    let per_round = 20_000;
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get().min(4))
+        .unwrap_or(2);
+
+    println!(
+        "== round lag: train {} examples/round, {} rounds/mode, {} hogwild thread(s), 1 Gbps link ==\n",
+        per_round, rounds, threads
+    );
+    println!(
+        "{:<28} {:>10} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "mode", "update(B)", "%raw", "encode", "wire", "apply", "lag(s)"
+    );
+
+    for mode in UpdateMode::ALL {
+        let mut cfg = DeployConfig::new(model.clone(), spec.clone(), mode);
+        cfg.examples_per_round = per_round;
+        cfg.train_threads = threads;
+        cfg.holdout_examples = 0; // lag only; skip AUC evaluation
+        cfg.serve = ServeConfig { workers: 2, ..Default::default() };
+        let mut dl = DeploymentLoop::new(cfg);
+
+        let mut update_bytes = Vec::new();
+        let mut encode_s = Vec::new();
+        let mut wire_s = Vec::new();
+        let mut apply_s = Vec::new();
+        let mut lag_s = Vec::new();
+        let mut raw_bytes = 0usize;
+        for r in 0..rounds {
+            let rep = dl.run_round().expect("round failed");
+            if r == 0 {
+                continue; // bootstrap round ships full files in patch modes
+            }
+            update_bytes.push(rep.update_bytes as f64);
+            encode_s.push(rep.encode_seconds);
+            wire_s.push(rep.wire_seconds);
+            apply_s.push(rep.apply_seconds);
+            lag_s.push(rep.lag_seconds);
+            raw_bytes = rep.raw_bytes;
+        }
+        println!(
+            "{:<28} {:>10.0} {:>8.2}% {:>7.1}ms {:>8.4} {:>7.1}ms {:>10.4}",
+            mode.label(),
+            median(&update_bytes),
+            median(&update_bytes) / raw_bytes as f64 * 100.0,
+            median(&encode_s) * 1e3,
+            median(&wire_s),
+            median(&apply_s) * 1e3,
+            median(&lag_s)
+        );
+        dl.shutdown();
+    }
+    println!(
+        "\nexpected shape: raw lag ≈ full-file wire time; quant ≈ half of it;"
+    );
+    println!("patch modes collapse steady-state wire time — lag becomes CPU-bound.");
+}

@@ -1,109 +1,84 @@
-//! The production loop (§3 + §6 live): continuous online training
-//! rounds, each followed by quantize → patch → ship over a simulated
-//! inter-DC channel → apply → hot-swap into the serving layer — while
-//! requests keep flowing.
-//!
-//! Prints the per-round bandwidth ledger (Table 4 / Figure 6 live).
+//! The production loop (§3 + §6 live), now driven by the deployment
+//! plane subsystem: [`fwumious::deploy::DeploymentLoop`] owns the
+//! continuous train → encode → ship → decode → hot-swap rounds while
+//! this example keeps request traffic flowing against the serving
+//! engine and prints the per-round bandwidth/lag ledger (Table 4 /
+//! Figure 6 live).
 //!
 //! ```bash
 //! cargo run --release --example online_loop
 //! ```
 
 use fwumious::config::{ModelConfig, ServeConfig};
-use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
-use fwumious::model::regressor::Regressor;
-use fwumious::model::{io, Workspace};
-use fwumious::serve::router::Router;
-use fwumious::serve::server::ServingEngine;
+use fwumious::data::synthetic::DatasetSpec;
+use fwumious::deploy::{DeployConfig, DeploymentLoop};
 use fwumious::serve::trace::TraceGenerator;
-use fwumious::serve::ModelHandle;
-use fwumious::transfer::{SimulatedChannel, UpdateMode, UpdatePipeline, UpdateReceiver};
+use fwumious::transfer::UpdateMode;
 
 fn main() {
     let spec = DatasetSpec::avazu_like();
     let buckets = 1u32 << 18;
-    let cfg = ModelConfig::deep_ffm(spec.fields(), 4, buckets, &[16]);
-    let fields = cfg.fields;
+    let model = ModelConfig::deep_ffm(spec.fields(), 4, buckets, &[16]);
+    let fields = model.fields;
 
-    // training DC
-    let mut trainer = Regressor::new(&cfg);
-    let mut ws = Workspace::new();
-    let mut stream = SyntheticStream::with_buckets(spec, 7, buckets);
-    let mut pipeline = UpdatePipeline::new(UpdateMode::QuantPatch);
-    let mut raw_pipeline = UpdatePipeline::new(UpdateMode::Raw);
+    let mut cfg = DeployConfig::new(model, spec, UpdateMode::QuantPatch);
+    cfg.examples_per_round = 50_000;
+    cfg.train_threads = 2;
+    cfg.holdout_examples = 5_000;
+    cfg.serve = ServeConfig { workers: 4, ..Default::default() };
 
-    // serving DC
-    let handle = ModelHandle::new(trainer.clone());
-    let router = Router::new(4);
-    router.register("ctr", handle.clone());
-    let engine = ServingEngine::start(
-        router,
-        ServeConfig { workers: 4, ..Default::default() },
-    );
-    let mut receiver = UpdateReceiver::new(UpdateMode::QuantPatch);
-    receiver.set_template(trainer.clone());
-    let mut channel = SimulatedChannel::with_bandwidth(125_000_000.0, 0.03); // 1 Gbps
-    let mut gen = TraceGenerator::new(3, fields, fields / 2, buckets, 8);
-
-    let raw_bytes = io::to_bytes(&trainer, false).len();
+    let mut dl = DeploymentLoop::new(cfg);
     println!(
-        "model: {} weights, raw inference file {:.1} MB",
-        trainer.num_weights(),
-        raw_bytes as f64 / 1e6
+        "model: {} weights; serving '{}' on {} workers; wire mode: {}",
+        dl.trainer().num_weights(),
+        dl.cfg.model_name,
+        dl.cfg.serve.workers,
+        dl.cfg.mode.label()
     );
     println!(
         "{:<6} {:>10} {:>9} {:>9} {:>10} {:>9} {:>9}",
-        "round", "update(B)", "%of raw", "encode", "wire(s)", "serveAUC", "hit%"
+        "round", "update(B)", "%of raw", "encode", "lag(s)", "serveAUC", "hit%"
     );
 
+    let client = dl.client();
+    let mut gen = TraceGenerator::new(3, fields, fields / 2, buckets, 8);
     let rounds = 10;
-    let per_round = 50_000;
-    for round in 0..rounds {
-        // online training window (the paper's "every 5 minutes")
-        for _ in 0..per_round {
-            let ex = stream.next_example();
-            trainer.learn(&ex, &mut ws);
-        }
-        // encode + ship + apply + swap
-        let update = pipeline.encode(&trainer);
-        let raw = raw_pipeline.encode(&trainer);
-        let wire_secs = channel.ship(&update);
-        let fresh = receiver.apply(&update).expect("reconstruct");
-        handle.swap(fresh);
+    for _ in 0..rounds {
+        // one online training window + publish + swap
+        let r = dl.run_round().expect("round failed");
 
         // keep serving against the swapped model
-        let mut scores = Vec::new();
-        let mut labels = Vec::new();
         for _ in 0..2_000 {
-            let req = gen.next_request("ctr");
-            let resp = engine.score(req).expect("score");
-            // label the top candidate against the stream's ground truth
-            // (proxy: just collect score spread for an AUC-vs-self check)
-            scores.extend(resp.scores.iter().cloned());
-            labels.extend(resp.scores.iter().map(|&s| (s > 0.5) as i32 as f32));
+            let req = gen.next_request(&dl.cfg.model_name);
+            client.score(req).expect("score");
         }
-        let stats = engine.stats();
+        let stats = dl.engine().stats();
         println!(
-            "{:<6} {:>10} {:>8.2}% {:>8.0}ms {:>9.4} {:>9} {:>8.1}%",
-            round,
-            update.bytes.len(),
-            update.bytes.len() as f64 / raw.bytes.len() as f64 * 100.0,
-            update.encode_seconds * 1e3,
-            wire_secs,
-            "-",
+            "{:<6} {:>10} {:>8.2}% {:>8.0}ms {:>10.4} {:>9.4} {:>8.1}%",
+            r.round,
+            r.update_bytes,
+            r.update_bytes as f64 / r.raw_bytes as f64 * 100.0,
+            r.encode_seconds * 1e3,
+            r.lag_seconds,
+            r.holdout_auc,
             stats.cache_hit_rate() * 100.0
         );
     }
-    let stats = engine.shutdown();
+
+    let metrics = dl.metrics().clone();
+    let channel = dl.channel().clone();
+    drop(client);
+    let stats = dl.shutdown();
     println!(
-        "\ntotal shipped: {:.2} MB over {} rounds (raw would be {:.2} MB) — {:.0}x bandwidth saving",
+        "\ntotal shipped: {:.2} MB over {} rounds (raw would be {:.2} MB) — {:.1}x bandwidth saving",
         channel.total_bytes as f64 / 1e6,
-        rounds,
-        (raw_bytes * rounds) as f64 / 1e6,
-        (raw_bytes * rounds) as f64 / channel.total_bytes as f64
+        metrics.rounds,
+        metrics.raw_bytes_total as f64 / 1e6,
+        metrics.bandwidth_saving()
     );
     println!(
-        "served {} requests, {} errors, latency {}",
+        "mean publish lag {:.3}s; served {} requests, {} errors, latency {}",
+        metrics.mean_lag_seconds(),
         stats.requests,
         stats.errors,
         stats.latency.map(|l| l.summary()).unwrap_or_default()

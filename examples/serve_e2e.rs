@@ -20,7 +20,6 @@ use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::feature::{Example, FeatureSlot};
 use fwumious::model::regressor::Regressor;
 use fwumious::model::Workspace;
-use fwumious::runtime::{default_artifact_dir, load_goldens, ArgValue, Manifest, PjrtEngine};
 use fwumious::serve::router::Router;
 use fwumious::serve::server::ServingEngine;
 use fwumious::serve::trace::TraceGenerator;
@@ -34,7 +33,19 @@ fn main() {
 }
 
 /// Stage 1 — L1 (Pallas) == L2 (JAX) == PJRT == native Rust.
+/// Needs the `pjrt` feature (the xla crate); the hermetic default build
+/// skips straight to the native stages.
+#[cfg(not(feature = "pjrt"))]
 fn stage1_pjrt_cross_check() {
+    println!("== stage 1: AOT artifact cross-check (PJRT vs golden vs native)");
+    println!("   built without the `pjrt` feature — skipping (see rust/Cargo.toml)");
+}
+
+#[cfg(feature = "pjrt")]
+fn stage1_pjrt_cross_check() {
+    use fwumious::runtime::{
+        default_artifact_dir, load_goldens, ArgValue, Manifest, PjrtEngine,
+    };
     println!("== stage 1: AOT artifact cross-check (PJRT vs golden vs native)");
     let dir = default_artifact_dir();
     if !dir.join("golden.json").exists() {

@@ -89,13 +89,20 @@ SUBCOMMANDS:
     serve      score a synthetic request trace through the serving engine
                --model model.fw  --requests N  --workers N
                --no-context-cache  --no-simd
+    deploy     run the online deployment plane: continuous Hogwild
+               training rounds published through the transfer pipeline
+               and hot-swapped into a live serving engine
+               --mode raw|quant|patch|quantpatch  --rounds N
+               --examples N (per round)  --threads N (hogwild)
+               --workers N  --requests N (served per round)
+               --dataset criteo|avazu|kdd|tiny  --bits N
     automl     random hyperparameter search (Table 1 protocol)
                --configs N  --threads N  --dataset ...  --examples N
     quantize   quantize a model file        --in a.fw --out a.fwq
     patch      diff two model files         --old a.fw --new b.fw --out p.fwp
     apply      apply a patch                --old a.fw --patch p.fwp --out c.fw
     pjrt       run an AOT artifact against golden vectors
-               --artifacts DIR
+               --artifacts DIR   (needs a build with --features pjrt)
     bench      alias pointing at `cargo bench` harnesses
     help       this text
 ";

@@ -1,0 +1,353 @@
+//! Deterministic soak harness for the deployment plane.
+//!
+//! Runs N train→publish→swap rounds while traffic-driver threads score
+//! a fixed probe set through [`ServeClient`] clones, and checks the
+//! three §5/§6 invariants the paper's always-online regime depends on:
+//!
+//! 1. **Atomic swaps** — every served response matches, bit for bit,
+//!    the scores of exactly one published snapshot (the previous or the
+//!    freshly swapped one) — never a torn mix of two weight sets.
+//!    Expected scores are registered *before* each swap, so concurrent
+//!    traffic can always attribute a response to a known version.
+//! 2. **Bit-identical reconstruction** — after every round the
+//!    receiver's base file equals the sender's byte-for-byte, and for
+//!    the quantized modes the served weights are exactly the
+//!    dequantized receiver-side bytes.
+//! 3. **Learning continuity** — held-out AUC of the *served* model is
+//!    non-decreasing across rounds within a tolerance (publishing must
+//!    not regress the model).
+//!
+//! The harness is deterministic in its inputs (seeded streams, fixed
+//! probe set); Hogwild thread interleaving may perturb the trained
+//! weights, which the AUC tolerance absorbs.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::config::{ModelConfig, ServeConfig};
+use crate::data::synthetic::DatasetSpec;
+use crate::deploy::{DeployConfig, DeploymentLoop, RoundReport};
+use crate::model::regressor::Regressor;
+use crate::model::Workspace;
+use crate::quant;
+use crate::serve::server::{ServeClient, ServeStats};
+use crate::serve::trace::TraceGenerator;
+use crate::serve::Request;
+use crate::transfer::UpdateMode;
+
+/// Soak run parameters.
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    pub mode: UpdateMode,
+    /// Train→publish→swap rounds to run.
+    pub rounds: usize,
+    /// Examples per training round.
+    pub examples_per_round: usize,
+    /// Hogwild threads inside each round.
+    pub train_threads: usize,
+    /// Concurrent traffic-driver threads.
+    pub traffic_threads: usize,
+    /// Distinct probe requests in the fixed set.
+    pub probes: usize,
+    /// Base seed (streams, probes).
+    pub seed: u64,
+}
+
+impl SoakConfig {
+    /// A configuration small enough for `cargo test` yet exercising
+    /// real concurrency: 5 rounds, Hogwild ×2, 2 traffic threads.
+    pub fn quick(mode: UpdateMode) -> Self {
+        SoakConfig {
+            mode,
+            rounds: 5,
+            examples_per_round: 2_500,
+            train_threads: 2,
+            traffic_threads: 2,
+            probes: 16,
+            seed: 0x50a4,
+        }
+    }
+}
+
+/// Everything a soak run observed; see [`SoakReport::assert_healthy`].
+#[derive(Clone, Debug)]
+pub struct SoakReport {
+    pub mode: UpdateMode,
+    pub rounds: Vec<RoundReport>,
+    /// Probe responses checked across all traffic threads.
+    pub probe_checks: u64,
+    /// Responses that matched NO published snapshot (must be 0).
+    pub torn_responses: u64,
+    /// Distinct model versions observed being served.
+    pub versions_observed: usize,
+    /// Rounds where sender/receiver base files diverged (must be empty).
+    pub base_mismatch_rounds: Vec<usize>,
+    /// Rounds where served weights != dequantized receiver bytes
+    /// (quantized modes only; must be empty).
+    pub quant_mismatch_rounds: Vec<usize>,
+    /// Held-out AUC of the served model after each swap.
+    pub holdout_aucs: Vec<f64>,
+    /// Final serving statistics.
+    pub serve_stats: ServeStats,
+    /// Total bytes shipped over the simulated channel.
+    pub shipped_bytes: u64,
+    /// Raw-file bytes the same rounds would have shipped unencoded.
+    pub raw_bytes: u64,
+}
+
+impl SoakReport {
+    /// Panic (with context) unless every invariant held.
+    ///
+    /// `auc_tolerance` bounds the allowed per-round AUC decrease —
+    /// Hogwild nondeterminism and quantization jitter, not publishing,
+    /// are the only legitimate sources of decrease.
+    pub fn assert_healthy(&self, auc_tolerance: f64) {
+        let mode = self.mode;
+        assert_eq!(
+            self.torn_responses, 0,
+            "{mode:?}: {} of {} responses matched no published snapshot",
+            self.torn_responses, self.probe_checks
+        );
+        assert!(
+            self.probe_checks > 0,
+            "{mode:?}: traffic drivers never scored a probe"
+        );
+        assert!(
+            self.versions_observed >= 2,
+            "{mode:?}: only {} version(s) observed — no live swap was served",
+            self.versions_observed
+        );
+        assert!(
+            self.base_mismatch_rounds.is_empty(),
+            "{mode:?}: sender/receiver bases diverged in rounds {:?}",
+            self.base_mismatch_rounds
+        );
+        assert!(
+            self.quant_mismatch_rounds.is_empty(),
+            "{mode:?}: served weights != dequantized bytes in rounds {:?}",
+            self.quant_mismatch_rounds
+        );
+        for w in self.holdout_aucs.windows(2) {
+            assert!(
+                w[1] >= w[0] - auc_tolerance,
+                "{mode:?}: held-out AUC regressed {} -> {} (tol {auc_tolerance})",
+                w[0],
+                w[1]
+            );
+        }
+        let last = *self.holdout_aucs.last().expect("rounds ran");
+        assert!(last > 0.55, "{mode:?}: final held-out AUC {last} at chance");
+        assert_eq!(self.serve_stats.errors, 0, "{mode:?}: serving errors");
+        assert!(self.serve_stats.requests >= self.probe_checks);
+    }
+}
+
+/// Expected probe scores of one published snapshot, computed through
+/// the same partial-forward path the serving workers use.
+fn probe_scores(reg: &Regressor, probes: &[Request]) -> Vec<Vec<f32>> {
+    let mut ws = Workspace::new();
+    probes
+        .iter()
+        .map(|req| {
+            let cp = reg.context_partial(&req.context);
+            req.candidates
+                .iter()
+                .map(|cand| reg.predict_with_partial(&cp, cand, &mut ws))
+                .collect()
+        })
+        .collect()
+}
+
+/// Published snapshots: (version, per-probe expected scores).
+type Published = Arc<RwLock<Vec<(u64, Vec<Vec<f32>>)>>>;
+
+fn traffic_driver(
+    client: ServeClient,
+    probes: Vec<Request>,
+    published: Published,
+    stop: Arc<AtomicBool>,
+    offset: usize,
+) -> (u64, u64, HashSet<u64>) {
+    let mut checks = 0u64;
+    let mut torn = 0u64;
+    let mut versions = HashSet::new();
+    let mut i = offset;
+    while !stop.load(Ordering::Relaxed) {
+        let idx = i % probes.len();
+        i += 1;
+        let resp = match client.score(probes[idx].clone()) {
+            Ok(r) => r,
+            Err(_) => break, // engine shut down under us
+        };
+        checks += 1;
+        let reg = published.read().expect("published lock");
+        // newest first: steady state hits the fresh snapshot immediately
+        match reg
+            .iter()
+            .rev()
+            .find(|(_, scores)| scores[idx] == resp.scores)
+        {
+            Some((version, _)) => {
+                versions.insert(*version);
+            }
+            None => torn += 1,
+        }
+    }
+    (checks, torn, versions)
+}
+
+/// Run one soak: N concurrent train/transfer/serve rounds, returning
+/// every observation.  Panics only on plumbing failures; invariant
+/// verdicts live in the report (see [`SoakReport::assert_healthy`]).
+pub fn run_soak(cfg: SoakConfig) -> SoakReport {
+    // 5-field tiny-shaped task: 1 continuous + 4 categorical.
+    let mut spec = DatasetSpec::tiny();
+    spec.cat_fields = 4;
+    let fields = spec.fields();
+    let model = ModelConfig::deep_ffm(fields, 2, 1 << 12, &[8]);
+    let mut dcfg = DeployConfig::new(model, spec, cfg.mode);
+    dcfg.examples_per_round = cfg.examples_per_round;
+    dcfg.train_threads = cfg.train_threads;
+    dcfg.seed = cfg.seed;
+    dcfg.serve = ServeConfig {
+        workers: 2,
+        max_batch: 32,
+        max_wait_us: 100,
+        context_cache_entries: 4_096,
+    };
+    let mut dl = DeploymentLoop::new(dcfg);
+
+    // Fixed probe set (2 context fields, 4 candidates each).
+    let mut gen = TraceGenerator::new(
+        cfg.seed ^ 0x7ea5,
+        fields,
+        2,
+        dl.cfg.model.buckets,
+        4,
+    );
+    let probes: Vec<Request> = (0..cfg.probes.max(1))
+        .map(|_| gen.next_request(&dl.cfg.model_name))
+        .collect();
+
+    // Register the bootstrap snapshot (version 1) before any traffic.
+    let published: Published = Arc::new(RwLock::new(vec![(
+        dl.handle().version(),
+        probe_scores(&dl.handle().load(), &probes),
+    )]));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut drivers = Vec::new();
+    for t in 0..cfg.traffic_threads.max(1) {
+        let client = dl.client();
+        let probes = probes.clone();
+        let published = published.clone();
+        let stop = stop.clone();
+        drivers.push(
+            std::thread::Builder::new()
+                .name(format!("fw-soak-traffic-{t}"))
+                .spawn(move || traffic_driver(client, probes, published, stop, t))
+                .expect("spawn traffic driver"),
+        );
+    }
+
+    let mut rounds = Vec::with_capacity(cfg.rounds);
+    let mut base_mismatch_rounds = Vec::new();
+    let mut quant_mismatch_rounds = Vec::new();
+    for r in 0..cfg.rounds {
+        let published2 = published.clone();
+        let probes_ref = &probes;
+        let report = dl
+            .run_round_with(|fresh, version| {
+                let scores = probe_scores(fresh, probes_ref);
+                published2
+                    .write()
+                    .expect("published lock")
+                    .push((version, scores));
+            })
+            .unwrap_or_else(|e| panic!("round {r} failed: {e}"));
+
+        // invariant 2: bit-identical reconstruction
+        if dl.pipeline().sent_bytes() != dl.receiver().base_bytes() {
+            base_mismatch_rounds.push(r);
+        }
+        if cfg.mode.is_quantized() {
+            let served = dl.handle().load();
+            let ok = dl
+                .receiver()
+                .base_bytes()
+                .and_then(|b| quant::dequantize_from_bytes(b).ok())
+                .is_some_and(|deq| deq == served.pool.weights);
+            if !ok {
+                quant_mismatch_rounds.push(r);
+            }
+        }
+        rounds.push(report);
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let mut probe_checks = 0u64;
+    let mut torn_responses = 0u64;
+    let mut versions = HashSet::new();
+    for d in drivers {
+        let (c, t, v) = d.join().expect("traffic driver panicked");
+        probe_checks += c;
+        torn_responses += t;
+        versions.extend(v);
+    }
+
+    let holdout_aucs = rounds.iter().map(|r| r.holdout_auc).collect();
+    let shipped_bytes = dl.channel().total_bytes;
+    let raw_bytes = dl.metrics().raw_bytes_total;
+    let mode = cfg.mode;
+    let serve_stats = dl.shutdown();
+    SoakReport {
+        mode,
+        rounds,
+        probe_checks,
+        torn_responses,
+        versions_observed: versions.len(),
+        base_mismatch_rounds,
+        quant_mismatch_rounds,
+        holdout_aucs,
+        serve_stats,
+        shipped_bytes,
+        raw_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_scores_match_direct_prediction() {
+        let cfg = ModelConfig::deep_ffm(5, 2, 1 << 10, &[8]);
+        let reg = Regressor::new(&cfg);
+        let mut gen = TraceGenerator::new(3, 5, 2, 1 << 10, 4);
+        let probes: Vec<Request> = (0..4).map(|_| gen.next_request("m")).collect();
+        let scores = probe_scores(&reg, &probes);
+        assert_eq!(scores.len(), 4);
+        let mut ws = Workspace::new();
+        for (req, row) in probes.iter().zip(&scores) {
+            assert_eq!(row.len(), req.candidates.len());
+            let cp = reg.context_partial(&req.context);
+            for (cand, &s) in req.candidates.iter().zip(row) {
+                assert_eq!(s, reg.predict_with_partial(&cp, cand, &mut ws));
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_soak_smoke() {
+        // 2 rounds only: the full ≥5-round soaks for all four modes run
+        // in tests/online_deploy_e2e.rs
+        let mut cfg = SoakConfig::quick(UpdateMode::Raw);
+        cfg.rounds = 2;
+        cfg.examples_per_round = 800;
+        let report = run_soak(cfg);
+        assert_eq!(report.rounds.len(), 2);
+        assert_eq!(report.torn_responses, 0);
+        assert!(report.base_mismatch_rounds.is_empty());
+    }
+}

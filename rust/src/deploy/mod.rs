@@ -1,0 +1,455 @@
+//! The online deployment plane — §3 + §6 run as one live system.
+//!
+//! The paper's production regime is not any single component but the
+//! *loop*: Hogwild online training produces a weight snapshot every few
+//! minutes, the snapshot is quantized and byte-patched for cross-DC
+//! transfer, and serving workers hot-swap it without dropping traffic
+//! (the always-online FFM deployments of Juan et al., arXiv:1701.04099).
+//! [`DeploymentLoop`] owns that round lifecycle end to end:
+//!
+//! ```text
+//!   train ──► encode ──► channel ──► decode ──► swap
+//!   (Hogwild  (UpdatePipeline:       (UpdateReceiver   (ModelHandle::swap
+//!    rounds)   raw/quant/patch/       reconstructs      + cache epoch
+//!              quant+patch)           the weights)      invalidation)
+//! ```
+//!
+//! Serving continues concurrently throughout — traffic drivers score
+//! through [`crate::serve::server::ServeClient`] clones while rounds
+//! run — and the loop exposes per-round lag/bandwidth/AUC metrics (the
+//! numbers behind Table 4 and Figure 6, measured live instead of in
+//! isolation).  [`harness`] builds the deterministic soak rig on top.
+
+pub mod harness;
+
+use std::time::Instant;
+
+use crate::config::{ModelConfig, ServeConfig};
+use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+use crate::eval::auc;
+use crate::feature::Example;
+use crate::model::regressor::Regressor;
+use crate::model::{io, Workspace};
+use crate::serve::router::Router;
+use crate::serve::server::{ServeClient, ServeStats, ServingEngine};
+use crate::serve::ModelHandle;
+use crate::train::hogwild::{train_chunk, HogwildConfig};
+use crate::transfer::{SimulatedChannel, UpdateMode, UpdatePipeline, UpdateReceiver};
+
+/// Configuration of one deployment plane instance.
+#[derive(Clone, Debug)]
+pub struct DeployConfig {
+    /// Model architecture served and trained.
+    pub model: ModelConfig,
+    /// Synthetic traffic shape feeding the trainer.
+    pub dataset: DatasetSpec,
+    /// Wire encoding (the four Table-4 arms).
+    pub mode: UpdateMode,
+    /// Examples consumed per training round (the "5-minute window").
+    pub examples_per_round: usize,
+    /// Hogwild threads for each round (1 = sequential, deterministic).
+    pub train_threads: usize,
+    /// Rolling-AUC window for the per-round training trace.
+    pub auc_window: usize,
+    /// Serving engine configuration.
+    pub serve: ServeConfig,
+    /// Name the model is registered under in the router.
+    pub model_name: String,
+    /// Held-out examples scored after every swap (AUC trend); 0
+    /// disables the evaluation.
+    pub holdout_examples: usize,
+    /// Simulated inter-DC link.
+    pub bandwidth_bps: f64,
+    pub rtt_seconds: f64,
+    /// Base seed for the training / holdout streams.
+    pub seed: u64,
+}
+
+impl DeployConfig {
+    /// Sensible defaults around a given model/dataset/mode.
+    pub fn new(model: ModelConfig, dataset: DatasetSpec, mode: UpdateMode) -> Self {
+        DeployConfig {
+            model,
+            dataset,
+            mode,
+            examples_per_round: 10_000,
+            train_threads: 1,
+            auc_window: 2_000,
+            serve: ServeConfig::default(),
+            model_name: "ctr".into(),
+            holdout_examples: 2_000,
+            bandwidth_bps: 125_000_000.0, // 1 Gbps
+            rtt_seconds: 0.03,
+            seed: 0xf10c,
+        }
+    }
+}
+
+/// Everything measured about one train→publish→swap round.
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    /// 0-based round index.
+    pub round: usize,
+    /// Examples trained this round.
+    pub examples: usize,
+    /// Wall time of the Hogwild training phase.
+    pub train_seconds: f64,
+    /// Mean rolling-AUC of this round's progressive validation.
+    pub train_auc: f64,
+    /// Encoder wall time (Table 4 "Avg. time spent").
+    pub encode_seconds: f64,
+    /// Simulated wire time on the inter-DC channel.
+    pub wire_seconds: f64,
+    /// Receiver decode + reconstruction wall time.
+    pub apply_seconds: f64,
+    /// Bytes shipped for this update.
+    pub update_bytes: usize,
+    /// Size of the raw inference file (the baseline this update is
+    /// measured against).
+    pub raw_bytes: usize,
+    /// Model version after the swap.
+    pub version: u64,
+    /// Publish lag: snapshot ready → serving on the new weights
+    /// (encode + wire + apply + swap).
+    pub lag_seconds: f64,
+    /// Held-out AUC of the *served* (post-swap) model; NaN when the
+    /// holdout evaluation is disabled.
+    pub holdout_auc: f64,
+}
+
+/// Accumulated loop metrics (the live Table-4/Figure-6 ledger).
+#[derive(Clone, Debug, Default)]
+pub struct DeployMetrics {
+    pub rounds: u64,
+    pub examples: u64,
+    pub update_bytes_total: u64,
+    pub raw_bytes_total: u64,
+    pub encode_seconds_total: f64,
+    pub wire_seconds_total: f64,
+    pub apply_seconds_total: f64,
+    pub lag_seconds_total: f64,
+    pub last_version: u64,
+    pub last_holdout_auc: f64,
+}
+
+impl DeployMetrics {
+    fn absorb(&mut self, r: &RoundReport) {
+        self.rounds += 1;
+        self.examples += r.examples as u64;
+        self.update_bytes_total += r.update_bytes as u64;
+        self.raw_bytes_total += r.raw_bytes as u64;
+        self.encode_seconds_total += r.encode_seconds;
+        self.wire_seconds_total += r.wire_seconds;
+        self.apply_seconds_total += r.apply_seconds;
+        self.lag_seconds_total += r.lag_seconds;
+        self.last_version = r.version;
+        self.last_holdout_auc = r.holdout_auc;
+    }
+
+    /// Raw-bytes / shipped-bytes ratio (×1 for `UpdateMode::Raw`).
+    pub fn bandwidth_saving(&self) -> f64 {
+        if self.update_bytes_total == 0 {
+            0.0
+        } else {
+            self.raw_bytes_total as f64 / self.update_bytes_total as f64
+        }
+    }
+
+    pub fn mean_lag_seconds(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.lag_seconds_total / self.rounds as f64
+        }
+    }
+}
+
+/// The deployment plane: training DC, transfer plane and serving DC
+/// wired into one continuously publishing loop.
+pub struct DeploymentLoop {
+    pub cfg: DeployConfig,
+    trainer: Regressor,
+    stream: SyntheticStream,
+    pipeline: UpdatePipeline,
+    receiver: UpdateReceiver,
+    channel: SimulatedChannel,
+    handle: ModelHandle,
+    engine: ServingEngine,
+    holdout: Vec<Example>,
+    metrics: DeployMetrics,
+    round: usize,
+}
+
+impl DeploymentLoop {
+    /// Build the full plane: fresh model, registered serving engine,
+    /// transfer pipeline/receiver pair and a held-out evaluation set.
+    pub fn new(cfg: DeployConfig) -> Self {
+        let trainer = Regressor::new(&cfg.model);
+        let stream = SyntheticStream::with_buckets(
+            cfg.dataset.clone(),
+            cfg.seed,
+            cfg.model.buckets,
+        );
+        let mut holdout_stream = SyntheticStream::with_buckets(
+            cfg.dataset.clone(),
+            cfg.seed ^ 0x0e1d_0a7a,
+            cfg.model.buckets,
+        );
+        let holdout = holdout_stream.take_examples(cfg.holdout_examples);
+
+        let pipeline = UpdatePipeline::new(cfg.mode);
+        let mut receiver = UpdateReceiver::new(cfg.mode);
+        receiver.set_template(trainer.clone());
+        let channel =
+            SimulatedChannel::with_bandwidth(cfg.bandwidth_bps, cfg.rtt_seconds);
+
+        let handle = ModelHandle::new(trainer.clone());
+        let router = Router::new(cfg.serve.workers);
+        router.register(&cfg.model_name, handle.clone());
+        let engine = ServingEngine::start(router, cfg.serve.clone());
+
+        DeploymentLoop {
+            cfg,
+            trainer,
+            stream,
+            pipeline,
+            receiver,
+            channel,
+            handle,
+            engine,
+            holdout,
+            metrics: DeployMetrics::default(),
+            round: 0,
+        }
+    }
+
+    /// One full round: train → encode → ship → decode → swap.
+    pub fn run_round(&mut self) -> Result<RoundReport, String> {
+        self.run_round_with(|_, _| {})
+    }
+
+    /// [`run_round`](Self::run_round) with a hook that observes the
+    /// reconstructed model *before* it is swapped in (the soak harness
+    /// registers expected scores there, so concurrent traffic never
+    /// sees a version it cannot verify).  The hook receives the fresh
+    /// model and the version it will be published as.
+    pub fn run_round_with(
+        &mut self,
+        before_swap: impl FnOnce(&Regressor, u64),
+    ) -> Result<RoundReport, String> {
+        let round = self.round;
+        // 1. online training window
+        let chunk = self.stream.take_examples(self.cfg.examples_per_round);
+        let stats = train_chunk(
+            &mut self.trainer,
+            &chunk,
+            HogwildConfig { threads: self.cfg.train_threads.max(1) },
+            self.cfg.auc_window,
+        );
+        let train_auc = if stats.auc_points.is_empty() {
+            f64::NAN
+        } else {
+            stats.auc_points.iter().sum::<f64>() / stats.auc_points.len() as f64
+        };
+        // 2. encode for the wire
+        let update = self.pipeline.encode(&self.trainer);
+        let raw_bytes = self
+            .pipeline
+            .last_raw_len()
+            .unwrap_or_else(|| io::to_bytes(&self.trainer, false).len());
+        // 3. ship across the simulated inter-DC link
+        let wire_seconds = self.channel.ship(&update);
+        // 4. receive + reconstruct
+        let t_apply = Instant::now();
+        let fresh = self.receiver.apply(&update)?;
+        let apply_seconds = t_apply.elapsed().as_secs_f64();
+        // 5. publish: atomic snapshot swap + cache invalidation
+        let next_version = self.handle.version() + 1;
+        before_swap(&fresh, next_version);
+        let t_swap = Instant::now();
+        let version = self.handle.swap(fresh);
+        self.engine.invalidate_caches();
+        let swap_seconds = t_swap.elapsed().as_secs_f64();
+        debug_assert_eq!(version, next_version);
+
+        let holdout_auc = self.holdout_auc();
+        let report = RoundReport {
+            round,
+            examples: chunk.len(),
+            train_seconds: stats.wall_seconds,
+            train_auc,
+            encode_seconds: update.encode_seconds,
+            wire_seconds,
+            apply_seconds,
+            update_bytes: update.bytes.len(),
+            raw_bytes,
+            version,
+            lag_seconds: update.encode_seconds
+                + wire_seconds
+                + apply_seconds
+                + swap_seconds,
+            holdout_auc,
+        };
+        self.metrics.absorb(&report);
+        self.round += 1;
+        Ok(report)
+    }
+
+    /// Run `n` rounds back to back.
+    pub fn run_rounds(&mut self, n: usize) -> Result<Vec<RoundReport>, String> {
+        (0..n).map(|_| self.run_round()).collect()
+    }
+
+    /// AUC of the currently *served* model on the fixed held-out set.
+    pub fn holdout_auc(&self) -> f64 {
+        if self.holdout.is_empty() {
+            return f64::NAN;
+        }
+        let model = self.handle.load();
+        let mut ws = Workspace::new();
+        let mut scores = Vec::with_capacity(self.holdout.len());
+        let mut labels = Vec::with_capacity(self.holdout.len());
+        for ex in &self.holdout {
+            scores.push(model.predict(ex, &mut ws));
+            labels.push(ex.label);
+        }
+        auc(&scores, &labels)
+    }
+
+    // ------------------------------------------------------- accessors
+
+    /// The serving engine (submit / stats on the caller's thread).
+    pub fn engine(&self) -> &ServingEngine {
+        &self.engine
+    }
+
+    /// A clonable traffic handle for driver threads (submits after
+    /// [`shutdown`](Self::shutdown) fail with an error).
+    pub fn client(&self) -> ServeClient {
+        self.engine.client()
+    }
+
+    /// The hot-swappable model slot serving traffic.
+    pub fn handle(&self) -> &ModelHandle {
+        &self.handle
+    }
+
+    /// Trainer-side model state (the next snapshot's source).
+    pub fn trainer(&self) -> &Regressor {
+        &self.trainer
+    }
+
+    /// Sender-side pipeline (base-file introspection).
+    pub fn pipeline(&self) -> &UpdatePipeline {
+        &self.pipeline
+    }
+
+    /// Receiver-side state (base-file introspection).
+    pub fn receiver(&self) -> &UpdateReceiver {
+        &self.receiver
+    }
+
+    /// Bandwidth ledger of the simulated channel.
+    pub fn channel(&self) -> &SimulatedChannel {
+        &self.channel
+    }
+
+    /// Accumulated loop metrics.
+    pub fn metrics(&self) -> &DeployMetrics {
+        &self.metrics
+    }
+
+    /// Rounds completed so far.
+    pub fn rounds_run(&self) -> usize {
+        self.round
+    }
+
+    /// Stop serving; returns the engine's final statistics.
+    pub fn shutdown(self) -> ServeStats {
+        self.engine.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(mode: UpdateMode) -> DeployConfig {
+        let mut spec = DatasetSpec::tiny();
+        spec.cat_fields = 4; // 1 cont + 4 cat = 5 fields
+        let model = ModelConfig::deep_ffm(5, 2, 1 << 10, &[8]);
+        let mut cfg = DeployConfig::new(model, spec, mode);
+        cfg.examples_per_round = 1500;
+        cfg.holdout_examples = 800;
+        cfg.serve = ServeConfig {
+            workers: 2,
+            max_batch: 32,
+            max_wait_us: 100,
+            context_cache_entries: 1024,
+        };
+        cfg
+    }
+
+    #[test]
+    fn rounds_publish_monotonic_versions_and_metrics() {
+        let mut dl = DeploymentLoop::new(small_cfg(UpdateMode::QuantPatch));
+        assert_eq!(dl.handle().version(), 1);
+        let reports = dl.run_rounds(3).unwrap();
+        assert_eq!(reports.len(), 3);
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(r.round, i);
+            assert_eq!(r.version, 2 + i as u64); // v1 was the bootstrap
+            assert_eq!(r.examples, 1500);
+            assert!(r.update_bytes > 0);
+            assert!(r.raw_bytes > 0);
+            assert!(r.lag_seconds >= 0.0);
+            assert!(r.holdout_auc.is_finite());
+        }
+        let m = dl.metrics();
+        assert_eq!(m.rounds, 3);
+        assert_eq!(m.examples, 4500);
+        assert_eq!(m.last_version, 4);
+        // steady-state quant+patch updates undercut raw files
+        assert!(m.bandwidth_saving() > 1.0, "saving {}", m.bandwidth_saving());
+        let stats = dl.shutdown();
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn served_model_tracks_trainer_within_mode_tolerance() {
+        for mode in UpdateMode::ALL {
+            let mut dl = DeploymentLoop::new(small_cfg(mode));
+            dl.run_rounds(2).unwrap();
+            let served = dl.handle().load();
+            let trainer = dl.trainer();
+            let max_err = served
+                .pool
+                .weights
+                .iter()
+                .zip(&trainer.pool.weights)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            if mode.is_quantized() {
+                assert!(max_err < 1e-3, "{mode:?} err {max_err}");
+            } else {
+                assert_eq!(max_err, 0.0, "{mode:?} must be lossless");
+            }
+            dl.shutdown();
+        }
+    }
+
+    #[test]
+    fn before_swap_hook_sees_next_version() {
+        let mut dl = DeploymentLoop::new(small_cfg(UpdateMode::Raw));
+        let mut observed = None;
+        dl.run_round_with(|reg, v| {
+            observed = Some((reg.pool.weights.len(), v));
+        })
+        .unwrap();
+        let (n, v) = observed.expect("hook ran");
+        assert_eq!(v, 2);
+        assert_eq!(n, dl.trainer().num_weights());
+        assert_eq!(dl.handle().version(), 2);
+        dl.shutdown();
+    }
+}

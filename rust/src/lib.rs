@@ -15,22 +15,31 @@
 //!   training, serving, quantization/patching, AutoML, evaluation.
 //! * **L2/L1 (`python/compile`)** — the same DeepFFM forward expressed in
 //!   JAX with the FFM interaction as a Pallas kernel, AOT-lowered to HLO
-//!   text artifacts which [`runtime`] loads through PJRT for
+//!   text artifacts which `runtime` loads through PJRT for
 //!   cross-validation and accelerator-offload deployments.
 //!
 //! Python never runs on the request path; the serving binary is
 //! self-contained once `make artifacts` has produced the HLO files.
+//!
+//! ## Feature flags
+//!
+//! * `pjrt` (off by default) — compiles the `runtime` module and the
+//!   PJRT cross-check test.  Requires the external `xla` and `anyhow`
+//!   crates (unavailable in the hermetic offline build); the default
+//!   build is dependency-free.
 
 pub mod automl;
 pub mod baselines;
 pub mod cli;
 pub mod config;
 pub mod data;
+pub mod deploy;
 pub mod eval;
 pub mod feature;
 pub mod model;
 pub mod patch;
 pub mod quant;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serve;
 pub mod simd;

@@ -55,6 +55,7 @@ fn run(raw: Vec<String>) -> Result<(), String> {
         }
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "deploy" => cmd_deploy(&args),
         "automl" => cmd_automl(&args),
         "quantize" => cmd_quantize(&args),
         "patch" => cmd_patch(&args),
@@ -222,6 +223,96 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_deploy(args: &Args) -> Result<(), String> {
+    use fwumious::deploy::{DeployConfig, DeploymentLoop};
+    use fwumious::transfer::UpdateMode;
+
+    let spec = dataset(&args.flag_or("dataset", "criteo"))?;
+    let mode = UpdateMode::parse(&args.flag_or("mode", "quantpatch"))?;
+    let rounds = args.usize_flag("rounds", 10)?;
+    let requests_per_round = args.usize_flag("requests", 2_000)?;
+    let model_cfg = model_cfg_from_args(args, &spec)?;
+    let fields = model_cfg.fields;
+    let buckets = model_cfg.buckets;
+
+    let mut cfg = DeployConfig::new(model_cfg, spec, mode);
+    cfg.examples_per_round = args.usize_flag("examples", 50_000)?;
+    cfg.train_threads = args.usize_flag("threads", 1)?;
+    cfg.serve = ServeConfig {
+        workers: args.usize_flag("workers", 4)?,
+        ..Default::default()
+    };
+    cfg.seed = args.usize_flag("seed", 42)? as u64;
+
+    println!(
+        "deployment plane: {} over {} rounds x {} examples ({} hogwild thread(s), {} serve worker(s))",
+        mode.label(),
+        rounds,
+        cfg.examples_per_round,
+        cfg.train_threads,
+        cfg.serve.workers
+    );
+    let mut dl = DeploymentLoop::new(cfg);
+    let client = dl.client();
+    let mut gen = TraceGenerator::new(11, fields, (fields / 2).max(1), buckets, 8);
+    println!(
+        "{:<6} {:>10} {:>8} {:>9} {:>9} {:>9} {:>8} {:>7}",
+        "round", "update(B)", "%raw", "encode", "wire(s)", "lag(s)", "AUC", "hit%"
+    );
+    let model_name = dl.cfg.model_name.clone();
+    for _ in 0..rounds {
+        let r = dl.run_round()?;
+        // keep serving against the freshly swapped snapshot
+        let mut inflight = Vec::with_capacity(256);
+        for _ in 0..requests_per_round {
+            inflight.push(client.submit(gen.next_request(&model_name))?);
+            if inflight.len() >= 256 {
+                for rx in inflight.drain(..) {
+                    rx.recv().map_err(|_| "reply dropped".to_string())??;
+                }
+            }
+        }
+        for rx in inflight.drain(..) {
+            rx.recv().map_err(|_| "reply dropped".to_string())??;
+        }
+        let stats = dl.engine().stats();
+        println!(
+            "{:<6} {:>10} {:>7.2}% {:>7.0}ms {:>9.4} {:>9.4} {:>8.4} {:>6.1}%",
+            r.round,
+            r.update_bytes,
+            r.update_bytes as f64 / r.raw_bytes as f64 * 100.0,
+            r.encode_seconds * 1e3,
+            r.wire_seconds,
+            r.lag_seconds,
+            r.holdout_auc,
+            stats.cache_hit_rate() * 100.0
+        );
+    }
+    let m = dl.metrics().clone();
+    let ch = dl.channel().clone();
+    drop(client);
+    let stats = dl.shutdown();
+    println!(
+        "\nshipped {:.2} MB over {} rounds (raw would be {:.2} MB) — {:.1}x bandwidth saving, mean publish lag {:.3}s",
+        ch.total_bytes as f64 / 1e6,
+        m.rounds,
+        m.raw_bytes_total as f64 / 1e6,
+        m.bandwidth_saving(),
+        m.mean_lag_seconds()
+    );
+    println!(
+        "served {} requests / {} candidates, {} errors, cache hit rate {:.1}%",
+        stats.requests,
+        stats.candidates,
+        stats.errors,
+        stats.cache_hit_rate() * 100.0
+    );
+    if let Some(l) = &stats.latency {
+        println!("latency: {}", l.summary());
+    }
+    Ok(())
+}
+
 fn cmd_automl(args: &Args) -> Result<(), String> {
     use fwumious::automl::{pooled_stats, random_search, SearchSpace};
     let spec = dataset(&args.flag_or("dataset", "tiny"))?;
@@ -302,7 +393,7 @@ fn cmd_patch(args: &Args) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     let out = args.flag("out").ok_or("--out required")?;
     let t = std::time::Instant::now();
-    let p = make_patch(&old, &new, Compression::Gzip);
+    let p = make_patch(&old, &new, Compression::Lz);
     std::fs::write(out, p.to_wire()).map_err(|e| e.to_string())?;
     println!(
         "patch {} bytes ({:.2}% of new file) in {}",
@@ -326,6 +417,14 @@ fn cmd_apply(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt(_args: &Args) -> Result<(), String> {
+    Err("this binary was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` (requires the xla crate, see rust/Cargo.toml)"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt(args: &Args) -> Result<(), String> {
     use fwumious::runtime::{default_artifact_dir, load_goldens, ArgValue, Manifest, PjrtEngine};
     let dir = args

@@ -12,7 +12,8 @@
 //!   from the end of the previous op;
 //! * "small integers denoting these differences are stored as a
 //!   **custom integer type**" — LEB128 varints (see `util::varint`);
-//! * the op stream is **compressed** (deflate via flate2, or zstd).
+//! * the op stream is **compressed** — the in-repo LZSS codec
+//!   ([`crate::util::compress`]; the offline build has no flate2/zstd).
 //!
 //! Patch stream format (before compression):
 //! ```text
@@ -27,8 +28,7 @@
 //! old_len == new_len in production; the format still supports growth
 //! (appended bytes ride in a final run).
 
-use std::io::{Read, Write};
-
+use crate::util::compress as lz;
 use crate::util::varint;
 
 pub const MAGIC: &[u8; 4] = b"FWP1";
@@ -37,8 +37,8 @@ pub const MAGIC: &[u8; 4] = b"FWP1";
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Compression {
     None,
-    Gzip,
-    Zstd,
+    /// In-repo LZSS ([`crate::util::compress`]).
+    Lz,
 }
 
 /// A computed patch, ready for the wire.
@@ -62,8 +62,7 @@ impl Patch {
         let mut out = Vec::with_capacity(self.wire_bytes());
         out.push(match self.compression {
             Compression::None => 0,
-            Compression::Gzip => 1,
-            Compression::Zstd => 2,
+            Compression::Lz => 1,
         });
         out.extend_from_slice(&self.payload);
         out
@@ -74,8 +73,7 @@ impl Patch {
         let (&tag, payload) = buf.split_first().ok_or("empty patch")?;
         let compression = match tag {
             0 => Compression::None,
-            1 => Compression::Gzip,
-            2 => Compression::Zstd,
+            1 => Compression::Lz,
             t => return Err(format!("bad compression tag {t}")),
         };
         Ok(Patch {
@@ -189,32 +187,14 @@ pub fn apply_ops(old: &[u8], ops: &[u8]) -> Result<Vec<u8>, String> {
 fn compress(data: &[u8], c: Compression) -> Vec<u8> {
     match c {
         Compression::None => data.to_vec(),
-        Compression::Gzip => {
-            let mut enc = flate2::write::GzEncoder::new(
-                Vec::new(),
-                flate2::Compression::fast(),
-            );
-            enc.write_all(data).expect("gzip write");
-            enc.finish().expect("gzip finish")
-        }
-        Compression::Zstd => zstd::bulk::compress(data, 3).expect("zstd"),
+        Compression::Lz => lz::compress(data),
     }
 }
 
 fn decompress(data: &[u8], c: Compression) -> Result<Vec<u8>, String> {
     match c {
         Compression::None => Ok(data.to_vec()),
-        Compression::Gzip => {
-            let mut dec = flate2::read::GzDecoder::new(data);
-            let mut out = Vec::new();
-            dec.read_to_end(&mut out).map_err(|e| e.to_string())?;
-            Ok(out)
-        }
-        Compression::Zstd => {
-            // stream decoder grows the buffer dynamically (bulk would
-            // need a preallocated worst-case capacity)
-            zstd::stream::decode_all(data).map_err(|e| e.to_string())
-        }
+        Compression::Lz => lz::decompress(data),
     }
 }
 
@@ -246,7 +226,7 @@ mod tests {
     #[test]
     fn identical_buffers_tiny_patch() {
         let data = vec![7u8; 100_000];
-        let p = make_patch(&data, &data, Compression::Gzip);
+        let p = make_patch(&data, &data, Compression::Lz);
         let got = apply_patch(&data, &p).unwrap();
         assert_eq!(got, data);
         assert!(p.wire_bytes() < 100, "patch {} bytes", p.wire_bytes());
@@ -272,7 +252,7 @@ mod tests {
             let i = rng.below(50_000) as usize;
             new[i] = new[i].wrapping_add(1 + rng.below(255) as u8);
         }
-        for c in [Compression::None, Compression::Gzip, Compression::Zstd] {
+        for c in [Compression::None, Compression::Lz] {
             roundtrip(&old, &new, c);
         }
     }
@@ -289,7 +269,7 @@ mod tests {
                 new[w + b] = rng.next_u32() as u8;
             }
         }
-        let p = make_patch(&old, &new, Compression::Gzip);
+        let p = make_patch(&old, &new, Compression::Lz);
         assert!(
             p.wire_bytes() < old.len() / 10,
             "patch {} vs file {}",
@@ -335,10 +315,10 @@ mod tests {
         let old = vec![3u8; 1000];
         let mut new = old.clone();
         new[1] = 7;
-        let p = make_patch(&old, &new, Compression::Zstd);
+        let p = make_patch(&old, &new, Compression::Lz);
         let wire = p.to_wire();
         let back = Patch::from_wire(&wire).unwrap();
-        assert_eq!(back.compression, Compression::Zstd);
+        assert_eq!(back.compression, Compression::Lz);
         assert_eq!(apply_patch(&old, &back).unwrap(), new);
     }
 
@@ -367,7 +347,7 @@ mod tests {
                     new.truncate(g.usize_in(0..n.max(1)));
                 }
             }
-            for c in [Compression::None, Compression::Gzip] {
+            for c in [Compression::None, Compression::Lz] {
                 let p = make_patch(&old, &new, c);
                 assert_eq!(apply_patch(&old, &p).unwrap(), new);
             }

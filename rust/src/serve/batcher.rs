@@ -61,9 +61,16 @@ impl<T> DynamicBatcher<T> {
 
     /// Enqueue a request; returns a batch if the push filled it.
     pub fn push(&mut self, req: Request, tag: T) -> Option<Batch<T>> {
+        self.push_at(req, tag, Instant::now())
+    }
+
+    /// [`push`](Self::push) with an injected arrival time.  The server
+    /// threads pass `Instant::now()`; deterministic tests inject a
+    /// synthetic clock so deadline behaviour needs no real sleeping.
+    pub fn push_at(&mut self, req: Request, tag: T, now: Instant) -> Option<Batch<T>> {
         self.queued_candidates += req.candidates.len();
         if self.queue.is_empty() {
-            self.oldest = Some(Instant::now());
+            self.oldest = Some(now);
         }
         self.queue.push((req, tag));
         if self.queued_candidates >= self.max_batch {
@@ -74,14 +81,28 @@ impl<T> DynamicBatcher<T> {
 
     /// Time left until the deadline flush (None when queue is empty).
     pub fn time_until_deadline(&self) -> Option<Duration> {
+        self.time_until_deadline_at(Instant::now())
+    }
+
+    /// [`time_until_deadline`](Self::time_until_deadline) against an
+    /// injected clock.
+    pub fn time_until_deadline_at(&self, now: Instant) -> Option<Duration> {
         self.oldest
-            .map(|t| self.max_wait.saturating_sub(t.elapsed()))
+            .map(|t| self.max_wait.saturating_sub(now.saturating_duration_since(t)))
     }
 
     /// Flush if the oldest request has waited past the linger budget.
     pub fn poll_deadline(&mut self) -> Option<Batch<T>> {
+        self.poll_deadline_at(Instant::now())
+    }
+
+    /// [`poll_deadline`](Self::poll_deadline) against an injected clock.
+    pub fn poll_deadline_at(&mut self, now: Instant) -> Option<Batch<T>> {
         match self.oldest {
-            Some(t) if t.elapsed() >= self.max_wait && !self.queue.is_empty() => {
+            Some(t)
+                if now.saturating_duration_since(t) >= self.max_wait
+                    && !self.queue.is_empty() =>
+            {
                 Some(self.flush(FlushReason::Deadline))
             }
             _ => None,
@@ -135,24 +156,74 @@ mod tests {
     }
 
     #[test]
-    fn deadline_flush() {
+    fn deadline_flush_with_injected_clock() {
+        // no real sleeps: the whole deadline lifecycle runs against a
+        // synthetic clock
+        let t0 = Instant::now();
         let mut b = DynamicBatcher::new(1000, Duration::from_millis(5));
-        b.push(req(2), 0u32);
-        assert!(b.poll_deadline().is_none());
-        std::thread::sleep(Duration::from_millis(7));
-        let batch = b.poll_deadline().expect("deadline batch");
+        b.push_at(req(2), 0u32, t0);
+        assert_eq!(
+            b.time_until_deadline_at(t0 + Duration::from_millis(2)),
+            Some(Duration::from_millis(3))
+        );
+        assert!(b.poll_deadline_at(t0 + Duration::from_millis(4)).is_none());
+        let batch = b
+            .poll_deadline_at(t0 + Duration::from_millis(5))
+            .expect("deadline batch");
         assert_eq!(batch.reason, FlushReason::Deadline);
         assert_eq!(batch.items.len(), 1);
+        assert_eq!(b.queued_requests(), 0);
+        // after the flush the deadline disappears
+        assert!(b.time_until_deadline_at(t0 + Duration::from_secs(1)).is_none());
     }
 
     #[test]
     fn deadline_from_oldest_not_newest() {
+        let t0 = Instant::now();
         let mut b = DynamicBatcher::new(1000, Duration::from_millis(20));
-        b.push(req(1), 0u32);
-        std::thread::sleep(Duration::from_millis(12));
-        b.push(req(1), 1); // newer request must not reset the clock
-        std::thread::sleep(Duration::from_millis(10));
-        assert!(b.poll_deadline().is_some());
+        b.push_at(req(1), 0u32, t0);
+        // newer request must not reset the clock
+        b.push_at(req(1), 1, t0 + Duration::from_millis(12));
+        assert!(b.poll_deadline_at(t0 + Duration::from_millis(19)).is_none());
+        let batch = b
+            .poll_deadline_at(t0 + Duration::from_millis(22))
+            .expect("oldest-request deadline");
+        assert_eq!(batch.items.len(), 2);
+    }
+
+    #[test]
+    fn all_flush_reasons_deterministic() {
+        let t0 = Instant::now();
+        // Full: candidate budget reached on push
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(1));
+        assert!(b.push_at(req(2), 0u32, t0).is_none());
+        let full = b.push_at(req(2), 1, t0).expect("full flush");
+        assert_eq!(full.reason, FlushReason::Full);
+        // Deadline: linger expired on the injected clock
+        b.push_at(req(1), 2, t0);
+        let deadline = b
+            .poll_deadline_at(t0 + Duration::from_secs(2))
+            .expect("deadline flush");
+        assert_eq!(deadline.reason, FlushReason::Deadline);
+        // Drain: explicit shutdown flush
+        b.push_at(req(1), 3, t0);
+        let drain = b.drain().expect("drain flush");
+        assert_eq!(drain.reason, FlushReason::Drain);
+        assert_eq!(drain.items[0].1, 3);
+    }
+
+    #[test]
+    fn clock_going_backwards_is_safe() {
+        // a now() earlier than the oldest arrival must not panic or
+        // flush (saturating duration arithmetic)
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(10));
+        b.push_at(req(1), 0u32, t0 + Duration::from_millis(50));
+        assert!(b.poll_deadline_at(t0).is_none());
+        assert_eq!(
+            b.time_until_deadline_at(t0),
+            Some(Duration::from_millis(10))
+        );
     }
 
     #[test]

@@ -230,6 +230,14 @@ impl ContextCache {
         cp
     }
 
+    /// Drop every cached partial (the swap hook: the serving engine
+    /// calls this through its cache epoch when new weights are swapped
+    /// in, so stale partials are reclaimed immediately rather than
+    /// lingering until the epoch eviction).  Hit/miss counters survive.
+    pub fn clear(&mut self) {
+        self.tree.clear();
+    }
+
     /// Raw-key variant (§5's production path): the UNHASHED context
     /// bytes are the cache key, so a cache hit skips context feature
     /// hashing, slot assembly AND the partial forward.  `compute` runs
@@ -398,6 +406,23 @@ mod tests {
         // old-version entry is unreachable but still counted until the
         // epoch clear reclaims it
         assert_eq!(cache.entries(), 2);
+    }
+
+    #[test]
+    fn clear_drops_entries_keeps_counters() {
+        use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+        let reg = trained_regressor();
+        let mut cache = ContextCache::new(1024);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 47, 256);
+        let ex = s.next_example();
+        cache.get_or_compute(&reg, 1, &ex.slots[..2]);
+        cache.get_or_compute(&reg, 1, &ex.slots[..2]);
+        assert_eq!((cache.hits, cache.misses, cache.entries()), (1, 1, 1));
+        cache.clear();
+        assert_eq!(cache.entries(), 0);
+        // same context recomputes after the clear — no stale reuse
+        cache.get_or_compute(&reg, 1, &ex.slots[..2]);
+        assert_eq!((cache.hits, cache.misses, cache.entries()), (1, 2, 1));
     }
 
     #[test]

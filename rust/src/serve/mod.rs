@@ -48,33 +48,53 @@ pub struct Response {
 /// Readers take a cheap `Arc` clone of the current model; the update
 /// pipeline swaps in a new `Arc` atomically and bumps the version so
 /// caches keyed on stale weights invalidate themselves.
+///
+/// The version and the model live under ONE lock and must be read
+/// together via [`load_versioned`](Self::load_versioned) when the
+/// version keys cached derived state: reading them through separate
+/// calls can pair version N with the model of version N+1 across a
+/// concurrent swap, which lets a scorer mix a stale cached partial
+/// with fresh weights (a torn response — the §5/§6 invariant the
+/// deployment soak test asserts never happens).
 #[derive(Clone)]
 pub struct ModelHandle {
-    inner: Arc<RwLock<Arc<Regressor>>>,
+    inner: Arc<RwLock<(u64, Arc<Regressor>)>>,
+    /// Mirror of the locked version for cheap lock-free reads.
     version: Arc<AtomicU64>,
 }
 
 impl ModelHandle {
     pub fn new(reg: Regressor) -> Self {
         ModelHandle {
-            inner: Arc::new(RwLock::new(Arc::new(reg))),
+            inner: Arc::new(RwLock::new((1, Arc::new(reg)))),
             version: Arc::new(AtomicU64::new(1)),
         }
     }
 
     /// Current model snapshot.
     pub fn load(&self) -> Arc<Regressor> {
-        self.inner.read().expect("model lock poisoned").clone()
+        self.inner.read().expect("model lock poisoned").1.clone()
+    }
+
+    /// Current (version, model) pair, read atomically with respect to
+    /// [`swap`](Self::swap).
+    pub fn load_versioned(&self) -> (u64, Arc<Regressor>) {
+        let slot = self.inner.read().expect("model lock poisoned");
+        (slot.0, slot.1.clone())
     }
 
     /// Swap in a new model (returns the new version).
     pub fn swap(&self, reg: Regressor) -> u64 {
         let mut slot = self.inner.write().expect("model lock poisoned");
-        *slot = Arc::new(reg);
-        self.version.fetch_add(1, Ordering::Release) + 1
+        slot.0 += 1;
+        slot.1 = Arc::new(reg);
+        self.version.store(slot.0, Ordering::Release);
+        slot.0
     }
 
-    /// Monotonic version, bumped on every swap.
+    /// Monotonic version, bumped on every swap.  May lag a concurrent
+    /// [`swap`](Self::swap) by an instant — key caches via
+    /// [`load_versioned`](Self::load_versioned) instead.
     pub fn version(&self) -> u64 {
         self.version.load(Ordering::Acquire)
     }
@@ -109,5 +129,38 @@ mod tests {
         let h2 = h.clone();
         h.swap(Regressor::new(&cfg));
         assert_eq!(h2.version(), 2);
+    }
+
+    #[test]
+    fn load_versioned_pairs_stay_consistent_under_swaps() {
+        // hammer load_versioned from readers while a writer swaps:
+        // every observed (version, model) pair must be self-consistent
+        // (the model's seed encodes the version that published it)
+        let cfg = ModelConfig::linear(4, 256);
+        let h = ModelHandle::new(Regressor::new(&cfg));
+        let writer = {
+            let h = h.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                for v in 2..=50u64 {
+                    let mut c = cfg.clone();
+                    c.seed = v; // model carries its publish version
+                    h.swap(Regressor::new(&c));
+                }
+            })
+        };
+        let mut last = 0u64;
+        while last < 50 {
+            let (version, model) = h.load_versioned();
+            if version > 1 {
+                assert_eq!(
+                    model.cfg.seed, version,
+                    "torn (version, model) pair observed"
+                );
+            }
+            assert!(version >= last, "version went backwards");
+            last = version;
+        }
+        writer.join().unwrap();
     }
 }

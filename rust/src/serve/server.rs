@@ -4,9 +4,10 @@
 //!
 //! Python is nowhere near this path: workers score through the native
 //! Rust forward pass (SIMD-dispatched) against `Arc`-snapshotted weight
-//! pools.  The same engine can host a PJRT-backed model through
-//! [`crate::runtime`] for cross-validation deployments.
+//! pools.  The same engine can host a PJRT-backed model through the
+//! feature-gated `runtime` module for cross-validation deployments.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -28,6 +29,9 @@ pub struct ServeStats {
     pub batches: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Live context-cache entries summed across workers (as of each
+    /// worker's last scored batch).
+    pub cache_entries: u64,
     pub errors: u64,
     pub latency: Option<LatencyHistogram>,
 }
@@ -53,19 +57,63 @@ struct WorkerShared {
     stats: ServeStats,
 }
 
+/// Clonable request-submission handle onto a running engine.
+///
+/// The deployment plane's traffic drivers run on their own threads;
+/// each owns a `ServeClient` clone (the worker senders are `Send` but
+/// sharing one engine reference across threads is not required this
+/// way).  Clones may outlive [`ServingEngine::shutdown`]: workers exit
+/// on a stop flag rather than channel closure, and any submit after
+/// shutdown returns an error instead of hanging.
+#[derive(Clone)]
+pub struct ServeClient {
+    router: Router,
+    senders: Vec<SyncSender<Job>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServeClient {
+    /// Submit a request; returns the reply channel.
+    pub fn submit(
+        &self,
+        req: Request,
+    ) -> Result<Receiver<Result<Response, String>>, String> {
+        if self.stop.load(Ordering::Acquire) {
+            return Err("engine is shut down".to_string());
+        }
+        let shard = self.router.shard_for(&req) % self.senders.len();
+        let (reply, rx) = sync_channel(1);
+        self.senders[shard]
+            .send(Job { req, enqueued: Instant::now(), reply })
+            .map_err(|_| "engine is shut down".to_string())?;
+        Ok(rx)
+    }
+
+    /// Score a request synchronously.
+    pub fn score(&self, req: Request) -> Result<Response, String> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| "worker dropped reply".to_string())?
+    }
+}
+
 /// The serving engine.
 pub struct ServingEngine {
     pub router: Router,
     cfg: ServeConfig,
-    senders: Vec<SyncSender<Job>>,
+    client: ServeClient,
     workers: Vec<JoinHandle<()>>,
     shared: Vec<Arc<Mutex<WorkerShared>>>,
+    /// Bumped by [`invalidate_caches`](Self::invalidate_caches); workers
+    /// clear their context caches when they observe a new epoch.
+    cache_epoch: Arc<AtomicU64>,
 }
 
 impl ServingEngine {
     /// Spawn `cfg.workers` scoring threads.
     pub fn start(router: Router, cfg: ServeConfig) -> Self {
         let workers_n = cfg.workers.max(1);
+        let cache_epoch = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
         let mut senders = Vec::new();
         let mut workers = Vec::new();
         let mut shared = Vec::new();
@@ -77,21 +125,23 @@ impl ServingEngine {
             let router = router.clone();
             let cfg = cfg.clone();
             let sh2 = sh.clone();
+            let epoch = cache_epoch.clone();
+            let stop2 = stop.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("fw-serve-{w}"))
-                .spawn(move || worker_loop(rx, router, cfg, sh2))
+                .spawn(move || worker_loop(rx, router, cfg, sh2, epoch, stop2))
                 .expect("spawn worker");
             senders.push(tx);
             workers.push(handle);
             shared.push(sh);
         }
-        ServingEngine { router, cfg, senders, workers, shared }
+        let client = ServeClient { router: router.clone(), senders, stop };
+        ServingEngine { router, cfg, client, workers, shared, cache_epoch }
     }
 
     /// Score a request synchronously.
     pub fn score(&self, req: Request) -> Result<Response, String> {
-        let rx = self.submit(req)?;
-        rx.recv().map_err(|_| "worker dropped reply".to_string())?
+        self.client.score(req)
     }
 
     /// Submit a request; returns the reply channel.
@@ -99,12 +149,25 @@ impl ServingEngine {
         &self,
         req: Request,
     ) -> Result<Receiver<Result<Response, String>>, String> {
-        let shard = self.router.shard_for(&req) % self.senders.len();
-        let (reply, rx) = sync_channel(1);
-        self.senders[shard]
-            .send(Job { req, enqueued: Instant::now(), reply })
-            .map_err(|_| "engine is shut down".to_string())?;
-        Ok(rx)
+        self.client.submit(req)
+    }
+
+    /// A clonable submission handle for traffic-driver threads.
+    pub fn client(&self) -> ServeClient {
+        self.client.clone()
+    }
+
+    /// Clear every worker's context cache (the §6 swap hook).
+    ///
+    /// Correctness never depends on this — cache keys embed the model
+    /// version, so partials computed against swapped-out weights are
+    /// unreachable the moment [`crate::serve::ModelHandle::swap`] bumps
+    /// the version ("stale partials must never be served").  The epoch
+    /// bump reclaims their memory immediately: any batch scored after a
+    /// submit that follows this call sees the new epoch (channel send /
+    /// receive orders the Release bump before the Acquire load).
+    pub fn invalidate_caches(&self) {
+        self.cache_epoch.fetch_add(1, Ordering::Release);
     }
 
     /// Aggregate statistics across workers.
@@ -117,6 +180,7 @@ impl ServingEngine {
             out.batches += s.stats.batches;
             out.cache_hits += s.stats.cache_hits;
             out.cache_misses += s.stats.cache_misses;
+            out.cache_entries += s.stats.cache_entries;
             out.errors += s.stats.errors;
             if let (Some(a), Some(b)) = (out.latency.as_mut(), s.stats.latency.as_ref()) {
                 a.merge(b);
@@ -130,12 +194,27 @@ impl ServingEngine {
     }
 
     /// Drain queues, join workers, then report final statistics.
+    ///
+    /// Robust against leaked [`ServeClient`] clones: workers exit on
+    /// the stop flag (draining what is already queued) even while
+    /// clones keep the input channels open; later submits through a
+    /// leftover clone fail with an error rather than hanging.
     pub fn shutdown(mut self) -> ServeStats {
-        self.senders.clear(); // closes channels; workers drain + exit
+        self.client.stop.store(true, Ordering::Release);
+        self.client.senders.clear(); // closes channels unless clones remain
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
         self.stats()
+    }
+}
+
+/// Clear the worker's cache when the engine's epoch moved (model swap).
+fn sync_cache_epoch(epoch: &AtomicU64, seen: &mut u64, cache: &mut ContextCache) {
+    let e = epoch.load(Ordering::Acquire);
+    if e != *seen {
+        *seen = e;
+        cache.clear();
     }
 }
 
@@ -144,10 +223,13 @@ fn worker_loop(
     router: Router,
     cfg: ServeConfig,
     shared: Arc<Mutex<WorkerShared>>,
+    epoch: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
 ) {
     let mut batcher: DynamicBatcher<(Instant, SyncSender<Result<Response, String>>)> =
         DynamicBatcher::new(cfg.max_batch, Duration::from_micros(cfg.max_wait_us));
     let mut cache = ContextCache::new(cfg.context_cache_entries);
+    let mut seen_epoch = epoch.load(Ordering::Acquire);
     let mut ws = Workspace::new();
     loop {
         let wait = batcher
@@ -157,18 +239,38 @@ fn worker_loop(
             Ok(job) => {
                 let tag = (job.enqueued, job.reply);
                 if let Some(batch) = batcher.push(job.req, tag) {
+                    sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
                     score_batch(batch, &router, &mut cache, &mut ws, &shared);
                 }
             }
-            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Acquire) {
+                    // shutdown with client clones still alive: drain
+                    // whatever is already queued, then exit
+                    while let Ok(job) = rx.try_recv() {
+                        let tag = (job.enqueued, job.reply);
+                        if let Some(batch) = batcher.push(job.req, tag) {
+                            sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
+                            score_batch(batch, &router, &mut cache, &mut ws, &shared);
+                        }
+                    }
+                    if let Some(batch) = batcher.drain() {
+                        sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
+                        score_batch(batch, &router, &mut cache, &mut ws, &shared);
+                    }
+                    return;
+                }
+            }
             Err(RecvTimeoutError::Disconnected) => {
                 if let Some(batch) = batcher.drain() {
+                    sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
                     score_batch(batch, &router, &mut cache, &mut ws, &shared);
                 }
                 return;
             }
         }
         if let Some(batch) = batcher.poll_deadline() {
+            sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
             score_batch(batch, &router, &mut cache, &mut ws, &shared);
         }
     }
@@ -192,8 +294,11 @@ fn score_batch(
         let result = match router.resolve(&req.model) {
             None => Err(format!("unknown model '{}'", req.model)),
             Some(handle) => {
-                let version = handle.version();
-                let model = handle.load();
+                // version and model MUST come from one atomic read:
+                // pairing version N with model N+1 across a concurrent
+                // swap would mix stale cached partials into fresh-model
+                // responses (see ModelHandle docs).
+                let (version, model) = handle.load_versioned();
                 if req.context.len() >= model.cfg.fields {
                     Err("context covers all fields; no candidate slots".into())
                 } else {
@@ -240,6 +345,7 @@ fn score_batch(
     sh.stats.errors += errors;
     sh.stats.cache_hits += cache.hits - hits0;
     sh.stats.cache_misses += cache.misses - misses0;
+    sh.stats.cache_entries = cache.entries() as u64;
     if let Some(l) = sh.stats.latency.as_mut() {
         l.merge(&hist);
     }
@@ -338,6 +444,102 @@ mod tests {
         assert_ne!(before, after);
         assert!(after.scores.iter().all(|&s| s > 0.6)); // positive weights
         eng.shutdown();
+    }
+
+    #[test]
+    fn swap_never_serves_stale_partials() {
+        // Regression test for the context_cache.rs invariant: after a
+        // weight swap the engine must never serve partials computed
+        // against the old weights.  Single worker, single repeated
+        // context -> the cache is primed and hot before the swap.
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let reg0 = Regressor::new(&cfg);
+        let handle = ModelHandle::new(reg0);
+        let router = Router::new(1);
+        router.register("m", handle.clone());
+        let eng = ServingEngine::start(
+            router,
+            ServeConfig {
+                workers: 1,
+                max_batch: 8,
+                max_wait_us: 50,
+                context_cache_entries: 1024,
+            },
+        );
+        let mut gen = TraceGenerator::new(17, 6, 3, 1 << 10, 4);
+        let mut req = gen.next_request("m");
+        // pin a single context so both pre-swap requests share it
+        let r2 = gen.next_request("m");
+        req.candidates.extend(r2.candidates);
+        let before1 = eng.score(req.clone()).unwrap();
+        let before2 = eng.score(req.clone()).unwrap();
+        assert_eq!(before1, before2); // cache hit served identical scores
+
+        // swap in visibly different weights
+        let mut reg1 = Regressor::new(&cfg);
+        for w in reg1.pool.weights.iter_mut() {
+            *w = 0.25;
+        }
+        handle.swap(reg1);
+        eng.invalidate_caches();
+
+        let after = eng.score(req.clone()).unwrap();
+        assert_ne!(before1, after, "stale partials served after swap");
+        // scores must equal a fresh computation against the NEW model
+        // through the same partial-forward path
+        let current = handle.load();
+        let mut ws = Workspace::new();
+        let cp = current.context_partial(&req.context);
+        for (i, cand) in req.candidates.iter().enumerate() {
+            let direct = current.predict_with_partial(&cp, cand, &mut ws);
+            assert_eq!(after.scores[i], direct, "candidate {i} mismatch");
+        }
+        let stats = eng.shutdown();
+        // 1 miss (prime) + 1 hit (repeat) + 1 miss (post-swap recompute)
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.cache_misses, 2);
+        // the epoch clear dropped the pre-swap entry: only the fresh one
+        // remains live
+        assert_eq!(stats.cache_entries, 1);
+    }
+
+    #[test]
+    fn client_clones_submit_from_other_threads() {
+        let (eng, mut gen) = engine(2, 1024);
+        let reqs: Vec<Request> = (0..120).map(|_| gen.next_request("ctr")).collect();
+        let mut joins = Vec::new();
+        for t in 0..3 {
+            let client = eng.client();
+            let reqs = reqs.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut scored = 0usize;
+                for (i, req) in reqs.into_iter().enumerate() {
+                    if i % 3 == t {
+                        let resp = client.score(req).unwrap();
+                        scored += resp.scores.len();
+                    }
+                }
+                scored
+            }));
+        }
+        let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert!(total >= 120);
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 120);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn shutdown_does_not_hang_with_leaked_client() {
+        let (eng, mut gen) = engine(2, 64);
+        let leaked = eng.client();
+        eng.score(gen.next_request("ctr")).unwrap();
+        // the live clone keeps the channels open; workers must exit on
+        // the stop flag anyway
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 1);
+        // post-shutdown submits through the leftover clone fail cleanly
+        assert!(leaked.score(gen.next_request("ctr")).is_err());
     }
 
     #[test]

@@ -46,6 +46,26 @@ impl UpdateMode {
             UpdateMode::QuantPatch => "fw-patcher + fw-quantization",
         }
     }
+
+    /// Parse a CLI flag value (`raw|quant|patch|quantpatch`).
+    pub fn parse(s: &str) -> Result<UpdateMode, String> {
+        Ok(match s {
+            "raw" => UpdateMode::Raw,
+            "quant" => UpdateMode::Quant,
+            "patch" => UpdateMode::PatchOnly,
+            "quantpatch" | "quant+patch" => UpdateMode::QuantPatch,
+            other => {
+                return Err(format!(
+                    "unknown update mode '{other}' (raw|quant|patch|quantpatch)"
+                ))
+            }
+        })
+    }
+
+    /// True for the modes that ship quantized (lossy) weights.
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, UpdateMode::Quant | UpdateMode::QuantPatch)
+    }
 }
 
 /// One encoded update as it crosses the wire.
@@ -77,7 +97,7 @@ impl UpdatePipeline {
     pub fn new(mode: UpdateMode) -> Self {
         UpdatePipeline {
             mode,
-            compression: Compression::Gzip,
+            compression: Compression::Lz,
             alpha: 2,
             beta: 2,
             prev_raw: None,
@@ -111,7 +131,11 @@ impl UpdatePipeline {
         let raw = io::to_bytes(reg, false);
         let out = match self.mode {
             UpdateMode::Raw => raw.clone(),
-            UpdateMode::Quant => self.quantize_stable(&reg.pool.weights),
+            UpdateMode::Quant => {
+                let q = self.quantize_stable(&reg.pool.weights);
+                self.prev_quant = Some(q.clone());
+                q
+            }
             UpdateMode::PatchOnly => match &self.prev_raw {
                 Some(prev) => {
                     patch::make_patch(prev, &raw, self.compression).to_wire()
@@ -137,6 +161,26 @@ impl UpdatePipeline {
             encode_seconds: t.elapsed().as_secs_f64(),
         }
     }
+
+    /// The sender-side base file for this mode's next diff: the raw
+    /// `FWMODEL1` bytes for raw/patch modes, the quantized `FWQ1` bytes
+    /// for the quantized modes.  The deployment harness cross-checks
+    /// this against [`UpdateReceiver::base_bytes`] — the patch channel
+    /// must reconstruct it bit-for-bit on the receiving side.
+    pub fn sent_bytes(&self) -> Option<&[u8]> {
+        match self.mode {
+            UpdateMode::Raw | UpdateMode::PatchOnly => self.prev_raw.as_deref(),
+            UpdateMode::Quant | UpdateMode::QuantPatch => self.prev_quant.as_deref(),
+        }
+    }
+
+    /// Size of the last round's raw inference file
+    /// ([`UpdatePipeline::encode`] serializes it every round regardless
+    /// of mode) — the Table-4 baseline the shipped update is measured
+    /// against.
+    pub fn last_raw_len(&self) -> Option<usize> {
+        self.prev_raw.as_ref().map(|b| b.len())
+    }
 }
 
 /// Receiver state: reconstructs inference weights from wire updates.
@@ -159,6 +203,16 @@ impl UpdateReceiver {
         self.template = Some(template);
     }
 
+    /// The receiver-side reconstructed base file (mirror of
+    /// [`UpdatePipeline::sent_bytes`]): raw `FWMODEL1` bytes for
+    /// raw/patch modes, quantized `FWQ1` bytes for quantized modes.
+    pub fn base_bytes(&self) -> Option<&[u8]> {
+        match self.mode {
+            UpdateMode::Raw | UpdateMode::PatchOnly => self.base_raw.as_deref(),
+            UpdateMode::Quant | UpdateMode::QuantPatch => self.base_quant.as_deref(),
+        }
+    }
+
     /// Apply one wire update; returns the reconstructed inference model.
     pub fn apply(&mut self, update: &WireUpdate) -> Result<Regressor, String> {
         assert_eq!(update.mode, self.mode, "pipeline/receiver mode mismatch");
@@ -167,7 +221,10 @@ impl UpdateReceiver {
                 self.base_raw = Some(update.bytes.clone());
                 io::from_bytes(&update.bytes).map_err(|e| e.to_string())
             }
-            UpdateMode::Quant => self.decode_quant_model(&update.bytes.clone()),
+            UpdateMode::Quant => {
+                self.base_quant = Some(update.bytes.clone());
+                self.decode_quant_model(&update.bytes.clone())
+            }
             UpdateMode::PatchOnly => {
                 let full = match &self.base_raw {
                     Some(prev) => {
@@ -352,6 +409,50 @@ mod tests {
         assert!(q < raw, "quant {q} !< raw {raw}");
         assert!(p < raw, "patch {p} !< raw {raw}");
         assert!(qp < q && qp < p, "q+p {qp} !< min(q {q}, p {p})");
+    }
+
+    #[test]
+    fn sender_and_receiver_bases_bit_identical() {
+        // §6's core guarantee: after every round, the receiver's
+        // reconstructed base file equals the sender's byte-for-byte —
+        // that is what keeps round N+1's diff applicable.
+        for mode in UpdateMode::ALL {
+            let snaps = trained_rounds(3, 300);
+            let mut pipe = UpdatePipeline::new(mode);
+            let mut recv = UpdateReceiver::new(mode);
+            recv.set_template(snaps[0].clone());
+            for (round, snap) in snaps.iter().enumerate() {
+                let u = pipe.encode(snap);
+                let got = recv.apply(&u).unwrap();
+                assert_eq!(
+                    pipe.sent_bytes(),
+                    recv.base_bytes(),
+                    "{mode:?} round {round}: bases diverged"
+                );
+                // quantized modes: the served weights are exactly the
+                // dequantized base bytes (bit-identical reconstruction)
+                if mode.is_quantized() {
+                    let deq = quant::dequantize_from_bytes(
+                        recv.base_bytes().unwrap(),
+                    )
+                    .unwrap();
+                    assert_eq!(got.pool.weights, deq, "{mode:?} round {round}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn update_mode_parse_roundtrip() {
+        for (s, m) in [
+            ("raw", UpdateMode::Raw),
+            ("quant", UpdateMode::Quant),
+            ("patch", UpdateMode::PatchOnly),
+            ("quantpatch", UpdateMode::QuantPatch),
+        ] {
+            assert_eq!(UpdateMode::parse(s).unwrap(), m);
+        }
+        assert!(UpdateMode::parse("gzip").is_err());
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! In-repo LZ compression for the transfer plane.
+//!
+//! The paper compresses patch op streams before shipping them between
+//! data centers (§6: "the diffs are compressed, sent to the serving
+//! layer, unpacked and applied").  The offline build environment has no
+//! flate2/zstd, so the codec lives here: a classic LZSS — greedy
+//! longest-match against a hash table of 4-byte prefixes — framed with
+//! the same LEB128 varints the patcher already uses.  Correctness (the
+//! decompressor inverts the compressor on every input) matters more
+//! than ratio; on the patcher's op streams the dominant savings come
+//! from the diff itself, compression just squeezes the repetitive
+//! skip/run structure.
+//!
+//! Stream format:
+//! ```text
+//! raw_len  varint    uncompressed byte count
+//! token*   varint tag
+//!            tag & 1 == 0 -> literal run: (tag >> 1) bytes follow
+//!            tag & 1 == 1 -> match: len = tag >> 1, then varint dist;
+//!                            copies len bytes from out[-dist..]
+//! ```
+//! Matches are at least [`MIN_MATCH`] bytes and may overlap their own
+//! output (dist < len encodes a repeated pattern, RLE-style).
+
+use crate::util::varint;
+
+/// Shortest encodable back-reference.
+const MIN_MATCH: usize = 4;
+/// Longest single match token (longer matches are split; a split match
+/// keeps the same distance, since source and destination advance
+/// together).  Bounding the per-token length lets the decompressor
+/// reject corrupt streams before allocating unbounded output: a valid
+/// stream of S bytes can decode to at most ~S/2 * MAX_MATCH bytes.
+const MAX_MATCH: usize = 1 << 20;
+/// Hash table size (16-bit keys over 4-byte prefixes).
+const HASH_BITS: u32 = 16;
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (v.wrapping_mul(0x9e37_79b1) >> (32 - HASH_BITS)) as usize
+}
+
+fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
+    if lits.is_empty() {
+        return;
+    }
+    varint::write_u64(out, (lits.len() as u64) << 1);
+    out.extend_from_slice(lits);
+}
+
+/// Compress `data`.  Never fails; worst case the output is the input
+/// plus a few bytes of framing.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    varint::write_u64(&mut out, data.len() as u64);
+    if data.len() < MIN_MATCH {
+        flush_literals(&mut out, data);
+        return out;
+    }
+    // hash of 4-byte prefix -> most recent position seen
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    while i + MIN_MATCH <= data.len() {
+        let h = hash4(data, i);
+        let cand = head[h];
+        head[h] = i;
+        let mut match_len = 0usize;
+        if cand != usize::MAX && data[cand..cand + MIN_MATCH] == data[i..i + MIN_MATCH] {
+            let max = data.len() - i;
+            let mut l = MIN_MATCH;
+            while l < max && data[cand + l] == data[i + l] {
+                l += 1;
+            }
+            match_len = l;
+        }
+        if match_len >= MIN_MATCH {
+            flush_literals(&mut out, &data[lit_start..i]);
+            let dist = (i - cand) as u64;
+            let mut remaining = match_len;
+            while remaining > 0 {
+                let n = remaining.min(MAX_MATCH);
+                varint::write_u64(&mut out, ((n as u64) << 1) | 1);
+                varint::write_u64(&mut out, dist);
+                remaining -= n;
+            }
+            // index the positions the match skips over so later matches
+            // can reference them
+            let end = i + match_len;
+            let mut j = i + 1;
+            while j < end && j + MIN_MATCH <= data.len() {
+                head[hash4(data, j)] = j;
+                j += 1;
+            }
+            i = end;
+            lit_start = end;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, &data[lit_start..]);
+    out
+}
+
+/// Decompress a [`compress`] stream.  Rejects malformed input.
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>, String> {
+    let mut pos = 0usize;
+    let raw_len =
+        varint::read_u64(data, &mut pos).ok_or("lz: truncated length")? as usize;
+    // Output growth is bounded token by token: literal runs cannot
+    // exceed the stream itself and match tokens are capped at
+    // MAX_MATCH, so a corrupt/hostile length varint yields a clean
+    // error after at most ~(stream tokens * MAX_MATCH) of growth, not
+    // an unbounded allocation.  Capacity is only a hint.
+    let mut out: Vec<u8> = Vec::with_capacity(raw_len.min(64 << 20));
+    while pos < data.len() {
+        let tag = varint::read_u64(data, &mut pos).ok_or("lz: truncated tag")?;
+        let n = (tag >> 1) as usize;
+        if n > raw_len - out.len() {
+            return Err("lz: token overruns declared length".into());
+        }
+        if tag & 1 == 0 {
+            if n > data.len() - pos {
+                return Err("lz: literal run past end of stream".into());
+            }
+            out.extend_from_slice(&data[pos..pos + n]);
+            pos += n;
+        } else {
+            if n > MAX_MATCH {
+                return Err(format!("lz: match length {n} exceeds token cap"));
+            }
+            let dist =
+                varint::read_u64(data, &mut pos).ok_or("lz: truncated distance")? as usize;
+            if dist == 0 || dist > out.len() {
+                return Err(format!("lz: bad match distance {dist}"));
+            }
+            let start = out.len() - dist;
+            // byte-by-byte: overlapping matches replicate their own tail
+            for k in 0..n {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+    if out.len() != raw_len {
+        return Err(format!(
+            "lz: decompressed {} bytes, expected {raw_len}",
+            out.len()
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+    use crate::util::rng::Pcg32;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        assert_eq!(decompress(&c).unwrap(), data, "len {}", data.len());
+    }
+
+    #[test]
+    fn trivial_inputs() {
+        roundtrip(&[]);
+        roundtrip(&[1]);
+        roundtrip(&[1, 2, 3]);
+        roundtrip(&[0; 4]);
+        roundtrip(b"abcd");
+    }
+
+    #[test]
+    fn constant_runs_collapse() {
+        let data = vec![7u8; 100_000];
+        let c = compress(&data);
+        assert!(c.len() < 64, "constant run compressed to {} bytes", c.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn runs_longer_than_max_match_split_and_roundtrip() {
+        // a multi-MB constant region exceeds MAX_MATCH and must be
+        // emitted as several capped match tokens with the same distance
+        let data = vec![42u8; 3 * MAX_MATCH + 12_345];
+        let c = compress(&data);
+        assert!(c.len() < 64, "split-run stream is {} bytes", c.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn repeated_pattern_compresses() {
+        let pat = b"fwumious-wabbit-";
+        let mut data = Vec::new();
+        for _ in 0..1000 {
+            data.extend_from_slice(pat);
+        }
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 10, "{} vs {}", c.len(), data.len());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn random_data_overhead_bounded() {
+        let mut rng = Pcg32::seeded(3);
+        let data: Vec<u8> = (0..50_000).map(|_| rng.next_u32() as u8).collect();
+        let c = compress(&data);
+        // incompressible input: small framing overhead only
+        assert!(c.len() < data.len() + data.len() / 16 + 16);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn corrupt_streams_rejected() {
+        assert!(decompress(&[]).is_err());
+        let c = compress(b"hello world, hello world, hello world");
+        // truncation
+        assert!(decompress(&c[..c.len() - 1]).is_err());
+        // declared length mismatch
+        let mut bad = c.clone();
+        bad[0] = bad[0].wrapping_add(1);
+        assert!(decompress(&bad).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_structured() {
+        prop(60, |g| {
+            // mix of random spans and repeated spans, like patch op
+            // streams (varint headers + literal weight bytes)
+            let mut data = Vec::new();
+            for _ in 0..g.usize_in(0..12) {
+                if g.bool() {
+                    data.extend(g.bytes(0..200));
+                } else {
+                    let chunk = g.bytes(1..16);
+                    for _ in 0..g.usize_in(1..50) {
+                        data.extend_from_slice(&chunk);
+                    }
+                }
+            }
+            let c = compress(&data);
+            assert_eq!(decompress(&c).unwrap(), data);
+        });
+    }
+}

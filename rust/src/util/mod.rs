@@ -1,7 +1,9 @@
 //! Small self-contained utilities: PRNG, math, histograms, varints,
-//! JSON, timing.  The offline build environment ships no `rand`,
-//! `serde` or `criterion`, so these substrates are implemented here.
+//! JSON, LZ compression, timing.  The offline build environment ships
+//! no `rand`, `serde`, `flate2` or `criterion`, so these substrates are
+//! implemented here.
 
+pub mod compress;
 pub mod histogram;
 pub mod json;
 pub mod math;

@@ -1,0 +1,104 @@
+//! End-to-end soak of the online deployment plane (the tentpole test):
+//!
+//!   Hogwild train rounds ──► UpdatePipeline (all four Table-4 arms)
+//!   ──► SimulatedChannel ──► UpdateReceiver ──► atomic swap into a
+//!   live ServingEngine — with traffic-driver threads scoring probes
+//!   concurrently the whole time.
+//!
+//! Each mode runs ≥ 5 rounds and must uphold (see `deploy::harness`):
+//!   (a) every served response matches exactly one published snapshot
+//!       (previous or fresh — never a torn mix of two weight sets),
+//!   (b) receiver-side reconstruction is bit-identical to the sender's
+//!       base file (and, for quantized modes, the served weights equal
+//!       the dequantized receiver bytes),
+//!   (c) held-out AUC of the served model is non-decreasing across
+//!       rounds within tolerance.
+
+use fwumious::deploy::harness::{run_soak, SoakConfig};
+use fwumious::transfer::UpdateMode;
+
+/// Hogwild interleaving + 2000-sample AUC estimation jitter.
+const AUC_TOLERANCE: f64 = 0.04;
+
+#[test]
+fn soak_raw_mode() {
+    let report = run_soak(SoakConfig::quick(UpdateMode::Raw));
+    assert!(report.rounds.len() >= 5);
+    report.assert_healthy(AUC_TOLERANCE);
+    // raw ships the full inference file every round
+    assert_eq!(report.shipped_bytes, report.raw_bytes);
+}
+
+#[test]
+fn soak_quant_mode() {
+    let report = run_soak(SoakConfig::quick(UpdateMode::Quant));
+    assert!(report.rounds.len() >= 5);
+    report.assert_healthy(AUC_TOLERANCE);
+    // 16-bit codes: roughly half the raw f32 payload every round
+    assert!(
+        report.shipped_bytes < report.raw_bytes * 3 / 4,
+        "quant shipped {} !< 3/4 of raw {}",
+        report.shipped_bytes,
+        report.raw_bytes
+    );
+}
+
+#[test]
+fn soak_patch_mode() {
+    let report = run_soak(SoakConfig::quick(UpdateMode::PatchOnly));
+    assert!(report.rounds.len() >= 5);
+    report.assert_healthy(AUC_TOLERANCE);
+    // bootstrap round ships the full file; steady-state patches are
+    // smaller than the raw baseline
+    let steady = report.rounds.last().unwrap();
+    assert!(
+        steady.update_bytes < steady.raw_bytes,
+        "steady-state patch {} !< raw {}",
+        steady.update_bytes,
+        steady.raw_bytes
+    );
+    assert!(report.shipped_bytes < report.raw_bytes);
+}
+
+#[test]
+fn soak_quant_patch_mode() {
+    let report = run_soak(SoakConfig::quick(UpdateMode::QuantPatch));
+    assert!(report.rounds.len() >= 5);
+    report.assert_healthy(AUC_TOLERANCE);
+    // the production configuration: far below the raw bill in total,
+    // and steady-state updates undercut even the quantized full file
+    assert!(
+        report.shipped_bytes < report.raw_bytes / 2,
+        "quant+patch shipped {} !< half of raw {}",
+        report.shipped_bytes,
+        report.raw_bytes
+    );
+    let steady = report.rounds.last().unwrap();
+    assert!(
+        steady.update_bytes < steady.raw_bytes / 2,
+        "steady-state update {} !< raw {} / 2",
+        steady.update_bytes,
+        steady.raw_bytes
+    );
+}
+
+#[test]
+fn soak_rounds_report_consistently() {
+    // one more raw soak, checking the report plumbing end to end
+    let mut cfg = SoakConfig::quick(UpdateMode::Raw);
+    cfg.rounds = 5;
+    let report = run_soak(cfg);
+    assert_eq!(report.rounds.len(), 5);
+    for (i, r) in report.rounds.iter().enumerate() {
+        assert_eq!(r.round, i);
+        assert_eq!(r.version, i as u64 + 2); // bootstrap was version 1
+        assert!(r.lag_seconds >= r.wire_seconds);
+        assert!(r.update_bytes > 0);
+        assert!(r.holdout_auc.is_finite());
+    }
+    assert_eq!(report.holdout_aucs.len(), 5);
+    // versions: bootstrap + one per round were published; traffic saw
+    // at least two of them (a live mid-run swap)
+    assert!(report.versions_observed >= 2);
+    assert!(report.serve_stats.requests > 0);
+}

@@ -9,7 +9,11 @@
 //! the same function as the JAX/Pallas definition, and that the AOT
 //! artifact loaded through the xla crate is faithful.
 //!
-//! Requires `make artifacts` (tests self-skip when artifacts are absent).
+//! Requires `make artifacts` (tests self-skip when artifacts are absent)
+//! and a build with `--features pjrt` (see rust/Cargo.toml — the target
+//! declares `required-features = ["pjrt"]`).
+
+#![cfg(feature = "pjrt")]
 
 use fwumious::config::ModelConfig;
 use fwumious::feature::{Example, FeatureSlot};

@@ -11,7 +11,8 @@ use fwumious::model::Workspace;
 use fwumious::patch::{apply_patch, make_patch, Compression};
 use fwumious::quant;
 use fwumious::testutil::prop;
-use fwumious::util::varint;
+use fwumious::transfer::{UpdateMode, UpdatePipeline, UpdateReceiver};
+use fwumious::util::{compress, varint};
 
 /// §6: apply(old, diff(old, new)) == new for arbitrary buffers.
 #[test]
@@ -29,7 +30,7 @@ fn prop_patch_identity() {
                 new[i + b] = g.u32() as u8;
             }
         }
-        let p = make_patch(&old, &new, Compression::Gzip);
+        let p = make_patch(&old, &new, Compression::Lz);
         assert_eq!(apply_patch(&old, &p).unwrap(), new);
     });
 }
@@ -138,6 +139,83 @@ fn prop_context_split_equivalence() {
             let cp = reg.context_partial(&ex.slots[..c]);
             let via = reg.predict_with_partial(&cp, &ex.slots[c..], &mut ws);
             assert!((full - via).abs() < 1e-5, "split {c}: {full} vs {via}");
+        }
+    });
+}
+
+/// §6: the quantized byte format is a lossless container — header and
+/// codes survive to_bytes/from_bytes exactly.
+#[test]
+fn prop_quant_bytes_roundtrip() {
+    prop(40, |g| {
+        let scale = g.f32_in(0.05, 3.0);
+        let w = g.vec_normal(0..1200, scale);
+        let alpha = g.usize_in(1..4) as u8;
+        let beta = g.usize_in(1..4) as u8;
+        let (h, codes) = quant::quantize(&w, alpha, beta);
+        let bytes = quant::to_bytes(&h, &codes);
+        let (h2, codes2) = quant::from_bytes(&bytes).unwrap();
+        assert_eq!(h, h2);
+        assert_eq!(codes, codes2);
+    });
+}
+
+/// The wire codec under the patcher: decompress(compress(x)) == x on
+/// weight-file-shaped inputs (repetitive headers + dense f32 payloads).
+#[test]
+fn prop_lz_roundtrip_on_model_shaped_data() {
+    prop(30, |g| {
+        let mut data = b"FWMODEL1".to_vec();
+        for _ in 0..g.usize_in(0..800) {
+            data.extend_from_slice(&g.f32_in(-1.0, 1.0).to_le_bytes());
+        }
+        // runs of unchanged bytes, like consecutive snapshots
+        let pad = g.usize_in(0..600);
+        data.extend(std::iter::repeat(0u8).take(pad));
+        let c = compress::compress(&data);
+        assert_eq!(compress::decompress(&c).unwrap(), data);
+    });
+}
+
+/// §6 end-to-end: every UpdateMode's pipeline→receiver roundtrip
+/// reconstructs the sender's weights (exactly for raw/patch, within
+/// half a quantization bucket otherwise), and the receiver's base file
+/// always mirrors the sender's bit-for-bit.
+#[test]
+fn prop_transfer_modes_reconstruct() {
+    prop(8, |g| {
+        let buckets = 1u32 << 9;
+        let cfg = ModelConfig::ffm(4, 2, buckets);
+        let mut reg = Regressor::new(&cfg);
+        let mut ws = Workspace::new();
+        let mut s =
+            SyntheticStream::with_buckets(DatasetSpec::tiny(), g.u64(), buckets);
+        let mode = *g.rng().choose(&UpdateMode::ALL);
+        let mut pipe = UpdatePipeline::new(mode);
+        let mut recv = UpdateReceiver::new(mode);
+        recv.set_template(reg.clone());
+        for _ in 0..g.usize_in(1..4) {
+            for _ in 0..400 {
+                let ex = s.next_example();
+                reg.learn(&ex, &mut ws);
+            }
+            let got = recv.apply(&pipe.encode(&reg)).unwrap();
+            assert_eq!(pipe.sent_bytes(), recv.base_bytes(), "{mode:?}");
+            match mode {
+                UpdateMode::Raw | UpdateMode::PatchOnly => {
+                    assert_eq!(got.pool.weights, reg.pool.weights, "{mode:?}");
+                }
+                UpdateMode::Quant | UpdateMode::QuantPatch => {
+                    let max_err = got
+                        .pool
+                        .weights
+                        .iter()
+                        .zip(&reg.pool.weights)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(max_err < 1e-3, "{mode:?} err {max_err}");
+                }
+            }
         }
     });
 }
