@@ -1,0 +1,132 @@
+//! Fleet fan-out benchmark: star vs fan-out-tree bytes-on-the-wire
+//! across the four §6 quantization/patching modes.
+//!
+//! The same trained snapshot sequence is published through two
+//! otherwise identical fleets (3 DCs × 3 replicas); only the route
+//! plan differs.  The tree plan must provably ship fewer inter-DC
+//! bytes — the expensive edge — for every mode, trading them for
+//! cheap intra-DC re-fan-out and one extra LAN hop of lag.
+//!
+//! Emits a machine-readable `BENCH_fleet_fanout.json` (per mode:
+//! bytes/round on each edge class, lag means, tree/star ratio) so
+//! future PRs can diff regressions.  `--smoke` runs a CI-sized
+//! variant.
+
+use fwumious::config::ModelConfig;
+use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
+use fwumious::fleet::{FleetConfig, FleetFabric, FleetMetrics, LinkSpec, Strategy, Topology};
+use fwumious::model::regressor::Regressor;
+use fwumious::model::Workspace;
+use fwumious::transfer::UpdateMode;
+use fwumious::util::json::{arr, num, obj, s, Json};
+
+struct StrategyRun {
+    inter_bytes: u64,
+    intra_bytes: u64,
+    mean_lag_seconds: f64,
+}
+
+fn run_strategy(
+    strategy: Strategy,
+    mode: UpdateMode,
+    dcs: usize,
+    replicas: usize,
+    template: &Regressor,
+    snaps: &[Regressor],
+) -> StrategyRun {
+    let topo = Topology::uniform(dcs, replicas, LinkSpec::wan(), LinkSpec::lan());
+    let mut cfg = FleetConfig::new(topo, mode);
+    cfg.strategy = strategy;
+    let mut fab = FleetFabric::new(cfg, template);
+    for snap in snaps {
+        fab.publish(snap).expect("publish");
+    }
+    let m: FleetMetrics = fab.metrics();
+    StrategyRun {
+        inter_bytes: m.inter_bytes(),
+        intra_bytes: m.intra_bytes(),
+        mean_lag_seconds: m.mean_lag_seconds(),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (dcs, replicas, rounds, per_round, bits) =
+        if smoke { (3, 2, 3, 3_000, 14) } else { (3, 3, 6, 20_000, 18) };
+    let spec = DatasetSpec::criteo_like();
+    let model = ModelConfig::deep_ffm(spec.fields(), 2, 1u32 << bits, &[16]);
+
+    // train the snapshot sequence once; every (mode, strategy) pair
+    // re-publishes the identical weights
+    let template = Regressor::new(&model);
+    let mut reg = template.clone();
+    let mut ws = Workspace::new();
+    let mut stream = SyntheticStream::with_buckets(spec, 42, model.buckets);
+    let mut snaps = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        for _ in 0..per_round {
+            let ex = stream.next_example();
+            reg.learn(&ex, &mut ws);
+        }
+        snaps.push(reg.clone());
+    }
+
+    println!(
+        "== fleet fan-out: {} DCs x {} replicas, {} rounds x {} examples{} ==\n",
+        dcs,
+        replicas,
+        rounds,
+        per_round,
+        if smoke { " (smoke)" } else { "" }
+    );
+    println!(
+        "{:<28} {:>12} {:>12} {:>7} {:>12} {:>10}",
+        "mode", "star inter", "tree inter", "ratio", "tree intra", "tree lag"
+    );
+
+    let mut mode_rows = Vec::new();
+    for mode in UpdateMode::ALL {
+        let star = run_strategy(Strategy::Star, mode, dcs, replicas, &template, &snaps);
+        let tree = run_strategy(Strategy::Tree, mode, dcs, replicas, &template, &snaps);
+        assert!(
+            tree.inter_bytes < star.inter_bytes,
+            "{mode:?}: tree {} must undercut star {}",
+            tree.inter_bytes,
+            star.inter_bytes
+        );
+        let ratio = tree.inter_bytes as f64 / star.inter_bytes as f64;
+        println!(
+            "{:<28} {:>12} {:>12} {:>6.3} {:>12} {:>9.4}s",
+            mode.label(),
+            star.inter_bytes,
+            tree.inter_bytes,
+            ratio,
+            tree.intra_bytes,
+            tree.mean_lag_seconds
+        );
+        mode_rows.push(obj(vec![
+            ("mode", s(mode.label())),
+            ("star_inter_bytes", num(star.inter_bytes as f64)),
+            ("star_bytes_per_round", num(star.inter_bytes as f64 / rounds as f64)),
+            ("star_mean_lag_seconds", num(star.mean_lag_seconds)),
+            ("tree_inter_bytes", num(tree.inter_bytes as f64)),
+            ("tree_intra_bytes", num(tree.intra_bytes as f64)),
+            ("tree_bytes_per_round", num(tree.inter_bytes as f64 / rounds as f64)),
+            ("tree_mean_lag_seconds", num(tree.mean_lag_seconds)),
+            ("inter_ratio_tree_vs_star", num(ratio)),
+        ]));
+    }
+
+    let report = obj(vec![
+        ("bench", s("fleet_fanout")),
+        ("smoke", Json::Bool(smoke)),
+        ("dcs", num(dcs as f64)),
+        ("replicas_per_dc", num(replicas as f64)),
+        ("rounds", num(rounds as f64)),
+        ("examples_per_round", num(per_round as f64)),
+        ("modes", arr(mode_rows)),
+    ]);
+    let path = "BENCH_fleet_fanout.json";
+    std::fs::write(path, report.to_string()).expect("write bench json");
+    println!("\ntree route ships 1/{replicas} of star's inter-DC bytes per DC; report -> {path}");
+}

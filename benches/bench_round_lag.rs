@@ -11,32 +11,41 @@
 //! the wire and wire seconds by ~an order of magnitude at the cost of
 //! milliseconds of encode/decode — so the lag is dominated by the link
 //! for Raw and by (cheap) CPU work for QuantPatch.
+//!
+//! Emits `BENCH_round_lag.json` (per mode: median bytes/round, lag
+//! p50/p90/max) for regression tracking; `--smoke` runs a CI-sized
+//! variant.
 
 use fwumious::config::{ModelConfig, ServeConfig};
 use fwumious::data::synthetic::DatasetSpec;
 use fwumious::deploy::{DeployConfig, DeploymentLoop};
 use fwumious::transfer::UpdateMode;
-use fwumious::util::math::median;
+use fwumious::util::json::{arr, num, obj, s, Json};
+use fwumious::util::math::{median, percentile};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (rounds, per_round, bits) = if smoke { (3, 4_000, 14) } else { (6, 20_000, 18) };
     let spec = DatasetSpec::criteo_like();
-    let buckets = 1u32 << 18;
+    let buckets = 1u32 << bits;
     let model = ModelConfig::deep_ffm(spec.fields(), 4, buckets, &[16]);
-    let rounds = 6;
-    let per_round = 20_000;
     let threads = std::thread::available_parallelism()
         .map(|n| n.get().min(4))
         .unwrap_or(2);
 
     println!(
-        "== round lag: train {} examples/round, {} rounds/mode, {} hogwild thread(s), 1 Gbps link ==\n",
-        per_round, rounds, threads
+        "== round lag: train {} examples/round, {} rounds/mode, {} hogwild thread(s), 1 Gbps link{} ==\n",
+        per_round,
+        rounds,
+        threads,
+        if smoke { " (smoke)" } else { "" }
     );
     println!(
         "{:<28} {:>10} {:>9} {:>9} {:>9} {:>9} {:>10}",
         "mode", "update(B)", "%raw", "encode", "wire", "apply", "lag(s)"
     );
 
+    let mut mode_rows = Vec::new();
     for mode in UpdateMode::ALL {
         let mut cfg = DeployConfig::new(model.clone(), spec.clone(), mode);
         cfg.examples_per_round = per_round;
@@ -73,10 +82,33 @@ fn main() {
             median(&apply_s) * 1e3,
             median(&lag_s)
         );
+        mode_rows.push(obj(vec![
+            ("mode", s(mode.label())),
+            ("bytes_per_round_median", num(median(&update_bytes))),
+            ("raw_bytes", num(raw_bytes as f64)),
+            ("encode_seconds_median", num(median(&encode_s))),
+            ("wire_seconds_median", num(median(&wire_s))),
+            ("apply_seconds_median", num(median(&apply_s))),
+            ("lag_seconds_p50", num(percentile(&lag_s, 0.5))),
+            ("lag_seconds_p90", num(percentile(&lag_s, 0.9))),
+            ("lag_seconds_max", num(percentile(&lag_s, 1.0))),
+        ]));
         dl.shutdown();
     }
+
+    let report = obj(vec![
+        ("bench", s("round_lag")),
+        ("smoke", Json::Bool(smoke)),
+        ("rounds", num(rounds as f64)),
+        ("examples_per_round", num(per_round as f64)),
+        ("train_threads", num(threads as f64)),
+        ("modes", arr(mode_rows)),
+    ]);
+    let path = "BENCH_round_lag.json";
+    std::fs::write(path, report.to_string()).expect("write bench json");
     println!(
         "\nexpected shape: raw lag ≈ full-file wire time; quant ≈ half of it;"
     );
     println!("patch modes collapse steady-state wire time — lag becomes CPU-bound.");
+    println!("report -> {path}");
 }

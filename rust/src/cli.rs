@@ -96,11 +96,21 @@ SUBCOMMANDS:
                --examples N (per round)  --threads N (hogwild)
                --workers N  --requests N (served per round)
                --dataset criteo|avazu|kdd|tiny  --bits N
+    fleet      multi-DC weight distribution fabric: publish Hogwild
+               rounds to N data centers x M replicas over simulated
+               links, with star/tree route planning and delta-chain
+               catch-up (replay vs full resync)
+               --dcs N  --replicas N  --strategy star|tree|auto
+               --mode raw|quant|patch|quantpatch  --rounds N
+               --examples N (per round)  --threads N (hogwild)
+               --loss P (per-shipment drop probability)
+               --dataset criteo|avazu|kdd|tiny  --bits N
     automl     random hyperparameter search (Table 1 protocol)
                --configs N  --threads N  --dataset ...  --examples N
     quantize   quantize a model file        --in a.fw --out a.fwq
     patch      diff two model files         --old a.fw --new b.fw --out p.fwp
-    apply      apply a patch                --old a.fw --patch p.fwp --out c.fw
+    apply      apply a patch (or a comma-separated delta chain, in
+               order)                 --old a.fw --patch p1.fwp,p2.fwp --out c.fw
     pjrt       run an AOT artifact against golden vectors
                --artifacts DIR   (needs a build with --features pjrt)
     bench      alias pointing at `cargo bench` harnesses

@@ -144,8 +144,10 @@ impl SoakReport {
 }
 
 /// Expected probe scores of one published snapshot, computed through
-/// the same partial-forward path the serving workers use.
-fn probe_scores(reg: &Regressor, probes: &[Request]) -> Vec<Vec<f32>> {
+/// the same partial-forward path the serving workers use.  Public
+/// because the fleet-wide soak ([`crate::fleet::soak`]) registers the
+/// same per-version expectations across every replica's engine.
+pub fn probe_scores(reg: &Regressor, probes: &[Request]) -> Vec<Vec<f32>> {
     let mut ws = Workspace::new();
     probes
         .iter()

@@ -4,10 +4,21 @@
 //! weight patcher: identical feature→bucket mapping keeps weight files
 //! structurally aligned between training rounds).
 
+const C1: u32 = 0xcc9e2d51;
+const C2: u32 = 0x1b873593;
+
+#[inline]
+fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85ebca6b);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xc2b2ae35);
+    h ^= h >> 16;
+    h
+}
+
 /// MurmurHash3 x86_32.
 pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
-    const C1: u32 = 0xcc9e2d51;
-    const C2: u32 = 0x1b873593;
     let mut h = seed;
     let chunks = data.chunks_exact(4);
     let tail = chunks.remainder();
@@ -26,13 +37,42 @@ pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
         h ^= k;
     }
     h ^= data.len() as u32;
-    // fmix32
-    h ^= h >> 16;
-    h = h.wrapping_mul(0x85ebca6b);
-    h ^= h >> 13;
-    h = h.wrapping_mul(0xc2b2ae35);
-    h ^= h >> 16;
-    h
+    fmix32(h)
+}
+
+/// Streaming MurmurHash3 x86_32 over whole little-endian `u32` words.
+///
+/// Hashing N words through [`push_u32`](Self::push_u32) followed by
+/// [`finish`](Self::finish) is bit-identical to [`murmur3_32`] over the
+/// words' concatenated LE bytes — a `u32` *is* one murmur block, so the
+/// hot serving path (context→shard affinity) can hash buckets with zero
+/// allocation and zero byte shuffling.
+#[derive(Clone, Copy, Debug)]
+pub struct Murmur3x32 {
+    h: u32,
+    len: u32,
+}
+
+impl Murmur3x32 {
+    #[inline]
+    pub fn new(seed: u32) -> Self {
+        Murmur3x32 { h: seed, len: 0 }
+    }
+
+    /// Absorb one word (one full 4-byte murmur block).
+    #[inline]
+    pub fn push_u32(&mut self, word: u32) {
+        let k = word.wrapping_mul(C1).rotate_left(15).wrapping_mul(C2);
+        self.h ^= k;
+        self.h = self.h.rotate_left(13).wrapping_mul(5).wrapping_add(0xe6546b64);
+        self.len = self.len.wrapping_add(4);
+    }
+
+    /// Finalize (the stream length is part of the hash).
+    #[inline]
+    pub fn finish(&self) -> u32 {
+        fmix32(self.h ^ self.len)
+    }
 }
 
 /// Hash a (namespace, feature-name) pair into the model bucket space.
@@ -116,5 +156,28 @@ mod tests {
     fn combine_depends_on_order() {
         let mask = u32::MAX;
         assert_ne!(combine(1, 2, mask), combine(2, 1, mask));
+    }
+
+    #[test]
+    fn streaming_u32_matches_byte_hash() {
+        let mut rng = crate::util::rng::Pcg32::seeded(0x51ea);
+        for n in 0..64usize {
+            let words: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            let mut bytes = Vec::with_capacity(n * 4);
+            for &w in &words {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+            for seed in [0u32, 1, 0x5a5a, 0x9747b28c] {
+                let mut m = Murmur3x32::new(seed);
+                for &w in &words {
+                    m.push_u32(w);
+                }
+                assert_eq!(
+                    m.finish(),
+                    murmur3_32(&bytes, seed),
+                    "n={n} seed={seed:#x}"
+                );
+            }
+        }
     }
 }

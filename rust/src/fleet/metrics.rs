@@ -1,0 +1,173 @@
+//! The fleet-wide distribution ledger.
+//!
+//! Every byte the fabric moves is accounted per link class (inter-DC
+//! vs intra-DC, per data center), because the paper's §6 economics are
+//! exactly this split: cross-DC bandwidth is the expensive resource the
+//! quantize+patch pipeline exists to save, while intra-DC re-fan-out is
+//! nearly free.  On top of the byte ledgers the fabric tracks the
+//! operational health signals of a replicated deployment: publish lag
+//! per replica, the worst version skew ever observed, and how often the
+//! catch-up protocol had to replay patch chains or fall back to full
+//! resyncs.
+
+/// Byte/time/loss ledger of one simulated link.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkLedger {
+    /// Bytes the sender pushed onto the link (lost shipments included —
+    /// the sender pays for them either way).
+    pub bytes: u64,
+    /// Simulated wire seconds spent.
+    pub seconds: f64,
+    /// Shipments attempted.
+    pub messages: u64,
+    /// Shipments lost in transit.
+    pub drops: u64,
+}
+
+impl LinkLedger {
+    /// Account one shipment attempt.
+    pub fn record(&mut self, len: usize, seconds: f64, delivered: bool) {
+        self.bytes += len as u64;
+        self.seconds += seconds;
+        self.messages += 1;
+        if !delivered {
+            self.drops += 1;
+        }
+    }
+
+    /// Fold another ledger into this one.
+    pub fn absorb(&mut self, other: &LinkLedger) {
+        self.bytes += other.bytes;
+        self.seconds += other.seconds;
+        self.messages += other.messages;
+        self.drops += other.drops;
+    }
+}
+
+/// Publish-lag accumulator for one replica.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LagStat {
+    /// Updates this replica received through normal distribution or
+    /// catch-up (duplicates excluded).
+    pub publishes: u64,
+    /// Sum of per-update publish lags (encode + wire path).
+    pub total_seconds: f64,
+    /// Lag of the most recent update.
+    pub last_seconds: f64,
+}
+
+impl LagStat {
+    pub fn record(&mut self, seconds: f64) {
+        self.publishes += 1;
+        self.total_seconds += seconds;
+        self.last_seconds = seconds;
+    }
+
+    pub fn mean_seconds(&self) -> f64 {
+        if self.publishes == 0 {
+            0.0
+        } else {
+            self.total_seconds / self.publishes as f64
+        }
+    }
+}
+
+/// Snapshot of everything a fleet run has measured.
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    /// Publish rounds executed.
+    pub rounds: u64,
+    /// Worst `head_seq - replica_seq` observed at any round boundary.
+    pub max_version_skew: u64,
+    /// Catch-ups resolved by replaying retained chained patches.
+    pub replays: u64,
+    /// Catch-ups resolved by shipping a full snapshot.
+    pub resyncs: u64,
+    /// Rounds that ended with every replica at the head version.
+    pub converged_rounds: u64,
+    /// Per-replica publish lag (flattened DC-major, same order as
+    /// [`crate::fleet::topology::Topology::replica_ids`]).
+    pub lag: Vec<LagStat>,
+    /// Per-DC trainer→DC (inter-DC) link ledgers.
+    pub inter: Vec<LinkLedger>,
+    /// Per-DC intra-DC re-distribution link ledgers.
+    pub intra: Vec<LinkLedger>,
+}
+
+impl FleetMetrics {
+    /// Total bytes pushed across data-center boundaries — the paper's
+    /// headline cost metric, and what the route planner minimizes.
+    pub fn inter_bytes(&self) -> u64 {
+        self.inter.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Total bytes re-distributed inside data centers.
+    pub fn intra_bytes(&self) -> u64 {
+        self.intra.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Shipments lost across all links.
+    pub fn drops(&self) -> u64 {
+        self.inter.iter().chain(self.intra.iter()).map(|l| l.drops).sum()
+    }
+
+    /// Mean publish lag across replicas that received at least one
+    /// update.
+    pub fn mean_lag_seconds(&self) -> f64 {
+        let live: Vec<&LagStat> =
+            self.lag.iter().filter(|l| l.publishes > 0).collect();
+        if live.is_empty() {
+            0.0
+        } else {
+            live.iter().map(|l| l.mean_seconds()).sum::<f64>() / live.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accounts_drops_and_bytes() {
+        let mut l = LinkLedger::default();
+        l.record(1000, 0.5, true);
+        l.record(1000, 0.5, false);
+        assert_eq!(l.bytes, 2000);
+        assert_eq!(l.messages, 2);
+        assert_eq!(l.drops, 1);
+        let mut m = LinkLedger::default();
+        m.absorb(&l);
+        m.absorb(&l);
+        assert_eq!(m.bytes, 4000);
+        assert_eq!(m.drops, 2);
+    }
+
+    #[test]
+    fn lag_stat_mean() {
+        let mut s = LagStat::default();
+        assert_eq!(s.mean_seconds(), 0.0);
+        s.record(1.0);
+        s.record(3.0);
+        assert_eq!(s.publishes, 2);
+        assert!((s.mean_seconds() - 2.0).abs() < 1e-12);
+        assert_eq!(s.last_seconds, 3.0);
+    }
+
+    #[test]
+    fn metrics_totals() {
+        let mut m = FleetMetrics::default();
+        m.inter = vec![LinkLedger::default(); 2];
+        m.intra = vec![LinkLedger::default(); 2];
+        m.inter[0].record(100, 0.1, true);
+        m.inter[1].record(200, 0.1, false);
+        m.intra[0].record(50, 0.01, true);
+        assert_eq!(m.inter_bytes(), 300);
+        assert_eq!(m.intra_bytes(), 50);
+        assert_eq!(m.drops(), 1);
+        m.lag = vec![LagStat::default(); 3];
+        m.lag[0].record(2.0);
+        m.lag[2].record(4.0);
+        assert!((m.mean_lag_seconds() - 3.0).abs() < 1e-12);
+    }
+}

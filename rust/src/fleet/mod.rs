@@ -1,0 +1,711 @@
+//! The multi-data-center weight distribution fabric.
+//!
+//! PR 1's deployment plane runs exactly one trainer→server pipe.  The
+//! paper's regime is a *fleet*: one training site continuously
+//! publishing to N data centers × M replicas each, where cross-DC
+//! bandwidth is the billed resource and every replica must keep
+//! serving a consistent version while updates race across lossy links.
+//! This module is that fan-out layer:
+//!
+//! ```text
+//!                      ┌────────────── DC 0 ──────────────┐
+//!            inter-DC  │  head ──intra──► replica 1..M-1  │
+//!   trainer ══════════►│  (fan-out tree: 1 WAN crossing)  │
+//!      ║               └──────────────────────────────────┘
+//!      ║  star: M WAN crossings per DC instead
+//!      ╚══════════════► DC 1 … DC N-1   (same choice per DC)
+//! ```
+//!
+//! * [`topology`] — DCs, replicas, per-link bandwidth/RTT/loss.
+//! * [`planner`] — star vs fan-out-tree routes, chosen to minimize
+//!   inter-DC bytes (the §6 bandwidth trick, generalized).
+//! * [`replica`] — per-replica delta-chain version tracking over
+//!   [`crate::transfer::UpdateReceiver`].
+//! * [`FleetFabric`] — encode once, distribute per plan, heal broken
+//!   chains via the catch-up protocol (chained-patch replay vs
+//!   full-snapshot resync, whichever ships fewer bytes).
+//! * [`metrics`] — per-link byte ledgers, publish lag per replica,
+//!   max version skew, convergence counters.
+//! * [`soak`] — the fleet-wide soak harness (the deployment-plane soak
+//!   of [`crate::deploy::harness`], scaled out to ≥3 DCs × ≥2
+//!   replicas with fault injection).
+
+pub mod metrics;
+pub mod planner;
+pub mod replica;
+pub mod soak;
+pub mod topology;
+
+pub use metrics::{FleetMetrics, LagStat, LinkLedger};
+pub use planner::{plan, DcRoute, DistributionPlan, Strategy};
+pub use replica::{ApplyVerdict, FleetReplica};
+pub use topology::{DcSpec, LinkSpec, ReplicaId, SimLink, Topology};
+
+use crate::config::ServeConfig;
+use crate::model::regressor::Regressor;
+use crate::serve::server::ServeStats;
+use crate::transfer::{UpdateMode, UpdatePipeline, UpdateReceiver};
+use crate::util::rng::Pcg32;
+
+/// Configuration of one fleet fabric.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub topology: Topology,
+    /// Wire encoding (the four Table-4 arms).
+    pub mode: UpdateMode,
+    /// Route policy resolved by the [`planner`] each round.
+    pub strategy: Strategy,
+    /// Catch-up window: a replica at most this many updates behind may
+    /// be healed by replaying the retained patch chain; farther behind
+    /// (or when replay would cost more bytes than a full file) it gets
+    /// a full-snapshot resync.
+    pub max_chain: usize,
+    /// Start a live serving engine per replica (None = headless
+    /// distribution sim — links and versions only).
+    pub serve: Option<ServeConfig>,
+    /// Name replicas register their model under.
+    pub model_name: String,
+    /// Seed for the deterministic loss simulation.
+    pub seed: u64,
+}
+
+impl FleetConfig {
+    pub fn new(topology: Topology, mode: UpdateMode) -> Self {
+        FleetConfig {
+            topology,
+            mode,
+            strategy: Strategy::Auto,
+            max_chain: 8,
+            serve: None,
+            model_name: "ctr".into(),
+            seed: 0xf1ee7,
+        }
+    }
+}
+
+/// How a catch-up was resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CatchUpKind {
+    /// Replica was already at head; nothing shipped.
+    None,
+    /// Replayed this many retained chained updates, in order.
+    Replay { updates: usize },
+    /// Shipped a full snapshot of this many bytes.
+    Resync { bytes: usize },
+}
+
+/// Everything observed about one publish round.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    /// Publish sequence number of this round's update (1-based).
+    pub seq: u64,
+    /// Bytes of the encoded update on the wire.
+    pub update_bytes: usize,
+    /// Size of the raw inference file (the baseline).
+    pub raw_bytes: usize,
+    /// Replicas that received this round's update via distribution or
+    /// were pulled to head by catch-up during the round.
+    pub delivered: usize,
+    /// Shipments lost this round (replicas left behind).
+    pub dropped: usize,
+    /// Catch-ups resolved by patch-chain replay this round.
+    pub replays: u64,
+    /// Catch-ups resolved by full resync this round.
+    pub resyncs: u64,
+    /// `head - min(replica seq)` after the round.
+    pub max_skew: u64,
+    /// Encoder wall time.
+    pub encode_seconds: f64,
+}
+
+/// The distribution fabric: one sender-side pipeline fanned out to
+/// every replica in the topology over simulated links.
+pub struct FleetFabric {
+    cfg: FleetConfig,
+    pipeline: UpdatePipeline,
+    /// In-order receiver that never misses an update: the reference
+    /// every replica must converge to, and the source of pre-swap
+    /// expected state for the soak's torn-response check.
+    reference: UpdateReceiver,
+    reference_model: Option<Regressor>,
+    /// Retained per-round updates (`log[i]` is publish seq `i+1`) —
+    /// the sender side of the catch-up replay path.
+    log: Vec<crate::transfer::WireUpdate>,
+    /// Everything before this index is already payload-blanked, so
+    /// [`compact_log`](Self::compact_log) stays O(1) per round.
+    log_blanked: usize,
+    head: u64,
+    replicas: Vec<FleetReplica>,
+    /// Per-DC trainer→DC links.
+    inter: Vec<SimLink>,
+    /// Per-DC intra-DC re-distribution links.
+    intra: Vec<SimLink>,
+    rng: Pcg32,
+    /// Fault injector: force-drop the next N shipments.
+    forced_drops: u32,
+    rounds: u64,
+    max_skew: u64,
+    replays: u64,
+    resyncs: u64,
+    converged_rounds: u64,
+    lag: Vec<LagStat>,
+}
+
+impl FleetFabric {
+    /// Build the fleet: every replica bootstraps from `template`
+    /// (structure + initial weights) at sequence 0.
+    pub fn new(cfg: FleetConfig, template: &Regressor) -> Self {
+        let mut reference = UpdateReceiver::new(cfg.mode);
+        reference.set_template(template.clone());
+        let replicas: Vec<FleetReplica> = cfg
+            .topology
+            .replica_ids()
+            .into_iter()
+            .map(|id| {
+                FleetReplica::new(
+                    id,
+                    cfg.mode,
+                    template,
+                    cfg.serve.as_ref(),
+                    &cfg.model_name,
+                )
+            })
+            .collect();
+        let inter = cfg.topology.dcs.iter().map(|d| SimLink::new(d.inter)).collect();
+        let intra = cfg.topology.dcs.iter().map(|d| SimLink::new(d.intra)).collect();
+        let rng = Pcg32::seeded(cfg.seed);
+        let lag = vec![LagStat::default(); replicas.len()];
+        let pipeline = UpdatePipeline::new(cfg.mode);
+        FleetFabric {
+            cfg,
+            pipeline,
+            reference,
+            reference_model: None,
+            log: Vec::new(),
+            log_blanked: 0,
+            head: 0,
+            replicas,
+            inter,
+            intra,
+            rng,
+            forced_drops: 0,
+            rounds: 0,
+            max_skew: 0,
+            replays: 0,
+            resyncs: 0,
+            converged_rounds: 0,
+            lag,
+        }
+    }
+
+    /// Publish one trained snapshot to the whole fleet.
+    pub fn publish(&mut self, reg: &Regressor) -> Result<RoundOutcome, String> {
+        self.publish_with(reg, |_, _| {})
+    }
+
+    /// [`publish`](Self::publish) with a hook that observes the
+    /// reconstructed model *before any replica can swap it in* — the
+    /// soak harness registers expected probe scores there, so traffic
+    /// hitting any replica can always attribute a response to a known
+    /// version (the fleet-wide torn-response invariant).
+    pub fn publish_with(
+        &mut self,
+        reg: &Regressor,
+        before_swap: impl FnOnce(u64, &Regressor),
+    ) -> Result<RoundOutcome, String> {
+        let seq = self.head + 1;
+        let update = self.pipeline.encode(reg);
+        let raw_bytes = self.pipeline.last_raw_len().unwrap_or(0);
+        let fresh = self.reference.apply(&update)?;
+        before_swap(seq, &fresh);
+        self.reference_model = Some(fresh);
+        let update_bytes = update.bytes.len();
+        let encode_seconds = update.encode_seconds;
+        self.log.push(update);
+        self.head = seq;
+
+        let plan = planner::plan(&self.cfg.topology, self.cfg.strategy);
+        let mut delivered = 0usize;
+        let mut dropped = 0usize;
+        let replays0 = self.replays;
+        let resyncs0 = self.resyncs;
+        for (dc, route) in plan.per_dc.iter().enumerate() {
+            let n_replicas = self.cfg.topology.dcs[dc].replicas;
+            match route {
+                DcRoute::Star => {
+                    for r in 0..n_replicas {
+                        match self.ship_inter(dc, update_bytes) {
+                            Some(secs) => {
+                                self.apply_at(dc, r, encode_seconds + secs)?;
+                                delivered += 1;
+                            }
+                            None => dropped += 1,
+                        }
+                    }
+                }
+                DcRoute::Tree { head } => {
+                    match self.ship_inter(dc, update_bytes) {
+                        None => dropped += n_replicas,
+                        Some(head_secs) => {
+                            self.apply_at(dc, *head, encode_seconds + head_secs)?;
+                            delivered += 1;
+                            for r in 0..n_replicas {
+                                if r == *head {
+                                    continue;
+                                }
+                                match self.ship_intra(dc, update_bytes) {
+                                    Some(secs) => {
+                                        self.apply_at(
+                                            dc,
+                                            r,
+                                            encode_seconds + head_secs + secs,
+                                        )?;
+                                        delivered += 1;
+                                    }
+                                    None => dropped += 1,
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        self.compact_log();
+        let max_skew = self.current_skew();
+        self.max_skew = self.max_skew.max(max_skew);
+        self.rounds += 1;
+        if max_skew == 0 {
+            self.converged_rounds += 1;
+        }
+        Ok(RoundOutcome {
+            seq,
+            update_bytes,
+            raw_bytes,
+            delivered,
+            dropped,
+            replays: self.replays - replays0,
+            resyncs: self.resyncs - resyncs0,
+            max_skew,
+            encode_seconds,
+        })
+    }
+
+    /// Bring replica `idx` (flattened DC-major index) to the head
+    /// version.  The catch-up protocol: when the replica's mode chains
+    /// updates, it is within the replay window, and the retained
+    /// patches sum to fewer bytes than a full snapshot, the missed
+    /// chain is replayed in order; otherwise a full-snapshot resync
+    /// ships the sender's current base file.  Catch-up payloads move
+    /// over a *reliable* control channel (lost shipments are
+    /// retransmitted and billed).
+    pub fn catch_up(&mut self, idx: usize) -> Result<CatchUpKind, String> {
+        let from = self.replicas[idx].seq();
+        if from >= self.head {
+            return Ok(CatchUpKind::None);
+        }
+        let dc = self.replicas[idx].id.dc;
+        let missed = (self.head - from) as usize;
+        let replay_bytes: usize = self.log[from as usize..self.head as usize]
+            .iter()
+            .map(|u| u.bytes.len())
+            .sum();
+        let full_len = self
+            .pipeline
+            .sent_bytes()
+            .map(|b| b.len())
+            .ok_or("nothing published yet")?;
+        // compact_log guarantees the last max_chain entries are intact;
+        // the emptiness check is insurance against window-math drift
+        let replay = self.cfg.mode.is_chained()
+            && missed <= self.cfg.max_chain
+            && replay_bytes < full_len
+            && self.log[from as usize..self.head as usize]
+                .iter()
+                .all(|u| !u.bytes.is_empty());
+        if replay {
+            for seq in from + 1..=self.head {
+                let len = self.log[(seq - 1) as usize].bytes.len();
+                let secs = self.ship_reliable_inter(dc, len);
+                let verdict =
+                    self.replicas[idx].deliver(seq, &self.log[(seq - 1) as usize])?;
+                debug_assert_eq!(verdict, ApplyVerdict::Applied);
+                self.lag[idx].record(secs);
+            }
+            self.replays += 1;
+            Ok(CatchUpKind::Replay { updates: missed })
+        } else {
+            let full = self
+                .pipeline
+                .sent_bytes()
+                .expect("checked above")
+                .to_vec();
+            let secs = self.ship_reliable_inter(dc, full.len());
+            self.replicas[idx].resync(self.head, &full)?;
+            self.lag[idx].record(secs);
+            self.resyncs += 1;
+            Ok(CatchUpKind::Resync { bytes: full.len() })
+        }
+    }
+
+    /// End-of-run barrier: catch every straggler up to head.  Returns
+    /// how many replicas needed it.  (Production runs this implicitly
+    /// — the next round's gap triggers the same protocol.)
+    pub fn converge(&mut self) -> Result<usize, String> {
+        let mut fixed = 0;
+        for idx in 0..self.replicas.len() {
+            if self.replicas[idx].seq() < self.head {
+                self.catch_up(idx)?;
+                fixed += 1;
+            }
+        }
+        Ok(fixed)
+    }
+
+    /// Force the next `n` shipments (any link) to be lost — the
+    /// deterministic fault injector behind the soak/property tests.
+    pub fn force_drops(&mut self, n: u32) {
+        self.forced_drops += n;
+    }
+
+    // ------------------------------------------------------ internals
+
+    fn apply_at(&mut self, dc: usize, r: usize, lag_seconds: f64) -> Result<(), String> {
+        let idx = self.cfg.topology.flat_index(ReplicaId { dc, replica: r });
+        let seq = self.head;
+        let verdict = self.replicas[idx].deliver(seq, &self.log[(seq - 1) as usize])?;
+        match verdict {
+            ApplyVerdict::Applied => {
+                self.lag[idx].record(lag_seconds);
+                Ok(())
+            }
+            ApplyVerdict::Duplicate => Ok(()),
+            ApplyVerdict::Gap => {
+                // the replica fell behind earlier (dropped update);
+                // heal the chain now
+                self.catch_up(idx).map(|_| ())
+            }
+        }
+    }
+
+    /// Drop retained payloads that the replay path can never use: the
+    /// log keeps one slot per seq (indexing), but only the newest
+    /// `max_chain` entries are replayable (and non-chained modes never
+    /// replay at all — their catch-up is always a resync of the
+    /// current base).  Without this, a long Raw-mode run would retain
+    /// every full snapshot ever published.
+    fn compact_log(&mut self) {
+        let keep = if self.cfg.mode.is_chained() {
+            self.cfg.max_chain.max(1)
+        } else {
+            1
+        };
+        let blank_upto = self.log.len().saturating_sub(keep);
+        let start = self.log_blanked.min(blank_upto);
+        for u in &mut self.log[start..blank_upto] {
+            u.bytes = Vec::new();
+        }
+        self.log_blanked = self.log_blanked.max(blank_upto);
+    }
+
+    fn take_forced_drop(&mut self) -> bool {
+        if self.forced_drops > 0 {
+            self.forced_drops -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn ship_inter(&mut self, dc: usize, len: usize) -> Option<f64> {
+        let force = self.take_forced_drop();
+        self.inter[dc].ship(len, &mut self.rng, force)
+    }
+
+    fn ship_intra(&mut self, dc: usize, len: usize) -> Option<f64> {
+        let force = self.take_forced_drop();
+        self.intra[dc].ship(len, &mut self.rng, force)
+    }
+
+    /// Reliable (retransmitting) inter-DC shipment for catch-up
+    /// traffic; every attempt is billed, delivery is guaranteed.  After
+    /// a bounded number of lossy retries the final retransmission is
+    /// forced through (and billed as a delivery), so even a 100%-loss
+    /// link cannot leave the ledger claiming convergence happened with
+    /// zero successful shipments.
+    fn ship_reliable_inter(&mut self, dc: usize, len: usize) -> f64 {
+        let mut total = 0.0;
+        for _ in 0..63 {
+            match self.ship_inter(dc, len) {
+                Some(secs) => return total + secs,
+                None => total += self.inter[dc].spec.transfer_seconds(len),
+            }
+        }
+        let secs = self.inter[dc].spec.transfer_seconds(len);
+        self.inter[dc].ledger.record(len, secs, true);
+        total + secs
+    }
+
+    fn current_skew(&self) -> u64 {
+        self.replicas.iter().map(|r| self.head - r.seq()).max().unwrap_or(0)
+    }
+
+    // ------------------------------------------------------ accessors
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.cfg.topology
+    }
+
+    /// Current head publish sequence (0 before the first round).
+    pub fn head(&self) -> u64 {
+        self.head
+    }
+
+    /// All replicas, flattened DC-major.
+    pub fn replicas(&self) -> &[FleetReplica] {
+        &self.replicas
+    }
+
+    /// The reference model every replica must converge to (None before
+    /// the first publish).
+    pub fn reference(&self) -> Option<&Regressor> {
+        self.reference_model.as_ref()
+    }
+
+    /// Sender-side base file for the current head (the resync payload).
+    pub fn sender_base(&self) -> Option<&[u8]> {
+        self.pipeline.sent_bytes()
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> FleetMetrics {
+        FleetMetrics {
+            rounds: self.rounds,
+            max_version_skew: self.max_skew,
+            replays: self.replays,
+            resyncs: self.resyncs,
+            converged_rounds: self.converged_rounds,
+            lag: self.lag.clone(),
+            inter: self.inter.iter().map(|l| l.ledger).collect(),
+            intra: self.intra.iter().map(|l| l.ledger).collect(),
+        }
+    }
+
+    /// Stop all replica engines; returns their final serving stats
+    /// (None entries for headless replicas).
+    pub fn shutdown(self) -> Vec<Option<ServeStats>> {
+        self.replicas.into_iter().map(|r| r.shutdown()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+    use crate::model::Workspace;
+
+    fn trained_snapshots(n: usize, per: usize) -> (Regressor, Vec<Regressor>) {
+        let cfg = ModelConfig::ffm(4, 2, 1 << 9);
+        let template = Regressor::new(&cfg);
+        let mut reg = template.clone();
+        let mut ws = Workspace::new();
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 9, 1 << 9);
+        let mut out = Vec::new();
+        for _ in 0..n {
+            for _ in 0..per {
+                let ex = s.next_example();
+                reg.learn(&ex, &mut ws);
+            }
+            out.push(reg.clone());
+        }
+        (template, out)
+    }
+
+    fn fabric(mode: UpdateMode, dcs: usize, replicas: usize, template: &Regressor) -> FleetFabric {
+        let topo = Topology::uniform(dcs, replicas, LinkSpec::wan(), LinkSpec::lan());
+        FleetFabric::new(FleetConfig::new(topo, mode), template)
+    }
+
+    #[test]
+    fn lossless_fleet_converges_every_round() {
+        for mode in UpdateMode::ALL {
+            let (template, snaps) = trained_snapshots(3, 250);
+            let mut fab = fabric(mode, 2, 2, &template);
+            for (i, snap) in snaps.iter().enumerate() {
+                let o = fab.publish(snap).unwrap();
+                assert_eq!(o.seq, i as u64 + 1);
+                assert_eq!(o.delivered, 4, "{mode:?}");
+                assert_eq!(o.dropped, 0);
+                assert_eq!(o.max_skew, 0, "{mode:?}");
+            }
+            assert_eq!(fab.converge().unwrap(), 0);
+            let reference = fab.reference().unwrap().pool.weights.clone();
+            for rep in fab.replicas() {
+                assert_eq!(rep.seq(), fab.head());
+                assert_eq!(
+                    rep.model().pool.weights,
+                    reference,
+                    "{mode:?} replica {:?} diverged",
+                    rep.id
+                );
+            }
+            let m = fab.metrics();
+            assert_eq!(m.rounds, 3);
+            assert_eq!(m.converged_rounds, 3);
+            assert_eq!(m.drops(), 0);
+            // auto strategy on 2-replica DCs = tree: one inter shipment
+            // per DC per round
+            assert_eq!(
+                m.inter.iter().map(|l| l.messages).sum::<u64>(),
+                2 * 3,
+                "{mode:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn forced_drop_triggers_catchup_in_chained_modes() {
+        for mode in [UpdateMode::PatchOnly, UpdateMode::QuantPatch] {
+            let (template, snaps) = trained_snapshots(3, 250);
+            let mut fab = fabric(mode, 1, 2, &template);
+            fab.publish(&snaps[0]).unwrap();
+            // lose round 2's single inter shipment: the whole DC tree
+            // misses seq 2
+            fab.force_drops(1);
+            let o2 = fab.publish(&snaps[1]).unwrap();
+            assert_eq!(o2.dropped, 2, "{mode:?}");
+            assert_eq!(o2.max_skew, 1, "{mode:?}");
+            // round 3 arrives: the head replica hits a gap and the
+            // catch-up protocol replays the missed link
+            let o3 = fab.publish(&snaps[2]).unwrap();
+            assert_eq!(o3.max_skew, 0, "{mode:?}");
+            assert!(o3.replays + o3.resyncs >= 1, "{mode:?}");
+            let reference = fab.reference().unwrap().pool.weights.clone();
+            for rep in fab.replicas() {
+                assert_eq!(rep.model().pool.weights, reference, "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_file_modes_self_heal_without_catchup() {
+        // raw/quant updates are self-contained: a dropped round needs
+        // no protocol, the next delivery skips ahead
+        let (template, snaps) = trained_snapshots(3, 250);
+        let mut fab = fabric(UpdateMode::Raw, 1, 2, &template);
+        fab.publish(&snaps[0]).unwrap();
+        fab.force_drops(1);
+        let o2 = fab.publish(&snaps[1]).unwrap();
+        assert_eq!(o2.max_skew, 1);
+        let o3 = fab.publish(&snaps[2]).unwrap();
+        assert_eq!(o3.max_skew, 0);
+        assert_eq!(o3.replays + o3.resyncs, 0);
+        assert_eq!(fab.converge().unwrap(), 0);
+    }
+
+    #[test]
+    fn max_chain_zero_forces_resync() {
+        let (template, snaps) = trained_snapshots(3, 250);
+        let topo = Topology::uniform(1, 2, LinkSpec::wan(), LinkSpec::lan());
+        let mut cfg = FleetConfig::new(topo, UpdateMode::QuantPatch);
+        cfg.max_chain = 0;
+        let mut fab = FleetFabric::new(cfg, &template);
+        fab.publish(&snaps[0]).unwrap();
+        fab.force_drops(1);
+        fab.publish(&snaps[1]).unwrap();
+        let o3 = fab.publish(&snaps[2]).unwrap();
+        assert_eq!(o3.replays, 0);
+        assert!(o3.resyncs >= 1);
+        let m = fab.metrics();
+        assert_eq!(m.replays, 0);
+        assert!(m.resyncs >= 1);
+    }
+
+    #[test]
+    fn converge_pulls_final_round_stragglers() {
+        let (template, snaps) = trained_snapshots(2, 250);
+        let mut fab = fabric(UpdateMode::QuantPatch, 1, 2, &template);
+        fab.publish(&snaps[0]).unwrap();
+        fab.force_drops(1); // final round's only inter shipment lost
+        let o = fab.publish(&snaps[1]).unwrap();
+        assert_eq!(o.dropped, 2);
+        assert_eq!(fab.converge().unwrap(), 2);
+        let reference = fab.reference().unwrap().pool.weights.clone();
+        for rep in fab.replicas() {
+            assert_eq!(rep.seq(), 2);
+            assert_eq!(rep.model().pool.weights, reference);
+        }
+        let m = fab.metrics();
+        assert!(m.replays + m.resyncs >= 1);
+        assert_eq!(m.max_version_skew, 1);
+    }
+
+    #[test]
+    fn star_and_tree_byte_accounting() {
+        let (template, snaps) = trained_snapshots(2, 250);
+        for (strategy, inter_per_round, intra_per_round) in [
+            (Strategy::Star, 3usize, 0usize),
+            (Strategy::Tree, 1, 2),
+        ] {
+            let topo = Topology::uniform(1, 3, LinkSpec::wan(), LinkSpec::lan());
+            let mut cfg = FleetConfig::new(topo, UpdateMode::Raw);
+            cfg.strategy = strategy;
+            let mut fab = FleetFabric::new(cfg, &template);
+            let mut expect_inter = 0u64;
+            let mut expect_intra = 0u64;
+            for snap in &snaps {
+                let o = fab.publish(snap).unwrap();
+                expect_inter += (o.update_bytes * inter_per_round) as u64;
+                expect_intra += (o.update_bytes * intra_per_round) as u64;
+            }
+            let m = fab.metrics();
+            assert_eq!(m.inter_bytes(), expect_inter, "{strategy:?}");
+            assert_eq!(m.intra_bytes(), expect_intra, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn log_compaction_keeps_only_the_replayable_window() {
+        // non-chained modes never replay: one retained payload slot
+        let (template, snaps) = trained_snapshots(3, 250);
+        let mut fab = fabric(UpdateMode::Raw, 1, 1, &template);
+        for snap in &snaps {
+            fab.publish(snap).unwrap();
+        }
+        assert_eq!(fab.log.len(), 3, "one slot per seq survives");
+        let retained = fab.log.iter().filter(|u| !u.bytes.is_empty()).count();
+        assert_eq!(retained, 1);
+
+        // chained modes keep the max_chain newest payloads
+        let (template, snaps) = trained_snapshots(4, 250);
+        let topo = Topology::uniform(1, 1, LinkSpec::wan(), LinkSpec::lan());
+        let mut cfg = FleetConfig::new(topo, UpdateMode::QuantPatch);
+        cfg.max_chain = 2;
+        let mut fab = FleetFabric::new(cfg, &template);
+        for snap in &snaps {
+            fab.publish(snap).unwrap();
+        }
+        let retained = fab.log.iter().filter(|u| !u.bytes.is_empty()).count();
+        assert_eq!(retained, 2);
+        // the blanked prefix is exactly the oldest entries
+        assert!(fab.log[0].bytes.is_empty() && fab.log[1].bytes.is_empty());
+    }
+
+    #[test]
+    fn lag_includes_tree_second_hop() {
+        let (template, snaps) = trained_snapshots(1, 250);
+        let topo = Topology::uniform(1, 2, LinkSpec::wan(), LinkSpec::lan());
+        let mut cfg = FleetConfig::new(topo, UpdateMode::Raw);
+        cfg.strategy = Strategy::Tree;
+        let mut fab = FleetFabric::new(cfg, &template);
+        fab.publish(&snaps[0]).unwrap();
+        let m = fab.metrics();
+        // replica 1 rides head's WAN hop plus its own LAN hop
+        assert!(m.lag[1].last_seconds > m.lag[0].last_seconds);
+    }
+}

@@ -1,0 +1,176 @@
+//! The distribution planner: how one round's update reaches every
+//! replica.
+//!
+//! The paper's bandwidth trick — quantize + patch so cross-DC updates
+//! shrink by an order of magnitude — generalizes at the fleet level:
+//! the *number of times* an update crosses a DC boundary matters as
+//! much as its size.  Two route families:
+//!
+//! * **Star** — the trainer ships to every replica directly.  Each of
+//!   a DC's M replicas costs one inter-DC crossing: `M × len` bytes on
+//!   the expensive edge.
+//! * **Tree** (relay / fan-out) — the trainer ships **once** per DC to
+//!   a head replica, which re-distributes intra-DC: `len` inter-DC
+//!   bytes + `(M-1) × len` cheap intra-DC bytes, at the price of one
+//!   extra (LAN) hop of publish lag for the non-head replicas.
+//!
+//! `Auto` picks per DC by predicted inter-DC bytes: tree strictly wins
+//! for M ≥ 2, and for M = 1 the star route is chosen (identical bytes,
+//! one fewer failure domain — no head to lose).
+
+use crate::fleet::topology::Topology;
+
+/// Route-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Trainer → every replica directly.
+    Star,
+    /// Trainer → per-DC head, head → DC-local replicas.
+    Tree,
+    /// Per DC, whichever predicts fewer inter-DC bytes.
+    Auto,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 3] = [Strategy::Star, Strategy::Tree, Strategy::Auto];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::Star => "star",
+            Strategy::Tree => "tree",
+            Strategy::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI flag value (`star|tree|auto`).
+    pub fn parse(s: &str) -> Result<Strategy, String> {
+        Ok(match s {
+            "star" => Strategy::Star,
+            "tree" => Strategy::Tree,
+            "auto" => Strategy::Auto,
+            other => {
+                return Err(format!(
+                    "unknown strategy '{other}' (star|tree|auto)"
+                ))
+            }
+        })
+    }
+}
+
+/// How one DC's replicas receive a round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DcRoute {
+    /// Every replica gets its own trainer→replica inter-DC shipment.
+    Star,
+    /// One inter-DC shipment to `head`; head re-distributes intra-DC.
+    Tree { head: usize },
+}
+
+/// A resolved plan: one route per DC, in topology order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DistributionPlan {
+    pub per_dc: Vec<DcRoute>,
+}
+
+impl DistributionPlan {
+    /// Bytes a `len`-byte update puts on inter-DC links under this
+    /// plan (loss-free prediction — the planner's cost model).
+    pub fn predicted_inter_bytes(&self, topo: &Topology, len: usize) -> u64 {
+        self.per_dc
+            .iter()
+            .zip(&topo.dcs)
+            .map(|(route, dc)| match route {
+                DcRoute::Star => (dc.replicas * len) as u64,
+                DcRoute::Tree { .. } => len as u64,
+            })
+            .sum()
+    }
+
+    /// Bytes the same update puts on intra-DC links.
+    pub fn predicted_intra_bytes(&self, topo: &Topology, len: usize) -> u64 {
+        self.per_dc
+            .iter()
+            .zip(&topo.dcs)
+            .map(|(route, dc)| match route {
+                DcRoute::Star => 0,
+                DcRoute::Tree { .. } => ((dc.replicas - 1) * len) as u64,
+            })
+            .sum()
+    }
+}
+
+/// Resolve a strategy against a topology.
+///
+/// The update's byte size cancels out of the inter-DC comparison (tree
+/// ships `len`, star ships `replicas × len` per DC), so the plan is a
+/// pure function of the topology and policy.
+pub fn plan(topo: &Topology, strategy: Strategy) -> DistributionPlan {
+    let per_dc = topo
+        .dcs
+        .iter()
+        .map(|dc| match strategy {
+            Strategy::Star => DcRoute::Star,
+            Strategy::Tree => DcRoute::Tree { head: 0 },
+            Strategy::Auto => {
+                if dc.replicas >= 2 {
+                    DcRoute::Tree { head: 0 }
+                } else {
+                    DcRoute::Star
+                }
+            }
+        })
+        .collect();
+    DistributionPlan { per_dc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::topology::LinkSpec;
+
+    fn topo(dcs: usize, replicas: usize) -> Topology {
+        Topology::uniform(dcs, replicas, LinkSpec::wan(), LinkSpec::lan())
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.label()).unwrap(), s);
+        }
+        assert!(Strategy::parse("mesh").is_err());
+    }
+
+    #[test]
+    fn auto_picks_tree_for_multi_replica_dcs() {
+        let p = plan(&topo(3, 2), Strategy::Auto);
+        assert!(p.per_dc.iter().all(|r| matches!(r, DcRoute::Tree { head: 0 })));
+        let p1 = plan(&topo(3, 1), Strategy::Auto);
+        assert!(p1.per_dc.iter().all(|r| *r == DcRoute::Star));
+    }
+
+    #[test]
+    fn predicted_bytes_star_vs_tree() {
+        let t = topo(3, 4);
+        let star = plan(&t, Strategy::Star);
+        let tree = plan(&t, Strategy::Tree);
+        assert_eq!(star.predicted_inter_bytes(&t, 100), 3 * 4 * 100);
+        assert_eq!(star.predicted_intra_bytes(&t, 100), 0);
+        assert_eq!(tree.predicted_inter_bytes(&t, 100), 3 * 100);
+        assert_eq!(tree.predicted_intra_bytes(&t, 100), 3 * 3 * 100);
+        // the planner's whole point: tree ships fewer cross-DC bytes
+        assert!(
+            tree.predicted_inter_bytes(&t, 100) < star.predicted_inter_bytes(&t, 100)
+        );
+    }
+
+    #[test]
+    fn auto_matches_tree_bytes_when_tree_wins() {
+        let t = topo(2, 3);
+        let auto = plan(&t, Strategy::Auto);
+        let tree = plan(&t, Strategy::Tree);
+        assert_eq!(
+            auto.predicted_inter_bytes(&t, 64),
+            tree.predicted_inter_bytes(&t, 64)
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! One serving replica in the fleet: delta-chain version tracking
+//! around an [`UpdateReceiver`], an atomically hot-swappable
+//! [`ModelHandle`], and (optionally) a live [`ServingEngine`].
+//!
+//! The replica is where the chain discipline is enforced.  A byte
+//! patch for round N only means anything against the base produced by
+//! round N-1 — and because weight files keep a fixed length, applying
+//! it to the *wrong* base would silently "succeed" and corrupt the
+//! replica.  [`FleetReplica::deliver`] therefore gates every chained
+//! update on the expected sequence number and reports a [`Gap`]
+//! instead of touching the receiver, leaving the catch-up protocol
+//! (replay or resync, see [`crate::fleet::FleetFabric::catch_up`]) to
+//! heal the chain.
+//!
+//! [`Gap`]: ApplyVerdict::Gap
+
+use std::sync::Arc;
+
+use crate::config::ServeConfig;
+use crate::model::regressor::Regressor;
+use crate::serve::router::Router;
+use crate::serve::server::{ServeClient, ServeStats, ServingEngine};
+use crate::serve::ModelHandle;
+use crate::transfer::{UpdateMode, UpdateReceiver, WireUpdate};
+
+use super::topology::ReplicaId;
+
+/// What a delivery attempt did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApplyVerdict {
+    /// The update advanced this replica to its sequence number.
+    Applied,
+    /// The replica already has this (or a newer) version; ignored.
+    Duplicate,
+    /// Chained update arrived out of sequence; the replica refused it
+    /// (applying a patch against the wrong base would corrupt the
+    /// weights) and needs the catch-up protocol.
+    Gap,
+}
+
+/// One fleet replica: versioned receiver + serving slot.
+pub struct FleetReplica {
+    pub id: ReplicaId,
+    receiver: UpdateReceiver,
+    handle: ModelHandle,
+    engine: Option<ServingEngine>,
+    seq: u64,
+}
+
+impl FleetReplica {
+    /// Bootstrap a replica from the structural template (the model
+    /// every DC starts serving at version 0, before the first round).
+    /// With `serve` set, a live engine is started and the replica's
+    /// model registered under `model_name`.
+    pub fn new(
+        id: ReplicaId,
+        mode: UpdateMode,
+        template: &Regressor,
+        serve: Option<&ServeConfig>,
+        model_name: &str,
+    ) -> Self {
+        let mut receiver = UpdateReceiver::new(mode);
+        receiver.set_template(template.clone());
+        let handle = ModelHandle::new(template.clone());
+        let engine = serve.map(|cfg| {
+            let router = Router::new(cfg.workers);
+            router.register(model_name, handle.clone());
+            ServingEngine::start(router, cfg.clone())
+        });
+        FleetReplica { id, receiver, handle, engine, seq: 0 }
+    }
+
+    /// Last applied publish sequence (0 = still on the bootstrap).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// The hot-swappable serving slot.
+    pub fn handle(&self) -> &ModelHandle {
+        &self.handle
+    }
+
+    /// Currently served model snapshot.
+    pub fn model(&self) -> Arc<Regressor> {
+        self.handle.load()
+    }
+
+    /// Traffic handle, when this replica serves.
+    pub fn client(&self) -> Option<ServeClient> {
+        self.engine.as_ref().map(|e| e.client())
+    }
+
+    /// Deliver publish `seq`.  Chained modes require exact sequence;
+    /// full-file modes (raw/quant) may skip ahead, since every update
+    /// is self-contained.
+    pub fn deliver(&mut self, seq: u64, update: &WireUpdate) -> Result<ApplyVerdict, String> {
+        if seq <= self.seq {
+            return Ok(ApplyVerdict::Duplicate);
+        }
+        if seq != self.seq + 1 && update.mode.is_chained() {
+            return Ok(ApplyVerdict::Gap);
+        }
+        let fresh = self.receiver.apply(update)?;
+        self.install(seq, fresh);
+        Ok(ApplyVerdict::Applied)
+    }
+
+    /// Full-snapshot resync: jump straight to `seq` from the sender's
+    /// base file, whatever state the chain was in.
+    pub fn resync(&mut self, seq: u64, full_base: &[u8]) -> Result<(), String> {
+        let fresh = self.receiver.resync(full_base)?;
+        self.install(seq, fresh);
+        Ok(())
+    }
+
+    /// Receiver-side base file (bit-compared against the sender's in
+    /// the soak invariants).
+    pub fn base_bytes(&self) -> Option<&[u8]> {
+        self.receiver.base_bytes()
+    }
+
+    fn install(&mut self, seq: u64, fresh: Regressor) {
+        self.handle.swap(fresh);
+        if let Some(engine) = &self.engine {
+            engine.invalidate_caches();
+        }
+        self.seq = seq;
+    }
+
+    /// Stop serving; returns the engine's final statistics, if any.
+    pub fn shutdown(self) -> Option<ServeStats> {
+        self.engine.map(|e| e.shutdown())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+    use crate::model::Workspace;
+    use crate::transfer::UpdatePipeline;
+
+    fn snapshots(n: usize) -> (Regressor, Vec<Regressor>) {
+        let cfg = ModelConfig::ffm(4, 2, 1 << 9);
+        let template = Regressor::new(&cfg);
+        let mut reg = template.clone();
+        let mut ws = Workspace::new();
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 5, 1 << 9);
+        let mut out = Vec::new();
+        for _ in 0..n {
+            for _ in 0..250 {
+                let ex = s.next_example();
+                reg.learn(&ex, &mut ws);
+            }
+            out.push(reg.clone());
+        }
+        (template, out)
+    }
+
+    fn rid() -> ReplicaId {
+        ReplicaId { dc: 0, replica: 0 }
+    }
+
+    #[test]
+    fn in_order_chain_applies() {
+        let (template, snaps) = snapshots(3);
+        let mut pipe = UpdatePipeline::new(UpdateMode::QuantPatch);
+        let mut rep =
+            FleetReplica::new(rid(), UpdateMode::QuantPatch, &template, None, "m");
+        assert_eq!(rep.seq(), 0);
+        for (i, snap) in snaps.iter().enumerate() {
+            let u = pipe.encode(snap);
+            assert_eq!(rep.deliver(i as u64 + 1, &u).unwrap(), ApplyVerdict::Applied);
+            assert_eq!(rep.seq(), i as u64 + 1);
+        }
+        assert_eq!(rep.base_bytes(), pipe.sent_bytes());
+    }
+
+    #[test]
+    fn chained_gap_is_refused_and_base_untouched() {
+        let (template, snaps) = snapshots(3);
+        let mut pipe = UpdatePipeline::new(UpdateMode::PatchOnly);
+        let mut rep =
+            FleetReplica::new(rid(), UpdateMode::PatchOnly, &template, None, "m");
+        let u1 = pipe.encode(&snaps[0]);
+        let u2 = pipe.encode(&snaps[1]);
+        let u3 = pipe.encode(&snaps[2]);
+        assert_eq!(rep.deliver(1, &u1).unwrap(), ApplyVerdict::Applied);
+        let base_before = rep.base_bytes().map(|b| b.to_vec());
+        // drop u2, attempt u3: refused, state unchanged
+        assert_eq!(rep.deliver(3, &u3).unwrap(), ApplyVerdict::Gap);
+        assert_eq!(rep.seq(), 1);
+        assert_eq!(rep.base_bytes().map(|b| b.to_vec()), base_before);
+        // replaying the missed link heals the chain
+        assert_eq!(rep.deliver(2, &u2).unwrap(), ApplyVerdict::Applied);
+        assert_eq!(rep.deliver(3, &u3).unwrap(), ApplyVerdict::Applied);
+        assert_eq!(rep.base_bytes(), pipe.sent_bytes());
+        assert_eq!(
+            rep.model().pool.weights,
+            snaps[2].pool.weights,
+            "patch chain must land on the trainer's weights"
+        );
+    }
+
+    #[test]
+    fn full_file_modes_skip_ahead() {
+        for mode in [UpdateMode::Raw, UpdateMode::Quant] {
+            let (template, snaps) = snapshots(3);
+            let mut pipe = UpdatePipeline::new(mode);
+            let mut rep = FleetReplica::new(rid(), mode, &template, None, "m");
+            let _u1 = pipe.encode(&snaps[0]);
+            let _u2 = pipe.encode(&snaps[1]);
+            let u3 = pipe.encode(&snaps[2]);
+            // u1/u2 never arrive; u3 is self-contained
+            assert_eq!(rep.deliver(3, &u3).unwrap(), ApplyVerdict::Applied, "{mode:?}");
+            assert_eq!(rep.seq(), 3);
+        }
+    }
+
+    #[test]
+    fn duplicates_and_stale_updates_ignored() {
+        let (template, snaps) = snapshots(2);
+        let mut pipe = UpdatePipeline::new(UpdateMode::Raw);
+        let mut rep = FleetReplica::new(rid(), UpdateMode::Raw, &template, None, "m");
+        let u1 = pipe.encode(&snaps[0]);
+        let u2 = pipe.encode(&snaps[1]);
+        assert_eq!(rep.deliver(1, &u1).unwrap(), ApplyVerdict::Applied);
+        assert_eq!(rep.deliver(1, &u1).unwrap(), ApplyVerdict::Duplicate);
+        assert_eq!(rep.deliver(2, &u2).unwrap(), ApplyVerdict::Applied);
+        assert_eq!(rep.deliver(1, &u1).unwrap(), ApplyVerdict::Duplicate);
+        assert_eq!(rep.seq(), 2);
+    }
+
+    #[test]
+    fn resync_heals_a_broken_chain() {
+        let (template, snaps) = snapshots(3);
+        let mut pipe = UpdatePipeline::new(UpdateMode::QuantPatch);
+        let mut rep =
+            FleetReplica::new(rid(), UpdateMode::QuantPatch, &template, None, "m");
+        let u1 = pipe.encode(&snaps[0]);
+        rep.deliver(1, &u1).unwrap();
+        let _u2 = pipe.encode(&snaps[1]);
+        let u3 = pipe.encode(&snaps[2]);
+        assert_eq!(rep.deliver(3, &u3).unwrap(), ApplyVerdict::Gap);
+        rep.resync(3, pipe.sent_bytes().unwrap()).unwrap();
+        assert_eq!(rep.seq(), 3);
+        assert_eq!(rep.base_bytes(), pipe.sent_bytes());
+    }
+
+    #[test]
+    fn serving_replica_swaps_on_install() {
+        let (template, snaps) = snapshots(1);
+        let mut pipe = UpdatePipeline::new(UpdateMode::Raw);
+        let serve = ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait_us: 50,
+            context_cache_entries: 64,
+        };
+        let mut rep =
+            FleetReplica::new(rid(), UpdateMode::Raw, &template, Some(&serve), "m");
+        assert!(rep.client().is_some());
+        let v0 = rep.handle().version();
+        rep.deliver(1, &pipe.encode(&snaps[0])).unwrap();
+        assert_eq!(rep.handle().version(), v0 + 1);
+        let stats = rep.shutdown().unwrap();
+        assert_eq!(stats.errors, 0);
+    }
+}

@@ -1,0 +1,362 @@
+//! Fleet-wide soak harness: the deployment-plane soak of
+//! [`crate::deploy::harness`], scaled out to a multi-DC fleet with
+//! fault injection.
+//!
+//! Runs N train→publish rounds through a [`FleetFabric`] while traffic
+//! threads score a fixed probe set against **every replica's** serving
+//! engine concurrently, then asserts the fleet invariants:
+//!
+//! 1. **No torn/mixed-version responses, fleet-wide** — every response
+//!    from any replica matches the scores of exactly one published
+//!    version (expected scores are registered before any replica can
+//!    swap that version in).
+//! 2. **Bit-identical convergence** — after the final catch-up, every
+//!    replica's weights equal the reference receiver's bit for bit, in
+//!    every update mode, even when shipments were force-dropped
+//!    mid-run and replicas healed through replay/resync.
+//! 3. **Catch-up actually runs** — injected drops leave version skew
+//!    behind, and (for chained modes) the protocol repairs it.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::config::{ModelConfig, ServeConfig};
+use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+use crate::deploy::harness::probe_scores;
+use crate::fleet::{
+    FleetConfig, FleetFabric, FleetMetrics, LinkSpec, RoundOutcome, Strategy,
+    Topology,
+};
+use crate::model::regressor::Regressor;
+use crate::serve::server::ServeClient;
+use crate::serve::trace::TraceGenerator;
+use crate::serve::Request;
+use crate::train::hogwild::{train_chunk, HogwildConfig};
+use crate::transfer::UpdateMode;
+
+/// Fleet soak parameters.
+#[derive(Clone, Debug)]
+pub struct FleetSoakConfig {
+    pub mode: UpdateMode,
+    pub strategy: Strategy,
+    /// Data centers (the ISSUE floor is 3).
+    pub dcs: usize,
+    /// Replicas per DC (floor 2).
+    pub replicas_per_dc: usize,
+    /// Train→publish rounds (floor 5).
+    pub rounds: usize,
+    pub examples_per_round: usize,
+    pub train_threads: usize,
+    /// Concurrent traffic-driver threads (each cycles over every
+    /// replica's client).
+    pub traffic_threads: usize,
+    /// Distinct probe requests.
+    pub probes: usize,
+    /// Shipments force-dropped at the start of round `drop_round` —
+    /// deterministic fault injection exercising the catch-up protocol.
+    pub forced_drops: u32,
+    pub drop_round: usize,
+    pub seed: u64,
+}
+
+impl FleetSoakConfig {
+    /// `cargo test`-sized but real: 3 DCs × 2 replicas, 5 rounds,
+    /// 2 injected drops, live engines and concurrent traffic.
+    pub fn quick(mode: UpdateMode) -> Self {
+        FleetSoakConfig {
+            mode,
+            strategy: Strategy::Auto,
+            dcs: 3,
+            replicas_per_dc: 2,
+            rounds: 5,
+            examples_per_round: 1_200,
+            train_threads: 2,
+            traffic_threads: 2,
+            probes: 12,
+            forced_drops: 2,
+            drop_round: 1,
+            seed: 0xf1ee7,
+        }
+    }
+}
+
+/// Everything a fleet soak observed.
+#[derive(Clone, Debug)]
+pub struct FleetSoakReport {
+    pub mode: UpdateMode,
+    pub rounds: Vec<RoundOutcome>,
+    /// Probe responses checked across all replicas and threads.
+    pub probe_checks: u64,
+    /// Responses matching NO published version (must be 0).
+    pub torn_responses: u64,
+    /// Distinct published versions observed being served.
+    pub versions_observed: usize,
+    /// Replicas that needed the end-of-run catch-up barrier.
+    pub caught_up_at_converge: usize,
+    /// Every replica's weights bit-identical to each other.
+    pub replicas_bit_identical: bool,
+    /// ... and to the reference receiver's reconstruction.
+    pub replicas_match_reference: bool,
+    /// Serving errors summed over replica engines.
+    pub serve_errors: u64,
+    pub metrics: FleetMetrics,
+}
+
+impl FleetSoakReport {
+    /// Panic (with context) unless every fleet invariant held.
+    pub fn assert_healthy(&self) {
+        let mode = self.mode;
+        assert_eq!(
+            self.torn_responses, 0,
+            "{mode:?}: {} of {} responses matched no published version",
+            self.torn_responses, self.probe_checks
+        );
+        assert!(self.probe_checks > 0, "{mode:?}: no probes were scored");
+        assert!(
+            self.versions_observed >= 2,
+            "{mode:?}: only {} version(s) served — no live swap observed",
+            self.versions_observed
+        );
+        assert!(
+            self.replicas_bit_identical,
+            "{mode:?}: replicas diverged at convergence"
+        );
+        assert!(
+            self.replicas_match_reference,
+            "{mode:?}: converged replicas differ from the reference"
+        );
+        assert_eq!(self.serve_errors, 0, "{mode:?}: serving errors");
+        if self.metrics.drops() > 0 {
+            assert!(
+                self.metrics.max_version_skew >= 1,
+                "{mode:?}: drops happened but no skew was ever recorded"
+            );
+            if mode.is_chained() {
+                assert!(
+                    self.metrics.replays + self.metrics.resyncs >= 1,
+                    "{mode:?}: chained mode dropped updates but never caught up"
+                );
+            }
+        }
+    }
+}
+
+/// Published versions: (seq, per-probe expected scores).  Seq 0 is the
+/// bootstrap template every replica starts serving.
+type Published = Arc<RwLock<Vec<(u64, Vec<Vec<f32>>)>>>;
+
+fn traffic_driver(
+    clients: Vec<ServeClient>,
+    probes: Vec<Request>,
+    published: Published,
+    stop: Arc<AtomicBool>,
+    offset: usize,
+) -> (u64, u64, HashSet<u64>) {
+    let mut checks = 0u64;
+    let mut torn = 0u64;
+    let mut versions = HashSet::new();
+    let mut i = offset;
+    while !stop.load(Ordering::Relaxed) {
+        let probe_idx = i % probes.len();
+        let client = &clients[i % clients.len()];
+        i += 1;
+        let resp = match client.score(probes[probe_idx].clone()) {
+            Ok(r) => r,
+            Err(_) => break, // engines shut down under us
+        };
+        checks += 1;
+        let reg = published.read().expect("published lock");
+        match reg
+            .iter()
+            .rev()
+            .find(|(_, scores)| scores[probe_idx] == resp.scores)
+        {
+            Some((seq, _)) => {
+                versions.insert(*seq);
+            }
+            None => torn += 1,
+        }
+    }
+    (checks, torn, versions)
+}
+
+/// Run one fleet soak; invariant verdicts live in the report (see
+/// [`FleetSoakReport::assert_healthy`]).
+pub fn run_fleet_soak(cfg: FleetSoakConfig) -> FleetSoakReport {
+    // same 5-field tiny-shaped task as the single-pipe deploy soak
+    let mut spec = DatasetSpec::tiny();
+    spec.cat_fields = 4;
+    let fields = spec.fields();
+    let model_cfg = ModelConfig::deep_ffm(fields, 2, 1 << 12, &[8]);
+    let mut trainer = Regressor::new(&model_cfg);
+    let mut stream =
+        SyntheticStream::with_buckets(spec, cfg.seed, model_cfg.buckets);
+
+    let topo = Topology::uniform(
+        cfg.dcs,
+        cfg.replicas_per_dc,
+        LinkSpec::wan(),
+        LinkSpec::lan(),
+    );
+    let mut fcfg = FleetConfig::new(topo, cfg.mode);
+    fcfg.strategy = cfg.strategy;
+    fcfg.seed = cfg.seed ^ 0x11;
+    fcfg.serve = Some(ServeConfig {
+        workers: 1,
+        max_batch: 32,
+        max_wait_us: 100,
+        context_cache_entries: 1_024,
+    });
+    let model_name = fcfg.model_name.clone();
+    let mut fabric = FleetFabric::new(fcfg, &trainer);
+
+    // fixed probe set (2 context fields, 4 candidates each)
+    let mut gen = TraceGenerator::new(
+        cfg.seed ^ 0x7ea5,
+        fields,
+        2,
+        model_cfg.buckets,
+        4,
+    );
+    let probes: Vec<Request> = (0..cfg.probes.max(1))
+        .map(|_| gen.next_request(&model_name))
+        .collect();
+
+    // register the bootstrap (seq 0) before any traffic flows
+    let published: Published = Arc::new(RwLock::new(vec![(
+        0,
+        probe_scores(&trainer, &probes),
+    )]));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let clients: Vec<ServeClient> = fabric
+        .replicas()
+        .iter()
+        .map(|r| r.client().expect("soak replicas serve"))
+        .collect();
+    let mut drivers = Vec::new();
+    for t in 0..cfg.traffic_threads.max(1) {
+        let clients = clients.clone();
+        let probes = probes.clone();
+        let published = published.clone();
+        let stop = stop.clone();
+        drivers.push(
+            std::thread::Builder::new()
+                .name(format!("fw-fleet-traffic-{t}"))
+                .spawn(move || traffic_driver(clients, probes, published, stop, t))
+                .expect("spawn traffic driver"),
+        );
+    }
+
+    let mut rounds = Vec::with_capacity(cfg.rounds);
+    for r in 0..cfg.rounds {
+        if r == cfg.drop_round {
+            fabric.force_drops(cfg.forced_drops);
+        }
+        let chunk = stream.take_examples(cfg.examples_per_round);
+        train_chunk(
+            &mut trainer,
+            &chunk,
+            HogwildConfig { threads: cfg.train_threads.max(1) },
+            1_000,
+        );
+        let published2 = published.clone();
+        let probes_ref = &probes;
+        let outcome = fabric
+            .publish_with(&trainer, |seq, fresh| {
+                let scores = probe_scores(fresh, probes_ref);
+                published2
+                    .write()
+                    .expect("published lock")
+                    .push((seq, scores));
+            })
+            .unwrap_or_else(|e| panic!("{:?} round {r}: {e}", cfg.mode));
+        rounds.push(outcome);
+    }
+
+    // end-of-run barrier: every replica must reach the head version
+    let caught_up_at_converge =
+        fabric.converge().unwrap_or_else(|e| panic!("converge: {e}"));
+
+    // convergence invariants (traffic still flowing)
+    let reference = fabric
+        .reference()
+        .expect("rounds ran")
+        .pool
+        .weights
+        .clone();
+    let first = fabric.replicas()[0].model().pool.weights.clone();
+    let mut replicas_bit_identical = true;
+    let mut replicas_match_reference = true;
+    for rep in fabric.replicas() {
+        assert_eq!(
+            rep.seq(),
+            fabric.head(),
+            "{:?}: replica {:?} behind after converge",
+            cfg.mode,
+            rep.id
+        );
+        let model = rep.model();
+        if model.pool.weights != first {
+            replicas_bit_identical = false;
+        }
+        if model.pool.weights != reference {
+            replicas_match_reference = false;
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let mut probe_checks = 0u64;
+    let mut torn_responses = 0u64;
+    let mut versions = HashSet::new();
+    for d in drivers {
+        let (c, t, v) = d.join().expect("traffic driver panicked");
+        probe_checks += c;
+        torn_responses += t;
+        versions.extend(v);
+    }
+
+    let metrics = fabric.metrics();
+    let mode = cfg.mode;
+    let serve_errors = fabric
+        .shutdown()
+        .into_iter()
+        .flatten()
+        .map(|s| s.errors)
+        .sum();
+    FleetSoakReport {
+        mode,
+        rounds,
+        probe_checks,
+        torn_responses,
+        versions_observed: versions.len(),
+        caught_up_at_converge,
+        replicas_bit_identical,
+        replicas_match_reference,
+        serve_errors,
+        metrics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_fleet_soak_smoke() {
+        // 2 rounds, 2 DCs only — the full ≥5-round ≥3-DC soaks for all
+        // four modes run in tests/fleet_soak_e2e.rs
+        let mut cfg = FleetSoakConfig::quick(UpdateMode::QuantPatch);
+        cfg.rounds = 2;
+        cfg.dcs = 2;
+        cfg.examples_per_round = 600;
+        cfg.forced_drops = 1;
+        let report = run_fleet_soak(cfg);
+        assert_eq!(report.rounds.len(), 2);
+        assert_eq!(report.torn_responses, 0);
+        assert!(report.replicas_bit_identical);
+        assert!(report.replicas_match_reference);
+        assert!(report.metrics.drops() >= 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! Fleet topology: data centers, replicas, and the simulated links
+//! between them.
+//!
+//! The shape mirrors the paper's deployment: one training site
+//! publishes weight updates to serving replicas spread over multiple
+//! data centers.  The expensive edges are the trainer→DC WAN links;
+//! the edges inside a DC are cheap LAN.  Each link carries bandwidth,
+//! RTT and a loss probability — loss is what forces the catch-up
+//! protocol (a dropped update leaves a replica behind the head
+//! version until it replays the missed patch chain or resyncs).
+
+use crate::fleet::metrics::LinkLedger;
+use crate::util::rng::Pcg32;
+
+/// Physical properties of one simulated link.
+///
+/// Same physics as [`crate::transfer::SimulatedChannel`] (rtt +
+/// len/bandwidth) plus a loss probability; unifying the two behind one
+/// link model is a tracked follow-on (see ROADMAP "real socket
+/// transport") — change both if the wire-time formula evolves.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// Bytes per second.
+    pub bandwidth_bps: f64,
+    /// Per-shipment round-trip overhead in seconds.
+    pub rtt_seconds: f64,
+    /// Probability that a shipment is lost in transit.
+    pub loss: f64,
+}
+
+impl LinkSpec {
+    /// 10 Gbps intra-DC LAN, 0.5 ms RTT, no loss.
+    pub fn lan() -> Self {
+        LinkSpec { bandwidth_bps: 1.25e9, rtt_seconds: 0.0005, loss: 0.0 }
+    }
+
+    /// 1 Gbps inter-DC WAN, 30 ms RTT, no loss.
+    pub fn wan() -> Self {
+        LinkSpec { bandwidth_bps: 1.25e8, rtt_seconds: 0.03, loss: 0.0 }
+    }
+
+    /// Same link with a loss probability.
+    pub fn with_loss(mut self, loss: f64) -> Self {
+        self.loss = loss;
+        self
+    }
+
+    /// Simulated seconds to move `len` bytes (derived, never slept).
+    pub fn transfer_seconds(&self, len: usize) -> f64 {
+        self.rtt_seconds + len as f64 / self.bandwidth_bps
+    }
+}
+
+/// One data center: how many serving replicas it hosts and the links
+/// reaching / crossing it.
+#[derive(Clone, Debug)]
+pub struct DcSpec {
+    pub name: String,
+    pub replicas: usize,
+    /// Trainer → this DC (the cross-DC edge the planner minimizes).
+    pub inter: LinkSpec,
+    /// Replica → replica inside this DC (fan-out-tree re-distribution).
+    pub intra: LinkSpec,
+}
+
+/// The whole serving fleet, trainer excluded (the trainer is the
+/// implicit root every route starts from).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub dcs: Vec<DcSpec>,
+}
+
+/// Address of one replica: (data center, index within the DC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ReplicaId {
+    pub dc: usize,
+    pub replica: usize,
+}
+
+impl Topology {
+    /// `dcs` identical data centers of `replicas` replicas each.
+    pub fn uniform(dcs: usize, replicas: usize, inter: LinkSpec, intra: LinkSpec) -> Self {
+        assert!(dcs >= 1, "need at least one data center");
+        assert!(replicas >= 1, "need at least one replica per DC");
+        Topology {
+            dcs: (0..dcs)
+                .map(|i| DcSpec {
+                    name: format!("dc{i}"),
+                    replicas,
+                    inter,
+                    intra,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn total_replicas(&self) -> usize {
+        self.dcs.iter().map(|d| d.replicas).sum()
+    }
+
+    /// All replica addresses, DC-major (the fabric's flattened order).
+    pub fn replica_ids(&self) -> Vec<ReplicaId> {
+        let mut out = Vec::with_capacity(self.total_replicas());
+        for (dc, spec) in self.dcs.iter().enumerate() {
+            for replica in 0..spec.replicas {
+                out.push(ReplicaId { dc, replica });
+            }
+        }
+        out
+    }
+
+    /// Position of `id` in the DC-major flattened replica order.
+    pub fn flat_index(&self, id: ReplicaId) -> usize {
+        self.dcs[..id.dc].iter().map(|d| d.replicas).sum::<usize>() + id.replica
+    }
+}
+
+/// A stateful simulated link: spec + ledger + (deterministic) loss.
+#[derive(Clone, Debug)]
+pub struct SimLink {
+    pub spec: LinkSpec,
+    pub ledger: LinkLedger,
+}
+
+impl SimLink {
+    pub fn new(spec: LinkSpec) -> Self {
+        SimLink { spec, ledger: LinkLedger::default() }
+    }
+
+    /// Ship `len` bytes.  The sender pays bandwidth whether or not the
+    /// shipment arrives.  Returns the wire seconds on delivery, `None`
+    /// when the shipment is lost (`force_drop` loses it regardless of
+    /// the link's loss probability — the test/soak fault injector).
+    pub fn ship(&mut self, len: usize, rng: &mut Pcg32, force_drop: bool) -> Option<f64> {
+        let secs = self.spec.transfer_seconds(len);
+        let lost =
+            force_drop || (self.spec.loss > 0.0 && rng.next_f64() < self.spec.loss);
+        self.ledger.record(len, secs, !lost);
+        if lost {
+            None
+        } else {
+            Some(secs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_topology_shape() {
+        let t = Topology::uniform(3, 2, LinkSpec::wan(), LinkSpec::lan());
+        assert_eq!(t.dcs.len(), 3);
+        assert_eq!(t.total_replicas(), 6);
+        let ids = t.replica_ids();
+        assert_eq!(ids.len(), 6);
+        assert_eq!(ids[0], ReplicaId { dc: 0, replica: 0 });
+        assert_eq!(ids[5], ReplicaId { dc: 2, replica: 1 });
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(t.flat_index(*id), i);
+        }
+    }
+
+    #[test]
+    fn transfer_seconds_scale_with_bytes() {
+        let l = LinkSpec { bandwidth_bps: 1_000_000.0, rtt_seconds: 0.01, loss: 0.0 };
+        assert!((l.transfer_seconds(500_000) - 0.51).abs() < 1e-9);
+        // LAN moves the same payload orders of magnitude faster
+        let lan = LinkSpec::lan().transfer_seconds(1 << 20);
+        let wan = LinkSpec::wan().transfer_seconds(1 << 20);
+        assert!(lan < wan);
+    }
+
+    #[test]
+    fn lossless_link_always_delivers() {
+        let mut link = SimLink::new(LinkSpec::lan());
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..100 {
+            assert!(link.ship(1000, &mut rng, false).is_some());
+        }
+        assert_eq!(link.ledger.messages, 100);
+        assert_eq!(link.ledger.drops, 0);
+        assert_eq!(link.ledger.bytes, 100_000);
+    }
+
+    #[test]
+    fn forced_drop_loses_but_still_bills() {
+        let mut link = SimLink::new(LinkSpec::wan());
+        let mut rng = Pcg32::seeded(2);
+        assert!(link.ship(1000, &mut rng, true).is_none());
+        assert_eq!(link.ledger.drops, 1);
+        assert_eq!(link.ledger.bytes, 1000, "sender pays for lost shipments");
+    }
+
+    #[test]
+    fn lossy_link_drops_roughly_at_rate() {
+        let mut link = SimLink::new(LinkSpec::wan().with_loss(0.5));
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..2000 {
+            link.ship(10, &mut rng, false);
+        }
+        assert!(
+            (700..1300).contains(&(link.ledger.drops as usize)),
+            "drops {} far from 50%",
+            link.ledger.drops
+        );
+    }
+}

@@ -36,6 +36,7 @@ pub mod data;
 pub mod deploy;
 pub mod eval;
 pub mod feature;
+pub mod fleet;
 pub mod model;
 pub mod patch;
 pub mod quant;

@@ -14,7 +14,7 @@ use fwumious::config::{ModelConfig, ServeConfig};
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::model::regressor::Regressor;
 use fwumious::model::{io, Workspace};
-use fwumious::patch::{apply_patch, make_patch, Compression, Patch};
+use fwumious::patch::{apply_chain, make_patch, Compression, Patch};
 use fwumious::quant;
 use fwumious::serve::router::Router;
 use fwumious::serve::server::ServingEngine;
@@ -56,6 +56,7 @@ fn run(raw: Vec<String>) -> Result<(), String> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "deploy" => cmd_deploy(&args),
+        "fleet" => cmd_fleet(&args),
         "automl" => cmd_automl(&args),
         "quantize" => cmd_quantize(&args),
         "patch" => cmd_patch(&args),
@@ -313,6 +314,112 @@ fn cmd_deploy(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<(), String> {
+    use fwumious::fleet::{plan, FleetConfig, FleetFabric, LinkSpec, Strategy, Topology};
+    use fwumious::train::hogwild::{train_chunk, HogwildConfig};
+    use fwumious::transfer::UpdateMode;
+
+    let spec = dataset(&args.flag_or("dataset", "criteo"))?;
+    let mode = UpdateMode::parse(&args.flag_or("mode", "quantpatch"))?;
+    let strategy = Strategy::parse(&args.flag_or("strategy", "auto"))?;
+    let dcs = args.usize_flag("dcs", 3)?;
+    let replicas = args.usize_flag("replicas", 2)?;
+    let rounds = args.usize_flag("rounds", 8)?;
+    let per_round = args.usize_flag("examples", 20_000)?;
+    let threads = args.usize_flag("threads", 1)?;
+    let loss = args.f64_flag("loss", 0.0)?;
+    if !(0.0..=1.0).contains(&loss) {
+        return Err(format!("--loss must be a probability in [0, 1], got {loss}"));
+    }
+    let seed = args.usize_flag("seed", 42)? as u64;
+    let model_cfg = model_cfg_from_args(args, &spec)?;
+
+    let topo = Topology::uniform(
+        dcs,
+        replicas,
+        LinkSpec::wan().with_loss(loss),
+        LinkSpec::lan(),
+    );
+    let mut fcfg = FleetConfig::new(topo, mode);
+    fcfg.strategy = strategy;
+    fcfg.seed = seed;
+    let mut trainer = Regressor::new(&model_cfg);
+    let mut stream =
+        SyntheticStream::with_buckets(spec, seed, model_cfg.buckets);
+    let mut fabric = FleetFabric::new(fcfg, &trainer);
+
+    println!(
+        "fleet: {} DCs x {} replicas, {} route, {} over {} rounds x {} examples (loss {:.0}%)",
+        dcs,
+        replicas,
+        strategy.label(),
+        mode.label(),
+        rounds,
+        per_round,
+        loss * 100.0
+    );
+    println!(
+        "{:<6} {:>10} {:>7} {:>9} {:>8} {:>8} {:>8} {:>6}",
+        "seq", "update(B)", "%raw", "delivered", "dropped", "replays", "resyncs", "skew"
+    );
+    let mut last_update_bytes = 0usize;
+    for _ in 0..rounds {
+        let chunk = stream.take_examples(per_round);
+        train_chunk(
+            &mut trainer,
+            &chunk,
+            HogwildConfig { threads: threads.max(1) },
+            2_000,
+        );
+        let o = fabric.publish(&trainer)?;
+        println!(
+            "{:<6} {:>10} {:>6.2}% {:>9} {:>8} {:>8} {:>8} {:>6}",
+            o.seq,
+            o.update_bytes,
+            o.update_bytes as f64 / o.raw_bytes.max(1) as f64 * 100.0,
+            o.delivered,
+            o.dropped,
+            o.replays,
+            o.resyncs,
+            o.max_skew
+        );
+        last_update_bytes = o.update_bytes;
+    }
+    let fixed = fabric.converge()?;
+    let m = fabric.metrics();
+    println!(
+        "\nconverged: every replica at seq {} ({} needed the final catch-up)",
+        fabric.head(),
+        fixed
+    );
+    println!(
+        "inter-DC {:.2} MB, intra-DC {:.2} MB, {} drops, {} replays, {} resyncs, max skew {}, mean publish lag {:.3}s",
+        m.inter_bytes() as f64 / 1e6,
+        m.intra_bytes() as f64 / 1e6,
+        m.drops(),
+        m.replays,
+        m.resyncs,
+        m.max_version_skew,
+        m.mean_lag_seconds()
+    );
+    for (dc, (i, x)) in m.inter.iter().zip(&m.intra).enumerate() {
+        println!(
+            "  dc{dc}: inter {:>10} B ({} msgs, {} drops)   intra {:>10} B ({} msgs)",
+            i.bytes, i.messages, i.drops, x.bytes, x.messages
+        );
+    }
+    // what the road not taken would have billed
+    let star = plan(fabric.topology(), Strategy::Star);
+    let tree = plan(fabric.topology(), Strategy::Tree);
+    println!(
+        "planner (steady-state {} B/update): star {} B vs tree {} B inter-DC per round",
+        last_update_bytes,
+        star.predicted_inter_bytes(fabric.topology(), last_update_bytes),
+        tree.predicted_inter_bytes(fabric.topology(), last_update_bytes)
+    );
+    Ok(())
+}
+
 fn cmd_automl(args: &Args) -> Result<(), String> {
     use fwumious::automl::{pooled_stats, random_search, SearchSpace};
     let spec = dataset(&args.flag_or("dataset", "tiny"))?;
@@ -407,13 +514,21 @@ fn cmd_patch(args: &Args) -> Result<(), String> {
 fn cmd_apply(args: &Args) -> Result<(), String> {
     let old = std::fs::read(args.flag("old").ok_or("--old required")?)
         .map_err(|e| e.to_string())?;
-    let pbytes = std::fs::read(args.flag("patch").ok_or("--patch required")?)
-        .map_err(|e| e.to_string())?;
+    // --patch takes one file or a comma-separated delta chain, applied
+    // in order (the offline twin of the fleet's catch-up replay)
+    let spec = args.flag("patch").ok_or("--patch required")?;
     let out = args.flag("out").ok_or("--out required")?;
-    let p = Patch::from_wire(&pbytes)?;
-    let new = apply_patch(&old, &p)?;
+    let mut chain = Vec::new();
+    for path in spec.split(',').filter(|p| !p.is_empty()) {
+        let pbytes = std::fs::read(path).map_err(|e| format!("{path}: {e}"))?;
+        chain.push(Patch::from_wire(&pbytes)?);
+    }
+    if chain.is_empty() {
+        return Err("--patch names no patch files".into());
+    }
+    let new = apply_chain(&old, &chain)?;
     std::fs::write(out, &new).map_err(|e| e.to_string())?;
-    println!("applied patch -> {} bytes", new.len());
+    println!("applied {} patch(es) -> {} bytes", chain.len(), new.len());
     Ok(())
 }
 

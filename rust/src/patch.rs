@@ -211,6 +211,22 @@ pub fn apply_patch(old: &[u8], patch: &Patch) -> Result<Vec<u8>, String> {
     apply_ops(old, &ops)
 }
 
+/// Replay a *delta chain*: apply `patches` in order, each against the
+/// previous one's output.  The byte-level twin of the fleet catch-up
+/// replay (which runs the same sequence through
+/// [`crate::transfer::UpdateReceiver::apply`] so quantized payloads
+/// decode along the way); used directly by `fw apply` for offline
+/// chain reconstruction, and must land on bytes identical to a fresh
+/// snapshot.
+pub fn apply_chain(base: &[u8], patches: &[Patch]) -> Result<Vec<u8>, String> {
+    let mut cur = base.to_vec();
+    for (i, p) in patches.iter().enumerate() {
+        cur = apply_patch(&cur, p)
+            .map_err(|e| format!("chain link {i}/{}: {e}", patches.len()))?;
+    }
+    Ok(cur)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +368,32 @@ mod tests {
                 assert_eq!(apply_patch(&old, &p).unwrap(), new);
             }
         });
+    }
+
+    #[test]
+    fn chain_replay_equals_direct_patch() {
+        // K chained patches replayed in order == one patch old->newest
+        let mut rng = Pcg32::seeded(7);
+        let mut snaps = vec![(0..20_000)
+            .map(|_| rng.next_u32() as u8)
+            .collect::<Vec<u8>>()];
+        for _ in 0..5 {
+            let mut next = snaps.last().unwrap().clone();
+            for _ in 0..300 {
+                let i = rng.below(20_000) as usize;
+                next[i] = next[i].wrapping_add(1 + rng.below(254) as u8);
+            }
+            snaps.push(next);
+        }
+        let chain: Vec<Patch> = snaps
+            .windows(2)
+            .map(|w| make_patch(&w[0], &w[1], Compression::Lz))
+            .collect();
+        let replayed = apply_chain(&snaps[0], &chain).unwrap();
+        assert_eq!(&replayed, snaps.last().unwrap());
+        // a broken link reports its position (wrong-length base)
+        let err = apply_chain(&snaps[0][..10_000], &chain).unwrap_err();
+        assert!(err.contains("chain link 0/"), "{err}");
     }
 
     #[test]

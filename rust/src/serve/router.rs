@@ -9,7 +9,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
-use crate::feature::hash::murmur3_32;
+use crate::feature::hash::Murmur3x32;
 use crate::feature::FeatureSlot;
 use crate::serve::{ModelHandle, Request};
 
@@ -59,12 +59,18 @@ impl Router {
     }
 
     /// Hash a context's buckets into a shard id.
+    ///
+    /// Streams each bucket word straight into the murmur state — no
+    /// per-request byte buffer.  A `u32` is exactly one murmur block,
+    /// so this is bit-identical to hashing the buckets' concatenated
+    /// LE bytes (the pre-streaming implementation); existing context→
+    /// shard affinity is pinned by `shard_assignments_are_pinned`.
     pub fn shard_for_context(ctx: &[FeatureSlot], shards: usize) -> usize {
-        let mut bytes = Vec::with_capacity(ctx.len() * 4);
+        let mut h = Murmur3x32::new(0x5a5a);
         for s in ctx {
-            bytes.extend_from_slice(&s.bucket.to_le_bytes());
+            h.push_u32(s.bucket);
         }
-        (murmur3_32(&bytes, 0x5a5a) as usize) % shards.max(1)
+        (h.finish() as usize) % shards.max(1)
     }
 }
 
@@ -124,6 +130,35 @@ mod tests {
         let min = *counts.iter().min().unwrap();
         let max = *counts.iter().max().unwrap();
         assert!(min > 700 && max < 1400, "skewed shards: {counts:?}");
+    }
+
+    #[test]
+    fn shard_assignments_are_pinned() {
+        // Reference values computed from murmur3_32 (seed 0x5a5a) over
+        // the buckets' concatenated LE bytes.  These must NEVER change:
+        // context→shard affinity decides which worker's context cache
+        // holds a given context, and shifting it invalidates every
+        // warm cache in the fleet on deploy.
+        for (buckets, shard8) in [
+            (&[1u32, 2, 3][..], 2usize),
+            (&[42][..], 2),
+            (&[7, 100, 3000, 65536][..], 4),
+            (&[0, 0][..], 4),
+            (&[123_456_789][..], 7),
+            (&[1, 2, 3, 4, 5, 6, 7][..], 7),
+        ] {
+            let c = ctx(buckets);
+            assert_eq!(
+                Router::shard_for_context(&c, 8),
+                shard8,
+                "affinity shifted for {buckets:?}"
+            );
+        }
+        // and the raw 32-bit hashes behind them (shards = 2^32 would
+        // overflow usize on 32-bit targets, so pin via modulo 5 too)
+        assert_eq!(Router::shard_for_context(&ctx(&[1, 2, 3]), 5), 4);
+        assert_eq!(Router::shard_for_context(&ctx(&[42]), 5), 1);
+        assert_eq!(Router::shard_for_context(&ctx(&[0, 0]), 5), 0);
     }
 
     #[test]

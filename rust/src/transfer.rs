@@ -66,6 +66,14 @@ impl UpdateMode {
     pub fn is_quantized(&self) -> bool {
         matches!(self, UpdateMode::Quant | UpdateMode::QuantPatch)
     }
+
+    /// True for the modes whose updates form a *delta chain*: update N
+    /// is a byte patch against the base produced by update N-1, so it
+    /// can only be applied in sequence.  Raw/Quant updates are full
+    /// files and can be applied from any starting state.
+    pub fn is_chained(&self) -> bool {
+        matches!(self, UpdateMode::PatchOnly | UpdateMode::QuantPatch)
+    }
 }
 
 /// One encoded update as it crosses the wire.
@@ -203,6 +211,36 @@ impl UpdateReceiver {
         self.template = Some(template);
     }
 
+    /// The receiver's wire mode.
+    pub fn mode(&self) -> UpdateMode {
+        self.mode
+    }
+
+    /// Drop all base state (the template survives).  The next
+    /// [`apply`](Self::apply) is then treated as a bootstrap full file
+    /// — exactly the state a brand-new replica starts from.
+    pub fn reset(&mut self) {
+        self.base_raw = None;
+        self.base_quant = None;
+    }
+
+    /// Full-snapshot resync: install `full_base` — the *sender's* base
+    /// file for this mode ([`UpdatePipeline::sent_bytes`]) — as this
+    /// receiver's base and decode the model it encodes.  This is the
+    /// catch-up escape hatch for a replica whose delta chain is broken
+    /// (missed updates beyond the sender's replay window): after a
+    /// resync the receiver is bit-identical to an up-to-date replica
+    /// and the next chained patch applies cleanly.
+    pub fn resync(&mut self, full_base: &[u8]) -> Result<Regressor, String> {
+        self.reset();
+        let update = WireUpdate {
+            mode: self.mode,
+            bytes: full_base.to_vec(),
+            encode_seconds: 0.0,
+        };
+        self.apply(&update)
+    }
+
     /// The receiver-side reconstructed base file (mirror of
     /// [`UpdatePipeline::sent_bytes`]): raw `FWMODEL1` bytes for
     /// raw/patch modes, quantized `FWQ1` bytes for quantized modes.
@@ -223,7 +261,7 @@ impl UpdateReceiver {
             }
             UpdateMode::Quant => {
                 self.base_quant = Some(update.bytes.clone());
-                self.decode_quant_model(&update.bytes.clone())
+                self.decode_quant_model(&update.bytes)
             }
             UpdateMode::PatchOnly => {
                 let full = match &self.base_raw {
@@ -468,6 +506,43 @@ mod tests {
         ch.ship(&u);
         assert_eq!(ch.total_bytes, 1_000_000);
         assert_eq!(ch.messages, 2);
+    }
+
+    #[test]
+    fn resync_rejoins_a_broken_delta_chain() {
+        // a receiver that misses updates cannot apply later chained
+        // patches; after a resync from the sender's base it can.
+        for mode in [UpdateMode::PatchOnly, UpdateMode::QuantPatch] {
+            let snaps = trained_rounds(4, 300);
+            let mut pipe = UpdatePipeline::new(mode);
+            let mut good = UpdateReceiver::new(mode);
+            let mut lossy = UpdateReceiver::new(mode);
+            good.set_template(snaps[0].clone());
+            lossy.set_template(snaps[0].clone());
+            // rounds 0..2: lossy receiver drops round 1 entirely
+            for (i, snap) in snaps[..3].iter().enumerate() {
+                let u = pipe.encode(snap);
+                good.apply(&u).unwrap();
+                if i != 1 {
+                    if i == 2 {
+                        // base diverged: chained patch must not apply
+                        assert_ne!(lossy.base_bytes(), good.base_bytes());
+                    }
+                    let _ = lossy.apply(&u);
+                }
+            }
+            // resync from the sender's current base, then the chain
+            // continues bit-identically
+            let got = lossy.resync(pipe.sent_bytes().unwrap()).unwrap();
+            assert_eq!(lossy.base_bytes(), good.base_bytes(), "{mode:?}");
+            let reference = good.resync(pipe.sent_bytes().unwrap()).unwrap();
+            assert_eq!(got.pool.weights, reference.pool.weights);
+            let u = pipe.encode(&snaps[3]);
+            let a = lossy.apply(&u).unwrap();
+            let b = good.apply(&u).unwrap();
+            assert_eq!(a.pool.weights, b.pool.weights, "{mode:?}");
+            assert_eq!(lossy.base_bytes(), good.base_bytes(), "{mode:?}");
+        }
     }
 
     #[test]

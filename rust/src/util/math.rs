@@ -75,6 +75,24 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Linear-interpolated percentile of a slice; `q` in `[0, 1]`
+/// (copies + sorts).  `percentile(xs, 0.5)` agrees with [`median`].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +154,16 @@ mod tests {
         let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
         assert!((m - 5.0).abs() < 1e-9);
         assert!((s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates_and_matches_median() {
+        let xs = [4.0, 1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.5), median(&xs));
+        assert!((percentile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.9), 7.0);
     }
 }

@@ -5,6 +5,7 @@
 use fwumious::config::ModelConfig;
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::eval::auc;
+use fwumious::fleet::{FleetConfig, FleetFabric, LinkSpec, Topology};
 use fwumious::model::io;
 use fwumious::model::regressor::Regressor;
 use fwumious::model::Workspace;
@@ -171,7 +172,7 @@ fn prop_lz_roundtrip_on_model_shaped_data() {
         }
         // runs of unchanged bytes, like consecutive snapshots
         let pad = g.usize_in(0..600);
-        data.extend(std::iter::repeat(0u8).take(pad));
+        data.resize(data.len() + pad, 0u8);
         let c = compress::compress(&data);
         assert_eq!(compress::decompress(&c).unwrap(), data);
     });
@@ -216,6 +217,60 @@ fn prop_transfer_modes_reconstruct() {
                     assert!(max_err < 1e-3, "{mode:?} err {max_err}");
                 }
             }
+        }
+    });
+}
+
+/// Fleet delta chains: K chained updates with random drop-then-
+/// catch-up points (random modes, random replay windows) leave every
+/// replica bit-identical to a fresh full snapshot decoded straight
+/// from the sender's base file.
+#[test]
+fn prop_fleet_delta_chain_catchup_bit_identical() {
+    prop(6, |g| {
+        let buckets = 1u32 << 9;
+        let cfg = ModelConfig::ffm(4, 2, buckets);
+        let mode = *g.rng().choose(&UpdateMode::ALL);
+        let topo = Topology::uniform(2, 2, LinkSpec::wan(), LinkSpec::lan());
+        let mut fcfg = FleetConfig::new(topo, mode);
+        // 0 disables replay entirely (resync-only fleet)
+        fcfg.max_chain = g.usize_in(0..4);
+        fcfg.seed = g.u64();
+        let mut reg = Regressor::new(&cfg);
+        let mut fabric = FleetFabric::new(fcfg, &reg);
+        let mut ws = Workspace::new();
+        let mut s =
+            SyntheticStream::with_buckets(DatasetSpec::tiny(), g.u64(), buckets);
+        let rounds = g.usize_in(2..6);
+        for _ in 0..rounds {
+            if g.bool() {
+                fabric.force_drops(g.usize_in(1..4) as u32);
+            }
+            for _ in 0..300 {
+                let ex = s.next_example();
+                reg.learn(&ex, &mut ws);
+            }
+            fabric.publish(&reg).unwrap();
+        }
+        fabric.converge().unwrap();
+        // a brand-new receiver fed only the sender's current base must
+        // decode the exact same weights every replica converged to
+        let mut fresh = UpdateReceiver::new(mode);
+        fresh.set_template(Regressor::new(&cfg));
+        let expect = fresh.resync(fabric.sender_base().unwrap()).unwrap();
+        assert_eq!(
+            expect.pool.weights,
+            fabric.reference().unwrap().pool.weights,
+            "{mode:?}: reference receiver drifted from the sender base"
+        );
+        for rep in fabric.replicas() {
+            assert_eq!(rep.seq(), fabric.head(), "{mode:?} {:?}", rep.id);
+            assert_eq!(
+                rep.model().pool.weights,
+                expect.pool.weights,
+                "{mode:?} {:?}: replica differs from fresh snapshot",
+                rep.id
+            );
         }
     });
 }
