@@ -1,12 +1,23 @@
 //! Headline claim — "more than 300m predictions per second" (fleet-
 //! wide, CPU-only).
 //!
-//! Measures single-core and multi-worker candidate-scoring throughput
-//! of the full serving engine (router → batcher → context cache → SIMD
-//! forward) and extrapolates the core count needed for 300M preds/s.
-//! The paper's fleet is hundreds of multi-core servers across DCs, so
-//! the reproduced claim is "preds/s/core × fleet cores > 300M with a
-//! plausible fleet".
+//! Two measurements:
+//!
+//! 1. **Batched vs per-candidate scoring** (the request-level batching
+//!    tentpole): the same request stream scored candidate-at-a-time
+//!    through `predict_with_partial` and request-at-a-time through
+//!    `predict_batch_with_partial`.  The batched path amortizes the
+//!    prefetch pass, slot assembly and ctx×ctx cache copy across the
+//!    fanout and streams MLP weight rows once per 4-candidate register
+//!    block.
+//! 2. **Engine throughput**: the full serving engine (router → batcher
+//!    → context cache → batched SIMD forward) across worker counts,
+//!    with latency p50/p99.
+//!
+//! Emits machine-readable `BENCH_serving_throughput.json` (candidates/
+//! sec for both paths, the batched-vs-sequential speedup ratio, per-
+//! worker-count engine throughput and latency percentiles) so future
+//! PRs can diff regressions.  `--smoke` runs a CI-sized variant.
 
 use fwumious::config::{ModelConfig, ServeConfig};
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
@@ -15,23 +26,65 @@ use fwumious::model::Workspace;
 use fwumious::serve::router::Router;
 use fwumious::serve::server::ServingEngine;
 use fwumious::serve::trace::TraceGenerator;
-use fwumious::serve::ModelHandle;
+use fwumious::serve::{ModelHandle, Request};
+use fwumious::util::json::{arr, num, obj, s, Json};
 
-fn trained_model() -> Regressor {
+const CTX_FIELDS: usize = 6;
+const FANOUT: usize = 16;
+
+fn trained_model(smoke: bool) -> Regressor {
     let spec = DatasetSpec::criteo_like();
-    let buckets = 1u32 << 18;
-    let cfg = ModelConfig::deep_ffm(spec.fields(), 4, buckets, &[16]);
+    let buckets = if smoke { 1u32 << 14 } else { 1u32 << 18 };
+    let steps = if smoke { 3_000 } else { 50_000 };
+    let cfg = ModelConfig::deep_ffm(spec.fields(), 8, buckets, &[32]);
     let mut reg = Regressor::new(&cfg);
     let mut ws = Workspace::new();
     let mut s = SyntheticStream::with_buckets(spec, 41, buckets);
-    for _ in 0..60_000 {
+    for _ in 0..steps {
         let ex = s.next_example();
         reg.learn(&ex, &mut ws);
     }
     reg
 }
 
-fn run_engine(reg: &Regressor, workers: usize, requests: usize, fanout: usize) -> (f64, f64) {
+/// Candidate-at-a-time scoring (the pre-batching serving inner loop):
+/// one cached partial per request, then one `predict_with_partial` call
+/// per candidate.
+fn run_sequential(reg: &Regressor, reqs: &[Request]) -> (f64, Vec<f32>) {
+    let mut ws = Workspace::new();
+    let mut scores = Vec::new();
+    let t = std::time::Instant::now();
+    for req in reqs {
+        let cp = reg.context_partial(&req.context);
+        for cand in &req.candidates {
+            scores.push(reg.predict_with_partial(&cp, cand, &mut ws));
+        }
+    }
+    (t.elapsed().as_secs_f64(), scores)
+}
+
+/// Request-at-a-time scoring through the batched path.
+fn run_batched(reg: &Regressor, reqs: &[Request]) -> (f64, Vec<f32>) {
+    let mut ws = Workspace::new();
+    let mut scores = Vec::new();
+    let mut out = Vec::new();
+    let t = std::time::Instant::now();
+    for req in reqs {
+        let cp = reg.context_partial(&req.context);
+        reg.predict_batch_with_partial(&cp, &req.candidates, &mut ws, &mut out);
+        scores.extend_from_slice(&out);
+    }
+    (t.elapsed().as_secs_f64(), scores)
+}
+
+struct EngineRun {
+    preds_per_sec: f64,
+    hit_rate: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+fn run_engine(reg: &Regressor, workers: usize, requests: usize) -> EngineRun {
     let router = Router::new(workers);
     router.register("m", ModelHandle::new(reg.clone()));
     let engine = ServingEngine::start(
@@ -44,7 +97,7 @@ fn run_engine(reg: &Regressor, workers: usize, requests: usize, fanout: usize) -
         },
     );
     let fields = reg.cfg.fields;
-    let mut gen = TraceGenerator::new(17, fields, fields / 2, reg.cfg.buckets, fanout);
+    let mut gen = TraceGenerator::new(17, fields, CTX_FIELDS, reg.cfg.buckets, FANOUT);
     let reqs = gen.take(requests, "m");
     let t = std::time::Instant::now();
     let mut pending = Vec::with_capacity(1024);
@@ -59,43 +112,131 @@ fn run_engine(reg: &Regressor, workers: usize, requests: usize, fanout: usize) -
     let secs = t.elapsed().as_secs_f64();
     let stats = engine.shutdown();
     assert_eq!(stats.errors, 0);
-    (stats.candidates as f64 / secs, stats.cache_hit_rate())
+    let hist = stats.latency.as_ref().expect("latency histogram");
+    EngineRun {
+        preds_per_sec: stats.candidates as f64 / secs,
+        hit_rate: stats.cache_hit_rate(),
+        p50_us: hist.quantile_ns(0.5) / 1e3,
+        p99_us: hist.quantile_ns(0.99) / 1e3,
+    }
 }
 
 fn main() {
-    println!("== Headline: candidate-scoring throughput (SIMD {}) ==\n", fwumious::simd::isa_name());
-    let reg = trained_model();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let direct_requests = if smoke { 300 } else { 2_000 };
     println!(
-        "model: DeepFFM {} fields, K=4, hidden [16], {:.0} MB weights",
-        reg.cfg.fields,
-        reg.num_weights() as f64 * 4.0 / 1e6
+        "== Headline: candidate-scoring throughput (SIMD {}{}) ==\n",
+        fwumious::simd::isa_name(),
+        if smoke { ", smoke" } else { "" }
     );
-    let fanout = 16;
-    let max_workers = std::thread::available_parallelism()
-        .map(|n| n.get().min(16))
-        .unwrap_or(8);
+    let reg = trained_model(smoke);
     println!(
-        "\n{:>8} {:>14} {:>16} {:>8}",
-        "workers", "preds/s", "preds/s/core", "hit%"
+        "model: DeepFFM {} fields ({} context), K={}, hidden {:?}, {:.0} MB weights, fanout {}",
+        reg.cfg.fields,
+        CTX_FIELDS,
+        reg.cfg.latent_dim,
+        reg.cfg.hidden,
+        reg.num_weights() as f64 * 4.0 / 1e6,
+        FANOUT
+    );
+
+    // -- batched vs per-candidate, single thread, identical requests
+    let mut gen =
+        TraceGenerator::new(29, reg.cfg.fields, CTX_FIELDS, reg.cfg.buckets, FANOUT);
+    let reqs = gen.take(direct_requests, "m");
+    // warm-up pass (page in the weight table, size the workspaces)
+    let _ = run_batched(&reg, &reqs[..reqs.len().min(32)]);
+    let _ = run_sequential(&reg, &reqs[..reqs.len().min(32)]);
+    let (seq_secs, seq_scores) = run_sequential(&reg, &reqs);
+    let (bat_secs, bat_scores) = run_batched(&reg, &reqs);
+    assert_eq!(seq_scores.len(), bat_scores.len());
+    for (i, (a, b)) in bat_scores.iter().zip(&seq_scores).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-5,
+            "candidate {i}: batched {a} vs sequential {b}"
+        );
+    }
+    let n_cands = (direct_requests * FANOUT) as f64;
+    let seq_cps = n_cands / seq_secs;
+    let bat_cps = n_cands / bat_secs;
+    let speedup = bat_cps / seq_cps;
+    println!("\n-- single-thread scoring path (B = {FANOUT} candidates/request) --");
+    println!("{:>16} {:>14}", "path", "cands/s");
+    println!("{:>16} {:>14.0}", "per-candidate", seq_cps);
+    println!("{:>16} {:>14.0}", "batched", bat_cps);
+    println!("batched-vs-sequential speedup: {speedup:.2}x");
+
+    // -- full engine across worker counts
+    let max_workers = std::thread::available_parallelism()
+        .map(|n| n.get().min(if smoke { 2 } else { 16 }))
+        .unwrap_or(if smoke { 2 } else { 8 });
+    println!(
+        "\n{:>8} {:>14} {:>16} {:>8} {:>10} {:>10}",
+        "workers", "preds/s", "preds/s/core", "hit%", "p50 us", "p99 us"
     );
     let mut per_core_best = 0f64;
+    let mut engine_rows = Vec::new();
     let mut w = 1;
     while w <= max_workers {
-        let requests = 6_000 * w;
-        let (pps, hit) = run_engine(&reg, w, requests, fanout);
-        per_core_best = per_core_best.max(pps / w as f64);
+        let requests = if smoke { 1_500 * w } else { 6_000 * w };
+        let run = run_engine(&reg, w, requests);
+        per_core_best = per_core_best.max(run.preds_per_sec / w as f64);
         println!(
-            "{:>8} {:>14.0} {:>16.0} {:>7.1}%",
+            "{:>8} {:>14.0} {:>16.0} {:>7.1}% {:>10.1} {:>10.1}",
             w,
-            pps,
-            pps / w as f64,
-            hit * 100.0
+            run.preds_per_sec,
+            run.preds_per_sec / w as f64,
+            run.hit_rate * 100.0,
+            run.p50_us,
+            run.p99_us
         );
+        engine_rows.push(obj(vec![
+            ("workers", num(w as f64)),
+            ("preds_per_sec", num(run.preds_per_sec)),
+            ("preds_per_sec_per_core", num(run.preds_per_sec / w as f64)),
+            ("cache_hit_rate", num(run.hit_rate)),
+            ("latency_p50_us", num(run.p50_us)),
+            ("latency_p99_us", num(run.p99_us)),
+        ]));
         w *= 2;
     }
+
+    let report = obj(vec![
+        ("bench", s("serving_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        ("simd", s(fwumious::simd::isa_name())),
+        ("fields", num(reg.cfg.fields as f64)),
+        ("context_fields", num(CTX_FIELDS as f64)),
+        ("latent_dim", num(reg.cfg.latent_dim as f64)),
+        ("fanout", num(FANOUT as f64)),
+        ("sequential_cands_per_sec", num(seq_cps)),
+        ("batched_cands_per_sec", num(bat_cps)),
+        ("speedup_batched_vs_sequential", num(speedup)),
+        ("engine", arr(engine_rows)),
+        ("per_core_best_preds_per_sec", num(per_core_best)),
+        ("cores_for_300m", num(300e6 / per_core_best)),
+    ]);
+    let path = "BENCH_serving_throughput.json";
+    std::fs::write(path, report.to_string()).expect("write bench json");
     println!(
         "\n→ 300M preds/s needs ≈{:.0} cores at the measured per-core rate;",
         300e6 / per_core_best
     );
     println!("  the paper's multi-DC fleet (hundreds of servers × tens of cores) clears that.");
+    println!("report -> {path}");
+    // The documented guarantee (README / verify skill): batched beats
+    // per-candidate by ≥ 1.5x at this fanout.  Only enforceable where
+    // the SIMD kernels are live — on scalar-dispatch hosts both arms
+    // run identical arithmetic and only call overhead is saved.
+    // Asserted after the report write so a regression still leaves the
+    // numbers on disk.
+    if fwumious::simd::simd_active() {
+        assert!(
+            speedup >= 1.5,
+            "batched path speedup {speedup:.2}x below the 1.5x floor \
+             ({bat_cps:.0} vs {seq_cps:.0} cands/s)"
+        );
+    } else {
+        println!("(scalar dispatch host: 1.5x floor not enforced)");
+    }
 }

@@ -60,11 +60,9 @@ pub fn forward_generic(
         let si = &ex.slots[i];
         if si.value == 0.0 {
             // whole row of pairs is zero
-            for j in (i + 1)..fields {
-                pairs[p] = 0.0;
-                p += 1;
-                let _ = j;
-            }
+            let n = fields - i - 1;
+            pairs[p..p + n].fill(0.0);
+            p += n;
             continue;
         }
         let row_i = base + si.bucket as usize * fk;
@@ -122,10 +120,9 @@ unsafe fn forward_avx2(
     for i in 0..fields {
         let si = &ex.slots[i];
         if si.value == 0.0 {
-            for _ in (i + 1)..fields {
-                pairs[p] = 0.0;
-                p += 1;
-            }
+            let n = fields - i - 1;
+            pairs[p..p + n].fill(0.0);
+            p += n;
             continue;
         }
         let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
@@ -212,9 +209,7 @@ pub fn forward_partial_generic(
         // row-major upper triangle: indices for fixed i are contiguous
         let row_base = i * (2 * fields - i - 1) / 2;
         if si.value == 0.0 {
-            for j in j0..fields {
-                pairs[row_base + (j - i - 1)] = 0.0;
-            }
+            pairs[row_base + (j0 - i - 1)..row_base + (fields - i - 1)].fill(0.0);
             continue;
         }
         let row_i = base + si.bucket as usize * fk;
@@ -263,9 +258,7 @@ unsafe fn forward_partial_avx2(
         let j0 = (i + 1).max(ctx_len);
         let row_base = i * (2 * fields - i - 1) / 2;
         if si.value == 0.0 {
-            for j in j0..fields {
-                pairs[row_base + (j - i - 1)] = 0.0;
-            }
+            pairs[row_base + (j0 - i - 1)..row_base + (fields - i - 1)].fill(0.0);
             continue;
         }
         let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
@@ -299,6 +292,312 @@ unsafe fn forward_partial_avx2(
                 _mm_cvtss_f32(_mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2)))
             };
             pairs[pi] = d * si.value * sj.value;
+        }
+    }
+}
+
+/// Batched partial pair computation: all B candidates of one request in
+/// a single pass (the tentpole of the request-level batching PR).
+///
+/// * `ctx_slots` — the C shared context slots (fields `0..ctx_len`).
+/// * `cand_slots` — `B × (fields − ctx_len)` candidate slots laid out
+///   candidate-major (candidate 0's fields, then candidate 1's, …).
+/// * `pairs` — batch-strided output, `B × P` with `P = F(F−1)/2`;
+///   context×context entries of every stride are left untouched (the
+///   caller fills them from the cached [`ContextPartial`]
+///   (crate::model::regressor::ContextPartial)).
+///
+/// The loop is *field-outer*, inverted from the candidate-outer
+/// sequential path: each context latent strip `w_{ctx_i, toward j}` is
+/// loaded once and stays register-hot while its ctx×cand dots are
+/// computed for **all** candidates, and the whole batch shares one
+/// prefetch pass.  Per-candidate results are bit-identical for any
+/// batch size at a fixed ISA level (the serving layer relies on this —
+/// see [`crate::simd::batch`]).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_partial_batch(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    ctx_slots: &[crate::feature::FeatureSlot],
+    cand_slots: &[crate::feature::FeatureSlot],
+    pairs: &mut [f32],
+) {
+    if ctx_len >= fields {
+        // context covers every field: no ctx×cand or cand×cand pairs
+        // exist (guards the batch-count division in the kernels).
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if crate::simd::isa_level() == crate::simd::IsaLevel::Avx2Fma
+        && (k == 4 || k % 8 == 0)
+    {
+        unsafe {
+            forward_partial_batch_avx2(
+                weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+            )
+        };
+        return;
+    }
+    forward_partial_batch_generic(
+        weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+    );
+}
+
+/// Portable batched partial pair loop.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_partial_batch_generic(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    ctx_slots: &[crate::feature::FeatureSlot],
+    cand_slots: &[crate::feature::FeatureSlot],
+    pairs: &mut [f32],
+) {
+    let cw = fields - ctx_len;
+    debug_assert!(cw > 0, "no candidate fields");
+    debug_assert_eq!(ctx_slots.len(), ctx_len);
+    debug_assert_eq!(cand_slots.len() % cw, 0);
+    let batch = cand_slots.len() / cw;
+    let np = fields * (fields - 1) / 2;
+    debug_assert_eq!(pairs.len(), batch * np);
+    let fk = fields * k;
+    let base = layout.ffm_off;
+    // Phase A — ctx×cand, context strip pinned across the batch.
+    for (i, si) in ctx_slots.iter().enumerate() {
+        let row_base = i * (2 * fields - i - 1) / 2;
+        let po = row_base + (ctx_len - i - 1); // index of pair (i, ctx_len)
+        if si.value == 0.0 {
+            for b in 0..batch {
+                pairs[b * np + po..b * np + po + cw].fill(0.0);
+            }
+            continue;
+        }
+        let row_i = base + si.bucket as usize * fk;
+        for jj in 0..cw {
+            let j = ctx_len + jj;
+            let a = &weights[row_i + j * k..row_i + j * k + k];
+            for b in 0..batch {
+                let sj = &cand_slots[b * cw + jj];
+                let pi = b * np + po + jj;
+                if sj.value == 0.0 {
+                    pairs[pi] = 0.0;
+                    continue;
+                }
+                let row_j = base + sj.bucket as usize * fk;
+                let bv = &weights[row_j + i * k..row_j + i * k + k];
+                pairs[pi] = dot::dot(a, bv) * si.value * sj.value;
+            }
+        }
+    }
+    // Phase B — cand×cand, candidate-local.
+    for b in 0..batch {
+        let cs = &cand_slots[b * cw..(b + 1) * cw];
+        let pb = b * np;
+        for (ii, si) in cs.iter().enumerate() {
+            let i = ctx_len + ii;
+            let row_base = i * (2 * fields - i - 1) / 2;
+            if si.value == 0.0 {
+                pairs[pb + row_base..pb + row_base + (fields - i - 1)].fill(0.0);
+                continue;
+            }
+            let row_i = base + si.bucket as usize * fk;
+            for (jj, sj) in cs.iter().enumerate().skip(ii + 1) {
+                let j = ctx_len + jj;
+                let pi = pb + row_base + (j - i - 1);
+                if sj.value == 0.0 {
+                    pairs[pi] = 0.0;
+                    continue;
+                }
+                let row_j = base + sj.bucket as usize * fk;
+                let a = &weights[row_i + j * k..row_i + j * k + k];
+                let bv = &weights[row_j + i * k..row_j + i * k + k];
+                pairs[pi] = dot::dot(a, bv) * si.value * sj.value;
+            }
+        }
+    }
+}
+
+/// AVX2 batched partial pair loop: one shared prefetch pass, context
+/// strips held in registers across the batch, and ctx×cand dots reduced
+/// four candidates at a time through one batched horizontal sum
+/// (`hadd` tree — the remainder path uses the same per-dot tree so any
+/// candidate's value is independent of where it lands in the batch).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma,sse4.1")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn forward_partial_batch_avx2(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    ctx_slots: &[crate::feature::FeatureSlot],
+    cand_slots: &[crate::feature::FeatureSlot],
+    pairs: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+
+    /// Σ over one 8-lane accumulator via the `hadd` tree:
+    /// `((x0+x1)+(x2+x3)) + ((x4+x5)+(x6+x7))`.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn hsum8_tree(v: __m256) -> f32 {
+        let t = _mm256_hadd_ps(v, v);
+        let t = _mm256_hadd_ps(t, t);
+        let lo = _mm256_castps256_ps128(t);
+        let hi = _mm256_extractf128_ps::<1>(t);
+        _mm_cvtss_f32(_mm_add_ss(lo, hi))
+    }
+
+    /// Four accumulators reduced at once; lane r of the result equals
+    /// `hsum8_tree(acc_r)` bit for bit.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn hsum4x8_tree(a: __m256, b: __m256, c: __m256, d: __m256) -> __m128 {
+        let ab = _mm256_hadd_ps(a, b);
+        let cd = _mm256_hadd_ps(c, d);
+        let q = _mm256_hadd_ps(ab, cd);
+        _mm_add_ps(_mm256_castps256_ps128(q), _mm256_extractf128_ps::<1>(q))
+    }
+
+    let cw = fields - ctx_len;
+    let batch = cand_slots.len() / cw;
+    let np = fields * (fields - 1) / 2;
+    let fk = fields * k;
+    let base = layout.ffm_off;
+    // One shared prefetch pass for the whole request: context rows and
+    // every candidate row, instead of one pass per candidate.
+    for s in ctx_slots.iter().chain(cand_slots.iter()) {
+        if s.value != 0.0 {
+            let row = weights.as_ptr().add(base + s.bucket as usize * fk);
+            let mut off = 0usize;
+            while off < fk {
+                _mm_prefetch::<_MM_HINT_T0>(row.add(off) as *const i8);
+                off += 16;
+            }
+        }
+    }
+    // Phase A — ctx×cand, field-outer.
+    for (i, si) in ctx_slots.iter().enumerate() {
+        let row_base = i * (2 * fields - i - 1) / 2;
+        let po = row_base + (ctx_len - i - 1);
+        if si.value == 0.0 {
+            for b in 0..batch {
+                pairs[b * np + po..b * np + po + cw].fill(0.0);
+            }
+            continue;
+        }
+        let vi = si.value;
+        let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
+        for jj in 0..cw {
+            let j = ctx_len + jj;
+            let a = row_i.add(j * k);
+            if k == 4 {
+                let va = _mm_loadu_ps(a);
+                for b in 0..batch {
+                    let sj = &cand_slots[b * cw + jj];
+                    let row_j =
+                        weights.as_ptr().add(base + sj.bucket as usize * fk);
+                    let vb = _mm_loadu_ps(row_j.add(i * k));
+                    let d = _mm_cvtss_f32(_mm_dp_ps::<0xF1>(va, vb));
+                    pairs[b * np + po + jj] = d * vi * sj.value;
+                }
+                continue;
+            }
+            // k % 8 == 0: four candidates per batched horizontal sum.
+            let mut b = 0usize;
+            while b + 4 <= batch {
+                let mut acc = [_mm256_setzero_ps(); 4];
+                let mut vals = [0f32; 4];
+                for (r, (av, vv)) in acc.iter_mut().zip(vals.iter_mut()).enumerate() {
+                    let sj = &cand_slots[(b + r) * cw + jj];
+                    *vv = sj.value;
+                    let row_j = weights
+                        .as_ptr()
+                        .add(base + sj.bucket as usize * fk + i * k);
+                    let mut kk = 0usize;
+                    while kk < k {
+                        *av = _mm256_fmadd_ps(
+                            _mm256_loadu_ps(a.add(kk)),
+                            _mm256_loadu_ps(row_j.add(kk)),
+                            *av,
+                        );
+                        kk += 8;
+                    }
+                }
+                let d4 = hsum4x8_tree(acc[0], acc[1], acc[2], acc[3]);
+                let prod = _mm_mul_ps(
+                    _mm_mul_ps(d4, _mm_set1_ps(vi)),
+                    _mm_set_ps(vals[3], vals[2], vals[1], vals[0]),
+                );
+                let mut tmp = [0f32; 4];
+                _mm_storeu_ps(tmp.as_mut_ptr(), prod);
+                for (r, &t) in tmp.iter().enumerate() {
+                    pairs[(b + r) * np + po + jj] = t;
+                }
+                b += 4;
+            }
+            while b < batch {
+                let sj = &cand_slots[b * cw + jj];
+                let row_j = weights
+                    .as_ptr()
+                    .add(base + sj.bucket as usize * fk + i * k);
+                let mut acc = _mm256_setzero_ps();
+                let mut kk = 0usize;
+                while kk < k {
+                    acc = _mm256_fmadd_ps(
+                        _mm256_loadu_ps(a.add(kk)),
+                        _mm256_loadu_ps(row_j.add(kk)),
+                        acc,
+                    );
+                    kk += 8;
+                }
+                pairs[b * np + po + jj] = hsum8_tree(acc) * vi * sj.value;
+                b += 1;
+            }
+        }
+    }
+    // Phase B — cand×cand, candidate-local (same per-dot sequence as
+    // the Phase-A remainder path).
+    for b in 0..batch {
+        let cs = &cand_slots[b * cw..(b + 1) * cw];
+        let pb = b * np;
+        for (ii, si) in cs.iter().enumerate() {
+            let i = ctx_len + ii;
+            let row_base = i * (2 * fields - i - 1) / 2;
+            if si.value == 0.0 {
+                pairs[pb + row_base..pb + row_base + (fields - i - 1)].fill(0.0);
+                continue;
+            }
+            let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
+            for (jj, sj) in cs.iter().enumerate().skip(ii + 1) {
+                let j = ctx_len + jj;
+                let pi = pb + row_base + (j - i - 1);
+                let row_j = weights.as_ptr().add(base + sj.bucket as usize * fk);
+                let a = row_i.add(j * k);
+                let bp = row_j.add(i * k);
+                let d = if k == 4 {
+                    _mm_cvtss_f32(_mm_dp_ps::<0xF1>(_mm_loadu_ps(a), _mm_loadu_ps(bp)))
+                } else {
+                    let mut acc = _mm256_setzero_ps();
+                    let mut kk = 0usize;
+                    while kk < k {
+                        acc = _mm256_fmadd_ps(
+                            _mm256_loadu_ps(a.add(kk)),
+                            _mm256_loadu_ps(bp.add(kk)),
+                            acc,
+                        );
+                        kk += 8;
+                    }
+                    hsum8_tree(acc)
+                };
+                pairs[pi] = d * si.value * sj.value;
+            }
         }
     }
 }
@@ -430,6 +729,173 @@ mod tests {
         assert_eq!(pairs[3], 0.0);
         assert_eq!(pairs[4], 0.0);
         assert_ne!(pairs[1], 0.0); // (0,2)
+    }
+
+    #[test]
+    fn partial_batch_matches_sequential_partial() {
+        for k in [2usize, 3, 4, 8, 16] {
+            let fields = 6;
+            let ctx_len = 3;
+            let (cfg, layout, pool, _) = setup(fields, k);
+            let np = cfg.pairs();
+            let mut rng = Pcg32::seeded(100 + k as u64);
+            let slot = |rng: &mut Pcg32, f: usize| FeatureSlot {
+                field: f as u16,
+                bucket: rng.below(32),
+                // every 5th slot absent, mirroring sparse traffic
+                value: if rng.below(5) == 0 { 0.0 } else { 0.3 + rng.next_f32() },
+            };
+            let ctx: Vec<FeatureSlot> =
+                (0..ctx_len).map(|f| slot(&mut rng, f)).collect();
+            let batch = 7usize;
+            let mut cand_flat = Vec::new();
+            for _ in 0..batch {
+                for f in ctx_len..fields {
+                    cand_flat.push(slot(&mut rng, f));
+                }
+            }
+            // sequential reference through the single-candidate kernel
+            let cw = fields - ctx_len;
+            let mut want = vec![f32::NAN; batch * np];
+            for b in 0..batch {
+                let mut all = ctx.clone();
+                all.extend_from_slice(&cand_flat[b * cw..(b + 1) * cw]);
+                forward_partial(
+                    &pool.weights,
+                    &layout,
+                    fields,
+                    k,
+                    ctx_len,
+                    &all,
+                    &mut want[b * np..(b + 1) * np],
+                );
+            }
+            // batched kernel; sentinel proves ctx×ctx stays untouched
+            let mut got = vec![7.75f32; batch * np];
+            forward_partial_batch(
+                &pool.weights,
+                &layout,
+                fields,
+                k,
+                ctx_len,
+                &ctx,
+                &cand_flat,
+                &mut got,
+            );
+            for b in 0..batch {
+                for i in 0..fields {
+                    for j in (i + 1)..fields {
+                        let pi = b * np + i * (2 * fields - i - 1) / 2 + (j - i - 1);
+                        if j < ctx_len {
+                            assert_eq!(got[pi], 7.75, "k={k} b={b} ctx pair touched");
+                        } else {
+                            assert!(
+                                (got[pi] - want[pi]).abs() < 1e-5,
+                                "k={k} b={b} pair ({i},{j}): {} vs {}",
+                                got[pi],
+                                want[pi]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partial_batch_is_batch_size_invariant() {
+        // Bit-identical results whether a candidate is scored alone or
+        // inside a batch — the serving layer's equality contract.
+        // Exercises the concrete kernels directly so a concurrent
+        // `force_scalar` toggle elsewhere cannot flip the path mid-test.
+        type Kernel = fn(
+            &[f32],
+            &Layout,
+            usize,
+            usize,
+            usize,
+            &[FeatureSlot],
+            &[FeatureSlot],
+            &mut [f32],
+        );
+        let mut impls: Vec<(&'static str, Kernel)> =
+            vec![("generic", forward_partial_batch_generic)];
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+            && std::arch::is_x86_feature_detected!("sse4.1")
+        {
+            fn avx2(
+                weights: &[f32],
+                layout: &Layout,
+                fields: usize,
+                k: usize,
+                ctx_len: usize,
+                ctx_slots: &[FeatureSlot],
+                cand_slots: &[FeatureSlot],
+                pairs: &mut [f32],
+            ) {
+                unsafe {
+                    forward_partial_batch_avx2(
+                        weights, layout, fields, k, ctx_len, ctx_slots, cand_slots,
+                        pairs,
+                    )
+                }
+            }
+            impls.push(("avx2", avx2));
+        }
+        for k in [4usize, 8] {
+            let fields = 7;
+            let ctx_len = 3;
+            let (cfg, layout, pool, _) = setup(fields, k);
+            let np = cfg.pairs();
+            let mut rng = Pcg32::seeded(200 + k as u64);
+            let slot = |rng: &mut Pcg32, f: usize| FeatureSlot {
+                field: f as u16,
+                bucket: rng.below(32),
+                value: 0.3 + rng.next_f32(),
+            };
+            let ctx: Vec<FeatureSlot> =
+                (0..ctx_len).map(|f| slot(&mut rng, f)).collect();
+            let cw = fields - ctx_len;
+            let batch = 6usize;
+            let mut cand_flat = Vec::new();
+            for _ in 0..batch {
+                for f in ctx_len..fields {
+                    cand_flat.push(slot(&mut rng, f));
+                }
+            }
+            for (name, kern) in &impls {
+                let mut full = vec![0f32; batch * np];
+                kern(
+                    &pool.weights, &layout, fields, k, ctx_len, &ctx, &cand_flat,
+                    &mut full,
+                );
+                for b in 0..batch {
+                    let mut one = vec![0f32; np];
+                    kern(
+                        &pool.weights,
+                        &layout,
+                        fields,
+                        k,
+                        ctx_len,
+                        &ctx,
+                        &cand_flat[b * cw..(b + 1) * cw],
+                        &mut one,
+                    );
+                    for i in 0..fields {
+                        for j in (i + 1).max(ctx_len)..fields {
+                            let pi = i * (2 * fields - i - 1) / 2 + (j - i - 1);
+                            assert_eq!(
+                                one[pi],
+                                full[b * np + pi],
+                                "{name} k={k} b={b} pair ({i},{j})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -81,6 +81,59 @@ impl NeuralBlock {
         dot::dot(x, w_out) + weights[self.b_out_off]
     }
 
+    /// Batched forward pass over `batch` input rows laid out back to
+    /// back (`batch × merged_dim`).  `activations[l]` receives layer
+    /// `l`'s ReLU output batch-strided (`batch × cols`); `heads`
+    /// receives the scalar head value per row.
+    ///
+    /// Each weight matrix is streamed once per 4-candidate register
+    /// block (see [`crate::simd::batch::matmul_rowmajor`]) instead of
+    /// once per candidate; per-row results are bit-identical to scoring
+    /// the row alone.
+    pub fn forward_batch(
+        &self,
+        weights: &[f32],
+        input: &[f32],
+        batch: usize,
+        activations: &mut Vec<Vec<f32>>,
+        heads: &mut Vec<f32>,
+    ) {
+        activations.resize(self.layers.len(), Vec::new());
+        for (l, lay) in self.layers.iter().enumerate() {
+            let (prev, cur) = activations.split_at_mut(l);
+            let x: &[f32] = if l == 0 { input } else { &prev[l - 1] };
+            debug_assert_eq!(x.len(), batch * lay.rows);
+            let out = &mut cur[0];
+            out.resize(batch * lay.cols, 0.0);
+            let w = &weights[lay.w_off..lay.w_off + lay.rows * lay.cols];
+            let b = &weights[lay.b_off..lay.b_off + lay.cols];
+            crate::simd::batch::matmul_rowmajor(
+                x,
+                batch,
+                w,
+                lay.rows,
+                lay.cols,
+                Some(b),
+                out,
+            );
+            for v in out.iter_mut() {
+                *v = relu(*v);
+            }
+        }
+        let (x, width): (&[f32], usize) = match self.layers.last() {
+            Some(lay) => (activations[self.layers.len() - 1].as_slice(), lay.cols),
+            None => (input, input.len() / batch.max(1)),
+        };
+        let w_out = &weights[self.w_out_off..self.w_out_off + self.w_out_len];
+        let b_out = weights[self.b_out_off];
+        debug_assert_eq!(width, self.w_out_len);
+        heads.clear();
+        heads.reserve(batch);
+        for row in x.chunks_exact(width).take(batch) {
+            heads.push(dot::dot(row, w_out) + b_out);
+        }
+    }
+
     /// Backward pass + in-place updates.
     ///
     /// * `d_head` — dL/d(head output).
@@ -279,6 +332,45 @@ mod tests {
         }
         assert!((head - want).abs() < 1e-5);
         assert_eq!(acts[0], h);
+    }
+
+    #[test]
+    fn forward_batch_matches_sequential_rows() {
+        for hidden in [&[6usize][..], &[16, 8][..], &[32][..]] {
+            let (cfg, layout, mut pool) = setup(hidden);
+            let d = cfg.merged_dim();
+            let mut rng = Pcg32::seeded(41);
+            for w in pool.weights.iter_mut() {
+                *w = rng.normal() * 0.4;
+            }
+            let nb = NeuralBlock::new(&layout, true);
+            let batch = 7usize;
+            let input = rand_input(batch * d, 19);
+            let mut acts_b = Vec::new();
+            let mut heads = Vec::new();
+            nb.forward_batch(&pool.weights, &input, batch, &mut acts_b, &mut heads);
+            assert_eq!(heads.len(), batch);
+            for b in 0..batch {
+                let mut acts = Vec::new();
+                let head =
+                    nb.forward(&pool.weights, &input[b * d..(b + 1) * d], &mut acts);
+                assert!(
+                    (head - heads[b]).abs() < 1e-5 * (1.0 + head.abs()),
+                    "hidden={hidden:?} row {b}: {head} vs {}",
+                    heads[b]
+                );
+                for (l, a) in acts.iter().enumerate() {
+                    let cols = layout.layers[l].cols;
+                    for (j, v) in a.iter().enumerate() {
+                        let got = acts_b[l][b * cols + j];
+                        assert!(
+                            (v - got).abs() < 1e-5 * (1.0 + v.abs()),
+                            "layer {l} row {b} unit {j}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,18 +15,29 @@ pub mod regressor;
 pub mod weights;
 
 /// Reusable per-thread scratch space.  All forward/backward temporaries
-/// live here so the hot path performs zero allocations per example.
+/// live here so the hot path performs zero allocations per example (or,
+/// on the batched scoring path, per *request*).
+///
+/// The batched candidate-scoring path
+/// ([`regressor::Regressor::predict_batch_with_partial`]) reuses
+/// `pairs`, `merged`, `merged_raw` and `activations` **batch-strided**:
+/// `B` logical rows laid out back to back.  Every element is rewritten
+/// on every call, so a single workspace can be shared across models of
+/// different geometry (fields / latent dim / hidden widths) without
+/// stale-buffer carry-over — a regression test in `tests/props.rs`
+/// pins this.
 #[derive(Clone, Debug, Default)]
 pub struct Workspace {
-    /// FFM pair interaction values, strict upper triangle, row-major.
+    /// FFM pair interaction values, strict upper triangle, row-major
+    /// (`B × P` batch-strided on the batched path).
     pub pairs: Vec<f32>,
-    /// MergeNormLayer output [1 + P].
+    /// MergeNormLayer output [1 + P] (`B × (1+P)` batched).
     pub merged: Vec<f32>,
     /// Pre-norm merged vector (needed by the RMS-norm backward).
     pub merged_raw: Vec<f32>,
-    /// RMS of merged_raw.
+    /// RMS of merged_raw (last scored candidate on the batched path).
     pub rms: f32,
-    /// Per-layer post-activation outputs.
+    /// Per-layer post-activation outputs (`B × cols` batched).
     pub activations: Vec<Vec<f32>>,
     /// LR block output.
     pub lr_out: f32,
@@ -36,8 +47,17 @@ pub struct Workspace {
     pub grad_bufs: Vec<Vec<f32>>,
     /// Gradient w.r.t. merged (post-norm).
     pub dmerged: Vec<f32>,
-    /// Assembled ctx+candidate slots for the context-cache fast path.
-    pub partial_slots: Vec<crate::feature::FeatureSlot>,
+    /// Flattened candidate slots (`B × (F−C)`, candidate-major) for the
+    /// batched partial kernel.
+    pub cand_slots: Vec<crate::feature::FeatureSlot>,
+    /// Per-candidate LR partial sums.
+    pub batch_lr: Vec<f32>,
+    /// Per-candidate horizontal-sum scratch (FFM logit / MergeNorm ssq).
+    pub batch_acc: Vec<f32>,
+    /// Per-candidate neural head outputs.
+    pub batch_heads: Vec<f32>,
+    /// Score buffer backing the single-candidate delegation.
+    pub batch_scores: Vec<f32>,
 }
 
 impl Workspace {

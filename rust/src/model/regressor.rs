@@ -279,54 +279,188 @@ impl Regressor {
 
     /// Score one candidate given a cached context partial.
     /// `cand_slots` covers fields `C..fields` (in order).
+    ///
+    /// Delegates to [`predict_batch_with_partial`]
+    /// (Self::predict_batch_with_partial) with B = 1, so the single-
+    /// candidate path is exactly the batched path (bit-identical — the
+    /// kernels guarantee batch-size invariance) and the context-slot
+    /// copy the old per-candidate path performed is gone.
     pub fn predict_with_partial(
         &self,
         cp: &ContextPartial,
         cand_slots: &[FeatureSlot],
         ws: &mut Workspace,
     ) -> f32 {
+        let mut scores = std::mem::take(&mut ws.batch_scores);
+        self.predict_batch_with_partial(
+            cp,
+            std::slice::from_ref(&cand_slots),
+            ws,
+            &mut scores,
+        );
+        let p = scores[0];
+        ws.batch_scores = scores;
+        p
+    }
+
+    /// Score **all** candidates of a request in one batched pass (the
+    /// tentpole of the request-level batching PR).
+    ///
+    /// Per-request work is paid once instead of once per candidate: one
+    /// candidate-slot flatten, one shared prefetch pass, one SIMD
+    /// dispatch per kernel, and — through the field-outer
+    /// [`block_ffm::forward_partial_batch`] loop and the
+    /// register-blocked GEMM-lite of
+    /// [`crate::simd::batch::matmul_rowmajor`] — each context latent
+    /// strip and each MLP weight row is loaded once per batch block
+    /// instead of once per candidate.  (The ctx×ctx values still land
+    /// in every candidate's pair stride, but as one contiguous
+    /// `copy_from_slice` per context row rather than a recompute.)
+    ///
+    /// `scores` is cleared and receives one probability per candidate,
+    /// in order.  All workspace buffers are reused batch-strided with
+    /// zero allocation at steady state.
+    pub fn predict_batch_with_partial<S: AsRef<[FeatureSlot]>>(
+        &self,
+        cp: &ContextPartial,
+        cands: &[S],
+        ws: &mut Workspace,
+        scores: &mut Vec<f32>,
+    ) {
         let f = self.cfg.fields;
         let c = cp.ctx_fields;
-        debug_assert_eq!(c + cand_slots.len(), f);
+        debug_assert!(c <= f, "context wider than the model");
+        let cw = f - c;
+        let bsz = cands.len();
+        scores.clear();
+        if bsz == 0 {
+            return;
+        }
         let w = &self.pool.weights;
-        // LR: cached context sum + candidate sum.
-        let mut lr_out = cp.lr_sum;
-        for s in cand_slots {
-            if s.value != 0.0 {
-                lr_out += w[self.layout.lr_idx(s.bucket)] * s.value;
+        // Batched LR: cached context sum + per-candidate sums.
+        ws.batch_lr.clear();
+        ws.batch_lr.reserve(bsz);
+        for cand in cands {
+            let cs = cand.as_ref();
+            debug_assert_eq!(cs.len(), cw);
+            let mut lr = cp.lr_sum;
+            for s in cs {
+                if s.value != 0.0 {
+                    lr += w[self.layout.lr_idx(s.bucket)] * s.value;
+                }
             }
+            ws.batch_lr.push(lr);
         }
         if self.cfg.arch == Architecture::Linear {
-            ws.lr_out = lr_out;
-            ws.logit = lr_out;
-            return sigmoid(lr_out);
+            ws.lr_out = ws.batch_lr[bsz - 1];
+            ws.logit = ws.lr_out;
+            scores.extend(ws.batch_lr.iter().map(|&lr| sigmoid(lr)));
+            return;
         }
         let k = self.cfg.latent_dim;
-        ws.pairs.resize(self.cfg.pairs(), 0.0);
-        // ctx×ctx from cache (row-major contiguous per context row).
-        let mut cp_i = 0;
-        for i in 0..c {
-            let row_base = i * (2 * f - i - 1) / 2;
-            for j in (i + 1)..c {
-                ws.pairs[row_base + (j - i - 1)] = cp.ctx_pairs[cp_i];
-                cp_i += 1;
+        let np = self.cfg.pairs();
+        ws.pairs.resize(bsz * np, 0.0);
+        // ctx×ctx from the cache: one contiguous copy per context row
+        // per candidate stride.
+        for b in 0..bsz {
+            let pb = b * np;
+            let mut src = 0usize;
+            for i in 0..c {
+                let n = c - i - 1;
+                let dst = pb + i * (2 * f - i - 1) / 2;
+                ws.pairs[dst..dst + n].copy_from_slice(&cp.ctx_pairs[src..src + n]);
+                src += n;
             }
         }
-        // ctx×cand and cand×cand computed fresh through the SIMD-
-        // dispatched partial kernel (needs all slots in field order).
-        ws.partial_slots.clear();
-        ws.partial_slots.extend_from_slice(&cp.slots);
-        ws.partial_slots.extend_from_slice(cand_slots);
-        block_ffm::forward_partial(
-            w,
-            &self.layout,
-            f,
-            k,
-            c,
-            &ws.partial_slots,
-            &mut ws.pairs,
-        );
-        self.finish_forward(lr_out, ws)
+        if cw > 0 {
+            // Flatten candidate slots once per request (the context
+            // slots stay in the cached partial — never re-copied per
+            // candidate), then ctx×cand and cand×cand for the whole
+            // batch, field-outer.  With cw == 0 (context covers all
+            // fields) every pair came from the cache above.
+            ws.cand_slots.clear();
+            for cand in cands {
+                ws.cand_slots.extend_from_slice(cand.as_ref());
+            }
+            block_ffm::forward_partial_batch(
+                w,
+                &self.layout,
+                f,
+                k,
+                c,
+                &cp.slots,
+                &ws.cand_slots,
+                &mut ws.pairs,
+            );
+        }
+        match self.cfg.arch {
+            Architecture::Linear => unreachable!(),
+            Architecture::Ffm => {
+                ws.batch_acc.resize(bsz, 0.0);
+                crate::simd::batch::rowwise_sum(
+                    &ws.pairs,
+                    bsz,
+                    np,
+                    &mut ws.batch_acc,
+                );
+                for b in 0..bsz {
+                    let logit = ws.batch_lr[b] + ws.batch_acc[b];
+                    scores.push(sigmoid(logit));
+                    if b == bsz - 1 {
+                        ws.lr_out = ws.batch_lr[b];
+                        ws.logit = logit;
+                    }
+                }
+            }
+            Architecture::DeepFfm => {
+                // Batched MergeNorm: assemble B strided [lr, pairs…]
+                // rows, one batched sum-of-squares, per-row normalize.
+                let d = self.cfg.merged_dim();
+                ws.merged_raw.resize(bsz * d, 0.0);
+                for b in 0..bsz {
+                    ws.merged_raw[b * d] = ws.batch_lr[b];
+                    ws.merged_raw[b * d + 1..(b + 1) * d]
+                        .copy_from_slice(&ws.pairs[b * np..(b + 1) * np]);
+                }
+                ws.batch_acc.resize(bsz, 0.0);
+                crate::simd::batch::rowwise_sumsq(
+                    &ws.merged_raw,
+                    bsz,
+                    d,
+                    &mut ws.batch_acc,
+                );
+                ws.merged.resize(bsz * d, 0.0);
+                for b in 0..bsz {
+                    let rms = (ws.batch_acc[b] / d as f32 + MERGE_NORM_EPS).sqrt();
+                    let inv = 1.0 / rms;
+                    for (m, &r) in ws.merged[b * d..(b + 1) * d]
+                        .iter_mut()
+                        .zip(&ws.merged_raw[b * d..(b + 1) * d])
+                    {
+                        *m = r * inv;
+                    }
+                    if b == bsz - 1 {
+                        ws.rms = rms;
+                    }
+                }
+                let nn = self.nn.as_ref().expect("deepffm has nn");
+                nn.forward_batch(
+                    w,
+                    &ws.merged,
+                    bsz,
+                    &mut ws.activations,
+                    &mut ws.batch_heads,
+                );
+                for b in 0..bsz {
+                    let logit = ws.batch_heads[b] + ws.batch_lr[b];
+                    scores.push(sigmoid(logit));
+                    if b == bsz - 1 {
+                        ws.lr_out = ws.batch_lr[b];
+                        ws.logit = logit;
+                    }
+                }
+            }
+        }
     }
 
     /// Total parameter count (inference weights).
@@ -568,6 +702,26 @@ mod tests {
                     (full - via_cache).abs() < 1e-5,
                     "{arch:?}: full={full} cached={via_cache}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn full_context_partial_scores_without_candidates() {
+        // c == fields, zero candidate fields: every pair comes from the
+        // cached partial.  The batched path must score it, not panic
+        // (regression: cw == 0 once hit a divide-by-zero in the batch
+        // kernel's stride math).
+        for arch in [Architecture::Linear, Architecture::Ffm, Architecture::DeepFfm] {
+            let reg = Regressor::new(&tiny_cfg(arch));
+            let mut ws = Workspace::new();
+            let mut s = stream();
+            for _ in 0..5 {
+                let ex = s.next_example();
+                let full = reg.predict(&ex, &mut ws);
+                let cp = reg.context_partial(&ex.slots);
+                let via = reg.predict_with_partial(&cp, &[], &mut ws);
+                assert!((full - via).abs() < 1e-5, "{arch:?}: {full} vs {via}");
             }
         }
     }

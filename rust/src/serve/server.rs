@@ -302,28 +302,32 @@ fn score_batch(
                 if req.context.len() >= model.cfg.fields {
                     Err("context covers all fields; no candidate slots".into())
                 } else {
-                    let cp = cache.get_or_compute_named(
-                        &model,
-                        &req.model,
-                        version,
-                        &req.context,
-                    );
-                    let mut scores = Vec::with_capacity(req.candidates.len());
-                    let mut bad = None;
-                    for cand in &req.candidates {
-                        if req.context.len() + cand.len() != model.cfg.fields {
-                            bad = Some(format!(
-                                "candidate has {} slots, model needs {}",
-                                cand.len(),
-                                model.cfg.fields - req.context.len()
-                            ));
-                            break;
-                        }
-                        scores.push(model.predict_with_partial(&cp, cand, ws));
-                    }
-                    match bad {
-                        Some(e) => Err(e),
+                    let need = model.cfg.fields - req.context.len();
+                    match req.candidates.iter().find(|c| c.len() != need) {
+                        Some(cand) => Err(format!(
+                            "candidate has {} slots, model needs {need}",
+                            cand.len(),
+                        )),
                         None => {
+                            let cp = cache.get_or_compute_named(
+                                &model,
+                                &req.model,
+                                version,
+                                &req.context,
+                            );
+                            // Batched scoring: slot assembly, the
+                            // latent-row prefetch pass and every SIMD
+                            // dispatch happen once per request, and
+                            // the kernels score all candidates in one
+                            // field-outer pass.
+                            let mut scores =
+                                Vec::with_capacity(req.candidates.len());
+                            model.predict_batch_with_partial(
+                                &cp,
+                                &req.candidates,
+                                ws,
+                                &mut scores,
+                            );
                             candidates += scores.len() as u64;
                             Ok(Response { scores })
                         }

@@ -1,0 +1,483 @@
+//! Multi-vector kernels for request-level batched candidate scoring.
+//!
+//! The serving hot path (§5) scores B candidates that all share one
+//! request context.  The single-vector kernels in [`super::dot`] stream
+//! the neural block's weight matrix from memory once *per candidate*;
+//! the kernels here restructure the inner loops candidate-major so each
+//! weight row is loaded once per 4-candidate register block:
+//!
+//! * [`matmul_rowmajor`] — a register-blocked `B×in · in×out` GEMM-lite
+//!   for the neural block (4 batch rows × 16 output columns per tile,
+//!   AVX2+FMA with a scalar fallback).
+//! * [`rowwise_sum`] / [`rowwise_sumsq`] — batched horizontal sums over
+//!   the rows of a `B × n` matrix, used for the batched FFM logit and
+//!   the batched MergeNorm RMS.
+//!
+//! Numerical contract (the serving layer relies on it): at a fixed ISA
+//! level every output element is produced by the same operation
+//! sequence regardless of the batch size, so scoring a candidate alone
+//! (B = 1) is **bit-identical** to scoring it inside a larger batch.
+//! That is why the kernels never take the "skip zero inputs" shortcut
+//! of the single-vector matvec, and why the remainder paths mirror the
+//! blocked paths' per-element accumulation order exactly.
+
+use super::{isa_level, IsaLevel};
+
+/// Batched dense forward: `out[b*cols + j] = bias[j] + Σ_i x[b*rows + i]
+/// * w[i*cols + j]` for `b` in `0..batch`.
+///
+/// `w` is the neural block's row-major `[rows × cols]` matrix; `x`
+/// holds `batch` input rows back to back.  The AVX2 kernel loads each
+/// weight strip once per 4-candidate block instead of once per
+/// candidate, turning the per-candidate matvec's latency-bound
+/// accumulator chains into 8 independent chains per tile.
+pub fn matmul_rowmajor(
+    x: &[f32],
+    batch: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    debug_assert!(rows > 0 && cols > 0);
+    debug_assert_eq!(x.len(), batch * rows);
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(out.len(), batch * cols);
+    match isa_level() {
+        IsaLevel::Scalar => matmul_scalar(x, batch, w, rows, cols, bias, out),
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2Fma => {
+            if cols >= 8 {
+                unsafe { matmul_avx2(x, batch, w, rows, cols, bias, out) }
+            } else {
+                matmul_scalar(x, batch, w, rows, cols, bias, out)
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => matmul_scalar(x, batch, w, rows, cols, bias, out),
+    }
+}
+
+/// Portable batched matmul (also the non-x86 fallback).
+pub fn matmul_scalar(
+    x: &[f32],
+    batch: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    for (xr, or) in x
+        .chunks_exact(rows)
+        .zip(out.chunks_exact_mut(cols))
+        .take(batch)
+    {
+        match bias {
+            Some(bv) => or.copy_from_slice(bv),
+            None => or.fill(0.0),
+        }
+        for (i, &xi) in xr.iter().enumerate() {
+            for (o, &wv) in or.iter_mut().zip(&w[i * cols..(i + 1) * cols]) {
+                *o += xi * wv;
+            }
+        }
+    }
+}
+
+/// `out[b] = Σ_j m[b*cols + j]` — batched horizontal sum over rows.
+pub fn rowwise_sum(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert!(cols > 0);
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows);
+    match isa_level() {
+        IsaLevel::Scalar => rowwise_sum_scalar(m, cols, out),
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2Fma => {
+            if cols >= 8 {
+                unsafe { rowwise_sum_avx2(m, cols, out) }
+            } else {
+                rowwise_sum_scalar(m, cols, out)
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => rowwise_sum_scalar(m, cols, out),
+    }
+}
+
+/// `out[b] = Σ_j m[b*cols + j]²` — batched sum of squares (the batched
+/// MergeNorm's per-candidate RMS numerator).
+pub fn rowwise_sumsq(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert!(cols > 0);
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows);
+    match isa_level() {
+        IsaLevel::Scalar => rowwise_sumsq_scalar(m, cols, out),
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2Fma => {
+            if cols >= 8 {
+                unsafe { rowwise_sumsq_avx2(m, cols, out) }
+            } else {
+                rowwise_sumsq_scalar(m, cols, out)
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => rowwise_sumsq_scalar(m, cols, out),
+    }
+}
+
+fn rowwise_sum_scalar(m: &[f32], cols: usize, out: &mut [f32]) {
+    for (row, o) in m.chunks_exact(cols).zip(out.iter_mut()) {
+        let mut s = 0.0f32;
+        for &v in row {
+            s += v;
+        }
+        *o = s;
+    }
+}
+
+fn rowwise_sumsq_scalar(m: &[f32], cols: usize, out: &mut [f32]) {
+    for (row, o) in m.chunks_exact(cols).zip(out.iter_mut()) {
+        let mut s = 0.0f32;
+        for &v in row {
+            s += v * v;
+        }
+        *o = s;
+    }
+}
+
+// ------------------------------------------------------------------ avx2
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matmul_avx2(
+    x: &[f32],
+    batch: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let mut b = 0usize;
+    while b + 4 <= batch {
+        mm_rows::<4>(x, b, w, rows, cols, bias, out);
+        b += 4;
+    }
+    while b < batch {
+        mm_rows::<1>(x, b, w, rows, cols, bias, out);
+        b += 1;
+    }
+}
+
+/// `R` batch rows through all column tiles.  Per-element accumulation
+/// order is independent of `R` (bias load, then one FMA per input row
+/// in order) — the bit-identity contract of the module.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+#[allow(clippy::needless_range_loop)]
+unsafe fn mm_rows<const R: usize>(
+    x: &[f32],
+    b: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let wp = w.as_ptr();
+    let mut xp = [std::ptr::null::<f32>(); R];
+    for (r, p) in xp.iter_mut().enumerate() {
+        *p = x.as_ptr().add((b + r) * rows);
+    }
+    let mut j = 0usize;
+    // 16-wide column tiles: 2 weight loads serve R candidates (2R FMAs)
+    while j + 16 <= cols {
+        let mut acc0 = [_mm256_setzero_ps(); R];
+        let mut acc1 = [_mm256_setzero_ps(); R];
+        if let Some(bv) = bias {
+            let b0 = _mm256_loadu_ps(bv.as_ptr().add(j));
+            let b1 = _mm256_loadu_ps(bv.as_ptr().add(j + 8));
+            for r in 0..R {
+                acc0[r] = b0;
+                acc1[r] = b1;
+            }
+        }
+        for i in 0..rows {
+            let w0 = _mm256_loadu_ps(wp.add(i * cols + j));
+            let w1 = _mm256_loadu_ps(wp.add(i * cols + j + 8));
+            for r in 0..R {
+                let vx = _mm256_set1_ps(*xp[r].add(i));
+                acc0[r] = _mm256_fmadd_ps(vx, w0, acc0[r]);
+                acc1[r] = _mm256_fmadd_ps(vx, w1, acc1[r]);
+            }
+        }
+        for r in 0..R {
+            _mm256_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j), acc0[r]);
+            _mm256_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j + 8), acc1[r]);
+        }
+        j += 16;
+    }
+    while j + 8 <= cols {
+        let mut acc = [_mm256_setzero_ps(); R];
+        if let Some(bv) = bias {
+            let b0 = _mm256_loadu_ps(bv.as_ptr().add(j));
+            for a in acc.iter_mut() {
+                *a = b0;
+            }
+        }
+        for i in 0..rows {
+            let w0 = _mm256_loadu_ps(wp.add(i * cols + j));
+            for r in 0..R {
+                let vx = _mm256_set1_ps(*xp[r].add(i));
+                acc[r] = _mm256_fmadd_ps(vx, w0, acc[r]);
+            }
+        }
+        for r in 0..R {
+            _mm256_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j), acc[r]);
+        }
+        j += 8;
+    }
+    while j < cols {
+        for r in 0..R {
+            let mut s = match bias {
+                Some(bv) => bv[j],
+                None => 0.0,
+            };
+            for i in 0..rows {
+                s += *xp[r].add(i) * *wp.add(i * cols + j);
+            }
+            out[(b + r) * cols + j] = s;
+        }
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn hsum8(v: std::arch::x86_64::__m256) -> f32 {
+    use std::arch::x86_64::*;
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let lo = _mm256_castps256_ps128(v);
+    let s4 = _mm_add_ps(hi, lo);
+    let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+    _mm_cvtss_f32(_mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2)))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn rowwise_sum_avx2(m: &[f32], cols: usize, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    for (row, o) in m.chunks_exact(cols).zip(out.iter_mut()) {
+        let p = row.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= cols {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(p.add(i)));
+            i += 8;
+        }
+        let mut s = hsum8(acc);
+        while i < cols {
+            s += row[i];
+            i += 1;
+        }
+        *o = s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn rowwise_sumsq_avx2(m: &[f32], cols: usize, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    for (row, o) in m.chunks_exact(cols).zip(out.iter_mut()) {
+        let p = row.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= cols {
+            let v = _mm256_loadu_ps(p.add(i));
+            acc = _mm256_fmadd_ps(v, v, acc);
+            i += 8;
+        }
+        let mut s = hsum8(acc);
+        while i < cols {
+            s += row[i] * row[i];
+            i += 1;
+        }
+        *o = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randvec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg32::seeded(11);
+        for (batch, rows, cols) in [
+            (1, 5, 16),
+            (3, 7, 8),
+            (4, 13, 16),
+            (5, 9, 32),
+            (9, 46, 16),
+            (2, 7, 7),
+            (6, 11, 20),
+            (8, 10, 72),
+            (7, 1, 9),
+        ] {
+            let x = randvec(&mut rng, batch * rows);
+            let w = randvec(&mut rng, rows * cols);
+            let bias = randvec(&mut rng, cols);
+            for with_bias in [false, true] {
+                let b = if with_bias { Some(&bias[..]) } else { None };
+                let mut out = vec![0f32; batch * cols];
+                matmul_rowmajor(&x, batch, &w, rows, cols, b, &mut out);
+                for bb in 0..batch {
+                    for j in 0..cols {
+                        let mut want = if with_bias { bias[j] } else { 0.0 };
+                        for i in 0..rows {
+                            want += x[bb * rows + i] * w[i * cols + j];
+                        }
+                        let got = out[bb * cols + j];
+                        assert!(
+                            (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                            "b={batch} r={rows} c={cols} elem=({bb},{j}): {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Concrete kernels under test, bypassing the forceable global
+    /// dispatch (other tests may flip [`force_scalar`] concurrently).
+    fn matmul_impls() -> Vec<(
+        &'static str,
+        fn(&[f32], usize, &[f32], usize, usize, Option<&[f32]>, &mut [f32]),
+    )> {
+        let mut impls: Vec<(
+            &'static str,
+            fn(&[f32], usize, &[f32], usize, usize, Option<&[f32]>, &mut [f32]),
+        )> = vec![("scalar", matmul_scalar)];
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            fn avx2(
+                x: &[f32],
+                batch: usize,
+                w: &[f32],
+                rows: usize,
+                cols: usize,
+                bias: Option<&[f32]>,
+                out: &mut [f32],
+            ) {
+                unsafe { matmul_avx2(x, batch, w, rows, cols, bias, out) }
+            }
+            impls.push(("avx2", avx2));
+        }
+        impls
+    }
+
+    #[test]
+    fn matmul_batch_invariant_bitwise() {
+        // The serving layer depends on B=1 results being bit-identical
+        // to the same row scored inside any larger batch, per kernel.
+        let mut rng = Pcg32::seeded(12);
+        for (batch, rows, cols) in [(6, 17, 16), (9, 8, 24), (5, 30, 40), (8, 46, 16)] {
+            let x = randvec(&mut rng, batch * rows);
+            let w = randvec(&mut rng, rows * cols);
+            let bias = randvec(&mut rng, cols);
+            for (name, mm) in matmul_impls() {
+                let mut full = vec![0f32; batch * cols];
+                mm(&x, batch, &w, rows, cols, Some(&bias), &mut full);
+                for b in 0..batch {
+                    let mut one = vec![0f32; cols];
+                    mm(
+                        &x[b * rows..(b + 1) * rows],
+                        1,
+                        &w,
+                        rows,
+                        cols,
+                        Some(&bias),
+                        &mut one,
+                    );
+                    assert_eq!(one, full[b * cols..(b + 1) * cols], "{name} row {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_impls_agree_within_tolerance() {
+        let mut rng = Pcg32::seeded(13);
+        let (batch, rows, cols) = (6, 23, 48);
+        let x = randvec(&mut rng, batch * rows);
+        let w = randvec(&mut rng, rows * cols);
+        let mut slow = vec![0f32; batch * cols];
+        matmul_scalar(&x, batch, &w, rows, cols, None, &mut slow);
+        for (name, mm) in matmul_impls() {
+            let mut fast = vec![0f32; batch * cols];
+            mm(&x, batch, &w, rows, cols, None, &mut fast);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn rowwise_sums_match_naive() {
+        let mut rng = Pcg32::seeded(14);
+        for (rows, cols) in [(1, 3), (4, 8), (3, 17), (5, 46), (2, 64), (6, 9)] {
+            let m = randvec(&mut rng, rows * cols);
+            let mut sum = vec![0f32; rows];
+            let mut ssq = vec![0f32; rows];
+            rowwise_sum(&m, rows, cols, &mut sum);
+            rowwise_sumsq(&m, rows, cols, &mut ssq);
+            for r in 0..rows {
+                let want_s: f32 = m[r * cols..(r + 1) * cols].iter().sum();
+                let want_q: f32 = m[r * cols..(r + 1) * cols].iter().map(|v| v * v).sum();
+                assert!((sum[r] - want_s).abs() < 1e-3 * (1.0 + want_s.abs()));
+                assert!((ssq[r] - want_q).abs() < 1e-3 * (1.0 + want_q.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn rowwise_sums_batch_invariant_bitwise() {
+        // Per concrete kernel (dispatch-independent): a row's sum of
+        // squares is identical alone or inside a batch.
+        let mut rng = Pcg32::seeded(15);
+        let (rows, cols) = (7, 46);
+        let m = randvec(&mut rng, rows * cols);
+        let mut impls: Vec<(&'static str, fn(&[f32], usize, &mut [f32]))> =
+            vec![("scalar", rowwise_sumsq_scalar)];
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            fn avx2(m: &[f32], cols: usize, out: &mut [f32]) {
+                unsafe { rowwise_sumsq_avx2(m, cols, out) }
+            }
+            impls.push(("avx2", avx2));
+        }
+        for (name, ssq) in impls {
+            let mut full = vec![0f32; rows];
+            ssq(&m, cols, &mut full);
+            for r in 0..rows {
+                let mut one = vec![0f32; 1];
+                ssq(&m[r * cols..(r + 1) * cols], cols, &mut one);
+                assert_eq!(one[0], full[r], "{name} row {r}");
+            }
+        }
+    }
+}

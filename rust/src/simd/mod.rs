@@ -12,6 +12,7 @@
 //! taken once at startup via `is_x86_feature_detected!`.  Benchmarks
 //! (Figure 5) can force the scalar path through [`force_scalar`].
 
+pub mod batch;
 pub mod dot;
 
 use std::sync::atomic::{AtomicU8, Ordering};

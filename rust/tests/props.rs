@@ -347,3 +347,126 @@ fn prop_hogwild_robustness() {
         assert!(spread > 1e-4, "degenerate constant predictor");
     });
 }
+
+/// Tentpole invariant of the batched scoring PR: for every
+/// architecture, latent dim and context split,
+/// `predict_batch_with_partial` matches scoring the same candidates one
+/// at a time through `predict_with_partial`, and both match the full
+/// (uncached, unbatched) forward pass — zero-valued slots included.
+#[test]
+fn prop_batched_scoring_matches_sequential() {
+    use fwumious::feature::{Example, FeatureSlot};
+    prop(20, |g| {
+        let buckets = 1u32 << 8;
+        let fields = g.usize_in(4..10);
+        let k = [2usize, 4, 8, 16][g.usize_in(0..4)];
+        for arch in 0..3usize {
+            let cfg = match arch {
+                0 => ModelConfig::linear(fields, buckets),
+                1 => ModelConfig::ffm(fields, k, buckets),
+                _ => ModelConfig::deep_ffm(fields, k, buckets, &[8]),
+            };
+            let mut reg = Regressor::new(&cfg);
+            for w in reg.pool.weights.iter_mut() {
+                *w = g.f32_in(-0.4, 0.4);
+            }
+            let ctx_len = g.usize_in(1..fields);
+            let slot = |g: &mut fwumious::testutil::Gen, f: usize| FeatureSlot {
+                field: f as u16,
+                bucket: g.u32() & (buckets - 1),
+                value: if g.usize_in(0..5) == 0 { 0.0 } else { g.f32_in(0.1, 1.5) },
+            };
+            let ctx: Vec<FeatureSlot> =
+                (0..ctx_len).map(|f| slot(g, f)).collect();
+            let bsz = g.usize_in(1..13);
+            let cands: Vec<Vec<FeatureSlot>> = (0..bsz)
+                .map(|_| (ctx_len..fields).map(|f| slot(g, f)).collect())
+                .collect();
+            let cp = reg.context_partial(&ctx);
+            let mut ws_seq = Workspace::new();
+            let seq: Vec<f32> = cands
+                .iter()
+                .map(|cand| reg.predict_with_partial(&cp, cand, &mut ws_seq))
+                .collect();
+            let mut ws_b = Workspace::new();
+            let mut got = Vec::new();
+            reg.predict_batch_with_partial(&cp, &cands, &mut ws_b, &mut got);
+            assert_eq!(got.len(), bsz);
+            let mut ws_f = Workspace::new();
+            for (b, cand) in cands.iter().enumerate() {
+                assert!(
+                    (got[b] - seq[b]).abs() < 1e-5,
+                    "arch {arch} f={fields} k={k} c={ctx_len} b={b}: \
+                     batched {} vs sequential {}",
+                    got[b],
+                    seq[b]
+                );
+                let mut slots = ctx.clone();
+                slots.extend_from_slice(cand);
+                let ex = Example { label: 0.0, importance: 1.0, slots };
+                let full = reg.predict(&ex, &mut ws_f);
+                assert!(
+                    (got[b] - full).abs() < 1e-5,
+                    "arch {arch} f={fields} k={k} c={ctx_len} b={b}: \
+                     batched {} vs full {full}",
+                    got[b]
+                );
+            }
+        }
+    });
+}
+
+/// Batch-strided workspace buffers make resize bugs easy to hit: a
+/// single `Workspace` interleaved across models of different geometry
+/// (fields / latent dim / hidden widths) and different batch sizes must
+/// score bit-identically to a fresh workspace every time.
+#[test]
+fn workspace_survives_interleaved_model_dims() {
+    use fwumious::serve::trace::TraceGenerator;
+    let cfgs = [
+        ModelConfig::deep_ffm(4, 2, 256, &[8]),
+        ModelConfig::deep_ffm(9, 8, 512, &[32, 16]),
+        ModelConfig::ffm(6, 4, 256),
+        ModelConfig::linear(5, 256),
+        ModelConfig::deep_ffm(7, 16, 1024, &[16]),
+    ];
+    let regs: Vec<Regressor> = cfgs
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| {
+            let mut reg = Regressor::new(cfg);
+            let mut rng = fwumious::util::rng::Pcg32::seeded(900 + i as u64);
+            for w in reg.pool.weights.iter_mut() {
+                *w = rng.normal() * 0.2;
+            }
+            reg
+        })
+        .collect();
+    let mut shared = Workspace::new();
+    for round in 0..3u64 {
+        // batch size varies per round so strided buffers grow AND shrink
+        let fanout = [16usize, 1, 5][round as usize];
+        for (i, reg) in regs.iter().enumerate() {
+            let fields = reg.cfg.fields;
+            let ctx_fields = (fields / 2).max(1);
+            let mut gen = TraceGenerator::new(
+                round * 31 + i as u64,
+                fields,
+                ctx_fields,
+                reg.cfg.buckets,
+                fanout,
+            );
+            let req = gen.next_request("m");
+            let cp = reg.context_partial(&req.context);
+            let mut got = Vec::new();
+            reg.predict_batch_with_partial(&cp, &req.candidates, &mut shared, &mut got);
+            let mut fresh = Workspace::new();
+            let mut want = Vec::new();
+            reg.predict_batch_with_partial(&cp, &req.candidates, &mut fresh, &mut want);
+            assert_eq!(
+                got, want,
+                "round {round} model {i}: stale workspace state leaked"
+            );
+        }
+    }
+}
