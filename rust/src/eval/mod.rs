@@ -6,6 +6,11 @@ use crate::util::math::{logloss, mean_std, median, rig};
 
 /// Exact AUC of a (score, label) set via rank statistics.
 /// Ties share the average rank.  Returns 0.5 for degenerate sets.
+///
+/// NaN-tolerant like [`median`](crate::util::math::median): a poisoned
+/// score (e.g. a Hogwild race briefly driving a weight non-finite mid-
+/// bench) ranks at the tail — either NaN sign bit — and skews the
+/// number instead of panicking the evaluation thread.
 pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
     assert_eq!(scores.len(), labels.len());
     let n = scores.len();
@@ -15,7 +20,7 @@ pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
         return 0.5;
     }
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    idx.sort_by(|&a, &b| crate::util::math::nan_last_f32(&scores[a], &scores[b]));
     // sum of positive ranks with tie averaging
     let mut rank_sum = 0.0f64;
     let mut i = 0;
@@ -162,6 +167,23 @@ impl StabilityStats {
 mod tests {
     use super::*;
     use crate::util::rng::Pcg32;
+
+    #[test]
+    fn auc_survives_nan_scores() {
+        // Regression: partial_cmp(..).unwrap() panicked the evaluating
+        // thread on the first NaN score (same class as the
+        // median/percentile fix in util::math).  Either NaN sign bit
+        // must rank at the tail and merely skew the number.
+        for nan in [f32::NAN, -f32::NAN] {
+            // NaN ranks last among the negatives: 0.8/0.9 hold ranks
+            // 3/4 of 5 -> auc (7 - 3) / (2 * 3) = 2/3 exactly.
+            let s = [0.1f32, 0.2, nan, 0.8, 0.9];
+            let y = [0.0f32, 0.0, 0.0, 1.0, 1.0];
+            let a = auc(&s, &y);
+            assert!(a.is_finite());
+            assert!((a - 2.0 / 3.0).abs() < 1e-12, "auc={a}");
+        }
+    }
 
     #[test]
     fn auc_perfect_and_inverted() {

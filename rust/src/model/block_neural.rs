@@ -23,6 +23,7 @@
 
 use crate::model::optimizer::UpdateRule;
 use crate::model::weights::{LayerLayout, Layout};
+use crate::model::BatchGradBufs;
 use crate::simd::dot;
 use crate::util::math::relu;
 
@@ -282,6 +283,161 @@ impl NeuralBlock {
         }
         updates
     }
+
+    /// Batched backward + in-place updates over a micro-batch.
+    ///
+    /// Consumes the batch-strided activations produced by
+    /// [`forward_batch`](Self::forward_batch).  Each layer's weight
+    /// gradient is reduced over the whole micro-batch by the
+    /// transposed-operand GEMM pair
+    /// ([`matmul_transposed`](crate::simd::batch::matmul_transposed)
+    /// for `dX = dY·Wᵀ`,
+    /// [`matmul_xt_dy`](crate::simd::batch::matmul_xt_dy) for
+    /// `dW += Xᵀ·dY`) and applied through `rule` **once per coordinate
+    /// per micro-batch** — minibatch semantics: all gradients are taken
+    /// at batch-start weights and the B per-example optimizer steps
+    /// collapse into one summed step.  With `batch == 1` the math is
+    /// the per-example backward's (same gradients, one step).
+    ///
+    /// §4.3 sparse skips apply at micro-batch granularity: a coordinate
+    /// is skipped when its batch-summed gradient is exactly zero, and a
+    /// layer with no live (ReLU-active, nonzero-gradient) unit in *any*
+    /// row cuts the whole remaining branch.
+    ///
+    /// * `d_heads` — per-row dL/d(head output) (`B` values).
+    /// * `dinput` — receives batch-strided dL/d(block input)
+    ///   (`B × rows₀`).
+    ///
+    /// Returns the number of weight updates applied.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_batch<U: UpdateRule>(
+        &mut self,
+        weights: &mut [f32],
+        acc: &mut [f32],
+        input: &[f32],
+        batch: usize,
+        activations: &[Vec<f32>],
+        d_heads: &[f32],
+        dinput: &mut [f32],
+        bufs: &mut BatchGradBufs,
+        rule: &mut U,
+    ) -> usize {
+        debug_assert_eq!(d_heads.len(), batch);
+        let nl = self.layers.len();
+        let width = self.w_out_len;
+        let mut updates = 0usize;
+
+        // Head: dh[b, j] = d_b * w_out[j] (pre-update weights), then
+        // one summed update per head coordinate.
+        let last: &[f32] = if nl == 0 { input } else { &activations[nl - 1] };
+        debug_assert_eq!(last.len(), batch * width);
+        bufs.dh.resize(batch * width, 0.0);
+        let w_out = &weights[self.w_out_off..self.w_out_off + width];
+        for (dhr, &db) in bufs.dh.chunks_exact_mut(width).zip(d_heads) {
+            for (dhv, &wv) in dhr.iter_mut().zip(w_out) {
+                *dhv = db * wv;
+            }
+        }
+        for j in 0..width {
+            let mut g = 0.0f32;
+            for (b, &db) in d_heads.iter().enumerate() {
+                g += db * last[b * width + j];
+            }
+            if !self.sparse || g != 0.0 {
+                let idx = self.w_out_off + j;
+                rule.update(idx, &mut weights[idx], &mut acc[idx], g);
+                updates += 1;
+            }
+        }
+        {
+            let g: f32 = d_heads.iter().sum();
+            let idx = self.b_out_off;
+            rule.update(idx, &mut weights[idx], &mut acc[idx], g);
+            updates += 1;
+        }
+        if nl == 0 {
+            dinput.copy_from_slice(&bufs.dh[..batch * width]);
+            return updates;
+        }
+
+        // Hidden layers, last to first.  bufs.dh holds the batch-
+        // strided upstream gradient dL/d(layer output); the ReLU gate
+        // turns it into dpre in place.
+        for l in (0..nl).rev() {
+            let lay = self.layers[l];
+            let h = &activations[l];
+            let x: &[f32] = if l == 0 { input } else { &activations[l - 1] };
+            debug_assert_eq!(x.len(), batch * lay.rows);
+            let dpre = &mut bufs.dh[..batch * lay.cols];
+            let mut any_active = false;
+            for (dp, &hv) in dpre.iter_mut().zip(&h[..batch * lay.cols]) {
+                if hv > 0.0 {
+                    if *dp != 0.0 {
+                        any_active = true;
+                    }
+                } else {
+                    *dp = 0.0;
+                }
+            }
+            bufs.dx.clear();
+            bufs.dx.resize(batch * lay.rows, 0.0);
+            if self.sparse && !any_active {
+                // §4.3: zero global gradient across the whole micro-
+                // batch -> cut the branch (upstream gradient all-zero).
+                if l == 0 {
+                    dinput.fill(0.0);
+                    return updates;
+                }
+                std::mem::swap(&mut bufs.dh, &mut bufs.dx);
+                continue;
+            }
+            let w = &weights[lay.w_off..lay.w_off + lay.rows * lay.cols];
+            // dX = dpre · Wᵀ (pre-update weights)
+            crate::simd::batch::matmul_transposed(
+                dpre,
+                batch,
+                w,
+                lay.rows,
+                lay.cols,
+                &mut bufs.dx,
+            );
+            // dW += Xᵀ · dpre, reduced over the micro-batch
+            bufs.wgrad.clear();
+            bufs.wgrad.resize(lay.rows * lay.cols, 0.0);
+            crate::simd::batch::matmul_xt_dy(
+                x,
+                batch,
+                dpre,
+                lay.rows,
+                lay.cols,
+                &mut bufs.wgrad,
+            );
+            for (off, &g) in bufs.wgrad.iter().enumerate() {
+                if !self.sparse || g != 0.0 {
+                    let idx = lay.w_off + off;
+                    rule.update(idx, &mut weights[idx], &mut acc[idx], g);
+                    updates += 1;
+                }
+            }
+            for j in 0..lay.cols {
+                let mut g = 0.0f32;
+                for b in 0..batch {
+                    g += dpre[b * lay.cols + j];
+                }
+                if !self.sparse || g != 0.0 {
+                    let idx = lay.b_off + j;
+                    rule.update(idx, &mut weights[idx], &mut acc[idx], g);
+                    updates += 1;
+                }
+            }
+            if l == 0 {
+                dinput.copy_from_slice(&bufs.dx);
+            } else {
+                std::mem::swap(&mut bufs.dh, &mut bufs.dx);
+            }
+        }
+        updates
+    }
 }
 
 #[cfg(test)]
@@ -371,6 +527,152 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn backward_batch_matches_per_example_grads() {
+        // Batched minibatch backward == sum of per-example backwards at
+        // the same (frozen) weights, for every architecture depth.
+        for hidden in [&[6usize][..], &[16, 8][..], &[32][..]] {
+            let (cfg, layout, mut pool) = setup(hidden);
+            let d = cfg.merged_dim();
+            let mut rng = Pcg32::seeded(51);
+            for w in pool.weights.iter_mut() {
+                *w = rng.normal() * 0.4;
+            }
+            let batch = 5usize;
+            let input = rand_input(batch * d, 23);
+            let d_heads: Vec<f32> =
+                (0..batch).map(|b| 0.3 + 0.17 * b as f32).collect();
+            let mut nb = NeuralBlock::new(&layout, true);
+            let mut acts_b = Vec::new();
+            let mut heads = Vec::new();
+            nb.forward_batch(&pool.weights, &input, batch, &mut acts_b, &mut heads);
+            let mut w = pool.weights.clone();
+            let mut acc = pool.acc.clone();
+            let mut rec = GradRecorder::default();
+            let mut dinput_b = vec![0f32; batch * d];
+            let mut bufs = BatchGradBufs::default();
+            nb.backward_batch(
+                &mut w,
+                &mut acc,
+                &input,
+                batch,
+                &acts_b,
+                &d_heads,
+                &mut dinput_b,
+                &mut bufs,
+                &mut rec,
+            );
+            assert_eq!(w, pool.weights, "recorder must not mutate weights");
+            let batched = rec.dense(layout.total);
+            let mut per = vec![0f32; layout.total];
+            for b in 0..batch {
+                let x = &input[b * d..(b + 1) * d];
+                let mut nb1 = NeuralBlock::new(&layout, true);
+                let mut acts = Vec::new();
+                nb1.forward(&pool.weights, x, &mut acts);
+                let mut w1 = pool.weights.clone();
+                let mut acc1 = pool.acc.clone();
+                let mut rec1 = GradRecorder::default();
+                let mut dinput = vec![0f32; d];
+                let mut gb = Vec::new();
+                nb1.backward(
+                    &mut w1, &mut acc1, x, &acts, d_heads[b], &mut dinput, &mut gb,
+                    &mut rec1,
+                );
+                for (p, g) in per.iter_mut().zip(rec1.dense(layout.total)) {
+                    *p += g;
+                }
+                for i in 0..d {
+                    let got = dinput_b[b * d + i];
+                    assert!(
+                        (got - dinput[i]).abs() < 1e-4 * (1.0 + dinput[i].abs()),
+                        "hidden={hidden:?} row {b} dinput[{i}]: {got} vs {}",
+                        dinput[i]
+                    );
+                }
+            }
+            for i in 0..layout.total {
+                assert!(
+                    (batched[i] - per[i]).abs() < 1e-4 * (1.0 + per[i].abs()),
+                    "hidden={hidden:?} grad {i}: {} vs {}",
+                    batched[i],
+                    per[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_batch_sparse_and_dense_agree() {
+        let (cfg, layout, mut pool) = setup(&[16, 16]);
+        let d = cfg.merged_dim();
+        let mut rng = Pcg32::seeded(53);
+        for w in pool.weights.iter_mut() {
+            *w = rng.normal() * 0.4;
+        }
+        let batch = 4usize;
+        let input = rand_input(batch * d, 29);
+        let d_heads = vec![0.9f32, -0.4, 0.25, 1.3];
+        let run = |sparse: bool| -> (Vec<f32>, usize) {
+            let mut nb = NeuralBlock::new(&layout, sparse);
+            let mut acts = Vec::new();
+            let mut heads = Vec::new();
+            nb.forward_batch(&pool.weights, &input, batch, &mut acts, &mut heads);
+            let mut w = pool.weights.clone();
+            let mut acc = pool.acc.clone();
+            let mut rec = GradRecorder::default();
+            let mut dinput = vec![0f32; batch * d];
+            let mut bufs = BatchGradBufs::default();
+            let n = nb.backward_batch(
+                &mut w, &mut acc, &input, batch, &acts, &d_heads, &mut dinput,
+                &mut bufs, &mut rec,
+            );
+            (rec.dense(layout.total), n)
+        };
+        let (gs, ns) = run(true);
+        let (gd, nd) = run(false);
+        for i in 0..gs.len() {
+            assert!((gs[i] - gd[i]).abs() < 1e-5, "grad {i}: {} vs {}", gs[i], gd[i]);
+        }
+        assert!(ns < nd, "sparse={ns} dense={nd}");
+    }
+
+    #[test]
+    fn backward_batch_dead_layer_cuts_branch() {
+        let (cfg, layout, mut pool) = setup(&[4]);
+        let d = cfg.merged_dim();
+        let lay = layout.layers[0];
+        for j in 0..lay.cols {
+            pool.weights[lay.b_off + j] = -100.0;
+        }
+        let batch = 3usize;
+        let input = rand_input(batch * d, 31);
+        let mut nb = NeuralBlock::new(&layout, true);
+        let mut acts = Vec::new();
+        let mut heads = Vec::new();
+        nb.forward_batch(&pool.weights, &input, batch, &mut acts, &mut heads);
+        let mut w = pool.weights.clone();
+        let mut acc = pool.acc.clone();
+        let mut rec = GradRecorder::default();
+        let mut dinput = vec![0f32; batch * d];
+        let mut bufs = BatchGradBufs::default();
+        let n = nb.backward_batch(
+            &mut w,
+            &mut acc,
+            &input,
+            batch,
+            &acts,
+            &[1.0, -0.5, 0.75],
+            &mut dinput,
+            &mut bufs,
+            &mut rec,
+        );
+        // all hidden activations are zero -> only b_out updates (the
+        // head weights see an exactly-zero summed gradient)
+        assert!(n <= 2, "updates={n}");
+        assert!(dinput.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -14,18 +14,33 @@ pub mod optimizer;
 pub mod regressor;
 pub mod weights;
 
+/// Batch-strided gradient scratch for the batched dense-tower backward
+/// ([`block_neural::NeuralBlock::backward_batch`]): the upstream-
+/// gradient ping-pong pair and the per-layer summed weight-gradient
+/// accumulator.  Sized lazily, reused across micro-batches.
+#[derive(Clone, Debug, Default)]
+pub struct BatchGradBufs {
+    /// dL/d(layer output), batch-strided `B × cols` (ping).
+    pub dh: Vec<f32>,
+    /// dL/d(layer input), batch-strided `B × rows` (pong).
+    pub dx: Vec<f32>,
+    /// Micro-batch-summed weight gradient for one layer (`rows × cols`).
+    pub wgrad: Vec<f32>,
+}
+
 /// Reusable per-thread scratch space.  All forward/backward temporaries
 /// live here so the hot path performs zero allocations per example (or,
 /// on the batched scoring path, per *request*).
 ///
 /// The batched candidate-scoring path
-/// ([`regressor::Regressor::predict_batch_with_partial`]) reuses
-/// `pairs`, `merged`, `merged_raw` and `activations` **batch-strided**:
-/// `B` logical rows laid out back to back.  Every element is rewritten
-/// on every call, so a single workspace can be shared across models of
-/// different geometry (fields / latent dim / hidden widths) without
-/// stale-buffer carry-over — a regression test in `tests/props.rs`
-/// pins this.
+/// ([`regressor::Regressor::predict_batch_with_partial`]) and the
+/// batched training path ([`regressor::Regressor::learn_batch`]) reuse
+/// `pairs`, `merged`, `merged_raw`, `activations` and `dmerged`
+/// **batch-strided**: `B` logical rows laid out back to back.  Every
+/// element is rewritten on every call, so a single
+/// workspace can be shared across models of different geometry (fields
+/// / latent dim / hidden widths) without stale-buffer carry-over — a
+/// regression test in `tests/props.rs` pins this.
 #[derive(Clone, Debug, Default)]
 pub struct Workspace {
     /// FFM pair interaction values, strict upper triangle, row-major
@@ -58,6 +73,13 @@ pub struct Workspace {
     pub batch_heads: Vec<f32>,
     /// Score buffer backing the single-candidate delegation.
     pub batch_scores: Vec<f32>,
+    /// Per-row MergeNorm RMS on the batched training path (the serving
+    /// path only keeps the last row's RMS in `rms`).
+    pub batch_rms: Vec<f32>,
+    /// Per-example dL/dlogit on the batched training path.
+    pub batch_d: Vec<f32>,
+    /// Dense-tower backward scratch for the batched training path.
+    pub batch_grads: BatchGradBufs,
 }
 
 impl Workspace {

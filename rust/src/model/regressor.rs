@@ -234,6 +234,265 @@ impl Regressor {
         }
     }
 
+    // ------------------------------------------------- batched training
+
+    /// Forward pass over a micro-batch of full (all-fields) examples.
+    ///
+    /// The sparse blocks run per example — LR sums and FFM pairs are
+    /// hashed-gather bound, not FLOP bound — while the dense tower
+    /// (where §4.3 says the FLOPs live) runs batch-strided through
+    /// [`NeuralBlock::forward_batch`]'s GEMM-lite, streaming each MLP
+    /// weight row once per 4-example register block.  `scores` is
+    /// cleared and receives one probability per example, in order.
+    ///
+    /// A single example (`exs.len() == 1`) delegates to [`predict`]
+    /// (Self::predict), so the B = 1 path is **bit-identical** to the
+    /// per-example path by construction.
+    pub fn predict_batch(
+        &self,
+        exs: &[Example],
+        ws: &mut Workspace,
+        scores: &mut Vec<f32>,
+    ) {
+        let bsz = exs.len();
+        scores.clear();
+        if bsz == 0 {
+            return;
+        }
+        if bsz == 1 {
+            scores.push(self.predict(&exs[0], ws));
+            return;
+        }
+        let w = &self.pool.weights;
+        ws.batch_lr.clear();
+        ws.batch_lr.reserve(bsz);
+        for ex in exs {
+            debug_assert_eq!(ex.slots.len(), self.cfg.fields);
+            ws.batch_lr.push(block_lr::forward(w, &self.layout, ex));
+        }
+        if self.cfg.arch == Architecture::Linear {
+            ws.lr_out = ws.batch_lr[bsz - 1];
+            ws.logit = ws.lr_out;
+            scores.extend(ws.batch_lr.iter().map(|&lr| sigmoid(lr)));
+            return;
+        }
+        let np = self.cfg.pairs();
+        ws.pairs.resize(bsz * np, 0.0);
+        for (b, ex) in exs.iter().enumerate() {
+            block_ffm::forward(
+                w,
+                &self.layout,
+                self.cfg.fields,
+                self.cfg.latent_dim,
+                ex,
+                &mut ws.pairs[b * np..(b + 1) * np],
+            );
+        }
+        match self.cfg.arch {
+            Architecture::Linear => unreachable!(),
+            Architecture::Ffm => {
+                for b in 0..bsz {
+                    let s: f32 = ws.pairs[b * np..(b + 1) * np].iter().sum();
+                    let logit = ws.batch_lr[b] + s;
+                    scores.push(sigmoid(logit));
+                    if b == bsz - 1 {
+                        ws.lr_out = ws.batch_lr[b];
+                        ws.logit = logit;
+                    }
+                }
+            }
+            Architecture::DeepFfm => {
+                // Batched MergeNorm with *per-row* RMS kept for the
+                // backward (the serving path only keeps the last one).
+                // Deliberately NOT shared with predict_batch_with_
+                // partial's tail: training computes each row's ssq via
+                // the same dot::dot call `finish_forward` uses, so the
+                // micro-batch forward stays on per-example arithmetic
+                // (a gate flip near ReLU 0 would change the §4.3
+                // sparse backward), while serving batches the ssq via
+                // rowwise_sumsq.  Keep all three tails in sync on any
+                // MergeNorm change.
+                let d = self.cfg.merged_dim();
+                ws.merged_raw.resize(bsz * d, 0.0);
+                for b in 0..bsz {
+                    ws.merged_raw[b * d] = ws.batch_lr[b];
+                    ws.merged_raw[b * d + 1..(b + 1) * d]
+                        .copy_from_slice(&ws.pairs[b * np..(b + 1) * np]);
+                }
+                ws.merged.resize(bsz * d, 0.0);
+                ws.batch_rms.clear();
+                ws.batch_rms.reserve(bsz);
+                for b in 0..bsz {
+                    let raw = &ws.merged_raw[b * d..(b + 1) * d];
+                    let ssq = dot::dot(raw, raw);
+                    let rms = (ssq / d as f32 + MERGE_NORM_EPS).sqrt();
+                    ws.batch_rms.push(rms);
+                    let inv = 1.0 / rms;
+                    for (m, &r) in
+                        ws.merged[b * d..(b + 1) * d].iter_mut().zip(raw)
+                    {
+                        *m = r * inv;
+                    }
+                }
+                let nn = self.nn.as_ref().expect("deepffm has nn");
+                nn.forward_batch(
+                    w,
+                    &ws.merged,
+                    bsz,
+                    &mut ws.activations,
+                    &mut ws.batch_heads,
+                );
+                for b in 0..bsz {
+                    let logit = ws.batch_heads[b] + ws.batch_lr[b];
+                    scores.push(sigmoid(logit));
+                    if b == bsz - 1 {
+                        ws.lr_out = ws.batch_lr[b];
+                        ws.logit = logit;
+                        ws.rms = ws.batch_rms[b];
+                    }
+                }
+            }
+        }
+    }
+
+    /// One minibatch learning step over `exs`; `scores` is cleared and
+    /// receives the *pre-update* prediction per example (progressive
+    /// validation, same contract as [`learn`](Self::learn)).
+    ///
+    /// Semantics: the forward runs for the whole micro-batch at batch-
+    /// start weights ([`predict_batch`](Self::predict_batch)); the
+    /// sparse LR/FFM blocks then apply per-example updates (hashed
+    /// collisions are the Hogwild contract — §4.2 — and batching them
+    /// would buy nothing), while the dense neural tower applies one
+    /// summed update per coordinate through
+    /// [`NeuralBlock::backward_batch`]'s transposed GEMM pair.  A
+    /// 1-example batch delegates to [`learn`](Self::learn) and is
+    /// bit-identical to it.
+    pub fn learn_batch(
+        &mut self,
+        exs: &[Example],
+        ws: &mut Workspace,
+        scores: &mut Vec<f32>,
+    ) {
+        if exs.len() == 1 {
+            scores.clear();
+            scores.push(self.learn(&exs[0], ws));
+            return;
+        }
+        self.predict_batch(exs, ws, scores);
+        if exs.is_empty() {
+            return;
+        }
+        ws.batch_d.clear();
+        for (ex, &p) in exs.iter().zip(scores.iter()) {
+            debug_assert!(ex.is_labeled(), "learn_batch needs labeled examples");
+            ws.batch_d.push((p - ex.label) * ex.importance);
+        }
+        let mut lr_rule = AdaGrad::new(self.cfg.lr, self.cfg.power_t, self.cfg.l2);
+        let mut ffm_rule =
+            AdaGrad::new(self.cfg.ffm_lr, self.cfg.power_t, self.cfg.l2);
+        let mut nn_rule = AdaGrad::new(self.cfg.nn_lr, self.cfg.power_t, self.cfg.l2);
+        let d = std::mem::take(&mut ws.batch_d);
+        self.backward_batch(exs, ws, &d, &mut lr_rule, &mut ffm_rule, &mut nn_rule);
+        ws.batch_d = d;
+    }
+
+    /// Batched backward with caller-supplied update rules (tests pass
+    /// [`GradRecorder`](crate::model::optimizer::GradRecorder)s to
+    /// compare against per-example gradients).  Requires the workspace
+    /// state left by [`predict_batch`](Self::predict_batch) over the
+    /// same examples; `d` holds per-example dL/dlogit.  A 1-example
+    /// batch delegates to [`backward`](Self::backward).
+    pub fn backward_batch<U: UpdateRule>(
+        &mut self,
+        exs: &[Example],
+        ws: &mut Workspace,
+        d: &[f32],
+        lr_rule: &mut U,
+        ffm_rule: &mut U,
+        nn_rule: &mut U,
+    ) {
+        let bsz = exs.len();
+        debug_assert_eq!(d.len(), bsz);
+        if bsz == 0 {
+            return;
+        }
+        if bsz == 1 {
+            self.backward(&exs[0], ws, d[0], lr_rule, ffm_rule, nn_rule);
+            return;
+        }
+        let layout = &self.layout;
+        let (weights, acc) = (&mut self.pool.weights, &mut self.pool.acc);
+        debug_assert!(!acc.is_empty(), "inference pool cannot learn");
+        match self.cfg.arch {
+            Architecture::Linear => {
+                for (ex, &db) in exs.iter().zip(d) {
+                    block_lr::backward(weights, acc, layout, ex, db, lr_rule);
+                }
+            }
+            Architecture::Ffm => {
+                let np = self.cfg.pairs();
+                for (ex, &db) in exs.iter().zip(d) {
+                    ws.dmerged.clear();
+                    ws.dmerged.resize(np, db);
+                    block_ffm::backward(
+                        weights,
+                        acc,
+                        layout,
+                        self.cfg.fields,
+                        self.cfg.latent_dim,
+                        ex,
+                        &ws.dmerged,
+                        ffm_rule,
+                    );
+                    block_lr::backward(weights, acc, layout, ex, db, lr_rule);
+                }
+            }
+            Architecture::DeepFfm => {
+                let dim = self.cfg.merged_dim();
+                ws.dmerged.clear();
+                ws.dmerged.resize(bsz * dim, 0.0);
+                let nn = self.nn.as_mut().expect("deepffm has nn");
+                nn.backward_batch(
+                    weights,
+                    acc,
+                    &ws.merged,
+                    bsz,
+                    &ws.activations,
+                    d,
+                    &mut ws.dmerged,
+                    &mut ws.batch_grads,
+                    nn_rule,
+                );
+                // Per-row RMS-norm backward, then per-example sparse
+                // backward through the FFM and LR blocks.
+                for (b, (ex, &db)) in exs.iter().zip(d).enumerate() {
+                    let (merged, dmerged) = (&ws.merged, &mut ws.dmerged);
+                    let mrow = &merged[b * dim..(b + 1) * dim];
+                    let grow = &mut dmerged[b * dim..(b + 1) * dim];
+                    let s = dot::dot(grow, mrow);
+                    let inv = 1.0 / ws.batch_rms[b];
+                    let sd = s / dim as f32;
+                    for (g, &m) in grow.iter_mut().zip(mrow) {
+                        *g = (*g - m * sd) * inv;
+                    }
+                    let d_lr = db + grow[0];
+                    block_ffm::backward(
+                        weights,
+                        acc,
+                        layout,
+                        self.cfg.fields,
+                        self.cfg.latent_dim,
+                        ex,
+                        &grow[1..],
+                        ffm_rule,
+                    );
+                    block_lr::backward(weights, acc, layout, ex, d_lr, lr_rule);
+                }
+            }
+        }
+    }
+
     // ----------------------------------------------- context caching (§5)
 
     /// Precompute the reusable part of a request context: fields

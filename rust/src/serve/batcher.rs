@@ -241,8 +241,33 @@ mod tests {
 
     #[test]
     fn single_oversized_request_flushes_immediately() {
+        // One request whose candidate count alone exceeds max_batch
+        // must flush on its own push as Full — never linger for the
+        // deadline — with every queue counter reset so nothing drifts
+        // across the flush boundary.
+        let t0 = Instant::now();
         let mut b = DynamicBatcher::new(4, Duration::from_secs(1));
-        let batch = b.push(req(9), 0u32).expect("flush");
+        let batch = b.push_at(req(9), 0u32, t0).expect("flush");
+        assert_eq!(batch.reason, FlushReason::Full);
         assert_eq!(batch.candidates, 9);
+        assert_eq!(batch.items.len(), 1);
+        assert_eq!(b.queued_requests(), 0);
+        assert_eq!(b.queued_candidates(), 0);
+        // oldest is cleared: no stale deadline survives the flush
+        assert!(b.time_until_deadline_at(t0 + Duration::from_secs(10)).is_none());
+        assert!(b.poll_deadline_at(t0 + Duration::from_secs(10)).is_none());
+        // the next undersized push starts a fresh batch from zero, with
+        // a fresh linger clock
+        let t1 = t0 + Duration::from_secs(20);
+        assert!(b.push_at(req(2), 1, t1).is_none());
+        assert_eq!(b.queued_candidates(), 2);
+        assert_eq!(
+            b.time_until_deadline_at(t1),
+            Some(Duration::from_secs(1))
+        );
+        let drained = b.drain().expect("drain");
+        assert_eq!(drained.candidates, 2);
+        assert_eq!(drained.items[0].1, 1);
+        assert_eq!(b.queued_candidates(), 0);
     }
 }

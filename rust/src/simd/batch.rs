@@ -1,25 +1,37 @@
-//! Multi-vector kernels for request-level batched candidate scoring.
+//! Multi-vector kernels for request-level batched candidate scoring
+//! and minibatch training.
 //!
 //! The serving hot path (§5) scores B candidates that all share one
-//! request context.  The single-vector kernels in [`super::dot`] stream
-//! the neural block's weight matrix from memory once *per candidate*;
-//! the kernels here restructure the inner loops candidate-major so each
-//! weight row is loaded once per 4-candidate register block:
+//! request context; the Hogwild training loop (§4.2) pushes B-example
+//! micro-batches through the same dense tower.  The single-vector
+//! kernels in [`super::dot`] stream the neural block's weight matrix
+//! from memory once *per candidate*; the kernels here restructure the
+//! inner loops candidate-major so each weight row is loaded once per
+//! 4-candidate register block:
 //!
 //! * [`matmul_rowmajor`] — a register-blocked `B×in · in×out` GEMM-lite
-//!   for the neural block (4 batch rows × 16 output columns per tile,
-//!   AVX2+FMA with a scalar fallback).
+//!   for the neural block forward (4 batch rows × 16 output columns per
+//!   tile, AVX2+FMA with a scalar fallback).
+//! * [`matmul_transposed`] — the backward's upstream-gradient GEMM
+//!   `dX = dY·Wᵀ` over the same row-major weight matrix (no transpose
+//!   materialized: a dX element is a contiguous-row dot product).
+//! * [`matmul_xt_dy`] — the backward's accumulating weight-gradient
+//!   GEMM `dW += Xᵀ·dY`, reducing a whole micro-batch into one gradient
+//!   matrix so the optimizer applies one update per coordinate per
+//!   micro-batch instead of one per example.
 //! * [`rowwise_sum`] / [`rowwise_sumsq`] — batched horizontal sums over
 //!   the rows of a `B × n` matrix, used for the batched FFM logit and
 //!   the batched MergeNorm RMS.
 //!
-//! Numerical contract (the serving layer relies on it): at a fixed ISA
-//! level every output element is produced by the same operation
-//! sequence regardless of the batch size, so scoring a candidate alone
-//! (B = 1) is **bit-identical** to scoring it inside a larger batch.
-//! That is why the kernels never take the "skip zero inputs" shortcut
-//! of the single-vector matvec, and why the remainder paths mirror the
-//! blocked paths' per-element accumulation order exactly.
+//! Numerical contract (the serving and training layers rely on it): at
+//! a fixed ISA level every output element is produced by the same
+//! operation sequence regardless of the batch size, so scoring a
+//! candidate alone (B = 1) is **bit-identical** to scoring it inside a
+//! larger batch, and — for the accumulating [`matmul_xt_dy`] — reducing
+//! a batch in consecutive segments is bit-identical to reducing it in
+//! one call.  That is why the kernels never take the "skip zero inputs"
+//! shortcut of the single-vector matvec, and why the remainder paths
+//! mirror the blocked paths' per-element accumulation order exactly.
 
 use super::{isa_level, IsaLevel};
 
@@ -82,6 +94,124 @@ pub fn matmul_scalar(
             for (o, &wv) in or.iter_mut().zip(&w[i * cols..(i + 1) * cols]) {
                 *o += xi * wv;
             }
+        }
+    }
+}
+
+/// Batched upstream-gradient backprop: `out[b*rows + i] = Σ_j
+/// dy[b*cols + j] * w[i*cols + j]` — i.e. `dX = dY·Wᵀ` against the
+/// same row-major `[rows × cols]` weight matrix the forward used.
+///
+/// No transpose is materialized: because `w` is row-major, element
+/// `(b, i)` is the dot product of two contiguous length-`cols` strips
+/// (`dy` row `b` and `w` row `i`).  The AVX2 kernel loads each weight
+/// row once per 4-batch-row register block.  Per-element operation
+/// order is independent of the batch size (module contract), so a
+/// gradient row backpropagated alone is bit-identical to the same row
+/// inside a larger micro-batch.
+pub fn matmul_transposed(
+    dy: &[f32],
+    batch: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(rows > 0 && cols > 0);
+    debug_assert_eq!(dy.len(), batch * cols);
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(out.len(), batch * rows);
+    match isa_level() {
+        IsaLevel::Scalar => matmul_transposed_scalar(dy, batch, w, rows, cols, out),
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2Fma => {
+            if cols >= 8 {
+                unsafe { matmul_transposed_avx2(dy, batch, w, rows, cols, out) }
+            } else {
+                matmul_transposed_scalar(dy, batch, w, rows, cols, out)
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => matmul_transposed_scalar(dy, batch, w, rows, cols, out),
+    }
+}
+
+/// Portable `dX = dY·Wᵀ` (also the non-x86 fallback).
+pub fn matmul_transposed_scalar(
+    dy: &[f32],
+    batch: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    for (dyr, or) in dy
+        .chunks_exact(cols)
+        .zip(out.chunks_exact_mut(rows))
+        .take(batch)
+    {
+        for (i, o) in or.iter_mut().enumerate() {
+            let mut s = 0.0f32;
+            for (&g, &wv) in dyr.iter().zip(&w[i * cols..(i + 1) * cols]) {
+                s += g * wv;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Accumulating weight-gradient GEMM: `dw[i*cols + j] += Σ_b
+/// x[b*rows + i] * dy[b*cols + j]` — i.e. `dW += Xᵀ·dY`, the minibatch
+/// reduction of the dense tower's per-example outer products.
+///
+/// `dw` is read-modify-written so callers can fold several consecutive
+/// micro-segments into one gradient matrix; per element the batch rows
+/// are consumed in order with one FMA each, so a segmented reduction is
+/// bit-identical to a single call over the concatenated batch (at a
+/// fixed ISA level — module contract).
+pub fn matmul_xt_dy(
+    x: &[f32],
+    batch: usize,
+    dy: &[f32],
+    rows: usize,
+    cols: usize,
+    dw: &mut [f32],
+) {
+    debug_assert!(rows > 0 && cols > 0);
+    debug_assert_eq!(x.len(), batch * rows);
+    debug_assert_eq!(dy.len(), batch * cols);
+    debug_assert_eq!(dw.len(), rows * cols);
+    match isa_level() {
+        IsaLevel::Scalar => matmul_xt_dy_scalar(x, batch, dy, rows, cols, dw),
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx2Fma => {
+            if cols >= 8 {
+                unsafe { matmul_xt_dy_avx2(x, batch, dy, rows, cols, dw) }
+            } else {
+                matmul_xt_dy_scalar(x, batch, dy, rows, cols, dw)
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => matmul_xt_dy_scalar(x, batch, dy, rows, cols, dw),
+    }
+}
+
+/// Portable `dW += Xᵀ·dY` (also the non-x86 fallback).
+pub fn matmul_xt_dy_scalar(
+    x: &[f32],
+    batch: usize,
+    dy: &[f32],
+    rows: usize,
+    cols: usize,
+    dw: &mut [f32],
+) {
+    for (i, dwr) in dw.chunks_exact_mut(cols).enumerate() {
+        for (j, o) in dwr.iter_mut().enumerate() {
+            let mut s = *o;
+            for b in 0..batch {
+                s += x[b * rows + i] * dy[b * cols + j];
+            }
+            *o = s;
         }
     }
 }
@@ -253,6 +383,131 @@ unsafe fn mm_rows<const R: usize>(
             out[(b + r) * cols + j] = s;
         }
         j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matmul_transposed_avx2(
+    dy: &[f32],
+    batch: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    let mut b = 0usize;
+    while b + 4 <= batch {
+        mm_t_rows::<4>(dy, b, w, rows, cols, out);
+        b += 4;
+    }
+    while b < batch {
+        mm_t_rows::<1>(dy, b, w, rows, cols, out);
+        b += 1;
+    }
+}
+
+/// `R` gradient rows against all weight rows.  Per-element sequence
+/// (vector FMAs over the 8-wide column tiles in order, one horizontal
+/// reduction, then the scalar column remainder) is independent of `R` —
+/// the bit-identity contract of the module.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+#[allow(clippy::needless_range_loop)]
+unsafe fn mm_t_rows<const R: usize>(
+    dy: &[f32],
+    b: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let wp = w.as_ptr();
+    let mut gp = [std::ptr::null::<f32>(); R];
+    for (r, p) in gp.iter_mut().enumerate() {
+        *p = dy.as_ptr().add((b + r) * cols);
+    }
+    for i in 0..rows {
+        let wrow = wp.add(i * cols);
+        let mut acc = [_mm256_setzero_ps(); R];
+        let mut j = 0usize;
+        // one weight-row load serves R gradient rows (R FMAs)
+        while j + 8 <= cols {
+            let wv = _mm256_loadu_ps(wrow.add(j));
+            for r in 0..R {
+                let gv = _mm256_loadu_ps(gp[r].add(j));
+                acc[r] = _mm256_fmadd_ps(gv, wv, acc[r]);
+            }
+            j += 8;
+        }
+        let mut s = [0f32; R];
+        for r in 0..R {
+            s[r] = hsum8(acc[r]);
+        }
+        while j < cols {
+            let wj = *wrow.add(j);
+            for r in 0..R {
+                s[r] += *gp[r].add(j) * wj;
+            }
+            j += 1;
+        }
+        for r in 0..R {
+            out[(b + r) * rows + i] = s[r];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::needless_range_loop)]
+unsafe fn matmul_xt_dy_avx2(
+    x: &[f32],
+    batch: usize,
+    dy: &[f32],
+    rows: usize,
+    cols: usize,
+    dw: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let xp = x.as_ptr();
+    let dyp = dy.as_ptr();
+    // 4 weight rows per block: one dy-row load feeds 4 FMAs.  The batch
+    // loop is innermost per element so segmented reductions replay the
+    // exact accumulation sequence (module contract).
+    let mut i = 0usize;
+    while i < rows {
+        let ri = (rows - i).min(4);
+        let mut j = 0usize;
+        while j + 8 <= cols {
+            let mut acc = [_mm256_setzero_ps(); 4];
+            for r in 0..ri {
+                acc[r] = _mm256_loadu_ps(dw.as_ptr().add((i + r) * cols + j));
+            }
+            for b in 0..batch {
+                let gv = _mm256_loadu_ps(dyp.add(b * cols + j));
+                for r in 0..ri {
+                    let vx = _mm256_set1_ps(*xp.add(b * rows + i + r));
+                    acc[r] = _mm256_fmadd_ps(vx, gv, acc[r]);
+                }
+            }
+            for r in 0..ri {
+                _mm256_storeu_ps(dw.as_mut_ptr().add((i + r) * cols + j), acc[r]);
+            }
+            j += 8;
+        }
+        while j < cols {
+            for r in 0..ri {
+                let mut s = dw[(i + r) * cols + j];
+                for b in 0..batch {
+                    s += *xp.add(b * rows + i + r) * *dyp.add(b * cols + j);
+                }
+                dw[(i + r) * cols + j] = s;
+            }
+            j += 1;
+        }
+        i += ri;
     }
 }
 
@@ -430,6 +685,176 @@ mod tests {
             mm(&x, batch, &w, rows, cols, None, &mut fast);
             for (a, b) in fast.iter().zip(&slow) {
                 assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_transposed_matches_naive() {
+        let mut rng = Pcg32::seeded(21);
+        for (batch, rows, cols) in [
+            (1, 5, 16),
+            (3, 7, 8),
+            (4, 13, 16),
+            (5, 9, 32),
+            (2, 7, 7),
+            (6, 11, 20),
+            (7, 1, 9),
+            (9, 46, 16),
+        ] {
+            let dy = randvec(&mut rng, batch * cols);
+            let w = randvec(&mut rng, rows * cols);
+            let mut out = vec![0f32; batch * rows];
+            matmul_transposed(&dy, batch, &w, rows, cols, &mut out);
+            for b in 0..batch {
+                for i in 0..rows {
+                    let mut want = 0.0f32;
+                    for j in 0..cols {
+                        want += dy[b * cols + j] * w[i * cols + j];
+                    }
+                    let got = out[b * rows + i];
+                    assert!(
+                        (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                        "b={batch} r={rows} c={cols} elem=({b},{i}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Concrete transposed kernels, bypassing global dispatch.
+    fn matmul_t_impls() -> Vec<(
+        &'static str,
+        fn(&[f32], usize, &[f32], usize, usize, &mut [f32]),
+    )> {
+        let mut impls: Vec<(
+            &'static str,
+            fn(&[f32], usize, &[f32], usize, usize, &mut [f32]),
+        )> = vec![("scalar", matmul_transposed_scalar)];
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            fn avx2(
+                dy: &[f32],
+                batch: usize,
+                w: &[f32],
+                rows: usize,
+                cols: usize,
+                out: &mut [f32],
+            ) {
+                unsafe { matmul_transposed_avx2(dy, batch, w, rows, cols, out) }
+            }
+            impls.push(("avx2", avx2));
+        }
+        impls
+    }
+
+    #[test]
+    fn matmul_transposed_batch_invariant_bitwise() {
+        // A gradient row backpropagated alone must be bit-identical to
+        // the same row inside any larger micro-batch, per kernel.
+        let mut rng = Pcg32::seeded(22);
+        for (batch, rows, cols) in [(6, 17, 16), (9, 8, 24), (5, 30, 44), (8, 46, 13)] {
+            let dy = randvec(&mut rng, batch * cols);
+            let w = randvec(&mut rng, rows * cols);
+            for (name, mm) in matmul_t_impls() {
+                let mut full = vec![0f32; batch * rows];
+                mm(&dy, batch, &w, rows, cols, &mut full);
+                for b in 0..batch {
+                    let mut one = vec![0f32; rows];
+                    mm(&dy[b * cols..(b + 1) * cols], 1, &w, rows, cols, &mut one);
+                    assert_eq!(one, full[b * rows..(b + 1) * rows], "{name} row {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_xt_dy_accumulates_and_matches_naive() {
+        let mut rng = Pcg32::seeded(23);
+        for (batch, rows, cols) in [
+            (1, 5, 16),
+            (3, 7, 8),
+            (4, 13, 16),
+            (5, 9, 32),
+            (2, 7, 7),
+            (6, 11, 20),
+            (8, 3, 9),
+        ] {
+            let x = randvec(&mut rng, batch * rows);
+            let dy = randvec(&mut rng, batch * cols);
+            let base = randvec(&mut rng, rows * cols);
+            let mut dw = base.clone();
+            matmul_xt_dy(&x, batch, &dy, rows, cols, &mut dw);
+            for i in 0..rows {
+                for j in 0..cols {
+                    let mut want = base[i * cols + j];
+                    for b in 0..batch {
+                        want += x[b * rows + i] * dy[b * cols + j];
+                    }
+                    let got = dw[i * cols + j];
+                    assert!(
+                        (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                        "b={batch} r={rows} c={cols} elem=({i},{j}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Concrete accumulating kernels, bypassing global dispatch.
+    fn matmul_xt_impls() -> Vec<(
+        &'static str,
+        fn(&[f32], usize, &[f32], usize, usize, &mut [f32]),
+    )> {
+        let mut impls: Vec<(
+            &'static str,
+            fn(&[f32], usize, &[f32], usize, usize, &mut [f32]),
+        )> = vec![("scalar", matmul_xt_dy_scalar)];
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            fn avx2(
+                x: &[f32],
+                batch: usize,
+                dy: &[f32],
+                rows: usize,
+                cols: usize,
+                dw: &mut [f32],
+            ) {
+                unsafe { matmul_xt_dy_avx2(x, batch, dy, rows, cols, dw) }
+            }
+            impls.push(("avx2", avx2));
+        }
+        impls
+    }
+
+    #[test]
+    fn matmul_xt_dy_segment_invariant_bitwise() {
+        // Reducing a batch in consecutive segments (accumulating into
+        // the same dw) must be bit-identical to one full-batch call.
+        let mut rng = Pcg32::seeded(24);
+        for (batch, rows, cols) in [(6, 17, 16), (9, 8, 24), (7, 30, 44), (8, 46, 13)] {
+            let x = randvec(&mut rng, batch * rows);
+            let dy = randvec(&mut rng, batch * cols);
+            for (name, mm) in matmul_xt_impls() {
+                let mut full = vec![0f32; rows * cols];
+                mm(&x, batch, &dy, rows, cols, &mut full);
+                for split in [1, batch / 2, batch - 1] {
+                    let mut seg = vec![0f32; rows * cols];
+                    mm(&x[..split * rows], split, &dy[..split * cols], rows, cols, &mut seg);
+                    mm(
+                        &x[split * rows..],
+                        batch - split,
+                        &dy[split * cols..],
+                        rows,
+                        cols,
+                        &mut seg,
+                    );
+                    assert_eq!(seg, full, "{name} split {split}");
+                }
             }
         }
     }

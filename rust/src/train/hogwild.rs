@@ -73,11 +73,34 @@ pub struct HogwildStats {
 
 /// Train one chunk of examples across `cfg.threads` threads sharing the
 /// regressor without locks.  Returns round statistics.
+///
+/// Per-example inner loop: delegates to [`train_chunk_batched`] with a
+/// micro-batch of 1, which is bit-identical to the sequential trainer
+/// at one thread.
 pub fn train_chunk(
     reg: &mut Regressor,
     chunk: &[Example],
     cfg: HogwildConfig,
     auc_window: usize,
+) -> HogwildStats {
+    train_chunk_batched(reg, chunk, cfg, auc_window, 1)
+}
+
+/// [`train_chunk`] with minibatch training inside each worker: every
+/// 256-example work-stealing slice is carved into `minibatch`-example
+/// micro-batches pushed through [`Regressor::learn_batch`], so the
+/// dense neural tower runs on the batched GEMM-lite spine while the
+/// sparse LR/FFM blocks stay per-example (hashed collisions are the
+/// Hogwild contract — §4.2).  `minibatch <= 1` runs the plain
+/// per-example `learn()` loop (and `learn_batch` itself delegates
+/// 1-example tails to `learn()`), so the B = 1 path stays bit-identical
+/// to sequential training.
+pub fn train_chunk_batched(
+    reg: &mut Regressor,
+    chunk: &[Example],
+    cfg: HogwildConfig,
+    auc_window: usize,
+    minibatch: usize,
 ) -> HogwildStats {
     let threads = cfg.threads.max(1);
     let start = std::time::Instant::now();
@@ -89,12 +112,12 @@ pub fn train_chunk(
     let mut all_points: Vec<Vec<f64>> = Vec::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
-        for t in 0..threads {
+        for _ in 0..threads {
             let next = &next;
             let racy = &racy;
             handles.push(scope.spawn(move || {
-                let _ = t;
                 let mut ws = Workspace::new();
+                let mut scores = Vec::new();
                 let mut eval = RollingAuc::new(auc_window);
                 loop {
                     let lo = next.fetch_add(BATCH, Ordering::Relaxed);
@@ -102,11 +125,22 @@ pub fn train_chunk(
                         break;
                     }
                     let hi = (lo + BATCH).min(chunk.len());
-                    for ex in &chunk[lo..hi] {
-                        // SAFETY: Hogwild contract (module docs).
-                        let r = unsafe { racy.get() };
-                        let p = r.learn(ex, &mut ws);
-                        eval.add(p, ex.label);
+                    if minibatch <= 1 {
+                        for ex in &chunk[lo..hi] {
+                            // SAFETY: Hogwild contract (module docs).
+                            let r = unsafe { racy.get() };
+                            let p = r.learn(ex, &mut ws);
+                            eval.add(p, ex.label);
+                        }
+                    } else {
+                        for mb in chunk[lo..hi].chunks(minibatch) {
+                            // SAFETY: Hogwild contract (module docs).
+                            let r = unsafe { racy.get() };
+                            r.learn_batch(mb, &mut ws, &mut scores);
+                            for (&p, ex) in scores.iter().zip(mb) {
+                                eval.add(p, ex.label);
+                            }
+                        }
                     }
                 }
                 eval.finish();
@@ -190,5 +224,60 @@ mod tests {
         let stats = train_chunk(&mut reg, &[], HogwildConfig { threads: 3 }, 100);
         assert_eq!(stats.examples, 0);
         assert_eq!(reg.pool.weights, w0);
+    }
+
+    #[test]
+    fn more_threads_than_examples_exits_cleanly() {
+        // With 8 threads and 3 examples only one worker wins a
+        // fetch_add slice; the others must exit without learning and
+        // merge empty AUC windows.
+        let cfg = ModelConfig::ffm(4, 2, 256);
+        let data = chunk(3, 11);
+        let seq = {
+            let mut t = Trainer::with_window(Regressor::new(&cfg), 100);
+            t.learn_chunk(&data);
+            t.reg
+        };
+        let mut reg = Regressor::new(&cfg);
+        let stats = train_chunk(&mut reg, &data, HogwildConfig { threads: 8 }, 100);
+        assert_eq!(stats.examples, 3);
+        assert_eq!(stats.threads, 8);
+        // single winner -> identical to sequential training
+        assert_eq!(reg.pool.weights, seq.pool.weights);
+        // losers contributed no partial windows beyond the winner's
+        assert!(stats.auc_points.len() <= 1, "{:?}", stats.auc_points);
+    }
+
+    #[test]
+    fn minibatch_hogwild_learns_and_stays_finite() {
+        let cfg = ModelConfig::deep_ffm(4, 2, 256, &[8]);
+        let data = chunk(20_000, 12);
+        let mut reg = Regressor::new(&cfg);
+        let stats = train_chunk_batched(
+            &mut reg,
+            &data,
+            HogwildConfig { threads: 4 },
+            2000,
+            8,
+        );
+        assert_eq!(stats.examples, 20_000);
+        assert!(reg.pool.weights.iter().all(|w| w.is_finite()));
+        let test = chunk(3000, 13);
+        let mut t = Trainer::new(reg);
+        let auc = t.test_auc(&test);
+        assert!(auc > 0.55, "minibatch hogwild auc {auc}");
+    }
+
+    #[test]
+    fn minibatch_one_matches_per_example_bitwise() {
+        // The batched entry point with B = 1 must stay on the exact
+        // learn() arithmetic (single thread -> fully deterministic).
+        let cfg = ModelConfig::deep_ffm(4, 2, 256, &[8]);
+        let data = chunk(2000, 14);
+        let mut a = Regressor::new(&cfg);
+        train_chunk_batched(&mut a, &data, HogwildConfig { threads: 1 }, 500, 1);
+        let mut t = Trainer::with_window(Regressor::new(&cfg), 500);
+        t.learn_chunk(&data);
+        assert_eq!(a.pool.weights, t.reg.pool.weights);
     }
 }

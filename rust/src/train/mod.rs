@@ -48,6 +48,24 @@ impl Trainer {
         }
     }
 
+    /// Learn a chunk through `minibatch`-example micro-batches on the
+    /// batched GEMM-lite spine ([`Regressor::learn_batch`]).
+    /// `minibatch <= 1` is the per-example loop (bit-identical).
+    pub fn learn_chunk_batched(&mut self, chunk: &[Example], minibatch: usize) {
+        if minibatch <= 1 {
+            self.learn_chunk(chunk);
+            return;
+        }
+        let mut scores = Vec::new();
+        for mb in chunk.chunks(minibatch) {
+            self.reg.learn_batch(mb, &mut self.ws, &mut scores);
+            for (&p, ex) in scores.iter().zip(mb) {
+                self.eval.add(p, ex.label);
+            }
+            self.examples_seen += mb.len();
+        }
+    }
+
     /// Evaluate (without learning) on a held-out slice; returns AUC.
     pub fn test_auc(&mut self, test: &[Example]) -> f64 {
         let mut scores = Vec::with_capacity(test.len());
@@ -81,6 +99,24 @@ mod tests {
         let early = pts[0];
         let late = pts[pts.len() - 1];
         assert!(late > early, "late {late} <= early {early}");
+    }
+
+    #[test]
+    fn batched_trainer_improves_over_stream() {
+        let cfg = ModelConfig::deep_ffm(4, 2, 256, &[8]);
+        let mut t = Trainer::with_window(Regressor::new(&cfg), 2000);
+        let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 15, 256);
+        let chunk: Vec<_> = (0..16_000).map(|_| s.next_example()).collect();
+        t.learn_chunk_batched(&chunk, 8);
+        assert_eq!(t.examples_seen, 16_000);
+        let pts = &t.eval.points;
+        assert!(pts.len() >= 7);
+        assert!(
+            pts[pts.len() - 1] > pts[0],
+            "late {} <= early {}",
+            pts[pts.len() - 1],
+            pts[0]
+        );
     }
 
     #[test]

@@ -60,13 +60,32 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     (mean, var.sqrt())
 }
 
+/// NaN-last total order: finite values ascending, every NaN (either
+/// sign — x86's default quiet NaN from `0.0 / 0.0` has the sign bit
+/// set, so [`f64::total_cmp`] alone would sort it to the *front* and
+/// silently shift every quantile low) after them.  Shared NaN policy
+/// for the quantiles here and [`crate::eval::auc`]'s rank sort.
+pub fn nan_last(a: &f64, b: &f64) -> std::cmp::Ordering {
+    a.is_nan().cmp(&b.is_nan()).then_with(|| a.total_cmp(b))
+}
+
+/// [`nan_last`] for `f32` slices (see it for the sign-bit rationale).
+pub fn nan_last_f32(a: &f32, b: &f32) -> std::cmp::Ordering {
+    a.is_nan().cmp(&b.is_nan()).then_with(|| a.total_cmp(b))
+}
+
 /// Median of a slice (copies + sorts).
+///
+/// NaN-tolerant: a poisoned sample (e.g. a NaN latency point feeding
+/// bench JSON emission) sorts to the tail regardless of its sign bit
+/// and is *reported* by the affected quantiles instead of panicking
+/// the whole bench.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(nan_last);
     let m = v.len() / 2;
     if v.len() % 2 == 1 {
         v[m]
@@ -77,12 +96,13 @@ pub fn median(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated percentile of a slice; `q` in `[0, 1]`
 /// (copies + sorts).  `percentile(xs, 0.5)` agrees with [`median`].
+/// NaN-tolerant via the NaN-last order (see [`median`]).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(nan_last);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -154,6 +174,25 @@ mod tests {
         let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
         assert!((m - 5.0).abs() < 1e-9);
         assert!((s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_percentile_survive_nan() {
+        // Regression: partial_cmp(..).unwrap() panicked on the first
+        // NaN sample.  Every NaN — either sign bit, so including x86's
+        // default 0.0/0.0 quiet NaN — must sort to the tail: unaffected
+        // quantiles stay meaningful and the poisoned tail is reported
+        // as NaN instead of aborting a bench run.
+        // -f64::NAN is bit-identical to x86's default 0.0/0.0 result
+        for nan in [f64::NAN, -f64::NAN] {
+            let xs = [2.0, nan, 1.0];
+            assert_eq!(median(&xs), 2.0);
+            assert_eq!(percentile(&xs, 0.0), 1.0);
+            assert_eq!(percentile(&xs, 0.5), 2.0);
+            assert!(percentile(&xs, 1.0).is_nan());
+        }
+        let all_nan = [f64::NAN, -f64::NAN];
+        assert!(median(&all_nan).is_nan());
     }
 
     #[test]

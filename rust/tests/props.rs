@@ -416,6 +416,107 @@ fn prop_batched_scoring_matches_sequential() {
     });
 }
 
+/// Tentpole invariant of the batched training PR: `learn_batch` is the
+/// same learner.  B = 1 must be **bit-identical** to `learn()` (scores,
+/// weights and AdaGrad accumulators), and a B-example micro-batch must
+/// record the same weight updates (via `GradRecorder`) as B per-example
+/// backward passes at the same frozen weights — within fp reassociation
+/// — on all three architectures, for B ∈ {2, 4, 8}.
+#[test]
+fn prop_learn_batch_matches_per_example() {
+    use fwumious::model::optimizer::GradRecorder;
+    prop(6, |g| {
+        let buckets = 1u32 << 8;
+        let k = [2usize, 4, 8][g.usize_in(0..3)];
+        for arch in 0..3usize {
+            let mut cfg = match arch {
+                0 => ModelConfig::linear(4, buckets),
+                1 => ModelConfig::ffm(4, k, buckets),
+                _ => ModelConfig::deep_ffm(4, k, buckets, &[g.usize_in(4..12)]),
+            };
+            cfg.seed = g.u64();
+            let mut s =
+                SyntheticStream::with_buckets(DatasetSpec::tiny(), g.u64(), buckets);
+
+            // B = 1: the full learning sequence is bit-identical.
+            let warm = s.take_examples(48);
+            let mut a = Regressor::new(&cfg);
+            let mut b = Regressor::new(&cfg);
+            let mut ws_a = Workspace::new();
+            let mut ws_b = Workspace::new();
+            let mut scores = Vec::new();
+            for ex in &warm {
+                let pa = a.learn(ex, &mut ws_a);
+                b.learn_batch(std::slice::from_ref(ex), &mut ws_b, &mut scores);
+                assert_eq!(pa.to_bits(), scores[0].to_bits(), "arch {arch}");
+            }
+            assert_eq!(a.pool.weights, b.pool.weights, "arch {arch} weights");
+            assert_eq!(a.pool.acc, b.pool.acc, "arch {arch} acc");
+
+            // B in {2, 4, 8}: recorded batched gradients == summed
+            // per-example gradients at the (warm) frozen weights.
+            for bs in [2usize, 4, 8] {
+                let exs = s.take_examples(bs);
+                let total = a.layout.total;
+                let mut want = vec![0f32; total];
+                let mut p_want = Vec::new();
+                {
+                    let mut reg = a.clone();
+                    let mut ws = Workspace::new();
+                    for ex in &exs {
+                        let p = reg.predict(ex, &mut ws);
+                        p_want.push(p);
+                        let d = (p - ex.label) * ex.importance;
+                        let mut r_lr = GradRecorder::default();
+                        let mut r_ffm = GradRecorder::default();
+                        let mut r_nn = GradRecorder::default();
+                        reg.backward(ex, &mut ws, d, &mut r_lr, &mut r_ffm, &mut r_nn);
+                        for rec in [r_lr, r_ffm, r_nn] {
+                            for (w, gv) in want.iter_mut().zip(rec.dense(total)) {
+                                *w += gv;
+                            }
+                        }
+                    }
+                }
+                let mut reg = a.clone();
+                let mut ws = Workspace::new();
+                let mut p_got = Vec::new();
+                reg.predict_batch(&exs, &mut ws, &mut p_got);
+                assert_eq!(p_got.len(), bs);
+                for (i, (pg, pw)) in p_got.iter().zip(&p_want).enumerate() {
+                    assert!(
+                        (pg - pw).abs() < 1e-5,
+                        "arch {arch} B={bs} score {i}: {pg} vs {pw}"
+                    );
+                }
+                let d: Vec<f32> = exs
+                    .iter()
+                    .zip(&p_got)
+                    .map(|(ex, &p)| (p - ex.label) * ex.importance)
+                    .collect();
+                let mut r_lr = GradRecorder::default();
+                let mut r_ffm = GradRecorder::default();
+                let mut r_nn = GradRecorder::default();
+                reg.backward_batch(&exs, &mut ws, &d, &mut r_lr, &mut r_ffm, &mut r_nn);
+                let mut got = vec![0f32; total];
+                for rec in [r_lr, r_ffm, r_nn] {
+                    for (w, gv) in got.iter_mut().zip(rec.dense(total)) {
+                        *w += gv;
+                    }
+                }
+                for i in 0..total {
+                    assert!(
+                        (got[i] - want[i]).abs() < 1e-5 * (1.0 + want[i].abs()),
+                        "arch {arch} B={bs} grad {i}: {} vs {}",
+                        got[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    });
+}
+
 /// Batch-strided workspace buffers make resize bugs easy to hit: a
 /// single `Workspace` interleaved across models of different geometry
 /// (fields / latent dim / hidden widths) and different batch sizes must
