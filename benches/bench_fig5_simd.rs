@@ -14,17 +14,17 @@ use fwumious::simd;
 use fwumious::util::timer::median_time;
 
 fn bench_forward(reg: &Regressor, data: &[Example], scalar: bool) -> f64 {
-    simd::force_scalar(scalar);
+    // RAII forcing: restored (to unforced) when the arm ends, even on
+    // a panicking measurement closure
+    let _guard = scalar.then(simd::ForcedIsaGuard::scalar);
     let mut ws = Workspace::new();
-    let t = median_time(1, 5, || {
+    median_time(1, 5, || {
         let mut acc = 0.0f32;
         for ex in data {
             acc += reg.predict(ex, &mut ws);
         }
         acc
-    });
-    simd::force_scalar(false);
-    t
+    })
 }
 
 fn main() {

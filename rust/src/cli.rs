@@ -89,6 +89,7 @@ SUBCOMMANDS:
     serve      score a synthetic request trace through the serving engine
                --model model.fw  --requests N  --workers N
                --no-context-cache  --no-simd
+               --max-group-candidates N (cross-request union-slate cap)
     deploy     run the online deployment plane: continuous Hogwild
                training rounds published through the transfer pipeline
                and hot-swapped into a live serving engine

@@ -157,6 +157,12 @@ pub struct ServeConfig {
     pub max_wait_us: u64,
     /// Context-cache capacity (entries); 0 disables caching.
     pub context_cache_entries: usize,
+    /// Cross-request coalescing: max candidates per kernel pass when a
+    /// context group's union slate is scored.  Caps the batch-strided
+    /// workspace growth a hot context could otherwise force; oversized
+    /// groups are scored in chunks (bit-identical by the kernels'
+    /// batch-size-invariance contract).  0 is treated as 1.
+    pub max_group_candidates: usize,
 }
 
 impl Default for ServeConfig {
@@ -166,6 +172,7 @@ impl Default for ServeConfig {
             max_batch: 256,
             max_wait_us: 200,
             context_cache_entries: 65_536,
+            max_group_candidates: 1024,
         }
     }
 }

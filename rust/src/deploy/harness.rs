@@ -217,6 +217,7 @@ pub fn run_soak(cfg: SoakConfig) -> SoakReport {
         max_batch: 32,
         max_wait_us: 100,
         context_cache_entries: 4_096,
+        max_group_candidates: 1024,
     };
     let mut dl = DeploymentLoop::new(dcfg);
 

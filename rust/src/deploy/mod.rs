@@ -386,6 +386,7 @@ mod tests {
             max_batch: 32,
             max_wait_us: 100,
             context_cache_entries: 1024,
+            max_group_candidates: 1024,
         };
         cfg
     }

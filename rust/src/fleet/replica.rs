@@ -257,6 +257,7 @@ mod tests {
             max_batch: 8,
             max_wait_us: 50,
             context_cache_entries: 64,
+            max_group_candidates: 1024,
         };
         let mut rep =
             FleetReplica::new(rid(), UpdateMode::Raw, &template, Some(&serve), "m");

@@ -14,10 +14,12 @@ use crate::util::rng::Pcg32;
 
 /// Physical properties of one simulated link.
 ///
-/// Same physics as [`crate::transfer::SimulatedChannel`] (rtt +
-/// len/bandwidth) plus a loss probability; unifying the two behind one
-/// link model is a tracked follow-on (see ROADMAP "real socket
-/// transport") — change both if the wire-time formula evolves.
+/// THE wire-time model of the repo: [`transfer_seconds`]
+/// (Self::transfer_seconds) (rtt + len/bandwidth) is the single
+/// implementation both this module's [`SimLink`] and the transfer
+/// plane's [`crate::transfer::SimulatedChannel`] bill through (the
+/// channel holds a `LinkSpec` and delegates).  `loss` applies only to
+/// the lossy fleet links; the transfer channel is the reliable pipe.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkSpec {
     /// Bytes per second.

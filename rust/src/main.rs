@@ -189,6 +189,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             max_batch: args.usize_flag("max-batch", 256)?,
             max_wait_us: args.usize_flag("max-wait-us", 200)? as u64,
             context_cache_entries: cache_entries,
+            max_group_candidates: args.usize_flag("max-group-candidates", 1024)?,
         },
     );
     let mut gen = TraceGenerator::new(11, fields, ctx_fields, buckets, fanout);
@@ -213,9 +214,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         scored as f64 / secs
     );
     println!(
-        "cache hit rate {:.1}%  batches {}  errors {}",
+        "cache hit rate {:.1}%  batches {}  groups {}  coalesced reqs {}  errors {}",
         stats.cache_hit_rate() * 100.0,
         stats.batches,
+        stats.groups,
+        stats.coalesced_requests,
         stats.errors
     );
     if let Some(l) = &stats.latency {

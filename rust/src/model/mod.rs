@@ -73,6 +73,12 @@ pub struct Workspace {
     pub batch_heads: Vec<f32>,
     /// Score buffer backing the single-candidate delegation.
     pub batch_scores: Vec<f32>,
+    /// Per-chunk score scratch for the capped union-slate path
+    /// ([`regressor::Regressor::predict_batch_with_partial_capped`]):
+    /// the chunk loop scores into this buffer and appends to the
+    /// caller's output, so a hot context's union slate never grows the
+    /// batch-strided buffers beyond the configured cap.
+    pub group_scores: Vec<f32>,
     /// Per-row MergeNorm RMS on the batched training path (the serving
     /// path only keeps the last row's RMS in `rms`).
     pub batch_rms: Vec<f32>,

@@ -722,6 +722,41 @@ impl Regressor {
         }
     }
 
+    /// [`predict_batch_with_partial`](Self::predict_batch_with_partial)
+    /// with a workspace cap: the slate is scored in consecutive chunks
+    /// of at most `cap` candidates, so a union slate coalesced from
+    /// many requests (the cross-request serving path) cannot grow the
+    /// batch-strided workspace buffers without bound.  By the kernels'
+    /// batch-size-invariance contract, chunked scoring is bit-identical
+    /// to one uncapped pass — pinned by
+    /// `capped_scoring_is_chunking_invariant` and the
+    /// `prop_grouped_scoring_matches_per_request` property test.
+    ///
+    /// `scores` is cleared and receives one probability per candidate,
+    /// in order.  `cap == 0` is treated as 1.
+    pub fn predict_batch_with_partial_capped<S: AsRef<[FeatureSlot]>>(
+        &self,
+        cp: &ContextPartial,
+        cands: &[S],
+        cap: usize,
+        ws: &mut Workspace,
+        scores: &mut Vec<f32>,
+    ) {
+        let cap = cap.max(1);
+        if cands.len() <= cap {
+            self.predict_batch_with_partial(cp, cands, ws, scores);
+            return;
+        }
+        scores.clear();
+        scores.reserve(cands.len());
+        let mut chunk = std::mem::take(&mut ws.group_scores);
+        for cs in cands.chunks(cap) {
+            self.predict_batch_with_partial(cp, cs, ws, &mut chunk);
+            scores.extend_from_slice(&chunk);
+        }
+        ws.group_scores = chunk;
+    }
+
     /// Total parameter count (inference weights).
     pub fn num_weights(&self) -> usize {
         self.layout.total
@@ -981,6 +1016,36 @@ mod tests {
                 let cp = reg.context_partial(&ex.slots);
                 let via = reg.predict_with_partial(&cp, &[], &mut ws);
                 assert!((full - via).abs() < 1e-5, "{arch:?}: {full} vs {via}");
+            }
+        }
+    }
+
+    #[test]
+    fn capped_scoring_is_chunking_invariant() {
+        // The workspace cap must be invisible in the scores: any chunk
+        // size — including caps that split the slate unevenly and the
+        // degenerate cap 0 — produces bitwise the same output as one
+        // uncapped pass, on all three architectures.
+        for arch in [Architecture::Linear, Architecture::Ffm, Architecture::DeepFfm] {
+            let mut reg = Regressor::new(&tiny_cfg(arch));
+            let mut ws = Workspace::new();
+            let mut s = stream();
+            for _ in 0..500 {
+                let ex = s.next_example();
+                reg.learn(&ex, &mut ws);
+            }
+            let c = 2;
+            let ctx: Vec<FeatureSlot> = s.next_example().slots[..c].to_vec();
+            let cands: Vec<Vec<FeatureSlot>> = (0..11)
+                .map(|_| s.next_example().slots[c..].to_vec())
+                .collect();
+            let cp = reg.context_partial(&ctx);
+            let mut full = Vec::new();
+            reg.predict_batch_with_partial(&cp, &cands, &mut ws, &mut full);
+            for cap in [0usize, 1, 2, 3, 5, 11, 64] {
+                let mut got = Vec::new();
+                reg.predict_batch_with_partial_capped(&cp, &cands, cap, &mut ws, &mut got);
+                assert_eq!(got, full, "{arch:?} cap={cap}");
             }
         }
     }

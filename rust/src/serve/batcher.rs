@@ -6,11 +6,18 @@
 //! batching amortizes per-request overhead — the standard serving
 //! trade-off (vLLM-router-style).
 
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
+use crate::serve::context_cache::context_key;
 use crate::serve::Request;
 
 /// A flushed batch of requests.
+///
+/// `items` is **grouping-stable**: requests keep their arrival order
+/// across the flush, so [`context_groups`] over a batch's contents
+/// yields the same group memberships (and the same member order inside
+/// each group) every time it is computed.
 #[derive(Debug)]
 pub struct Batch<T> {
     pub items: Vec<(Request, T)>,
@@ -18,6 +25,63 @@ pub struct Batch<T> {
     pub candidates: usize,
     /// Why the batch flushed (observability / tests).
     pub reason: FlushReason,
+}
+
+/// One same-context group within a flushed batch: the requests that
+/// share a (model, context) pair and can therefore be scored against
+/// one cached [`crate::model::regressor::ContextPartial`] in one
+/// union-slate kernel pass.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ContextGroup {
+    /// Indices into the flushed batch's `items`, in arrival order.
+    pub members: Vec<usize>,
+    /// Total candidates across the members.
+    pub candidates: usize,
+}
+
+/// Group requests by (model, context) in first-seen order.
+///
+/// Keys are the exact [`context_key`] bytes the context cache uses
+/// (version pinned to 0 — the scorer resolves each group's model ONCE,
+/// so every member is scored against the same weight version and the
+/// version cannot split a group).  Exact byte keys mean no hash-
+/// collision risk: two requests land in one group iff their model name
+/// and every (bucket, value-bits) pair agree.
+pub fn context_groups<'a, I>(reqs: I) -> Vec<ContextGroup>
+where
+    I: IntoIterator<Item = &'a Request>,
+{
+    let mut groups: Vec<ContextGroup> = Vec::new();
+    let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
+    let mut key = Vec::new();
+    for (i, req) in reqs.into_iter().enumerate() {
+        context_key(&mut key, &req.model, 0, &req.context);
+        match index.get(&key) {
+            Some(&g) => {
+                groups[g].members.push(i);
+                groups[g].candidates += req.candidates.len();
+            }
+            None => {
+                index.insert(key.clone(), groups.len());
+                groups.push(ContextGroup {
+                    members: vec![i],
+                    candidates: req.candidates.len(),
+                });
+            }
+        }
+    }
+    groups
+}
+
+impl<T> Batch<T> {
+    /// Same-context groups of this batch's requests, first-seen order —
+    /// the group metadata a scorer plans kernel passes from.  (The
+    /// engine's hot path unzips `items` and calls the free
+    /// [`context_groups`] on the request slice directly; this method is
+    /// the same computation for callers still holding the batch.)
+    pub fn context_groups(&self) -> Vec<ContextGroup> {
+        context_groups(self.items.iter().map(|(r, _)| r))
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -237,6 +301,67 @@ mod tests {
         let batch = b.drain().unwrap();
         assert_eq!(batch.reason, FlushReason::Drain);
         assert_eq!(batch.items[0].1, 7);
+    }
+
+    fn req_ctx(model: &str, ctx_bucket: u32, n_cands: usize) -> Request {
+        Request {
+            model: model.into(),
+            context: vec![FeatureSlot { field: 0, bucket: ctx_bucket, value: 1.0 }],
+            candidates: (0..n_cands)
+                .map(|i| vec![FeatureSlot { field: 1, bucket: i as u32, value: 1.0 }])
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn context_groups_first_seen_order_and_membership() {
+        // interleaved arrivals: A B A C B A — groups must come out in
+        // first-seen order with members in arrival order
+        let reqs = [
+            req_ctx("m", 1, 2), // 0: A
+            req_ctx("m", 2, 3), // 1: B
+            req_ctx("m", 1, 1), // 2: A
+            req_ctx("m", 3, 4), // 3: C
+            req_ctx("m", 2, 2), // 4: B
+            req_ctx("m", 1, 5), // 5: A
+        ];
+        let groups = context_groups(reqs.iter());
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].members, vec![0, 2, 5]);
+        assert_eq!(groups[0].candidates, 8);
+        assert_eq!(groups[1].members, vec![1, 4]);
+        assert_eq!(groups[1].candidates, 5);
+        assert_eq!(groups[2].members, vec![3]);
+        assert_eq!(groups[2].candidates, 4);
+    }
+
+    #[test]
+    fn context_groups_split_on_model_value_and_bucket() {
+        // same context bucket under two model names -> two groups; a
+        // value change (not just bucket) also splits
+        let mut v = req_ctx("m", 7, 1);
+        v.context[0].value = 0.5;
+        let reqs = [req_ctx("m", 7, 1), req_ctx("other", 7, 1), v];
+        let groups = context_groups(reqs.iter());
+        assert_eq!(groups.len(), 3);
+        assert!(groups.iter().all(|g| g.members.len() == 1));
+    }
+
+    #[test]
+    fn flushed_batch_exposes_stable_groups() {
+        let mut b = DynamicBatcher::new(100, Duration::from_secs(1));
+        b.push(req_ctx("m", 1, 2), 0u32);
+        b.push(req_ctx("m", 2, 2), 1);
+        b.push(req_ctx("m", 1, 2), 2);
+        let batch = b.drain().expect("drain");
+        let g1 = batch.context_groups();
+        assert_eq!(g1.len(), 2);
+        let g2 = batch.context_groups();
+        assert_eq!(g1, g2, "grouping must be deterministic");
+        assert_eq!(g1[0].members, vec![0, 2]);
+        // arrival order survived the flush (grouping-stable contents)
+        assert_eq!(batch.items[0].1, 0);
+        assert_eq!(batch.items[2].1, 2);
     }
 
     #[test]

@@ -147,6 +147,24 @@ impl<V> RadixTree<V> {
     }
 }
 
+/// Build the byte key identifying a (model, weight version, context)
+/// triple: model name + NUL + version, then (bucket, value-bits) per
+/// slot.  Shared by the cache itself and the cross-request group
+/// planner ([`crate::serve::batcher::context_groups`]), so "same cache
+/// key" and "same context group" can never drift apart.  Versioned
+/// keys make partials computed against swapped-out weights unreachable
+/// immediately (no cross-model or cross-version mixing).
+pub fn context_key(buf: &mut Vec<u8>, model: &str, version: u64, ctx: &[FeatureSlot]) {
+    buf.clear();
+    buf.extend_from_slice(model.as_bytes());
+    buf.push(0);
+    buf.extend_from_slice(&version.to_le_bytes());
+    for s in ctx {
+        buf.extend_from_slice(&s.bucket.to_le_bytes());
+        buf.extend_from_slice(&s.value.to_bits().to_le_bytes());
+    }
+}
+
 /// Serving-level context cache.
 pub struct ContextCache {
     tree: RadixTree<Arc<ContextPartial>>,
@@ -168,22 +186,6 @@ impl ContextCache {
             hits: 0,
             misses: 0,
             key_buf: Vec::new(),
-        }
-    }
-
-    /// Byte key of a context: model name + weight version, then
-    /// (bucket, value-bits) per slot.  Versioned keys make partials
-    /// computed against swapped-out weights unreachable immediately (no
-    /// cross-model or cross-version mixing); the epoch clear reclaims
-    /// their memory.
-    fn key(buf: &mut Vec<u8>, model: &str, version: u64, ctx: &[FeatureSlot]) {
-        buf.clear();
-        buf.extend_from_slice(model.as_bytes());
-        buf.push(0);
-        buf.extend_from_slice(&version.to_le_bytes());
-        for s in ctx {
-            buf.extend_from_slice(&s.bucket.to_le_bytes());
-            buf.extend_from_slice(&s.value.to_bits().to_le_bytes());
         }
     }
 
@@ -213,7 +215,7 @@ impl ContextCache {
         let _ = &self.model_version; // kept for observability
         self.model_version = model_version;
         let mut key = std::mem::take(&mut self.key_buf);
-        Self::key(&mut key, model, model_version, ctx);
+        context_key(&mut key, model, model_version, ctx);
         if let Some(v) = self.tree.get(&key) {
             self.hits += 1;
             let out = v.clone();

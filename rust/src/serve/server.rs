@@ -27,6 +27,13 @@ pub struct ServeStats {
     pub requests: u64,
     pub candidates: u64,
     pub batches: u64,
+    /// Context groups scored (each is one context-partial lookup and at
+    /// most ⌈candidates / max_group_candidates⌉ kernel passes).
+    pub groups: u64,
+    /// Requests that shared their context group with at least one
+    /// other request of the same flushed batch (cross-request
+    /// coalescing wins; `requests - groups` over-counts error cases).
+    pub coalesced_requests: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// Live context-cache entries summed across workers (as of each
@@ -178,6 +185,8 @@ impl ServingEngine {
             out.requests += s.stats.requests;
             out.candidates += s.stats.candidates;
             out.batches += s.stats.batches;
+            out.groups += s.stats.groups;
+            out.coalesced_requests += s.stats.coalesced_requests;
             out.cache_hits += s.stats.cache_hits;
             out.cache_misses += s.stats.cache_misses;
             out.cache_entries += s.stats.cache_entries;
@@ -240,7 +249,7 @@ fn worker_loop(
                 let tag = (job.enqueued, job.reply);
                 if let Some(batch) = batcher.push(job.req, tag) {
                     sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                    score_batch(batch, &router, &mut cache, &mut ws, &shared);
+                    score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
@@ -251,12 +260,12 @@ fn worker_loop(
                         let tag = (job.enqueued, job.reply);
                         if let Some(batch) = batcher.push(job.req, tag) {
                             sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                            score_batch(batch, &router, &mut cache, &mut ws, &shared);
+                            score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
                         }
                     }
                     if let Some(batch) = batcher.drain() {
                         sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                        score_batch(batch, &router, &mut cache, &mut ws, &shared);
+                        score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
                     }
                     return;
                 }
@@ -264,88 +273,211 @@ fn worker_loop(
             Err(RecvTimeoutError::Disconnected) => {
                 if let Some(batch) = batcher.drain() {
                     sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                    score_batch(batch, &router, &mut cache, &mut ws, &shared);
+                    score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
                 }
                 return;
             }
         }
         if let Some(batch) = batcher.poll_deadline() {
             sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-            score_batch(batch, &router, &mut cache, &mut ws, &shared);
+            score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
         }
     }
+}
+
+/// Outcome counters of one coalesced scoring pass (observability).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CoalescePlan {
+    /// Context groups planned over the slate.
+    pub groups: u64,
+    /// Requests that shared their group with at least one other.
+    pub coalesced_requests: u64,
+}
+
+/// Score a flushed slate of requests with cross-request coalescing —
+/// the flushed batch, not the request, is the unit of kernel work.
+///
+/// Requests are grouped by (model, context) via
+/// [`crate::serve::batcher::context_groups`]; each group resolves its
+/// model ONCE (one atomic (version, model) read — pairing version N
+/// with model N+1 across a concurrent swap would mix stale cached
+/// partials into fresh-model responses, see
+/// [`crate::serve::ModelHandle`] docs), takes ONE context-cache
+/// lookup/insert, and scores every member's candidates as one union
+/// slate through `predict_batch_with_partial_capped` (chunked at
+/// `max_group_candidates` so a hot context cannot blow the workspace).
+/// Scores scatter back to per-request responses preserving request
+/// order.
+///
+/// Error isolation is per request: a malformed request (bad candidate
+/// width) fails alone — its group-mates still score.  Whole-group
+/// failures (unknown model, context covering every field) are
+/// per-request errors too, just identical ones.
+///
+/// By the kernels' batch-size-invariance contract the union-slate
+/// scores are **bit-identical** to scoring each request through its
+/// own `predict_batch_with_partial` call
+/// (`prop_grouped_scoring_matches_per_request` pins this).
+///
+/// Results stream through `emit(request_index, result)` as soon as
+/// they exist — validation errors immediately, scores right after
+/// their group's kernel pass — so the engine replies to a request the
+/// moment its group completes instead of after the whole slate (early
+/// groups don't pay the later groups' scoring time in latency).
+/// `emit` fires exactly once per request; across groups it follows
+/// first-seen group order, within a group request order.
+pub fn score_requests_coalesced_with(
+    router: &Router,
+    cache: &mut ContextCache,
+    ws: &mut Workspace,
+    max_group_candidates: usize,
+    requests: &[Request],
+    mut emit: impl FnMut(usize, Result<Response, String>),
+) -> CoalescePlan {
+    let mut plan = CoalescePlan::default();
+    let mut scores: Vec<f32> = Vec::new();
+    for group in crate::serve::batcher::context_groups(requests.iter()) {
+        plan.groups += 1;
+        if group.members.len() > 1 {
+            plan.coalesced_requests += group.members.len() as u64;
+        }
+        let first = &requests[group.members[0]];
+        let handle = match router.resolve(&first.model) {
+            Some(h) => h,
+            None => {
+                for &i in &group.members {
+                    emit(i, Err(format!("unknown model '{}'", first.model)));
+                }
+                continue;
+            }
+        };
+        let (version, model) = handle.load_versioned();
+        if first.context.len() >= model.cfg.fields {
+            for &i in &group.members {
+                emit(i, Err("context covers all fields; no candidate slots".into()));
+            }
+            continue;
+        }
+        let need = model.cfg.fields - first.context.len();
+        // Per-request validation: one malformed request must not fail
+        // its group-mates (it errors out immediately, alone).
+        let mut valid = Vec::with_capacity(group.members.len());
+        for &i in &group.members {
+            match requests[i].candidates.iter().find(|c| c.len() != need) {
+                Some(cand) => emit(
+                    i,
+                    Err(format!(
+                        "candidate has {} slots, model needs {need}",
+                        cand.len(),
+                    )),
+                ),
+                None => valid.push(i),
+            }
+        }
+        if valid.is_empty() {
+            continue;
+        }
+        // ONE context-partial lookup/insert per group.
+        let cp =
+            cache.get_or_compute_named(&model, &first.model, version, &first.context);
+        // Union slate: every valid member's candidates, request order.
+        let mut slate: Vec<&[crate::feature::FeatureSlot]> =
+            Vec::with_capacity(group.candidates);
+        for &i in &valid {
+            for cand in &requests[i].candidates {
+                slate.push(cand.as_slice());
+            }
+        }
+        model.predict_batch_with_partial_capped(
+            &cp,
+            &slate,
+            max_group_candidates,
+            ws,
+            &mut scores,
+        );
+        // Scatter back, preserving request order within the group.
+        let mut off = 0usize;
+        for &i in &valid {
+            let n = requests[i].candidates.len();
+            emit(i, Ok(Response { scores: scores[off..off + n].to_vec() }));
+            off += n;
+        }
+    }
+    plan
+}
+
+/// [`score_requests_coalesced_with`] collecting results into a Vec
+/// indexed like `requests` (tests, benches, batch-oriented callers).
+pub fn score_requests_coalesced(
+    router: &Router,
+    cache: &mut ContextCache,
+    ws: &mut Workspace,
+    max_group_candidates: usize,
+    requests: &[Request],
+) -> (Vec<Result<Response, String>>, CoalescePlan) {
+    let mut results: Vec<Option<Result<Response, String>>> = Vec::new();
+    results.resize_with(requests.len(), || None);
+    let plan = score_requests_coalesced_with(
+        router,
+        cache,
+        ws,
+        max_group_candidates,
+        requests,
+        |i, r| results[i] = Some(r),
+    );
+    let results = results
+        .into_iter()
+        .map(|r| r.expect("every request planned into a group"))
+        .collect();
+    (results, plan)
 }
 
 fn score_batch(
     batch: crate::serve::batcher::Batch<(Instant, SyncSender<Result<Response, String>>)>,
     router: &Router,
+    cfg: &ServeConfig,
     cache: &mut ContextCache,
     ws: &mut Workspace,
     shared: &Arc<Mutex<WorkerShared>>,
 ) {
-    let mut requests = 0u64;
     let mut candidates = 0u64;
     let mut errors = 0u64;
     let mut hist = LatencyHistogram::new();
     let (hits0, misses0) = (cache.hits, cache.misses);
 
-    for (req, (enqueued, reply)) in batch.items {
-        requests += 1;
-        let result = match router.resolve(&req.model) {
-            None => Err(format!("unknown model '{}'", req.model)),
-            Some(handle) => {
-                // version and model MUST come from one atomic read:
-                // pairing version N with model N+1 across a concurrent
-                // swap would mix stale cached partials into fresh-model
-                // responses (see ModelHandle docs).
-                let (version, model) = handle.load_versioned();
-                if req.context.len() >= model.cfg.fields {
-                    Err("context covers all fields; no candidate slots".into())
-                } else {
-                    let need = model.cfg.fields - req.context.len();
-                    match req.candidates.iter().find(|c| c.len() != need) {
-                        Some(cand) => Err(format!(
-                            "candidate has {} slots, model needs {need}",
-                            cand.len(),
-                        )),
-                        None => {
-                            let cp = cache.get_or_compute_named(
-                                &model,
-                                &req.model,
-                                version,
-                                &req.context,
-                            );
-                            // Batched scoring: slot assembly, the
-                            // latent-row prefetch pass and every SIMD
-                            // dispatch happen once per request, and
-                            // the kernels score all candidates in one
-                            // field-outer pass.
-                            let mut scores =
-                                Vec::with_capacity(req.candidates.len());
-                            model.predict_batch_with_partial(
-                                &cp,
-                                &req.candidates,
-                                ws,
-                                &mut scores,
-                            );
-                            candidates += scores.len() as u64;
-                            Ok(Response { scores })
-                        }
-                    }
-                }
+    #[allow(clippy::type_complexity)]
+    let (reqs, tags): (
+        Vec<Request>,
+        Vec<(Instant, SyncSender<Result<Response, String>>)>,
+    ) = batch.items.into_iter().unzip();
+    // Streamed scatter: each request is answered the moment its group
+    // completes, so requests in early groups don't pay the later
+    // groups' scoring time in (real or recorded) latency.
+    let mut tags: Vec<_> = tags.into_iter().map(Some).collect();
+    let plan = score_requests_coalesced_with(
+        router,
+        cache,
+        ws,
+        cfg.max_group_candidates,
+        &reqs,
+        |i, result| {
+            match &result {
+                Ok(resp) => candidates += resp.scores.len() as u64,
+                Err(_) => errors += 1,
             }
-        };
-        if result.is_err() {
-            errors += 1;
-        }
-        hist.record(enqueued.elapsed());
-        let _ = reply.send(result); // receiver may have gone away
-    }
+            let (enqueued, reply) =
+                tags[i].take().expect("planner emits each request once");
+            hist.record(enqueued.elapsed());
+            let _ = reply.send(result); // receiver may have gone away
+        },
+    );
 
     let mut sh = shared.lock().expect("stats lock");
-    sh.stats.requests += requests;
+    sh.stats.requests += reqs.len() as u64;
     sh.stats.candidates += candidates;
     sh.stats.batches += 1;
+    sh.stats.groups += plan.groups;
+    sh.stats.coalesced_requests += plan.coalesced_requests;
     sh.stats.errors += errors;
     sh.stats.cache_hits += cache.hits - hits0;
     sh.stats.cache_misses += cache.misses - misses0;
@@ -373,6 +505,7 @@ mod tests {
             max_batch: 64,
             max_wait_us: 100,
             context_cache_entries: cache,
+            max_group_candidates: 1024,
         };
         let gen = TraceGenerator::new(7, 6, 3, 1 << 10, 4);
         (ServingEngine::start(router, serve_cfg), gen)
@@ -433,7 +566,13 @@ mod tests {
         router.register("m", handle.clone());
         let eng = ServingEngine::start(
             router,
-            ServeConfig { workers: 1, max_batch: 8, max_wait_us: 50, context_cache_entries: 64 },
+            ServeConfig {
+                workers: 1,
+                max_batch: 8,
+                max_wait_us: 50,
+                context_cache_entries: 64,
+                max_group_candidates: 1024,
+            },
         );
         let mut gen = TraceGenerator::new(9, 4, 2, 256, 2);
         let req = gen.next_request("m");
@@ -468,6 +607,7 @@ mod tests {
                 max_batch: 8,
                 max_wait_us: 50,
                 context_cache_entries: 1024,
+                max_group_candidates: 1024,
             },
         );
         let mut gen = TraceGenerator::new(17, 6, 3, 1 << 10, 4);
@@ -544,6 +684,129 @@ mod tests {
         assert_eq!(stats.requests, 1);
         // post-shutdown submits through the leftover clone fail cleanly
         assert!(leaked.score(gen.next_request("ctr")).is_err());
+    }
+
+    #[test]
+    fn coalesced_slate_matches_per_request_and_isolates_errors() {
+        // one flushed slate: 3 requests sharing context A (one of them
+        // malformed), 1 on context B, 1 for an unknown model.  The
+        // malformed request and the unknown model fail ALONE; everyone
+        // else scores bitwise what the per-request path produces.
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let reg = Regressor::new(&cfg);
+        let router = Router::new(1);
+        router.register("ctr", ModelHandle::new(reg.clone()));
+        let mut gen = TraceGenerator::new(51, 6, 3, 1 << 10, 4);
+        let a = gen.next_request("ctr");
+        let b = gen.next_request("ctr");
+        let mut a2 = gen.next_request("ctr");
+        a2.context = a.context.clone();
+        let mut bad = gen.next_request("ctr");
+        bad.context = a.context.clone();
+        let _ = bad.candidates[1].pop(); // wrong width: 2 slots, model needs 3
+        let mut alien = gen.next_request("nope");
+        alien.context = a.context.clone();
+        let reqs = vec![a.clone(), bad.clone(), b.clone(), alien.clone(), a2.clone()];
+        let mut cache = ContextCache::new(1024);
+        let mut ws = Workspace::new();
+        let (results, plan) = score_requests_coalesced(&router, &mut cache, &mut ws, 1024, &reqs);
+        assert_eq!(results.len(), 5);
+        // groups: A{a, bad, a2}, B{b}, alien (model name splits groups)
+        assert_eq!(plan.groups, 3);
+        assert_eq!(plan.coalesced_requests, 3);
+        assert!(results[1].as_ref().unwrap_err().contains("2 slots"));
+        assert!(results[3].as_ref().unwrap_err().contains("unknown model"));
+        // survivors match the per-request batched path bitwise
+        let mut ws_ref = Workspace::new();
+        for (i, req) in [(0usize, &a), (2, &b), (4, &a2)] {
+            let cp = reg.context_partial(&req.context);
+            let mut want = Vec::new();
+            reg.predict_batch_with_partial(&cp, &req.candidates, &mut ws_ref, &mut want);
+            assert_eq!(
+                results[i].as_ref().unwrap().scores,
+                want,
+                "request {i} diverged from the per-request path"
+            );
+        }
+        // ONE cache lookup per group that reached scoring: A and B
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.hits, 0);
+        // a second identical slate hits both cached partials
+        let (_, plan2) = score_requests_coalesced(&router, &mut cache, &mut ws, 1024, &reqs);
+        assert_eq!(plan2, plan);
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.hits, 2);
+    }
+
+    #[test]
+    fn engine_coalesces_same_context_submissions() {
+        // Same-context requests submitted together route to one shard
+        // (context-affinity) and — whenever the batcher flushes them in
+        // one batch — score as one group.  Responses must be correct
+        // and per-request regardless of how the flushes land.
+        let (eng, mut gen) = engine(1, 4096);
+        let donor = gen.next_request("ctr");
+        let reqs: Vec<Request> = (0..40)
+            .map(|_| {
+                let mut r = gen.next_request("ctr");
+                r.context = donor.context.clone();
+                r
+            })
+            .collect();
+        let handle = eng.router.resolve("ctr").unwrap();
+        let model = handle.load();
+        let rxs: Vec<_> = reqs.iter().map(|r| eng.submit(r.clone()).unwrap()).collect();
+        let mut ws = Workspace::new();
+        let cp = model.context_partial(&donor.context);
+        for (req, rx) in reqs.iter().zip(rxs) {
+            let resp = rx.recv().unwrap().unwrap();
+            let mut want = Vec::new();
+            model.predict_batch_with_partial(&cp, &req.candidates, &mut ws, &mut want);
+            assert_eq!(resp.scores, want);
+        }
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 40);
+        assert_eq!(stats.errors, 0);
+        // every batch planned at least one group, never more groups
+        // than requests
+        assert!(stats.groups >= stats.batches);
+        assert!(stats.groups <= stats.requests);
+        // one partial per (batch, context): misses+hits == groups here
+        assert_eq!(stats.cache_hits + stats.cache_misses, stats.groups);
+    }
+
+    #[test]
+    fn oversized_group_is_chunked_by_the_workspace_cap() {
+        // max_group_candidates 4 with a 5-request / 20-candidate shared
+        // context: scores must still be bitwise the uncapped ones.
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let reg = Regressor::new(&cfg);
+        let router = Router::new(1);
+        router.register("ctr", ModelHandle::new(reg.clone()));
+        let mut gen = TraceGenerator::new(77, 6, 3, 1 << 10, 4);
+        let donor = gen.next_request("ctr");
+        let reqs: Vec<Request> = (0..5)
+            .map(|_| {
+                let mut r = gen.next_request("ctr");
+                r.context = donor.context.clone();
+                r
+            })
+            .collect();
+        let mut ws = Workspace::new();
+        let mut cache = ContextCache::new(64);
+        let (capped, plan) = score_requests_coalesced(&router, &mut cache, &mut ws, 4, &reqs);
+        let (uncapped, _) = score_requests_coalesced(
+            &router,
+            &mut cache,
+            &mut ws,
+            usize::MAX,
+            &reqs,
+        );
+        assert_eq!(plan.groups, 1);
+        assert_eq!(plan.coalesced_requests, 5);
+        for (a, b) in capped.iter().zip(&uncapped) {
+            assert_eq!(a.as_ref().unwrap().scores, b.as_ref().unwrap().scores);
+        }
     }
 
     #[test]

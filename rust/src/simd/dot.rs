@@ -216,7 +216,7 @@ unsafe fn matvec_avx2(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::simd::force_scalar;
+    use crate::simd::{forcing_test_lock, ForcedIsaGuard};
     use crate::util::rng::Pcg32;
 
     fn randvec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
@@ -319,9 +319,11 @@ mod tests {
         let mut rng = Pcg32::seeded(5);
         let a = randvec(&mut rng, 256);
         let b = randvec(&mut rng, 256);
-        force_scalar(true);
-        let s = dot(&a, &b);
-        force_scalar(false);
+        let _serial = forcing_test_lock();
+        let s = {
+            let _scalar = ForcedIsaGuard::scalar();
+            dot(&a, &b)
+        };
         let v = dot(&a, &b);
         assert!((s - v).abs() < 1e-2 * (1.0 + s.abs()), "s={s} v={v}");
     }

@@ -60,11 +60,49 @@ fn detect() -> IsaLevel {
 }
 
 /// Force a specific ISA level (Figure 5's SIMD-disabled control runs).
+///
+/// This mutates a process-wide atomic and never restores it: reserve it
+/// for process-scoped decisions (the `fw --scalar` CLI flag).  Tests
+/// and benches must use [`ForcedIsaGuard`] instead, which restores the
+/// prior forced state on drop.
 pub fn force_scalar(on: bool) {
     FORCED.store(
         if on { IsaLevel::Scalar as u8 } else { UNSET },
         Ordering::Relaxed,
     );
+}
+
+/// Scoped ISA forcing: forces the scalar kernels on construction and
+/// restores the *previous* forced state — including "unforced" — when
+/// dropped, LIFO-nestable.
+///
+/// [`force_scalar`] leaves the process-wide dispatch atomic mutated
+/// forever; a test that forced scalar and forgot (or panicked before)
+/// the restore silently poisoned every concurrently-running
+/// `cargo test` thread onto the scalar path.  The guard bounds the
+/// mutation to a scope — though while it lives, *other* threads still
+/// observe the forced level (the dispatch decision is inherently
+/// process-global), so equality tests comparing forced-scalar against
+/// SIMD results should call concrete kernels directly where bit-exact
+/// dispatch matters.
+pub struct ForcedIsaGuard {
+    prev: u8,
+}
+
+impl ForcedIsaGuard {
+    /// Force the scalar kernels until the guard drops (Figure 5's
+    /// SIMD-disabled control arm).
+    pub fn scalar() -> Self {
+        ForcedIsaGuard {
+            prev: FORCED.swap(IsaLevel::Scalar as u8, Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for ForcedIsaGuard {
+    fn drop(&mut self) {
+        FORCED.store(self.prev, Ordering::Relaxed);
+    }
 }
 
 /// True when the AVX2+FMA path is live.
@@ -80,16 +118,57 @@ pub fn isa_name() -> &'static str {
     }
 }
 
+/// Serializes tests that mutate the process-wide `FORCED` atomic: the
+/// dispatch decision is global, so forcing tests running on parallel
+/// `cargo test` threads would otherwise observe each other's state.
+#[cfg(test)]
+pub(crate) fn forcing_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn force_scalar_round_trip() {
+        let _serial = forcing_test_lock();
         force_scalar(true);
         assert_eq!(isa_level(), IsaLevel::Scalar);
         force_scalar(false);
         let _ = isa_level(); // whatever the host supports
+    }
+
+    #[test]
+    fn forced_isa_guard_restores_prior_state() {
+        let _serial = forcing_test_lock();
+        // nested guards restore LIFO; the outer restore re-establishes
+        // whatever was forced before the guards existed
+        let outer_forced = FORCED.load(Ordering::Relaxed);
+        {
+            let _g1 = ForcedIsaGuard::scalar();
+            assert_eq!(isa_level(), IsaLevel::Scalar);
+            {
+                let _g2 = ForcedIsaGuard::scalar();
+                assert_eq!(isa_level(), IsaLevel::Scalar);
+            }
+            // inner drop restored g1's forcing, not "unforced"
+            assert_eq!(FORCED.load(Ordering::Relaxed), IsaLevel::Scalar as u8);
+        }
+        assert_eq!(FORCED.load(Ordering::Relaxed), outer_forced);
+    }
+
+    #[test]
+    fn forced_isa_guard_restores_on_panic() {
+        let _serial = forcing_test_lock();
+        let before = FORCED.load(Ordering::Relaxed);
+        let result = std::panic::catch_unwind(|| {
+            let _g = ForcedIsaGuard::scalar();
+            panic!("unwinding must not leak the forced level");
+        });
+        assert!(result.is_err());
+        assert_eq!(FORCED.load(Ordering::Relaxed), before);
     }
 
     #[test]

@@ -66,13 +66,32 @@ impl Trainer {
         }
     }
 
+    /// Micro-batch size for held-out evaluation: big enough to keep the
+    /// GEMM spine fed, small enough that the batch-strided workspace
+    /// stays cache-resident.
+    pub const EVAL_BATCH: usize = 256;
+
     /// Evaluate (without learning) on a held-out slice; returns AUC.
+    ///
+    /// Scoring runs through [`Regressor::predict_batch`]'s GEMM spine
+    /// in [`EVAL_BATCH`](Self::EVAL_BATCH)-example micro-batches (the
+    /// ROADMAP "batched evaluation" follow-on of the batched-training
+    /// PR) instead of one `predict` call per example.  For Linear/FFM
+    /// every per-row operation is literally the per-example sequence,
+    /// so the AUC is bit-equal to the per-example loop; for DeepFFM the
+    /// dense tower runs the batched GEMM (`matmul_rowmajor`) instead of
+    /// the single-vector matvec — same math, different accumulation
+    /// order — so scores agree to ~1e-6 and the rank-based AUC is
+    /// equal unless two holdout scores near-tie at that resolution.
+    /// `batched_eval_auc_matches_per_example` pins both contracts.
     pub fn test_auc(&mut self, test: &[Example]) -> f64 {
         let mut scores = Vec::with_capacity(test.len());
         let mut labels = Vec::with_capacity(test.len());
-        for ex in test {
-            scores.push(self.reg.predict(ex, &mut self.ws));
-            labels.push(ex.label);
+        let mut chunk = Vec::new();
+        for mb in test.chunks(Self::EVAL_BATCH) {
+            self.reg.predict_batch(mb, &mut self.ws, &mut chunk);
+            scores.extend_from_slice(&chunk);
+            labels.extend(mb.iter().map(|ex| ex.label));
         }
         crate::eval::auc(&scores, &labels)
     }
@@ -117,6 +136,60 @@ mod tests {
             pts[pts.len() - 1],
             pts[0]
         );
+    }
+
+    #[test]
+    fn batched_eval_auc_matches_per_example() {
+        // The batched GEMM-spine evaluation must be invisible in the
+        // number, on a holdout that is NOT a multiple of EVAL_BATCH so
+        // the remainder micro-batch path runs too.  Linear/FFM rows go
+        // through literally the per-example code, so their AUC is
+        // pinned BIT-equal.  DeepFFM's dense tower runs the batched
+        // GEMM instead of the single-vector matvec (different
+        // accumulation order, scores agree to ~1e-6, ranks only flip
+        // on a near-tie at that resolution), so its AUC is pinned to
+        // within one rank step rather than asserted bit-equal — exact
+        // equality there would hinge on the seed producing no
+        // near-ties.
+        use crate::config::Architecture;
+        for arch in [Architecture::Linear, Architecture::Ffm, Architecture::DeepFfm] {
+            let cfg = match arch {
+                Architecture::Linear => ModelConfig::linear(4, 256),
+                Architecture::Ffm => ModelConfig::ffm(4, 2, 256),
+                Architecture::DeepFfm => ModelConfig::deep_ffm(4, 2, 256, &[8]),
+            };
+            let mut t = Trainer::new(Regressor::new(&cfg));
+            let mut s = SyntheticStream::with_buckets(DatasetSpec::tiny(), 61, 256);
+            for _ in 0..3000 {
+                let ex = s.next_example();
+                t.learn(&ex);
+            }
+            let n = Trainer::EVAL_BATCH + 77;
+            let test: Vec<_> = (0..n).map(|_| s.next_example()).collect();
+            let batched = t.test_auc(&test);
+            let mut scores = Vec::new();
+            let mut labels = Vec::new();
+            for ex in &test {
+                scores.push(t.reg.predict(ex, &mut t.ws));
+                labels.push(ex.label);
+            }
+            let per_example = crate::eval::auc(&scores, &labels);
+            if arch == Architecture::DeepFfm {
+                // one flipped pair moves AUC by exactly 1/(pos*neg);
+                // allow a couple of flips
+                let pos = labels.iter().filter(|&&y| y > 0.5).count();
+                let rank_step = 1.0 / (pos * (n - pos)) as f64;
+                assert!(
+                    (batched - per_example).abs() <= 2.0 * rank_step,
+                    "{arch:?}: batched {batched} vs per-example {per_example}"
+                );
+            } else {
+                assert_eq!(
+                    batched, per_example,
+                    "{arch:?}: batched eval AUC diverged from per-example"
+                );
+            }
+        }
     }
 
     #[test]

@@ -311,12 +311,18 @@ impl UpdateReceiver {
 /// Simulated inter-DC link: counts bytes and models transfer time at a
 /// configured bandwidth + RTT.  (The bandwidth bill is the paper's
 /// headline §6 metric; time here is derived, not slept.)
+///
+/// The wire-time physics live in ONE place —
+/// [`crate::fleet::topology::LinkSpec::transfer_seconds`] — shared with
+/// the fleet fabric's [`crate::fleet::topology::SimLink`], so the two
+/// link models can never drift apart.  This channel is the lossless
+/// trainer→receiver pipe; the fleet's `SimLink` adds loss on top of the
+/// same spec.
 #[derive(Clone, Debug)]
 pub struct SimulatedChannel {
-    /// Link bandwidth in bytes/second.
-    pub bandwidth_bps: f64,
-    /// Per-message round-trip overhead in seconds.
-    pub rtt_seconds: f64,
+    /// Link physics (bandwidth + RTT; `loss` is unused — this channel
+    /// is the reliable pipe).
+    pub link: crate::fleet::topology::LinkSpec,
     /// Ledger: total bytes shipped.
     pub total_bytes: u64,
     /// Ledger: total simulated seconds spent on the wire.
@@ -333,17 +339,22 @@ impl SimulatedChannel {
 
     pub fn with_bandwidth(bandwidth_bps: f64, rtt_seconds: f64) -> Self {
         SimulatedChannel {
-            bandwidth_bps,
-            rtt_seconds,
+            link: crate::fleet::topology::LinkSpec {
+                bandwidth_bps,
+                rtt_seconds,
+                loss: 0.0,
+            },
             total_bytes: 0,
             total_seconds: 0.0,
             messages: 0,
         }
     }
 
-    /// Ship an update; returns the simulated transfer seconds.
+    /// Ship an update; returns the simulated transfer seconds
+    /// (delegated to the shared
+    /// [`crate::fleet::topology::LinkSpec::transfer_seconds`] model).
     pub fn ship(&mut self, update: &WireUpdate) -> f64 {
-        let secs = self.rtt_seconds + update.bytes.len() as f64 / self.bandwidth_bps;
+        let secs = self.link.transfer_seconds(update.bytes.len());
         self.total_bytes += update.bytes.len() as u64;
         self.total_seconds += secs;
         self.messages += 1;
@@ -506,6 +517,34 @@ mod tests {
         ch.ship(&u);
         assert_eq!(ch.total_bytes, 1_000_000);
         assert_eq!(ch.messages, 2);
+    }
+
+    #[test]
+    fn channel_and_fleet_link_share_one_physics() {
+        // The channel delegates to LinkSpec::transfer_seconds — the
+        // fleet's SimLink uses the same function, so identical specs
+        // must bill identical wire time (the "unify the two link
+        // models" ROADMAP item).
+        use crate::fleet::topology::{LinkSpec, SimLink};
+        use crate::util::rng::Pcg32;
+        let mut ch = SimulatedChannel::with_bandwidth(2_000_000.0, 0.025);
+        let mut link = SimLink::new(LinkSpec {
+            bandwidth_bps: 2_000_000.0,
+            rtt_seconds: 0.025,
+            loss: 0.0,
+        });
+        let mut rng = Pcg32::seeded(9);
+        for len in [0usize, 1, 1337, 250_000, 4_000_000] {
+            let u = WireUpdate {
+                mode: UpdateMode::Raw,
+                bytes: vec![0; len],
+                encode_seconds: 0.0,
+            };
+            let a = ch.ship(&u);
+            let b = link.ship(len, &mut rng, false).expect("lossless");
+            assert_eq!(a, b, "len={len}: channel {a} vs fleet link {b}");
+        }
+        assert_eq!(ch.total_bytes, link.ledger.bytes);
     }
 
     #[test]

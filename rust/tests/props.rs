@@ -416,6 +416,93 @@ fn prop_batched_scoring_matches_sequential() {
     });
 }
 
+/// Tentpole invariant of the cross-request coalescing PR: scoring a
+/// flushed slate of requests through the group planner — same-context
+/// requests coalesced into one union-slate kernel pass, chunked at the
+/// workspace cap — must be **bitwise** identical to scoring each
+/// request alone through the per-request batched path, on all three
+/// architectures.  Random mixes of shared/unique contexts, candidate
+/// fanouts k ∈ {0, 1, 2, 8} and caps small enough that hot groups hit
+/// the chunking path.
+#[test]
+fn prop_grouped_scoring_matches_per_request() {
+    use fwumious::feature::FeatureSlot;
+    use fwumious::serve::context_cache::ContextCache;
+    use fwumious::serve::router::Router;
+    use fwumious::serve::server::score_requests_coalesced;
+    use fwumious::serve::{ModelHandle, Request};
+    prop(10, |g| {
+        let buckets = 1u32 << 8;
+        for arch in 0..3usize {
+            let fields = g.usize_in(4..9);
+            let k = [2usize, 4, 8][g.usize_in(0..3)];
+            let cfg = match arch {
+                0 => ModelConfig::linear(fields, buckets),
+                1 => ModelConfig::ffm(fields, k, buckets),
+                _ => ModelConfig::deep_ffm(fields, k, buckets, &[8]),
+            };
+            let mut reg = Regressor::new(&cfg);
+            for w in reg.pool.weights.iter_mut() {
+                *w = g.f32_in(-0.4, 0.4);
+            }
+            let ctx_len = g.usize_in(1..fields);
+            let slot = |g: &mut fwumious::testutil::Gen, f: usize| FeatureSlot {
+                field: f as u16,
+                bucket: g.u32() & (buckets - 1),
+                value: if g.usize_in(0..5) == 0 {
+                    0.0
+                } else {
+                    g.f32_in(0.1, 1.5)
+                },
+            };
+            // a few distinct contexts, shared by several requests
+            let n_ctx = g.usize_in(1..4);
+            let contexts: Vec<Vec<FeatureSlot>> = (0..n_ctx)
+                .map(|_| (0..ctx_len).map(|f| slot(g, f)).collect())
+                .collect();
+            let n_req = g.usize_in(2..9);
+            let reqs: Vec<Request> = (0..n_req)
+                .map(|_| {
+                    let fanout = [0usize, 1, 2, 8][g.usize_in(0..4)];
+                    Request {
+                        model: "m".into(),
+                        context: contexts[g.usize_in(0..n_ctx)].clone(),
+                        candidates: (0..fanout)
+                            .map(|_| (ctx_len..fields).map(|f| slot(g, f)).collect())
+                            .collect(),
+                    }
+                })
+                .collect();
+            let router = Router::new(1);
+            router.register("m", ModelHandle::new(reg.clone()));
+            // caps 1 and 3 force chunked union slates; 1024 never chunks
+            let cap = [1usize, 3, 1024][g.usize_in(0..3)];
+            let mut cache = ContextCache::new(64);
+            let mut ws = Workspace::new();
+            let (grouped, plan) =
+                score_requests_coalesced(&router, &mut cache, &mut ws, cap, &reqs);
+            assert_eq!(grouped.len(), n_req);
+            assert!(plan.groups as usize <= n_ctx, "more groups than contexts");
+            // reference: the per-request batched path (PR 3's serving
+            // inner loop), fresh workspace
+            let mut ws_ref = Workspace::new();
+            for (i, req) in reqs.iter().enumerate() {
+                let cp = reg.context_partial(&req.context);
+                let mut want = Vec::new();
+                reg.predict_batch_with_partial(&cp, &req.candidates, &mut ws_ref, &mut want);
+                let got = grouped[i]
+                    .as_ref()
+                    .unwrap_or_else(|e| panic!("request {i} errored: {e}"));
+                assert_eq!(
+                    got.scores, want,
+                    "arch {arch} fields={fields} k={k} cap={cap} req {i}: \
+                     grouped path diverged from per-request path"
+                );
+            }
+        }
+    });
+}
+
 /// Tentpole invariant of the batched training PR: `learn_batch` is the
 /// same learner.  B = 1 must be **bit-identical** to `learn()` (scores,
 /// weights and AdaGrad accumulators), and a B-example micro-batch must

@@ -39,6 +39,7 @@ fn cached_and_uncached_engines_agree() {
                 max_batch: 32,
                 max_wait_us: 50,
                 context_cache_entries: cache,
+                max_group_candidates: 1024,
             },
         );
         let mut gen = TraceGenerator::new(trace_seed, 6, 3, 1 << 10, 4);
@@ -66,7 +67,15 @@ fn simd_and_scalar_serving_agree() {
     let reqs: Vec<Request> = (0..100).map(|_| gen.next_request("m")).collect();
 
     let run = |scalar: bool| -> Vec<f32> {
-        fwumious::simd::force_scalar(scalar);
+        // Scoped forcing: the guard restores the prior (unforced) state
+        // even if an assertion below unwinds, so a failed run no longer
+        // leaves the WHOLE binary stuck on the scalar path.  It does
+        // not serialize against tests running concurrently on other
+        // threads — the dispatch atomic is process-global — so those
+        // can still observe scalar dispatch for this guard's lifetime
+        // (a pre-existing property of ISA forcing, now bounded to this
+        // scope instead of leaking forever).
+        let _guard = scalar.then(fwumious::simd::ForcedIsaGuard::scalar);
         let mut ws = Workspace::new();
         let mut out = Vec::new();
         for r in &reqs {
@@ -75,7 +84,6 @@ fn simd_and_scalar_serving_agree() {
                 out.push(reg.predict_with_partial(&cp, c, &mut ws));
             }
         }
-        fwumious::simd::force_scalar(false);
         out
     };
     let simd = run(false);
@@ -132,6 +140,7 @@ fn engine_sustains_load_across_many_workers() {
             max_batch: 128,
             max_wait_us: 100,
             context_cache_entries: 8192,
+            max_group_candidates: 1024,
         },
     );
     let mut gen = TraceGenerator::new(12, 6, 3, 1 << 12, 8);
