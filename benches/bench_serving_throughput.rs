@@ -185,6 +185,7 @@ fn run_engine(reg: &Regressor, workers: usize, requests: usize) -> EngineRun {
             max_wait_us: 200,
             context_cache_entries: 65_536,
             max_group_candidates: 1024,
+            ..ServeConfig::default()
         },
     );
     let fields = reg.cfg.fields;

@@ -138,6 +138,7 @@ fn stage3_serve(model: Regressor) {
             max_wait_us: 200,
             context_cache_entries: 65_536,
             max_group_candidates: 1024,
+            ..ServeConfig::default()
         },
     );
     let mut gen = TraceGenerator::new(11, fields, ctx_fields, buckets, 16);

@@ -90,6 +90,11 @@ SUBCOMMANDS:
                --model model.fw  --requests N  --workers N
                --no-context-cache  --no-simd
                --max-group-candidates N (cross-request union-slate cap)
+               --queue-depth N (bounded admission queue per worker)
+               --shed-policy reject-new|drop-oldest (full-queue behavior)
+               --slo-us N (per-request deadline; 0 disables the
+               overload plane)  --degraded-max-candidates N (slate
+               truncation cap while degraded)
     deploy     run the online deployment plane: continuous Hogwild
                training rounds published through the transfer pipeline
                and hot-swapped into a live serving engine

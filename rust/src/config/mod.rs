@@ -146,6 +146,39 @@ impl ModelConfig {
     }
 }
 
+/// What admission control does with a request that arrives at a full
+/// worker queue (the overload plane's shed policy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse the new request (the arriving caller eats the shed).
+    RejectNew,
+    /// Evict the oldest queued request to admit the new one (the
+    /// longest-waiting — and therefore closest-to-deadline — request
+    /// eats the shed; freshest traffic keeps flowing).
+    DropOldest,
+}
+
+impl ShedPolicy {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s {
+            "reject-new" => ShedPolicy::RejectNew,
+            "drop-oldest" => ShedPolicy::DropOldest,
+            other => {
+                return Err(format!(
+                    "unknown shed policy '{other}' (want reject-new|drop-oldest)"
+                ))
+            }
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedPolicy::RejectNew => "reject-new",
+            ShedPolicy::DropOldest => "drop-oldest",
+        }
+    }
+}
+
 /// Serving-layer configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -163,6 +196,25 @@ pub struct ServeConfig {
     /// groups are scored in chunks (bit-identical by the kernels'
     /// batch-size-invariance contract).  0 is treated as 1.
     pub max_group_candidates: usize,
+    /// Admission control: bounded per-worker queue depth (requests).
+    /// A submit against a full queue is shed per [`ShedPolicy`] instead
+    /// of blocking the caller.  0 is treated as 1.
+    pub queue_depth: usize,
+    /// What to shed when a worker queue is full.
+    pub shed_policy: ShedPolicy,
+    /// Per-request latency SLO in microseconds.  0 disables the
+    /// deadline/degraded machinery entirely (legacy behaviour).  When
+    /// set: requests are stamped with a deadline at admission, workers
+    /// score context groups oldest-deadline-first, fast-fail requests
+    /// that expired while queued, and the per-worker
+    /// [`crate::serve::overload::OverloadController`] walks the
+    /// degradation ladder when the windowed p99 drifts past the SLO.
+    pub request_slo_us: u64,
+    /// Degraded mode: candidate-slate truncation cap applied while the
+    /// overload controller sits at [`crate::serve::overload::DegradeLevel::Truncate`]
+    /// or below.  0 is treated as 1 (a slate always keeps its top
+    /// candidate).
+    pub degraded_max_candidates: usize,
 }
 
 impl Default for ServeConfig {
@@ -173,6 +225,10 @@ impl Default for ServeConfig {
             max_wait_us: 200,
             context_cache_entries: 65_536,
             max_group_candidates: 1024,
+            queue_depth: 4096,
+            shed_policy: ShedPolicy::RejectNew,
+            request_slo_us: 0,
+            degraded_max_candidates: 16,
         }
     }
 }
@@ -207,6 +263,19 @@ mod tests {
     #[should_panic]
     fn non_power_of_two_buckets_panic() {
         ModelConfig::linear(4, 1000);
+    }
+
+    #[test]
+    fn shed_policy_parse_roundtrip() {
+        for p in [ShedPolicy::RejectNew, ShedPolicy::DropOldest] {
+            assert_eq!(ShedPolicy::parse(p.label()).unwrap(), p);
+        }
+        assert!(ShedPolicy::parse("drop-newest").is_err());
+        // the overload plane is off by default: no SLO, generous queue
+        let d = ServeConfig::default();
+        assert_eq!(d.request_slo_us, 0);
+        assert_eq!(d.shed_policy, ShedPolicy::RejectNew);
+        assert!(d.queue_depth >= 1);
     }
 
     #[test]

@@ -218,6 +218,7 @@ pub fn run_soak(cfg: SoakConfig) -> SoakReport {
         max_wait_us: 100,
         context_cache_entries: 4_096,
         max_group_candidates: 1024,
+        ..ServeConfig::default()
     };
     let mut dl = DeploymentLoop::new(dcfg);
 

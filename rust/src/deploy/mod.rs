@@ -387,6 +387,7 @@ mod tests {
             max_wait_us: 100,
             context_cache_entries: 1024,
             max_group_candidates: 1024,
+            ..ServeConfig::default()
         };
         cfg
     }

@@ -258,6 +258,7 @@ mod tests {
             max_wait_us: 50,
             context_cache_entries: 64,
             max_group_candidates: 1024,
+            ..ServeConfig::default()
         };
         let mut rep =
             FleetReplica::new(rid(), UpdateMode::Raw, &template, Some(&serve), "m");

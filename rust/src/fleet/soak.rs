@@ -208,6 +208,7 @@ pub fn run_fleet_soak(cfg: FleetSoakConfig) -> FleetSoakReport {
         max_wait_us: 100,
         context_cache_entries: 1_024,
         max_group_candidates: 1024,
+        ..ServeConfig::default()
     });
     let model_name = fcfg.model_name.clone();
     let mut fabric = FleetFabric::new(fcfg, &trainer);

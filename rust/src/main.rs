@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use fwumious::baselines::FwModel;
 use fwumious::cli::{Args, USAGE};
-use fwumious::config::{ModelConfig, ServeConfig};
+use fwumious::config::{ModelConfig, ServeConfig, ShedPolicy};
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::model::regressor::Regressor;
 use fwumious::model::{io, Workspace};
@@ -19,7 +19,7 @@ use fwumious::quant;
 use fwumious::serve::router::Router;
 use fwumious::serve::server::ServingEngine;
 use fwumious::serve::trace::TraceGenerator;
-use fwumious::serve::ModelHandle;
+use fwumious::serve::{ModelHandle, ServeError};
 use fwumious::train::warmup::{warmup, WarmupConfig};
 use fwumious::util::timer::fmt_duration;
 
@@ -190,27 +190,53 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             max_wait_us: args.usize_flag("max-wait-us", 200)? as u64,
             context_cache_entries: cache_entries,
             max_group_candidates: args.usize_flag("max-group-candidates", 1024)?,
+            queue_depth: args.usize_flag("queue-depth", 4096)?,
+            shed_policy: ShedPolicy::parse(&args.flag_or("shed-policy", "reject-new"))?,
+            request_slo_us: args.usize_flag("slo-us", 0)? as u64,
+            degraded_max_candidates: args.usize_flag("degraded-max-candidates", 16)?,
         },
     );
     let mut gen = TraceGenerator::new(11, fields, ctx_fields, buckets, fanout);
     let t = std::time::Instant::now();
-    let mut inflight = Vec::with_capacity(1024);
-    let mut scored = 0u64;
-    for i in 0..requests {
-        inflight.push(engine.submit(gen.next_request("ctr"))?);
-        if inflight.len() >= 1024 || i + 1 == requests {
-            for rx in inflight.drain(..) {
-                let resp = rx.recv().map_err(|_| "reply dropped".to_string())??;
-                scored += resp.scores.len() as u64;
+    type Reply = std::sync::mpsc::Receiver<Result<fwumious::serve::Response, ServeError>>;
+    // (served, scored, unserved) — unserved covers shed and expired
+    fn drain_replies(
+        inflight: &mut Vec<Reply>,
+        tallies: &mut (u64, u64, u64),
+    ) -> Result<(), String> {
+        for rx in inflight.drain(..) {
+            match rx.recv().map_err(|_| "reply dropped".to_string())? {
+                Ok(resp) => {
+                    tallies.0 += 1;
+                    tallies.1 += resp.scores.len() as u64;
+                }
+                Err(ServeError::Shed(_))
+                | Err(ServeError::DeadlineExpired { .. }) => tallies.2 += 1,
+                Err(e) => return Err(e.to_string()),
             }
         }
+        Ok(())
     }
+    let mut inflight: Vec<Reply> = Vec::with_capacity(1024);
+    let mut tallies = (0u64, 0u64, 0u64);
+    for i in 0..requests {
+        match engine.submit(gen.next_request("ctr")) {
+            Ok(rx) => inflight.push(rx),
+            Err(ServeError::Shed(_)) => tallies.2 += 1,
+            Err(e) => return Err(e.to_string()),
+        }
+        if inflight.len() >= 1024 || i + 1 == requests {
+            drain_replies(&mut inflight, &mut tallies)?;
+        }
+    }
+    drain_replies(&mut inflight, &mut tallies)?;
+    let (served, scored, _unserved) = tallies;
     let secs = t.elapsed().as_secs_f64();
     let stats = engine.shutdown();
     println!(
-        "{requests} requests / {scored} candidates in {} — {:.0} req/s, {:.0} preds/s",
+        "{requests} offered / {served} served / {scored} candidates in {} — {:.0} req/s, {:.0} preds/s",
         fmt_duration(secs),
-        requests as f64 / secs,
+        served as f64 / secs,
         scored as f64 / secs
     );
     println!(
@@ -221,8 +247,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         stats.coalesced_requests,
         stats.errors
     );
+    println!(
+        "overload: shed {} (rejected {}, dropped-oldest {})  expired {}  \
+         degraded transitions {}  level {}  queue depth {}",
+        stats.shed(),
+        stats.shed_rejected,
+        stats.shed_dropped,
+        stats.deadline_expired,
+        stats.degraded_transitions,
+        stats.degrade_label(),
+        stats.queue_depth
+    );
     if let Some(l) = &stats.latency {
-        println!("latency: {}", l.summary());
+        println!("latency (served only): {}", l.summary());
     }
     Ok(())
 }

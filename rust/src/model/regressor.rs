@@ -35,6 +35,26 @@ pub fn pair_index(i: usize, j: usize, fields: usize) -> usize {
     i * (2 * fields - i - 1) / 2 + (j - i - 1)
 }
 
+/// Clamp a requested serving architecture to what the model has: a
+/// model can be scored *down* the Linear < Ffm < DeepFfm ladder (blocks
+/// it owns are skipped) but never up (blocks it lacks cannot be
+/// conjured).
+#[inline]
+fn clamp_arch(model: Architecture, requested: Architecture) -> Architecture {
+    fn rank(a: Architecture) -> u8 {
+        match a {
+            Architecture::Linear => 0,
+            Architecture::Ffm => 1,
+            Architecture::DeepFfm => 2,
+        }
+    }
+    if rank(requested) < rank(model) {
+        requested
+    } else {
+        model
+    }
+}
+
 /// Cached partial forward state for a request context (§5).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ContextPartial {
@@ -586,6 +606,28 @@ impl Regressor {
         ws: &mut Workspace,
         scores: &mut Vec<f32>,
     ) {
+        self.predict_batch_with_partial_as(self.cfg.arch, cp, cands, ws, scores)
+    }
+
+    /// [`predict_batch_with_partial`](Self::predict_batch_with_partial)
+    /// scored **as** `arch` — the degraded-mode hook.  The serving
+    /// engine's overload controller walks the DeepFFM→FFM→LR ladder by
+    /// passing a cheaper architecture here: `Ffm` drops the neural head
+    /// (logit = lr + Σ pairs), `Linear` drops the pairs too (logit =
+    /// lr).  `arch` is clamped to the model's own architecture (a model
+    /// can only be served *down* the ladder — its missing blocks cannot
+    /// be conjured), so passing `self.cfg.arch` or anything above it is
+    /// bit-identical to the plain call.  The [`ContextPartial`] is
+    /// level-independent: one cached partial serves every rung.
+    pub fn predict_batch_with_partial_as<S: AsRef<[FeatureSlot]>>(
+        &self,
+        arch: Architecture,
+        cp: &ContextPartial,
+        cands: &[S],
+        ws: &mut Workspace,
+        scores: &mut Vec<f32>,
+    ) {
+        let arch = clamp_arch(self.cfg.arch, arch);
         let f = self.cfg.fields;
         let c = cp.ctx_fields;
         debug_assert!(c <= f, "context wider than the model");
@@ -610,7 +652,7 @@ impl Regressor {
             }
             ws.batch_lr.push(lr);
         }
-        if self.cfg.arch == Architecture::Linear {
+        if arch == Architecture::Linear {
             ws.lr_out = ws.batch_lr[bsz - 1];
             ws.logit = ws.lr_out;
             scores.extend(ws.batch_lr.iter().map(|&lr| sigmoid(lr)));
@@ -652,7 +694,7 @@ impl Regressor {
                 &mut ws.pairs,
             );
         }
-        match self.cfg.arch {
+        match arch {
             Architecture::Linear => unreachable!(),
             Architecture::Ffm => {
                 ws.batch_acc.resize(bsz, 0.0);
@@ -742,16 +784,33 @@ impl Regressor {
         ws: &mut Workspace,
         scores: &mut Vec<f32>,
     ) {
+        self.predict_batch_with_partial_capped_as(self.cfg.arch, cp, cands, cap, ws, scores)
+    }
+
+    /// [`predict_batch_with_partial_capped`]
+    /// (Self::predict_batch_with_partial_capped) scored as `arch` (see
+    /// [`predict_batch_with_partial_as`]
+    /// (Self::predict_batch_with_partial_as) — clamped to the model's
+    /// own architecture, chunking stays bit-identical per rung).
+    pub fn predict_batch_with_partial_capped_as<S: AsRef<[FeatureSlot]>>(
+        &self,
+        arch: Architecture,
+        cp: &ContextPartial,
+        cands: &[S],
+        cap: usize,
+        ws: &mut Workspace,
+        scores: &mut Vec<f32>,
+    ) {
         let cap = cap.max(1);
         if cands.len() <= cap {
-            self.predict_batch_with_partial(cp, cands, ws, scores);
+            self.predict_batch_with_partial_as(arch, cp, cands, ws, scores);
             return;
         }
         scores.clear();
         scores.reserve(cands.len());
         let mut chunk = std::mem::take(&mut ws.group_scores);
         for cs in cands.chunks(cap) {
-            self.predict_batch_with_partial(cp, cs, ws, &mut chunk);
+            self.predict_batch_with_partial_as(arch, cp, cs, ws, &mut chunk);
             scores.extend_from_slice(&chunk);
         }
         ws.group_scores = chunk;
@@ -1046,6 +1105,81 @@ mod tests {
                 let mut got = Vec::new();
                 reg.predict_batch_with_partial_capped(&cp, &cands, cap, &mut ws, &mut got);
                 assert_eq!(got, full, "{arch:?} cap={cap}");
+            }
+        }
+    }
+
+    #[test]
+    fn arch_override_walks_the_ladder() {
+        // The degraded-mode hook: a DeepFFM model scored as Ffm drops
+        // exactly the neural head (logit = lr + Σ pairs), scored as
+        // Linear drops the pairs too (logit = lr, bitwise the hand
+        // computation); requesting the model's own arch (or anything
+        // above it — clamped) is bit-identical to the plain call.
+        let mut reg = Regressor::new(&tiny_cfg(Architecture::DeepFfm));
+        let mut ws = Workspace::new();
+        let mut s = stream();
+        for _ in 0..500 {
+            let ex = s.next_example();
+            reg.learn(&ex, &mut ws);
+        }
+        let c = 2;
+        let ctx: Vec<FeatureSlot> = s.next_example().slots[..c].to_vec();
+        let cands: Vec<Vec<FeatureSlot>> = (0..7)
+            .map(|_| s.next_example().slots[c..].to_vec())
+            .collect();
+        let cp = reg.context_partial(&ctx);
+        let score = |arch, ws: &mut Workspace| {
+            let mut v = Vec::new();
+            reg.predict_batch_with_partial_as(arch, &cp, &cands, ws, &mut v);
+            v
+        };
+        let full = score(Architecture::DeepFfm, &mut ws);
+        let mut plain = Vec::new();
+        reg.predict_batch_with_partial(&cp, &cands, &mut ws, &mut plain);
+        assert_eq!(full, plain, "own-arch override must be bit-neutral");
+
+        let ffm = score(Architecture::Ffm, &mut ws);
+        let lin = score(Architecture::Linear, &mut ws);
+        assert_ne!(full, ffm, "dropping the nn head must move scores");
+        assert_ne!(ffm, lin, "dropping the pairs must move scores");
+        // Linear rung == hand-computed LR logit, bitwise (same op order)
+        let w = &reg.pool.weights;
+        for (cand, &got) in cands.iter().zip(&lin) {
+            let mut lr = cp.lr_sum;
+            for slot in cand {
+                if slot.value != 0.0 {
+                    lr += w[reg.layout.lr_idx(slot.bucket)] * slot.value;
+                }
+            }
+            assert_eq!(got, crate::util::math::sigmoid(lr));
+        }
+
+        // override above the model's arch clamps: an Ffm model asked
+        // for DeepFfm serves plain Ffm (no phantom nn block)
+        let mut ffm_reg = Regressor::new(&tiny_cfg(Architecture::Ffm));
+        for _ in 0..200 {
+            let ex = s.next_example();
+            ffm_reg.learn(&ex, &mut ws);
+        }
+        let cp2 = ffm_reg.context_partial(&ctx);
+        let mut asked_up = Vec::new();
+        ffm_reg.predict_batch_with_partial_as(
+            Architecture::DeepFfm, &cp2, &cands, &mut ws, &mut asked_up,
+        );
+        let mut own = Vec::new();
+        ffm_reg.predict_batch_with_partial(&cp2, &cands, &mut ws, &mut own);
+        assert_eq!(asked_up, own);
+
+        // chunking stays invariant per rung
+        for arch in [Architecture::Ffm, Architecture::Linear] {
+            let want = score(arch, &mut ws);
+            for cap in [1usize, 3, 7] {
+                let mut got = Vec::new();
+                reg.predict_batch_with_partial_capped_as(
+                    arch, &cp, &cands, cap, &mut ws, &mut got,
+                );
+                assert_eq!(got, want, "{arch:?} cap={cap}");
             }
         }
     }

@@ -220,6 +220,30 @@ mod tests {
     }
 
     #[test]
+    fn zero_candidate_request_never_triggers_full_flush() {
+        // A zero-candidate request adds nothing to the candidate
+        // budget, so even max_batch=1 must not flush on its push; it
+        // rides out to the linger deadline (or a drain) like any other
+        // queued request and keeps its place in the batch.
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(1, Duration::from_millis(5));
+        assert!(b.push_at(req(0), 0u32, t0).is_none(), "empty slate flushed Full");
+        assert_eq!(b.queued_requests(), 1);
+        assert_eq!(b.queued_candidates(), 0);
+        let batch = b
+            .poll_deadline_at(t0 + Duration::from_millis(5))
+            .expect("deadline flush");
+        assert_eq!(batch.reason, FlushReason::Deadline);
+        assert_eq!(batch.items.len(), 1);
+        assert_eq!(batch.candidates, 0);
+        // and via drain too
+        b.push_at(req(0), 1, t0);
+        let drained = b.drain().expect("drain flush");
+        assert_eq!(drained.reason, FlushReason::Drain);
+        assert_eq!(drained.candidates, 0);
+    }
+
+    #[test]
     fn deadline_flush_with_injected_clock() {
         // no real sleeps: the whole deadline lifecycle runs against a
         // synthetic clock

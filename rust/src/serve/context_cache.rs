@@ -170,8 +170,6 @@ pub struct ContextCache {
     tree: RadixTree<Arc<ContextPartial>>,
     /// Max entries before an epoch clear; 0 disables caching entirely.
     pub capacity: usize,
-    /// Model version the cached partials were computed against.
-    model_version: u64,
     pub hits: u64,
     pub misses: u64,
     key_buf: Vec<u8>,
@@ -182,7 +180,6 @@ impl ContextCache {
         ContextCache {
             tree: RadixTree::new(),
             capacity,
-            model_version: 0,
             hits: 0,
             misses: 0,
             key_buf: Vec::new(),
@@ -212,8 +209,6 @@ impl ContextCache {
             self.misses += 1;
             return Arc::new(reg.context_partial(ctx));
         }
-        let _ = &self.model_version; // kept for observability
-        self.model_version = model_version;
         let mut key = std::mem::take(&mut self.key_buf);
         context_key(&mut key, model, model_version, ctx);
         if let Some(v) = self.tree.get(&key) {

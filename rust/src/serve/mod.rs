@@ -16,6 +16,7 @@
 
 pub mod batcher;
 pub mod context_cache;
+pub mod overload;
 pub mod router;
 pub mod server;
 pub mod trace;
@@ -25,6 +26,64 @@ use std::sync::{Arc, RwLock};
 
 use crate::feature::FeatureSlot;
 use crate::model::regressor::Regressor;
+
+/// Why admission control shed a request (the overload plane's two
+/// casualty classes — see [`crate::config::ShedPolicy`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Rejected at submit: the worker queue was full under
+    /// `reject-new`.
+    QueueFull,
+    /// Evicted from the queue after admission: a later request
+    /// displaced this one under `drop-oldest`.
+    DroppedOldest,
+}
+
+impl ShedReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::DroppedOldest => "dropped-oldest",
+        }
+    }
+}
+
+/// Serving-path errors, distinguishable by class so callers can retry
+/// sheds elsewhere, drop expired work, and alert on scoring failures.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Shed by admission control — never entered scoring.
+    Shed(ShedReason),
+    /// Expired in the queue: its SLO budget ran out before a worker
+    /// flushed it, so the engine fast-failed it instead of burning
+    /// kernel time on a reply nobody is waiting for.
+    DeadlineExpired { waited_us: u64, slo_us: u64 },
+    /// The engine is (or went) down.
+    ShutDown,
+    /// Per-request scoring failure (unknown model, malformed slate...).
+    Scoring(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed(r) => write!(f, "shed ({})", r.label()),
+            ServeError::DeadlineExpired { waited_us, slo_us } => {
+                write!(f, "deadline expired (waited {waited_us}us, slo {slo_us}us)")
+            }
+            ServeError::ShutDown => write!(f, "engine is shut down"),
+            ServeError::Scoring(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ServeError> for String {
+    fn from(e: ServeError) -> String {
+        e.to_string()
+    }
+}
 
 /// A scoring request: one shared context, many candidates.
 #[derive(Clone, Debug)]

@@ -1,0 +1,528 @@
+//! The overload plane (ROADMAP item 2): what a saturated replica does
+//! with the traffic it cannot serve in time.
+//!
+//! Three cooperating pieces:
+//!
+//! * [`BoundedQueue`] — the admission-controlled worker queue.  A push
+//!   against a full queue never blocks: it is shed according to the
+//!   configured [`ShedPolicy`](crate::config::ShedPolicy) — either the
+//!   arriving request is rejected (`reject-new`) or the oldest queued
+//!   request is evicted to make room (`drop-oldest`, so the request
+//!   closest to blowing its deadline pays for the freshest one).
+//!   Closing the queue wakes every waiting worker immediately, which is
+//!   what makes engine shutdown prompt even under second-scale linger
+//!   configs.
+//! * [`DegradeLevel`] — the degradation ladder.  `Full` serves the
+//!   model as configured; `Truncate` caps candidate slates at
+//!   `degraded_max_candidates`; `Ffm` additionally drops the neural
+//!   head (DeepFFM → FFM); `Lr` scores the linear block only.  Each
+//!   rung trades ranking quality for a hard reduction in per-request
+//!   kernel work, following the DeepFFM → FFM → LR architecture ladder
+//!   the paper's Table 1 quantifies.
+//! * [`OverloadController`] — a per-worker hysteresis controller over a
+//!   sliding window of observed request latencies.  When the windowed
+//!   p99 drifts past the SLO it escalates one rung; when the p99 of a
+//!   *fresh* window recovers below `recover_frac · SLO` it re-arms one
+//!   rung.  A minimum dwell between transitions prevents flapping.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::config::ShedPolicy;
+
+// ---------------------------------------------------------------- queue
+
+/// Outcome of a [`BoundedQueue::push`].
+#[derive(Debug)]
+pub enum Push<T> {
+    /// Enqueued; queue had room.
+    Admitted,
+    /// Enqueued, but the oldest queued item was evicted to make room
+    /// (`drop-oldest` policy).  The caller owns the casualty — the
+    /// serving engine answers its reply channel with a shed error.
+    AdmittedDroppingOldest(T),
+    /// Queue full under `reject-new`: the new item comes straight back.
+    Rejected(T),
+    /// Queue closed (engine shut down): the item comes straight back.
+    Closed(T),
+}
+
+/// Outcome of a [`BoundedQueue::pop_timeout`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Pop<T> {
+    Item(T),
+    TimedOut,
+    /// Closed **and** drained — workers exit on this.  A closed queue
+    /// still hands out whatever was admitted before the close, so
+    /// shutdown never drops accepted work.
+    Closed,
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPSC queue with non-blocking, policy-driven admission.
+///
+/// Unlike `std::sync::mpsc::sync_channel`, a full queue never blocks
+/// the producer (`submit` must answer "shed" in O(1), not stall a
+/// traffic thread), the consumer can be woken immediately on close
+/// (prompt shutdown regardless of linger timeouts), and `drop-oldest`
+/// eviction is possible at all (mpsc offers no producer-side pop).
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    readable: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        BoundedQueue {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            readable: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Current queue depth (gauge; racy by nature).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue lock").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admission-controlled, non-blocking push.
+    pub fn push(&self, item: T, policy: ShedPolicy) -> Push<T> {
+        let mut q = self.inner.lock().expect("queue lock");
+        if q.closed {
+            return Push::Closed(item);
+        }
+        if q.items.len() < self.capacity {
+            q.items.push_back(item);
+            drop(q);
+            self.readable.notify_one();
+            return Push::Admitted;
+        }
+        match policy {
+            ShedPolicy::RejectNew => Push::Rejected(item),
+            ShedPolicy::DropOldest => {
+                let evicted = q.items.pop_front().expect("full queue has a front");
+                q.items.push_back(item);
+                drop(q);
+                self.readable.notify_one();
+                Push::AdmittedDroppingOldest(evicted)
+            }
+        }
+    }
+
+    /// Pop, waiting up to `timeout` for an item.  Returns
+    /// [`Pop::Closed`] only once the queue is both closed and drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let mut q = self.inner.lock().expect("queue lock");
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                return Pop::Item(item);
+            }
+            if q.closed {
+                return Pop::Closed;
+            }
+            let (guard, res) = self
+                .readable
+                .wait_timeout(q, timeout)
+                .expect("queue lock");
+            q = guard;
+            if res.timed_out() {
+                return match q.items.pop_front() {
+                    Some(item) => Pop::Item(item),
+                    None if q.closed => Pop::Closed,
+                    None => Pop::TimedOut,
+                };
+            }
+        }
+    }
+
+    /// Non-blocking pop (shutdown drain).
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().expect("queue lock").items.pop_front()
+    }
+
+    /// Close the queue: further pushes bounce with [`Push::Closed`],
+    /// every waiting consumer wakes immediately, and pops drain the
+    /// remaining items before reporting [`Pop::Closed`].
+    pub fn close(&self) {
+        self.inner.lock().expect("queue lock").closed = true;
+        self.readable.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue lock").closed
+    }
+}
+
+// --------------------------------------------------------------- ladder
+
+/// The degradation ladder, cheapest-first from the bottom.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradeLevel {
+    /// Serve the model as configured.
+    Full = 0,
+    /// Truncate candidate slates to `degraded_max_candidates`.
+    Truncate = 1,
+    /// Truncate + drop the neural head (DeepFFM → FFM).
+    Ffm = 2,
+    /// Truncate + linear block only (→ LR).
+    Lr = 3,
+}
+
+impl DegradeLevel {
+    pub const LADDER: [DegradeLevel; 4] = [
+        DegradeLevel::Full,
+        DegradeLevel::Truncate,
+        DegradeLevel::Ffm,
+        DegradeLevel::Lr,
+    ];
+
+    /// Does this rung truncate candidate slates?
+    pub fn truncates(&self) -> bool {
+        *self != DegradeLevel::Full
+    }
+
+    /// Architecture cap this rung imposes on scoring (None = serve the
+    /// model's own architecture).
+    pub fn arch_cap(&self) -> Option<crate::config::Architecture> {
+        match self {
+            DegradeLevel::Full | DegradeLevel::Truncate => None,
+            DegradeLevel::Ffm => Some(crate::config::Architecture::Ffm),
+            DegradeLevel::Lr => Some(crate::config::Architecture::Linear),
+        }
+    }
+
+    /// One rung further degraded (saturates at [`DegradeLevel::Lr`]).
+    pub fn escalated(&self) -> DegradeLevel {
+        Self::LADDER[(*self as usize + 1).min(Self::LADDER.len() - 1)]
+    }
+
+    /// One rung recovered (saturates at [`DegradeLevel::Full`]).
+    pub fn recovered(&self) -> DegradeLevel {
+        Self::LADDER[(*self as usize).saturating_sub(1)]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DegradeLevel::Full => "full",
+            DegradeLevel::Truncate => "truncate",
+            DegradeLevel::Ffm => "ffm",
+            DegradeLevel::Lr => "lr",
+        }
+    }
+}
+
+// ----------------------------------------------------------- controller
+
+/// Tuning knobs of the [`OverloadController`] (defaults are what the
+/// serving engine uses; tests construct custom ones).
+#[derive(Clone, Copy, Debug)]
+pub struct OverloadConfig {
+    /// The latency SLO in nanoseconds; 0 disables the controller.
+    pub slo_ns: u64,
+    /// Sliding-window size (latency observations).
+    pub window: usize,
+    /// Minimum observations before the first verdict of a window.
+    pub min_samples: usize,
+    /// Minimum observations between transitions (anti-flap dwell).
+    pub min_dwell: usize,
+    /// Re-arm threshold: recover one rung when windowed p99 drops
+    /// below `recover_frac * slo` (hysteresis band below the SLO).
+    pub recover_frac: f64,
+}
+
+impl OverloadConfig {
+    pub fn from_slo_us(slo_us: u64) -> Self {
+        OverloadConfig {
+            slo_ns: slo_us.saturating_mul(1_000),
+            window: 64,
+            min_samples: 16,
+            min_dwell: 16,
+            recover_frac: 0.7,
+        }
+    }
+}
+
+/// Per-worker hysteresis controller walking the [`DegradeLevel`]
+/// ladder from windowed latency observations.
+///
+/// The window is cleared on every transition so each verdict is based
+/// on latencies observed *at the current rung* — without that, the
+/// pre-transition spike keeps the p99 elevated and the controller
+/// over-escalates (and can never re-arm).
+pub struct OverloadController {
+    cfg: OverloadConfig,
+    /// Ring buffer of recent latencies (ns).
+    window: Vec<u64>,
+    next: usize,
+    filled: usize,
+    /// Observations since the last transition.
+    dwell: usize,
+    level: DegradeLevel,
+    /// Total transitions (both directions) since construction.
+    pub transitions: u64,
+}
+
+impl OverloadController {
+    pub fn new(cfg: OverloadConfig) -> Self {
+        OverloadController {
+            window: vec![0; cfg.window.max(1)],
+            next: 0,
+            filled: 0,
+            dwell: 0,
+            level: DegradeLevel::Full,
+            cfg,
+        }
+    }
+
+    /// Controller for a serving config (disabled when the SLO is 0).
+    pub fn from_slo_us(slo_us: u64) -> Self {
+        Self::new(OverloadConfig::from_slo_us(slo_us))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.slo_ns > 0
+    }
+
+    pub fn level(&self) -> DegradeLevel {
+        self.level
+    }
+
+    /// Record one end-to-end request latency.  Deadline-expired
+    /// requests feed the window too — a wait that blew the SLO is the
+    /// strongest overload signal there is.
+    pub fn observe_ns(&mut self, ns: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.window[self.next] = ns;
+        self.next = (self.next + 1) % self.window.len();
+        self.filled = (self.filled + 1).min(self.window.len());
+        self.dwell += 1;
+    }
+
+    /// Windowed p99 (exact over the ring contents; the window is small).
+    pub fn windowed_p99_ns(&self) -> u64 {
+        if self.filled == 0 {
+            return 0;
+        }
+        let mut v: Vec<u64> = self.window[..self.filled].to_vec();
+        v.sort_unstable();
+        let idx = ((self.filled as f64) * 0.99).ceil() as usize;
+        v[idx.clamp(1, self.filled) - 1]
+    }
+
+    /// Evaluate the ladder after a batch of observations; returns the
+    /// transition taken, if any.
+    pub fn decide(&mut self) -> Option<DegradeLevel> {
+        if !self.enabled()
+            || self.filled < self.cfg.min_samples
+            || self.dwell < self.cfg.min_dwell
+        {
+            return None;
+        }
+        let p99 = self.windowed_p99_ns();
+        let next = if p99 > self.cfg.slo_ns {
+            self.level.escalated()
+        } else if (p99 as f64) < self.cfg.recover_frac * self.cfg.slo_ns as f64 {
+            self.level.recovered()
+        } else {
+            self.level
+        };
+        if next == self.level {
+            return None;
+        }
+        self.level = next;
+        self.transitions += 1;
+        self.dwell = 0;
+        self.filled = 0; // fresh window at the new rung
+        self.next = 0;
+        Some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -------------------------------------------------------- queue
+
+    #[test]
+    fn queue_reject_new_on_full() {
+        let q = BoundedQueue::new(2);
+        assert!(matches!(q.push(1, ShedPolicy::RejectNew), Push::Admitted));
+        assert!(matches!(q.push(2, ShedPolicy::RejectNew), Push::Admitted));
+        assert!(matches!(q.push(3, ShedPolicy::RejectNew), Push::Rejected(3)));
+        assert_eq!(q.len(), 2);
+        // FIFO order preserved, the rejected item never entered
+        assert_eq!(q.pop_timeout(Duration::ZERO), Pop::Item(1));
+        assert_eq!(q.pop_timeout(Duration::ZERO), Pop::Item(2));
+        assert_eq!(q.pop_timeout(Duration::ZERO), Pop::TimedOut);
+    }
+
+    #[test]
+    fn queue_drop_oldest_evicts_front() {
+        let q = BoundedQueue::new(2);
+        q.push(1, ShedPolicy::DropOldest);
+        q.push(2, ShedPolicy::DropOldest);
+        match q.push(3, ShedPolicy::DropOldest) {
+            Push::AdmittedDroppingOldest(old) => assert_eq!(old, 1),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert_eq!(q.pop_timeout(Duration::ZERO), Pop::Item(2));
+        assert_eq!(q.pop_timeout(Duration::ZERO), Pop::Item(3));
+    }
+
+    #[test]
+    fn queue_capacity_zero_is_one() {
+        let q = BoundedQueue::new(0);
+        assert!(matches!(q.push(1, ShedPolicy::RejectNew), Push::Admitted));
+        assert!(matches!(q.push(2, ShedPolicy::RejectNew), Push::Rejected(2)));
+    }
+
+    #[test]
+    fn queue_close_wakes_and_drains() {
+        let q = std::sync::Arc::new(BoundedQueue::new(8));
+        q.push(7, ShedPolicy::RejectNew);
+        q.close();
+        // closed pushes bounce
+        assert!(matches!(q.push(8, ShedPolicy::RejectNew), Push::Closed(8)));
+        assert!(matches!(q.push(9, ShedPolicy::DropOldest), Push::Closed(9)));
+        // admitted-before-close work still drains, then Closed
+        assert_eq!(q.pop_timeout(Duration::from_secs(5)), Pop::Item(7));
+        assert_eq!(q.pop_timeout(Duration::from_secs(5)), Pop::Closed);
+    }
+
+    #[test]
+    fn queue_close_wakes_a_blocked_consumer_promptly() {
+        let q = std::sync::Arc::new(BoundedQueue::<u32>::new(8));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            let start = std::time::Instant::now();
+            // a consumer parked on a LONG wait must wake on close, not
+            // ride out the timeout
+            let r = q2.pop_timeout(Duration::from_secs(30));
+            (r, start.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        let (r, waited) = t.join().unwrap();
+        assert_eq!(r, Pop::Closed);
+        assert!(waited < Duration::from_secs(5), "close did not wake: {waited:?}");
+    }
+
+    #[test]
+    fn queue_pop_blocks_until_push() {
+        let q = std::sync::Arc::new(BoundedQueue::<u32>::new(8));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(42, ShedPolicy::RejectNew);
+        assert_eq!(t.join().unwrap(), Pop::Item(42));
+    }
+
+    // ------------------------------------------------------- ladder
+
+    #[test]
+    fn ladder_walks_and_saturates() {
+        let mut l = DegradeLevel::Full;
+        assert!(!l.truncates());
+        assert_eq!(l.arch_cap(), None);
+        l = l.escalated();
+        assert_eq!(l, DegradeLevel::Truncate);
+        assert!(l.truncates());
+        assert_eq!(l.arch_cap(), None);
+        l = l.escalated();
+        assert_eq!(l, DegradeLevel::Ffm);
+        assert_eq!(l.arch_cap(), Some(crate::config::Architecture::Ffm));
+        l = l.escalated();
+        assert_eq!(l, DegradeLevel::Lr);
+        assert_eq!(l.arch_cap(), Some(crate::config::Architecture::Linear));
+        assert_eq!(l.escalated(), DegradeLevel::Lr); // saturates
+        assert_eq!(DegradeLevel::Full.recovered(), DegradeLevel::Full);
+    }
+
+    // --------------------------------------------------- controller
+
+    fn ctl(slo_us: u64) -> OverloadController {
+        OverloadController::new(OverloadConfig {
+            min_samples: 8,
+            min_dwell: 8,
+            window: 32,
+            ..OverloadConfig::from_slo_us(slo_us)
+        })
+    }
+
+    fn feed(c: &mut OverloadController, ns: u64, n: usize) -> Vec<DegradeLevel> {
+        let mut trans = Vec::new();
+        for _ in 0..n {
+            c.observe_ns(ns);
+            if let Some(t) = c.decide() {
+                trans.push(t);
+            }
+        }
+        trans
+    }
+
+    #[test]
+    fn controller_disabled_without_slo() {
+        let mut c = OverloadController::from_slo_us(0);
+        assert!(!c.enabled());
+        feed(&mut c, u64::MAX / 2, 1000);
+        assert_eq!(c.level(), DegradeLevel::Full);
+        assert_eq!(c.transitions, 0);
+    }
+
+    #[test]
+    fn controller_escalates_then_recovers_with_hysteresis() {
+        let mut c = ctl(1_000); // 1ms SLO
+        // in-SLO traffic: no transitions
+        assert!(feed(&mut c, 500_000, 100).is_empty());
+        assert_eq!(c.level(), DegradeLevel::Full);
+        // sustained overload: walks down the ladder one dwell at a time
+        let down = feed(&mut c, 5_000_000, 100);
+        assert!(down.len() >= 2, "escalations: {down:?}");
+        assert_eq!(down[0], DegradeLevel::Truncate);
+        assert_eq!(c.level(), *down.last().unwrap());
+        let worst = c.level();
+        assert!(worst >= DegradeLevel::Ffm);
+        // grey zone (between recover_frac*slo and slo): holds the rung
+        assert!(feed(&mut c, 900_000, 100).is_empty());
+        assert_eq!(c.level(), worst);
+        // recovery traffic well below the re-arm threshold: walks back
+        let up = feed(&mut c, 100_000, 200);
+        assert!(!up.is_empty());
+        assert_eq!(c.level(), DegradeLevel::Full);
+        assert_eq!(*up.last().unwrap(), DegradeLevel::Full);
+        assert_eq!(c.transitions, (down.len() + up.len()) as u64);
+    }
+
+    #[test]
+    fn controller_dwell_bounds_transition_rate() {
+        let mut c = ctl(1_000);
+        // 24 overloaded observations with dwell 8 allow at most 3
+        // transitions no matter how bad the latencies are
+        let trans = feed(&mut c, u64::MAX / 4, 24);
+        assert!(trans.len() <= 3, "flapping: {trans:?}");
+    }
+
+    #[test]
+    fn controller_p99_is_windowed() {
+        let mut c = ctl(1_000);
+        feed(&mut c, 10_000_000, 32);
+        let p99_hot = c.windowed_p99_ns();
+        assert!(p99_hot >= 10_000_000);
+        // transitions cleared the window; a cold window reads fresh
+        feed(&mut c, 1_000, 32);
+        assert!(c.windowed_p99_ns() <= 10_000_000);
+    }
+}

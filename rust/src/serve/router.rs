@@ -28,6 +28,16 @@ impl Router {
         }
     }
 
+    /// A router over the SAME model registry with a different shard
+    /// count.  [`crate::serve::server::ServingEngine::start`] derives
+    /// its routing from the worker count through this: a shard count
+    /// that disagrees with the worker count would force a second modulo
+    /// at dispatch, re-scrambling [`Self::shard_for_context`]'s pinned
+    /// context→shard assignment and with it every warm context cache.
+    pub fn with_shards(&self, shards: usize) -> Router {
+        Router { models: self.models.clone(), shards: shards.max(1) }
+    }
+
     /// Register (or replace) a model under `name`.
     pub fn register(&self, name: &str, handle: ModelHandle) {
         self.models
@@ -167,5 +177,24 @@ mod tests {
         let r2 = r.clone();
         r.register("m", handle());
         assert!(r2.resolve("m").is_some());
+    }
+
+    #[test]
+    fn with_shards_shares_registry_and_overrides_count() {
+        let r = Router::new(7);
+        r.register("m", handle());
+        let derived = r.with_shards(4);
+        assert_eq!(derived.shards, 4);
+        assert!(derived.resolve("m").is_some());
+        // registrations flow both ways (same registry)
+        derived.register("n", handle());
+        assert!(r.resolve("n").is_some());
+        // degenerate counts clamp like Router::new
+        assert_eq!(r.with_shards(0).shards, 1);
+        // the derived router shards exactly as shard_for_context over
+        // its own count — no second modulo anywhere
+        let c = ctx(&[1, 2, 3]);
+        let req = Request { model: "m".into(), context: c.clone(), candidates: vec![] };
+        assert_eq!(derived.shard_for(&req), Router::shard_for_context(&c, 4));
     }
 }

@@ -1,6 +1,8 @@
 //! The serving engine: a thread pool of scoring workers fed through
 //! context-affinity shards, with dynamic batching, per-worker context
-//! caches, hot model swapping, and latency metrics.
+//! caches, hot model swapping, latency metrics, and an overload plane
+//! (admission control, deadline-aware flushing, degraded-mode slates —
+//! see [`crate::serve::overload`]).
 //!
 //! Python is nowhere near this path: workers score through the native
 //! Rust forward pass (SIMD-dispatched) against `Arc`-snapshotted weight
@@ -8,17 +10,20 @@
 //! feature-gated `runtime` module for cross-validation deployments.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::ServeConfig;
+use crate::config::{Architecture, ServeConfig, ShedPolicy};
 use crate::model::Workspace;
-use crate::serve::batcher::DynamicBatcher;
+use crate::serve::batcher::{context_groups, ContextGroup, DynamicBatcher};
 use crate::serve::context_cache::ContextCache;
+use crate::serve::overload::{
+    BoundedQueue, DegradeLevel, OverloadController, Pop, Push,
+};
 use crate::serve::router::Router;
-use crate::serve::{Request, Response};
+use crate::serve::{Request, Response, ServeError, ShedReason};
 use crate::util::histogram::LatencyHistogram;
 
 /// Aggregated serving statistics.
@@ -40,6 +45,23 @@ pub struct ServeStats {
     /// worker's last scored batch).
     pub cache_entries: u64,
     pub errors: u64,
+    /// Requests rejected at submit (`reject-new` against a full queue).
+    pub shed_rejected: u64,
+    /// Admitted requests later evicted by a newer one (`drop-oldest`).
+    pub shed_dropped: u64,
+    /// Admitted requests whose SLO budget ran out before scoring; they
+    /// were answered with a deadline error instead of burning kernel
+    /// time (their waits feed the overload controller but NOT the
+    /// served-latency histogram).
+    pub deadline_expired: u64,
+    /// Degradation-ladder transitions (both directions, all workers).
+    pub degraded_transitions: u64,
+    /// Current degradation rung, worst across workers (gauge:
+    /// 0 = full, 1 = truncate, 2 = ffm, 3 = lr).
+    pub degrade_level: u64,
+    /// Jobs sitting in worker queues right now (gauge, racy by nature).
+    pub queue_depth: u64,
+    /// Latency of requests that reached scoring (shed/expired excluded).
     pub latency: Option<LatencyHistogram>,
 }
 
@@ -52,12 +74,36 @@ impl ServeStats {
             self.cache_hits as f64 / t as f64
         }
     }
+
+    /// Total sheds, both reasons.
+    pub fn shed(&self) -> u64 {
+        self.shed_rejected + self.shed_dropped
+    }
+
+    /// Human label of the [`degrade_level`](Self::degrade_level) gauge.
+    pub fn degrade_label(&self) -> &'static str {
+        DegradeLevel::LADDER
+            .get(self.degrade_level as usize)
+            .copied()
+            .unwrap_or(DegradeLevel::Full)
+            .label()
+    }
 }
 
 struct Job {
     req: Request,
     enqueued: Instant,
-    reply: SyncSender<Result<Response, String>>,
+    /// SLO expiry stamped at admission (None when the SLO is disabled).
+    deadline: Option<Instant>,
+    reply: SyncSender<Result<Response, ServeError>>,
+}
+
+/// Per-request batcher tag: everything the scorer needs to answer and
+/// account for a request after its `Request` was consumed.
+struct JobTag {
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    reply: SyncSender<Result<Response, ServeError>>,
 }
 
 struct WorkerShared {
@@ -67,39 +113,72 @@ struct WorkerShared {
 /// Clonable request-submission handle onto a running engine.
 ///
 /// The deployment plane's traffic drivers run on their own threads;
-/// each owns a `ServeClient` clone (the worker senders are `Send` but
-/// sharing one engine reference across threads is not required this
-/// way).  Clones may outlive [`ServingEngine::shutdown`]: workers exit
-/// on a stop flag rather than channel closure, and any submit after
-/// shutdown returns an error instead of hanging.
+/// each owns a `ServeClient` clone.  Clones may outlive
+/// [`ServingEngine::shutdown`]: the worker queues are closed on
+/// shutdown, so any submit through a leftover clone fails with
+/// [`ServeError::ShutDown`] instead of hanging.
 #[derive(Clone)]
 pub struct ServeClient {
     router: Router,
-    senders: Vec<SyncSender<Job>>,
+    queues: Vec<Arc<BoundedQueue<Job>>>,
     stop: Arc<AtomicBool>,
+    shed_policy: ShedPolicy,
+    /// SLO budget stamped onto each job (None disables deadlines).
+    slo: Option<Duration>,
+    shed_rejected: Arc<AtomicU64>,
+    shed_dropped: Arc<AtomicU64>,
 }
 
 impl ServeClient {
     /// Submit a request; returns the reply channel.
+    ///
+    /// Never blocks on a saturated engine: a full worker queue sheds
+    /// per the configured [`ShedPolicy`] — either this request bounces
+    /// with [`ServeError::Shed`] (`reject-new`) or the queue's oldest
+    /// waiter is evicted to make room and ITS reply channel gets the
+    /// shed error (`drop-oldest`).
     pub fn submit(
         &self,
         req: Request,
-    ) -> Result<Receiver<Result<Response, String>>, String> {
+    ) -> Result<Receiver<Result<Response, ServeError>>, ServeError> {
         if self.stop.load(Ordering::Acquire) {
-            return Err("engine is shut down".to_string());
+            return Err(ServeError::ShutDown);
         }
-        let shard = self.router.shard_for(&req) % self.senders.len();
+        // Context-affinity dispatch: the engine derives the router's
+        // shard count from the worker count, so `shard_for` IS the
+        // worker index — no second modulo re-scrambling the pinned
+        // context→shard assignment.
+        debug_assert_eq!(self.router.shards, self.queues.len());
+        let shard = self.router.shard_for(&req);
+        let now = Instant::now();
         let (reply, rx) = sync_channel(1);
-        self.senders[shard]
-            .send(Job { req, enqueued: Instant::now(), reply })
-            .map_err(|_| "engine is shut down".to_string())?;
-        Ok(rx)
+        let job = Job {
+            req,
+            enqueued: now,
+            deadline: self.slo.map(|d| now + d),
+            reply,
+        };
+        match self.queues[shard].push(job, self.shed_policy) {
+            Push::Admitted => Ok(rx),
+            Push::AdmittedDroppingOldest(evicted) => {
+                self.shed_dropped.fetch_add(1, Ordering::Relaxed);
+                let _ = evicted
+                    .reply
+                    .send(Err(ServeError::Shed(ShedReason::DroppedOldest)));
+                Ok(rx)
+            }
+            Push::Rejected(_) => {
+                self.shed_rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::Shed(ShedReason::QueueFull))
+            }
+            Push::Closed(_) => Err(ServeError::ShutDown),
+        }
     }
 
     /// Score a request synchronously.
-    pub fn score(&self, req: Request) -> Result<Response, String> {
+    pub fn score(&self, req: Request) -> Result<Response, ServeError> {
         let rx = self.submit(req)?;
-        rx.recv().map_err(|_| "worker dropped reply".to_string())?
+        rx.recv().map_err(|_| ServeError::ShutDown)?
     }
 }
 
@@ -117,15 +196,22 @@ pub struct ServingEngine {
 
 impl ServingEngine {
     /// Spawn `cfg.workers` scoring threads.
+    ///
+    /// The engine re-derives the router's shard count from the worker
+    /// count ([`Router::with_shards`]): a mismatched shard count would
+    /// need a second modulo at dispatch, silently re-scrambling the
+    /// pinned context→shard affinity that keeps repeated contexts on
+    /// one worker's cache.
     pub fn start(router: Router, cfg: ServeConfig) -> Self {
         let workers_n = cfg.workers.max(1);
+        let router = router.with_shards(workers_n);
         let cache_epoch = Arc::new(AtomicU64::new(0));
         let stop = Arc::new(AtomicBool::new(false));
-        let mut senders = Vec::new();
+        let mut queues = Vec::new();
         let mut workers = Vec::new();
         let mut shared = Vec::new();
         for w in 0..workers_n {
-            let (tx, rx) = sync_channel::<Job>(4096);
+            let queue = Arc::new(BoundedQueue::new(cfg.queue_depth.max(1)));
             let sh = Arc::new(Mutex::new(WorkerShared {
                 stats: ServeStats { latency: Some(LatencyHistogram::new()), ..Default::default() },
             }));
@@ -133,21 +219,30 @@ impl ServingEngine {
             let cfg = cfg.clone();
             let sh2 = sh.clone();
             let epoch = cache_epoch.clone();
-            let stop2 = stop.clone();
+            let q2 = queue.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("fw-serve-{w}"))
-                .spawn(move || worker_loop(rx, router, cfg, sh2, epoch, stop2))
+                .spawn(move || worker_loop(q2, router, cfg, sh2, epoch))
                 .expect("spawn worker");
-            senders.push(tx);
+            queues.push(queue);
             workers.push(handle);
             shared.push(sh);
         }
-        let client = ServeClient { router: router.clone(), senders, stop };
+        let client = ServeClient {
+            router: router.clone(),
+            queues,
+            stop,
+            shed_policy: cfg.shed_policy,
+            slo: (cfg.request_slo_us > 0)
+                .then(|| Duration::from_micros(cfg.request_slo_us)),
+            shed_rejected: Arc::new(AtomicU64::new(0)),
+            shed_dropped: Arc::new(AtomicU64::new(0)),
+        };
         ServingEngine { router, cfg, client, workers, shared, cache_epoch }
     }
 
     /// Score a request synchronously.
-    pub fn score(&self, req: Request) -> Result<Response, String> {
+    pub fn score(&self, req: Request) -> Result<Response, ServeError> {
         self.client.score(req)
     }
 
@@ -155,7 +250,7 @@ impl ServingEngine {
     pub fn submit(
         &self,
         req: Request,
-    ) -> Result<Receiver<Result<Response, String>>, String> {
+    ) -> Result<Receiver<Result<Response, ServeError>>, ServeError> {
         self.client.submit(req)
     }
 
@@ -171,8 +266,8 @@ impl ServingEngine {
     /// unreachable the moment [`crate::serve::ModelHandle::swap`] bumps
     /// the version ("stale partials must never be served").  The epoch
     /// bump reclaims their memory immediately: any batch scored after a
-    /// submit that follows this call sees the new epoch (channel send /
-    /// receive orders the Release bump before the Acquire load).
+    /// submit that follows this call sees the new epoch (queue push /
+    /// pop orders the Release bump before the Acquire load).
     pub fn invalidate_caches(&self) {
         self.cache_epoch.fetch_add(1, Ordering::Release);
     }
@@ -191,11 +286,26 @@ impl ServingEngine {
             out.cache_misses += s.stats.cache_misses;
             out.cache_entries += s.stats.cache_entries;
             out.errors += s.stats.errors;
+            out.deadline_expired += s.stats.deadline_expired;
+            out.degraded_transitions += s.stats.degraded_transitions;
+            out.degrade_level = out.degrade_level.max(s.stats.degrade_level);
             if let (Some(a), Some(b)) = (out.latency.as_mut(), s.stats.latency.as_ref()) {
                 a.merge(b);
             }
         }
+        out.shed_rejected = self.client.shed_rejected.load(Ordering::Relaxed);
+        out.shed_dropped = self.client.shed_dropped.load(Ordering::Relaxed);
+        out.queue_depth = self.client.queues.iter().map(|q| q.len() as u64).sum();
         out
+    }
+
+    /// Per-worker statistics snapshots, indexed by worker/shard id
+    /// (affinity observability: which worker served which context).
+    pub fn worker_stats(&self) -> Vec<ServeStats> {
+        self.shared
+            .iter()
+            .map(|sh| sh.lock().expect("stats lock").stats.clone())
+            .collect()
     }
 
     pub fn config(&self) -> &ServeConfig {
@@ -204,13 +314,18 @@ impl ServingEngine {
 
     /// Drain queues, join workers, then report final statistics.
     ///
-    /// Robust against leaked [`ServeClient`] clones: workers exit on
-    /// the stop flag (draining what is already queued) even while
-    /// clones keep the input channels open; later submits through a
-    /// leftover clone fail with an error rather than hanging.
+    /// Prompt regardless of linger configuration: closing the worker
+    /// queues wakes every parked worker immediately (no riding out the
+    /// full `max_wait` linger), yet closed queues still hand out
+    /// whatever was admitted before the close, so accepted work is
+    /// drained, never dropped.  Leaked [`ServeClient`] clones can't
+    /// hold the engine open — their submits bounce off the closed
+    /// queues with [`ServeError::ShutDown`].
     pub fn shutdown(mut self) -> ServeStats {
         self.client.stop.store(true, Ordering::Release);
-        self.client.senders.clear(); // closes channels unless clones remain
+        for q in &self.client.queues {
+            q.close();
+        }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -228,59 +343,49 @@ fn sync_cache_epoch(epoch: &AtomicU64, seen: &mut u64, cache: &mut ContextCache)
 }
 
 fn worker_loop(
-    rx: Receiver<Job>,
+    queue: Arc<BoundedQueue<Job>>,
     router: Router,
     cfg: ServeConfig,
     shared: Arc<Mutex<WorkerShared>>,
     epoch: Arc<AtomicU64>,
-    stop: Arc<AtomicBool>,
 ) {
-    let mut batcher: DynamicBatcher<(Instant, SyncSender<Result<Response, String>>)> =
+    let mut batcher: DynamicBatcher<JobTag> =
         DynamicBatcher::new(cfg.max_batch, Duration::from_micros(cfg.max_wait_us));
     let mut cache = ContextCache::new(cfg.context_cache_entries);
     let mut seen_epoch = epoch.load(Ordering::Acquire);
     let mut ws = Workspace::new();
+    let mut ctl = OverloadController::from_slo_us(cfg.request_slo_us);
     loop {
         let wait = batcher
             .time_until_deadline()
             .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(wait) {
-            Ok(job) => {
-                let tag = (job.enqueued, job.reply);
+        match queue.pop_timeout(wait) {
+            Pop::Item(job) => {
+                let tag = JobTag {
+                    enqueued: job.enqueued,
+                    deadline: job.deadline,
+                    reply: job.reply,
+                };
                 if let Some(batch) = batcher.push(job.req, tag) {
                     sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                    score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
+                    score_batch(batch, &router, &cfg, &mut cache, &mut ws, &mut ctl, &shared);
                 }
             }
-            Err(RecvTimeoutError::Timeout) => {
-                if stop.load(Ordering::Acquire) {
-                    // shutdown with client clones still alive: drain
-                    // whatever is already queued, then exit
-                    while let Ok(job) = rx.try_recv() {
-                        let tag = (job.enqueued, job.reply);
-                        if let Some(batch) = batcher.push(job.req, tag) {
-                            sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                            score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
-                        }
-                    }
-                    if let Some(batch) = batcher.drain() {
-                        sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                        score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
-                    }
-                    return;
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => {
+            Pop::TimedOut => {}
+            Pop::Closed => {
+                // shutdown: the close already drained the queue into us
+                // (Pop::Closed only fires on closed AND empty) — flush
+                // what's still lingering in the batcher and exit
                 if let Some(batch) = batcher.drain() {
                     sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                    score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
+                    score_batch(batch, &router, &cfg, &mut cache, &mut ws, &mut ctl, &shared);
                 }
                 return;
             }
         }
         if let Some(batch) = batcher.poll_deadline() {
             sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-            score_batch(batch, &router, &cfg, &mut cache, &mut ws, &shared);
+            score_batch(batch, &router, &cfg, &mut cache, &mut ws, &mut ctl, &shared);
         }
     }
 }
@@ -332,21 +437,53 @@ pub fn score_requests_coalesced_with(
     ws: &mut Workspace,
     max_group_candidates: usize,
     requests: &[Request],
-    mut emit: impl FnMut(usize, Result<Response, String>),
+    emit: impl FnMut(usize, Result<Response, ServeError>),
+) -> CoalescePlan {
+    let groups = context_groups(requests.iter());
+    score_groups_with(router, cache, ws, max_group_candidates, None, requests, &groups, emit)
+}
+
+/// The group-scoring core behind [`score_requests_coalesced_with`]:
+/// takes the context groups PRE-COMPUTED (and possibly re-ordered or
+/// member-filtered — the deadline scheduler sorts groups by their
+/// oldest member's remaining budget and strips expired members first)
+/// plus an optional architecture cap (the degraded-mode ladder rung;
+/// `None` serves each model as configured — bit-neutral).
+///
+/// `emit` fires exactly once per request present in `groups`, in group
+/// order, member order within a group.  Requests absent from `groups`
+/// are the caller's to answer.
+#[allow(clippy::too_many_arguments)]
+pub fn score_groups_with(
+    router: &Router,
+    cache: &mut ContextCache,
+    ws: &mut Workspace,
+    max_group_candidates: usize,
+    arch_cap: Option<Architecture>,
+    requests: &[Request],
+    groups: &[ContextGroup],
+    mut emit: impl FnMut(usize, Result<Response, ServeError>),
 ) -> CoalescePlan {
     let mut plan = CoalescePlan::default();
     let mut scores: Vec<f32> = Vec::new();
-    for group in crate::serve::batcher::context_groups(requests.iter()) {
+    for group in groups {
+        let Some(&first_idx) = group.members.first() else { continue };
         plan.groups += 1;
         if group.members.len() > 1 {
             plan.coalesced_requests += group.members.len() as u64;
         }
-        let first = &requests[group.members[0]];
+        let first = &requests[first_idx];
         let handle = match router.resolve(&first.model) {
             Some(h) => h,
             None => {
                 for &i in &group.members {
-                    emit(i, Err(format!("unknown model '{}'", first.model)));
+                    emit(
+                        i,
+                        Err(ServeError::Scoring(format!(
+                            "unknown model '{}'",
+                            first.model
+                        ))),
+                    );
                 }
                 continue;
             }
@@ -354,7 +491,12 @@ pub fn score_requests_coalesced_with(
         let (version, model) = handle.load_versioned();
         if first.context.len() >= model.cfg.fields {
             for &i in &group.members {
-                emit(i, Err("context covers all fields; no candidate slots".into()));
+                emit(
+                    i,
+                    Err(ServeError::Scoring(
+                        "context covers all fields; no candidate slots".into(),
+                    )),
+                );
             }
             continue;
         }
@@ -366,10 +508,10 @@ pub fn score_requests_coalesced_with(
             match requests[i].candidates.iter().find(|c| c.len() != need) {
                 Some(cand) => emit(
                     i,
-                    Err(format!(
+                    Err(ServeError::Scoring(format!(
                         "candidate has {} slots, model needs {need}",
                         cand.len(),
-                    )),
+                    ))),
                 ),
                 None => valid.push(i),
             }
@@ -377,7 +519,9 @@ pub fn score_requests_coalesced_with(
         if valid.is_empty() {
             continue;
         }
-        // ONE context-partial lookup/insert per group.
+        // ONE context-partial lookup/insert per group.  The partial is
+        // rung-independent, so one cache entry serves every degrade
+        // level.
         let cp =
             cache.get_or_compute_named(&model, &first.model, version, &first.context);
         // Union slate: every valid member's candidates, request order.
@@ -388,7 +532,8 @@ pub fn score_requests_coalesced_with(
                 slate.push(cand.as_slice());
             }
         }
-        model.predict_batch_with_partial_capped(
+        model.predict_batch_with_partial_capped_as(
+            arch_cap.unwrap_or(model.cfg.arch),
             &cp,
             &slate,
             max_group_candidates,
@@ -414,8 +559,8 @@ pub fn score_requests_coalesced(
     ws: &mut Workspace,
     max_group_candidates: usize,
     requests: &[Request],
-) -> (Vec<Result<Response, String>>, CoalescePlan) {
-    let mut results: Vec<Option<Result<Response, String>>> = Vec::new();
+) -> (Vec<Result<Response, ServeError>>, CoalescePlan) {
+    let mut results: Vec<Option<Result<Response, ServeError>>> = Vec::new();
     results.resize_with(requests.len(), || None);
     let plan = score_requests_coalesced_with(
         router,
@@ -432,45 +577,117 @@ pub fn score_requests_coalesced(
     (results, plan)
 }
 
+/// Score one flushed batch through the overload plane:
+///
+/// 1. **Degraded truncation** — while the worker's overload controller
+///    sits at [`DegradeLevel::Truncate`] or below, candidate slates are
+///    truncated to `degraded_max_candidates` before any kernel work.
+/// 2. **Deadline scheduling** — with an SLO configured, context groups
+///    are scored oldest-member-first (the group closest to blowing its
+///    budget goes first) and members whose deadline already passed are
+///    fast-failed with [`ServeError::DeadlineExpired`] instead of
+///    burning kernel time.  Expired waits feed the overload controller
+///    (a wait that blew the SLO is the strongest overload signal) but
+///    NOT the served-latency histogram.
+/// 3. **Degraded architecture** — at [`DegradeLevel::Ffm`]/
+///    [`DegradeLevel::Lr`] the group scorer drops down the
+///    DeepFFM→FFM→LR ladder via the regressor's arch-override path.
+///
+/// With `request_slo_us == 0` (the default) every step above is
+/// disabled and this is bit-identical to the pre-overload engine:
+/// first-seen group order, no truncation, models served as configured.
 fn score_batch(
-    batch: crate::serve::batcher::Batch<(Instant, SyncSender<Result<Response, String>>)>,
+    batch: crate::serve::batcher::Batch<JobTag>,
     router: &Router,
     cfg: &ServeConfig,
     cache: &mut ContextCache,
     ws: &mut Workspace,
+    ctl: &mut OverloadController,
     shared: &Arc<Mutex<WorkerShared>>,
 ) {
     let mut candidates = 0u64;
     let mut errors = 0u64;
+    let mut expired = 0u64;
     let mut hist = LatencyHistogram::new();
     let (hits0, misses0) = (cache.hits, cache.misses);
 
-    #[allow(clippy::type_complexity)]
-    let (reqs, tags): (
-        Vec<Request>,
-        Vec<(Instant, SyncSender<Result<Response, String>>)>,
-    ) = batch.items.into_iter().unzip();
+    let (mut reqs, tags): (Vec<Request>, Vec<JobTag>) =
+        batch.items.into_iter().unzip();
+
+    let level = ctl.level();
+    if level.truncates() {
+        let cap = cfg.degraded_max_candidates.max(1);
+        for r in &mut reqs {
+            r.candidates.truncate(cap);
+        }
+    }
+
+    let mut groups = context_groups(reqs.iter());
+    if ctl.enabled() {
+        // Deadline-aware order: the group whose oldest member has the
+        // least remaining budget is scored first.  (Same SLO for every
+        // request ⇒ oldest enqueue == smallest remaining budget.)
+        groups.sort_by_key(|g| {
+            g.members.iter().map(|&i| tags[i].enqueued).min()
+        });
+    }
+
+    let mut tags: Vec<Option<JobTag>> = tags.into_iter().map(Some).collect();
+
+    if ctl.enabled() {
+        // Fast-fail members that expired while queued — before any
+        // kernel work, so a flood of dead requests costs near zero.
+        let now = Instant::now();
+        for g in &mut groups {
+            g.members.retain(|&i| {
+                let keep = tags[i]
+                    .as_ref()
+                    .expect("deadline pass runs before scoring")
+                    .deadline
+                    .map_or(true, |d| d > now);
+                if !keep {
+                    let t = tags[i].take().expect("taken once");
+                    let waited = t.enqueued.elapsed();
+                    ctl.observe_ns(waited.as_nanos().min(u64::MAX as u128) as u64);
+                    expired += 1;
+                    let _ = t.reply.send(Err(ServeError::DeadlineExpired {
+                        waited_us: waited.as_micros().min(u64::MAX as u128) as u64,
+                        slo_us: cfg.request_slo_us,
+                    }));
+                }
+                keep
+            });
+            g.candidates =
+                g.members.iter().map(|&i| reqs[i].candidates.len()).sum();
+        }
+        groups.retain(|g| !g.members.is_empty());
+    }
+
     // Streamed scatter: each request is answered the moment its group
     // completes, so requests in early groups don't pay the later
     // groups' scoring time in (real or recorded) latency.
-    let mut tags: Vec<_> = tags.into_iter().map(Some).collect();
-    let plan = score_requests_coalesced_with(
+    let plan = score_groups_with(
         router,
         cache,
         ws,
         cfg.max_group_candidates,
+        level.arch_cap(),
         &reqs,
+        &groups,
         |i, result| {
             match &result {
                 Ok(resp) => candidates += resp.scores.len() as u64,
                 Err(_) => errors += 1,
             }
-            let (enqueued, reply) =
-                tags[i].take().expect("planner emits each request once");
-            hist.record(enqueued.elapsed());
-            let _ = reply.send(result); // receiver may have gone away
+            let t = tags[i].take().expect("planner emits each request once");
+            let waited = t.enqueued.elapsed();
+            hist.record(waited);
+            ctl.observe_ns(waited.as_nanos().min(u64::MAX as u128) as u64);
+            let _ = t.reply.send(result); // receiver may have gone away
         },
     );
+
+    ctl.decide();
 
     let mut sh = shared.lock().expect("stats lock");
     sh.stats.requests += reqs.len() as u64;
@@ -479,6 +696,9 @@ fn score_batch(
     sh.stats.groups += plan.groups;
     sh.stats.coalesced_requests += plan.coalesced_requests;
     sh.stats.errors += errors;
+    sh.stats.deadline_expired += expired;
+    sh.stats.degraded_transitions = ctl.transitions;
+    sh.stats.degrade_level = ctl.level() as u64;
     sh.stats.cache_hits += cache.hits - hits0;
     sh.stats.cache_misses += cache.misses - misses0;
     sh.stats.cache_entries = cache.entries() as u64;
@@ -505,7 +725,7 @@ mod tests {
             max_batch: 64,
             max_wait_us: 100,
             context_cache_entries: cache,
-            max_group_candidates: 1024,
+            ..ServeConfig::default()
         };
         let gen = TraceGenerator::new(7, 6, 3, 1 << 10, 4);
         (ServingEngine::start(router, serve_cfg), gen)
@@ -525,13 +745,18 @@ mod tests {
         assert_eq!(stats.requests, 200);
         assert!(stats.candidates >= 200);
         assert!(stats.cache_hits + stats.cache_misses >= 200);
+        // the overload plane is disarmed by default
+        assert_eq!(stats.shed(), 0);
+        assert_eq!(stats.deadline_expired, 0);
+        assert_eq!(stats.degraded_transitions, 0);
+        assert_eq!(stats.degrade_level, 0);
     }
 
     #[test]
     fn unknown_model_is_an_error_not_a_crash() {
         let (eng, mut gen) = engine(1, 0);
         let req = gen.next_request("nope");
-        assert!(eng.score(req).is_err());
+        assert!(matches!(eng.score(req), Err(ServeError::Scoring(_))));
         let stats = eng.shutdown();
         assert_eq!(stats.errors, 1);
     }
@@ -571,7 +796,7 @@ mod tests {
                 max_batch: 8,
                 max_wait_us: 50,
                 context_cache_entries: 64,
-                max_group_candidates: 1024,
+                ..ServeConfig::default()
             },
         );
         let mut gen = TraceGenerator::new(9, 4, 2, 256, 2);
@@ -607,7 +832,7 @@ mod tests {
                 max_batch: 8,
                 max_wait_us: 50,
                 context_cache_entries: 1024,
-                max_group_candidates: 1024,
+                ..ServeConfig::default()
             },
         );
         let mut gen = TraceGenerator::new(17, 6, 3, 1 << 10, 4);
@@ -678,12 +903,262 @@ mod tests {
         let (eng, mut gen) = engine(2, 64);
         let leaked = eng.client();
         eng.score(gen.next_request("ctr")).unwrap();
-        // the live clone keeps the channels open; workers must exit on
-        // the stop flag anyway
+        // the live clone keeps queue Arcs alive; workers must exit on
+        // queue close anyway
         let stats = eng.shutdown();
         assert_eq!(stats.requests, 1);
         // post-shutdown submits through the leftover clone fail cleanly
-        assert!(leaked.score(gen.next_request("ctr")).is_err());
+        assert_eq!(
+            leaked.score(gen.next_request("ctr")).unwrap_err(),
+            ServeError::ShutDown
+        );
+    }
+
+    #[test]
+    fn shutdown_is_prompt_despite_long_linger() {
+        // Regression: workers used to notice the stop flag only on the
+        // recv timeout arm, so a pending batch meant shutdown waited
+        // out the FULL linger.  With a 5s linger and a queued request,
+        // shutdown must still return quickly — and still answer the
+        // queued request (drain, not drop).
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let router = Router::new(1);
+        router.register("ctr", ModelHandle::new(Regressor::new(&cfg)));
+        let eng = ServingEngine::start(
+            router,
+            ServeConfig {
+                workers: 1,
+                max_batch: 1_000_000, // never flush on Full
+                max_wait_us: 5_000_000, // 5s linger
+                context_cache_entries: 64,
+                ..ServeConfig::default()
+            },
+        );
+        let _leaked = eng.client(); // keep channels open like a driver would
+        let mut gen = TraceGenerator::new(7, 6, 3, 1 << 10, 4);
+        let rx = eng.submit(gen.next_request("ctr")).unwrap();
+        // give the worker a beat to pull the job into its batcher
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        let stats = eng.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "shutdown rode out the linger: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(stats.requests, 1, "queued request was dropped");
+        assert!(rx.recv().unwrap().is_ok(), "queued request went unanswered");
+    }
+
+    #[test]
+    fn context_affinity_pins_contexts_to_derived_shards() {
+        // Regression: with router.shards != workers the old double
+        // modulo re-scrambled shard_for's pinned assignment.  The
+        // engine must derive the shard count from the worker count so
+        // dispatch IS shard_for_context(ctx, workers).
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let router = Router::new(7); // deliberately wrong shard count
+        router.register("ctr", ModelHandle::new(Regressor::new(&cfg)));
+        let workers = 4;
+        let eng = ServingEngine::start(
+            router,
+            ServeConfig { workers, max_batch: 8, max_wait_us: 50, ..ServeConfig::default() },
+        );
+        assert_eq!(eng.router.shards, workers);
+        let mut gen = TraceGenerator::new(23, 6, 3, 1 << 10, 4);
+        let donor = gen.next_request("ctr");
+        let want_shard =
+            Router::shard_for_context(&donor.context, workers);
+        for _ in 0..24 {
+            let mut r = gen.next_request("ctr");
+            r.context = donor.context.clone();
+            eng.score(r).unwrap();
+        }
+        let per_worker = eng.worker_stats();
+        for (w, s) in per_worker.iter().enumerate() {
+            if w == want_shard {
+                assert_eq!(s.requests, 24, "affinity shard missed traffic");
+            } else {
+                assert_eq!(s.requests, 0, "worker {w} stole affine traffic");
+            }
+        }
+        eng.shutdown();
+    }
+
+    #[test]
+    fn zero_candidate_requests_score_empty_and_coalesce() {
+        // An empty slate must come back Ok(scores: []) — alone, and as
+        // a member of a shared-context group — and must never flush a
+        // batch on its own (it contributes zero candidates).
+        let (eng, mut gen) = engine(1, 1024);
+        let mut lone = gen.next_request("ctr");
+        lone.candidates.clear();
+        assert_eq!(eng.score(lone).unwrap().scores, Vec::<f32>::new());
+
+        let donor = gen.next_request("ctr");
+        let mut empty = gen.next_request("ctr");
+        empty.context = donor.context.clone();
+        empty.candidates.clear();
+        let rx_full = eng.submit(donor.clone()).unwrap();
+        let rx_empty = eng.submit(empty).unwrap();
+        assert_eq!(
+            rx_full.recv().unwrap().unwrap().scores.len(),
+            donor.candidates.len()
+        );
+        assert_eq!(rx_empty.recv().unwrap().unwrap().scores, Vec::<f32>::new());
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.errors, 0);
+    }
+
+    /// Heavy-scoring engine for shed tests: fanout large enough that
+    /// one in-flight batch keeps the worker busy while submits flood a
+    /// depth-1 queue.
+    fn overload_engine(policy: ShedPolicy) -> (ServingEngine, TraceGenerator) {
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[16, 16]);
+        let router = Router::new(1);
+        router.register("ctr", ModelHandle::new(Regressor::new(&cfg)));
+        let serve_cfg = ServeConfig {
+            workers: 1,
+            max_batch: 1, // every request flushes (and scores) alone
+            max_wait_us: 50,
+            context_cache_entries: 0,
+            queue_depth: 1,
+            shed_policy: policy,
+            ..ServeConfig::default()
+        };
+        let gen = TraceGenerator::new(31, 6, 3, 1 << 10, 256);
+        (ServingEngine::start(router, serve_cfg), gen)
+    }
+
+    #[test]
+    fn reject_new_sheds_at_submit_and_serves_the_rest() {
+        let (eng, mut gen) = overload_engine(ShedPolicy::RejectNew);
+        let n = 200;
+        let mut rxs = Vec::new();
+        let mut shed = 0u64;
+        for _ in 0..n {
+            match eng.submit(gen.next_request("ctr")) {
+                Ok(rx) => rxs.push(rx),
+                Err(ServeError::Shed(ShedReason::QueueFull)) => shed += 1,
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+        // every admitted request is answered with real scores
+        for rx in rxs.iter() {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.scores.len(), 256);
+        }
+        let stats = eng.shutdown();
+        assert!(shed > 0, "queue_depth=1 under flood must shed");
+        assert_eq!(stats.shed_rejected, shed);
+        assert_eq!(stats.shed_dropped, 0);
+        assert_eq!(stats.requests + shed, n);
+        assert_eq!(stats.requests, rxs.len() as u64);
+    }
+
+    #[test]
+    fn drop_oldest_evicts_queued_requests_not_new_ones() {
+        let (eng, mut gen) = overload_engine(ShedPolicy::DropOldest);
+        let n = 200;
+        // every submit is ADMITTED under drop-oldest...
+        let rxs: Vec<_> = (0..n)
+            .map(|_| eng.submit(gen.next_request("ctr")).unwrap())
+            .collect();
+        // ...but some earlier victims got evicted and answered Shed
+        let mut served = 0u64;
+        let mut dropped = 0u64;
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Ok(resp) => {
+                    assert_eq!(resp.scores.len(), 256);
+                    served += 1;
+                }
+                Err(ServeError::Shed(ShedReason::DroppedOldest)) => dropped += 1,
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+        let stats = eng.shutdown();
+        assert!(dropped > 0, "depth-1 queue under flood must evict");
+        assert_eq!(served + dropped, n);
+        assert_eq!(stats.shed_dropped, dropped);
+        assert_eq!(stats.shed_rejected, 0);
+        assert_eq!(stats.requests, served);
+    }
+
+    #[test]
+    fn expired_requests_fast_fail_with_deadline_error() {
+        // SLO 1us, linger 5ms, Full flush unreachable: every request
+        // is guaranteed to expire in the queue and must come back as
+        // DeadlineExpired without touching the kernels.
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let router = Router::new(1);
+        router.register("ctr", ModelHandle::new(Regressor::new(&cfg)));
+        let eng = ServingEngine::start(
+            router,
+            ServeConfig {
+                workers: 1,
+                max_batch: 1_000_000,
+                max_wait_us: 5_000,
+                request_slo_us: 1,
+                ..ServeConfig::default()
+            },
+        );
+        let mut gen = TraceGenerator::new(37, 6, 3, 1 << 10, 4);
+        let rxs: Vec<_> = (0..20)
+            .map(|_| eng.submit(gen.next_request("ctr")).unwrap())
+            .collect();
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Err(ServeError::DeadlineExpired { waited_us, slo_us }) => {
+                    assert_eq!(slo_us, 1);
+                    assert!(waited_us >= 1);
+                }
+                other => panic!("expected deadline expiry, got {other:?}"),
+            }
+        }
+        let stats = eng.shutdown();
+        assert_eq!(stats.deadline_expired, 20);
+        assert_eq!(stats.requests, 20);
+        assert_eq!(stats.errors, 0, "expiries are not scoring errors");
+        // expired requests never reach the served-latency histogram
+        assert_eq!(stats.latency.unwrap().count(), 0);
+    }
+
+    #[test]
+    fn generous_slo_is_bit_neutral_with_deadline_machinery_armed() {
+        // With the SLO armed but generous, every request is in-SLO at
+        // DegradeLevel::Full: responses must be bitwise what the
+        // per-request partial path computes (the overload plane must
+        // not perturb admitted, in-SLO traffic).
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let reg = Regressor::new(&cfg);
+        let router = Router::new(1);
+        router.register("ctr", ModelHandle::new(reg.clone()));
+        let eng = ServingEngine::start(
+            router,
+            ServeConfig {
+                workers: 1,
+                max_batch: 64,
+                max_wait_us: 100,
+                request_slo_us: 10_000_000, // 10s: nothing expires
+                ..ServeConfig::default()
+            },
+        );
+        let mut gen = TraceGenerator::new(41, 6, 3, 1 << 10, 4);
+        let mut ws = Workspace::new();
+        for _ in 0..50 {
+            let req = gen.next_request("ctr");
+            let resp = eng.score(req.clone()).unwrap();
+            let cp = reg.context_partial(&req.context);
+            let mut want = Vec::new();
+            reg.predict_batch_with_partial(&cp, &req.candidates, &mut ws, &mut want);
+            assert_eq!(resp.scores, want, "armed-but-idle overload plane drifted");
+        }
+        let stats = eng.shutdown();
+        assert_eq!(stats.deadline_expired, 0);
+        assert_eq!(stats.degraded_transitions, 0);
+        assert_eq!(stats.degrade_level, 0);
     }
 
     #[test]
@@ -714,8 +1189,12 @@ mod tests {
         // groups: A{a, bad, a2}, B{b}, alien (model name splits groups)
         assert_eq!(plan.groups, 3);
         assert_eq!(plan.coalesced_requests, 3);
-        assert!(results[1].as_ref().unwrap_err().contains("2 slots"));
-        assert!(results[3].as_ref().unwrap_err().contains("unknown model"));
+        assert!(results[1].as_ref().unwrap_err().to_string().contains("2 slots"));
+        assert!(results[3]
+            .as_ref()
+            .unwrap_err()
+            .to_string()
+            .contains("unknown model"));
         // survivors match the per-request batched path bitwise
         let mut ws_ref = Workspace::new();
         for (i, req) in [(0usize, &a), (2, &b), (4, &a2)] {
@@ -807,6 +1286,37 @@ mod tests {
         for (a, b) in capped.iter().zip(&uncapped) {
             assert_eq!(a.as_ref().unwrap().scores, b.as_ref().unwrap().scores);
         }
+    }
+
+    #[test]
+    fn zero_candidate_member_scores_empty_in_coalesced_path() {
+        // A zero-candidate request inside a shared-context group gets
+        // Ok(scores: []) while its group-mates score normally; a
+        // whole-group-of-empties also comes back Ok.
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let reg = Regressor::new(&cfg);
+        let router = Router::new(1);
+        router.register("ctr", ModelHandle::new(reg.clone()));
+        let mut gen = TraceGenerator::new(91, 6, 3, 1 << 10, 4);
+        let full = gen.next_request("ctr");
+        let mut empty = gen.next_request("ctr");
+        empty.context = full.context.clone();
+        empty.candidates.clear();
+        let mut lone_empty = gen.next_request("ctr");
+        lone_empty.candidates.clear();
+        let reqs = vec![full.clone(), empty, lone_empty];
+        let mut cache = ContextCache::new(64);
+        let mut ws = Workspace::new();
+        let (results, plan) =
+            score_requests_coalesced(&router, &mut cache, &mut ws, 1024, &reqs);
+        assert_eq!(plan.groups, 2);
+        assert_eq!(results[1].as_ref().unwrap().scores, Vec::<f32>::new());
+        assert_eq!(results[2].as_ref().unwrap().scores, Vec::<f32>::new());
+        // the full group-mate scored bitwise the per-request path
+        let cp = reg.context_partial(&full.context);
+        let mut want = Vec::new();
+        reg.predict_batch_with_partial(&cp, &full.candidates, &mut ws, &mut want);
+        assert_eq!(results[0].as_ref().unwrap().scores, want);
     }
 
     #[test]

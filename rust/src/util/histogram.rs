@@ -74,7 +74,20 @@ impl LatencyHistogram {
         self.max_ns
     }
 
-    /// Approximate quantile (upper edge of the containing bucket).
+    /// Smallest recorded value (0 when nothing has been recorded — the
+    /// raw field's `u64::MAX` sentinel must never leak to callers).
+    pub fn min_ns(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    /// Approximate quantile (upper edge of the containing bucket,
+    /// clamped to the observed `max_ns` — the bucket edge can overshoot
+    /// the largest recorded value, and a printed p99 above the printed
+    /// max reads as corrupt metrics).
     pub fn quantile_ns(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -84,7 +97,8 @@ impl LatencyHistogram {
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
             if acc >= target.max(1) {
-                return self.lo_ns * self.growth.powi(i as i32 + 1);
+                return (self.lo_ns * self.growth.powi(i as i32 + 1))
+                    .min(self.max_ns as f64);
             }
         }
         self.max_ns as f64
@@ -168,5 +182,42 @@ mod tests {
         h.record_ns(u64::MAX / 2);
         assert_eq!(h.count(), 1);
         assert!(h.quantile_ns(1.0) > 0.0);
+    }
+
+    #[test]
+    fn quantiles_never_exceed_observed_max() {
+        // Regression: the containing bucket's upper edge used to leak
+        // through, so summary() could print p99 > max in one line.
+        let mut h = LatencyHistogram::new();
+        h.record_ns(1_234);
+        for q in [0.5, 0.9, 0.99, 1.0] {
+            assert!(
+                h.quantile_ns(q) <= 1_234.0,
+                "q{q} = {} exceeds max", h.quantile_ns(q)
+            );
+        }
+        h.record_ns(999_999);
+        assert!(h.quantile_ns(0.99) <= h.max_ns() as f64);
+    }
+
+    #[test]
+    fn min_tracked_and_empty_safe() {
+        // Regression: the raw field initializes to u64::MAX; an empty
+        // histogram must report 0, not the sentinel.
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.min_ns(), 0);
+        h.record_ns(5_000);
+        h.record_ns(70);
+        h.record_ns(9_000);
+        assert_eq!(h.min_ns(), 70);
+        // min survives a merge, including with an empty histogram
+        let mut other = LatencyHistogram::new();
+        other.merge(&h);
+        assert_eq!(other.min_ns(), 70);
+        other.record_ns(10);
+        let mut a = LatencyHistogram::new();
+        a.record_ns(500);
+        a.merge(&other);
+        assert_eq!(a.min_ns(), 10);
     }
 }

@@ -1,0 +1,141 @@
+//! Overload-plane soak: drive one worker far past saturation, watch
+//! degraded mode engage, then trickle traffic and watch it disengage.
+//!
+//! The invariants under test:
+//!
+//! 1. A flood beyond capacity makes queue waits blow the SLO; the
+//!    deadline pass fast-fails those requests (`DeadlineExpired`) and
+//!    their waits push the windowed p99 over the SLO, so the
+//!    hysteresis controller walks down the degrade ladder — visible in
+//!    `ServeStats` as `degraded_transitions`/`degrade_level` and at
+//!    the response level as truncated slates.
+//! 2. Served latency stays bounded near the SLO even mid-flood: the
+//!    deadline filter runs right before kernel work, so anything that
+//!    reaches the scorer waited less than the SLO and only pays one
+//!    batch of scoring on top.  Expired requests never pollute the
+//!    latency histogram.
+//! 3. When the flood stops, in-SLO trickle traffic re-arms the
+//!    controller back to `Full`: the ladder disengages and full slates
+//!    come back.
+
+use fwumious::config::{ModelConfig, ServeConfig, ShedPolicy};
+use fwumious::model::regressor::Regressor;
+use fwumious::serve::router::Router;
+use fwumious::serve::server::ServingEngine;
+use fwumious::serve::trace::TraceGenerator;
+use fwumious::serve::{ModelHandle, Request, ServeError};
+
+const FANOUT: usize = 64;
+const SLO_US: u64 = 10_000;
+const DEGRADED_CAP: usize = 8;
+
+#[test]
+fn degraded_mode_engages_under_flood_and_disengages_on_trickle() {
+    let cfg = ModelConfig::deep_ffm(6, 4, 1 << 12, &[16, 16]);
+    let reg = Regressor::new(&cfg);
+    let router = Router::new(1);
+    router.register("m", ModelHandle::new(reg));
+    let engine = ServingEngine::start(
+        router,
+        ServeConfig {
+            workers: 1,
+            max_batch: 256,
+            max_wait_us: 100,
+            context_cache_entries: 4_096,
+            queue_depth: 16_384,
+            shed_policy: ShedPolicy::RejectNew,
+            request_slo_us: SLO_US,
+            degraded_max_candidates: DEGRADED_CAP,
+            ..ServeConfig::default()
+        },
+    );
+
+    // Phase 1: flood.  Pre-generate so the burst hits the queue at
+    // submit speed, far faster than one worker can score 64-candidate
+    // DeepFFM slates — queue waits blow through the 10ms SLO.
+    let mut gen = TraceGenerator::new(0x50a4, 6, 3, cfg.buckets, FANOUT);
+    let flood: Vec<Request> = gen.take(8_000, "m");
+    let rxs: Vec<_> = flood
+        .into_iter()
+        .map(|r| engine.submit(r).expect("queue_depth covers the flood"))
+        .collect();
+    let mut served_flood = 0u64;
+    let mut expired = 0u64;
+    for rx in rxs {
+        match rx.recv().expect("worker replies") {
+            Ok(_) => served_flood += 1,
+            Err(ServeError::DeadlineExpired { waited_us, slo_us }) => {
+                assert!(waited_us >= slo_us, "expired early: {waited_us} < {slo_us}");
+                expired += 1;
+            }
+            Err(e) => panic!("unexpected flood error: {e}"),
+        }
+    }
+    assert_eq!(served_flood + expired, 8_000);
+    assert!(expired > 0, "flood never overran the SLO");
+
+    // Degraded mode must be ENGAGED and visible in the stats now.
+    // (Replies are emitted before the worker's stats update lands, so
+    // give the final batch's counters a moment to settle.)
+    let mut mid = engine.stats();
+    let settle = std::time::Instant::now();
+    while mid.deadline_expired != expired
+        && settle.elapsed() < std::time::Duration::from_secs(2)
+    {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        mid = engine.stats();
+    }
+    assert_eq!(mid.deadline_expired, expired);
+    assert!(
+        mid.degraded_transitions >= 1,
+        "flood produced no degrade transition"
+    );
+    assert!(
+        mid.degrade_level >= 1,
+        "flood left the engine at Full ({})",
+        mid.degrade_label()
+    );
+
+    // Phase 2: trickle.  Closed-loop, one request at a time — waits are
+    // linger + one small batch, far under the recovery threshold.
+    let mut lens = Vec::with_capacity(200);
+    for _ in 0..200 {
+        let resp = engine.score(gen.next_request("m")).expect("trickle serves");
+        lens.push(resp.scores.len());
+    }
+    // Entered degraded: the first trickle slate is truncated.
+    assert_eq!(
+        lens[0], DEGRADED_CAP,
+        "first trickle response should still be degraded"
+    );
+    // Left degraded: the ladder re-armed and full slates came back.
+    assert_eq!(
+        *lens.last().unwrap(),
+        FANOUT,
+        "slates never recovered to full fanout"
+    );
+
+    let stats = engine.shutdown();
+    assert_eq!(stats.errors, 0);
+    assert_eq!(
+        stats.degrade_level, 0,
+        "controller stuck at {} after trickle",
+        stats.degrade_label()
+    );
+    assert!(
+        stats.degraded_transitions >= 2,
+        "expected engage + disengage, saw {} transition(s)",
+        stats.degraded_transitions
+    );
+    // Histogram holds served requests only — expired never pollute it —
+    // and the deadline filter bounds served latency near the SLO (one
+    // batch of scoring on top of a sub-SLO wait).
+    let hist = stats.latency.as_ref().expect("latency histogram");
+    assert_eq!(hist.count(), stats.requests - stats.deadline_expired);
+    assert_eq!(hist.count(), served_flood + 200);
+    let p99_us = hist.quantile_ns(0.99) / 1e3;
+    assert!(
+        p99_us <= 3.0 * SLO_US as f64,
+        "served p99 {p99_us:.0}us not bounded near the {SLO_US}us SLO"
+    );
+}

@@ -49,6 +49,7 @@ fn online_rounds_through_quant_patch_channel_to_serving() {
             max_wait_us: 100,
             context_cache_entries: 1024,
             max_group_candidates: 1024,
+            ..ServeConfig::default()
         },
     );
 

@@ -40,6 +40,7 @@ fn cached_and_uncached_engines_agree() {
                 max_wait_us: 50,
                 context_cache_entries: cache,
                 max_group_candidates: 1024,
+                ..ServeConfig::default()
             },
         );
         let mut gen = TraceGenerator::new(trace_seed, 6, 3, 1 << 10, 4);
@@ -141,6 +142,7 @@ fn engine_sustains_load_across_many_workers() {
             max_wait_us: 100,
             context_cache_entries: 8192,
             max_group_candidates: 1024,
+            ..ServeConfig::default()
         },
     );
     let mut gen = TraceGenerator::new(12, 6, 3, 1 << 12, 8);
