@@ -15,6 +15,8 @@ use fwumious::config::ModelConfig;
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::eval::RollingAuc;
 use fwumious::model::regressor::Regressor;
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj, s};
 
 const N: usize = 80_000;
 const WINDOW: usize = 4_000;
@@ -40,8 +42,10 @@ fn trace(model: &mut dyn OnlineModel, spec: &DatasetSpec, buckets: u32) -> (Vec<
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     std::fs::create_dir_all("bench_out").expect("mkdir bench_out");
     let buckets = 1u32 << 16;
+    let mut rows = Vec::new();
     for spec in [
         DatasetSpec::criteo_like(),
         DatasetSpec::avazu_like(),
@@ -88,10 +92,32 @@ fn main() {
                 for (w, (p, o)) in points.iter().zip(&ood).enumerate() {
                     csv.push_str(&format!("{w},{engine},{ci},{p:.5},{}\n", *o as u8));
                 }
+                rows.push(obj(vec![
+                    ("dataset", s(&spec.name)),
+                    ("engine", s(engine)),
+                    ("lr", num(lr as f64)),
+                    ("avg_auc", num(avg)),
+                    ("final_auc", num(last)),
+                    ("windows", num(points.len() as f64)),
+                    (
+                        "ood_windows",
+                        num(ood.iter().filter(|&&o| o).count() as f64),
+                    ),
+                ]));
             }
         }
         std::fs::write(&path, csv).expect("write csv");
         println!("  wrote {path}\n");
     }
+    let path = bench_env::write_report(
+        "fig3_traces",
+        smoke,
+        vec![
+            ("examples", num(N as f64)),
+            ("window", num(WINDOW as f64)),
+            ("traces", arr(rows)),
+        ],
+    );
+    println!("report -> {path}");
     println!("expected: FW-DeepFFM final AUC >= others; OOD windows dent all traces.");
 }

@@ -19,6 +19,8 @@ use fwumious::feature::{hash, Example, FeatureSlot};
 use fwumious::model::regressor::Regressor;
 use fwumious::model::Workspace;
 use fwumious::serve::context_cache::ContextCache;
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj};
 use fwumious::util::rng::{Pcg32, Zipf};
 use fwumious::util::timer::median_time;
 
@@ -71,6 +73,7 @@ fn hash_slots(ids: &[u64], first_field: usize, mask: u32, out: &mut Vec<FeatureS
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = DatasetSpec::criteo_like();
     let buckets = 1u32 << 18;
     let mask = buckets - 1;
@@ -94,6 +97,7 @@ fn main() {
         "context universe", "no-cache", "cached", "speedup", "hit%"
     );
 
+    let mut rows = Vec::new();
     for (universe, zipf_s) in [(100u64, 1.3), (1_000, 1.2), (10_000, 1.1), (100_000, 1.05)] {
         let trace = gen_trace(requests, ctx_fields, cand_fields, fanout, universe, zipf_s);
 
@@ -150,7 +154,26 @@ fn main() {
             no_cache / cached,
             hit_rate * 100.0
         );
+        rows.push(obj(vec![
+            ("context_universe", num(universe as f64)),
+            ("zipf_s", num(zipf_s)),
+            ("no_cache_ns_per_candidate", num(per_cand_nc)),
+            ("cached_ns_per_candidate", num(per_cand_c)),
+            ("speedup", num(no_cache / cached)),
+            ("hit_rate", num(hit_rate)),
+        ]));
     }
-    println!("\nexpected: speedup > 1 throughout, largest for small/skewed context universes");
+    let path = bench_env::write_report(
+        "fig4_context_cache",
+        smoke,
+        vec![
+            ("requests", num(requests as f64)),
+            ("fanout", num(fanout as f64)),
+            ("context_fields", num(ctx_fields as f64)),
+            ("universes", arr(rows)),
+        ],
+    );
+    println!("\nreport -> {path}");
+    println!("expected: speedup > 1 throughout, largest for small/skewed context universes");
     println!("(the production regime: every request's candidates share one context).");
 }

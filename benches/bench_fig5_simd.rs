@@ -11,6 +11,8 @@ use fwumious::feature::Example;
 use fwumious::model::regressor::Regressor;
 use fwumious::model::Workspace;
 use fwumious::simd;
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj, s};
 use fwumious::util::timer::median_time;
 
 fn bench_forward(reg: &Regressor, data: &[Example], scalar: bool) -> f64 {
@@ -28,6 +30,7 @@ fn bench_forward(reg: &Regressor, data: &[Example], scalar: bool) -> f64 {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     println!("== Figure 5: SIMD-aware forward pass ==");
     println!("detected ISA: {}", simd::isa_name());
     if !simd::simd_active() {
@@ -40,6 +43,7 @@ fn main() {
     );
     // Larger K benefits more from vectorized latent dots; the hidden
     // layer matvec vectorizes in all variants.
+    let mut rows = Vec::new();
     for (k, hidden) in [(4usize, vec![16usize]), (8, vec![16]), (16, vec![32]), (8, vec![32, 32])] {
         let spec = DatasetSpec::criteo_like();
         let buckets = 1u32 << 18;
@@ -61,7 +65,20 @@ fn main() {
             vector / n as f64 * 1e9,
             scalar / vector
         );
+        rows.push(obj(vec![
+            ("latent_dim", num(k as f64)),
+            ("hidden", s(&format!("{hidden:?}"))),
+            ("scalar_ns_per_example", num(scalar / n as f64 * 1e9)),
+            ("simd_ns_per_example", num(vector / n as f64 * 1e9)),
+            ("speedup", num(scalar / vector)),
+        ]));
     }
-    println!("\npaper: ~20% serving speedup, up to 25% faster inference.");
+    let path = bench_env::write_report(
+        "fig5_simd",
+        smoke,
+        vec![("examples", num(n as f64)), ("shapes", arr(rows))],
+    );
+    println!("\nreport -> {path}");
+    println!("paper: ~20% serving speedup, up to 25% faster inference.");
     println!("expected: speedup ≥ 1.2x on the production-like shapes (grows with K).");
 }

@@ -12,8 +12,11 @@ use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::model::regressor::Regressor;
 use fwumious::model::Workspace;
 use fwumious::transfer::{SimulatedChannel, UpdateMode, UpdatePipeline};
+use fwumious::util::bench_env;
+use fwumious::util::json::num;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = DatasetSpec::criteo_like();
     let buckets = 1u32 << 18;
     let cfg = ModelConfig::deep_ffm(spec.fields(), 4, buckets, &[16]);
@@ -117,5 +120,23 @@ fn main() {
         "steady-state bandwidth saving of quantization on top of patching: {:.1}x",
         ch_only.total_bytes as f64 / ch_quant.total_bytes as f64
     );
+    let path = bench_env::write_report(
+        "fig6_transfer",
+        smoke,
+        vec![
+            ("raw_bytes", num(raw as f64)),
+            ("rounds", num(rounds as f64)),
+            ("patch_only_total_bytes", num(ch_only.total_bytes as f64)),
+            ("quant_patch_total_bytes", num(ch_quant.total_bytes as f64)),
+            ("patch_only_wire_seconds", num(ch_only.total_seconds)),
+            ("quant_patch_wire_seconds", num(ch_quant.total_seconds)),
+            (
+                "steady_state_saving",
+                num(ch_only.total_bytes as f64 / ch_quant.total_bytes as f64),
+            ),
+            ("mature_regime_ratio", num(mature_ratio)),
+        ],
+    );
+    println!("report -> {path}");
     println!("paper: ~10x smaller updates regularly produced when combined (non-linear gain).");
 }

@@ -18,7 +18,8 @@ use fwumious::fleet::{FleetConfig, FleetFabric, FleetMetrics, LinkSpec, Strategy
 use fwumious::model::regressor::Regressor;
 use fwumious::model::Workspace;
 use fwumious::transfer::UpdateMode;
-use fwumious::util::json::{arr, num, obj, s, Json};
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj, s};
 
 struct StrategyRun {
     inter_bytes: u64,
@@ -117,16 +118,16 @@ fn main() {
         ]));
     }
 
-    let report = obj(vec![
-        ("bench", s("fleet_fanout")),
-        ("smoke", Json::Bool(smoke)),
-        ("dcs", num(dcs as f64)),
-        ("replicas_per_dc", num(replicas as f64)),
-        ("rounds", num(rounds as f64)),
-        ("examples_per_round", num(per_round as f64)),
-        ("modes", arr(mode_rows)),
-    ]);
-    let path = "BENCH_fleet_fanout.json";
-    std::fs::write(path, report.to_string()).expect("write bench json");
+    let path = bench_env::write_report(
+        "fleet_fanout",
+        smoke,
+        vec![
+            ("dcs", num(dcs as f64)),
+            ("replicas_per_dc", num(replicas as f64)),
+            ("rounds", num(rounds as f64)),
+            ("examples_per_round", num(per_round as f64)),
+            ("modes", arr(mode_rows)),
+        ],
+    );
     println!("\ntree route ships 1/{replicas} of star's inter-DC bytes per DC; report -> {path}");
 }

@@ -35,7 +35,8 @@ use fwumious::serve::router::Router;
 use fwumious::serve::server::ServingEngine;
 use fwumious::serve::trace::TraceGenerator;
 use fwumious::serve::{ModelHandle, Request, ServeError};
-use fwumious::util::json::{arr, num, obj, s, Json};
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj};
 
 const FIELDS: usize = 6;
 const CTX_FIELDS: usize = 3;
@@ -206,37 +207,36 @@ fn main() {
     }
 
     let peak_goodput = arms.iter().map(|a| a.goodput_rps).fold(0.0, f64::max);
-    let report = obj(vec![
-        ("bench", s("overload")),
-        ("smoke", Json::Bool(smoke)),
-        ("simd", s(fwumious::simd::isa_name())),
-        ("workers", num(WORKERS as f64)),
-        ("fanout", num(FANOUT as f64)),
-        ("slo_us", num(SLO_US as f64)),
-        ("capacity_rps", num(capacity)),
-        ("peak_goodput_rps", num(peak_goodput)),
-        (
-            "arms",
-            arr(arms
-                .iter()
-                .map(|a| {
-                    obj(vec![
-                        ("multiplier", num(a.multiplier)),
-                        ("offered_rps", num(a.offered_rps)),
-                        ("submitted", num(a.submitted as f64)),
-                        ("served", num(a.served as f64)),
-                        ("shed", num(a.shed as f64)),
-                        ("expired", num(a.expired as f64)),
-                        ("goodput_rps", num(a.goodput_rps)),
-                        ("served_p99_us", num(a.p99_us)),
-                        ("degraded_transitions", num(a.degraded_transitions as f64)),
-                    ])
-                })
-                .collect()),
-        ),
-    ]);
-    let path = "BENCH_overload.json";
-    std::fs::write(path, report.to_string()).expect("write bench json");
+    let path = bench_env::write_report(
+        "overload",
+        smoke,
+        vec![
+            ("workers", num(WORKERS as f64)),
+            ("fanout", num(FANOUT as f64)),
+            ("slo_us", num(SLO_US as f64)),
+            ("capacity_rps", num(capacity)),
+            ("peak_goodput_rps", num(peak_goodput)),
+            (
+                "arms",
+                arr(arms
+                    .iter()
+                    .map(|a| {
+                        obj(vec![
+                            ("multiplier", num(a.multiplier)),
+                            ("offered_rps", num(a.offered_rps)),
+                            ("submitted", num(a.submitted as f64)),
+                            ("served", num(a.served as f64)),
+                            ("shed", num(a.shed as f64)),
+                            ("expired", num(a.expired as f64)),
+                            ("goodput_rps", num(a.goodput_rps)),
+                            ("served_p99_us", num(a.p99_us)),
+                            ("degraded_transitions", num(a.degraded_transitions as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ],
+    );
     println!("\nreport -> {path}");
 
     // The headline property, asserted after the report write so a

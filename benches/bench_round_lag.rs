@@ -20,7 +20,8 @@ use fwumious::config::{ModelConfig, ServeConfig};
 use fwumious::data::synthetic::DatasetSpec;
 use fwumious::deploy::{DeployConfig, DeploymentLoop};
 use fwumious::transfer::UpdateMode;
-use fwumious::util::json::{arr, num, obj, s, Json};
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj, s};
 use fwumious::util::math::{median, percentile};
 
 fn main() {
@@ -96,16 +97,16 @@ fn main() {
         dl.shutdown();
     }
 
-    let report = obj(vec![
-        ("bench", s("round_lag")),
-        ("smoke", Json::Bool(smoke)),
-        ("rounds", num(rounds as f64)),
-        ("examples_per_round", num(per_round as f64)),
-        ("train_threads", num(threads as f64)),
-        ("modes", arr(mode_rows)),
-    ]);
-    let path = "BENCH_round_lag.json";
-    std::fs::write(path, report.to_string()).expect("write bench json");
+    let path = bench_env::write_report(
+        "round_lag",
+        smoke,
+        vec![
+            ("rounds", num(rounds as f64)),
+            ("examples_per_round", num(per_round as f64)),
+            ("train_threads", num(threads as f64)),
+            ("modes", arr(mode_rows)),
+        ],
+    );
     println!(
         "\nexpected shape: raw lag ≈ full-file wire time; quant ≈ half of it;"
     );

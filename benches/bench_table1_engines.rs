@@ -21,6 +21,8 @@ use fwumious::config::ModelConfig;
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::feature::Example;
 use fwumious::model::regressor::Regressor;
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj, s};
 
 const BUCKET_BITS: u32 = 16;
 const TRAIN_N: usize = 60_000;
@@ -79,7 +81,9 @@ fn run_engine(
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let buckets = 1u32 << BUCKET_BITS;
+    let mut report_rows = Vec::new();
     println!("== Table 1: stability analysis (synthetic substitutes, window={WINDOW}) ==\n");
     for spec in [
         DatasetSpec::avazu_like(),
@@ -151,7 +155,16 @@ fn main() {
             let results = run_engine(&train, &test, make);
             let pooled = pooled_stats(&results);
             println!("{}", pooled.row(name));
-            rows.push((name.to_string(), t.elapsed().as_secs_f64()));
+            let secs = t.elapsed().as_secs_f64();
+            report_rows.push(obj(vec![
+                ("dataset", s(&spec.name)),
+                ("engine", s(name)),
+                ("pooled_avg_auc", num(pooled.avg)),
+                ("pooled_std_auc", num(pooled.std)),
+                ("test_auc", num(pooled.test)),
+                ("train_eval_seconds", num(secs)),
+            ]));
+            rows.push((name.to_string(), secs));
         }
         println!("    runtimes (train+eval, {} configs):", CONFIGS);
         for (name, secs) in &rows {
@@ -159,6 +172,18 @@ fn main() {
         }
         println!();
     }
+    let path = bench_env::write_report(
+        "table1_engines",
+        smoke,
+        vec![
+            ("train_examples", num(TRAIN_N as f64)),
+            ("test_examples", num(TEST_N as f64)),
+            ("window", num(WINDOW as f64)),
+            ("configs_pooled", num(CONFIGS as f64)),
+            ("engines", arr(report_rows)),
+        ],
+    );
+    println!("report -> {path}");
     println!("expected shape: FW engines above VW on pooled AUC with smaller std;");
     println!("VW-mlp ≈ VW-linear; DCNv2 competitive; FW-DeepFFM best-or-near-best test.");
 }

@@ -14,9 +14,12 @@ use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::model::regressor::Regressor;
 use fwumious::train::hogwild::{train_chunk, HogwildConfig};
 use fwumious::train::warmup::{warmup, WarmupConfig};
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj, s};
 use fwumious::util::timer::fmt_duration;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = DatasetSpec::criteo_like();
     let buckets = 1u32 << 18;
     let cfg = ModelConfig::deep_ffm(spec.fields(), 4, buckets, &[16]);
@@ -43,6 +46,7 @@ fn main() {
         delay,
     );
     let mut baseline = 0.0f64;
+    let mut warmup_rows = Vec::new();
     for (label, prefetch, threads) in [
         ("control (sync, 1 thread)", 0usize, 1usize),
         ("prefetch only", 4, 1),
@@ -64,6 +68,13 @@ fn main() {
             fmt_duration(rep.wall_seconds),
             baseline / rep.wall_seconds
         );
+        warmup_rows.push(obj(vec![
+            ("configuration", s(label)),
+            ("prefetch_depth", num(prefetch as f64)),
+            ("threads", num(threads as f64)),
+            ("wall_seconds", num(rep.wall_seconds)),
+            ("speedup", num(baseline / rep.wall_seconds)),
+        ]));
     }
 
     // ---- online-round arm: fixed in-memory chunk, 1 vs N threads
@@ -75,6 +86,7 @@ fn main() {
     // warm the weight tables first so the round is steady-state
     train_chunk(&mut reg, &chunk, HogwildConfig { threads: max_threads }, usize::MAX);
     let mut base = 0.0f64;
+    let mut round_rows = Vec::new();
     for threads in [1usize, 2, 4, max_threads] {
         let mut r = reg.clone();
         let stats = train_chunk(&mut r, &chunk, HogwildConfig { threads }, usize::MAX);
@@ -87,7 +99,25 @@ fn main() {
             fmt_duration(stats.wall_seconds),
             base / stats.wall_seconds
         );
+        round_rows.push(obj(vec![
+            ("threads", num(threads as f64)),
+            ("wall_seconds", num(stats.wall_seconds)),
+            ("examples_per_sec", num(stats.examples_per_sec())),
+            ("speedup", num(base / stats.wall_seconds)),
+        ]));
     }
-    println!("\npaper: warm-up 8d→23h (48 thr); online round 20m→4m (4 thr).");
+    let path = bench_env::write_report(
+        "table2_hogwild",
+        smoke,
+        vec![
+            ("warmup_examples", num(total as f64)),
+            ("round_examples", num(150_000.0)),
+            ("max_threads", num(max_threads as f64)),
+            ("warmup_arms", arr(warmup_rows)),
+            ("round_arms", arr(round_rows)),
+        ],
+    );
+    println!("\nreport -> {path}");
+    println!("paper: warm-up 8d→23h (48 thr); online round 20m→4m (4 thr).");
     println!("expected shape: multi-fold thread speedup; prefetch hides source latency.");
 }

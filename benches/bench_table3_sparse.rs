@@ -8,6 +8,8 @@ use fwumious::config::ModelConfig;
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::model::regressor::Regressor;
 use fwumious::model::Workspace;
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj};
 use fwumious::util::timer::median_time;
 
 fn train_time(cfg: &ModelConfig, sparse: bool, data: &[fwumious::feature::Example]) -> f64 {
@@ -24,6 +26,7 @@ fn train_time(cfg: &ModelConfig, sparse: bool, data: &[fwumious::feature::Exampl
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = DatasetSpec::criteo_like();
     let buckets = 1u32 << 16;
     // Production regime (§4.3): "deep layers, albeit being
@@ -42,6 +45,7 @@ fn main() {
         "#hidden", "dense", "sparse", "speedup"
     );
     let mut speedups = Vec::new();
+    let mut rows = Vec::new();
     for layers in 1..=4usize {
         let hidden = vec![width; layers];
         let mut cfg = ModelConfig::deep_ffm(spec.fields(), 4, buckets, &hidden);
@@ -54,6 +58,12 @@ fn main() {
             "{:<14} {:>9.3}s {:>9.3}s {:>8.2}x",
             layers, dense, sparse, speedup
         );
+        rows.push(obj(vec![
+            ("hidden_layers", num(layers as f64)),
+            ("dense_seconds", num(dense)),
+            ("sparse_seconds", num(sparse)),
+            ("speedup", num(speedup)),
+        ]));
     }
     println!("\npaper:          1.3x       1.8x       2.4x       3.5x");
     println!(
@@ -69,4 +79,15 @@ fn main() {
         "speedup grows with depth: {}",
         if monotone { "yes ✓" } else { "no (investigate)" }
     );
+    let path = bench_env::write_report(
+        "table3_sparse",
+        smoke,
+        vec![
+            ("examples", num(n as f64)),
+            ("hidden_width", num(width as f64)),
+            ("depths", arr(rows)),
+            ("speedup_monotone", fwumious::util::json::Json::Bool(monotone)),
+        ],
+    );
+    println!("report -> {path}");
 }

@@ -15,9 +15,12 @@ use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::model::regressor::Regressor;
 use fwumious::model::Workspace;
 use fwumious::transfer::{UpdateMode, UpdatePipeline};
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj, s, Json};
 use fwumious::util::timer::fmt_duration;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = DatasetSpec::criteo_like();
     let buckets = 1u32 << 18;
     let cfg = ModelConfig::deep_ffm(spec.fields(), 4, buckets, &[16]);
@@ -45,6 +48,7 @@ fn main() {
     let rounds = 4; // first round bootstraps patch bases
     let per_round = 30_000;
     let mut order = Vec::new();
+    let mut mode_rows = Vec::new();
     for mode in UpdateMode::ALL {
         let mut pipe = UpdatePipeline::new(mode);
         let mut model = reg.clone();
@@ -72,10 +76,28 @@ fn main() {
             avg_size / raw_bytes as f64 * 100.0
         );
         order.push((mode, avg_size));
+        mode_rows.push(obj(vec![
+            ("mode", s(mode.label())),
+            ("avg_encode_seconds", num(avg_time)),
+            ("avg_update_bytes", num(avg_size)),
+            ("pct_of_raw", num(avg_size / raw_bytes as f64 * 100.0)),
+        ]));
     }
     println!("\npaper shape: raw(100%) > quant(50%) > patch(30±5%) > quant+patch(3±2%)");
     let ok = order[0].1 > order[1].1
         && order[1].1 > order[3].1
         && order[2].1 > order[3].1;
     println!("ordering holds: {}", if ok { "yes ✓" } else { "no (investigate)" });
+    let path = bench_env::write_report(
+        "table4_quant",
+        smoke,
+        vec![
+            ("raw_bytes", num(raw_bytes as f64)),
+            ("rounds_measured", num((rounds - 1) as f64)),
+            ("examples_per_round", num(per_round as f64)),
+            ("modes", arr(mode_rows)),
+            ("ordering_holds", Json::Bool(ok)),
+        ],
+    );
+    println!("report -> {path}");
 }

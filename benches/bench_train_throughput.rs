@@ -21,7 +21,8 @@ use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::feature::Example;
 use fwumious::model::regressor::Regressor;
 use fwumious::train::hogwild::{train_chunk_batched, HogwildConfig};
-use fwumious::util::json::{arr, num, obj, s, Json};
+use fwumious::util::bench_env;
+use fwumious::util::json::{arr, num, obj};
 
 /// Micro-batch size for the batched arm (a 256-example Hogwild slice
 /// carves into 32 of these).
@@ -112,22 +113,21 @@ fn main() {
         t *= 2;
     }
 
-    let report = obj(vec![
-        ("bench", s("train_throughput")),
-        ("smoke", Json::Bool(smoke)),
-        ("simd", s(fwumious::simd::isa_name())),
-        ("fields", num(cfg.fields as f64)),
-        ("latent_dim", num(cfg.latent_dim as f64)),
-        ("minibatch", num(MINIBATCH as f64)),
-        ("chunk_examples", num(n as f64)),
-        ("arms", arr(rows)),
-        (
-            "speedup_batched_vs_per_example",
-            num(single_thread_speedup),
-        ),
-    ]);
-    let path = "BENCH_train_throughput.json";
-    std::fs::write(path, report.to_string()).expect("write bench json");
+    let path = bench_env::write_report(
+        "train_throughput",
+        smoke,
+        vec![
+            ("fields", num(cfg.fields as f64)),
+            ("latent_dim", num(cfg.latent_dim as f64)),
+            ("minibatch", num(MINIBATCH as f64)),
+            ("chunk_examples", num(n as f64)),
+            ("arms", arr(rows)),
+            (
+                "speedup_batched_vs_per_example",
+                num(single_thread_speedup),
+            ),
+        ],
+    );
     println!("report -> {path}");
     // Documented guarantee (README / ISSUE acceptance): the batched arm
     // clears 1.3x examples/sec over per-example training on the deep

@@ -95,6 +95,11 @@ SUBCOMMANDS:
                --slo-us N (per-request deadline; 0 disables the
                overload plane)  --degraded-max-candidates N (slate
                truncation cap while degraded)
+               --metrics-every SECS (periodic Prometheus render; 0
+               off)  --metrics-file PATH (render target; default
+               stdout)  --trace-sample N (emit JSONL spans for 1-in-N
+               requests)  --trace-file PATH (JSONL sink; default
+               stderr; implies --trace-sample 100)
     deploy     run the online deployment plane: continuous Hogwild
                training rounds published through the transfer pipeline
                and hot-swapped into a live serving engine
@@ -111,6 +116,13 @@ SUBCOMMANDS:
                --examples N (per round)  --threads N (hogwild)
                --loss P (per-shipment drop probability)
                --dataset criteo|avazu|kdd|tiny  --bits N
+    obs        unified observability snapshot: run deploy rounds with
+               live traffic plus a fleet publish into one metrics
+               registry and print the Prometheus render
+               --rounds N  --examples N  --dataset ...  --out PATH
+               --trace-sample N  --trace-file PATH
+               --check-file PATH (validate a Prometheus text file
+               written by `fw serve --metrics-file` and exit)
     automl     random hyperparameter search (Table 1 protocol)
                --configs N  --threads N  --dataset ...  --examples N
     quantize   quantize a model file        --in a.fw --out a.fwq

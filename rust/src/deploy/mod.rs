@@ -30,11 +30,13 @@ use crate::eval::auc;
 use crate::feature::Example;
 use crate::model::regressor::Regressor;
 use crate::model::{io, Workspace};
+use crate::obs::{Counter, Gauge, HistogramShard, ObsOptions, RequestTracer};
 use crate::serve::router::Router;
 use crate::serve::server::{ServeClient, ServeStats, ServingEngine};
 use crate::serve::ModelHandle;
 use crate::train::hogwild::{train_chunk, HogwildConfig};
 use crate::transfer::{SimulatedChannel, UpdateMode, UpdatePipeline, UpdateReceiver};
+use crate::util::json::{num, obj, s};
 
 /// Configuration of one deployment plane instance.
 #[derive(Clone, Debug)]
@@ -164,6 +166,17 @@ impl DeployMetrics {
     }
 }
 
+/// Registry handles for the deploy plane's own signals (rounds, lag,
+/// swap latency, update bytes, holdout AUC).
+struct DeployObs {
+    rounds: Gauge,
+    round_lag: Gauge,
+    holdout_auc: Gauge,
+    update_bytes: Counter,
+    swap_ns: HistogramShard,
+    tracer: Option<RequestTracer>,
+}
+
 /// The deployment plane: training DC, transfer plane and serving DC
 /// wired into one continuously publishing loop.
 pub struct DeploymentLoop {
@@ -178,12 +191,20 @@ pub struct DeploymentLoop {
     holdout: Vec<Example>,
     metrics: DeployMetrics,
     round: usize,
+    obs: DeployObs,
 }
 
 impl DeploymentLoop {
     /// Build the full plane: fresh model, registered serving engine,
     /// transfer pipeline/receiver pair and a held-out evaluation set.
     pub fn new(cfg: DeployConfig) -> Self {
+        Self::with_obs(cfg, ObsOptions::default())
+    }
+
+    /// [`new`](Self::new) recording into a caller-provided registry
+    /// (and optionally tracing swap events), so serving, deploy, and
+    /// training signals land in ONE scrape.
+    pub fn with_obs(cfg: DeployConfig, obs: ObsOptions) -> Self {
         let trainer = Regressor::new(&cfg.model);
         let stream = SyntheticStream::with_buckets(
             cfg.dataset.clone(),
@@ -206,7 +227,29 @@ impl DeploymentLoop {
         let handle = ModelHandle::new(trainer.clone());
         let router = Router::new(cfg.serve.workers);
         router.register(&cfg.model_name, handle.clone());
-        let engine = ServingEngine::start(router, cfg.serve.clone());
+        let engine =
+            ServingEngine::start_with_obs(router, cfg.serve.clone(), obs.clone());
+        let reg = engine.obs_registry().clone();
+        let deploy_obs = DeployObs {
+            rounds: reg.gauge("fw_deploy_rounds", "publish rounds completed"),
+            round_lag: reg.gauge(
+                "fw_deploy_round_lag_seconds",
+                "last round's publish lag (encode + wire + apply + swap)",
+            ),
+            holdout_auc: reg.gauge(
+                "fw_deploy_holdout_auc",
+                "held-out AUC of the served model after the last swap",
+            ),
+            update_bytes: reg.counter(
+                "fw_deploy_update_bytes_total",
+                "bytes shipped across rounds",
+            ),
+            swap_ns: reg.histogram_shard(
+                "fw_deploy_swap_ns",
+                "hot-swap latency (snapshot publish to cache invalidation)",
+            ),
+            tracer: obs.tracer,
+        };
 
         DeploymentLoop {
             cfg,
@@ -220,6 +263,7 @@ impl DeploymentLoop {
             holdout,
             metrics: DeployMetrics::default(),
             round: 0,
+            obs: deploy_obs,
         }
     }
 
@@ -292,6 +336,29 @@ impl DeploymentLoop {
         };
         self.metrics.absorb(&report);
         self.round += 1;
+
+        // Registry view of the round: training throughput/AUC, round
+        // lag, swap latency, shipped bytes — same registry as serving.
+        stats.export_to(self.engine.obs_registry());
+        self.obs.rounds.set(self.round as f64);
+        self.obs.round_lag.set(report.lag_seconds);
+        if report.holdout_auc.is_finite() {
+            self.obs.holdout_auc.set(report.holdout_auc);
+        }
+        self.obs.update_bytes.add(report.update_bytes as u64);
+        self.obs
+            .swap_ns
+            .record_ns((swap_seconds * 1e9).min(u64::MAX as f64) as u64);
+        if let Some(tr) = self.obs.tracer.as_ref() {
+            tr.emit(&obj(vec![
+                ("event", s("deploy_swap")),
+                ("round", num(round as f64)),
+                ("version", num(version as f64)),
+                ("swap_ns", num(swap_seconds * 1e9)),
+                ("lag_seconds", num(report.lag_seconds)),
+                ("update_bytes", num(report.update_bytes as f64)),
+            ]));
+        }
         Ok(report)
     }
 
@@ -438,6 +505,57 @@ mod tests {
             }
             dl.shutdown();
         }
+    }
+
+    #[test]
+    fn rounds_export_into_shared_registry() {
+        use crate::obs::{ObsRegistry, RequestTracer, TraceSink};
+        use std::sync::Arc;
+
+        let reg = Arc::new(ObsRegistry::new());
+        let obs = crate::obs::ObsOptions::with_registry(reg.clone())
+            .tracer(RequestTracer::new(1, TraceSink::memory()));
+        let mut dl =
+            DeploymentLoop::with_obs(small_cfg(UpdateMode::QuantPatch), obs);
+        dl.run_rounds(2).unwrap();
+
+        assert_eq!(reg.gauge_value("fw_deploy_rounds"), Some(2.0));
+        let lag = reg.gauge_value("fw_deploy_round_lag_seconds").unwrap();
+        assert!(lag >= 0.0);
+        let auc = reg.gauge_value("fw_deploy_holdout_auc").unwrap();
+        assert!(auc.is_finite());
+        let shipped = reg.counter_value("fw_deploy_update_bytes_total").unwrap();
+        assert_eq!(shipped, dl.metrics().update_bytes_total);
+        let swaps = reg.histogram_snapshot("fw_deploy_swap_ns").unwrap();
+        assert_eq!(swaps.count(), 2);
+        // the training chunks exported through the same registry
+        assert_eq!(
+            reg.counter_value("fw_train_examples_total"),
+            Some(2 * 1500)
+        );
+        assert!(reg.gauge_value("fw_train_rolling_auc").is_some());
+
+        // one render exposes serving + deploy + train series together
+        let text = reg.render_prometheus();
+        crate::testutil::check_prometheus_text(&text).expect("well-formed");
+        assert!(text.contains("fw_deploy_swap_ns{quantile=\"0.99\"}"));
+        assert!(text.contains("fw_serve_stage_total_ns"));
+        assert!(text.contains("fw_train_examples_per_sec"));
+
+        // every round traced exactly one deploy_swap event
+        let tracer = dl.obs.tracer.clone().unwrap();
+        tracer.flush();
+        let events: Vec<String> = tracer
+            .sink()
+            .drain()
+            .into_iter()
+            .filter(|l| l.contains("\"deploy_swap\""))
+            .collect();
+        assert_eq!(events.len(), 2);
+        let parsed = crate::util::json::parse(&events[1]).unwrap();
+        assert_eq!(parsed.get("event").as_str(), Some("deploy_swap"));
+        assert_eq!(parsed.get("round").as_f64(), Some(1.0));
+        dl.shutdown();
     }
 
     #[test]

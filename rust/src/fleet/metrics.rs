@@ -122,6 +122,48 @@ impl FleetMetrics {
             live.iter().map(|l| l.mean_seconds()).sum::<f64>() / live.len() as f64
         }
     }
+
+    /// Export this snapshot into a metrics registry.  Every sample is a
+    /// gauge set from the snapshot's absolute values, so re-exporting
+    /// after each round refreshes the same series instead of
+    /// double-counting (the fabric is the source of truth; the registry
+    /// is a view).
+    pub fn export_to(&self, reg: &crate::obs::ObsRegistry) {
+        reg.gauge("fw_fleet_rounds", "publish rounds executed")
+            .set(self.rounds as f64);
+        reg.gauge(
+            "fw_fleet_max_version_skew",
+            "worst head-replica version skew observed",
+        )
+        .set(self.max_version_skew as f64);
+        reg.gauge("fw_fleet_replays", "catch-ups resolved by patch-chain replay")
+            .set(self.replays as f64);
+        reg.gauge("fw_fleet_resyncs", "catch-ups resolved by full snapshot")
+            .set(self.resyncs as f64);
+        reg.gauge("fw_fleet_converged_rounds", "rounds ending fully converged")
+            .set(self.converged_rounds as f64);
+        for (class, links) in [("inter", &self.inter), ("intra", &self.intra)] {
+            for (dc, l) in links.iter().enumerate() {
+                reg.gauge(
+                    &format!("fw_fleet_link_bytes{{class=\"{class}\",dc=\"{dc}\"}}"),
+                    "bytes pushed per link class and data center",
+                )
+                .set(l.bytes as f64);
+                reg.gauge(
+                    &format!("fw_fleet_link_drops{{class=\"{class}\",dc=\"{dc}\"}}"),
+                    "shipments lost per link class and data center",
+                )
+                .set(l.drops as f64);
+            }
+        }
+        for (r, lag) in self.lag.iter().enumerate() {
+            reg.gauge(
+                &format!("fw_fleet_replica_lag_seconds{{replica=\"{r}\"}}"),
+                "mean publish lag per replica (seconds)",
+            )
+            .set(lag.mean_seconds());
+        }
+    }
 }
 
 #[cfg(test)]
@@ -169,5 +211,33 @@ mod tests {
         m.lag[0].record(2.0);
         m.lag[2].record(4.0);
         assert!((m.mean_lag_seconds() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn export_is_idempotent_and_labeled() {
+        let mut m = FleetMetrics::default();
+        m.rounds = 5;
+        m.replays = 2;
+        m.inter = vec![LinkLedger::default(); 2];
+        m.intra = vec![LinkLedger::default(); 2];
+        m.inter[1].record(4096, 0.2, true);
+        m.lag = vec![LagStat::default(); 2];
+        m.lag[0].record(1.5);
+        let reg = crate::obs::ObsRegistry::new();
+        m.export_to(&reg);
+        m.export_to(&reg); // second export refreshes, never double-counts
+        assert_eq!(reg.gauge_value("fw_fleet_rounds"), Some(5.0));
+        assert_eq!(reg.gauge_value("fw_fleet_replays"), Some(2.0));
+        assert_eq!(
+            reg.gauge_value("fw_fleet_link_bytes{class=\"inter\",dc=\"1\"}"),
+            Some(4096.0)
+        );
+        assert_eq!(
+            reg.gauge_value("fw_fleet_replica_lag_seconds{replica=\"0\"}"),
+            Some(1.5)
+        );
+        let text = reg.render_prometheus();
+        crate::testutil::check_prometheus_text(&text).expect("well-formed");
+        assert_eq!(text.matches("# TYPE fw_fleet_link_bytes gauge").count(), 1);
     }
 }

@@ -43,8 +43,10 @@ pub use topology::{DcSpec, LinkSpec, ReplicaId, SimLink, Topology};
 
 use crate::config::ServeConfig;
 use crate::model::regressor::Regressor;
+use crate::obs::RequestTracer;
 use crate::serve::server::ServeStats;
 use crate::transfer::{UpdateMode, UpdatePipeline, UpdateReceiver};
+use crate::util::json::{num, obj, s};
 use crate::util::rng::Pcg32;
 
 /// Configuration of one fleet fabric.
@@ -149,6 +151,9 @@ pub struct FleetFabric {
     resyncs: u64,
     converged_rounds: u64,
     lag: Vec<LagStat>,
+    /// Discrete-event sink (publish rounds, catch-up replays/resyncs);
+    /// None = no tracing cost beyond this Option check.
+    tracer: Option<RequestTracer>,
 }
 
 impl FleetFabric {
@@ -195,7 +200,14 @@ impl FleetFabric {
             resyncs: 0,
             converged_rounds: 0,
             lag,
+            tracer: None,
         }
+    }
+
+    /// Attach a discrete-event tracer: publish rounds and catch-up
+    /// replays/resyncs are emitted as JSONL events.
+    pub fn set_tracer(&mut self, tracer: RequestTracer) {
+        self.tracer = Some(tracer);
     }
 
     /// Publish one trained snapshot to the whole fleet.
@@ -278,6 +290,16 @@ impl FleetFabric {
         if max_skew == 0 {
             self.converged_rounds += 1;
         }
+        if let Some(tr) = self.tracer.as_ref() {
+            tr.emit(&obj(vec![
+                ("event", s("fleet_publish")),
+                ("seq", num(seq as f64)),
+                ("update_bytes", num(update_bytes as f64)),
+                ("delivered", num(delivered as f64)),
+                ("dropped", num(dropped as f64)),
+                ("max_skew", num(max_skew as f64)),
+            ]));
+        }
         Ok(RoundOutcome {
             seq,
             update_bytes,
@@ -333,6 +355,14 @@ impl FleetFabric {
                 self.lag[idx].record(secs);
             }
             self.replays += 1;
+            if let Some(tr) = self.tracer.as_ref() {
+                tr.emit(&obj(vec![
+                    ("event", s("fleet_catch_up")),
+                    ("kind", s("replay")),
+                    ("replica", num(idx as f64)),
+                    ("updates", num(missed as f64)),
+                ]));
+            }
             Ok(CatchUpKind::Replay { updates: missed })
         } else {
             let full = self
@@ -344,6 +374,14 @@ impl FleetFabric {
             self.replicas[idx].resync(self.head, &full)?;
             self.lag[idx].record(secs);
             self.resyncs += 1;
+            if let Some(tr) = self.tracer.as_ref() {
+                tr.emit(&obj(vec![
+                    ("event", s("fleet_catch_up")),
+                    ("kind", s("resync")),
+                    ("replica", num(idx as f64)),
+                    ("bytes", num(full.len() as f64)),
+                ]));
+            }
             Ok(CatchUpKind::Resync { bytes: full.len() })
         }
     }

@@ -38,6 +38,7 @@ pub mod eval;
 pub mod feature;
 pub mod fleet;
 pub mod model;
+pub mod obs;
 pub mod patch;
 pub mod quant;
 #[cfg(feature = "pjrt")]

@@ -57,6 +57,7 @@ fn run(raw: Vec<String>) -> Result<(), String> {
         "serve" => cmd_serve(&args),
         "deploy" => cmd_deploy(&args),
         "fleet" => cmd_fleet(&args),
+        "obs" => cmd_obs(&args),
         "automl" => cmd_automl(&args),
         "quantize" => cmd_quantize(&args),
         "patch" => cmd_patch(&args),
@@ -145,10 +146,49 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Render a registry to `path` (overwrite) or stdout.
+fn emit_metrics(reg: &fwumious::obs::ObsRegistry, path: Option<&str>) {
+    let text = reg.render_prometheus();
+    match path {
+        Some(p) => {
+            if let Err(e) = std::fs::write(p, &text) {
+                eprintln!("metrics write {p}: {e}");
+            }
+        }
+        None => print!("{text}"),
+    }
+}
+
+/// Build the tracer requested by `--trace-sample` / `--trace-file`
+/// (a `--trace-file` alone implies 1-in-100 sampling).
+fn tracer_from_args(
+    args: &Args,
+) -> Result<Option<fwumious::obs::RequestTracer>, String> {
+    use fwumious::obs::{RequestTracer, TraceSink};
+    let mut every = args.usize_flag("trace-sample", 0)? as u64;
+    if every == 0 && args.flag("trace-file").is_some() {
+        every = 100;
+    }
+    if every == 0 {
+        return Ok(None);
+    }
+    let sink = match args.flag("trace-file") {
+        Some(p) => TraceSink::file(p).map_err(|e| e.to_string())?,
+        None => TraceSink::stderr(),
+    };
+    Ok(Some(RequestTracer::new(every, sink)))
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
+    use fwumious::obs::{ObsOptions, ObsRegistry};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
     let workers = args.usize_flag("workers", 4)?;
     let requests = args.usize_flag("requests", 100_000)?;
     let fanout = args.usize_flag("fanout", 8)?;
+    let metrics_every = args.usize_flag("metrics-every", 0)? as u64;
+    let metrics_file = args.flag("metrics-file").map(|s| s.to_string());
+    let tracer = tracer_from_args(args)?;
     if args.has("no-simd") {
         fwumious::simd::force_scalar(true);
     }
@@ -182,7 +222,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
     let router = Router::new(workers);
     router.register("ctr", ModelHandle::new(reg));
-    let engine = ServingEngine::start(
+    let registry = Arc::new(ObsRegistry::new());
+    let mut obs = ObsOptions::with_registry(registry.clone());
+    if let Some(t) = &tracer {
+        obs = obs.tracer(t.clone());
+    }
+    let engine = ServingEngine::start_with_obs(
         router,
         ServeConfig {
             workers,
@@ -195,7 +240,29 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             request_slo_us: args.usize_flag("slo-us", 0)? as u64,
             degraded_max_candidates: args.usize_flag("degraded-max-candidates", 16)?,
         },
+        obs,
     );
+    // Periodic scrape: render the registry every --metrics-every
+    // seconds to --metrics-file (or stdout) until shutdown.
+    let stop = Arc::new(AtomicBool::new(false));
+    let dumper = (metrics_every > 0).then(|| {
+        let reg = registry.clone();
+        let stop = stop.clone();
+        let path = metrics_file.clone();
+        std::thread::spawn(move || {
+            let tick = std::time::Duration::from_millis(100);
+            let period = std::time::Duration::from_secs(metrics_every);
+            let mut since = std::time::Duration::ZERO;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                since += tick;
+                if since >= period {
+                    since = std::time::Duration::ZERO;
+                    emit_metrics(&reg, path.as_deref());
+                }
+            }
+        })
+    });
     let mut gen = TraceGenerator::new(11, fields, ctx_fields, buckets, fanout);
     let t = std::time::Instant::now();
     type Reply = std::sync::mpsc::Receiver<Result<fwumious::serve::Response, ServeError>>;
@@ -233,6 +300,21 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let (served, scored, _unserved) = tallies;
     let secs = t.elapsed().as_secs_f64();
     let stats = engine.shutdown();
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = dumper {
+        let _ = h.join();
+    }
+    if let Some(tr) = &tracer {
+        tr.flush();
+    }
+    // Final render so a scrape file always reflects the full run (and
+    // exists even when the run outpaced the first period).
+    if metrics_every > 0 || metrics_file.is_some() {
+        emit_metrics(&registry, metrics_file.as_deref());
+        if let Some(p) = &metrics_file {
+            println!("metrics written to {p}");
+        }
+    }
     println!(
         "{requests} offered / {served} served / {scored} candidates in {} — {:.0} req/s, {:.0} preds/s",
         fmt_duration(secs),
@@ -457,6 +539,99 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         star.predicted_inter_bytes(fabric.topology(), last_update_bytes),
         tree.predicted_inter_bytes(fabric.topology(), last_update_bytes)
     );
+    Ok(())
+}
+
+fn cmd_obs(args: &Args) -> Result<(), String> {
+    use fwumious::deploy::{DeployConfig, DeploymentLoop};
+    use fwumious::fleet::{FleetConfig, FleetFabric, LinkSpec, Topology};
+    use fwumious::obs::{ObsOptions, ObsRegistry};
+    use fwumious::train::hogwild::{train_chunk, HogwildConfig};
+    use fwumious::transfer::UpdateMode;
+
+    // Validator mode: `fw obs --check-file metrics.prom` parses a
+    // scrape written by `fw serve --metrics-file` (used by CI).
+    if let Some(path) = args.flag("check-file") {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        fwumious::testutil::check_prometheus_text(&text)
+            .map_err(|e| format!("{path}: {e}"))?;
+        let samples = text
+            .lines()
+            .filter(|l| !l.starts_with('#') && !l.trim().is_empty())
+            .count();
+        println!("{path}: well-formed Prometheus text ({samples} samples)");
+        return Ok(());
+    }
+
+    // Snapshot mode: run the whole system small — deploy rounds
+    // (train → encode → ship → swap) with live traffic, plus a fleet
+    // publish — all recording into ONE registry, then render it.
+    let rounds = args.usize_flag("rounds", 2)?;
+    let per_round = args.usize_flag("examples", 2_000)?;
+    let spec = dataset(&args.flag_or("dataset", "tiny"))?;
+    let model_cfg = model_cfg_from_args(args, &spec)?;
+    let fields = model_cfg.fields;
+    let buckets = model_cfg.buckets;
+
+    let registry = Arc::new(ObsRegistry::new());
+    let tracer = tracer_from_args(args)?;
+    let mut obs = ObsOptions::with_registry(registry.clone());
+    if let Some(t) = &tracer {
+        obs = obs.tracer(t.clone());
+    }
+
+    let mut dcfg =
+        DeployConfig::new(model_cfg.clone(), spec.clone(), UpdateMode::QuantPatch);
+    dcfg.examples_per_round = per_round;
+    dcfg.holdout_examples = 1_000;
+    let mut dl = DeploymentLoop::with_obs(dcfg, obs);
+    let client = dl.client();
+    let mut gen = TraceGenerator::new(11, fields, (fields / 2).max(1), buckets, 8);
+    for _ in 0..rounds {
+        dl.run_round()?;
+        let mut inflight = Vec::with_capacity(256);
+        for _ in 0..200 {
+            inflight.push(client.submit(gen.next_request("ctr"))?);
+        }
+        for rx in inflight {
+            rx.recv().map_err(|_| "reply dropped".to_string())??;
+        }
+    }
+
+    let topo = Topology::uniform(2, 2, LinkSpec::wan(), LinkSpec::lan());
+    let mut fcfg = FleetConfig::new(topo, UpdateMode::QuantPatch);
+    fcfg.seed = 7;
+    let mut trainer = Regressor::new(&model_cfg);
+    let mut stream = SyntheticStream::with_buckets(spec, 7, model_cfg.buckets);
+    let mut fabric = FleetFabric::new(fcfg, &trainer);
+    if let Some(t) = &tracer {
+        fabric.set_tracer(t.clone());
+    }
+    for _ in 0..rounds {
+        let chunk = stream.take_examples(per_round.min(1_000));
+        let stats =
+            train_chunk(&mut trainer, &chunk, HogwildConfig { threads: 1 }, 500);
+        stats.export_to(&registry);
+        fabric.publish(&trainer)?;
+    }
+    fabric.metrics().export_to(&registry);
+
+    drop(client);
+    let _ = dl.shutdown();
+    if let Some(t) = &tracer {
+        t.flush();
+    }
+    let text = registry.render_prometheus();
+    fwumious::testutil::check_prometheus_text(&text)
+        .map_err(|e| format!("render self-check: {e}"))?;
+    match args.flag("out") {
+        Some(p) => {
+            std::fs::write(p, &text).map_err(|e| e.to_string())?;
+            println!("wrote {} bytes of metrics to {p}", text.len());
+        }
+        None => print!("{text}"),
+    }
     Ok(())
 }
 

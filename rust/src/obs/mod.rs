@@ -1,0 +1,58 @@
+//! Unified observability plane: metrics registry, per-stage serving
+//! spans, and sampled request tracing.
+//!
+//! Three layers, all zero-dependency:
+//!
+//! - [`registry`] — process-wide named `Counter`/`Gauge`/`Histogram`
+//!   handles backed by relaxed atomics; histograms are per-worker
+//!   shards merged at snapshot, so the serving hot path records in
+//!   nanoseconds and never takes a lock. Rendered as Prometheus text
+//!   exposition via [`ObsRegistry::render_prometheus`].
+//! - [`span`] — the [`SpanClock`] each request carries from submit to
+//!   reply, stamped per pipeline stage (queue-wait, flush, group
+//!   assembly, cache, kernel, total), feeding per-stage histograms.
+//! - [`trace`] — a 1-in-N [`RequestTracer`] emitting one JSONL event
+//!   per stage for sampled requests plus discrete events (overload
+//!   transitions, fleet catch-ups/resyncs, deploy swaps).
+//!
+//! With no registry attached and sampling off, the serving path is
+//! bit-identical to the un-instrumented engine (pinned by test).
+
+pub mod registry;
+pub mod span;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, HistogramShard, ObsRegistry};
+pub use span::{SpanClock, SpanTimes, Stage};
+pub use trace::{RequestTracer, TraceSink};
+
+use std::sync::Arc;
+
+/// Observability wiring handed to a subsystem at construction time.
+///
+/// `Default` means "self-contained": the subsystem creates its own
+/// private registry (cheap, and keeps process-shared state out of
+/// tests) and no tracer. Binaries that want one unified render pass
+/// the same `Arc<ObsRegistry>` (and optionally one tracer) everywhere.
+#[derive(Clone, Debug, Default)]
+pub struct ObsOptions {
+    /// Registry to record into; `None` → a fresh private registry.
+    pub registry: Option<Arc<ObsRegistry>>,
+    /// Sampled request tracer + discrete-event sink; `None` → no
+    /// tracing (and zero per-request sampling cost).
+    pub tracer: Option<RequestTracer>,
+}
+
+impl ObsOptions {
+    pub fn with_registry(registry: Arc<ObsRegistry>) -> Self {
+        ObsOptions {
+            registry: Some(registry),
+            tracer: None,
+        }
+    }
+
+    pub fn tracer(mut self, tracer: RequestTracer) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+}

@@ -1,0 +1,369 @@
+//! Process-wide metrics registry: named counters, gauges, and sharded
+//! histograms with a Prometheus-style text render.
+//!
+//! Design constraints (from the serving hot path):
+//!
+//! - **Recording never takes a lock.** `Counter`/`Gauge` handles are
+//!   cloned `Arc<AtomicU64>`s; histogram recording goes through a
+//!   worker-owned [`HistogramShard`] (a lock-free
+//!   [`AtomicHistogram`]). The registry's internal mutex is touched
+//!   only at registration time and at snapshot/render time.
+//! - **Per-worker histogram shards.** Each worker asks the registry
+//!   for its own shard of a named histogram; shards are merged only
+//!   when a snapshot is taken, so concurrent recorders never contend
+//!   on the same cache lines beyond the atomics themselves.
+//! - **Names carry labels.** A metric name may embed Prometheus-style
+//!   labels (`fw_fleet_link_bytes{class="inter",dc="0"}`); the render
+//!   groups samples by base name and emits one `# TYPE` line per base.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::histogram::{AtomicHistogram, LatencyHistogram};
+
+/// Monotonically increasing integer metric. Cloning shares the cell.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins float metric (stored as f64 bits). Cloning shares
+/// the cell.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// One worker's handle on a named histogram: records go straight into
+/// the worker's own lock-free shard; the registry merges shards at
+/// snapshot time.
+#[derive(Clone, Debug)]
+pub struct HistogramShard(Arc<AtomicHistogram>);
+
+impl HistogramShard {
+    /// Detached shard not registered anywhere — useful for tests and
+    /// for probes whose output is read directly.
+    pub fn detached() -> Self {
+        HistogramShard(Arc::new(AtomicHistogram::new()))
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.0.record_ns(ns);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.0.record(d);
+    }
+
+    pub fn snapshot(&self) -> LatencyHistogram {
+        self.0.snapshot()
+    }
+}
+
+#[derive(Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Vec<Arc<AtomicHistogram>>),
+}
+
+#[derive(Debug)]
+struct Entry {
+    help: String,
+    metric: Metric,
+}
+
+/// Registry of named metrics. One per serving engine by default (so
+/// tests sharing a process don't pollute each other); the `fw` binary
+/// threads a single `Arc<ObsRegistry>` through serving, fleet, deploy,
+/// and training so one render shows the whole system.
+#[derive(Debug, Default)]
+pub struct ObsRegistry {
+    metrics: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl ObsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Process-global registry for binaries that want exactly one.
+    pub fn global() -> &'static Arc<ObsRegistry> {
+        static GLOBAL: OnceLock<Arc<ObsRegistry>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(ObsRegistry::new()))
+    }
+
+    /// Get-or-create a counter. Panics if `name` is already registered
+    /// as a different metric kind (programmer error, not runtime state).
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        let mut m = self.metrics.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            metric: Metric::Counter(Counter(Arc::new(AtomicU64::new(0)))),
+        });
+        match &e.metric {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create a gauge (initialized to 0.0).
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        let mut m = self.metrics.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            metric: Metric::Gauge(Gauge(Arc::new(AtomicU64::new(0.0f64.to_bits())))),
+        });
+        match &e.metric {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// Register a fresh shard of a named histogram and hand it to the
+    /// caller. Each concurrent recorder should hold its own shard.
+    pub fn histogram_shard(&self, name: &str, help: &str) -> HistogramShard {
+        let mut m = self.metrics.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            metric: Metric::Histogram(Vec::new()),
+        });
+        match &mut e.metric {
+            Metric::Histogram(shards) => {
+                let shard = Arc::new(AtomicHistogram::new());
+                shards.push(Arc::clone(&shard));
+                HistogramShard(shard)
+            }
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// Merged snapshot of a named histogram (all shards folded).
+    pub fn histogram_snapshot(&self, name: &str) -> Option<LatencyHistogram> {
+        let m = self.metrics.lock().unwrap();
+        match &m.get(name)?.metric {
+            Metric::Histogram(shards) => {
+                let mut merged = LatencyHistogram::new();
+                for s in shards {
+                    merged.merge(&s.snapshot());
+                }
+                Some(merged)
+            }
+            _ => None,
+        }
+    }
+
+    /// Current value of a named counter, if registered.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        let m = self.metrics.lock().unwrap();
+        match &m.get(name)?.metric {
+            Metric::Counter(c) => Some(c.get()),
+            _ => None,
+        }
+    }
+
+    /// Current value of a named gauge, if registered.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        let m = self.metrics.lock().unwrap();
+        match &m.get(name)?.metric {
+            Metric::Gauge(g) => Some(g.get()),
+            _ => None,
+        }
+    }
+
+    /// Render every metric in Prometheus text exposition format.
+    /// Histograms render as `summary` metrics (p50/p90/p99 quantile
+    /// samples plus `_sum`/`_count`).
+    pub fn render_prometheus(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        let mut last_base = String::new();
+        for (name, e) in m.iter() {
+            let base = base_name(name);
+            if base != last_base {
+                let kind = match &e.metric {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Histogram(_) => "summary",
+                };
+                let _ = writeln!(out, "# HELP {base} {}", e.help);
+                let _ = writeln!(out, "# TYPE {base} {kind}");
+                last_base = base.to_string();
+            }
+            match &e.metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", fmt_f64(g.get()));
+                }
+                Metric::Histogram(shards) => {
+                    let mut merged = LatencyHistogram::new();
+                    for s in shards {
+                        merged.merge(&s.snapshot());
+                    }
+                    let (base, labels) = split_labels(name);
+                    for (q, qs) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                        let _ = writeln!(
+                            out,
+                            "{base}{} {}",
+                            join_labels(labels, &format!("quantile=\"{qs}\"")),
+                            fmt_f64(merged.quantile_ns(q))
+                        );
+                    }
+                    let lbl = labels.map(|l| format!("{{{l}}}")).unwrap_or_default();
+                    let _ = writeln!(out, "{base}_sum{lbl} {}", merged.sum_ns());
+                    let _ = writeln!(out, "{base}_count{lbl} {}", merged.count());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `name{labels}` → `name`.
+fn base_name(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// `name{labels}` → (`name`, Some(`labels`)); plain names get None.
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match name.split_once('{') {
+        Some((base, rest)) => (base, Some(rest.trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+fn join_labels(existing: Option<&str>, extra: &str) -> String {
+    match existing {
+        Some(l) if !l.is_empty() => format!("{{{l},{extra}}}"),
+        _ => format!("{{{extra}}}"),
+    }
+}
+
+/// Prometheus-compatible float formatting (integral values print
+/// without a trailing `.0`, which `{}` already does for f64).
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        (if v > 0.0 { "+Inf" } else { "-Inf" }).to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+    use std::thread;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let reg = ObsRegistry::new();
+        let c = reg.counter("fw_test_total", "test counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(reg.counter_value("fw_test_total"), Some(5));
+        // get-or-create returns the same cell
+        reg.counter("fw_test_total", "test counter").add(1);
+        assert_eq!(c.get(), 6);
+        let g = reg.gauge("fw_test_gauge", "test gauge");
+        g.set(2.5);
+        assert_eq!(reg.gauge_value("fw_test_gauge"), Some(2.5));
+    }
+
+    #[test]
+    fn histogram_shards_merge_at_snapshot() {
+        let reg = ObsRegistry::new();
+        let a = reg.histogram_shard("fw_test_ns", "test histogram");
+        let b = reg.histogram_shard("fw_test_ns", "test histogram");
+        for _ in 0..10 {
+            a.record_ns(1_000);
+            b.record_ns(100_000);
+        }
+        let snap = reg.histogram_snapshot("fw_test_ns").unwrap();
+        assert_eq!(snap.count(), 20);
+        assert_eq!(snap.min_ns(), 1_000);
+        assert_eq!(snap.max_ns(), 100_000);
+    }
+
+    #[test]
+    fn concurrent_recording_totals_exact() {
+        // Satellite: N threads hammer counters and histogram shards;
+        // after joining, counter totals and the merged histogram count
+        // must be exact (no lost updates, no double counts).
+        prop(5, |g| {
+            let reg = Arc::new(ObsRegistry::new());
+            let threads = g.usize_in(2..6);
+            let per = g.usize_in(500..4_000) as u64;
+            let c = reg.counter("fw_prop_total", "prop counter");
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let reg = Arc::clone(&reg);
+                    let c = c.clone();
+                    thread::spawn(move || {
+                        let shard = reg.histogram_shard("fw_prop_ns", "prop histogram");
+                        for i in 0..per {
+                            c.inc();
+                            shard.record_ns(t as u64 * 7 + i % 1_003 + 1);
+                        }
+                    })
+                })
+                .collect();
+            for j in handles {
+                j.join().unwrap();
+            }
+            let expect = threads as u64 * per;
+            assert_eq!(reg.counter_value("fw_prop_total"), Some(expect));
+            let snap = reg.histogram_snapshot("fw_prop_ns").unwrap();
+            assert_eq!(snap.count(), expect);
+        });
+    }
+
+    #[test]
+    fn render_groups_labeled_samples_under_one_type_line() {
+        let reg = ObsRegistry::new();
+        reg.gauge("fw_link_bytes{class=\"inter\",dc=\"0\"}", "per-link bytes")
+            .set(100.0);
+        reg.gauge("fw_link_bytes{class=\"inter\",dc=\"1\"}", "per-link bytes")
+            .set(200.0);
+        reg.counter("fw_requests_total", "requests").add(3);
+        let shard = reg.histogram_shard("fw_stage_ns", "stage latency");
+        shard.record_ns(5_000);
+        let text = reg.render_prometheus();
+        assert_eq!(text.matches("# TYPE fw_link_bytes gauge").count(), 1);
+        assert!(text.contains("fw_link_bytes{class=\"inter\",dc=\"0\"} 100"));
+        assert!(text.contains("fw_link_bytes{class=\"inter\",dc=\"1\"} 200"));
+        assert!(text.contains("# TYPE fw_requests_total counter"));
+        assert!(text.contains("fw_requests_total 3"));
+        assert!(text.contains("# TYPE fw_stage_ns summary"));
+        assert!(text.contains("fw_stage_ns{quantile=\"0.99\"}"));
+        assert!(text.contains("fw_stage_ns_sum 5000"));
+        assert!(text.contains("fw_stage_ns_count 1"));
+        crate::testutil::check_prometheus_text(&text).expect("render is well-formed");
+    }
+}

@@ -1,0 +1,164 @@
+//! Per-request serving spans: a compact clock each request carries
+//! from submit to reply, stamped once per pipeline stage.
+//!
+//! The serving pipeline is
+//!
+//! ```text
+//! submit → queue-wait → flush → group-assembly → cache → kernel → reply
+//! ```
+//!
+//! Queue-wait and flush are stamped per request (the request's own
+//! waits); group-assembly is measured per batch and cache/kernel per
+//! context group — those are shared costs, attributed to the request's
+//! batch/group in trace events. Stamping is two `Instant::now()` calls
+//! and an array write per stage; there is no allocation and no lock.
+
+use std::time::Instant;
+
+/// Pipeline stages in submit→reply order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Submit → worker pops the job off its bounded queue.
+    Queue,
+    /// Pop → the batcher flushes the batch containing the job.
+    Flush,
+    /// Context-group assembly + deadline triage for the whole batch.
+    Group,
+    /// Context-cache lookup (or partial-forward compute on miss) for
+    /// the request's group.
+    Cache,
+    /// Batched kernel scoring the group's union slate.
+    Kernel,
+    /// Submit → reply sent (the whole span).
+    Total,
+}
+
+pub const N_STAGES: usize = 6;
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Queue,
+        Stage::Flush,
+        Stage::Group,
+        Stage::Cache,
+        Stage::Kernel,
+        Stage::Total,
+    ];
+
+    /// Short label used in trace events.
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Flush => "flush",
+            Stage::Group => "group",
+            Stage::Cache => "cache",
+            Stage::Kernel => "kernel",
+            Stage::Total => "total",
+        }
+    }
+
+    /// Registry metric name for the per-stage latency histogram.
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            Stage::Queue => "fw_serve_stage_queue_ns",
+            Stage::Flush => "fw_serve_stage_flush_ns",
+            Stage::Group => "fw_serve_stage_group_ns",
+            Stage::Cache => "fw_serve_stage_cache_ns",
+            Stage::Kernel => "fw_serve_stage_kernel_ns",
+            Stage::Total => "fw_serve_stage_total_ns",
+        }
+    }
+}
+
+/// Nanoseconds accumulated per stage for one request.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanTimes {
+    ns: [u64; N_STAGES],
+}
+
+impl SpanTimes {
+    pub fn get(&self, stage: Stage) -> u64 {
+        self.ns[stage as usize]
+    }
+
+    pub fn add(&mut self, stage: Stage, ns: u64) {
+        self.ns[stage as usize] += ns;
+    }
+}
+
+/// Clock a request carries through the pipeline. `stamp` charges the
+/// elapsed time since the previous stamp to a stage and resets the
+/// reference point.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanClock {
+    /// Submit time — also the deadline/ordering anchor.
+    pub submitted: Instant,
+    last: Instant,
+    pub times: SpanTimes,
+}
+
+impl SpanClock {
+    pub fn start_at(at: Instant) -> Self {
+        SpanClock {
+            submitted: at,
+            last: at,
+            times: SpanTimes::default(),
+        }
+    }
+
+    pub fn start() -> Self {
+        Self::start_at(Instant::now())
+    }
+
+    /// Charge `now - last_stamp` to `stage` and move the reference.
+    pub fn stamp_at(&mut self, stage: Stage, now: Instant) {
+        let ns = now.saturating_duration_since(self.last).as_nanos() as u64;
+        self.times.add(stage, ns);
+        self.last = now;
+    }
+
+    pub fn stamp(&mut self, stage: Stage) {
+        self.stamp_at(stage, Instant::now());
+    }
+
+    /// Charge externally measured time (shared batch/group costs).
+    pub fn add_ns(&mut self, stage: Stage, ns: u64) {
+        self.times.add(stage, ns);
+    }
+
+    /// Close the span: Total = full submit→now duration.
+    pub fn finish_at(&mut self, now: Instant) -> u64 {
+        let ns = now.saturating_duration_since(self.submitted).as_nanos() as u64;
+        self.times.add(Stage::Total, ns);
+        ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn stamps_accumulate_per_stage() {
+        let t0 = Instant::now();
+        let mut c = SpanClock::start_at(t0);
+        c.stamp_at(Stage::Queue, t0 + Duration::from_micros(10));
+        c.stamp_at(Stage::Flush, t0 + Duration::from_micros(25));
+        c.add_ns(Stage::Kernel, 3_000);
+        let total = c.finish_at(t0 + Duration::from_micros(40));
+        assert_eq!(c.times.get(Stage::Queue), 10_000);
+        assert_eq!(c.times.get(Stage::Flush), 15_000);
+        assert_eq!(c.times.get(Stage::Kernel), 3_000);
+        assert_eq!(total, 40_000);
+        assert_eq!(c.times.get(Stage::Total), 40_000);
+    }
+
+    #[test]
+    fn stage_tables_cover_all() {
+        for s in Stage::ALL {
+            assert!(!s.label().is_empty());
+            assert!(s.metric_name().starts_with("fw_serve_stage_"));
+        }
+    }
+}

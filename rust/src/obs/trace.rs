@@ -1,0 +1,169 @@
+//! Sampled structured tracing: a 1-in-N request sampler plus discrete
+//! system events, emitted as one JSON object per line (JSONL).
+//!
+//! Sampling is a single relaxed `fetch_add` per submit; unsampled
+//! requests pay nothing else. Only sampled requests (and low-rate
+//! discrete events like overload transitions, fleet catch-ups, and
+//! deploy swaps) reach the sink, so the sink's mutex is statistically
+//! off the hot path.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+#[derive(Debug)]
+enum SinkInner {
+    Stderr,
+    File(Mutex<BufWriter<File>>),
+    Memory(Mutex<Vec<String>>),
+}
+
+/// Where trace lines go. Cloning shares the sink.
+#[derive(Clone, Debug)]
+pub struct TraceSink(Arc<SinkInner>);
+
+impl TraceSink {
+    pub fn stderr() -> Self {
+        TraceSink(Arc::new(SinkInner::Stderr))
+    }
+
+    pub fn file(path: &str) -> std::io::Result<Self> {
+        let f = File::create(path)?;
+        Ok(TraceSink(Arc::new(SinkInner::File(Mutex::new(
+            BufWriter::new(f),
+        )))))
+    }
+
+    /// In-memory sink for tests; read back with `drain`.
+    pub fn memory() -> Self {
+        TraceSink(Arc::new(SinkInner::Memory(Mutex::new(Vec::new()))))
+    }
+
+    pub fn emit(&self, event: &Json) {
+        let line = event.to_string();
+        match &*self.0 {
+            SinkInner::Stderr => eprintln!("{line}"),
+            SinkInner::File(w) => {
+                let mut w = w.lock().unwrap();
+                let _ = writeln!(w, "{line}");
+            }
+            SinkInner::Memory(v) => v.lock().unwrap().push(line),
+        }
+    }
+
+    pub fn flush(&self) {
+        if let SinkInner::File(w) = &*self.0 {
+            let _ = w.lock().unwrap().flush();
+        }
+    }
+
+    /// Take every line captured so far (memory sinks only; other sinks
+    /// return an empty vec).
+    pub fn drain(&self) -> Vec<String> {
+        match &*self.0 {
+            SinkInner::Memory(v) => std::mem::take(&mut *v.lock().unwrap()),
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// 1-in-N request sampler + event emitter. Cloning shares the counter
+/// and sink, so every submit path sees one global sample cadence.
+#[derive(Clone, Debug)]
+pub struct RequestTracer {
+    every: u64,
+    counter: Arc<AtomicU64>,
+    sink: TraceSink,
+}
+
+impl RequestTracer {
+    /// `every == 0` disables request sampling entirely (discrete
+    /// events still flow — they are low-rate by construction).
+    pub fn new(every: u64, sink: TraceSink) -> Self {
+        RequestTracer {
+            every,
+            counter: Arc::new(AtomicU64::new(0)),
+            sink,
+        }
+    }
+
+    /// Decide whether this request is sampled; returns its trace id if
+    /// so. Costs one relaxed `fetch_add` either way.
+    pub fn try_sample(&self) -> Option<u64> {
+        if self.every == 0 {
+            return None;
+        }
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        (n % self.every == 0).then_some(n)
+    }
+
+    /// Emit one JSONL event (caller builds the object with
+    /// `util::json` builders).
+    pub fn emit(&self, event: &Json) {
+        self.sink.emit(event);
+    }
+
+    pub fn flush(&self) {
+        self.sink.flush();
+    }
+
+    pub fn sink(&self) -> &TraceSink {
+        &self.sink
+    }
+}
+
+/// FNV-1a over raw bytes — used to turn an exact context-group key
+/// into a compact, log-safe hash for trace events.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj, s};
+
+    #[test]
+    fn one_in_n_sampling_is_exact() {
+        let t = RequestTracer::new(3, TraceSink::memory());
+        let sampled: Vec<_> = (0..30).filter_map(|_| t.try_sample()).collect();
+        assert_eq!(sampled.len(), 10);
+        assert_eq!(sampled[0], 0);
+        assert_eq!(sampled[1], 3);
+    }
+
+    #[test]
+    fn zero_disables_sampling() {
+        let t = RequestTracer::new(0, TraceSink::memory());
+        assert!((0..100).filter_map(|_| t.try_sample()).next().is_none());
+    }
+
+    #[test]
+    fn memory_sink_captures_jsonl() {
+        let sink = TraceSink::memory();
+        let t = RequestTracer::new(1, sink.clone());
+        t.emit(&obj(vec![
+            ("event", s("stage")),
+            ("trace", num(7.0)),
+            ("ns", num(123.0)),
+        ]));
+        let lines = sink.drain();
+        assert_eq!(lines.len(), 1);
+        let parsed = crate::util::json::parse(&lines[0]).expect("valid json");
+        assert_eq!(parsed.get("event").as_str(), Some("stage"));
+    }
+
+    #[test]
+    fn fnv_is_stable_and_spreads() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"model-a|ctx1"), fnv1a64(b"model-a|ctx2"));
+    }
+}

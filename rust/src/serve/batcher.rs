@@ -73,6 +73,17 @@ where
     groups
 }
 
+/// Compact, stable hash of a request's context-group key — FNV-1a over
+/// the exact [`context_key`] bytes [`context_groups`] groups on
+/// (version pinned to 0, same as grouping).  Trace events carry this
+/// instead of the raw key so coalesced requests are correlatable in
+/// logs without dumping feature bytes.
+pub fn group_key_hash(model: &str, context: &[crate::feature::FeatureSlot]) -> u64 {
+    let mut key = Vec::new();
+    context_key(&mut key, model, 0, context);
+    crate::obs::trace::fnv1a64(&key)
+}
+
 impl<T> Batch<T> {
     /// Same-context groups of this batch's requests, first-seen order —
     /// the group metadata a scorer plans kernel passes from.  (The
@@ -369,6 +380,21 @@ mod tests {
         let groups = context_groups(reqs.iter());
         assert_eq!(groups.len(), 3);
         assert!(groups.iter().all(|g| g.members.len() == 1));
+    }
+
+    #[test]
+    fn group_key_hash_tracks_grouping_identity() {
+        // Requests that context_groups would coalesce share a hash;
+        // model or context differences split it.
+        let a = req_ctx("m", 7, 1);
+        let b = req_ctx("m", 7, 3); // same group key, different slate
+        let c = req_ctx("other", 7, 1);
+        let mut d = req_ctx("m", 7, 1);
+        d.context[0].value = 0.5;
+        let h = |r: &Request| group_key_hash(&r.model, &r.context);
+        assert_eq!(h(&a), h(&b));
+        assert_ne!(h(&a), h(&c));
+        assert_ne!(h(&a), h(&d));
     }
 
     #[test]

@@ -17,7 +17,9 @@ use std::time::{Duration, Instant};
 
 use crate::config::{Architecture, ServeConfig, ShedPolicy};
 use crate::model::Workspace;
-use crate::serve::batcher::{context_groups, ContextGroup, DynamicBatcher};
+use crate::obs::span::{SpanClock, Stage};
+use crate::obs::{Counter, Gauge, HistogramShard, ObsOptions, ObsRegistry, RequestTracer};
+use crate::serve::batcher::{context_groups, ContextGroup, DynamicBatcher, FlushReason};
 use crate::serve::context_cache::ContextCache;
 use crate::serve::overload::{
     BoundedQueue, DegradeLevel, OverloadController, Pop, Push,
@@ -25,6 +27,7 @@ use crate::serve::overload::{
 use crate::serve::router::Router;
 use crate::serve::{Request, Response, ServeError, ShedReason};
 use crate::util::histogram::LatencyHistogram;
+use crate::util::json::{num, obj, s};
 
 /// Aggregated serving statistics.
 #[derive(Clone, Debug, Default)]
@@ -59,7 +62,10 @@ pub struct ServeStats {
     /// Current degradation rung, worst across workers (gauge:
     /// 0 = full, 1 = truncate, 2 = ffm, 3 = lr).
     pub degrade_level: u64,
-    /// Jobs sitting in worker queues right now (gauge, racy by nature).
+    /// Jobs sitting in worker queues right now.  Read at the same
+    /// single boundary as every other field of a [`ServingEngine::stats`]
+    /// snapshot (see its consistency contract); exact once traffic has
+    /// quiesced, approximate while submitters are racing the snapshot.
     pub queue_depth: u64,
     /// Latency of requests that reached scoring (shed/expired excluded).
     pub latency: Option<LatencyHistogram>,
@@ -92,22 +98,149 @@ impl ServeStats {
 
 struct Job {
     req: Request,
-    enqueued: Instant,
+    /// Span clock started at submit (its `submitted` instant doubles as
+    /// the enqueue stamp for deadlines and overload accounting).
+    clock: SpanClock,
     /// SLO expiry stamped at admission (None when the SLO is disabled).
     deadline: Option<Instant>,
     reply: SyncSender<Result<Response, ServeError>>,
+    /// Trace id when this request was 1-in-N sampled at submit.
+    trace: Option<u64>,
 }
 
 /// Per-request batcher tag: everything the scorer needs to answer and
 /// account for a request after its `Request` was consumed.
 struct JobTag {
-    enqueued: Instant,
+    clock: SpanClock,
     deadline: Option<Instant>,
     reply: SyncSender<Result<Response, ServeError>>,
+    trace: Option<u64>,
 }
 
 struct WorkerShared {
     stats: ServeStats,
+}
+
+/// Registry counter/gauge handles shared by the client and every
+/// worker — recording is a relaxed atomic add, never a lock.
+#[derive(Clone)]
+struct EngineObs {
+    requests: Counter,
+    candidates: Counter,
+    batches: Counter,
+    groups: Counter,
+    coalesced: Counter,
+    errors: Counter,
+    expired: Counter,
+    shed_rejected: Counter,
+    shed_dropped: Counter,
+    transitions: Counter,
+    flush_full: Counter,
+    flush_deadline: Counter,
+    flush_drain: Counter,
+    queue_depth: Gauge,
+}
+
+impl EngineObs {
+    fn new(reg: &ObsRegistry) -> Self {
+        EngineObs {
+            requests: reg.counter("fw_serve_requests_total", "requests scored or expired"),
+            candidates: reg.counter("fw_serve_candidates_total", "candidates scored"),
+            batches: reg.counter("fw_serve_batches_total", "batches flushed to scoring"),
+            groups: reg.counter("fw_serve_groups_total", "context groups planned"),
+            coalesced: reg.counter(
+                "fw_serve_coalesced_requests_total",
+                "requests that shared a context group",
+            ),
+            errors: reg.counter("fw_serve_errors_total", "per-request scoring errors"),
+            expired: reg.counter(
+                "fw_serve_deadline_expired_total",
+                "requests fast-failed past their SLO deadline",
+            ),
+            shed_rejected: reg.counter(
+                "fw_serve_shed_rejected_total",
+                "requests rejected at submit (reject-new)",
+            ),
+            shed_dropped: reg.counter(
+                "fw_serve_shed_dropped_total",
+                "admitted requests evicted by newer ones (drop-oldest)",
+            ),
+            transitions: reg.counter(
+                "fw_serve_degrade_transitions_total",
+                "degradation-ladder transitions, both directions",
+            ),
+            flush_full: reg.counter(
+                "fw_serve_batch_flush_total{reason=\"full\"}",
+                "batch flushes by reason",
+            ),
+            flush_deadline: reg.counter(
+                "fw_serve_batch_flush_total{reason=\"deadline\"}",
+                "batch flushes by reason",
+            ),
+            flush_drain: reg.counter(
+                "fw_serve_batch_flush_total{reason=\"drain\"}",
+                "batch flushes by reason",
+            ),
+            queue_depth: reg.gauge(
+                "fw_serve_queue_depth",
+                "jobs in worker queues at the last stats() boundary",
+            ),
+        }
+    }
+}
+
+/// Per-worker observability state: one shard of each per-stage
+/// histogram (merged only at snapshot — workers never contend) plus
+/// the worker-labeled gauges and the sampled tracer.
+struct WorkerObs {
+    stage_queue: HistogramShard,
+    stage_flush: HistogramShard,
+    stage_group: HistogramShard,
+    stage_cache: HistogramShard,
+    stage_kernel: HistogramShard,
+    stage_total: HistogramShard,
+    /// Every wait the overload controller observes (served + expired) —
+    /// the registry view of the controller's windowed-p99 input signal.
+    overload_wait: HistogramShard,
+    overload_p99: Gauge,
+    degrade_level: Gauge,
+    cache_entries: Gauge,
+    tracer: Option<RequestTracer>,
+    worker: usize,
+}
+
+impl WorkerObs {
+    fn new(reg: &ObsRegistry, worker: usize, tracer: Option<RequestTracer>) -> Self {
+        let stage = |st: Stage| {
+            reg.histogram_shard(st.metric_name(), "per-stage serving latency (ns)")
+        };
+        WorkerObs {
+            stage_queue: stage(Stage::Queue),
+            stage_flush: stage(Stage::Flush),
+            stage_group: stage(Stage::Group),
+            stage_cache: stage(Stage::Cache),
+            stage_kernel: stage(Stage::Kernel),
+            stage_total: stage(Stage::Total),
+            overload_wait: reg.histogram_shard(
+                "fw_serve_overload_wait_ns",
+                "waits feeding the overload controller (served + expired)",
+            ),
+            overload_p99: reg.gauge(
+                &format!("fw_serve_overload_p99_ns{{worker=\"{worker}\"}}"),
+                "windowed p99 driving the degrade ladder",
+            ),
+            degrade_level: reg.gauge(
+                &format!("fw_serve_degrade_level{{worker=\"{worker}\"}}"),
+                "current degrade rung (0=full 1=truncate 2=ffm 3=lr)",
+            ),
+            cache_entries: reg.gauge(
+                &format!("fw_serve_cache_entries{{worker=\"{worker}\"}}"),
+                "live context-cache entries",
+            ),
+            tracer,
+            worker,
+        }
+    }
 }
 
 /// Clonable request-submission handle onto a running engine.
@@ -125,8 +258,8 @@ pub struct ServeClient {
     shed_policy: ShedPolicy,
     /// SLO budget stamped onto each job (None disables deadlines).
     slo: Option<Duration>,
-    shed_rejected: Arc<AtomicU64>,
-    shed_dropped: Arc<AtomicU64>,
+    obs: EngineObs,
+    tracer: Option<RequestTracer>,
 }
 
 impl ServeClient {
@@ -154,21 +287,22 @@ impl ServeClient {
         let (reply, rx) = sync_channel(1);
         let job = Job {
             req,
-            enqueued: now,
+            clock: SpanClock::start_at(now),
             deadline: self.slo.map(|d| now + d),
             reply,
+            trace: self.tracer.as_ref().and_then(|t| t.try_sample()),
         };
         match self.queues[shard].push(job, self.shed_policy) {
             Push::Admitted => Ok(rx),
             Push::AdmittedDroppingOldest(evicted) => {
-                self.shed_dropped.fetch_add(1, Ordering::Relaxed);
+                self.obs.shed_dropped.inc();
                 let _ = evicted
                     .reply
                     .send(Err(ServeError::Shed(ShedReason::DroppedOldest)));
                 Ok(rx)
             }
             Push::Rejected(_) => {
-                self.shed_rejected.fetch_add(1, Ordering::Relaxed);
+                self.obs.shed_rejected.inc();
                 Err(ServeError::Shed(ShedReason::QueueFull))
             }
             Push::Closed(_) => Err(ServeError::ShutDown),
@@ -179,6 +313,11 @@ impl ServeClient {
     pub fn score(&self, req: Request) -> Result<Response, ServeError> {
         let rx = self.submit(req)?;
         rx.recv().map_err(|_| ServeError::ShutDown)?
+    }
+
+    /// Jobs sitting in worker queues right now (sum across shards).
+    pub fn queue_depth(&self) -> u64 {
+        self.queues.iter().map(|q| q.len() as u64).sum()
     }
 }
 
@@ -192,6 +331,10 @@ pub struct ServingEngine {
     /// Bumped by [`invalidate_caches`](Self::invalidate_caches); workers
     /// clear their context caches when they observe a new epoch.
     cache_epoch: Arc<AtomicU64>,
+    /// Metrics registry every counter/gauge/histogram of this engine
+    /// lives in (private per engine unless one was passed in through
+    /// [`ObsOptions::with_registry`]).
+    registry: Arc<ObsRegistry>,
 }
 
 impl ServingEngine {
@@ -203,10 +346,25 @@ impl ServingEngine {
     /// pinned context→shard affinity that keeps repeated contexts on
     /// one worker's cache.
     pub fn start(router: Router, cfg: ServeConfig) -> Self {
+        Self::start_with_obs(router, cfg, ObsOptions::default())
+    }
+
+    /// [`start`](Self::start) with an explicit observability
+    /// configuration: a shared [`ObsRegistry`] (so one scrape covers
+    /// serving + fleet + deploy + train) and/or a sampled
+    /// [`RequestTracer`].  The default options give the engine a fresh
+    /// private registry and no tracer — recording still happens (it is
+    /// nanoseconds of relaxed atomics), but nothing is rendered unless
+    /// someone asks.
+    pub fn start_with_obs(router: Router, cfg: ServeConfig, obs: ObsOptions) -> Self {
         let workers_n = cfg.workers.max(1);
         let router = router.with_shards(workers_n);
         let cache_epoch = Arc::new(AtomicU64::new(0));
         let stop = Arc::new(AtomicBool::new(false));
+        let registry =
+            obs.registry.clone().unwrap_or_else(|| Arc::new(ObsRegistry::new()));
+        let tracer = obs.tracer.clone();
+        let eobs = EngineObs::new(&registry);
         let mut queues = Vec::new();
         let mut workers = Vec::new();
         let mut shared = Vec::new();
@@ -220,9 +378,11 @@ impl ServingEngine {
             let sh2 = sh.clone();
             let epoch = cache_epoch.clone();
             let q2 = queue.clone();
+            let eobs2 = eobs.clone();
+            let wobs = WorkerObs::new(&registry, w, tracer.clone());
             let handle = std::thread::Builder::new()
                 .name(format!("fw-serve-{w}"))
-                .spawn(move || worker_loop(q2, router, cfg, sh2, epoch))
+                .spawn(move || worker_loop(q2, router, cfg, sh2, epoch, eobs2, wobs))
                 .expect("spawn worker");
             queues.push(queue);
             workers.push(handle);
@@ -235,10 +395,16 @@ impl ServingEngine {
             shed_policy: cfg.shed_policy,
             slo: (cfg.request_slo_us > 0)
                 .then(|| Duration::from_micros(cfg.request_slo_us)),
-            shed_rejected: Arc::new(AtomicU64::new(0)),
-            shed_dropped: Arc::new(AtomicU64::new(0)),
+            obs: eobs,
+            tracer,
         };
-        ServingEngine { router, cfg, client, workers, shared, cache_epoch }
+        ServingEngine { router, cfg, client, workers, shared, cache_epoch, registry }
+    }
+
+    /// The registry this engine records into (render it with
+    /// [`ObsRegistry::render_prometheus`]).
+    pub fn obs_registry(&self) -> &Arc<ObsRegistry> {
+        &self.registry
     }
 
     /// Score a request synchronously.
@@ -273,10 +439,33 @@ impl ServingEngine {
     }
 
     /// Aggregate statistics across workers.
+    ///
+    /// **Consistency contract:** the snapshot is taken at ONE boundary.
+    /// Every worker's stats mutex is acquired up front and held until
+    /// every field — per-worker counters, the merged latency histogram,
+    /// the shed counters, and the point-in-time gauges (`queue_depth`,
+    /// `degrade_level`, `cache_entries`) — has been read.  A worker
+    /// publishes a batch's outcome under that same mutex, so no batch
+    /// can retire between the gauge reads and the counter reads: the
+    /// snapshot is internally consistent (e.g. `groups <= requests`
+    /// always holds).  The one residual race is with *submitters*:
+    /// queue pushes don't take worker mutexes, so `queue_depth` and the
+    /// shed counters are exact only once traffic has quiesced.
     pub fn stats(&self) -> ServeStats {
+        // Acquire ALL worker guards first — one cut across the engine.
+        // Workers only ever lock their own mutex (no nesting), so grab
+        // order cannot deadlock.
+        let guards: Vec<_> = self
+            .shared
+            .iter()
+            .map(|sh| sh.lock().expect("stats lock"))
+            .collect();
         let mut out = ServeStats { latency: Some(LatencyHistogram::new()), ..Default::default() };
-        for sh in &self.shared {
-            let s = sh.lock().expect("stats lock");
+        // Gauges and shed counters read while every worker is paused.
+        out.shed_rejected = self.client.obs.shed_rejected.get();
+        out.shed_dropped = self.client.obs.shed_dropped.get();
+        out.queue_depth = self.client.queue_depth();
+        for s in &guards {
             out.requests += s.stats.requests;
             out.candidates += s.stats.candidates;
             out.batches += s.stats.batches;
@@ -293,9 +482,8 @@ impl ServingEngine {
                 a.merge(b);
             }
         }
-        out.shed_rejected = self.client.shed_rejected.load(Ordering::Relaxed);
-        out.shed_dropped = self.client.shed_dropped.load(Ordering::Relaxed);
-        out.queue_depth = self.client.queues.iter().map(|q| q.len() as u64).sum();
+        drop(guards);
+        self.client.obs.queue_depth.set(out.queue_depth as f64);
         out
     }
 
@@ -348,6 +536,8 @@ fn worker_loop(
     cfg: ServeConfig,
     shared: Arc<Mutex<WorkerShared>>,
     epoch: Arc<AtomicU64>,
+    eobs: EngineObs,
+    wobs: WorkerObs,
 ) {
     let mut batcher: DynamicBatcher<JobTag> =
         DynamicBatcher::new(cfg.max_batch, Duration::from_micros(cfg.max_wait_us));
@@ -361,14 +551,20 @@ fn worker_loop(
             .unwrap_or(Duration::from_millis(50));
         match queue.pop_timeout(wait) {
             Pop::Item(job) => {
+                let mut clock = job.clock;
+                clock.stamp(Stage::Queue);
                 let tag = JobTag {
-                    enqueued: job.enqueued,
+                    clock,
                     deadline: job.deadline,
                     reply: job.reply,
+                    trace: job.trace,
                 };
                 if let Some(batch) = batcher.push(job.req, tag) {
                     sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                    score_batch(batch, &router, &cfg, &mut cache, &mut ws, &mut ctl, &shared);
+                    score_batch(
+                        batch, &router, &cfg, &mut cache, &mut ws, &mut ctl, &shared,
+                        &eobs, &wobs,
+                    );
                 }
             }
             Pop::TimedOut => {}
@@ -378,14 +574,23 @@ fn worker_loop(
                 // what's still lingering in the batcher and exit
                 if let Some(batch) = batcher.drain() {
                     sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-                    score_batch(batch, &router, &cfg, &mut cache, &mut ws, &mut ctl, &shared);
+                    score_batch(
+                        batch, &router, &cfg, &mut cache, &mut ws, &mut ctl, &shared,
+                        &eobs, &wobs,
+                    );
+                }
+                if let Some(tr) = wobs.tracer.as_ref() {
+                    tr.flush();
                 }
                 return;
             }
         }
         if let Some(batch) = batcher.poll_deadline() {
             sync_cache_epoch(&epoch, &mut seen_epoch, &mut cache);
-            score_batch(batch, &router, &cfg, &mut cache, &mut ws, &mut ctl, &shared);
+            score_batch(
+                batch, &router, &cfg, &mut cache, &mut ws, &mut ctl, &shared, &eobs,
+                &wobs,
+            );
         }
     }
 }
@@ -440,7 +645,30 @@ pub fn score_requests_coalesced_with(
     emit: impl FnMut(usize, Result<Response, ServeError>),
 ) -> CoalescePlan {
     let groups = context_groups(requests.iter());
-    score_groups_with(router, cache, ws, max_group_candidates, None, requests, &groups, emit)
+    score_groups_with(
+        router,
+        cache,
+        ws,
+        max_group_candidates,
+        None,
+        None,
+        requests,
+        &groups,
+        emit,
+    )
+}
+
+/// Per-stage timing probe threaded into [`score_groups_with`] by the
+/// engine's worker loop: cache-lookup and kernel time per group are
+/// recorded into the worker's histogram shards, and the most recent
+/// group's split is parked in `last` so the emit closure (which runs
+/// while the group is borrowed) can attach it to sampled traces.
+/// `None` costs nothing — no `Instant::now()` calls are added.
+pub struct StageProbe<'a> {
+    pub cache: &'a HistogramShard,
+    pub kernel: &'a HistogramShard,
+    /// (cache_ns, kernel_ns) of the most recently scored group.
+    pub last: std::cell::Cell<(u64, u64)>,
 }
 
 /// The group-scoring core behind [`score_requests_coalesced_with`]:
@@ -460,6 +688,7 @@ pub fn score_groups_with(
     ws: &mut Workspace,
     max_group_candidates: usize,
     arch_cap: Option<Architecture>,
+    probe: Option<&StageProbe>,
     requests: &[Request],
     groups: &[ContextGroup],
     mut emit: impl FnMut(usize, Result<Response, ServeError>),
@@ -522,8 +751,10 @@ pub fn score_groups_with(
         // ONE context-partial lookup/insert per group.  The partial is
         // rung-independent, so one cache entry serves every degrade
         // level.
+        let t_cache = probe.map(|_| Instant::now());
         let cp =
             cache.get_or_compute_named(&model, &first.model, version, &first.context);
+        let cache_ns = t_cache.map(|t| t.elapsed().as_nanos() as u64);
         // Union slate: every valid member's candidates, request order.
         let mut slate: Vec<&[crate::feature::FeatureSlot]> =
             Vec::with_capacity(group.candidates);
@@ -532,6 +763,7 @@ pub fn score_groups_with(
                 slate.push(cand.as_slice());
             }
         }
+        let t_kernel = probe.map(|_| Instant::now());
         model.predict_batch_with_partial_capped_as(
             arch_cap.unwrap_or(model.cfg.arch),
             &cp,
@@ -540,6 +772,13 @@ pub fn score_groups_with(
             ws,
             &mut scores,
         );
+        if let Some(p) = probe {
+            let c_ns = cache_ns.unwrap_or(0);
+            let k_ns = t_kernel.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+            p.cache.record_ns(c_ns);
+            p.kernel.record_ns(k_ns);
+            p.last.set((c_ns, k_ns));
+        }
         // Scatter back, preserving request order within the group.
         let mut off = 0usize;
         for &i in &valid {
@@ -596,6 +835,7 @@ pub fn score_requests_coalesced(
 /// With `request_slo_us == 0` (the default) every step above is
 /// disabled and this is bit-identical to the pre-overload engine:
 /// first-seen group order, no truncation, models served as configured.
+#[allow(clippy::too_many_arguments)]
 fn score_batch(
     batch: crate::serve::batcher::Batch<JobTag>,
     router: &Router,
@@ -604,15 +844,27 @@ fn score_batch(
     ws: &mut Workspace,
     ctl: &mut OverloadController,
     shared: &Arc<Mutex<WorkerShared>>,
+    eobs: &EngineObs,
+    wobs: &WorkerObs,
 ) {
+    let flush_start = Instant::now();
+    match batch.reason {
+        FlushReason::Full => eobs.flush_full.inc(),
+        FlushReason::Deadline => eobs.flush_deadline.inc(),
+        FlushReason::Drain => eobs.flush_drain.inc(),
+    }
     let mut candidates = 0u64;
     let mut errors = 0u64;
     let mut expired = 0u64;
     let mut hist = LatencyHistogram::new();
     let (hits0, misses0) = (cache.hits, cache.misses);
 
-    let (mut reqs, tags): (Vec<Request>, Vec<JobTag>) =
+    let (mut reqs, mut tags): (Vec<Request>, Vec<JobTag>) =
         batch.items.into_iter().unzip();
+    // Flush stage: pop-to-flush (batcher linger), charged per request.
+    for t in &mut tags {
+        t.clock.stamp_at(Stage::Flush, flush_start);
+    }
 
     let level = ctl.level();
     if level.truncates() {
@@ -622,13 +874,14 @@ fn score_batch(
         }
     }
 
+    let t_group = Instant::now();
     let mut groups = context_groups(reqs.iter());
     if ctl.enabled() {
         // Deadline-aware order: the group whose oldest member has the
         // least remaining budget is scored first.  (Same SLO for every
         // request ⇒ oldest enqueue == smallest remaining budget.)
         groups.sort_by_key(|g| {
-            g.members.iter().map(|&i| tags[i].enqueued).min()
+            g.members.iter().map(|&i| tags[i].clock.submitted).min()
         });
     }
 
@@ -647,8 +900,12 @@ fn score_batch(
                     .map_or(true, |d| d > now);
                 if !keep {
                     let t = tags[i].take().expect("taken once");
-                    let waited = t.enqueued.elapsed();
-                    ctl.observe_ns(waited.as_nanos().min(u64::MAX as u128) as u64);
+                    let waited = t.clock.submitted.elapsed();
+                    let waited_ns = waited.as_nanos().min(u64::MAX as u128) as u64;
+                    ctl.observe_ns(waited_ns);
+                    // Expired waits feed the overload-signal histogram
+                    // but never the served-latency stage histograms.
+                    wobs.overload_wait.record_ns(waited_ns);
                     expired += 1;
                     let _ = t.reply.send(Err(ServeError::DeadlineExpired {
                         waited_us: waited.as_micros().min(u64::MAX as u128) as u64,
@@ -663,6 +920,35 @@ fn score_batch(
         groups.retain(|g| !g.members.is_empty());
     }
 
+    // Group-assembly stage: grouping + deadline scheduling, charged
+    // once per batch into the shard and onto each surviving clock.
+    let group_ns = t_group.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+    wobs.stage_group.record_ns(group_ns);
+    for t in tags.iter_mut().flatten() {
+        t.clock.add_ns(Stage::Group, group_ns);
+    }
+
+    // Sampled-trace support: group membership sizes, built only when
+    // this batch actually carries a sampled request.
+    let traced_any =
+        wobs.tracer.is_some() && tags.iter().flatten().any(|t| t.trace.is_some());
+    let group_of: Option<Vec<u32>> = traced_any.then(|| {
+        let mut m = vec![0u32; reqs.len()];
+        for g in &groups {
+            for &i in &g.members {
+                m[i] = g.members.len() as u32;
+            }
+        }
+        m
+    });
+    let batch_size = reqs.len();
+
+    let probe = StageProbe {
+        cache: &wobs.stage_cache,
+        kernel: &wobs.stage_kernel,
+        last: std::cell::Cell::new((0, 0)),
+    };
+
     // Streamed scatter: each request is answered the moment its group
     // completes, so requests in early groups don't pay the later
     // groups' scoring time in (real or recorded) latency.
@@ -672,22 +958,86 @@ fn score_batch(
         ws,
         cfg.max_group_candidates,
         level.arch_cap(),
+        Some(&probe),
         &reqs,
         &groups,
         |i, result| {
-            match &result {
-                Ok(resp) => candidates += resp.scores.len() as u64,
-                Err(_) => errors += 1,
+            let n_scores = match &result {
+                Ok(resp) => {
+                    candidates += resp.scores.len() as u64;
+                    resp.scores.len()
+                }
+                Err(_) => {
+                    errors += 1;
+                    0
+                }
+            };
+            let mut t = tags[i].take().expect("planner emits each request once");
+            let total_ns = t.clock.finish_at(Instant::now());
+            hist.record_ns(total_ns);
+            ctl.observe_ns(total_ns);
+            wobs.overload_wait.record_ns(total_ns);
+            wobs.stage_total.record_ns(total_ns);
+            wobs.stage_queue.record_ns(t.clock.times.get(Stage::Queue));
+            wobs.stage_flush.record_ns(t.clock.times.get(Stage::Flush));
+            if let (Some(tracer), Some(id)) = (wobs.tracer.as_ref(), t.trace) {
+                // Cache/kernel split of the group just scored (errors
+                // emitted before any kernel pass read zeros).
+                let (c_ns, k_ns) = probe.last.get();
+                t.clock.add_ns(Stage::Cache, c_ns);
+                t.clock.add_ns(Stage::Kernel, k_ns);
+                let group_key = crate::serve::batcher::group_key_hash(
+                    &reqs[i].model,
+                    &reqs[i].context,
+                );
+                for st in Stage::ALL {
+                    tracer.emit(&obj(vec![
+                        ("event", s("stage")),
+                        ("trace", num(id as f64)),
+                        ("stage", s(st.label())),
+                        ("ns", num(t.clock.times.get(st) as f64)),
+                        ("model", s(&reqs[i].model)),
+                        ("group_key", s(&format!("{group_key:016x}"))),
+                        ("degrade", s(level.label())),
+                        ("worker", num(wobs.worker as f64)),
+                        ("batch", num(batch_size as f64)),
+                        (
+                            "group",
+                            num(group_of
+                                .as_ref()
+                                .map(|m| m[i] as f64)
+                                .unwrap_or(0.0)),
+                        ),
+                        ("candidates", num(n_scores as f64)),
+                    ]));
+                }
             }
-            let t = tags[i].take().expect("planner emits each request once");
-            let waited = t.enqueued.elapsed();
-            hist.record(waited);
-            ctl.observe_ns(waited.as_nanos().min(u64::MAX as u128) as u64);
             let _ = t.reply.send(result); // receiver may have gone away
         },
     );
 
-    ctl.decide();
+    if let Some(new_level) = ctl.decide() {
+        eobs.transitions.inc();
+        if let Some(tracer) = wobs.tracer.as_ref() {
+            tracer.emit(&obj(vec![
+                ("event", s("overload_transition")),
+                ("worker", num(wobs.worker as f64)),
+                ("level", s(new_level.label())),
+                ("p99_ns", num(ctl.windowed_p99_ns() as f64)),
+            ]));
+        }
+    }
+    wobs.overload_p99.set(ctl.windowed_p99_ns() as f64);
+    wobs.degrade_level.set(ctl.level() as u64 as f64);
+    wobs.cache_entries.set(cache.entries() as f64);
+
+    eobs.requests.add(reqs.len() as u64);
+    eobs.candidates.add(candidates);
+    eobs.batches.inc();
+    eobs.groups.add(plan.groups);
+    eobs.coalesced.add(plan.coalesced_requests);
+    eobs.errors.add(errors);
+    eobs.expired.add(expired);
 
     let mut sh = shared.lock().expect("stats lock");
     sh.stats.requests += reqs.len() as u64;
@@ -712,6 +1062,7 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
     use crate::model::regressor::Regressor;
+    use crate::obs::TraceSink;
     use crate::serve::trace::TraceGenerator;
     use crate::serve::ModelHandle;
 
@@ -1317,6 +1668,132 @@ mod tests {
         let mut want = Vec::new();
         reg.predict_batch_with_partial(&cp, &full.candidates, &mut ws, &mut want);
         assert_eq!(results[0].as_ref().unwrap().scores, want);
+    }
+
+    #[test]
+    fn obs_attached_engine_is_bit_identical_to_partial_path() {
+        // Registry attached, tracer attached with sampling DISABLED
+        // (every = 0): responses must be bitwise what the per-request
+        // partial path computes — the observability plane observes,
+        // never perturbs.
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let reg_model = Regressor::new(&cfg);
+        let router = Router::new(1);
+        router.register("ctr", ModelHandle::new(reg_model.clone()));
+        let registry = Arc::new(ObsRegistry::new());
+        let obs = ObsOptions::with_registry(registry.clone())
+            .tracer(RequestTracer::new(0, TraceSink::memory()));
+        let eng = ServingEngine::start_with_obs(
+            router,
+            ServeConfig {
+                workers: 1,
+                max_batch: 64,
+                max_wait_us: 100,
+                context_cache_entries: 1024,
+                ..ServeConfig::default()
+            },
+            obs,
+        );
+        let mut gen = TraceGenerator::new(61, 6, 3, 1 << 10, 4);
+        let mut ws = Workspace::new();
+        for _ in 0..50 {
+            let req = gen.next_request("ctr");
+            let resp = eng.score(req.clone()).unwrap();
+            let cp = reg_model.context_partial(&req.context);
+            let mut want = Vec::new();
+            reg_model.predict_batch_with_partial(&cp, &req.candidates, &mut ws, &mut want);
+            assert_eq!(resp.scores, want, "observability wiring perturbed scores");
+        }
+        eng.shutdown();
+        // every request flowed through the shared registry...
+        assert_eq!(registry.counter_value("fw_serve_requests_total"), Some(50));
+        let total =
+            registry.histogram_snapshot("fw_serve_stage_total_ns").unwrap();
+        assert_eq!(total.count(), 50);
+        let queue =
+            registry.histogram_snapshot("fw_serve_stage_queue_ns").unwrap();
+        assert_eq!(queue.count(), 50);
+        // ...and one render exposes a scrapeable exposition
+        let text = registry.render_prometheus();
+        crate::testutil::check_prometheus_text(&text).expect("render well-formed");
+        assert!(text.contains("fw_serve_stage_kernel_ns{quantile=\"0.99\"}"));
+        assert!(text.contains("fw_serve_requests_total 50"));
+    }
+
+    #[test]
+    fn sampled_tracing_emits_valid_jsonl_one_in_n() {
+        let sink = TraceSink::memory();
+        let obs = ObsOptions::default().tracer(RequestTracer::new(3, sink.clone()));
+        let cfg = ModelConfig::deep_ffm(6, 2, 1 << 10, &[8]);
+        let router = Router::new(1);
+        router.register("ctr", ModelHandle::new(Regressor::new(&cfg)));
+        let eng = ServingEngine::start_with_obs(
+            router,
+            ServeConfig {
+                workers: 1,
+                max_batch: 64,
+                max_wait_us: 100,
+                context_cache_entries: 1024,
+                ..ServeConfig::default()
+            },
+            obs,
+        );
+        let mut gen = TraceGenerator::new(67, 6, 3, 1 << 10, 4);
+        for _ in 0..30 {
+            eng.score(gen.next_request("ctr")).unwrap();
+        }
+        eng.shutdown();
+        let lines = sink.drain();
+        // 1-in-3 over 30 requests = 10 sampled, one event per stage
+        assert_eq!(lines.len(), 10 * Stage::ALL.len());
+        let mut ids = std::collections::BTreeSet::new();
+        let mut totals = 0;
+        for line in &lines {
+            let ev = crate::util::json::parse(line).expect("valid JSONL");
+            assert_eq!(ev.get("event").as_str(), Some("stage"));
+            assert_eq!(ev.get("model").as_str(), Some("ctr"));
+            assert!(ev.get("ns").as_f64().is_some());
+            assert_eq!(ev.get("group_key").as_str().map(|k| k.len()), Some(16));
+            ids.insert(ev.get("trace").as_f64().unwrap() as u64);
+            if ev.get("stage").as_str() == Some("total") {
+                totals += 1;
+            }
+        }
+        assert_eq!(ids.len(), 10, "each sampled request keeps one trace id");
+        assert_eq!(totals, 10, "each sampled request closes with a total event");
+    }
+
+    #[test]
+    fn stats_snapshot_is_consistent_at_one_boundary() {
+        // Satellite: stats() must cut across all workers at one
+        // boundary — counters monotone across in-flight snapshots, and
+        // internally consistent (groups can never exceed requests in
+        // any single snapshot, which a mid-merge race could show).
+        let (eng, mut gen) = engine(2, 1024);
+        let client = eng.client();
+        let reqs: Vec<Request> = (0..300).map(|_| gen.next_request("ctr")).collect();
+        let driver = std::thread::spawn(move || {
+            for r in reqs {
+                client.score(r).unwrap();
+            }
+        });
+        let mut last_requests = 0u64;
+        for _ in 0..50 {
+            let s = eng.stats();
+            assert!(s.requests >= last_requests, "requests went backwards");
+            assert!(s.groups <= s.requests, "snapshot tore mid-merge");
+            assert!(s.batches <= s.requests, "snapshot tore mid-merge");
+            last_requests = s.requests;
+        }
+        driver.join().unwrap();
+        // quiesced: snapshots agree and the queues are empty
+        let a = eng.stats();
+        let b = eng.stats();
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.groups, b.groups);
+        assert_eq!(a.queue_depth, 0);
+        let fin = eng.shutdown();
+        assert_eq!(fin.requests, 300);
     }
 
     #[test]

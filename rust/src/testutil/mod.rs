@@ -93,6 +93,96 @@ pub fn prop(cases: usize, mut f: impl FnMut(&mut Gen)) {
     }
 }
 
+/// Validate Prometheus text exposition format (the subset
+/// `ObsRegistry::render_prometheus` emits, which is also what real
+/// scrapers require): well-formed `# HELP`/`# TYPE` lines, legal
+/// metric names, numeric sample values, and every sample covered by a
+/// preceding `# TYPE` declaration for its base family.
+pub fn check_prometheus_text(text: &str) -> Result<(), String> {
+    fn valid_name(name: &str) -> bool {
+        !name.is_empty()
+            && name
+                .chars()
+                .next()
+                .map(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+                .unwrap_or(false)
+            && name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    const KINDS: [&str; 5] = ["counter", "gauge", "histogram", "summary", "untyped"];
+    let mut typed: std::collections::BTreeMap<String, String> = Default::default();
+    let mut samples = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("").trim();
+            if !valid_name(name) {
+                return Err(format!("line {ln}: bad metric name in TYPE: '{name}'"));
+            }
+            if !KINDS.contains(&kind) {
+                return Err(format!("line {ln}: unknown metric type '{kind}'"));
+            }
+            if typed.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("line {ln}: duplicate TYPE for '{name}'"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap_or("");
+            if !valid_name(name) {
+                return Err(format!("line {ln}: bad metric name in HELP: '{name}'"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // arbitrary comments are legal
+        }
+        // sample line: name[{labels}] value
+        let (name_part, value_part) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => return Err(format!("line {ln}: sample missing value: '{line}'")),
+        };
+        let name = name_part.split('{').next().unwrap_or("");
+        if !valid_name(name) {
+            return Err(format!("line {ln}: bad sample metric name: '{name}'"));
+        }
+        if let Some(labels) = name_part.split_once('{').map(|(_, l)| l) {
+            if !labels.ends_with('}') {
+                return Err(format!("line {ln}: unterminated label set: '{line}'"));
+            }
+        }
+        let v = value_part.trim();
+        if v.parse::<f64>().is_err() && !matches!(v, "NaN" | "+Inf" | "-Inf") {
+            return Err(format!("line {ln}: non-numeric sample value '{v}'"));
+        }
+        // summary quantile samples and _sum/_count suffixes belong to
+        // their base family's TYPE declaration
+        let family_typed = typed.contains_key(name)
+            || name
+                .strip_suffix("_sum")
+                .map(|b| typed.get(b).map(String::as_str) == Some("summary"))
+                .unwrap_or(false)
+            || name
+                .strip_suffix("_count")
+                .map(|b| typed.get(b).map(String::as_str) == Some("summary"))
+                .unwrap_or(false);
+        if !family_typed {
+            return Err(format!("line {ln}: sample '{name}' has no TYPE declaration"));
+        }
+        samples += 1;
+    }
+    if samples == 0 {
+        return Err("no samples found".to_string());
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +212,43 @@ mod tests {
         prop(10, |g| {
             assert!(g.case < 5, "deliberate failure");
         });
+    }
+
+    #[test]
+    fn prometheus_checker_accepts_well_formed_text() {
+        let text = "\
+# HELP fw_req_total requests\n\
+# TYPE fw_req_total counter\n\
+fw_req_total 42\n\
+# HELP fw_stage_ns stage latency\n\
+# TYPE fw_stage_ns summary\n\
+fw_stage_ns{quantile=\"0.5\"} 120.5\n\
+fw_stage_ns{quantile=\"0.99\"} 980\n\
+fw_stage_ns_sum 100000\n\
+fw_stage_ns_count 42\n\
+# TYPE fw_depth gauge\n\
+fw_depth NaN\n";
+        check_prometheus_text(text).expect("well-formed");
+    }
+
+    #[test]
+    fn prometheus_checker_rejects_malformed_text() {
+        // sample without a TYPE declaration
+        assert!(check_prometheus_text("fw_orphan 1\n").is_err());
+        // bad metric name
+        assert!(check_prometheus_text("# TYPE 9bad counter\n9bad 1\n").is_err());
+        // non-numeric value
+        assert!(
+            check_prometheus_text("# TYPE fw_x gauge\nfw_x notanumber\n").is_err()
+        );
+        // unknown kind
+        assert!(check_prometheus_text("# TYPE fw_x widget\nfw_x 1\n").is_err());
+        // duplicate TYPE
+        assert!(check_prometheus_text(
+            "# TYPE fw_x gauge\n# TYPE fw_x gauge\nfw_x 1\n"
+        )
+        .is_err());
+        // empty exposition
+        assert!(check_prometheus_text("").is_err());
     }
 }

@@ -71,6 +71,39 @@ pub struct HogwildStats {
     pub auc_points: Vec<f64>,
 }
 
+impl HogwildStats {
+    /// Training throughput of this chunk.
+    pub fn examples_per_sec(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.examples as f64 / self.wall_seconds
+        }
+    }
+
+    /// Export this chunk's outcome into a metrics registry: the example
+    /// counter accumulates across chunks; throughput and rolling AUC
+    /// are last-chunk gauges.
+    pub fn export_to(&self, reg: &crate::obs::ObsRegistry) {
+        reg.counter("fw_train_examples_total", "examples trained")
+            .add(self.examples as u64);
+        reg.gauge(
+            "fw_train_examples_per_sec",
+            "training throughput of the last chunk",
+        )
+        .set(self.examples_per_sec());
+        reg.gauge("fw_train_threads", "Hogwild threads of the last chunk")
+            .set(self.threads as f64);
+        if let Some(&a) = self.auc_points.last() {
+            reg.gauge(
+                "fw_train_rolling_auc",
+                "last rolling progressive-validation AUC window",
+            )
+            .set(a);
+        }
+    }
+}
+
 /// Train one chunk of examples across `cfg.threads` threads sharing the
 /// regressor without locks.  Returns round statistics.
 ///
@@ -197,6 +230,22 @@ mod tests {
         let mut t = Trainer::new(reg);
         let auc = t.test_auc(&test);
         assert!(auc > 0.55, "hogwild auc {auc}");
+    }
+
+    #[test]
+    fn stats_export_accumulates_examples() {
+        let reg = crate::obs::ObsRegistry::new();
+        let stats = HogwildStats {
+            examples: 1_000,
+            threads: 2,
+            wall_seconds: 0.5,
+            auc_points: vec![0.6, 0.7],
+        };
+        stats.export_to(&reg);
+        stats.export_to(&reg); // counter accumulates, gauges refresh
+        assert_eq!(reg.counter_value("fw_train_examples_total"), Some(2_000));
+        assert_eq!(reg.gauge_value("fw_train_examples_per_sec"), Some(2_000.0));
+        assert_eq!(reg.gauge_value("fw_train_rolling_auc"), Some(0.7));
     }
 
     #[test]

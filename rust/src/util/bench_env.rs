@@ -1,0 +1,91 @@
+//! Shared envelope for `BENCH_*.json` reports.
+//!
+//! Every bench emits the same outer fields (schema version, bench
+//! name, smoke flag, ISA level, thread count, timestamp) so the perf
+//! trajectory across PRs is joinable: a downstream consumer can group
+//! any two reports by `schema_version` + `isa` + `threads_available`
+//! and compare payloads without per-bench parsing logic.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::{num, s, Json};
+
+/// Bump when envelope fields change shape or meaning.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Build a full report: envelope fields first, then the bench's own
+/// payload pairs. Payload keys must not collide with envelope keys
+/// (`schema_version`, `bench`, `smoke`, `isa`, `threads_available`,
+/// `unix_time_seconds`) — collisions panic, because a payload silently
+/// overwriting the envelope would corrupt cross-PR joins.
+pub fn report(bench: &str, smoke: bool, payload: Vec<(&str, Json)>) -> Json {
+    const RESERVED: [&str; 6] = [
+        "schema_version",
+        "bench",
+        "smoke",
+        "isa",
+        "threads_available",
+        "unix_time_seconds",
+    ];
+    for (k, _) in &payload {
+        assert!(
+            !RESERVED.contains(k),
+            "bench payload key '{k}' collides with the envelope"
+        );
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let now = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut pairs = vec![
+        ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("bench", s(bench)),
+        ("smoke", Json::Bool(smoke)),
+        ("isa", s(crate::simd::isa_name())),
+        ("threads_available", num(threads as f64)),
+        ("unix_time_seconds", num(now as f64)),
+    ];
+    pairs.extend(payload);
+    crate::util::json::obj(pairs)
+}
+
+/// Build the report and write it to `BENCH_<bench>.json` in the
+/// current directory. Returns the path written.
+pub fn write_report(bench: &str, smoke: bool, payload: Vec<(&str, Json)>) -> String {
+    let path = format!("BENCH_{bench}.json");
+    let doc = report(bench, smoke, payload);
+    std::fs::write(&path, doc.to_string()).expect("write bench json");
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn envelope_fields_present_and_typed() {
+        let doc = report("unit", true, vec![("rounds", num(3.0))]);
+        let text = doc.to_string();
+        let back = parse(&text).expect("report serializes to valid json");
+        assert_eq!(
+            back.get("schema_version").as_f64(),
+            Some(SCHEMA_VERSION as f64)
+        );
+        assert_eq!(back.get("bench").as_str(), Some("unit"));
+        assert_eq!(back.get("smoke"), &Json::Bool(true));
+        assert_eq!(back.get("isa").as_str(), Some(crate::simd::isa_name()));
+        assert!(back.get("threads_available").as_f64().unwrap() >= 1.0);
+        assert!(back.get("unix_time_seconds").as_f64().unwrap() > 0.0);
+        assert_eq!(back.get("rounds").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "collides with the envelope")]
+    fn payload_cannot_shadow_envelope() {
+        report("unit", false, vec![("isa", s("spoofed"))]);
+    }
+}

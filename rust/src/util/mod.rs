@@ -3,6 +3,7 @@
 //! no `rand`, `serde`, `flate2` or `criterion`, so these substrates are
 //! implemented here.
 
+pub mod bench_env;
 pub mod compress;
 pub mod histogram;
 pub mod json;
