@@ -116,6 +116,11 @@ SUBCOMMANDS:
                --examples N (per round)  --threads N (hogwild)
                --loss P (per-shipment drop probability)
                --dataset criteo|avazu|kdd|tiny  --bits N
+               --chaos (fault-injection soak with live traffic:
+               replica crash+restart, fabric crash+checkpoint
+               restore, DC partition, replica stall; prints its
+               reproducing seed)  --seed N (replay a chaos run)
+               --smoke (CI-sized chaos run)
     obs        unified observability snapshot: run deploy rounds with
                live traffic plus a fleet publish into one metrics
                registry and print the Prometheus render

@@ -22,12 +22,16 @@
 
 pub mod harness;
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::config::{ModelConfig, ServeConfig};
 use crate::data::synthetic::{DatasetSpec, SyntheticStream};
 use crate::eval::auc;
 use crate::feature::Example;
+use crate::fleet::checkpoint::{
+    mode_from_tag, mode_tag, ByteReader, ByteWriter,
+};
 use crate::model::regressor::Regressor;
 use crate::model::{io, Workspace};
 use crate::obs::{Counter, Gauge, HistogramShard, ObsOptions, RequestTracer};
@@ -35,7 +39,9 @@ use crate::serve::router::Router;
 use crate::serve::server::{ServeClient, ServeStats, ServingEngine};
 use crate::serve::ModelHandle;
 use crate::train::hogwild::{train_chunk, HogwildConfig};
-use crate::transfer::{SimulatedChannel, UpdateMode, UpdatePipeline, UpdateReceiver};
+use crate::transfer::{
+    FleetError, SimulatedChannel, UpdateMode, UpdatePipeline, UpdateReceiver,
+};
 use crate::util::json::{num, obj, s};
 
 /// Configuration of one deployment plane instance.
@@ -65,6 +71,11 @@ pub struct DeployConfig {
     pub rtt_seconds: f64,
     /// Base seed for the training / holdout streams.
     pub seed: u64,
+    /// Write a durable checkpoint every N rounds (0 = off).  Requires
+    /// [`checkpoint_path`](Self::checkpoint_path).
+    pub checkpoint_every_rounds: usize,
+    /// Where the checkpoint lives (CRC-sealed, atomic rename-on-write).
+    pub checkpoint_path: Option<PathBuf>,
 }
 
 impl DeployConfig {
@@ -83,6 +94,8 @@ impl DeployConfig {
             bandwidth_bps: 125_000_000.0, // 1 Gbps
             rtt_seconds: 0.03,
             seed: 0xf10c,
+            checkpoint_every_rounds: 0,
+            checkpoint_path: None,
         }
     }
 }
@@ -166,6 +179,109 @@ impl DeployMetrics {
     }
 }
 
+/// Durable snapshot of one [`DeploymentLoop`]: everything needed to
+/// resume the train→publish→swap cycle after a crash.  Shares the
+/// `FWCKPT1` framing (CRC seal, atomic write) with
+/// [`crate::fleet::checkpoint`]; the payloads are distinguished by
+/// their leading version byte (fabric = 1, deploy = 2).
+///
+/// With `train_threads == 1` a restored loop resumes
+/// **bit-identically**: the trainer snapshot includes optimizer state,
+/// the synthetic stream is fast-forwarded to the exact crash position,
+/// and the pipeline/receiver diff bases are restored byte-for-byte, so
+/// resumed rounds encode the same updates an uninterrupted run would.
+/// (Hogwild rounds with >1 thread are racy by design; recovery is
+/// still exact up to the checkpoint, resumed rounds then race anew.)
+#[derive(Clone, Debug)]
+pub struct DeployCheckpoint {
+    pub mode: UpdateMode,
+    /// Rounds completed at checkpoint time.
+    pub round: u64,
+    /// Training-stream position (examples drawn since round 0).
+    pub examples_consumed: u64,
+    /// Served model version at checkpoint time.
+    pub version: u64,
+    /// Trainer snapshot *with* optimizer state
+    /// ([`io::to_bytes`]`(_, true)`).
+    pub trainer: Vec<u8>,
+    /// Sender pipeline diff bases.
+    pub prev_raw: Option<Vec<u8>>,
+    pub prev_quant: Option<Vec<u8>>,
+    /// Receiver base file (the served model's wire form); None before
+    /// the first round.
+    pub receiver_base: Option<Vec<u8>>,
+    pub metrics: DeployMetrics,
+}
+
+impl DeployCheckpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u8(2); // deploy payload version
+        w.put_u8(mode_tag(self.mode));
+        w.put_u64(self.round);
+        w.put_u64(self.examples_consumed);
+        w.put_u64(self.version);
+        w.put_bytes(&self.trainer);
+        w.put_opt_bytes(self.prev_raw.as_deref());
+        w.put_opt_bytes(self.prev_quant.as_deref());
+        w.put_opt_bytes(self.receiver_base.as_deref());
+        let m = &self.metrics;
+        w.put_u64(m.rounds);
+        w.put_u64(m.examples);
+        w.put_u64(m.update_bytes_total);
+        w.put_u64(m.raw_bytes_total);
+        w.put_f64(m.encode_seconds_total);
+        w.put_f64(m.wire_seconds_total);
+        w.put_f64(m.apply_seconds_total);
+        w.put_f64(m.lag_seconds_total);
+        w.put_u64(m.last_version);
+        w.put_f64(m.last_holdout_auc);
+        w.finish()
+    }
+
+    pub fn from_bytes(payload: &[u8]) -> Result<DeployCheckpoint, FleetError> {
+        let mut r = ByteReader::new(payload);
+        let version_tag = r.get_u8()?;
+        if version_tag != 2 {
+            return Err(FleetError::Corrupt(format!(
+                "unsupported deploy checkpoint version {version_tag}"
+            )));
+        }
+        let mode = mode_from_tag(r.get_u8()?)?;
+        let round = r.get_u64()?;
+        let examples_consumed = r.get_u64()?;
+        let version = r.get_u64()?;
+        let trainer = r.get_bytes()?;
+        let prev_raw = r.get_opt_bytes()?;
+        let prev_quant = r.get_opt_bytes()?;
+        let receiver_base = r.get_opt_bytes()?;
+        let metrics = DeployMetrics {
+            rounds: r.get_u64()?,
+            examples: r.get_u64()?,
+            update_bytes_total: r.get_u64()?,
+            raw_bytes_total: r.get_u64()?,
+            encode_seconds_total: r.get_f64()?,
+            wire_seconds_total: r.get_f64()?,
+            apply_seconds_total: r.get_f64()?,
+            lag_seconds_total: r.get_f64()?,
+            last_version: r.get_u64()?,
+            last_holdout_auc: r.get_f64()?,
+        };
+        r.done()?;
+        Ok(DeployCheckpoint {
+            mode,
+            round,
+            examples_consumed,
+            version,
+            trainer,
+            prev_raw,
+            prev_quant,
+            receiver_base,
+            metrics,
+        })
+    }
+}
+
 /// Registry handles for the deploy plane's own signals (rounds, lag,
 /// swap latency, update bytes, holdout AUC).
 struct DeployObs {
@@ -191,6 +307,9 @@ pub struct DeploymentLoop {
     holdout: Vec<Example>,
     metrics: DeployMetrics,
     round: usize,
+    /// Training-stream position, checkpointed so a restored loop can
+    /// fast-forward its stream to the exact crash point.
+    examples_consumed: u64,
     obs: DeployObs,
 }
 
@@ -263,8 +382,155 @@ impl DeploymentLoop {
             holdout,
             metrics: DeployMetrics::default(),
             round: 0,
+            examples_consumed: 0,
             obs: deploy_obs,
         }
+    }
+
+    /// Rebuild a loop from a durable checkpoint (see
+    /// [`DeployCheckpoint`] for the resume guarantees).  The recovery
+    /// wall time — restore to ready-to-serve — lands in the registry's
+    /// `fw_recovery_replay_ns` histogram.
+    pub fn restore_with_obs(
+        cfg: DeployConfig,
+        obs: ObsOptions,
+        ckpt: &DeployCheckpoint,
+    ) -> Result<Self, String> {
+        if ckpt.mode != cfg.mode {
+            return Err(format!(
+                "checkpoint mode {:?} != configured {:?}",
+                ckpt.mode, cfg.mode
+            ));
+        }
+        let t0 = Instant::now();
+        let trainer = io::from_bytes(&ckpt.trainer)
+            .map_err(|e| format!("trainer snapshot: {e}"))?;
+        // fast-forward the training stream to the crash point so
+        // resumed rounds draw the same examples an uninterrupted run
+        // would have
+        let mut stream = SyntheticStream::with_buckets(
+            cfg.dataset.clone(),
+            cfg.seed,
+            cfg.model.buckets,
+        );
+        let _ = stream.take_examples(ckpt.examples_consumed as usize);
+        let mut holdout_stream = SyntheticStream::with_buckets(
+            cfg.dataset.clone(),
+            cfg.seed ^ 0x0e1d_0a7a,
+            cfg.model.buckets,
+        );
+        let holdout = holdout_stream.take_examples(cfg.holdout_examples);
+
+        let mut pipeline = UpdatePipeline::new(cfg.mode);
+        pipeline.restore_state(ckpt.prev_raw.clone(), ckpt.prev_quant.clone())?;
+        let mut receiver = UpdateReceiver::new(cfg.mode);
+        receiver.set_template(Regressor::new(&cfg.model));
+        let served = match &ckpt.receiver_base {
+            Some(base) => receiver.resync(base)?,
+            None => {
+                if ckpt.round != 0 {
+                    return Err(format!(
+                        "checkpoint claims round {} with no receiver base",
+                        ckpt.round
+                    ));
+                }
+                Regressor::new(&cfg.model)
+            }
+        };
+        let channel =
+            SimulatedChannel::with_bandwidth(cfg.bandwidth_bps, cfg.rtt_seconds);
+
+        // the handle resumes at the checkpointed version so the served
+        // version line stays monotonic across the crash
+        let handle = ModelHandle::at_version(served, ckpt.version);
+        let router = Router::new(cfg.serve.workers);
+        router.register(&cfg.model_name, handle.clone());
+        let engine =
+            ServingEngine::start_with_obs(router, cfg.serve.clone(), obs.clone());
+        let reg = engine.obs_registry().clone();
+        let deploy_obs = DeployObs {
+            rounds: reg.gauge("fw_deploy_rounds", "publish rounds completed"),
+            round_lag: reg.gauge(
+                "fw_deploy_round_lag_seconds",
+                "last round's publish lag (encode + wire + apply + swap)",
+            ),
+            holdout_auc: reg.gauge(
+                "fw_deploy_holdout_auc",
+                "held-out AUC of the served model after the last swap",
+            ),
+            update_bytes: reg.counter(
+                "fw_deploy_update_bytes_total",
+                "bytes shipped across rounds",
+            ),
+            swap_ns: reg.histogram_shard(
+                "fw_deploy_swap_ns",
+                "hot-swap latency (snapshot publish to cache invalidation)",
+            ),
+            tracer: obs.tracer,
+        };
+        deploy_obs.rounds.set(ckpt.round as f64);
+        reg.histogram_shard(
+            "fw_recovery_replay_ns",
+            "crash-recovery replay/catch-up wall time (ns)",
+        )
+        .record_ns(t0.elapsed().as_nanos() as u64);
+        if let Some(tr) = deploy_obs.tracer.as_ref() {
+            tr.emit(&obj(vec![
+                ("event", s("deploy_restore")),
+                ("round", num(ckpt.round as f64)),
+                ("version", num(ckpt.version as f64)),
+            ]));
+        }
+
+        Ok(DeploymentLoop {
+            cfg,
+            trainer,
+            stream,
+            pipeline,
+            receiver,
+            channel,
+            handle,
+            engine,
+            holdout,
+            metrics: ckpt.metrics.clone(),
+            round: ckpt.round as usize,
+            examples_consumed: ckpt.examples_consumed,
+            obs: deploy_obs,
+        })
+    }
+
+    /// [`restore_with_obs`](Self::restore_with_obs) from a sealed
+    /// checkpoint file.
+    pub fn restore_from_path(
+        cfg: DeployConfig,
+        obs: ObsOptions,
+        path: &Path,
+    ) -> Result<Self, String> {
+        let payload = crate::fleet::checkpoint::read_file(path)?;
+        let ckpt = DeployCheckpoint::from_bytes(&payload)?;
+        Self::restore_with_obs(cfg, obs, &ckpt)
+    }
+
+    /// Snapshot the loop's durable state.
+    pub fn checkpoint(&self) -> DeployCheckpoint {
+        let (prev_raw, prev_quant) = self.pipeline.export_state();
+        DeployCheckpoint {
+            mode: self.cfg.mode,
+            round: self.round as u64,
+            examples_consumed: self.examples_consumed,
+            version: self.handle.version(),
+            trainer: io::to_bytes(&self.trainer, true),
+            prev_raw,
+            prev_quant,
+            receiver_base: self.receiver.base_bytes().map(|b| b.to_vec()),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Write the loop checkpoint to `path` (CRC-sealed, temp-file +
+    /// rename).
+    pub fn write_checkpoint(&self, path: &Path) -> Result<(), FleetError> {
+        crate::fleet::checkpoint::write_atomic(path, &self.checkpoint().to_bytes())
     }
 
     /// One full round: train → encode → ship → decode → swap.
@@ -336,6 +602,16 @@ impl DeploymentLoop {
         };
         self.metrics.absorb(&report);
         self.round += 1;
+        self.examples_consumed += report.examples as u64;
+
+        // durable checkpoint cadence: every N completed rounds
+        if self.cfg.checkpoint_every_rounds > 0
+            && self.round % self.cfg.checkpoint_every_rounds == 0
+        {
+            if let Some(path) = self.cfg.checkpoint_path.clone() {
+                self.write_checkpoint(&path)?;
+            }
+        }
 
         // Registry view of the round: training throughput/AUC, round
         // lag, swap latency, shipped bytes — same registry as serving.
@@ -555,6 +831,85 @@ mod tests {
         let parsed = crate::util::json::parse(&events[1]).unwrap();
         assert_eq!(parsed.get("event").as_str(), Some("deploy_swap"));
         assert_eq!(parsed.get("round").as_f64(), Some(1.0));
+        dl.shutdown();
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_bit_identically() {
+        for mode in [UpdateMode::QuantPatch, UpdateMode::Raw] {
+            let cfg = small_cfg(mode); // train_threads defaults to 1
+            // uninterrupted reference run
+            let mut gold = DeploymentLoop::new(cfg.clone());
+            gold.run_rounds(4).unwrap();
+            // crashed run: auto-checkpoint after round 2, kill, restore
+            let path = std::env::temp_dir().join(format!(
+                "fw_deploy_ckpt_{}_{mode:?}.ckpt",
+                std::process::id()
+            ));
+            let mut cfg2 = cfg.clone();
+            cfg2.checkpoint_every_rounds = 2;
+            cfg2.checkpoint_path = Some(path.clone());
+            let mut dl = DeploymentLoop::new(cfg2.clone());
+            dl.run_rounds(2).unwrap();
+            dl.shutdown(); // the crash
+            let mut dl = DeploymentLoop::restore_from_path(
+                cfg2,
+                ObsOptions::default(),
+                &path,
+            )
+            .unwrap();
+            assert_eq!(dl.rounds_run(), 2, "{mode:?}");
+            assert_eq!(dl.handle().version(), 3, "{mode:?}"); // v1 + 2 swaps
+            dl.run_rounds(2).unwrap();
+            // trainer, served weights, version line, and byte ledger all
+            // land exactly where the uninterrupted run did
+            assert_eq!(
+                dl.trainer().pool.weights,
+                gold.trainer().pool.weights,
+                "{mode:?} trainer diverged"
+            );
+            assert_eq!(dl.handle().version(), gold.handle().version());
+            assert_eq!(
+                dl.handle().load().pool.weights,
+                gold.handle().load().pool.weights,
+                "{mode:?} served model diverged"
+            );
+            assert_eq!(
+                dl.pipeline().sent_bytes(),
+                gold.pipeline().sent_bytes(),
+                "{mode:?} pipeline base diverged"
+            );
+            let (ma, mb) = (dl.metrics().clone(), gold.metrics().clone());
+            assert_eq!(ma.rounds, 4);
+            assert_eq!(ma.update_bytes_total, mb.update_bytes_total);
+            assert_eq!(ma.raw_bytes_total, mb.raw_bytes_total);
+            // recovery time is observable where the chaos soak looks
+            let reg = dl.engine().obs_registry().clone();
+            let h = reg.histogram_snapshot("fw_recovery_replay_ns").unwrap();
+            assert_eq!(h.count(), 1, "{mode:?}");
+            let _ = std::fs::remove_file(&path);
+            dl.shutdown();
+            gold.shutdown();
+        }
+    }
+
+    #[test]
+    fn deploy_checkpoint_payload_roundtrips() {
+        let mut dl = DeploymentLoop::new(small_cfg(UpdateMode::QuantPatch));
+        dl.run_rounds(1).unwrap();
+        let ckpt = dl.checkpoint();
+        let back = DeployCheckpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert_eq!(back.mode, ckpt.mode);
+        assert_eq!(back.round, 1);
+        assert_eq!(back.examples_consumed, 1500);
+        assert_eq!(back.version, 2);
+        assert_eq!(back.trainer, ckpt.trainer);
+        assert_eq!(back.receiver_base, ckpt.receiver_base);
+        assert_eq!(back.metrics.update_bytes_total, ckpt.metrics.update_bytes_total);
+        // a fabric checkpoint payload is refused by its version byte
+        let mut bad = ckpt.to_bytes();
+        bad[0] = 1;
+        assert!(DeployCheckpoint::from_bytes(&bad).is_err());
         dl.shutdown();
     }
 

@@ -1,0 +1,644 @@
+//! Cross-plane chaos soak: the fleet soak of [`super::soak`] with
+//! randomized crash/partition/stall fault injection layered on top of
+//! the recovery plane.
+//!
+//! Every run injects — at seed-chosen rounds — at least one of each:
+//!
+//! * **replica crash + restart** — a replica is torn down (engine and
+//!   all) and rebuilt from its last durable cursor
+//!   ([`FleetFabric::restart_replica`]), then healed to head by
+//!   catch-up.
+//! * **fabric crash + restore** — the whole distribution plane
+//!   (pipeline, log, replicas, RNG) is dropped and rebuilt from the
+//!   last on-disk checkpoint ([`FleetFabric::restore_from_path`]),
+//!   resuming bit-identically while traffic keeps flowing.
+//! * **DC partition** — the trainer→DC link fails every shipment for
+//!   1–2 rounds; the health machine walks the DC's replicas down the
+//!   ladder and the recovery probe resurrects them after it heals.
+//! * **replica stall** — one frozen replica, same ladder.
+//!
+//! Traffic drivers route through the shared [`HealthBoard`]
+//! (`route(hint)`), so requests go around Suspect/Dead replicas
+//! instead of stalling on them.  The invariants checked are the soak's
+//! (zero torn responses fleet-wide, eventual bit-identical
+//! convergence) plus recovery-plane visibility: health transitions,
+//! publish retries, and recovery replay timings must all land in the
+//! shared [`ObsRegistry`].
+//!
+//! The whole fault schedule derives from one `Pcg32` seed, printed at
+//! the start of every run (`chaos seed: 0x...`) and settable via
+//! `fw fleet --chaos --seed N` — any failure reproduces from that one
+//! number.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::config::{ModelConfig, ServeConfig};
+use crate::data::synthetic::{DatasetSpec, SyntheticStream};
+use crate::deploy::harness::probe_scores;
+use crate::fleet::{
+    FleetConfig, FleetFabric, FleetMetrics, HealthBoard, LinkSpec, ReplicaCheckpoint,
+    RoundOutcome, Strategy, Topology,
+};
+use crate::model::regressor::Regressor;
+use crate::obs::ObsRegistry;
+use crate::serve::server::ServeClient;
+use crate::serve::trace::TraceGenerator;
+use crate::serve::Request;
+use crate::train::hogwild::{train_chunk, HogwildConfig};
+use crate::transfer::UpdateMode;
+use crate::util::rng::Pcg32;
+
+/// Chaos soak parameters.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub mode: UpdateMode,
+    pub dcs: usize,
+    pub replicas_per_dc: usize,
+    /// Train→publish rounds (the ISSUE floor for the full soak is 20;
+    /// the harness itself requires ≥ 8 so the fault schedule's quarters
+    /// are non-empty).
+    pub rounds: usize,
+    pub examples_per_round: usize,
+    pub train_threads: usize,
+    pub traffic_threads: usize,
+    pub probes: usize,
+    /// Fabric checkpoint cadence in rounds (must be ≤ rounds/4 so a
+    /// checkpoint exists before the scheduled fabric crash).
+    pub checkpoint_every: usize,
+    /// Per-round probability of an extra random fault on top of the
+    /// four mandatory ones.
+    pub extra_fault_prob: f64,
+    /// The single number that reproduces the entire run.
+    pub seed: u64,
+}
+
+impl ChaosConfig {
+    /// CI-sized: 8 rounds, 2 DCs × 2 replicas, every fault kind once.
+    pub fn smoke(mode: UpdateMode, seed: u64) -> Self {
+        ChaosConfig {
+            mode,
+            dcs: 2,
+            replicas_per_dc: 2,
+            rounds: 8,
+            examples_per_round: 500,
+            train_threads: 2,
+            traffic_threads: 2,
+            probes: 10,
+            checkpoint_every: 2,
+            extra_fault_prob: 0.1,
+            seed,
+        }
+    }
+
+    /// The full ISSUE-scale soak: ≥20 rounds, 3 DCs × 2 replicas.
+    pub fn full(mode: UpdateMode, seed: u64) -> Self {
+        ChaosConfig {
+            mode,
+            dcs: 3,
+            replicas_per_dc: 2,
+            rounds: 24,
+            examples_per_round: 900,
+            train_threads: 2,
+            traffic_threads: 3,
+            probes: 12,
+            checkpoint_every: 3,
+            extra_fault_prob: 0.15,
+            seed,
+        }
+    }
+}
+
+/// One injected fault, scheduled for a specific round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Freeze replica `replica` for `rounds` publish rounds.
+    Stall { replica: usize, rounds: u64 },
+    /// Cut the trainer→DC link for `rounds` publish rounds.
+    Partition { dc: usize, rounds: u64 },
+    /// Kill replica `replica` and restart it from its last durable
+    /// cursor.
+    ReplicaCrash { replica: usize },
+    /// Kill the whole fabric and restore from the last on-disk
+    /// checkpoint.
+    FabricCrash,
+}
+
+/// How many faults of each kind a run injected.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultLog {
+    pub stalls: u32,
+    pub partitions: u32,
+    pub replica_restarts: u32,
+    pub fabric_restores: u32,
+}
+
+/// Everything a chaos soak observed.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub mode: UpdateMode,
+    /// Reproduces the entire run (also printed at startup).
+    pub seed: u64,
+    pub rounds: Vec<RoundOutcome>,
+    pub faults: FaultLog,
+    pub probe_checks: u64,
+    /// Responses matching NO published version (must be 0).
+    pub torn_responses: u64,
+    pub versions_observed: usize,
+    /// Requests the health board steered away from their first-choice
+    /// replica.
+    pub routed_around: u64,
+    /// Scores that failed because an engine was mid-restart (skipped,
+    /// not torn).
+    pub probe_errors: u64,
+    pub caught_up_at_converge: usize,
+    pub replicas_bit_identical: bool,
+    pub replicas_match_reference: bool,
+    pub serve_errors: u64,
+    /// `fw_fleet_health_transitions_total` at the end of the run.
+    pub health_transitions: u64,
+    /// Samples in `fw_recovery_replay_ns` (restarts + recovery probes).
+    pub recovery_samples: u64,
+    pub metrics: FleetMetrics,
+}
+
+impl ChaosReport {
+    /// Panic (with the reproducing seed) unless every chaos invariant
+    /// held.
+    pub fn assert_healthy(&self) {
+        let ctx = format!("{:?} chaos seed {:#x}", self.mode, self.seed);
+        assert_eq!(
+            self.torn_responses, 0,
+            "{ctx}: {} of {} responses matched no published version",
+            self.torn_responses, self.probe_checks
+        );
+        assert!(self.probe_checks > 0, "{ctx}: no probes were scored");
+        assert!(
+            self.versions_observed >= 2,
+            "{ctx}: only {} version(s) served",
+            self.versions_observed
+        );
+        assert!(self.faults.stalls >= 1, "{ctx}: no stall injected");
+        assert!(self.faults.partitions >= 1, "{ctx}: no partition injected");
+        assert!(
+            self.faults.replica_restarts >= 1,
+            "{ctx}: no replica crash injected"
+        );
+        assert!(
+            self.faults.fabric_restores >= 1,
+            "{ctx}: no fabric crash injected"
+        );
+        assert!(
+            self.replicas_bit_identical,
+            "{ctx}: replicas diverged at convergence"
+        );
+        assert!(
+            self.replicas_match_reference,
+            "{ctx}: converged replicas differ from the reference"
+        );
+        assert_eq!(self.serve_errors, 0, "{ctx}: serving errors");
+        assert!(
+            self.health_transitions >= 2,
+            "{ctx}: faults ran but only {} health transitions recorded",
+            self.health_transitions
+        );
+        assert!(
+            self.recovery_samples >= 1,
+            "{ctx}: no recovery replay timing recorded"
+        );
+        assert!(
+            self.metrics.retries >= 1,
+            "{ctx}: faults ran but no publish retry was attempted"
+        );
+    }
+}
+
+/// Derive the full fault schedule from the seed: one mandatory fault
+/// of each kind in its own quarter of the run (stall, then replica
+/// crash, then fabric crash, then partition), plus random extras.
+/// Durations are clamped so every partition/stall expires before the
+/// final round's end-of-run convergence barrier.
+pub fn fault_schedule(cfg: &ChaosConfig, rng: &mut Pcg32) -> Vec<Vec<Fault>> {
+    let r = cfg.rounds;
+    assert!(r >= 8, "chaos soak needs >= 8 rounds, got {r}");
+    let n = (cfg.dcs * cfg.replicas_per_dc) as u32;
+    let q = r / 4;
+    let mut sched: Vec<Vec<Fault>> = vec![Vec::new(); r];
+
+    let clamp = |round: usize, want: u64| -> u64 {
+        want.min((r - 1 - round) as u64)
+    };
+    // quarter 1: stall
+    let s1 = 1 + rng.below(q.max(1) as u32) as usize;
+    sched[s1].push(Fault::Stall {
+        replica: rng.below(n) as usize,
+        rounds: clamp(s1, 1 + rng.below(2) as u64).max(1),
+    });
+    // quarter 2: replica crash + restart from cursor
+    let s2 = q + rng.below(q.max(1) as u32) as usize;
+    sched[s2].push(Fault::ReplicaCrash { replica: rng.below(n) as usize });
+    // quarter 3: fabric crash + restore from checkpoint
+    let s3 = 2 * q + rng.below(q.max(1) as u32) as usize;
+    sched[s3].push(Fault::FabricCrash);
+    // quarter 4: partition (expiring before the run ends)
+    let s4 = 3 * q + rng.below((r - 2 - 3 * q).max(1) as u32) as usize;
+    sched[s4].push(Fault::Partition {
+        dc: rng.below(cfg.dcs as u32) as usize,
+        rounds: clamp(s4, 1 + rng.below(2) as u64).max(1),
+    });
+    // random extras (never a second fabric crash — one full restore
+    // per run keeps the runtime bounded)
+    for round in 1..r.saturating_sub(2) {
+        if rng.next_f64() >= cfg.extra_fault_prob {
+            continue;
+        }
+        let fault = match rng.below(3) {
+            0 => Fault::Stall {
+                replica: rng.below(n) as usize,
+                rounds: clamp(round, 1 + rng.below(2) as u64),
+            },
+            1 => Fault::Partition {
+                dc: rng.below(cfg.dcs as u32) as usize,
+                rounds: clamp(round, 1 + rng.below(2) as u64),
+            },
+            _ => Fault::ReplicaCrash { replica: rng.below(n) as usize },
+        };
+        let dead = matches!(
+            fault,
+            Fault::Stall { rounds: 0, .. } | Fault::Partition { rounds: 0, .. }
+        );
+        if !dead {
+            sched[round].push(fault);
+        }
+    }
+    sched
+}
+
+/// What the traffic drivers read while the fabric churns underneath:
+/// per-replica clients plus the health board they route through.  The
+/// main thread takes the write lock around every restart/restore, so
+/// drivers never score a mid-teardown engine.
+struct ServingView {
+    clients: Vec<ServeClient>,
+    board: Arc<HealthBoard>,
+}
+
+type Published = Arc<RwLock<Vec<(u64, Vec<Vec<f32>>)>>>;
+
+#[allow(clippy::type_complexity)]
+fn traffic_driver(
+    view: Arc<RwLock<ServingView>>,
+    probes: Vec<Request>,
+    published: Published,
+    stop: Arc<AtomicBool>,
+    offset: usize,
+) -> (u64, u64, u64, u64, HashSet<u64>) {
+    let mut checks = 0u64;
+    let mut torn = 0u64;
+    let mut routed_around = 0u64;
+    let mut errors = 0u64;
+    let mut versions = HashSet::new();
+    let mut i = offset;
+    while !stop.load(Ordering::Relaxed) {
+        let probe_idx = i % probes.len();
+        let scored = {
+            let v = view.read().expect("serving view lock");
+            let hint = i % v.clients.len();
+            let idx = v.board.route(hint);
+            if idx != hint {
+                routed_around += 1;
+            }
+            v.clients[idx].score(probes[probe_idx].clone())
+        };
+        i += 1;
+        let resp = match scored {
+            Ok(r) => r,
+            Err(_) => {
+                // engine raced a restart; skip, never count as torn
+                errors += 1;
+                std::thread::yield_now();
+                continue;
+            }
+        };
+        checks += 1;
+        let reg = published.read().expect("published lock");
+        match reg
+            .iter()
+            .rev()
+            .find(|(_, scores)| scores[probe_idx] == resp.scores)
+        {
+            Some((seq, _)) => {
+                versions.insert(*seq);
+            }
+            None => torn += 1,
+        }
+    }
+    (checks, torn, routed_around, errors, versions)
+}
+
+fn clients_of(fabric: &FleetFabric) -> Vec<ServeClient> {
+    fabric
+        .replicas()
+        .iter()
+        .map(|r| r.client().expect("chaos replicas serve"))
+        .collect()
+}
+
+/// Run one chaos soak.  Prints the reproducing seed first; invariant
+/// verdicts live in the report ([`ChaosReport::assert_healthy`]).
+pub fn run_chaos_soak(cfg: ChaosConfig) -> ChaosReport {
+    println!("chaos seed: {:#x}", cfg.seed);
+    let mut chaos_rng = Pcg32::seeded(cfg.seed);
+    let schedule = fault_schedule(&cfg, &mut chaos_rng);
+
+    let mut spec = DatasetSpec::tiny();
+    spec.cat_fields = 4;
+    let fields = spec.fields();
+    let model_cfg = ModelConfig::deep_ffm(fields, 2, 1 << 12, &[8]);
+    let template = Regressor::new(&model_cfg);
+    let mut trainer = template.clone();
+    let mut stream =
+        SyntheticStream::with_buckets(spec, cfg.seed, model_cfg.buckets);
+
+    let topo = Topology::uniform(
+        cfg.dcs,
+        cfg.replicas_per_dc,
+        LinkSpec::wan(),
+        LinkSpec::lan(),
+    );
+    let mut fcfg = FleetConfig::new(topo, cfg.mode);
+    fcfg.strategy = Strategy::Auto;
+    fcfg.seed = cfg.seed ^ 0x11;
+    fcfg.serve = Some(ServeConfig {
+        workers: 1,
+        max_batch: 32,
+        max_wait_us: 100,
+        context_cache_entries: 1_024,
+        max_group_candidates: 1024,
+        ..ServeConfig::default()
+    });
+    let model_name = fcfg.model_name.clone();
+    let mut fabric = FleetFabric::new(fcfg.clone(), &template);
+    let registry = ObsRegistry::new();
+    fabric.set_obs(&registry);
+
+    let ckpt_path = std::env::temp_dir().join(format!(
+        "fw_chaos_{}_{:?}_{:x}.ckpt",
+        std::process::id(),
+        cfg.mode,
+        cfg.seed
+    ));
+    let n_replicas = cfg.dcs * cfg.replicas_per_dc;
+    // durable cursors, refreshed at every fabric checkpoint; a crashed
+    // replica restarts from these, not from live state
+    let mut cursors: Vec<ReplicaCheckpoint> =
+        (0..n_replicas).map(|i| fabric.checkpoint_replica(i)).collect();
+    let mut have_checkpoint = false;
+
+    let mut gen = TraceGenerator::new(
+        cfg.seed ^ 0x7ea5,
+        fields,
+        2,
+        model_cfg.buckets,
+        4,
+    );
+    let probes: Vec<Request> = (0..cfg.probes.max(1))
+        .map(|_| gen.next_request(&model_name))
+        .collect();
+
+    let published: Published = Arc::new(RwLock::new(vec![(
+        0,
+        probe_scores(&template, &probes),
+    )]));
+    let stop = Arc::new(AtomicBool::new(false));
+    let view = Arc::new(RwLock::new(ServingView {
+        clients: clients_of(&fabric),
+        board: fabric.health_board().clone(),
+    }));
+
+    let mut drivers = Vec::new();
+    for t in 0..cfg.traffic_threads.max(1) {
+        let view = view.clone();
+        let probes = probes.clone();
+        let published = published.clone();
+        let stop = stop.clone();
+        drivers.push(
+            std::thread::Builder::new()
+                .name(format!("fw-chaos-traffic-{t}"))
+                .spawn(move || traffic_driver(view, probes, published, stop, t))
+                .expect("spawn traffic driver"),
+        );
+    }
+
+    let mut faults = FaultLog::default();
+    let mut serve_errors = 0u64;
+    let mut rounds = Vec::with_capacity(cfg.rounds);
+    for r in 0..cfg.rounds {
+        for fault in &schedule[r] {
+            match *fault {
+                Fault::Stall { replica, rounds } => {
+                    fabric.stall_replica(replica, rounds);
+                    faults.stalls += 1;
+                }
+                Fault::Partition { dc, rounds } => {
+                    fabric.partition_dc(dc, rounds);
+                    faults.partitions += 1;
+                }
+                Fault::ReplicaCrash { replica } => {
+                    // block traffic while the engine is swapped
+                    let mut v = view.write().expect("serving view lock");
+                    fabric
+                        .restart_replica(replica, &cursors[replica])
+                        .unwrap_or_else(|e| {
+                            panic!(
+                                "{:?} seed {:#x}: restart replica {replica}: {e}",
+                                cfg.mode, cfg.seed
+                            )
+                        });
+                    v.clients[replica] = fabric.replicas()[replica]
+                        .client()
+                        .expect("restarted replica serves");
+                    faults.replica_restarts += 1;
+                }
+                Fault::FabricCrash => {
+                    if !have_checkpoint {
+                        continue; // schedule guarantees this never fires
+                    }
+                    let restored = FleetFabric::restore_from_path(
+                        fcfg.clone(),
+                        &template,
+                        &ckpt_path,
+                    )
+                    .unwrap_or_else(|e| {
+                        panic!(
+                            "{:?} seed {:#x}: fabric restore: {e}",
+                            cfg.mode, cfg.seed
+                        )
+                    });
+                    let old = std::mem::replace(&mut fabric, restored);
+                    fabric.set_obs(&registry);
+                    let mut v = view.write().expect("serving view lock");
+                    serve_errors += old
+                        .shutdown()
+                        .into_iter()
+                        .flatten()
+                        .map(|s| s.errors)
+                        .sum::<u64>();
+                    v.clients = clients_of(&fabric);
+                    v.board = fabric.health_board().clone();
+                    cursors = (0..n_replicas)
+                        .map(|i| fabric.checkpoint_replica(i))
+                        .collect();
+                    faults.fabric_restores += 1;
+                }
+            }
+        }
+
+        let chunk = stream.take_examples(cfg.examples_per_round);
+        train_chunk(
+            &mut trainer,
+            &chunk,
+            HogwildConfig { threads: cfg.train_threads.max(1) },
+            1_000,
+        );
+        let published2 = published.clone();
+        let probes_ref = &probes;
+        let outcome = fabric
+            .publish_with(&trainer, |seq, fresh| {
+                let scores = probe_scores(fresh, probes_ref);
+                published2
+                    .write()
+                    .expect("published lock")
+                    .push((seq, scores));
+            })
+            .unwrap_or_else(|e| {
+                panic!("{:?} seed {:#x} round {r}: {e}", cfg.mode, cfg.seed)
+            });
+        rounds.push(outcome);
+
+        if (r + 1) % cfg.checkpoint_every.max(1) == 0 {
+            fabric.write_checkpoint(&ckpt_path).unwrap_or_else(|e| {
+                panic!("{:?} seed {:#x}: checkpoint: {e}", cfg.mode, cfg.seed)
+            });
+            cursors =
+                (0..n_replicas).map(|i| fabric.checkpoint_replica(i)).collect();
+            have_checkpoint = true;
+        }
+    }
+
+    let caught_up_at_converge = fabric.converge().unwrap_or_else(|e| {
+        panic!("{:?} seed {:#x}: converge: {e}", cfg.mode, cfg.seed)
+    });
+
+    let reference = fabric
+        .reference()
+        .expect("rounds ran")
+        .pool
+        .weights
+        .clone();
+    let first = fabric.replicas()[0].model().pool.weights.clone();
+    let mut replicas_bit_identical = true;
+    let mut replicas_match_reference = true;
+    for rep in fabric.replicas() {
+        let model = rep.model();
+        if model.pool.weights != first {
+            replicas_bit_identical = false;
+        }
+        if model.pool.weights != reference {
+            replicas_match_reference = false;
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let mut probe_checks = 0u64;
+    let mut torn_responses = 0u64;
+    let mut routed_around = 0u64;
+    let mut probe_errors = 0u64;
+    let mut versions = HashSet::new();
+    for d in drivers {
+        let (c, t, ra, e, v) = d.join().expect("traffic driver panicked");
+        probe_checks += c;
+        torn_responses += t;
+        routed_around += ra;
+        probe_errors += e;
+        versions.extend(v);
+    }
+
+    let metrics = fabric.metrics();
+    serve_errors += fabric
+        .shutdown()
+        .into_iter()
+        .flatten()
+        .map(|s| s.errors)
+        .sum::<u64>();
+    let _ = std::fs::remove_file(&ckpt_path);
+    ChaosReport {
+        mode: cfg.mode,
+        seed: cfg.seed,
+        rounds,
+        faults,
+        probe_checks,
+        torn_responses,
+        versions_observed: versions.len(),
+        routed_around,
+        probe_errors,
+        caught_up_at_converge,
+        replicas_bit_identical,
+        replicas_match_reference,
+        serve_errors,
+        health_transitions: registry
+            .counter_value("fw_fleet_health_transitions_total")
+            .unwrap_or(0),
+        recovery_samples: registry
+            .histogram_snapshot("fw_recovery_replay_ns")
+            .map(|h| h.count())
+            .unwrap_or(0),
+        metrics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_covers_every_fault_kind_and_is_reproducible() {
+        let cfg = ChaosConfig::full(UpdateMode::QuantPatch, 0xc4a05);
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let sched = fault_schedule(&cfg, &mut rng);
+        assert_eq!(sched.len(), cfg.rounds);
+        let all: Vec<&Fault> = sched.iter().flatten().collect();
+        assert!(all.iter().any(|f| matches!(f, Fault::Stall { .. })));
+        assert!(all.iter().any(|f| matches!(f, Fault::Partition { .. })));
+        assert!(all.iter().any(|f| matches!(f, Fault::ReplicaCrash { .. })));
+        assert!(all.iter().any(|f| matches!(f, Fault::FabricCrash)));
+        // stalls/partitions always expire before the final round
+        for (round, faults) in sched.iter().enumerate() {
+            for f in faults {
+                match *f {
+                    Fault::Stall { rounds, .. } | Fault::Partition { rounds, .. } => {
+                        assert!(rounds >= 1);
+                        assert!(round + rounds as usize <= cfg.rounds - 1);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // same seed → same schedule
+        let mut rng2 = Pcg32::seeded(cfg.seed);
+        assert_eq!(fault_schedule(&cfg, &mut rng2), sched);
+        // different seed → (almost surely) different schedule
+        let mut rng3 = Pcg32::seeded(cfg.seed ^ 1);
+        assert_ne!(fault_schedule(&cfg, &mut rng3), sched);
+    }
+
+    #[test]
+    fn chaos_soak_smoke() {
+        // one mode at CI scale; the ≥20-round soak across modes runs in
+        // tests/chaos_soak.rs
+        let report = run_chaos_soak(ChaosConfig::smoke(UpdateMode::QuantPatch, 7));
+        report.assert_healthy();
+        assert_eq!(report.rounds.len(), 8);
+    }
+}

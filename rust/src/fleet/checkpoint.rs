@@ -1,0 +1,550 @@
+//! Durable crash-recovery checkpoints.
+//!
+//! One on-disk format (`FWCKPT1`) shared by the fabric and the deploy
+//! loop: a little-endian length-prefixed section stream wrapped in a
+//! magic header and a CRC32 trailer, written via temp-file +
+//! `rename` so a crash mid-write can never leave a torn checkpoint
+//! where a good one used to be — readers either see the complete old
+//! file or the complete new one.
+//!
+//! ```text
+//! ┌──────────┬──────────────────────────────┬───────────┐
+//! │ FWCKPT1\0 │  payload (ByteWriter stream) │ CRC32(all) │
+//! └──────────┴──────────────────────────────┴───────────┘
+//! ```
+//!
+//! The payload for a fabric checkpoint ([`FabricCheckpoint`]) is the
+//! *complete* distribution state: the sender pipeline's diff bases,
+//! the retained patch log, every replica's seq cursor + receiver
+//! base, the deterministic RNG position, fault-injection countdowns,
+//! and all counters/ledgers.  Restoring it therefore resumes the run
+//! **bit-identically** — the next publish encodes the same diff,
+//! draws the same loss coins, and bills the same ledgers as an
+//! uninterrupted fabric would have.
+
+use std::path::Path;
+
+use crate::fleet::metrics::{LagStat, LinkLedger};
+use crate::transfer::{FleetError, UpdateMode};
+use crate::util::crc32::crc32;
+
+/// File magic; the trailing byte doubles as a format version slot.
+pub const MAGIC: [u8; 8] = *b"FWCKPT1\0";
+
+// ------------------------------------------------------------ framing
+
+/// Wrap a payload in magic + CRC32 trailer.
+pub fn seal(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(MAGIC.len() + payload.len() + 4);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(payload);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Verify magic + CRC and return the payload slice.
+pub fn unseal(bytes: &[u8]) -> Result<&[u8], FleetError> {
+    if bytes.len() < MAGIC.len() + 4 {
+        return Err(FleetError::Corrupt(format!(
+            "checkpoint too short ({} bytes)",
+            bytes.len()
+        )));
+    }
+    if bytes[..MAGIC.len()] != MAGIC {
+        return Err(FleetError::Corrupt("bad checkpoint magic".into()));
+    }
+    let body_end = bytes.len() - 4;
+    let stored = u32::from_le_bytes(bytes[body_end..].try_into().unwrap());
+    let actual = crc32(&bytes[..body_end]);
+    if stored != actual {
+        return Err(FleetError::Corrupt(format!(
+            "checkpoint CRC mismatch (stored {stored:#010x}, computed {actual:#010x})"
+        )));
+    }
+    Ok(&bytes[MAGIC.len()..body_end])
+}
+
+/// Seal `payload` and write it to `path` atomically: the sealed bytes
+/// go to a sibling `.tmp` file first, then `rename` over the target.
+pub fn write_atomic(path: &Path, payload: &[u8]) -> Result<(), FleetError> {
+    let sealed = seal(payload);
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, &sealed)
+        .map_err(|e| FleetError::Io(format!("write {}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| FleetError::Io(format!("rename to {}: {e}", path.display())))
+}
+
+/// Read and verify a sealed checkpoint file; returns the payload.
+pub fn read_file(path: &Path) -> Result<Vec<u8>, FleetError> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| FleetError::Io(format!("read {}: {e}", path.display())))?;
+    unseal(&bytes).map(|p| p.to_vec())
+}
+
+/// Little-endian section writer for checkpoint payloads.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Length-prefixed byte section.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_opt_bytes(&mut self, v: Option<&[u8]>) {
+        match v {
+            Some(b) => {
+                self.put_u8(1);
+                self.put_bytes(b);
+            }
+            None => self.put_u8(0),
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Mirror reader; every getter fails with [`FleetError::Corrupt`] on
+/// truncation instead of panicking, so a damaged file surfaces as a
+/// matchable error.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FleetError> {
+        if self.pos + n > self.buf.len() {
+            return Err(FleetError::Corrupt(format!(
+                "checkpoint truncated at offset {} (wanted {n} more bytes of {})",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, FleetError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, FleetError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, FleetError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, FleetError> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>, FleetError> {
+        let len = self.get_u64()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+
+    pub fn get_opt_bytes(&mut self) -> Result<Option<Vec<u8>>, FleetError> {
+        match self.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.get_bytes()?)),
+            t => Err(FleetError::Corrupt(format!("bad option tag {t}"))),
+        }
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn done(&self) -> Result<(), FleetError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(FleetError::Corrupt(format!(
+                "{} trailing bytes after checkpoint payload",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+pub fn mode_tag(mode: UpdateMode) -> u8 {
+    match mode {
+        UpdateMode::Raw => 0,
+        UpdateMode::Quant => 1,
+        UpdateMode::PatchOnly => 2,
+        UpdateMode::QuantPatch => 3,
+    }
+}
+
+pub fn mode_from_tag(tag: u8) -> Result<UpdateMode, FleetError> {
+    Ok(match tag {
+        0 => UpdateMode::Raw,
+        1 => UpdateMode::Quant,
+        2 => UpdateMode::PatchOnly,
+        3 => UpdateMode::QuantPatch,
+        t => return Err(FleetError::Corrupt(format!("bad update-mode tag {t}"))),
+    })
+}
+
+// ----------------------------------------------------- fabric payload
+
+/// One replica's durable cursor: last applied seq plus the receiver
+/// base bytes the next chained patch applies against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaCheckpoint {
+    pub seq: u64,
+    pub base: Option<Vec<u8>>,
+    /// Health gauge encoding ([`crate::fleet::health::HealthState`]).
+    pub health: u8,
+    /// Heartbeat age (consecutive failed contacts) at checkpoint time.
+    pub failed_rounds: u32,
+}
+
+/// The complete distribution-plane state of a [`crate::fleet::FleetFabric`].
+#[derive(Clone, Debug)]
+pub struct FabricCheckpoint {
+    pub mode: UpdateMode,
+    pub head: u64,
+    /// Exact PCG position `(state, inc)` of the loss/jitter RNG.
+    pub rng_state: (u64, u64),
+    /// Sender pipeline diff bases.
+    pub prev_raw: Option<Vec<u8>>,
+    pub prev_quant: Option<Vec<u8>>,
+    /// Retained update log; `log[i]` is publish seq `i+1`, blanked
+    /// (compacted) entries are empty.
+    pub log: Vec<Vec<u8>>,
+    pub log_blanked: u64,
+    pub replicas: Vec<ReplicaCheckpoint>,
+    pub rounds: u64,
+    pub max_skew: u64,
+    pub replays: u64,
+    pub resyncs: u64,
+    pub converged_rounds: u64,
+    pub retries: u64,
+    pub skipped_publishes: u64,
+    pub lag: Vec<LagStat>,
+    pub inter: Vec<LinkLedger>,
+    pub intra: Vec<LinkLedger>,
+    pub forced_drops: u32,
+    /// Per-DC partition countdowns (rounds remaining).
+    pub partitioned: Vec<u64>,
+    /// Per-replica stall countdowns (rounds remaining).
+    pub stalled: Vec<u64>,
+}
+
+impl FabricCheckpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u8(1); // payload version
+        w.put_u8(mode_tag(self.mode));
+        w.put_u64(self.head);
+        w.put_u64(self.rng_state.0);
+        w.put_u64(self.rng_state.1);
+        w.put_opt_bytes(self.prev_raw.as_deref());
+        w.put_opt_bytes(self.prev_quant.as_deref());
+        w.put_u64(self.log.len() as u64);
+        for entry in &self.log {
+            w.put_bytes(entry);
+        }
+        w.put_u64(self.log_blanked);
+        w.put_u64(self.replicas.len() as u64);
+        for r in &self.replicas {
+            w.put_u64(r.seq);
+            w.put_opt_bytes(r.base.as_deref());
+            w.put_u8(r.health);
+            w.put_u32(r.failed_rounds);
+        }
+        w.put_u64(self.rounds);
+        w.put_u64(self.max_skew);
+        w.put_u64(self.replays);
+        w.put_u64(self.resyncs);
+        w.put_u64(self.converged_rounds);
+        w.put_u64(self.retries);
+        w.put_u64(self.skipped_publishes);
+        w.put_u64(self.lag.len() as u64);
+        for l in &self.lag {
+            w.put_u64(l.publishes);
+            w.put_f64(l.total_seconds);
+            w.put_f64(l.last_seconds);
+        }
+        for links in [&self.inter, &self.intra] {
+            w.put_u64(links.len() as u64);
+            for l in links.iter() {
+                w.put_u64(l.bytes);
+                w.put_f64(l.seconds);
+                w.put_u64(l.messages);
+                w.put_u64(l.drops);
+            }
+        }
+        w.put_u32(self.forced_drops);
+        w.put_u64(self.partitioned.len() as u64);
+        for &p in &self.partitioned {
+            w.put_u64(p);
+        }
+        w.put_u64(self.stalled.len() as u64);
+        for &s in &self.stalled {
+            w.put_u64(s);
+        }
+        w.finish()
+    }
+
+    pub fn from_bytes(payload: &[u8]) -> Result<FabricCheckpoint, FleetError> {
+        let mut r = ByteReader::new(payload);
+        let version = r.get_u8()?;
+        if version != 1 {
+            return Err(FleetError::Corrupt(format!(
+                "unsupported fabric checkpoint version {version}"
+            )));
+        }
+        let mode = mode_from_tag(r.get_u8()?)?;
+        let head = r.get_u64()?;
+        let rng_state = (r.get_u64()?, r.get_u64()?);
+        let prev_raw = r.get_opt_bytes()?;
+        let prev_quant = r.get_opt_bytes()?;
+        let n_log = r.get_u64()? as usize;
+        let mut log = Vec::with_capacity(n_log);
+        for _ in 0..n_log {
+            log.push(r.get_bytes()?);
+        }
+        let log_blanked = r.get_u64()?;
+        let n_replicas = r.get_u64()? as usize;
+        let mut replicas = Vec::with_capacity(n_replicas);
+        for _ in 0..n_replicas {
+            replicas.push(ReplicaCheckpoint {
+                seq: r.get_u64()?,
+                base: r.get_opt_bytes()?,
+                health: r.get_u8()?,
+                failed_rounds: r.get_u32()?,
+            });
+        }
+        let rounds = r.get_u64()?;
+        let max_skew = r.get_u64()?;
+        let replays = r.get_u64()?;
+        let resyncs = r.get_u64()?;
+        let converged_rounds = r.get_u64()?;
+        let retries = r.get_u64()?;
+        let skipped_publishes = r.get_u64()?;
+        let n_lag = r.get_u64()? as usize;
+        let mut lag = Vec::with_capacity(n_lag);
+        for _ in 0..n_lag {
+            lag.push(LagStat {
+                publishes: r.get_u64()?,
+                total_seconds: r.get_f64()?,
+                last_seconds: r.get_f64()?,
+            });
+        }
+        let mut ledgers = |r: &mut ByteReader| -> Result<Vec<LinkLedger>, FleetError> {
+            let n = r.get_u64()? as usize;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                out.push(LinkLedger {
+                    bytes: r.get_u64()?,
+                    seconds: r.get_f64()?,
+                    messages: r.get_u64()?,
+                    drops: r.get_u64()?,
+                });
+            }
+            Ok(out)
+        };
+        let inter = ledgers(&mut r)?;
+        let intra = ledgers(&mut r)?;
+        let forced_drops = r.get_u32()?;
+        let n_part = r.get_u64()? as usize;
+        let mut partitioned = Vec::with_capacity(n_part);
+        for _ in 0..n_part {
+            partitioned.push(r.get_u64()?);
+        }
+        let n_stall = r.get_u64()? as usize;
+        let mut stalled = Vec::with_capacity(n_stall);
+        for _ in 0..n_stall {
+            stalled.push(r.get_u64()?);
+        }
+        r.done()?;
+        Ok(FabricCheckpoint {
+            mode,
+            head,
+            rng_state,
+            prev_raw,
+            prev_quant,
+            log,
+            log_blanked,
+            replicas,
+            rounds,
+            max_skew,
+            replays,
+            resyncs,
+            converged_rounds,
+            retries,
+            skipped_publishes,
+            lag,
+            inter,
+            intra,
+            forced_drops,
+            partitioned,
+            stalled,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FabricCheckpoint {
+        FabricCheckpoint {
+            mode: UpdateMode::QuantPatch,
+            head: 7,
+            rng_state: (0xdead_beef_cafe_f00d, 0x1234_5678_9abc_def1),
+            prev_raw: Some(vec![1, 2, 3, 4]),
+            prev_quant: Some(vec![9, 8, 7]),
+            log: vec![Vec::new(), vec![5, 6], vec![7]],
+            log_blanked: 1,
+            replicas: vec![
+                ReplicaCheckpoint {
+                    seq: 7,
+                    base: Some(vec![9, 8, 7]),
+                    health: 0,
+                    failed_rounds: 0,
+                },
+                ReplicaCheckpoint {
+                    seq: 5,
+                    base: Some(vec![4, 4]),
+                    health: 2,
+                    failed_rounds: 3,
+                },
+            ],
+            rounds: 7,
+            max_skew: 2,
+            replays: 1,
+            resyncs: 1,
+            converged_rounds: 5,
+            retries: 4,
+            skipped_publishes: 2,
+            lag: vec![
+                LagStat { publishes: 7, total_seconds: 3.5, last_seconds: 0.5 },
+                LagStat { publishes: 5, total_seconds: 9.0, last_seconds: 2.0 },
+            ],
+            inter: vec![LinkLedger {
+                bytes: 4096,
+                seconds: 1.25,
+                messages: 9,
+                drops: 2,
+            }],
+            intra: vec![LinkLedger::default()],
+            forced_drops: 1,
+            partitioned: vec![0, 2],
+            stalled: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn payload_roundtrip_is_exact() {
+        let ckpt = sample();
+        let bytes = ckpt.to_bytes();
+        let back = FabricCheckpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.mode, ckpt.mode);
+        assert_eq!(back.head, ckpt.head);
+        assert_eq!(back.rng_state, ckpt.rng_state);
+        assert_eq!(back.prev_raw, ckpt.prev_raw);
+        assert_eq!(back.prev_quant, ckpt.prev_quant);
+        assert_eq!(back.log, ckpt.log);
+        assert_eq!(back.log_blanked, ckpt.log_blanked);
+        assert_eq!(back.replicas, ckpt.replicas);
+        assert_eq!(back.retries, ckpt.retries);
+        assert_eq!(back.partitioned, ckpt.partitioned);
+        assert_eq!(back.stalled, ckpt.stalled);
+        assert_eq!(back.lag.len(), 2);
+        assert_eq!(back.lag[1].publishes, 5);
+        assert_eq!(back.inter[0].bytes, 4096);
+        assert_eq!(back.forced_drops, 1);
+    }
+
+    #[test]
+    fn seal_detects_any_single_byte_corruption() {
+        let payload = sample().to_bytes();
+        let sealed = seal(&payload);
+        assert_eq!(unseal(&sealed).unwrap(), &payload[..]);
+        // flip one byte anywhere — magic, payload, or trailer — and
+        // unseal must refuse
+        for pos in [0, MAGIC.len() + 3, sealed.len() - 2] {
+            let mut bad = sealed.clone();
+            bad[pos] ^= 0x40;
+            assert!(
+                matches!(unseal(&bad), Err(FleetError::Corrupt(_))),
+                "corruption at {pos} went undetected"
+            );
+        }
+        assert!(matches!(unseal(&sealed[..4]), Err(FleetError::Corrupt(_))));
+    }
+
+    #[test]
+    fn atomic_write_then_read_roundtrips() {
+        let dir = std::env::temp_dir()
+            .join(format!("fwckpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fabric.ckpt");
+        let ckpt = sample();
+        write_atomic(&path, &ckpt.to_bytes()).unwrap();
+        // no temp file left behind
+        assert!(!dir.join("fabric.ckpt.tmp").exists());
+        let payload = read_file(&path).unwrap();
+        let back = FabricCheckpoint::from_bytes(&payload).unwrap();
+        assert_eq!(back.head, ckpt.head);
+        // overwrite is atomic too: the new content fully replaces
+        let mut ckpt2 = ckpt.clone();
+        ckpt2.head = 99;
+        write_atomic(&path, &ckpt2.to_bytes()).unwrap();
+        let back2 =
+            FabricCheckpoint::from_bytes(&read_file(&path).unwrap()).unwrap();
+        assert_eq!(back2.head, 99);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_not_corrupt() {
+        let err = read_file(Path::new("/nonexistent/fw.ckpt")).unwrap_err();
+        assert!(matches!(err, FleetError::Io(_)), "{err:?}");
+    }
+
+    #[test]
+    fn truncated_payload_is_matchable() {
+        let bytes = sample().to_bytes();
+        let err = FabricCheckpoint::from_bytes(&bytes[..bytes.len() / 2])
+            .unwrap_err();
+        assert!(matches!(err, FleetError::Corrupt(_)), "{err:?}");
+    }
+}

@@ -1,0 +1,282 @@
+//! Replica health tracking: the Healthy → Lagging → Suspect → Dead
+//! state machine and the lock-free [`HealthBoard`] serving-side
+//! routing reads from.
+//!
+//! Two signals drive the machine, both measured in publish rounds
+//! (the fabric's clock):
+//!
+//! * **heartbeat age** — consecutive rounds without a successful
+//!   contact (delivery, retry, or recovery probe).  Crossing
+//!   `suspect_after` demotes to Suspect, `dead_after` to Dead.
+//! * **seq lag** — `head - replica_seq` for a replica that *is*
+//!   contactable.  Lag at or past `lagging_after` marks it Lagging
+//!   (still serving, but behind).
+//!
+//! A successful contact resets the heartbeat age, so a healed
+//! partition resurrects even a Dead replica — the fabric's recovery
+//! probe plus catch-up brings it back to Healthy in one round.
+//! Suspect and Dead replicas are skipped by `FleetFabric::publish`
+//! (no WAN bytes wasted on a black hole) and by serving-side routing
+//! ([`HealthBoard::route`]), instead of stalling traffic on them.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// One replica's health, ordered by severity.  The `u8` encoding is
+/// what the `fw_fleet_replica_health` gauge exports (0=healthy,
+/// 1=lagging, 2=suspect, 3=dead).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthState {
+    Healthy,
+    Lagging,
+    Suspect,
+    Dead,
+}
+
+impl HealthState {
+    pub fn as_gauge(self) -> u8 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Lagging => 1,
+            HealthState::Suspect => 2,
+            HealthState::Dead => 3,
+        }
+    }
+
+    pub fn from_gauge(v: u8) -> HealthState {
+        match v {
+            0 => HealthState::Healthy,
+            1 => HealthState::Lagging,
+            2 => HealthState::Suspect,
+            _ => HealthState::Dead,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Lagging => "lagging",
+            HealthState::Suspect => "suspect",
+            HealthState::Dead => "dead",
+        }
+    }
+
+    /// Whether traffic should still be routed here.  Lagging replicas
+    /// serve (stale-but-consistent is the fleet's normal state);
+    /// Suspect/Dead are routed around.
+    pub fn serving(self) -> bool {
+        matches!(self, HealthState::Healthy | HealthState::Lagging)
+    }
+}
+
+/// Thresholds of the health machine, in publish rounds.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthPolicy {
+    /// Seq lag at which a contactable replica is marked Lagging.
+    pub lagging_after: u64,
+    /// Consecutive contact failures before Suspect (stop publishing
+    /// to it; recovery probes take over).
+    pub suspect_after: u32,
+    /// Consecutive contact failures before Dead.
+    pub dead_after: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy { lagging_after: 1, suspect_after: 2, dead_after: 4 }
+    }
+}
+
+/// Fabric-side per-replica tracker: folds the round's contact outcome
+/// and observed lag into the state machine.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthTracker {
+    state: HealthState,
+    /// Heartbeat age: consecutive rounds without successful contact.
+    failed_rounds: u32,
+}
+
+impl Default for HealthTracker {
+    fn default() -> Self {
+        HealthTracker { state: HealthState::Healthy, failed_rounds: 0 }
+    }
+}
+
+impl HealthTracker {
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    pub fn failed_rounds(&self) -> u32 {
+        self.failed_rounds
+    }
+
+    /// Rebuild from checkpointed fields.
+    pub fn restore(state: HealthState, failed_rounds: u32) -> Self {
+        HealthTracker { state, failed_rounds }
+    }
+
+    /// Fold one round's observation: whether the replica was
+    /// successfully contacted, and its seq lag afterwards.  Returns
+    /// the `(from, to)` transition when the state changed.
+    pub fn observe(
+        &mut self,
+        contacted: bool,
+        lag: u64,
+        policy: &HealthPolicy,
+    ) -> Option<(HealthState, HealthState)> {
+        if contacted {
+            self.failed_rounds = 0;
+        } else {
+            self.failed_rounds = self.failed_rounds.saturating_add(1);
+        }
+        let next = if self.failed_rounds >= policy.dead_after {
+            HealthState::Dead
+        } else if self.failed_rounds >= policy.suspect_after {
+            HealthState::Suspect
+        } else if lag >= policy.lagging_after {
+            HealthState::Lagging
+        } else {
+            HealthState::Healthy
+        };
+        if next != self.state {
+            let from = self.state;
+            self.state = next;
+            Some((from, next))
+        } else {
+            None
+        }
+    }
+}
+
+/// Shared, lock-free view of every replica's health for concurrent
+/// readers (traffic drivers route through it while the fabric
+/// publishes).  One `AtomicU8` per replica, flattened DC-major like
+/// the fabric's replica order.
+#[derive(Debug)]
+pub struct HealthBoard {
+    states: Vec<AtomicU8>,
+}
+
+impl HealthBoard {
+    pub fn new(replicas: usize) -> Self {
+        HealthBoard {
+            states: (0..replicas).map(|_| AtomicU8::new(0)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> HealthState {
+        HealthState::from_gauge(self.states[idx].load(Ordering::Acquire))
+    }
+
+    pub fn set(&self, idx: usize, state: HealthState) {
+        self.states[idx].store(state.as_gauge(), Ordering::Release);
+    }
+
+    /// Serving-side model resolution: the first serving replica
+    /// scanning from `hint` (wrapping).  Falls back to `hint` itself
+    /// when the whole fleet is unhealthy — serving stale beats
+    /// serving nothing.
+    pub fn route(&self, hint: usize) -> usize {
+        let n = self.states.len();
+        if n == 0 {
+            return hint;
+        }
+        for off in 0..n {
+            let idx = (hint + off) % n;
+            if self.get(idx).serving() {
+                return idx;
+            }
+        }
+        hint % n
+    }
+
+    /// Replicas currently eligible for traffic.
+    pub fn serving_count(&self) -> usize {
+        (0..self.states.len()).filter(|&i| self.get(i).serving()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_encoding_roundtrip() {
+        for s in [
+            HealthState::Healthy,
+            HealthState::Lagging,
+            HealthState::Suspect,
+            HealthState::Dead,
+        ] {
+            assert_eq!(HealthState::from_gauge(s.as_gauge()), s);
+        }
+        assert!(HealthState::Healthy.serving());
+        assert!(HealthState::Lagging.serving());
+        assert!(!HealthState::Suspect.serving());
+        assert!(!HealthState::Dead.serving());
+    }
+
+    #[test]
+    fn tracker_walks_the_ladder_and_heals() {
+        let policy = HealthPolicy::default();
+        let mut t = HealthTracker::default();
+        // lag while contactable → Lagging
+        assert_eq!(
+            t.observe(true, 1, &policy),
+            Some((HealthState::Healthy, HealthState::Lagging))
+        );
+        // caught up → Healthy
+        assert_eq!(
+            t.observe(true, 0, &policy),
+            Some((HealthState::Lagging, HealthState::Healthy))
+        );
+        // consecutive failures: 1 keeps (lag marks Lagging), 2 → Suspect
+        assert_eq!(
+            t.observe(false, 1, &policy),
+            Some((HealthState::Healthy, HealthState::Lagging))
+        );
+        assert_eq!(
+            t.observe(false, 2, &policy),
+            Some((HealthState::Lagging, HealthState::Suspect))
+        );
+        assert_eq!(t.observe(false, 3, &policy), None);
+        // 4th failure → Dead
+        assert_eq!(
+            t.observe(false, 4, &policy),
+            Some((HealthState::Suspect, HealthState::Dead))
+        );
+        // one successful contact resurrects straight to Healthy
+        assert_eq!(
+            t.observe(true, 0, &policy),
+            Some((HealthState::Dead, HealthState::Healthy))
+        );
+        assert_eq!(t.failed_rounds(), 0);
+    }
+
+    #[test]
+    fn board_routes_around_unhealthy_replicas() {
+        let board = HealthBoard::new(4);
+        assert_eq!(board.route(2), 2);
+        board.set(2, HealthState::Suspect);
+        assert_eq!(board.route(2), 3);
+        board.set(3, HealthState::Dead);
+        assert_eq!(board.route(2), 0);
+        assert_eq!(board.serving_count(), 2);
+        // whole fleet down: fall back to the hint rather than stall
+        for i in 0..4 {
+            board.set(i, HealthState::Dead);
+        }
+        assert_eq!(board.route(2), 2);
+        // healed replica becomes routable again
+        board.set(1, HealthState::Lagging);
+        assert_eq!(board.route(2), 1);
+    }
+}

@@ -85,6 +85,17 @@ pub struct FleetMetrics {
     pub resyncs: u64,
     /// Rounds that ended with every replica at the head version.
     pub converged_rounds: u64,
+    /// Publish shipment retry attempts (failed attempts that were
+    /// given another try under the fabric's [`RetryPolicy`]).
+    ///
+    /// [`RetryPolicy`]: crate::fleet::RetryPolicy
+    pub retries: u64,
+    /// Publish shipments skipped because the target replica was
+    /// Suspect/Dead (routed around instead of stalling on it).
+    pub skipped_publishes: u64,
+    /// Per-replica health state, gauge-encoded (0=healthy 1=lagging
+    /// 2=suspect 3=dead), flattened DC-major.
+    pub health: Vec<u8>,
     /// Per-replica publish lag (flattened DC-major, same order as
     /// [`crate::fleet::topology::Topology::replica_ids`]).
     pub lag: Vec<LagStat>,
@@ -142,6 +153,23 @@ impl FleetMetrics {
             .set(self.resyncs as f64);
         reg.gauge("fw_fleet_converged_rounds", "rounds ending fully converged")
             .set(self.converged_rounds as f64);
+        reg.gauge(
+            "fw_fleet_publish_retries",
+            "cumulative publish shipment retry attempts",
+        )
+        .set(self.retries as f64);
+        reg.gauge(
+            "fw_fleet_skipped_publishes",
+            "publish shipments skipped for unhealthy replicas",
+        )
+        .set(self.skipped_publishes as f64);
+        for (r, h) in self.health.iter().enumerate() {
+            reg.gauge(
+                &format!("fw_fleet_replica_health{{replica=\"{r}\"}}"),
+                "replica health (0=healthy 1=lagging 2=suspect 3=dead)",
+            )
+            .set(*h as f64);
+        }
         for (class, links) in [("inter", &self.inter), ("intra", &self.intra)] {
             for (dc, l) in links.iter().enumerate() {
                 reg.gauge(

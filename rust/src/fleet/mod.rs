@@ -21,33 +21,89 @@
 //!   inter-DC bytes (the §6 bandwidth trick, generalized).
 //! * [`replica`] — per-replica delta-chain version tracking over
 //!   [`crate::transfer::UpdateReceiver`].
-//! * [`FleetFabric`] — encode once, distribute per plan, heal broken
-//!   chains via the catch-up protocol (chained-patch replay vs
-//!   full-snapshot resync, whichever ships fewer bytes).
+//! * [`FleetFabric`] — encode once, distribute per plan with bounded
+//!   retries, heal broken chains via the catch-up protocol
+//!   (folded/sequential chained-patch replay vs full-snapshot resync,
+//!   whichever ships fewer bytes).
+//! * [`health`] — the Healthy → Lagging → Suspect → Dead replica state
+//!   machine; publish and serving-side routing go around Suspect/Dead
+//!   replicas instead of stalling on them.
+//! * [`checkpoint`] — durable CRC-guarded fabric checkpoints; a
+//!   killed-and-restarted fabric or replica resumes bit-identically.
 //! * [`metrics`] — per-link byte ledgers, publish lag per replica,
 //!   max version skew, convergence counters.
-//! * [`soak`] — the fleet-wide soak harness (the deployment-plane soak
-//!   of [`crate::deploy::harness`], scaled out to ≥3 DCs × ≥2
-//!   replicas with fault injection).
+//! * [`soak`] — the fleet-wide soak harness; [`chaos`] — the same
+//!   harness under crash/partition/stall fault injection.
 
+pub mod chaos;
+pub mod checkpoint;
+pub mod health;
 pub mod metrics;
 pub mod planner;
 pub mod replica;
 pub mod soak;
 pub mod topology;
 
+pub use checkpoint::{FabricCheckpoint, ReplicaCheckpoint};
+pub use health::{HealthBoard, HealthPolicy, HealthState, HealthTracker};
 pub use metrics::{FleetMetrics, LagStat, LinkLedger};
 pub use planner::{plan, DcRoute, DistributionPlan, Strategy};
 pub use replica::{ApplyVerdict, FleetReplica};
 pub use topology::{DcSpec, LinkSpec, ReplicaId, SimLink, Topology};
 
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
 use crate::config::ServeConfig;
 use crate::model::regressor::Regressor;
-use crate::obs::RequestTracer;
+use crate::obs::{Counter, Gauge, HistogramShard, ObsRegistry, RequestTracer};
+use crate::patch::{self, Patch};
 use crate::serve::server::ServeStats;
-use crate::transfer::{UpdateMode, UpdatePipeline, UpdateReceiver};
+use crate::transfer::{
+    FleetError, UpdateMode, UpdatePipeline, UpdateReceiver, WireUpdate,
+};
 use crate::util::json::{num, obj, s};
 use crate::util::rng::Pcg32;
+
+/// Bounded-retry discipline for publish shipments: a failed attempt
+/// costs the per-link timeout, then backs off exponentially (capped)
+/// with deterministic jitter drawn from the fabric's seeded RNG — so
+/// two runs with the same seed retry at identical simulated instants.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total shipment attempts per target (1 = no retry).
+    pub max_attempts: u32,
+    /// Simulated seconds a failed attempt costs before it is declared
+    /// lost (the per-link timeout).
+    pub timeout_seconds: f64,
+    /// First backoff; doubles per retry.
+    pub base_backoff_seconds: f64,
+    /// Backoff cap.
+    pub max_backoff_seconds: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            timeout_seconds: 0.5,
+            base_backoff_seconds: 0.05,
+            max_backoff_seconds: 1.0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Capped exponential backoff before retry number `attempt + 1`,
+    /// jittered into `[50%, 100%)` of the nominal value.
+    pub fn backoff_seconds(&self, attempt: u32, rng: &mut Pcg32) -> f64 {
+        let nominal = (self.base_backoff_seconds
+            * 2f64.powi(attempt.min(30) as i32))
+        .min(self.max_backoff_seconds);
+        nominal * (0.5 + 0.5 * rng.next_f64())
+    }
+}
 
 /// Configuration of one fleet fabric.
 #[derive(Clone, Debug)]
@@ -67,8 +123,12 @@ pub struct FleetConfig {
     pub serve: Option<ServeConfig>,
     /// Name replicas register their model under.
     pub model_name: String,
-    /// Seed for the deterministic loss simulation.
+    /// Seed for the deterministic loss/retry-jitter simulation.
     pub seed: u64,
+    /// Health state-machine thresholds.
+    pub health: HealthPolicy,
+    /// Publish shipment retry discipline.
+    pub retry: RetryPolicy,
 }
 
 impl FleetConfig {
@@ -81,6 +141,8 @@ impl FleetConfig {
             serve: None,
             model_name: "ctr".into(),
             seed: 0xf1ee7,
+            health: HealthPolicy::default(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -90,7 +152,8 @@ impl FleetConfig {
 pub enum CatchUpKind {
     /// Replica was already at head; nothing shipped.
     None,
-    /// Replayed this many retained chained updates, in order.
+    /// Replayed this many retained chained updates — as one folded
+    /// patch when the chain could be merged, else in order.
     Replay { updates: usize },
     /// Shipped a full snapshot of this many bytes.
     Resync { bytes: usize },
@@ -110,6 +173,11 @@ pub struct RoundOutcome {
     pub delivered: usize,
     /// Shipments lost this round (replicas left behind).
     pub dropped: usize,
+    /// Replicas not shipped to at all because their health state was
+    /// Suspect/Dead (routed around, recovery probes take over).
+    pub skipped_unhealthy: usize,
+    /// Shipment retry attempts spent this round.
+    pub retries: u64,
     /// Catch-ups resolved by patch-chain replay this round.
     pub replays: u64,
     /// Catch-ups resolved by full resync this round.
@@ -120,10 +188,24 @@ pub struct RoundOutcome {
     pub encode_seconds: f64,
 }
 
+/// Live metric handles the fabric updates as events happen (the
+/// snapshot path is [`FleetMetrics::export_to`]; these keep the shared
+/// registry current between snapshots).  All names are get-or-create,
+/// so snapshot exports refresh the same cells.
+struct FleetObs {
+    retries: Gauge,
+    transitions: Counter,
+    replay_ns: HistogramShard,
+    health: Vec<Gauge>,
+}
+
 /// The distribution fabric: one sender-side pipeline fanned out to
 /// every replica in the topology over simulated links.
 pub struct FleetFabric {
     cfg: FleetConfig,
+    /// Bootstrap model every replica (re)starts from; kept for
+    /// crash-restart of individual replicas.
+    template: Regressor,
     pipeline: UpdatePipeline,
     /// In-order receiver that never misses an update: the reference
     /// every replica must converge to, and the source of pre-swap
@@ -132,10 +214,14 @@ pub struct FleetFabric {
     reference_model: Option<Regressor>,
     /// Retained per-round updates (`log[i]` is publish seq `i+1`) —
     /// the sender side of the catch-up replay path.
-    log: Vec<crate::transfer::WireUpdate>,
+    log: Vec<WireUpdate>,
     /// Everything before this index is already payload-blanked, so
     /// [`compact_log`](Self::compact_log) stays O(1) per round.
     log_blanked: usize,
+    /// Merged single-hop patch for the retained window, refreshed by
+    /// [`compact_log`](Self::compact_log): `(from_seq, update)` where
+    /// `update` rebases a replica at `from_seq` straight to head.
+    fold_cache: Option<(u64, WireUpdate)>,
     head: u64,
     replicas: Vec<FleetReplica>,
     /// Per-DC trainer→DC links.
@@ -143,16 +229,30 @@ pub struct FleetFabric {
     /// Per-DC intra-DC re-distribution links.
     intra: Vec<SimLink>,
     rng: Pcg32,
-    /// Fault injector: force-drop the next N shipments.
+    /// Fault injector: force-drop the next N shipments (hard losses,
+    /// never retried — one injected drop is one missed delivery).
     forced_drops: u32,
+    /// Fault injector: per-DC inter-link partition, in remaining
+    /// publish rounds.
+    partitioned: Vec<u64>,
+    /// Fault injector: per-replica stall (frozen process), in
+    /// remaining publish rounds.
+    stalled: Vec<u64>,
+    /// Per-replica health trackers (fabric-side state machine).
+    trackers: Vec<HealthTracker>,
+    /// Shared lock-free health view for serving-side routing.
+    board: Arc<HealthBoard>,
     rounds: u64,
     max_skew: u64,
     replays: u64,
     resyncs: u64,
     converged_rounds: u64,
+    retries: u64,
+    skipped_publishes: u64,
     lag: Vec<LagStat>,
-    /// Discrete-event sink (publish rounds, catch-up replays/resyncs);
-    /// None = no tracing cost beyond this Option check.
+    obs: Option<FleetObs>,
+    /// Discrete-event sink (publish rounds, catch-up replays/resyncs,
+    /// health transitions); None = no tracing cost beyond this check.
     tracer: Option<RequestTracer>,
 }
 
@@ -180,38 +280,89 @@ impl FleetFabric {
         let intra = cfg.topology.dcs.iter().map(|d| SimLink::new(d.intra)).collect();
         let rng = Pcg32::seeded(cfg.seed);
         let lag = vec![LagStat::default(); replicas.len()];
+        let trackers = vec![HealthTracker::default(); replicas.len()];
+        let board = Arc::new(HealthBoard::new(replicas.len()));
+        let partitioned = vec![0; cfg.topology.dcs.len()];
+        let stalled = vec![0; replicas.len()];
         let pipeline = UpdatePipeline::new(cfg.mode);
         FleetFabric {
             cfg,
+            template: template.clone(),
             pipeline,
             reference,
             reference_model: None,
             log: Vec::new(),
             log_blanked: 0,
+            fold_cache: None,
             head: 0,
             replicas,
             inter,
             intra,
             rng,
             forced_drops: 0,
+            partitioned,
+            stalled,
+            trackers,
+            board,
             rounds: 0,
             max_skew: 0,
             replays: 0,
             resyncs: 0,
             converged_rounds: 0,
+            retries: 0,
+            skipped_publishes: 0,
             lag,
+            obs: None,
             tracer: None,
         }
     }
 
-    /// Attach a discrete-event tracer: publish rounds and catch-up
-    /// replays/resyncs are emitted as JSONL events.
+    /// Attach a discrete-event tracer: publish rounds, catch-up
+    /// replays/resyncs, health transitions, and restarts are emitted
+    /// as JSONL events.
     pub fn set_tracer(&mut self, tracer: RequestTracer) {
         self.tracer = Some(tracer);
     }
 
+    /// Attach a shared metrics registry: health gauges
+    /// (`fw_fleet_replica_health{replica=..}`), the publish-retry
+    /// gauge, the health-transition counter, and the recovery replay
+    /// histogram (`fw_recovery_replay_ns`) are kept live as events
+    /// happen.  [`FleetMetrics::export_to`] refreshes the same cells
+    /// at snapshot time.
+    pub fn set_obs(&mut self, reg: &ObsRegistry) {
+        let health: Vec<Gauge> = (0..self.replicas.len())
+            .map(|i| {
+                reg.gauge(
+                    &format!("fw_fleet_replica_health{{replica=\"{i}\"}}"),
+                    "replica health (0=healthy 1=lagging 2=suspect 3=dead)",
+                )
+            })
+            .collect();
+        for (i, g) in health.iter().enumerate() {
+            g.set(self.trackers[i].state().as_gauge() as f64);
+        }
+        let obs = FleetObs {
+            retries: reg.gauge(
+                "fw_fleet_publish_retries",
+                "cumulative publish shipment retry attempts",
+            ),
+            transitions: reg.counter(
+                "fw_fleet_health_transitions_total",
+                "replica health state transitions",
+            ),
+            replay_ns: reg.histogram_shard(
+                "fw_recovery_replay_ns",
+                "crash-recovery replay/catch-up wall time (ns)",
+            ),
+            health,
+        };
+        obs.retries.set(self.retries as f64);
+        self.obs = Some(obs);
+    }
+
     /// Publish one trained snapshot to the whole fleet.
-    pub fn publish(&mut self, reg: &Regressor) -> Result<RoundOutcome, String> {
+    pub fn publish(&mut self, reg: &Regressor) -> Result<RoundOutcome, FleetError> {
         self.publish_with(reg, |_, _| {})
     }
 
@@ -224,7 +375,7 @@ impl FleetFabric {
         &mut self,
         reg: &Regressor,
         before_swap: impl FnOnce(u64, &Regressor),
-    ) -> Result<RoundOutcome, String> {
+    ) -> Result<RoundOutcome, FleetError> {
         let seq = self.head + 1;
         let update = self.pipeline.encode(reg);
         let raw_bytes = self.pipeline.last_raw_len().unwrap_or(0);
@@ -239,33 +390,73 @@ impl FleetFabric {
         let plan = planner::plan(&self.cfg.topology, self.cfg.strategy);
         let mut delivered = 0usize;
         let mut dropped = 0usize;
+        let mut skipped = 0usize;
+        let mut contacted = vec![false; self.replicas.len()];
         let replays0 = self.replays;
         let resyncs0 = self.resyncs;
+        let retries0 = self.retries;
         for (dc, route) in plan.per_dc.iter().enumerate() {
             let n_replicas = self.cfg.topology.dcs[dc].replicas;
+            // Suspect/Dead replicas are routed around: no WAN bytes
+            // spent on a black hole; the recovery probe owns them.
+            let serving: Vec<usize> = (0..n_replicas)
+                .filter(|&r| {
+                    let idx = self
+                        .cfg
+                        .topology
+                        .flat_index(ReplicaId { dc, replica: r });
+                    self.trackers[idx].state().serving()
+                })
+                .collect();
+            skipped += n_replicas - serving.len();
+            if serving.is_empty() {
+                continue;
+            }
             match route {
                 DcRoute::Star => {
-                    for r in 0..n_replicas {
-                        match self.ship_inter(dc, update_bytes) {
+                    for &r in &serving {
+                        let idx = self
+                            .cfg
+                            .topology
+                            .flat_index(ReplicaId { dc, replica: r });
+                        match self.ship_inter_retrying(dc, idx, update_bytes) {
                             Some(secs) => {
                                 self.apply_at(dc, r, encode_seconds + secs)?;
                                 delivered += 1;
+                                contacted[idx] = true;
                             }
                             None => dropped += 1,
                         }
                     }
                 }
                 DcRoute::Tree { head } => {
-                    match self.ship_inter(dc, update_bytes) {
-                        None => dropped += n_replicas,
+                    // the designated head relays intra-DC; if it is
+                    // unhealthy, the first serving replica takes over
+                    let head_r = if serving.contains(head) {
+                        *head
+                    } else {
+                        serving[0]
+                    };
+                    let head_idx = self
+                        .cfg
+                        .topology
+                        .flat_index(ReplicaId { dc, replica: head_r });
+                    match self.ship_inter_retrying(dc, head_idx, update_bytes) {
+                        None => dropped += serving.len(),
                         Some(head_secs) => {
-                            self.apply_at(dc, *head, encode_seconds + head_secs)?;
+                            self.apply_at(dc, head_r, encode_seconds + head_secs)?;
                             delivered += 1;
-                            for r in 0..n_replicas {
-                                if r == *head {
+                            contacted[head_idx] = true;
+                            for &r in &serving {
+                                if r == head_r {
                                     continue;
                                 }
-                                match self.ship_intra(dc, update_bytes) {
+                                let idx = self
+                                    .cfg
+                                    .topology
+                                    .flat_index(ReplicaId { dc, replica: r });
+                                match self.ship_intra_retrying(dc, idx, update_bytes)
+                                {
                                     Some(secs) => {
                                         self.apply_at(
                                             dc,
@@ -273,6 +464,7 @@ impl FleetFabric {
                                             encode_seconds + head_secs + secs,
                                         )?;
                                         delivered += 1;
+                                        contacted[idx] = true;
                                     }
                                     None => dropped += 1,
                                 }
@@ -283,12 +475,22 @@ impl FleetFabric {
             }
         }
 
+        self.probe_unhealthy(&mut contacted);
         self.compact_log();
+        self.observe_health(&contacted);
+        self.skipped_publishes += skipped as u64;
         let max_skew = self.current_skew();
         self.max_skew = self.max_skew.max(max_skew);
         self.rounds += 1;
         if max_skew == 0 {
             self.converged_rounds += 1;
+        }
+        // fault countdowns tick per publish round
+        for p in &mut self.partitioned {
+            *p = p.saturating_sub(1);
+        }
+        for st in &mut self.stalled {
+            *st = st.saturating_sub(1);
         }
         if let Some(tr) = self.tracer.as_ref() {
             tr.emit(&obj(vec![
@@ -297,6 +499,8 @@ impl FleetFabric {
                 ("update_bytes", num(update_bytes as f64)),
                 ("delivered", num(delivered as f64)),
                 ("dropped", num(dropped as f64)),
+                ("skipped_unhealthy", num(skipped as f64)),
+                ("retries", num((self.retries - retries0) as f64)),
                 ("max_skew", num(max_skew as f64)),
             ]));
         }
@@ -306,6 +510,8 @@ impl FleetFabric {
             raw_bytes,
             delivered,
             dropped,
+            skipped_unhealthy: skipped,
+            retries: self.retries - retries0,
             replays: self.replays - replays0,
             resyncs: self.resyncs - resyncs0,
             max_skew,
@@ -317,16 +523,26 @@ impl FleetFabric {
     /// version.  The catch-up protocol: when the replica's mode chains
     /// updates, it is within the replay window, and the retained
     /// patches sum to fewer bytes than a full snapshot, the missed
-    /// chain is replayed in order; otherwise a full-snapshot resync
-    /// ships the sender's current base file.  Catch-up payloads move
-    /// over a *reliable* control channel (lost shipments are
-    /// retransmitted and billed).
-    pub fn catch_up(&mut self, idx: usize) -> Result<CatchUpKind, String> {
+    /// chain is replayed — as one *folded* patch
+    /// ([`crate::patch::fold_chain`]) when the links merge, so a deep
+    /// catch-up is a single hop; in order otherwise.  Beyond the
+    /// window a full-snapshot resync ships the sender's current base
+    /// file.  Catch-up payloads move over a *reliable* control channel
+    /// (lost shipments are retransmitted and billed), but a
+    /// partitioned DC or stalled replica is unreachable even for that
+    /// — the attempt fails fast with a matchable error.
+    pub fn catch_up(&mut self, idx: usize) -> Result<CatchUpKind, FleetError> {
         let from = self.replicas[idx].seq();
         if from >= self.head {
             return Ok(CatchUpKind::None);
         }
         let dc = self.replicas[idx].id.dc;
+        if self.partitioned[dc] > 0 {
+            return Err(FleetError::LinkDown { dc });
+        }
+        if self.stalled[idx] > 0 {
+            return Err(FleetError::Unreachable { replica: idx });
+        }
         let missed = (self.head - from) as usize;
         let replay_bytes: usize = self.log[from as usize..self.head as usize]
             .iter()
@@ -336,7 +552,7 @@ impl FleetFabric {
             .pipeline
             .sent_bytes()
             .map(|b| b.len())
-            .ok_or("nothing published yet")?;
+            .ok_or(FleetError::NothingPublished)?;
         // compact_log guarantees the last max_chain entries are intact;
         // the emptiness check is insurance against window-math drift
         let replay = self.cfg.mode.is_chained()
@@ -346,6 +562,27 @@ impl FleetFabric {
                 .iter()
                 .all(|u| !u.bytes.is_empty());
         if replay {
+            // single hop when ≥2 patch links merge (seq 1 is the
+            // bootstrap full file, never part of a fold)
+            if missed >= 2 && from >= 1 {
+                if let Some(folded) = self.folded_update(from) {
+                    let secs = self.ship_reliable_inter(dc, folded.bytes.len());
+                    let verdict = self.replicas[idx].deliver_jump(self.head, &folded)?;
+                    debug_assert_eq!(verdict, ApplyVerdict::Applied);
+                    self.lag[idx].record(secs);
+                    self.replays += 1;
+                    if let Some(tr) = self.tracer.as_ref() {
+                        tr.emit(&obj(vec![
+                            ("event", s("fleet_catch_up")),
+                            ("kind", s("replay")),
+                            ("folded", num(1.0)),
+                            ("replica", num(idx as f64)),
+                            ("updates", num(missed as f64)),
+                        ]));
+                    }
+                    return Ok(CatchUpKind::Replay { updates: missed });
+                }
+            }
             for seq in from + 1..=self.head {
                 let len = self.log[(seq - 1) as usize].bytes.len();
                 let secs = self.ship_reliable_inter(dc, len);
@@ -359,6 +596,7 @@ impl FleetFabric {
                 tr.emit(&obj(vec![
                     ("event", s("fleet_catch_up")),
                     ("kind", s("replay")),
+                    ("folded", num(0.0)),
                     ("replica", num(idx as f64)),
                     ("updates", num(missed as f64)),
                 ]));
@@ -389,7 +627,7 @@ impl FleetFabric {
     /// End-of-run barrier: catch every straggler up to head.  Returns
     /// how many replicas needed it.  (Production runs this implicitly
     /// — the next round's gap triggers the same protocol.)
-    pub fn converge(&mut self) -> Result<usize, String> {
+    pub fn converge(&mut self) -> Result<usize, FleetError> {
         let mut fixed = 0;
         for idx in 0..self.replicas.len() {
             if self.replicas[idx].seq() < self.head {
@@ -400,15 +638,219 @@ impl FleetFabric {
         Ok(fixed)
     }
 
+    // -------------------------------------------------- fault injection
+
     /// Force the next `n` shipments (any link) to be lost — the
     /// deterministic fault injector behind the soak/property tests.
+    /// Forced drops are hard losses: they are *not* retried, so one
+    /// injected drop is exactly one missed delivery.
     pub fn force_drops(&mut self, n: u32) {
         self.forced_drops += n;
     }
 
+    /// Partition DC `dc` from the trainer for the next `rounds`
+    /// publish rounds: every inter-DC shipment (including catch-up
+    /// probes) to it fails.
+    pub fn partition_dc(&mut self, dc: usize, rounds: u64) {
+        self.partitioned[dc] = self.partitioned[dc].max(rounds);
+    }
+
+    /// Stall replica `idx` for the next `rounds` publish rounds: the
+    /// process is frozen, so every shipment to it fails until the
+    /// stall clears.
+    pub fn stall_replica(&mut self, idx: usize, rounds: u64) {
+        self.stalled[idx] = self.stalled[idx].max(rounds);
+    }
+
+    // ----------------------------------------------- checkpoint/restart
+
+    /// Snapshot the complete distribution state (see
+    /// [`FabricCheckpoint`]).
+    pub fn checkpoint(&self) -> FabricCheckpoint {
+        let (prev_raw, prev_quant) = self.pipeline.export_state();
+        FabricCheckpoint {
+            mode: self.cfg.mode,
+            head: self.head,
+            rng_state: self.rng.state(),
+            prev_raw,
+            prev_quant,
+            log: self.log.iter().map(|u| u.bytes.clone()).collect(),
+            log_blanked: self.log_blanked as u64,
+            replicas: (0..self.replicas.len())
+                .map(|i| self.checkpoint_replica(i))
+                .collect(),
+            rounds: self.rounds,
+            max_skew: self.max_skew,
+            replays: self.replays,
+            resyncs: self.resyncs,
+            converged_rounds: self.converged_rounds,
+            retries: self.retries,
+            skipped_publishes: self.skipped_publishes,
+            lag: self.lag.clone(),
+            inter: self.inter.iter().map(|l| l.ledger).collect(),
+            intra: self.intra.iter().map(|l| l.ledger).collect(),
+            forced_drops: self.forced_drops,
+            partitioned: self.partitioned.clone(),
+            stalled: self.stalled.clone(),
+        }
+    }
+
+    /// One replica's durable cursor (seq + receiver base + health).
+    pub fn checkpoint_replica(&self, idx: usize) -> ReplicaCheckpoint {
+        ReplicaCheckpoint {
+            seq: self.replicas[idx].seq(),
+            base: self.replicas[idx].base_bytes().map(|b| b.to_vec()),
+            health: self.trackers[idx].state().as_gauge(),
+            failed_rounds: self.trackers[idx].failed_rounds(),
+        }
+    }
+
+    /// Write the fabric checkpoint to `path` (CRC-sealed, temp-file +
+    /// rename, see [`checkpoint::write_atomic`]).
+    pub fn write_checkpoint(&self, path: &Path) -> Result<(), FleetError> {
+        checkpoint::write_atomic(path, &self.checkpoint().to_bytes())
+    }
+
+    /// Rebuild a fabric from a checkpoint.  The restored fabric is
+    /// **bit-identical** to the one that wrote the checkpoint: same
+    /// pipeline diff bases, same retained log, same replica cursors
+    /// and bases, same RNG position, same counters/ledgers — so the
+    /// next publish behaves exactly as it would have without the
+    /// crash.
+    pub fn restore(
+        cfg: FleetConfig,
+        template: &Regressor,
+        ckpt: &FabricCheckpoint,
+    ) -> Result<FleetFabric, FleetError> {
+        if ckpt.mode != cfg.mode {
+            return Err(FleetError::Corrupt(format!(
+                "checkpoint mode {:?} != configured {:?}",
+                ckpt.mode, cfg.mode
+            )));
+        }
+        let mut fab = FleetFabric::new(cfg, template);
+        if ckpt.replicas.len() != fab.replicas.len()
+            || ckpt.partitioned.len() != fab.partitioned.len()
+            || ckpt.stalled.len() != fab.stalled.len()
+            || ckpt.inter.len() != fab.inter.len()
+            || ckpt.intra.len() != fab.intra.len()
+            || ckpt.lag.len() != fab.lag.len()
+        {
+            return Err(FleetError::Corrupt(
+                "checkpoint topology does not match configuration".into(),
+            ));
+        }
+        fab.pipeline
+            .restore_state(ckpt.prev_raw.clone(), ckpt.prev_quant.clone())?;
+        if let Some(base) = fab.pipeline.sent_bytes().map(|b| b.to_vec()) {
+            let fresh = fab.reference.resync(&base)?;
+            fab.reference_model = Some(fresh);
+        }
+        fab.log = ckpt
+            .log
+            .iter()
+            .map(|b| WireUpdate {
+                mode: ckpt.mode,
+                bytes: b.clone(),
+                encode_seconds: 0.0,
+            })
+            .collect();
+        fab.log_blanked = ckpt.log_blanked as usize;
+        fab.head = ckpt.head;
+        fab.rng = Pcg32::from_state(ckpt.rng_state.0, ckpt.rng_state.1);
+        for (i, rc) in ckpt.replicas.iter().enumerate() {
+            fab.replicas[i].restore(rc.seq, rc.base.as_deref())?;
+            fab.trackers[i] = HealthTracker::restore(
+                HealthState::from_gauge(rc.health),
+                rc.failed_rounds,
+            );
+            fab.board.set(i, fab.trackers[i].state());
+        }
+        fab.rounds = ckpt.rounds;
+        fab.max_skew = ckpt.max_skew;
+        fab.replays = ckpt.replays;
+        fab.resyncs = ckpt.resyncs;
+        fab.converged_rounds = ckpt.converged_rounds;
+        fab.retries = ckpt.retries;
+        fab.skipped_publishes = ckpt.skipped_publishes;
+        fab.lag = ckpt.lag.clone();
+        for (link, l) in fab.inter.iter_mut().zip(&ckpt.inter) {
+            link.ledger = *l;
+        }
+        for (link, l) in fab.intra.iter_mut().zip(&ckpt.intra) {
+            link.ledger = *l;
+        }
+        fab.forced_drops = ckpt.forced_drops;
+        fab.partitioned = ckpt.partitioned.clone();
+        fab.stalled = ckpt.stalled.clone();
+        fab.refresh_fold_cache();
+        Ok(fab)
+    }
+
+    /// [`restore`](Self::restore) from a sealed checkpoint file.
+    pub fn restore_from_path(
+        cfg: FleetConfig,
+        template: &Regressor,
+        path: &Path,
+    ) -> Result<FleetFabric, FleetError> {
+        let payload = checkpoint::read_file(path)?;
+        let ckpt = FabricCheckpoint::from_bytes(&payload)?;
+        Self::restore(cfg, template, &ckpt)
+    }
+
+    /// Kill-and-restart replica `idx` from its durable cursor: the old
+    /// replica (and its serving engine) is torn down, a fresh one
+    /// bootstraps from the template, restores to the checkpointed
+    /// seq/base, and is healed to head via catch-up.  Recovery wall
+    /// time lands in the `fw_recovery_replay_ns` histogram.  If the
+    /// replica is currently unreachable (partition/stall), the restart
+    /// still succeeds — it just stays at the checkpointed seq until
+    /// the recovery probe can reach it.
+    pub fn restart_replica(
+        &mut self,
+        idx: usize,
+        ckpt: &ReplicaCheckpoint,
+    ) -> Result<CatchUpKind, FleetError> {
+        let t = Instant::now();
+        let id = self.replicas[idx].id;
+        let fresh = FleetReplica::new(
+            id,
+            self.cfg.mode,
+            &self.template,
+            self.cfg.serve.as_ref(),
+            &self.cfg.model_name,
+        );
+        let old = std::mem::replace(&mut self.replicas[idx], fresh);
+        old.shutdown();
+        self.replicas[idx].restore(ckpt.seq, ckpt.base.as_deref())?;
+        self.trackers[idx] = HealthTracker::restore(
+            HealthState::from_gauge(ckpt.health),
+            ckpt.failed_rounds,
+        );
+        self.board.set(idx, self.trackers[idx].state());
+        let kind = match self.catch_up(idx) {
+            Ok(k) => k,
+            Err(FleetError::LinkDown { .. })
+            | Err(FleetError::Unreachable { .. }) => CatchUpKind::None,
+            Err(e) => return Err(e),
+        };
+        if let Some(o) = &self.obs {
+            o.replay_ns.record_ns(t.elapsed().as_nanos() as u64);
+        }
+        if let Some(tr) = self.tracer.as_ref() {
+            tr.emit(&obj(vec![
+                ("event", s("fleet_restart")),
+                ("replica", num(idx as f64)),
+                ("from_seq", num(ckpt.seq as f64)),
+                ("to_seq", num(self.replicas[idx].seq() as f64)),
+            ]));
+        }
+        Ok(kind)
+    }
+
     // ------------------------------------------------------ internals
 
-    fn apply_at(&mut self, dc: usize, r: usize, lag_seconds: f64) -> Result<(), String> {
+    fn apply_at(&mut self, dc: usize, r: usize, lag_seconds: f64) -> Result<(), FleetError> {
         let idx = self.cfg.topology.flat_index(ReplicaId { dc, replica: r });
         let seq = self.head;
         let verdict = self.replicas[idx].deliver(seq, &self.log[(seq - 1) as usize])?;
@@ -426,8 +868,61 @@ impl FleetFabric {
         }
     }
 
-    /// Drop retained payloads that the replay path can never use: the
-    /// log keeps one slot per seq (indexing), but only the newest
+    /// Attempt catch-up on every non-serving (Suspect/Dead) replica —
+    /// the recovery probe.  A reachable replica is healed (and counts
+    /// as contacted this round, resurrecting it through the health
+    /// machine); one behind a partition or stall stays down.  Probe
+    /// recovery wall time lands in `fw_recovery_replay_ns`.
+    fn probe_unhealthy(&mut self, contacted: &mut [bool]) {
+        for idx in 0..self.replicas.len() {
+            if self.trackers[idx].state().serving() {
+                continue;
+            }
+            let dc = self.replicas[idx].id.dc;
+            if self.partitioned[dc] > 0 || self.stalled[idx] > 0 {
+                continue; // probe times out; heartbeat age keeps growing
+            }
+            let t = Instant::now();
+            if self.catch_up(idx).is_ok() {
+                contacted[idx] = true;
+                if let Some(o) = &self.obs {
+                    o.replay_ns.record_ns(t.elapsed().as_nanos() as u64);
+                }
+            }
+        }
+    }
+
+    /// Fold each replica's round outcome into its health tracker and
+    /// publish transitions to the board, gauges, and tracer.
+    fn observe_health(&mut self, contacted: &[bool]) {
+        for idx in 0..self.replicas.len() {
+            let lag = self.head - self.replicas[idx].seq();
+            if let Some((from, to)) =
+                self.trackers[idx].observe(contacted[idx], lag, &self.cfg.health)
+            {
+                if let Some(o) = &self.obs {
+                    o.transitions.inc();
+                    o.health[idx].set(to.as_gauge() as f64);
+                }
+                if let Some(tr) = self.tracer.as_ref() {
+                    tr.emit(&obj(vec![
+                        ("event", s("fleet_health")),
+                        ("replica", num(idx as f64)),
+                        ("from", s(from.label())),
+                        ("to", s(to.label())),
+                    ]));
+                }
+            }
+            self.board.set(idx, self.trackers[idx].state());
+        }
+        if let Some(o) = &self.obs {
+            o.retries.set(self.retries as f64);
+        }
+    }
+
+    /// Drop retained payloads that the replay path can never use, and
+    /// refresh the folded single-hop patch for the surviving window.
+    /// The log keeps one slot per seq (indexing), but only the newest
     /// `max_chain` entries are replayable (and non-chained modes never
     /// replay at all — their catch-up is always a resync of the
     /// current base).  Without this, a long Raw-mode run would retain
@@ -444,6 +939,51 @@ impl FleetFabric {
             u.bytes = Vec::new();
         }
         self.log_blanked = self.log_blanked.max(blank_upto);
+        self.refresh_fold_cache();
+    }
+
+    /// Merge the whole retained patch window into one cached
+    /// single-hop update (the deep-catch-up fast path).  Seq 1 is the
+    /// bootstrap full file, never a patch, so the window starts at log
+    /// index 1 at the earliest.
+    fn refresh_fold_cache(&mut self) {
+        self.fold_cache = None;
+        if !self.cfg.mode.is_chained() {
+            return;
+        }
+        let win_start = self.log_blanked.max(1) as u64;
+        if self.head < win_start + 2 {
+            return; // fewer than 2 links — nothing to merge
+        }
+        self.fold_cache =
+            self.fold_window(win_start).map(|u| (win_start, u));
+    }
+
+    /// The folded catch-up update for a replica at seq `from`: the
+    /// cached window fold when it matches, an on-demand fold
+    /// otherwise.  None when the chain cannot be merged (corrupt or
+    /// length-changing links) — the caller falls back to sequential
+    /// replay.
+    fn folded_update(&mut self, from: u64) -> Option<WireUpdate> {
+        if let Some((cached_from, u)) = &self.fold_cache {
+            if *cached_from == from {
+                return Some(u.clone());
+            }
+        }
+        self.fold_window(from)
+    }
+
+    fn fold_window(&self, from: u64) -> Option<WireUpdate> {
+        let entries = &self.log[from as usize..self.head as usize];
+        let patches: Result<Vec<Patch>, String> =
+            entries.iter().map(|u| Patch::from_wire(&u.bytes)).collect();
+        let folded =
+            patch::fold_chain(&patches.ok()?, self.pipeline.compression).ok()?;
+        Some(WireUpdate {
+            mode: self.cfg.mode,
+            bytes: folded.to_wire(),
+            encode_seconds: 0.0,
+        })
     }
 
     fn take_forced_drop(&mut self) -> bool {
@@ -460,9 +1000,88 @@ impl FleetFabric {
         self.inter[dc].ship(len, &mut self.rng, force)
     }
 
-    fn ship_intra(&mut self, dc: usize, len: usize) -> Option<f64> {
-        let force = self.take_forced_drop();
-        self.intra[dc].ship(len, &mut self.rng, force)
+    /// Publish-path inter-DC shipment with the bounded-retry
+    /// discipline.  A forced drop is a hard loss (one billed failed
+    /// attempt, no retry).  A partitioned DC or stalled target fails
+    /// every attempt (each billed — the sender pays for bytes pushed
+    /// into a black hole until the timeout).  Probabilistic link loss
+    /// is retried with capped exponential backoff and deterministic
+    /// jitter; failed attempts add the timeout + backoff to the
+    /// delivery lag.
+    fn ship_inter_retrying(
+        &mut self,
+        dc: usize,
+        target: usize,
+        len: usize,
+    ) -> Option<f64> {
+        if self.take_forced_drop() {
+            let secs = self.inter[dc].spec.transfer_seconds(len);
+            self.inter[dc].ledger.record(len, secs, false);
+            return None;
+        }
+        let mut elapsed = 0.0;
+        let max = self.cfg.retry.max_attempts.max(1);
+        for attempt in 0..max {
+            let shipped = if self.partitioned[dc] > 0 || self.stalled[target] > 0 {
+                let secs = self.inter[dc].spec.transfer_seconds(len);
+                self.inter[dc].ledger.record(len, secs, false);
+                None
+            } else {
+                self.inter[dc].ship(len, &mut self.rng, false)
+            };
+            match shipped {
+                Some(secs) => return Some(elapsed + secs),
+                None => {
+                    elapsed += self.cfg.retry.timeout_seconds;
+                    if attempt + 1 < max {
+                        elapsed +=
+                            self.cfg.retry.backoff_seconds(attempt, &mut self.rng);
+                        self.retries += 1;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Intra-DC twin of
+    /// [`ship_inter_retrying`](Self::ship_inter_retrying).  Partitions
+    /// cut only the trainer→DC link; inside the DC only a stalled
+    /// target is unreachable.
+    fn ship_intra_retrying(
+        &mut self,
+        dc: usize,
+        target: usize,
+        len: usize,
+    ) -> Option<f64> {
+        if self.take_forced_drop() {
+            let secs = self.intra[dc].spec.transfer_seconds(len);
+            self.intra[dc].ledger.record(len, secs, false);
+            return None;
+        }
+        let mut elapsed = 0.0;
+        let max = self.cfg.retry.max_attempts.max(1);
+        for attempt in 0..max {
+            let shipped = if self.stalled[target] > 0 {
+                let secs = self.intra[dc].spec.transfer_seconds(len);
+                self.intra[dc].ledger.record(len, secs, false);
+                None
+            } else {
+                self.intra[dc].ship(len, &mut self.rng, false)
+            };
+            match shipped {
+                Some(secs) => return Some(elapsed + secs),
+                None => {
+                    elapsed += self.cfg.retry.timeout_seconds;
+                    if attempt + 1 < max {
+                        elapsed +=
+                            self.cfg.retry.backoff_seconds(attempt, &mut self.rng);
+                        self.retries += 1;
+                    }
+                }
+            }
+        }
+        None
     }
 
     /// Reliable (retransmitting) inter-DC shipment for catch-up
@@ -470,7 +1089,8 @@ impl FleetFabric {
     /// a bounded number of lossy retries the final retransmission is
     /// forced through (and billed as a delivery), so even a 100%-loss
     /// link cannot leave the ledger claiming convergence happened with
-    /// zero successful shipments.
+    /// zero successful shipments.  (Reachability — partition/stall —
+    /// is checked by [`catch_up`](Self::catch_up) before this runs.)
     fn ship_reliable_inter(&mut self, dc: usize, len: usize) -> f64 {
         let mut total = 0.0;
         for _ in 0..63 {
@@ -508,6 +1128,17 @@ impl FleetFabric {
         &self.replicas
     }
 
+    /// Health state of replica `idx`.
+    pub fn health(&self, idx: usize) -> HealthState {
+        self.trackers[idx].state()
+    }
+
+    /// Shared lock-free health board — clone the `Arc` into traffic
+    /// drivers for serving-side route-around.
+    pub fn health_board(&self) -> &Arc<HealthBoard> {
+        &self.board
+    }
+
     /// The reference model every replica must converge to (None before
     /// the first publish).
     pub fn reference(&self) -> Option<&Regressor> {
@@ -527,6 +1158,9 @@ impl FleetFabric {
             replays: self.replays,
             resyncs: self.resyncs,
             converged_rounds: self.converged_rounds,
+            retries: self.retries,
+            skipped_publishes: self.skipped_publishes,
+            health: self.trackers.iter().map(|t| t.state().as_gauge()).collect(),
             lag: self.lag.clone(),
             inter: self.inter.iter().map(|l| l.ledger).collect(),
             intra: self.intra.iter().map(|l| l.ledger).collect(),
@@ -579,6 +1213,8 @@ mod tests {
                 assert_eq!(o.seq, i as u64 + 1);
                 assert_eq!(o.delivered, 4, "{mode:?}");
                 assert_eq!(o.dropped, 0);
+                assert_eq!(o.skipped_unhealthy, 0);
+                assert_eq!(o.retries, 0);
                 assert_eq!(o.max_skew, 0, "{mode:?}");
             }
             assert_eq!(fab.converge().unwrap(), 0);
@@ -613,10 +1249,11 @@ mod tests {
             let mut fab = fabric(mode, 1, 2, &template);
             fab.publish(&snaps[0]).unwrap();
             // lose round 2's single inter shipment: the whole DC tree
-            // misses seq 2
+            // misses seq 2 (forced drops are hard losses — no retry)
             fab.force_drops(1);
             let o2 = fab.publish(&snaps[1]).unwrap();
             assert_eq!(o2.dropped, 2, "{mode:?}");
+            assert_eq!(o2.retries, 0, "{mode:?}");
             assert_eq!(o2.max_skew, 1, "{mode:?}");
             // round 3 arrives: the head replica hits a gap and the
             // catch-up protocol replays the missed link
@@ -745,5 +1382,203 @@ mod tests {
         let m = fab.metrics();
         // replica 1 rides head's WAN hop plus its own LAN hop
         assert!(m.lag[1].last_seconds > m.lag[0].last_seconds);
+    }
+
+    #[test]
+    fn deep_catchup_replays_one_folded_hop() {
+        for mode in [UpdateMode::PatchOnly, UpdateMode::QuantPatch] {
+            let (template, snaps) = trained_snapshots(5, 250);
+            let mut fab = fabric(mode, 1, 2, &template);
+            fab.publish(&snaps[0]).unwrap();
+            fab.publish(&snaps[1]).unwrap();
+            // lose rounds 3 and 4 entirely: both replicas fall 2 behind
+            fab.force_drops(1);
+            fab.publish(&snaps[2]).unwrap();
+            fab.force_drops(1);
+            let o4 = fab.publish(&snaps[3]).unwrap();
+            assert_eq!(o4.max_skew, 2, "{mode:?}");
+            let inter_msgs_before: u64 =
+                fab.metrics().inter.iter().map(|l| l.messages).sum();
+            // round 5 delivery hits a 2-update gap at the tree head:
+            // the fold path must heal it in a single catch-up hop
+            let o5 = fab.publish(&snaps[4]).unwrap();
+            assert_eq!(o5.max_skew, 0, "{mode:?}");
+            assert!(o5.replays >= 1, "{mode:?}");
+            let inter_msgs_after: u64 =
+                fab.metrics().inter.iter().map(|l| l.messages).sum();
+            // one publish shipment + one folded catch-up shipment per
+            // replica — NOT one shipment per missed link (2 replicas ×
+            // 2 missed links would be 4 catch-up hops unfolded)
+            assert_eq!(inter_msgs_after - inter_msgs_before, 3, "{mode:?}");
+            let reference = fab.reference().unwrap().pool.weights.clone();
+            for rep in fab.replicas() {
+                assert_eq!(rep.model().pool.weights, reference, "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stall_walks_replica_to_dead_and_probe_resurrects() {
+        let (template, snaps) = trained_snapshots(8, 120);
+        let topo = Topology::uniform(1, 2, LinkSpec::wan(), LinkSpec::lan());
+        let mut cfg = FleetConfig::new(topo, UpdateMode::QuantPatch);
+        cfg.strategy = Strategy::Star;
+        let mut fab = FleetFabric::new(cfg, &template);
+        fab.publish(&snaps[0]).unwrap();
+        assert_eq!(fab.health(1), HealthState::Healthy);
+        // freeze replica 1 for 4 rounds: Lagging → Suspect → Dead
+        fab.stall_replica(1, 4);
+        fab.publish(&snaps[1]).unwrap();
+        assert_eq!(fab.health(1), HealthState::Lagging);
+        let o3 = fab.publish(&snaps[2]).unwrap();
+        assert_eq!(fab.health(1), HealthState::Suspect);
+        assert!(o3.retries > 0, "stalled shipments must be retried");
+        // Suspect → skipped by publish, probe still can't reach it
+        let o4 = fab.publish(&snaps[3]).unwrap();
+        assert_eq!(o4.skipped_unhealthy, 1);
+        let o5 = fab.publish(&snaps[4]).unwrap();
+        assert_eq!(o5.skipped_unhealthy, 1);
+        assert_eq!(fab.health(1), HealthState::Dead);
+        assert!(!fab.health_board().get(1).serving());
+        assert_eq!(fab.health_board().route(1), 0, "traffic routed around");
+        // stall expired: the recovery probe heals it the next round
+        let o6 = fab.publish(&snaps[5]).unwrap();
+        assert_eq!(fab.health(1), HealthState::Healthy, "{o6:?}");
+        assert_eq!(o6.max_skew, 0);
+        assert_eq!(fab.health_board().route(1), 1);
+        let reference = fab.reference().unwrap().pool.weights.clone();
+        assert_eq!(fab.replicas()[1].model().pool.weights, reference);
+        let m = fab.metrics();
+        assert!(m.retries > 0);
+        assert!(m.skipped_publishes >= 2);
+    }
+
+    #[test]
+    fn partition_downs_a_dc_and_heals_after() {
+        let (template, snaps) = trained_snapshots(6, 120);
+        let mut fab = fabric(UpdateMode::QuantPatch, 2, 1, &template);
+        fab.publish(&snaps[0]).unwrap();
+        fab.partition_dc(1, 2);
+        let o2 = fab.publish(&snaps[1]).unwrap();
+        assert_eq!(o2.dropped, 1);
+        assert!(o2.retries > 0, "partitioned shipments are retried");
+        // catch-up across the partition is a matchable LinkDown
+        assert_eq!(fab.catch_up(1), Err(FleetError::LinkDown { dc: 1 }));
+        fab.publish(&snaps[2]).unwrap();
+        assert!(fab.health(1) > HealthState::Healthy);
+        // partition expired: next round heals the replica
+        let o4 = fab.publish(&snaps[3]).unwrap();
+        assert_eq!(o4.max_skew, 0, "{o4:?}");
+        assert_eq!(fab.health(1), HealthState::Healthy);
+        let reference = fab.reference().unwrap().pool.weights.clone();
+        assert_eq!(fab.replicas()[1].model().pool.weights, reference);
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_bit_identically() {
+        for mode in UpdateMode::ALL {
+            let (template, snaps) = trained_snapshots(6, 150);
+            // reference: uninterrupted run over all six rounds
+            let mut gold = fabric(mode, 2, 2, &template);
+            gold.force_drops(1);
+            for snap in &snaps {
+                gold.publish(snap).unwrap();
+            }
+            // crashed run: checkpoint after round 3, restore, continue
+            let mut fab = fabric(mode, 2, 2, &template);
+            fab.force_drops(1);
+            for snap in &snaps[..3] {
+                fab.publish(snap).unwrap();
+            }
+            let ckpt = fab.checkpoint();
+            let bytes = ckpt.to_bytes();
+            drop(fab); // the crash
+            let restored = FabricCheckpoint::from_bytes(&bytes).unwrap();
+            let topo =
+                Topology::uniform(2, 2, LinkSpec::wan(), LinkSpec::lan());
+            let mut fab =
+                FleetFabric::restore(FleetConfig::new(topo, mode), &template, &restored)
+                    .unwrap();
+            for snap in &snaps[3..] {
+                fab.publish(snap).unwrap();
+            }
+            // bit-identical: same head, same replica weights, same
+            // sender base, same ledgers as the uninterrupted run
+            assert_eq!(fab.head(), gold.head(), "{mode:?}");
+            assert_eq!(fab.sender_base(), gold.sender_base(), "{mode:?}");
+            for (a, b) in fab.replicas().iter().zip(gold.replicas()) {
+                assert_eq!(a.seq(), b.seq(), "{mode:?}");
+                assert_eq!(
+                    a.model().pool.weights,
+                    b.model().pool.weights,
+                    "{mode:?}"
+                );
+                assert_eq!(a.base_bytes(), b.base_bytes(), "{mode:?}");
+            }
+            let (ma, mb) = (fab.metrics(), gold.metrics());
+            assert_eq!(ma.rounds, mb.rounds);
+            assert_eq!(ma.inter_bytes(), mb.inter_bytes(), "{mode:?}");
+            assert_eq!(ma.intra_bytes(), mb.intra_bytes(), "{mode:?}");
+            assert_eq!(ma.replays, mb.replays, "{mode:?}");
+            assert_eq!(ma.resyncs, mb.resyncs, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn replica_restart_recovers_from_cursor() {
+        let (template, snaps) = trained_snapshots(4, 150);
+        let mut fab = fabric(UpdateMode::QuantPatch, 1, 2, &template);
+        fab.publish(&snaps[0]).unwrap();
+        fab.publish(&snaps[1]).unwrap();
+        let ckpt = fab.checkpoint_replica(1);
+        assert_eq!(ckpt.seq, 2);
+        // two more rounds happen while the replica is "down", then it
+        // restarts from its durable cursor and catches up
+        fab.publish(&snaps[2]).unwrap();
+        fab.publish(&snaps[3]).unwrap();
+        let kind = fab.restart_replica(1, &ckpt).unwrap();
+        assert!(matches!(kind, CatchUpKind::Replay { .. } | CatchUpKind::Resync { .. }));
+        assert_eq!(fab.replicas()[1].seq(), fab.head());
+        let reference = fab.reference().unwrap().pool.weights.clone();
+        assert_eq!(fab.replicas()[1].model().pool.weights, reference);
+    }
+
+    #[test]
+    fn fleet_obs_exports_health_retries_and_recovery() {
+        let (template, snaps) = trained_snapshots(6, 120);
+        let topo = Topology::uniform(1, 2, LinkSpec::wan(), LinkSpec::lan());
+        let mut cfg = FleetConfig::new(topo, UpdateMode::QuantPatch);
+        cfg.strategy = Strategy::Star;
+        let mut fab = FleetFabric::new(cfg, &template);
+        let reg = ObsRegistry::new();
+        fab.set_obs(&reg);
+        fab.publish(&snaps[0]).unwrap();
+        fab.stall_replica(1, 3);
+        for snap in &snaps[1..5] {
+            fab.publish(snap).unwrap();
+        }
+        // replica 1 walked the ladder and was resurrected — all of it
+        // visible in the shared registry
+        assert_eq!(
+            reg.gauge_value("fw_fleet_replica_health{replica=\"1\"}"),
+            Some(0.0),
+            "resurrected replica gauges healthy"
+        );
+        assert!(
+            reg.counter_value("fw_fleet_health_transitions_total").unwrap() >= 3
+        );
+        assert!(reg.gauge_value("fw_fleet_publish_retries").unwrap() > 0.0);
+        let recovered = reg
+            .histogram_snapshot("fw_recovery_replay_ns")
+            .expect("recovery histogram registered");
+        assert!(recovered.count() >= 1, "probe recovery recorded");
+        // snapshot export composes with the live handles on the same
+        // registry (same names, same kinds — no collisions)
+        fab.metrics().export_to(&reg);
+        let text = reg.render_prometheus();
+        crate::testutil::check_prometheus_text(&text).expect("well-formed");
+        assert!(text.contains("fw_fleet_replica_health"));
+        assert!(text.contains("fw_fleet_publish_retries"));
+        assert!(text.contains("fw_recovery_replay_ns"));
     }
 }

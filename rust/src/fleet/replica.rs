@@ -21,7 +21,7 @@ use crate::model::regressor::Regressor;
 use crate::serve::router::Router;
 use crate::serve::server::{ServeClient, ServeStats, ServingEngine};
 use crate::serve::ModelHandle;
-use crate::transfer::{UpdateMode, UpdateReceiver, WireUpdate};
+use crate::transfer::{FleetError, UpdateMode, UpdateReceiver, WireUpdate};
 
 use super::topology::ReplicaId;
 
@@ -93,7 +93,11 @@ impl FleetReplica {
     /// Deliver publish `seq`.  Chained modes require exact sequence;
     /// full-file modes (raw/quant) may skip ahead, since every update
     /// is self-contained.
-    pub fn deliver(&mut self, seq: u64, update: &WireUpdate) -> Result<ApplyVerdict, String> {
+    pub fn deliver(
+        &mut self,
+        seq: u64,
+        update: &WireUpdate,
+    ) -> Result<ApplyVerdict, FleetError> {
         if seq <= self.seq {
             return Ok(ApplyVerdict::Duplicate);
         }
@@ -105,12 +109,57 @@ impl FleetReplica {
         Ok(ApplyVerdict::Applied)
     }
 
+    /// Deliver a *folded* catch-up patch: one synthetic update composed
+    /// from the retained chain ([`crate::patch::fold_chain`]) that
+    /// rebases this replica from its current base straight to `seq`.
+    /// The in-sequence gate is intentionally bypassed — the fabric
+    /// folds the chain starting exactly at this replica's sequence, so
+    /// the composed patch is valid against the current base even
+    /// though it spans multiple publishes.
+    pub fn deliver_jump(
+        &mut self,
+        seq: u64,
+        update: &WireUpdate,
+    ) -> Result<ApplyVerdict, FleetError> {
+        if seq <= self.seq {
+            return Ok(ApplyVerdict::Duplicate);
+        }
+        let fresh = self.receiver.apply(update)?;
+        self.install(seq, fresh);
+        Ok(ApplyVerdict::Applied)
+    }
+
     /// Full-snapshot resync: jump straight to `seq` from the sender's
     /// base file, whatever state the chain was in.
-    pub fn resync(&mut self, seq: u64, full_base: &[u8]) -> Result<(), String> {
+    pub fn resync(&mut self, seq: u64, full_base: &[u8]) -> Result<(), FleetError> {
         let fresh = self.receiver.resync(full_base)?;
         self.install(seq, fresh);
         Ok(())
+    }
+
+    /// Restore a freshly constructed replica to a checkpointed
+    /// position: install `base` (this replica's own receiver base at
+    /// checkpoint time) at sequence `seq`.  `base == None` means the
+    /// replica had never received an update — it stays on the
+    /// bootstrap template at seq 0.  Because the base bytes *are* the
+    /// chain state, the restored replica accepts the next chained
+    /// update exactly as the crashed one would have.
+    pub fn restore(
+        &mut self,
+        seq: u64,
+        base: Option<&[u8]>,
+    ) -> Result<(), FleetError> {
+        match base {
+            Some(bytes) => self.resync(seq, bytes),
+            None => {
+                if seq != 0 {
+                    return Err(FleetError::Corrupt(format!(
+                        "checkpoint claims seq {seq} with no base bytes"
+                    )));
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Receiver-side base file (bit-compared against the sender's in

@@ -441,6 +441,10 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
     use fwumious::train::hogwild::{train_chunk, HogwildConfig};
     use fwumious::transfer::UpdateMode;
 
+    if args.has("chaos") {
+        return cmd_fleet_chaos(args);
+    }
+
     let spec = dataset(&args.flag_or("dataset", "criteo"))?;
     let mode = UpdateMode::parse(&args.flag_or("mode", "quantpatch"))?;
     let strategy = Strategy::parse(&args.flag_or("strategy", "auto"))?;
@@ -538,6 +542,74 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         last_update_bytes,
         star.predicted_inter_bytes(fabric.topology(), last_update_bytes),
         tree.predicted_inter_bytes(fabric.topology(), last_update_bytes)
+    );
+    Ok(())
+}
+
+/// `fw fleet --chaos`: the seed-reproducible fault-injection soak.
+/// Every run prints `chaos seed: 0x...`; pass that seed back via
+/// `--seed` to replay the identical fault schedule.
+fn cmd_fleet_chaos(args: &Args) -> Result<(), String> {
+    use fwumious::fleet::chaos::{run_chaos_soak, ChaosConfig};
+    use fwumious::transfer::UpdateMode;
+
+    let mode = UpdateMode::parse(&args.flag_or("mode", "quantpatch"))?;
+    let seed = args.usize_flag("seed", 42)? as u64;
+    let mut ccfg = if args.has("smoke") {
+        ChaosConfig::smoke(mode, seed)
+    } else {
+        ChaosConfig::full(mode, seed)
+    };
+    if args.flag("rounds").is_some() {
+        ccfg.rounds = args.usize_flag("rounds", ccfg.rounds)?;
+        if ccfg.rounds < 8 {
+            return Err(format!(
+                "--chaos needs --rounds >= 8 (fault-schedule quarters), got {}",
+                ccfg.rounds
+            ));
+        }
+    }
+    if args.flag("examples").is_some() {
+        ccfg.examples_per_round =
+            args.usize_flag("examples", ccfg.examples_per_round)?;
+    }
+    if args.flag("threads").is_some() {
+        ccfg.train_threads = args.usize_flag("threads", ccfg.train_threads)?;
+    }
+
+    println!(
+        "chaos soak: {} DCs x {} replicas, {} over {} rounds x {} examples",
+        ccfg.dcs,
+        ccfg.replicas_per_dc,
+        mode.label(),
+        ccfg.rounds,
+        ccfg.examples_per_round
+    );
+    let report = run_chaos_soak(ccfg);
+    let f = &report.faults;
+    println!(
+        "faults injected: {} stalls, {} partitions, {} replica restarts, {} fabric restores",
+        f.stalls, f.partitions, f.replica_restarts, f.fabric_restores
+    );
+    println!(
+        "traffic: {} probes checked, {} torn, {} routed around unhealthy replicas, {} skipped mid-restart",
+        report.probe_checks,
+        report.torn_responses,
+        report.routed_around,
+        report.probe_errors
+    );
+    println!(
+        "recovery: {} health transitions, {} publish retries, {} replay timings, {} caught up at converge",
+        report.health_transitions,
+        report.metrics.retries,
+        report.recovery_samples,
+        report.caught_up_at_converge
+    );
+    report.assert_healthy();
+    println!(
+        "all invariants held: zero torn responses, bit-identical convergence \
+         (replay with: fw fleet --chaos --seed {})",
+        report.seed
     );
     Ok(())
 }

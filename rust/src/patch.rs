@@ -211,6 +211,120 @@ pub fn apply_patch(old: &[u8], patch: &Patch) -> Result<Vec<u8>, String> {
     apply_ops(old, &ops)
 }
 
+/// Parse a raw op stream into absolute replacement regions
+/// `(start, literal bytes)` plus its `(old_len, new_len)` header.
+fn parse_regions(ops: &[u8]) -> Result<(u64, u64, Vec<(usize, Vec<u8>)>), String> {
+    if ops.len() < 4 || &ops[..4] != MAGIC {
+        return Err("bad patch magic".into());
+    }
+    let mut pos = 4usize;
+    let old_len = varint::read_u64(ops, &mut pos).ok_or("truncated old_len")?;
+    let new_len = varint::read_u64(ops, &mut pos).ok_or("truncated new_len")?;
+    let mut regions = Vec::new();
+    let mut cursor = 0usize;
+    while pos < ops.len() {
+        let skip = varint::read_u64(ops, &mut pos).ok_or("truncated skip")? as usize;
+        let run = varint::read_u64(ops, &mut pos).ok_or("truncated run")? as usize;
+        if pos + run > ops.len() {
+            return Err("run past end of patch".into());
+        }
+        let start = cursor + skip;
+        regions.push((start, ops[pos..pos + run].to_vec()));
+        pos += run;
+        cursor = start + run;
+    }
+    Ok((old_len, new_len, regions))
+}
+
+/// Compose two *in-place* op streams (`a` then `b`, both with
+/// `old_len == new_len`) into one stream equivalent to applying them
+/// in sequence.  In-place is the fleet's steady state — weight files
+/// keep a fixed length round over round — and is what makes
+/// composition an overlay: every byte position of the intermediate
+/// file maps to the same position of the base, so the folded stream is
+/// simply `b`'s regions plus the parts of `a`'s regions `b` did not
+/// overwrite.  Length-changing patches are refused (callers fall back
+/// to sequential replay).
+pub fn fold_ops(a: &[u8], b: &[u8]) -> Result<Vec<u8>, String> {
+    let (a_old, a_new, a_regions) = parse_regions(a)?;
+    let (b_old, b_new, b_regions) = parse_regions(b)?;
+    if a_old != a_new || b_old != b_new {
+        return Err("fold requires in-place patches (old_len == new_len)".into());
+    }
+    if a_new != b_old {
+        return Err(format!("fold chain mismatch: a.new_len {a_new} != b.old_len {b_old}"));
+    }
+
+    // a's regions with every b-covered span punched out (b wins)
+    let mut pieces: Vec<(usize, Vec<u8>)> = Vec::new();
+    for (a_start, a_bytes) in &a_regions {
+        let mut seg_start = *a_start;
+        let seg_end = a_start + a_bytes.len();
+        for (b_start, b_bytes) in &b_regions {
+            let b_end = b_start + b_bytes.len();
+            if b_end <= seg_start || *b_start >= seg_end {
+                continue;
+            }
+            if *b_start > seg_start {
+                pieces.push((
+                    seg_start,
+                    a_bytes[seg_start - a_start..b_start - a_start].to_vec(),
+                ));
+            }
+            seg_start = seg_start.max(b_end);
+            if seg_start >= seg_end {
+                break;
+            }
+        }
+        if seg_start < seg_end {
+            pieces.push((
+                seg_start,
+                a_bytes[seg_start - a_start..seg_end - a_start].to_vec(),
+            ));
+        }
+    }
+    pieces.extend(b_regions);
+    pieces.sort_by_key(|(start, _)| *start);
+
+    // emit, coalescing touching regions (fewer ops compress better)
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    varint::write_u64(&mut out, a_old);
+    varint::write_u64(&mut out, b_new);
+    let mut cursor = 0usize;
+    let mut i = 0usize;
+    while i < pieces.len() {
+        let start = pieces[i].0;
+        let mut bytes = std::mem::take(&mut pieces[i].1);
+        i += 1;
+        while i < pieces.len() && pieces[i].0 == start + bytes.len() {
+            bytes.extend_from_slice(&pieces[i].1);
+            i += 1;
+        }
+        varint::write_u64(&mut out, (start - cursor) as u64);
+        varint::write_u64(&mut out, bytes.len() as u64);
+        out.extend_from_slice(&bytes);
+        cursor = start + bytes.len();
+    }
+    Ok(out)
+}
+
+/// Fold a whole chain of patches into ONE equivalent patch, so a deep
+/// catch-up replays a single hop instead of `k` sequential applies
+/// (ROADMAP item 5d).  All links must be in-place; errs otherwise
+/// (callers fall back to sequential [`apply_chain`] replay).
+pub fn fold_chain(patches: &[Patch], c: Compression) -> Result<Patch, String> {
+    let first = patches.first().ok_or("empty fold chain")?;
+    let mut acc = decompress(&first.payload, first.compression)?;
+    for (i, p) in patches[1..].iter().enumerate() {
+        let ops = decompress(&p.payload, p.compression)?;
+        acc = fold_ops(&acc, &ops)
+            .map_err(|e| format!("fold link {}/{}: {e}", i + 1, patches.len()))?;
+    }
+    let raw_len = acc.len();
+    Ok(Patch { compression: c, payload: compress(&acc, c), raw_len })
+}
+
 /// Replay a *delta chain*: apply `patches` in order, each against the
 /// previous one's output.  The byte-level twin of the fleet catch-up
 /// replay (which runs the same sequence through
@@ -394,6 +508,73 @@ mod tests {
         // a broken link reports its position (wrong-length base)
         let err = apply_chain(&snaps[0][..10_000], &chain).unwrap_err();
         assert!(err.contains("chain link 0/"), "{err}");
+    }
+
+    fn mutate_in_place(rng: &mut Pcg32, buf: &mut [u8], edits: usize) {
+        for _ in 0..edits {
+            let i = rng.below(buf.len() as u32) as usize;
+            buf[i] = buf[i].wrapping_add(1 + rng.below(254) as u8);
+        }
+    }
+
+    #[test]
+    fn folded_chain_equals_sequential_replay() {
+        // K in-place patches folded into ONE patch produce bytes
+        // identical to replaying the chain link by link — the deep
+        // catch-up single-hop guarantee.
+        let mut rng = Pcg32::seeded(21);
+        let mut snaps = vec![(0..30_000)
+            .map(|_| rng.next_u32() as u8)
+            .collect::<Vec<u8>>()];
+        for _ in 0..6 {
+            let mut next = snaps.last().unwrap().clone();
+            mutate_in_place(&mut rng, &mut next, 400);
+            snaps.push(next);
+        }
+        let chain: Vec<Patch> = snaps
+            .windows(2)
+            .map(|w| make_patch(&w[0], &w[1], Compression::Lz))
+            .collect();
+        let folded = fold_chain(&chain, Compression::Lz).unwrap();
+        let via_fold = apply_patch(&snaps[0], &folded).unwrap();
+        let via_replay = apply_chain(&snaps[0], &chain).unwrap();
+        assert_eq!(via_fold, via_replay);
+        assert_eq!(&via_fold, snaps.last().unwrap());
+        // one merged hop must not cost more than the summed chain
+        let chain_bytes: usize = chain.iter().map(|p| p.wire_bytes()).sum();
+        assert!(
+            folded.wire_bytes() <= chain_bytes,
+            "folded {} > chain {}",
+            folded.wire_bytes(),
+            chain_bytes
+        );
+    }
+
+    #[test]
+    fn fold_refuses_length_changing_patches() {
+        let old = vec![1u8; 100];
+        let grown = vec![2u8; 120];
+        let a = make_patch(&old, &grown, Compression::None);
+        let b = make_patch(&grown, &grown, Compression::None);
+        assert!(fold_chain(&[a, b], Compression::None).is_err());
+        assert!(fold_chain(&[], Compression::None).is_err());
+    }
+
+    #[test]
+    fn prop_fold_ops_overlay_is_exact() {
+        prop(40, |g| {
+            let n = g.usize_in(64..4096);
+            let base: Vec<u8> = (0..n).map(|_| g.u32() as u8).collect();
+            let mut mid = base.clone();
+            let mut rng = Pcg32::seeded(g.u64());
+            mutate_in_place(&mut rng, &mut mid, g.usize_in(1..120));
+            let mut new = mid.clone();
+            mutate_in_place(&mut rng, &mut new, g.usize_in(1..120));
+            let a = diff_ops(&base, &mid);
+            let b = diff_ops(&mid, &new);
+            let folded = fold_ops(&a, &b).unwrap();
+            assert_eq!(apply_ops(&base, &folded).unwrap(), new);
+        });
     }
 
     #[test]

@@ -124,9 +124,18 @@ pub struct ModelHandle {
 
 impl ModelHandle {
     pub fn new(reg: Regressor) -> Self {
+        Self::at_version(reg, 1)
+    }
+
+    /// Construct at an explicit starting version — crash recovery
+    /// restores a handle at its checkpointed version so the served
+    /// version line stays monotonic across a restart instead of
+    /// resetting to 1 (version-keyed caches would otherwise collide
+    /// with pre-crash entries).
+    pub fn at_version(reg: Regressor, version: u64) -> Self {
         ModelHandle {
-            inner: Arc::new(RwLock::new((1, Arc::new(reg)))),
-            version: Arc::new(AtomicU64::new(1)),
+            inner: Arc::new(RwLock::new((version, Arc::new(reg)))),
+            version: Arc::new(AtomicU64::new(version)),
         }
     }
 

@@ -16,6 +16,64 @@ use crate::model::regressor::Regressor;
 use crate::patch::{self, Compression, Patch};
 use crate::quant;
 
+/// Transfer/fleet-plane errors, typed so recovery code can *match* on
+/// the failure class (mirroring the serving plane's
+/// [`crate::serve::ServeError`]) instead of sniffing string prefixes:
+/// a [`Gap`](Self::Gap) triggers the catch-up protocol, a
+/// [`Corrupt`](Self::Corrupt) payload or checkpoint must never be
+/// installed, a [`LinkDown`](Self::LinkDown) routes around the dead
+/// link and retries later.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetError {
+    /// A chained update arrived out of sequence; applying it would
+    /// patch against the wrong base and silently corrupt the weights.
+    Gap { expected: u64, got: u64 },
+    /// Payload or durable state failed validation (bad magic, CRC
+    /// mismatch, truncated stream, wrong-length base...).
+    Corrupt(String),
+    /// An inter-DC link is (or behaved as) partitioned: every attempt
+    /// within the retry budget failed.
+    LinkDown { dc: usize },
+    /// A specific replica did not respond (crashed or stalled).
+    Unreachable { replica: usize },
+    /// The receiver has no structural template for weight-only
+    /// payloads (`set_template` was never called).
+    MissingTemplate,
+    /// No update has been published yet, so there is no base to
+    /// resync or checkpoint from.
+    NothingPublished,
+    /// Durable-state I/O failure (checkpoint read/write/rename).
+    Io(String),
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Gap { expected, got } => {
+                write!(f, "sequence gap: expected {expected}, got {got}")
+            }
+            FleetError::Corrupt(msg) => write!(f, "corrupt payload: {msg}"),
+            FleetError::LinkDown { dc } => write!(f, "link to dc{dc} is down"),
+            FleetError::Unreachable { replica } => {
+                write!(f, "replica {replica} unreachable")
+            }
+            FleetError::MissingTemplate => {
+                write!(f, "receiver missing model template (call set_template)")
+            }
+            FleetError::NothingPublished => write!(f, "nothing published yet"),
+            FleetError::Io(msg) => write!(f, "checkpoint io: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+impl From<FleetError> for String {
+    fn from(e: FleetError) -> String {
+        e.to_string()
+    }
+}
+
 /// Encoding strategy for one update — the four arms of Table 4.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum UpdateMode {
@@ -189,6 +247,36 @@ impl UpdatePipeline {
     pub fn last_raw_len(&self) -> Option<usize> {
         self.prev_raw.as_ref().map(|b| b.len())
     }
+
+    /// Snapshot the pipeline's diffing state for a durable checkpoint:
+    /// `(prev_raw, prev_quant)`.  The quantizer grid is *not* exported
+    /// — it is embedded in the `FWQ1` header of `prev_quant` and
+    /// re-derived on restore, so the checkpoint cannot desynchronize
+    /// grid and codes.
+    pub fn export_state(&self) -> (Option<Vec<u8>>, Option<Vec<u8>>) {
+        (self.prev_raw.clone(), self.prev_quant.clone())
+    }
+
+    /// Restore the state captured by [`export_state`](Self::export_state).
+    /// After this, the next [`encode`](Self::encode) diffs against the
+    /// checkpointed bases exactly as an uninterrupted pipeline would.
+    pub fn restore_state(
+        &mut self,
+        prev_raw: Option<Vec<u8>>,
+        prev_quant: Option<Vec<u8>>,
+    ) -> Result<(), FleetError> {
+        self.prev_grid = match &prev_quant {
+            Some(q) => {
+                let (header, _codes) =
+                    quant::from_bytes(q).map_err(FleetError::Corrupt)?;
+                Some(header)
+            }
+            None => None,
+        };
+        self.prev_raw = prev_raw;
+        self.prev_quant = prev_quant;
+        Ok(())
+    }
 }
 
 /// Receiver state: reconstructs inference weights from wire updates.
@@ -231,7 +319,7 @@ impl UpdateReceiver {
     /// (missed updates beyond the sender's replay window): after a
     /// resync the receiver is bit-identical to an up-to-date replica
     /// and the next chained patch applies cleanly.
-    pub fn resync(&mut self, full_base: &[u8]) -> Result<Regressor, String> {
+    pub fn resync(&mut self, full_base: &[u8]) -> Result<Regressor, FleetError> {
         self.reset();
         let update = WireUpdate {
             mode: self.mode,
@@ -252,12 +340,13 @@ impl UpdateReceiver {
     }
 
     /// Apply one wire update; returns the reconstructed inference model.
-    pub fn apply(&mut self, update: &WireUpdate) -> Result<Regressor, String> {
+    pub fn apply(&mut self, update: &WireUpdate) -> Result<Regressor, FleetError> {
         assert_eq!(update.mode, self.mode, "pipeline/receiver mode mismatch");
         match self.mode {
             UpdateMode::Raw => {
                 self.base_raw = Some(update.bytes.clone());
-                io::from_bytes(&update.bytes).map_err(|e| e.to_string())
+                io::from_bytes(&update.bytes)
+                    .map_err(|e| FleetError::Corrupt(e.to_string()))
             }
             UpdateMode::Quant => {
                 self.base_quant = Some(update.bytes.clone());
@@ -266,19 +355,21 @@ impl UpdateReceiver {
             UpdateMode::PatchOnly => {
                 let full = match &self.base_raw {
                     Some(prev) => {
-                        let p = Patch::from_wire(&update.bytes)?;
-                        patch::apply_patch(prev, &p)?
+                        let p = Patch::from_wire(&update.bytes)
+                            .map_err(FleetError::Corrupt)?;
+                        patch::apply_patch(prev, &p).map_err(FleetError::Corrupt)?
                     }
                     None => update.bytes.clone(),
                 };
                 self.base_raw = Some(full.clone());
-                io::from_bytes(&full).map_err(|e| e.to_string())
+                io::from_bytes(&full).map_err(|e| FleetError::Corrupt(e.to_string()))
             }
             UpdateMode::QuantPatch => {
                 let q = match &self.base_quant {
                     Some(prev) => {
-                        let p = Patch::from_wire(&update.bytes)?;
-                        patch::apply_patch(prev, &p)?
+                        let p = Patch::from_wire(&update.bytes)
+                            .map_err(FleetError::Corrupt)?;
+                        patch::apply_patch(prev, &p).map_err(FleetError::Corrupt)?
                     }
                     None => update.bytes.clone(),
                 };
@@ -288,19 +379,17 @@ impl UpdateReceiver {
         }
     }
 
-    fn decode_quant_model(&mut self, qbytes: &[u8]) -> Result<Regressor, String> {
-        let weights = quant::dequantize_from_bytes(qbytes)?;
-        let template = self
-            .template
-            .as_ref()
-            .ok_or("receiver missing model template (call set_template)")?;
+    fn decode_quant_model(&mut self, qbytes: &[u8]) -> Result<Regressor, FleetError> {
+        let weights =
+            quant::dequantize_from_bytes(qbytes).map_err(FleetError::Corrupt)?;
+        let template = self.template.as_ref().ok_or(FleetError::MissingTemplate)?;
         let mut reg = template.clone();
         if weights.len() != reg.pool.weights.len() {
-            return Err(format!(
+            return Err(FleetError::Corrupt(format!(
                 "quantized weight count {} != template {}",
                 weights.len(),
                 reg.pool.weights.len()
-            ));
+            )));
         }
         reg.pool.weights = weights;
         reg.pool.acc = Vec::new();
@@ -590,7 +679,45 @@ mod tests {
         let mut pipe = UpdatePipeline::new(UpdateMode::Quant);
         let mut recv = UpdateReceiver::new(UpdateMode::Quant);
         let u = pipe.encode(&snaps[0]);
-        assert!(recv.apply(&u).is_err());
+        // the error is *matchable* — no string sniffing
+        assert_eq!(recv.apply(&u).unwrap_err(), FleetError::MissingTemplate);
+    }
+
+    #[test]
+    fn corrupt_wire_payload_is_a_matchable_error() {
+        let snaps = trained_rounds(2, 200);
+        let mut pipe = UpdatePipeline::new(UpdateMode::PatchOnly);
+        let mut recv = UpdateReceiver::new(UpdateMode::PatchOnly);
+        recv.apply(&pipe.encode(&snaps[0])).unwrap();
+        let mut u = pipe.encode(&snaps[1]);
+        u.bytes.truncate(u.bytes.len() / 2);
+        match recv.apply(&u) {
+            Err(FleetError::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pipeline_state_roundtrip_resumes_the_delta_chain() {
+        // export/restore mid-chain: a rebuilt pipeline must produce
+        // bit-identical updates from the checkpointed bases (the
+        // sender-side half of crash recovery), including the quantizer
+        // grid recovered from the FWQ1 header.
+        for mode in UpdateMode::ALL {
+            let snaps = trained_rounds(4, 300);
+            let mut pipe = UpdatePipeline::new(mode);
+            pipe.encode(&snaps[0]);
+            pipe.encode(&snaps[1]);
+            let (prev_raw, prev_quant) = pipe.export_state();
+            let mut resumed = UpdatePipeline::new(mode);
+            resumed.restore_state(prev_raw, prev_quant).unwrap();
+            for snap in &snaps[2..] {
+                let a = pipe.encode(snap);
+                let b = resumed.encode(snap);
+                assert_eq!(a.bytes, b.bytes, "{mode:?} diverged after restore");
+            }
+            assert_eq!(pipe.sent_bytes(), resumed.sent_bytes(), "{mode:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,63 @@
+//! CRC-32 (IEEE 802.3 polynomial, the zlib/gzip variant) — the
+//! integrity guard on durable checkpoint files.  The offline build has
+//! no `crc32fast`; a 256-entry table computed at compile time is plenty
+//! for checkpoint-sized payloads.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `data` (init 0xFFFFFFFF, final xor — matches zlib's
+/// `crc32(0, ...)`).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // reference values from zlib's crc32()
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414f_a339);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit_flips() {
+        let data = vec![0xa5u8; 4096];
+        let base = crc32(&data);
+        for i in [0usize, 1, 2047, 4095] {
+            let mut corrupt = data.clone();
+            corrupt[i] ^= 1;
+            assert_ne!(crc32(&corrupt), base, "flip at {i} undetected");
+        }
+    }
+
+    #[test]
+    fn incremental_consistency() {
+        // same bytes, different call patterns, same digest
+        let a: Vec<u8> = (0..=255).collect();
+        assert_eq!(crc32(&a), crc32(&a.clone()));
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod bench_env;
 pub mod compress;
+pub mod crc32;
 pub mod histogram;
 pub mod json;
 pub mod math;

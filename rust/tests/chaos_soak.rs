@@ -1,0 +1,71 @@
+//! Cross-plane chaos soak (the crash-recovery PR's tentpole test):
+//!
+//!   Hogwild rounds ──► fleet fabric (retrying publishes, health
+//!   ladder) ──► live serving engines — while a seed-derived fault
+//!   schedule kills and restarts replicas, restores the whole fabric
+//!   from its on-disk checkpoint, partitions DCs and stalls replicas,
+//!   and traffic threads keep scoring probes through the health board
+//!   the entire time.
+//!
+//! Per run:
+//!   (a) zero torn responses anywhere, even across restarts,
+//!   (b) every fault kind fired at least once (crash/restore included),
+//!   (c) after the final catch-up every replica is bit-identical to the
+//!       reference reconstruction,
+//!   (d) the recovery plane left its trace in the shared registry:
+//!       health transitions, publish retries, replay timings.
+//!
+//! Every run prints `chaos seed: 0x...` first; any failure reproduces
+//! from that one number (`fw fleet --chaos --seed N`).
+
+use fwumious::fleet::chaos::{run_chaos_soak, ChaosConfig};
+use fwumious::transfer::UpdateMode;
+
+/// The ISSUE-scale soak: ≥20 rounds with live traffic on the
+/// production configuration (quantized patches, the mode with the most
+/// recovery machinery in play: folded-chain replays AND resyncs).
+#[test]
+fn chaos_soak_full_quant_patch() {
+    let cfg = ChaosConfig::full(UpdateMode::QuantPatch, 0x5eed_c4a0);
+    assert!(cfg.rounds >= 20 && cfg.dcs >= 3);
+    let report = run_chaos_soak(cfg);
+    report.assert_healthy();
+    assert_eq!(report.rounds.len(), 24);
+    // the board actually steered traffic around unhealthy replicas at
+    // some point (stall + partition both walk replicas off the ladder)
+    assert!(
+        report.routed_around >= 1,
+        "seed {:#x}: no request was ever routed around",
+        report.seed
+    );
+}
+
+/// Raw full files: recovery never needs the patch log — restores and
+/// restarts must still be bit-identical with an empty replay window.
+#[test]
+fn chaos_soak_raw_mode() {
+    let report = run_chaos_soak(ChaosConfig::smoke(UpdateMode::Raw, 0x0a11));
+    report.assert_healthy();
+    assert_eq!(report.metrics.replays, 0);
+}
+
+/// Quantized full files: restore must rebuild the dequantized
+/// reference from the checkpointed base bytes, not re-quantize.
+#[test]
+fn chaos_soak_quant_mode() {
+    run_chaos_soak(ChaosConfig::smoke(UpdateMode::Quant, 0x9a11)).assert_healthy();
+}
+
+/// Lossless delta chains: crashes land mid-chain, so restarts exercise
+/// the cursor→head replay path (folded or sequential).
+#[test]
+fn chaos_soak_patch_only_mode() {
+    let report =
+        run_chaos_soak(ChaosConfig::smoke(UpdateMode::PatchOnly, 0x9a7c));
+    report.assert_healthy();
+    assert!(
+        report.metrics.replays + report.metrics.resyncs >= 1,
+        "seed {:#x}: chained mode never caught up",
+        report.seed
+    );
+}

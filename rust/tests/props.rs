@@ -275,6 +275,88 @@ fn prop_fleet_delta_chain_catchup_bit_identical() {
     });
 }
 
+/// Tentpole invariant of the crash-recovery PR: for every UpdateMode
+/// and any crash point, a fabric checkpointed mid-run (through the
+/// full `FWCKPT1` byte serialization), dropped, restored, and driven
+/// through the remaining snapshots is bit-identical to one that never
+/// crashed — head version, sender base file, every replica's weights
+/// and cursor, RNG-driven drop placement and the byte ledgers alike.
+#[test]
+fn prop_crash_restore_replays_bit_identically() {
+    use fwumious::fleet::FabricCheckpoint;
+    prop(6, |g| {
+        let buckets = 1u32 << 9;
+        let cfg = ModelConfig::ffm(4, 2, buckets);
+        let mode = *g.rng().choose(&UpdateMode::ALL);
+        let template = Regressor::new(&cfg);
+        // one shared snapshot sequence feeds both runs
+        let mut reg = template.clone();
+        let mut ws = Workspace::new();
+        let mut s =
+            SyntheticStream::with_buckets(DatasetSpec::tiny(), g.u64(), buckets);
+        let rounds = g.usize_in(4..8);
+        let snaps: Vec<Regressor> = (0..rounds)
+            .map(|_| {
+                for _ in 0..250 {
+                    let ex = s.next_example();
+                    reg.learn(&ex, &mut ws);
+                }
+                reg.clone()
+            })
+            .collect();
+        // identical drop schedule for both runs; the fabric's own RNG
+        // decides placement, and restore resumes that RNG exactly
+        let drops: Vec<u32> = (0..rounds)
+            .map(|_| if g.bool() { g.usize_in(1..3) as u32 } else { 0 })
+            .collect();
+        let topo = Topology::uniform(2, 2, LinkSpec::wan(), LinkSpec::lan());
+        let mut fcfg = FleetConfig::new(topo, mode);
+        fcfg.seed = g.u64();
+        let crash_at = g.usize_in(1..rounds);
+
+        let run = |fab: &mut FleetFabric, from: usize, to: usize| {
+            for r in from..to {
+                if drops[r] > 0 {
+                    fab.force_drops(drops[r]);
+                }
+                fab.publish(&snaps[r]).unwrap();
+            }
+        };
+
+        let mut gold = FleetFabric::new(fcfg.clone(), &template);
+        run(&mut gold, 0, rounds);
+
+        let mut doomed = FleetFabric::new(fcfg.clone(), &template);
+        run(&mut doomed, 0, crash_at);
+        let bytes = doomed.checkpoint().to_bytes();
+        drop(doomed); // the crash
+        let ckpt = FabricCheckpoint::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("{mode:?}: decode: {e}"));
+        let mut revived = FleetFabric::restore(fcfg.clone(), &template, &ckpt)
+            .unwrap_or_else(|e| panic!("{mode:?}: restore: {e}"));
+        assert_eq!(revived.head(), crash_at as u64, "{mode:?}");
+        run(&mut revived, crash_at, rounds);
+
+        assert_eq!(revived.head(), gold.head(), "{mode:?}");
+        assert_eq!(revived.sender_base(), gold.sender_base(), "{mode:?}");
+        for (a, b) in revived.replicas().iter().zip(gold.replicas()) {
+            assert_eq!(a.seq(), b.seq(), "{mode:?} {:?}", a.id);
+            assert_eq!(
+                a.model().pool.weights,
+                b.model().pool.weights,
+                "{mode:?} {:?}: restored replica diverged from gold",
+                a.id
+            );
+        }
+        let (mg, mr) = (gold.metrics(), revived.metrics());
+        assert_eq!(mr.inter_bytes(), mg.inter_bytes(), "{mode:?}");
+        assert_eq!(mr.intra_bytes(), mg.intra_bytes(), "{mode:?}");
+        assert_eq!(mr.drops(), mg.drops(), "{mode:?}");
+        assert_eq!(mr.replays, mg.replays, "{mode:?}");
+        assert_eq!(mr.resyncs, mg.resyncs, "{mode:?}");
+    });
+}
+
 /// Varint + zigzag total round-trip over adversarial values.
 #[test]
 fn prop_varint_roundtrip() {
