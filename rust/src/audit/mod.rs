@@ -1,0 +1,531 @@
+//! `fw audit` — the repo's correctness-invariant linter.
+//!
+//! The unsafe SIMD kernels and the lock-free serving/fleet planes rely
+//! on conventions a compiler cannot check: every `unsafe` site carries
+//! a SAFETY contract, every atomic access documents *why* its memory
+//! ordering suffices, the hot serving paths never panic through
+//! `.unwrap()`, public APIs return typed errors, and every benchmark
+//! records the machine context it ran on.  This module turns those
+//! conventions into a zero-dependency static-analysis pass that runs in
+//! CI (and fails the build) — the same philosophy as the paper's §6
+//! "mini-benchmark with every release": regressions are cheapest the
+//! moment they appear.
+//!
+//! The pass is self-hosting: the repo's own test suite runs the auditor
+//! over the repo itself ([`run`] from `CARGO_MANIFEST_DIR/..`) and
+//! asserts zero findings, so a PR that introduces an undocumented
+//! `unsafe` block fails `cargo test` before it ever reaches CI.
+
+mod scanner;
+
+pub use scanner::{scan_bench_env, scan_source};
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Directories scanned by the source rules, relative to the repo root.
+pub const SCAN_DIRS: [&str; 3] = ["rust/src", "rust/tests", "benches"];
+
+/// The enforced invariants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Every line containing the keyword `unsafe` carries a `SAFETY`
+    /// (or `/// # Safety`) marker on the line or in the contiguous
+    /// comment/attribute block above it.
+    SafetyComment,
+    /// Every `Ordering::` use outside `#[cfg(test)]` carries an
+    /// `ordering:` rationale comment (one block may cover a run of
+    /// consecutive atomic accesses).
+    OrderingRationale,
+    /// No `.unwrap()` / `.expect(` in non-test code under the serving,
+    /// fleet, deploy and SIMD planes or the Hogwild loop.
+    HotPathUnwrap,
+    /// No `pub fn ... -> Result<_, String>` — public APIs return typed
+    /// errors.
+    StringError,
+    /// Every bench emits through `util/bench_env.rs`.
+    BenchEnv,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [
+        Rule::SafetyComment,
+        Rule::OrderingRationale,
+        Rule::HotPathUnwrap,
+        Rule::StringError,
+        Rule::BenchEnv,
+    ];
+
+    /// Stable machine-readable name (used in JSON output and the
+    /// allowlist format).
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::SafetyComment => "safety-comment",
+            Rule::OrderingRationale => "ordering-rationale",
+            Rule::HotPathUnwrap => "hot-path-unwrap",
+            Rule::StringError => "string-error",
+            Rule::BenchEnv => "bench-env",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.name() == name)
+    }
+
+    /// One-line fix hint shown with human-format findings.
+    pub fn hint(self) -> &'static str {
+        match self {
+            Rule::SafetyComment => {
+                "document the invariant: `// SAFETY: ...` above the site \
+                 (or `/// # Safety` on an unsafe fn)"
+            }
+            Rule::OrderingRationale => {
+                "justify the ordering: `// ordering: ...` above the access"
+            }
+            Rule::HotPathUnwrap => {
+                "recover (`unwrap_or_else`), propagate (`?`), or degrade \
+                 gracefully — hot paths must not panic via unwrap/expect"
+            }
+            Rule::StringError => "return a typed error enum instead of String",
+            Rule::BenchEnv => "emit results through util/bench_env.rs",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One rule violation at one site.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Repo-root-relative path, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Trimmed source line (truncated to 90 chars).
+    pub snippet: String,
+}
+
+/// Why an audit run could not complete.
+#[derive(Debug)]
+pub enum AuditError {
+    /// None of the [`SCAN_DIRS`] exist under the given root — almost
+    /// certainly a wrong `--root`.
+    NotARepo(PathBuf),
+    /// A file or directory could not be read.
+    Io { path: PathBuf, source: std::io::Error },
+}
+
+impl fmt::Display for AuditError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AuditError::NotARepo(p) => {
+                write!(f, "no rust/src, rust/tests or benches under {}", p.display())
+            }
+            AuditError::Io { path, source } => {
+                write!(f, "cannot read {}: {source}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for AuditError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AuditError::Io { source, .. } => Some(source),
+            AuditError::NotARepo(_) => None,
+        }
+    }
+}
+
+/// One suppression: `<rule> <path>[:line]` — see [`Allowlist::parse`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct AllowEntry {
+    rule: Rule,
+    path: String,
+    line: Option<usize>,
+}
+
+/// Parsed suppression file.  Findings matching an entry are counted but
+/// not reported (and don't fail the audit).
+#[derive(Clone, Debug, Default)]
+pub struct Allowlist {
+    entries: Vec<AllowEntry>,
+}
+
+/// A malformed allowlist line (the audit fails rather than silently
+/// suppressing nothing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllowlistError {
+    pub line: usize,
+    pub text: String,
+}
+
+impl fmt::Display for AllowlistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "allowlist line {}: cannot parse '{}'", self.line, self.text)
+    }
+}
+
+impl std::error::Error for AllowlistError {}
+
+impl Allowlist {
+    /// Parse the plain-text format: one `<rule> <path>[:line]` entry
+    /// per line; blank lines and `#` comments ignored.  A missing
+    /// `:line` suppresses the rule for the whole file.
+    pub fn parse(text: &str) -> Result<Allowlist, AllowlistError> {
+        let mut entries = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let t = raw.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let err = || AllowlistError { line: idx + 1, text: t.to_string() };
+            let (rule_name, rest) = t.split_once(char::is_whitespace).ok_or_else(err)?;
+            let rule = Rule::from_name(rule_name).ok_or_else(err)?;
+            let target = rest.trim();
+            let (path, line) = match target.rsplit_once(':') {
+                Some((p, l)) if l.chars().all(|c| c.is_ascii_digit()) && !l.is_empty() => {
+                    (p, Some(l.parse::<usize>().map_err(|_| err())?))
+                }
+                _ => (target, None),
+            };
+            entries.push(AllowEntry { rule, path: path.to_string(), line });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn matches(&self, f: &Finding) -> bool {
+        self.entries.iter().any(|e| {
+            e.rule == f.rule && e.path == f.path && e.line.is_none_or(|l| l == f.line)
+        })
+    }
+}
+
+/// Outcome of one audit pass.
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    /// Violations, ordered by rule then path then line.
+    pub findings: Vec<Finding>,
+    /// `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Findings suppressed by the allowlist.
+    pub suppressed: usize,
+}
+
+impl AuditReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report (what `fw audit` prints by default).
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        let mut last_rule = None;
+        for f in &self.findings {
+            if last_rule != Some(f.rule) {
+                out.push_str(&format!("[{}] {}\n", f.rule.name(), f.rule.hint()));
+                last_rule = Some(f.rule);
+            }
+            out.push_str(&format!("  {}:{}: {}\n", f.path, f.line, f.snippet));
+        }
+        out.push_str(&format!(
+            "audit: {} finding(s) across {} file(s) ({} suppressed)\n",
+            self.findings.len(),
+            self.files_scanned,
+            self.suppressed
+        ));
+        out
+    }
+
+    /// Machine-readable report (`fw audit --json`).
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("rule", s(f.rule.name())),
+                    ("path", s(&f.path)),
+                    ("line", num(f.line as f64)),
+                    ("snippet", s(&f.snippet)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("findings", arr(findings)),
+            ("files_scanned", num(self.files_scanned as f64)),
+            ("suppressed", num(self.suppressed as f64)),
+            ("clean", num(if self.clean() { 1.0 } else { 0.0 })),
+        ])
+    }
+}
+
+fn read_to_string(path: &Path) -> Result<String, AuditError> {
+    std::fs::read_to_string(path)
+        .map_err(|source| AuditError::Io { path: path.to_path_buf(), source })
+}
+
+/// Collect every `.rs` file under `dir`, sorted for deterministic
+/// output across filesystems.
+fn rs_files(dir: &Path) -> Result<Vec<PathBuf>, AuditError> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries = std::fs::read_dir(&d)
+            .map_err(|source| AuditError::Io { path: d.clone(), source })?;
+        for entry in entries {
+            let entry =
+                entry.map_err(|source| AuditError::Io { path: d.clone(), source })?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Repo-root-relative `/`-separated path for scanner labeling.
+fn rel_label(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Run every rule over the repo at `root`, suppressing allowlisted
+/// findings.
+pub fn run(root: &Path, allow: &Allowlist) -> Result<AuditReport, AuditError> {
+    let scan_roots: Vec<PathBuf> = SCAN_DIRS
+        .iter()
+        .map(|d| root.join(d))
+        .filter(|p| p.is_dir())
+        .collect();
+    if scan_roots.is_empty() {
+        return Err(AuditError::NotARepo(root.to_path_buf()));
+    }
+
+    let mut report = AuditReport::default();
+    let mut all = Vec::new();
+    for dir in &scan_roots {
+        for file in rs_files(dir)? {
+            let text = read_to_string(&file)?;
+            let rel = rel_label(root, &file);
+            all.extend(scan_source(&rel, &text));
+            if rel.starts_with("benches/") {
+                all.extend(scan_bench_env(&rel, &text));
+            }
+            report.files_scanned += 1;
+        }
+    }
+    all.sort_by(|a, b| {
+        (a.rule, &a.path, a.line).cmp(&(b.rule, &b.path, b.line))
+    });
+    for f in all {
+        if allow.matches(&f) {
+            report.suppressed += 1;
+        } else {
+            report.findings.push(f);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- per-rule fixtures -----------------------------------------
+
+    #[test]
+    fn detects_undocumented_unsafe() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let got = scan_source("rust/src/x.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rule, Rule::SafetyComment);
+        assert_eq!(got[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_block_satisfies_rule() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller keeps p valid.\n    unsafe { *p }\n}\n";
+        assert!(scan_source("rust/src/x.rs", src).is_empty());
+        // `/// # Safety` doc sections satisfy it too, through rustdoc
+        // attributes and further doc lines
+        let src = "/// Does things.\n///\n/// # Safety\n/// p must be valid.\npub unsafe fn g(p: *const u8) {}\n";
+        assert!(scan_source("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_marker_in_string_does_not_mask_site() {
+        // the keyword inside a string literal is stripped before the
+        // rule fires, so a log line mentioning unsafe is not a site
+        let src = "fn f() {\n    let m = \"unsafe { }\";\n}\n";
+        assert!(scan_source("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn detects_unjustified_ordering() {
+        let src = "use std::sync::atomic::*;\nfn f(a: &AtomicU64) {\n    a.load(Ordering::Acquire);\n}\n";
+        let got = scan_source("rust/src/x.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rule, Rule::OrderingRationale);
+    }
+
+    #[test]
+    fn one_ordering_comment_covers_a_run() {
+        let src = "use std::sync::atomic::*;\nfn f(a: &AtomicU64) {\n    // ordering: Relaxed — independent counters.\n    a.fetch_add(1, Ordering::Relaxed);\n    a.fetch_add(2, Ordering::Relaxed);\n}\n";
+        assert!(scan_source("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ordering_rule_skips_test_modules() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::sync::atomic::*;\n    fn f(a: &AtomicU64) {\n        a.load(Ordering::Relaxed);\n    }\n}\n";
+        assert!(scan_source("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn detects_hot_path_unwrap_only_in_hot_paths() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+        let hot = scan_source("rust/src/serve/x.rs", src);
+        assert_eq!(hot.len(), 1);
+        assert_eq!(hot[0].rule, Rule::HotPathUnwrap);
+        assert!(scan_source("rust/src/eval/x.rs", src).is_empty());
+        // test code inside a hot-path file is exempt
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u8>) -> u8 {\n        x.unwrap()\n    }\n}\n";
+        assert!(scan_source("rust/src/serve/x.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn detects_string_error_in_pub_signature() {
+        let src = "pub fn f() -> Result<u32, String> {\n    Ok(1)\n}\n";
+        let got = scan_source("rust/src/x.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rule, Rule::StringError);
+        assert_eq!(got[0].line, 1);
+        // multi-line signatures are accumulated
+        let src = "pub fn f(\n    x: u32,\n) -> Result<u32, String> {\n    Ok(x)\n}\n";
+        assert_eq!(scan_source("rust/src/x.rs", src).len(), 1);
+        // private fns and typed errors pass
+        assert!(scan_source("rust/src/x.rs", "fn f() -> Result<u32, String> { Ok(1) }\n").is_empty());
+        assert!(scan_source("rust/src/x.rs", "pub fn f() -> Result<u32, AuditError> { Ok(1) }\n").is_empty());
+    }
+
+    #[test]
+    fn detects_bench_without_bench_env() {
+        assert!(scan_bench_env("benches/b.rs", "fn main() {}").is_some());
+        assert!(scan_bench_env("benches/b.rs", "use fwumious::util::bench_env;").is_none());
+    }
+
+    // ---- allowlist --------------------------------------------------
+
+    #[test]
+    fn allowlist_grammar_and_matching() {
+        let text = "# comment\n\nsafety-comment rust/src/x.rs:7\nhot-path-unwrap rust/src/serve/y.rs\n";
+        let allow = Allowlist::parse(text).expect("valid allowlist");
+        assert_eq!(allow.len(), 2);
+        let f = |rule, path: &str, line| Finding {
+            rule,
+            path: path.to_string(),
+            line,
+            snippet: String::new(),
+        };
+        assert!(allow.matches(&f(Rule::SafetyComment, "rust/src/x.rs", 7)));
+        assert!(!allow.matches(&f(Rule::SafetyComment, "rust/src/x.rs", 8)));
+        // file-wide entry matches any line
+        assert!(allow.matches(&f(Rule::HotPathUnwrap, "rust/src/serve/y.rs", 31)));
+        assert!(!allow.matches(&f(Rule::OrderingRationale, "rust/src/serve/y.rs", 31)));
+    }
+
+    #[test]
+    fn allowlist_rejects_unknown_rules() {
+        let err = Allowlist::parse("no-such-rule rust/src/x.rs\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    // ---- report rendering -------------------------------------------
+
+    #[test]
+    fn report_renders_human_and_json() {
+        let report = AuditReport {
+            findings: vec![Finding {
+                rule: Rule::SafetyComment,
+                path: "rust/src/x.rs".to_string(),
+                line: 2,
+                snippet: "unsafe { *p }".to_string(),
+            }],
+            files_scanned: 3,
+            suppressed: 1,
+        };
+        let human = report.render_human();
+        assert!(human.contains("[safety-comment]"));
+        assert!(human.contains("rust/src/x.rs:2"));
+        assert!(human.contains("1 finding(s) across 3 file(s) (1 suppressed)"));
+        let j = report.to_json();
+        assert_eq!(j.get("files_scanned").as_usize(), Some(3));
+        assert_eq!(j.get("findings").at(0).get("rule").as_str(), Some("safety-comment"));
+        assert_eq!(j.get("clean").as_f64(), Some(0.0));
+        // round-trips through the hermetic JSON parser
+        let parsed = crate::util::json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(parsed.get("suppressed").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn rule_names_round_trip() {
+        for r in Rule::ALL {
+            assert_eq!(Rule::from_name(r.name()), Some(r));
+        }
+        assert_eq!(Rule::from_name("nope"), None);
+    }
+
+    // ---- the self-audit: the repo passes its own linter --------------
+
+    #[test]
+    fn repo_passes_its_own_audit() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ has a parent")
+            .to_path_buf();
+        let allow_path = root.join("audit-allow.txt");
+        let allow = match std::fs::read_to_string(&allow_path) {
+            Ok(text) => Allowlist::parse(&text).expect("allowlist parses"),
+            Err(_) => Allowlist::default(),
+        };
+        let report = run(&root, &allow).expect("audit runs");
+        assert!(report.files_scanned > 50, "scanned {}", report.files_scanned);
+        assert!(
+            report.clean(),
+            "repo fails its own audit:\n{}",
+            report.render_human()
+        );
+    }
+
+    #[test]
+    fn run_rejects_non_repo_roots() {
+        let dir = std::env::temp_dir().join("fw-audit-not-a-repo");
+        let _ = std::fs::create_dir_all(&dir);
+        assert!(matches!(
+            run(&dir, &Allowlist::default()),
+            Err(AuditError::NotARepo(_))
+        ));
+    }
+}

@@ -1,0 +1,336 @@
+//! The line-oriented scanner behind `fw audit`.
+//!
+//! Deliberately not a parser: the invariants it enforces are lexical
+//! (a rationale comment adjacent to a site, a banned method name, a
+//! banned type in a signature), and a line scanner that strips string
+//! literals and comments first is both fast and predictable enough to
+//! run on every CI push.  The contiguous comment/attribute *block walk*
+//! is the one piece of real machinery: a marker comment may sit any
+//! number of comment lines above its site, and one rationale may cover
+//! a run of consecutive sites (e.g. five Relaxed counter bumps under a
+//! single `// ordering:` block).
+
+use super::{Finding, Rule};
+
+/// Paths (relative to the repo root, `/`-separated) whose non-test code
+/// must not call `.unwrap()` / `.expect(` — the serving, fleet, deploy
+/// and SIMD planes plus the Hogwild training loop, where a panic takes
+/// down a worker thread and, through it, live traffic.
+const HOT_PATHS: [&str; 5] = [
+    "rust/src/serve/",
+    "rust/src/fleet/",
+    "rust/src/deploy/",
+    "rust/src/simd/",
+    "rust/src/train/hogwild.rs",
+];
+
+/// Replace string and char literals with empty equivalents so their
+/// contents can't trigger (or mask) a rule.  Line-local and heuristic:
+/// raw strings and multi-line literals are out of scope — the repo
+/// style keeps rule-relevant code out of such literals.
+fn strip_strings(line: &str) -> String {
+    let chars: Vec<char> = line.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '"' {
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            out.push_str("\"\"");
+            continue;
+        }
+        if c == '\'' && i + 2 < n && (chars[i + 2] == '\'' || chars[i + 1] == '\\') {
+            if let Some(off) = chars[i + 1..].iter().position(|&d| d == '\'') {
+                i += off + 2;
+                out.push_str("''");
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Drop a trailing `//` comment (after string stripping, so a `//`
+/// inside a literal doesn't truncate the code).
+fn strip_comment(line: &str) -> &str {
+    match line.find("//") {
+        Some(idx) => &line[..idx],
+        None => line,
+    }
+}
+
+fn is_word_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Whether `hay` contains `word` delimited by non-word characters.
+fn has_word(hay: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = hay[start..].find(word) {
+        let at = start + pos;
+        let before_ok = hay[..at].chars().next_back().is_none_or(|c| !is_word_char(c));
+        let after_ok = hay[at + word.len()..]
+            .chars()
+            .next()
+            .is_none_or(|c| !is_word_char(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+/// Whether the line declares a function: the word `fn` followed by
+/// whitespace and an identifier character.
+fn starts_fn_decl(code: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find("fn") {
+        let at = start + pos;
+        let before_ok = code[..at].chars().next_back().is_none_or(|c| !is_word_char(c));
+        let rest = &code[at + 2..];
+        let mut it = rest.chars();
+        if before_ok {
+            if let Some(c) = it.next() {
+                if c.is_whitespace() {
+                    let after_ws = rest.trim_start();
+                    if after_ws.chars().next().is_some_and(is_word_char) {
+                        return true;
+                    }
+                }
+            }
+        }
+        start = at + 2;
+    }
+    false
+}
+
+/// Whether the (single-line) start of a signature declares a `pub` /
+/// `pub(crate)` fn, optionally `unsafe`.
+fn is_pub_fn(code: &str) -> bool {
+    let norm: String = code.split_whitespace().collect::<Vec<_>>().join(" ");
+    for pat in [
+        "pub fn ",
+        "pub unsafe fn ",
+        "pub(crate) fn ",
+        "pub(crate) unsafe fn ",
+        "pub (crate) fn ",
+        "pub (crate) unsafe fn ",
+    ] {
+        if let Some(at) = norm.find(pat) {
+            if norm[..at].chars().next_back().is_none_or(|c| !is_word_char(c)) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Whether an accumulated signature returns `Result<_, String>`:
+/// whitespace-insensitively, `-> Result<` followed (anywhere in the
+/// type) by `, String>`.
+fn returns_string_result(sig: &str) -> bool {
+    let norm: String = sig.chars().filter(|c| !c.is_whitespace()).collect();
+    match norm.find("->Result<") {
+        Some(at) => norm[at..].contains(",String>"),
+        None => false,
+    }
+}
+
+/// Walk the contiguous comment/attribute block immediately above line
+/// `ln` (1-based), returning true if any line of the block — or the
+/// site line itself — contains `marker`.  When `run` is given, lines
+/// containing it are also stepped over, so one rationale block covers a
+/// run of consecutive sites.
+fn block_has(lines: &[&str], ln: usize, marker: &str, run: Option<&str>) -> bool {
+    if lines[ln - 1].contains(marker) {
+        return true;
+    }
+    let mut j = ln as isize - 2;
+    while j >= 0 {
+        let raw = lines[j as usize];
+        let prev = raw.trim_start();
+        if prev.starts_with("//") || prev.starts_with("#[") {
+            if raw.contains(marker) {
+                return true;
+            }
+            j -= 1;
+        } else if run.is_some_and(|r| raw.contains(r)) {
+            j -= 1;
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Scan one source file.  `relpath` is the repo-root-relative path with
+/// `/` separators (it selects the hot-path rule and labels findings).
+pub fn scan_source(relpath: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.split('\n').collect();
+    let hot = HOT_PATHS
+        .iter()
+        .any(|h| relpath.starts_with(h) || relpath == h.trim_end_matches('/'));
+
+    let mut findings = Vec::new();
+    // cfg(test) region tracking via brace depth: the attribute arms the
+    // tracker, the next `{` opens the region, and the region ends when
+    // depth returns to its pre-region level.
+    let mut in_test = false;
+    let mut test_depth = 0i64;
+    let mut depth = 0i64;
+    let mut pending_test = false;
+    // pub-fn signature accumulation across wrapped lines.
+    let mut sig: Option<String> = None;
+    let mut sig_pub = false;
+    let mut sig_line = 0usize;
+
+    let mut finding = |rule: Rule, ln: usize, raw: &str| {
+        findings.push(Finding {
+            rule,
+            path: relpath.to_string(),
+            line: ln,
+            snippet: raw.trim().chars().take(90).collect(),
+        });
+    };
+
+    for (idx, &raw) in lines.iter().enumerate() {
+        let ln = idx + 1;
+        let stripped = strip_strings(raw);
+        let code = strip_comment(&stripped);
+        if !in_test && (raw.contains("#[cfg(test)]") || raw.contains("#[cfg(all(test")) {
+            pending_test = true;
+        }
+        let opens = code.matches('{').count() as i64;
+        let closes = code.matches('}').count() as i64;
+        if pending_test && opens > 0 {
+            in_test = true;
+            test_depth = depth;
+            pending_test = false;
+        }
+        depth += opens - closes;
+        if in_test && depth <= test_depth {
+            in_test = false;
+        }
+
+        let comment_only = raw.trim_start().starts_with("//");
+
+        // -- rule: safety-comment -------------------------------------
+        if !comment_only
+            && has_word(code, "unsafe")
+            && !block_has(&lines, ln, "SAFETY", None)
+            && !block_has(&lines, ln, "# Safety", None)
+        {
+            finding(Rule::SafetyComment, ln, raw);
+        }
+
+        // -- rule: ordering-rationale (non-test code only) ------------
+        if !comment_only
+            && !in_test
+            && code.contains("Ordering::")
+            && !block_has(&lines, ln, "ordering:", Some("Ordering::"))
+        {
+            finding(Rule::OrderingRationale, ln, raw);
+        }
+
+        // -- rule: hot-path-unwrap ------------------------------------
+        if hot
+            && !in_test
+            && !comment_only
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+        {
+            finding(Rule::HotPathUnwrap, ln, raw);
+        }
+
+        // -- rule: string-error (pub fn ... -> Result<_, String>) -----
+        if !comment_only {
+            if sig.is_none() {
+                if starts_fn_decl(code) {
+                    sig = Some(code.to_string());
+                    sig_pub = is_pub_fn(code);
+                    sig_line = ln;
+                }
+            } else if let Some(s) = sig.as_mut() {
+                s.push(' ');
+                s.push_str(code);
+            }
+            // the signature ends at the body brace or a trait-decl `;`
+            if sig.is_some() && (code.contains('{') || code.contains(';')) {
+                if let Some(s) = sig.take() {
+                    if sig_pub && returns_string_result(&s) {
+                        finding(Rule::StringError, sig_line, lines[sig_line - 1]);
+                    }
+                }
+            }
+        }
+    }
+    findings
+}
+
+/// The bench-env rule: every bench source must route its results
+/// through `util/bench_env.rs` (machine-context emission), detected
+/// lexically by a `bench_env` reference.
+pub fn scan_bench_env(relpath: &str, text: &str) -> Option<Finding> {
+    if text.contains("bench_env") {
+        None
+    } else {
+        Some(Finding {
+            rule: Rule::BenchEnv,
+            path: relpath.to_string(),
+            line: 1,
+            snippet: "bench does not emit through util/bench_env.rs".to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn string_and_char_literals_are_stripped() {
+        assert_eq!(strip_strings("let s = \"unsafe {\";"), r#"let s = "";"#);
+        assert_eq!(strip_strings(r#"let c = '"'; x"#), "let c = ''; x");
+        assert_eq!(strip_strings(r#"let e = "a\"b";"#), r#"let e = "";"#);
+    }
+
+    #[test]
+    fn comment_stripping_respects_strings() {
+        let s = strip_strings(r#"let u = "https://x"; // tail"#);
+        assert_eq!(strip_comment(&s), r#"let u = ""; "#);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("return unsafe { f() }", "unsafe"));
+        assert!(!has_word("let has_word_unsafe_x = 1", "unsafe"));
+        assert!(starts_fn_decl("pub fn foo("));
+        assert!(starts_fn_decl("    unsafe fn bar<T>("));
+        assert!(!starts_fn_decl("let fnord = 1;"));
+        assert!(is_pub_fn("pub fn x("));
+        assert!(is_pub_fn("pub(crate) unsafe fn x("));
+        assert!(!is_pub_fn("fn x("));
+    }
+
+    #[test]
+    fn string_result_detection_spans_lines() {
+        assert!(returns_string_result("pub fn f() -> Result<u32, String>"));
+        assert!(returns_string_result("pub fn f( ) ->   Result< Vec<u8> , String >"));
+        assert!(!returns_string_result("pub fn f() -> Result<String, Error>"));
+        assert!(!returns_string_result("pub fn f() -> Option<String>"));
+    }
+}

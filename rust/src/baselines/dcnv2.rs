@@ -41,6 +41,12 @@ pub struct DcnV2 {
     pre: Vec<Vec<f32>>, // W_l x_l + b_l per layer
 }
 
+impl std::fmt::Debug for DcnV2 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DcnV2").finish_non_exhaustive()
+    }
+}
+
 impl DcnV2 {
     pub fn new(
         buckets: u32,

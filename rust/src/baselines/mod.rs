@@ -32,6 +32,12 @@ pub struct FwModel {
     ws: Workspace,
 }
 
+impl std::fmt::Debug for FwModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FwModel").finish_non_exhaustive()
+    }
+}
+
 impl FwModel {
     pub fn new(name: &str, reg: Regressor) -> Self {
         FwModel { name: name.to_string(), reg, ws: Workspace::new() }

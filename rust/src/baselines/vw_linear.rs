@@ -17,6 +17,12 @@ pub struct VwLinear {
     mask: u32,
 }
 
+impl std::fmt::Debug for VwLinear {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("VwLinear").finish_non_exhaustive()
+    }
+}
+
 impl VwLinear {
     pub fn new(buckets: u32, lr: f32, power_t: f32) -> Self {
         assert!(buckets.is_power_of_two());

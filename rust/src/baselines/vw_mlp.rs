@@ -34,6 +34,12 @@ pub struct VwMlp {
     h: Vec<f32>, // scratch
 }
 
+impl std::fmt::Debug for VwMlp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("VwMlp").finish_non_exhaustive()
+    }
+}
+
 impl VwMlp {
     pub fn new(buckets: u32, units: usize, lr: f32, power_t: f32, seed: u64) -> Self {
         assert!(buckets.is_power_of_two());

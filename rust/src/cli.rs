@@ -5,6 +5,41 @@
 
 use std::collections::BTreeMap;
 
+/// Why the command line was rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CliError {
+    /// argv was empty.
+    MissingSubcommand,
+    /// The first token looked like a flag, not a subcommand.
+    UnexpectedToken(String),
+    /// A lone `--` separator (unsupported grammar).
+    BareDoubleDash,
+    /// A typed flag's value failed to parse (`want` names the type).
+    BadFlag { name: String, want: &'static str, got: String },
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingSubcommand => write!(f, "missing subcommand"),
+            CliError::UnexpectedToken(s) => write!(f, "expected subcommand, got '{s}'"),
+            CliError::BareDoubleDash => write!(f, "bare '--' not supported"),
+            CliError::BadFlag { name, want, got } => {
+                write!(f, "--{name} wants {want}, got '{got}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// CLI shim: `fn main` paths print errors as strings.
+impl From<CliError> for String {
+    fn from(e: CliError) -> String {
+        e.to_string()
+    }
+}
+
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -16,25 +51,26 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of raw arguments (excluding argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, CliError> {
         let mut args = Args::default();
         let mut it = raw.into_iter().peekable();
         match it.next() {
             Some(s) if !s.starts_with('-') => args.subcommand = s,
-            Some(s) => return Err(format!("expected subcommand, got '{s}'")),
-            None => return Err("missing subcommand".into()),
+            Some(s) => return Err(CliError::UnexpectedToken(s)),
+            None => return Err(CliError::MissingSubcommand),
         }
         while let Some(tok) = it.next() {
             if let Some(name) = tok.strip_prefix("--") {
                 if name.is_empty() {
-                    return Err("bare '--' not supported".into());
+                    return Err(CliError::BareDoubleDash);
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
                 } else {
                     match it.peek() {
                         Some(next) if !next.starts_with("--") => {
-                            let v = it.next().unwrap();
+                            // peek() just proved a next token exists
+                            let v = it.next().unwrap_or_default();
                             args.flags.insert(name.to_string(), v);
                         }
                         _ => args.switches.push(name.to_string()),
@@ -55,16 +91,24 @@ impl Args {
         self.flag(name).unwrap_or(default).to_string()
     }
 
-    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, CliError> {
         match self.flag(name) {
-            Some(v) => v.parse().map_err(|_| format!("--{name} wants an integer, got '{v}'")),
+            Some(v) => v.parse().map_err(|_| CliError::BadFlag {
+                name: name.to_string(),
+                want: "an integer",
+                got: v.to_string(),
+            }),
             None => Ok(default),
         }
     }
 
-    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64, String> {
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64, CliError> {
         match self.flag(name) {
-            Some(v) => v.parse().map_err(|_| format!("--{name} wants a number, got '{v}'")),
+            Some(v) => v.parse().map_err(|_| CliError::BadFlag {
+                name: name.to_string(),
+                want: "a number",
+                got: v.to_string(),
+            }),
             None => Ok(default),
         }
     }
@@ -136,6 +180,12 @@ SUBCOMMANDS:
                order)                 --old a.fw --patch p1.fwp,p2.fwp --out c.fw
     pjrt       run an AOT artifact against golden vectors
                --artifacts DIR   (needs a build with --features pjrt)
+    audit      static-analysis pass over rust/src, rust/tests, benches
+               enforcing repo invariants (SAFETY comments on unsafe,
+               ordering rationale on atomics, no hot-path unwraps, no
+               Result<_, String> in pub signatures, bench_env in every
+               bench)           --json  --root DIR (default: auto)
+               --allowlist PATH (default: audit-allow.txt)
     bench      alias pointing at `cargo bench` harnesses
     help       this text
 ";

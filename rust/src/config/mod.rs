@@ -6,6 +6,45 @@
 
 pub mod parse;
 
+/// Why a configuration was rejected — by [`ModelConfig::validate`], by
+/// the key=value parser, or by one of the enum-valued flag parsers
+/// (shed policy, fleet strategy, update mode).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// A structural invariant failed (static explanation).
+    Invalid(&'static str),
+    /// A key's value failed to parse as the expected type.
+    BadValue { key: &'static str, got: String },
+    /// An enum-like flag got an unrecognized value.
+    UnknownValue { what: &'static str, got: String, want: &'static str },
+    /// A combination of otherwise-valid keys that cannot be built.
+    Unsupported(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Invalid(msg) => write!(f, "{msg}"),
+            ConfigError::BadValue { key, got } => {
+                write!(f, "bad value for {key}: '{got}'")
+            }
+            ConfigError::UnknownValue { what, got, want } => {
+                write!(f, "unknown {what} '{got}' (want {want})")
+            }
+            ConfigError::Unsupported(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// CLI shim: `fn main` paths print errors as strings.
+impl From<ConfigError> for String {
+    fn from(e: ConfigError) -> String {
+        e.to_string()
+    }
+}
+
 /// Which architecture a [`crate::model::regressor::Regressor`] builds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Architecture {
@@ -106,41 +145,41 @@ impl ModelConfig {
     }
 
     /// Sanity-check invariants; returns an explanation on failure.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), ConfigError> {
         if self.fields < 1 {
-            return Err("fields must be >= 1".into());
+            return Err(ConfigError::Invalid("fields must be >= 1"));
         }
         if !self.buckets.is_power_of_two() {
-            return Err("buckets must be a power of two".into());
+            return Err(ConfigError::Invalid("buckets must be a power of two"));
         }
         match self.arch {
             Architecture::Linear => {
                 if !self.hidden.is_empty() {
-                    return Err("linear arch cannot have hidden layers".into());
+                    return Err(ConfigError::Invalid("linear arch cannot have hidden layers"));
                 }
             }
             Architecture::Ffm => {
                 if self.latent_dim == 0 {
-                    return Err("ffm arch needs latent_dim > 0".into());
+                    return Err(ConfigError::Invalid("ffm arch needs latent_dim > 0"));
                 }
                 if !self.hidden.is_empty() {
-                    return Err("ffm arch cannot have hidden layers".into());
+                    return Err(ConfigError::Invalid("ffm arch cannot have hidden layers"));
                 }
             }
             Architecture::DeepFfm => {
                 if self.latent_dim == 0 {
-                    return Err("deepffm arch needs latent_dim > 0".into());
+                    return Err(ConfigError::Invalid("deepffm arch needs latent_dim > 0"));
                 }
                 if self.hidden.is_empty() {
-                    return Err("deepffm arch needs >=1 hidden layer".into());
+                    return Err(ConfigError::Invalid("deepffm arch needs >=1 hidden layer"));
                 }
                 if self.fields < 2 {
-                    return Err("deepffm needs >=2 fields".into());
+                    return Err(ConfigError::Invalid("deepffm needs >=2 fields"));
                 }
             }
         }
         if !(0.0..=1.0).contains(&self.power_t) {
-            return Err("power_t must be in [0,1]".into());
+            return Err(ConfigError::Invalid("power_t must be in [0,1]"));
         }
         Ok(())
     }
@@ -159,14 +198,16 @@ pub enum ShedPolicy {
 }
 
 impl ShedPolicy {
-    pub fn parse(s: &str) -> Result<Self, String> {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
         Ok(match s {
             "reject-new" => ShedPolicy::RejectNew,
             "drop-oldest" => ShedPolicy::DropOldest,
             other => {
-                return Err(format!(
-                    "unknown shed policy '{other}' (want reject-new|drop-oldest)"
-                ))
+                return Err(ConfigError::UnknownValue {
+                    what: "shed policy",
+                    got: other.to_string(),
+                    want: "reject-new|drop-oldest",
+                })
             }
         })
     }

@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{Architecture, ModelConfig};
+use crate::config::{Architecture, ConfigError, ModelConfig};
 
 /// Parse `key = value` text into a map.
 pub fn parse_kv(text: &str) -> BTreeMap<String, String> {
@@ -23,16 +23,28 @@ pub fn parse_kv(text: &str) -> BTreeMap<String, String> {
     map
 }
 
-fn get_f32(map: &BTreeMap<String, String>, key: &str, default: f32) -> Result<f32, String> {
+fn get_f32(
+    map: &BTreeMap<String, String>,
+    key: &'static str,
+    default: f32,
+) -> Result<f32, ConfigError> {
     match map.get(key) {
-        Some(v) => v.parse().map_err(|_| format!("bad f32 for {key}: '{v}'")),
+        Some(v) => v
+            .parse()
+            .map_err(|_| ConfigError::BadValue { key, got: v.clone() }),
         None => Ok(default),
     }
 }
 
-fn get_usize(map: &BTreeMap<String, String>, key: &str, default: usize) -> Result<usize, String> {
+fn get_usize(
+    map: &BTreeMap<String, String>,
+    key: &'static str,
+    default: usize,
+) -> Result<usize, ConfigError> {
     match map.get(key) {
-        Some(v) => v.parse().map_err(|_| format!("bad usize for {key}: '{v}'")),
+        Some(v) => v
+            .parse()
+            .map_err(|_| ConfigError::BadValue { key, got: v.clone() }),
         None => Ok(default),
     }
 }
@@ -43,20 +55,28 @@ fn get_usize(map: &BTreeMap<String, String>, key: &str, default: usize) -> Resul
 /// (aka `k`), `bits` (buckets = 2^bits), `hidden` (comma list), `lr`,
 /// `ffm_lr`, `nn_lr`, `power_t`, `l2`, `init_ffm`, `sparse_updates`,
 /// `seed`.
-pub fn model_config_from_kv(map: &BTreeMap<String, String>) -> Result<ModelConfig, String> {
+pub fn model_config_from_kv(map: &BTreeMap<String, String>) -> Result<ModelConfig, ConfigError> {
     let fields = get_usize(map, "fields", 8)?;
     let latent = match map.get("latent_dim").or_else(|| map.get("k")) {
-        Some(v) => v.parse().map_err(|_| format!("bad latent_dim '{v}'"))?,
+        Some(v) => v.parse().map_err(|_| ConfigError::BadValue {
+            key: "latent_dim",
+            got: v.clone(),
+        })?,
         None => 4,
     };
     let bits = get_usize(map, "bits", 18)?;
     if bits > 30 {
-        return Err("bits too large (max 30)".into());
+        return Err(ConfigError::Invalid("bits too large (max 30)"));
     }
     let hidden: Vec<usize> = match map.get("hidden") {
         Some(v) if !v.is_empty() => v
             .split(',')
-            .map(|t| t.trim().parse().map_err(|_| format!("bad hidden '{v}'")))
+            .map(|t| {
+                t.trim().parse().map_err(|_| ConfigError::BadValue {
+                    key: "hidden",
+                    got: v.clone(),
+                })
+            })
             .collect::<Result<_, _>>()?,
         _ => vec![16],
     };
@@ -64,13 +84,21 @@ pub fn model_config_from_kv(map: &BTreeMap<String, String>) -> Result<ModelConfi
         None | Some("deepffm") => Architecture::DeepFfm,
         Some("ffm") => Architecture::Ffm,
         Some("linear") => Architecture::Linear,
-        Some(other) => return Err(format!("unknown arch '{other}'")),
+        Some(other) => {
+            return Err(ConfigError::UnknownValue {
+                what: "arch",
+                got: other.to_string(),
+                want: "linear|ffm|deepffm",
+            })
+        }
     };
     let mut cfg = match arch {
         Architecture::DeepFfm => ModelConfig::deep_ffm(fields, latent, 1 << bits, &hidden),
         Architecture::Ffm | Architecture::Linear => {
             if map.contains_key("hidden") {
-                return Err(format!("arch {arch:?} cannot take hidden layers"));
+                return Err(ConfigError::Unsupported(format!(
+                    "arch {arch:?} cannot take hidden layers"
+                )));
             }
             if arch == Architecture::Ffm {
                 ModelConfig::ffm(fields, latent, 1 << bits)
@@ -89,7 +117,9 @@ pub fn model_config_from_kv(map: &BTreeMap<String, String>) -> Result<ModelConfi
         cfg.sparse_updates = v == "true" || v == "1";
     }
     if let Some(v) = map.get("seed") {
-        cfg.seed = v.parse().map_err(|_| format!("bad seed '{v}'"))?;
+        cfg.seed = v
+            .parse()
+            .map_err(|_| ConfigError::BadValue { key: "seed", got: v.clone() })?;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -21,6 +21,12 @@ pub struct IterSource<I: Iterator<Item = Example> + Send> {
     iter: I,
 }
 
+impl<I: Iterator<Item = Example> + Send> std::fmt::Debug for IterSource<I> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IterSource").finish_non_exhaustive()
+    }
+}
+
 impl<I: Iterator<Item = Example> + Send> IterSource<I> {
     pub fn new(iter: I) -> Self {
         IterSource { iter }

@@ -26,6 +26,12 @@ pub struct Prefetcher {
     handle: Option<JoinHandle<()>>,
 }
 
+impl std::fmt::Debug for Prefetcher {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Prefetcher").finish_non_exhaustive()
+    }
+}
+
 impl Prefetcher {
     /// Spawn the producer thread.
     ///
@@ -91,6 +97,12 @@ impl Drop for Prefetcher {
 pub struct DelayedSource<S: DataSource> {
     inner: S,
     delay: std::time::Duration,
+}
+
+impl<S: DataSource> std::fmt::Debug for DelayedSource<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DelayedSource").finish_non_exhaustive()
+    }
 }
 
 impl<S: DataSource> DelayedSource<S> {

@@ -144,6 +144,12 @@ pub struct SyntheticStream {
     logit_offset: f64,
 }
 
+impl std::fmt::Debug for SyntheticStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SyntheticStream").finish_non_exhaustive()
+    }
+}
+
 impl SyntheticStream {
     /// Default bucket space 2^18 (the paper's hashed weight spaces are
     /// fixed-size power-of-two arrays).

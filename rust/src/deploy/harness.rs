@@ -136,7 +136,9 @@ impl SoakReport {
                 w[1]
             );
         }
-        let last = *self.holdout_aucs.last().expect("rounds ran");
+        // NaN for a zero-round run: it fails the assert below with the
+        // run's real defect (no rounds) visible in the message.
+        let last = self.holdout_aucs.last().copied().unwrap_or(f64::NAN);
         assert!(last > 0.55, "{mode:?}: final held-out AUC {last} at chance");
         assert_eq!(self.serve_stats.errors, 0, "{mode:?}: serving errors");
         assert!(self.serve_stats.requests >= self.probe_checks);
@@ -175,6 +177,8 @@ fn traffic_driver(
     let mut torn = 0u64;
     let mut versions = HashSet::new();
     let mut i = offset;
+    // ordering: Relaxed — the flag only ends the loop; drivers join
+    // afterwards, so no data is published through it.
     while !stop.load(Ordering::Relaxed) {
         let idx = i % probes.len();
         i += 1;
@@ -183,7 +187,9 @@ fn traffic_driver(
             Err(_) => break, // engine shut down under us
         };
         checks += 1;
-        let reg = published.read().expect("published lock");
+        // Poison recovery: snapshots are appended whole under the
+        // guard, so a poisoned lock still holds every complete entry.
+        let reg = published.read().unwrap_or_else(|e| e.into_inner());
         // newest first: steady state hits the fresh snapshot immediately
         match reg
             .iter()
@@ -251,7 +257,10 @@ pub fn run_soak(cfg: SoakConfig) -> SoakReport {
             std::thread::Builder::new()
                 .name(format!("fw-soak-traffic-{t}"))
                 .spawn(move || traffic_driver(client, probes, published, stop, t))
-                .expect("spawn traffic driver"),
+                .unwrap_or_else(|e| {
+                    // a soak without its drivers observes nothing
+                    panic!("cannot spawn traffic driver {t}: {e}")
+                }),
         );
     }
 
@@ -264,9 +273,10 @@ pub fn run_soak(cfg: SoakConfig) -> SoakReport {
         let report = dl
             .run_round_with(|fresh, version| {
                 let scores = probe_scores(fresh, probes_ref);
+                // poison recovery: see `traffic_driver`
                 published2
                     .write()
-                    .expect("published lock")
+                    .unwrap_or_else(|e| e.into_inner())
                     .push((version, scores));
             })
             .unwrap_or_else(|e| panic!("round {r} failed: {e}"));
@@ -289,12 +299,18 @@ pub fn run_soak(cfg: SoakConfig) -> SoakReport {
         rounds.push(report);
     }
 
+    // ordering: Relaxed — see the load in `traffic_driver`.
     stop.store(true, Ordering::Relaxed);
     let mut probe_checks = 0u64;
     let mut torn_responses = 0u64;
     let mut versions = HashSet::new();
     for d in drivers {
-        let (c, t, v) = d.join().expect("traffic driver panicked");
+        let (c, t, v) = match d.join() {
+            Ok(r) => r,
+            // re-raise the driver's own panic (its message carries the
+            // failed invariant) instead of a generic join failure
+            Err(payload) => std::panic::resume_unwind(payload),
+        };
         probe_checks += c;
         torn_responses += t;
         versions.extend(v);

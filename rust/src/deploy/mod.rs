@@ -44,6 +44,58 @@ use crate::transfer::{
 };
 use crate::util::json::{num, obj, s};
 
+/// Why a deployment-loop operation failed: a checkpoint that does not
+/// match the configuration, a corrupt trainer snapshot, or a failure
+/// in the underlying fleet plane (wire decode, checkpoint IO).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeployError {
+    /// Checkpoint encodes a different wire mode than the config.
+    ModeMismatch { checkpoint: UpdateMode, configured: UpdateMode },
+    /// The checkpointed trainer snapshot failed to decode.
+    TrainerSnapshot(String),
+    /// A non-bootstrap checkpoint is missing its receiver base.
+    MissingReceiverBase { round: u64 },
+    /// The underlying fleet plane failed.
+    Fleet(FleetError),
+}
+
+impl std::fmt::Display for DeployError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeployError::ModeMismatch { checkpoint, configured } => {
+                write!(f, "checkpoint mode {checkpoint:?} != configured {configured:?}")
+            }
+            DeployError::TrainerSnapshot(e) => write!(f, "trainer snapshot: {e}"),
+            DeployError::MissingReceiverBase { round } => {
+                write!(f, "checkpoint claims round {round} with no receiver base")
+            }
+            DeployError::Fleet(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for DeployError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DeployError::Fleet(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<FleetError> for DeployError {
+    fn from(e: FleetError) -> DeployError {
+        DeployError::Fleet(e)
+    }
+}
+
+/// CLI shim: `fn main` paths print errors as strings.
+impl From<DeployError> for String {
+    fn from(e: DeployError) -> String {
+        e.to_string()
+    }
+}
+
 /// Configuration of one deployment plane instance.
 #[derive(Clone, Debug)]
 pub struct DeployConfig {
@@ -313,6 +365,12 @@ pub struct DeploymentLoop {
     obs: DeployObs,
 }
 
+impl std::fmt::Debug for DeploymentLoop {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeploymentLoop").finish_non_exhaustive()
+    }
+}
+
 impl DeploymentLoop {
     /// Build the full plane: fresh model, registered serving engine,
     /// transfer pipeline/receiver pair and a held-out evaluation set.
@@ -395,16 +453,16 @@ impl DeploymentLoop {
         cfg: DeployConfig,
         obs: ObsOptions,
         ckpt: &DeployCheckpoint,
-    ) -> Result<Self, String> {
+    ) -> Result<Self, DeployError> {
         if ckpt.mode != cfg.mode {
-            return Err(format!(
-                "checkpoint mode {:?} != configured {:?}",
-                ckpt.mode, cfg.mode
-            ));
+            return Err(DeployError::ModeMismatch {
+                checkpoint: ckpt.mode,
+                configured: cfg.mode,
+            });
         }
         let t0 = Instant::now();
         let trainer = io::from_bytes(&ckpt.trainer)
-            .map_err(|e| format!("trainer snapshot: {e}"))?;
+            .map_err(|e| DeployError::TrainerSnapshot(e.to_string()))?;
         // fast-forward the training stream to the crash point so
         // resumed rounds draw the same examples an uninterrupted run
         // would have
@@ -429,10 +487,7 @@ impl DeploymentLoop {
             Some(base) => receiver.resync(base)?,
             None => {
                 if ckpt.round != 0 {
-                    return Err(format!(
-                        "checkpoint claims round {} with no receiver base",
-                        ckpt.round
-                    ));
+                    return Err(DeployError::MissingReceiverBase { round: ckpt.round });
                 }
                 Regressor::new(&cfg.model)
             }
@@ -505,7 +560,7 @@ impl DeploymentLoop {
         cfg: DeployConfig,
         obs: ObsOptions,
         path: &Path,
-    ) -> Result<Self, String> {
+    ) -> Result<Self, DeployError> {
         let payload = crate::fleet::checkpoint::read_file(path)?;
         let ckpt = DeployCheckpoint::from_bytes(&payload)?;
         Self::restore_with_obs(cfg, obs, &ckpt)
@@ -534,7 +589,7 @@ impl DeploymentLoop {
     }
 
     /// One full round: train → encode → ship → decode → swap.
-    pub fn run_round(&mut self) -> Result<RoundReport, String> {
+    pub fn run_round(&mut self) -> Result<RoundReport, DeployError> {
         self.run_round_with(|_, _| {})
     }
 
@@ -546,7 +601,7 @@ impl DeploymentLoop {
     pub fn run_round_with(
         &mut self,
         before_swap: impl FnOnce(&Regressor, u64),
-    ) -> Result<RoundReport, String> {
+    ) -> Result<RoundReport, DeployError> {
         let round = self.round;
         // 1. online training window
         let chunk = self.stream.take_examples(self.cfg.examples_per_round);
@@ -639,7 +694,7 @@ impl DeploymentLoop {
     }
 
     /// Run `n` rounds back to back.
-    pub fn run_rounds(&mut self, n: usize) -> Result<Vec<RoundReport>, String> {
+    pub fn run_rounds(&mut self, n: usize) -> Result<Vec<RoundReport>, DeployError> {
         (0..n).map(|_| self.run_round()).collect()
     }
 

@@ -56,6 +56,12 @@ pub struct RollingAuc {
     total_pos: usize,
 }
 
+impl std::fmt::Debug for RollingAuc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RollingAuc").finish_non_exhaustive()
+    }
+}
+
 impl RollingAuc {
     pub fn new(window: usize) -> Self {
         RollingAuc {

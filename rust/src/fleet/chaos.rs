@@ -300,10 +300,15 @@ fn traffic_driver(
     let mut errors = 0u64;
     let mut versions = HashSet::new();
     let mut i = offset;
+    // ordering: Relaxed — the flag only ends the loop; drivers join
+    // afterwards, so no data is published through it.
     while !stop.load(Ordering::Relaxed) {
         let probe_idx = i % probes.len();
         let scored = {
-            let v = view.read().expect("serving view lock");
+            // Poison recovery: the view is replaced wholesale under the
+            // write guard (clients vec + board assigned as units), so a
+            // poisoned lock still holds a coherent serving view.
+            let v = view.read().unwrap_or_else(|e| e.into_inner());
             let hint = i % v.clients.len();
             let idx = v.board.route(hint);
             if idx != hint {
@@ -322,7 +327,8 @@ fn traffic_driver(
             }
         };
         checks += 1;
-        let reg = published.read().expect("published lock");
+        // poison recovery: snapshots are appended whole under the guard
+        let reg = published.read().unwrap_or_else(|e| e.into_inner());
         match reg
             .iter()
             .rev()
@@ -341,7 +347,12 @@ fn clients_of(fabric: &FleetFabric) -> Vec<ServeClient> {
     fabric
         .replicas()
         .iter()
-        .map(|r| r.client().expect("chaos replicas serve"))
+        .map(|r| {
+            r.client().unwrap_or_else(|| {
+                // ChaosConfig always sets `serve` on the fleet config
+                panic!("chaos replica has no serving engine")
+            })
+        })
         .collect()
 }
 
@@ -427,7 +438,10 @@ pub fn run_chaos_soak(cfg: ChaosConfig) -> ChaosReport {
             std::thread::Builder::new()
                 .name(format!("fw-chaos-traffic-{t}"))
                 .spawn(move || traffic_driver(view, probes, published, stop, t))
-                .expect("spawn traffic driver"),
+                .unwrap_or_else(|e| {
+                    // a chaos soak without drivers observes nothing
+                    panic!("cannot spawn traffic driver {t}: {e}")
+                }),
         );
     }
 
@@ -447,7 +461,8 @@ pub fn run_chaos_soak(cfg: ChaosConfig) -> ChaosReport {
                 }
                 Fault::ReplicaCrash { replica } => {
                     // block traffic while the engine is swapped
-                    let mut v = view.write().expect("serving view lock");
+                    // (poison recovery: see `traffic_driver`)
+                    let mut v = view.write().unwrap_or_else(|e| e.into_inner());
                     fabric
                         .restart_replica(replica, &cursors[replica])
                         .unwrap_or_else(|e| {
@@ -458,7 +473,13 @@ pub fn run_chaos_soak(cfg: ChaosConfig) -> ChaosReport {
                         });
                     v.clients[replica] = fabric.replicas()[replica]
                         .client()
-                        .expect("restarted replica serves");
+                        .unwrap_or_else(|| {
+                            panic!(
+                                "{:?} seed {:#x}: restarted replica {replica} \
+                                 has no serving engine",
+                                cfg.mode, cfg.seed
+                            )
+                        });
                     faults.replica_restarts += 1;
                 }
                 Fault::FabricCrash => {
@@ -478,7 +499,8 @@ pub fn run_chaos_soak(cfg: ChaosConfig) -> ChaosReport {
                     });
                     let old = std::mem::replace(&mut fabric, restored);
                     fabric.set_obs(&registry);
-                    let mut v = view.write().expect("serving view lock");
+                    // poison recovery: see `traffic_driver`
+                    let mut v = view.write().unwrap_or_else(|e| e.into_inner());
                     serve_errors += old
                         .shutdown()
                         .into_iter()
@@ -507,9 +529,10 @@ pub fn run_chaos_soak(cfg: ChaosConfig) -> ChaosReport {
         let outcome = fabric
             .publish_with(&trainer, |seq, fresh| {
                 let scores = probe_scores(fresh, probes_ref);
+                // poison recovery: see `traffic_driver`
                 published2
                     .write()
-                    .expect("published lock")
+                    .unwrap_or_else(|e| e.into_inner())
                     .push((seq, scores));
             })
             .unwrap_or_else(|e| {
@@ -533,7 +556,12 @@ pub fn run_chaos_soak(cfg: ChaosConfig) -> ChaosReport {
 
     let reference = fabric
         .reference()
-        .expect("rounds ran")
+        .unwrap_or_else(|| {
+            panic!(
+                "{:?} seed {:#x}: no reference model after {} rounds",
+                cfg.mode, cfg.seed, cfg.rounds
+            )
+        })
         .pool
         .weights
         .clone();
@@ -550,6 +578,7 @@ pub fn run_chaos_soak(cfg: ChaosConfig) -> ChaosReport {
         }
     }
 
+    // ordering: Relaxed — see the load in `traffic_driver`.
     stop.store(true, Ordering::Relaxed);
     let mut probe_checks = 0u64;
     let mut torn_responses = 0u64;
@@ -557,7 +586,12 @@ pub fn run_chaos_soak(cfg: ChaosConfig) -> ChaosReport {
     let mut probe_errors = 0u64;
     let mut versions = HashSet::new();
     for d in drivers {
-        let (c, t, ra, e, v) = d.join().expect("traffic driver panicked");
+        let (c, t, ra, e, v) = match d.join() {
+            Ok(r) => r,
+            // re-raise the driver's own panic (it carries the failed
+            // invariant) instead of a generic join failure
+            Err(payload) => std::panic::resume_unwind(payload),
+        };
         probe_checks += c;
         torn_responses += t;
         routed_around += ra;

@@ -55,7 +55,8 @@ pub fn unseal(bytes: &[u8]) -> Result<&[u8], FleetError> {
         return Err(FleetError::Corrupt("bad checkpoint magic".into()));
     }
     let body_end = bytes.len() - 4;
-    let stored = u32::from_le_bytes(bytes[body_end..].try_into().unwrap());
+    let t = &bytes[body_end..];
+    let stored = u32::from_le_bytes([t[0], t[1], t[2], t[3]]);
     let actual = crc32(&bytes[..body_end]);
     if stored != actual {
         return Err(FleetError::Corrupt(format!(
@@ -89,6 +90,12 @@ pub fn read_file(path: &Path) -> Result<Vec<u8>, FleetError> {
 #[derive(Default)]
 pub struct ByteWriter {
     buf: Vec<u8>,
+}
+
+impl std::fmt::Debug for ByteWriter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ByteWriter").finish_non_exhaustive()
+    }
 }
 
 impl ByteWriter {
@@ -141,6 +148,12 @@ pub struct ByteReader<'a> {
     pos: usize,
 }
 
+impl std::fmt::Debug for ByteReader<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ByteReader").finish_non_exhaustive()
+    }
+}
+
 impl<'a> ByteReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
         ByteReader { buf, pos: 0 }
@@ -164,11 +177,15 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn get_u32(&mut self) -> Result<u32, FleetError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     pub fn get_u64(&mut self) -> Result<u64, FleetError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
     }
 
     pub fn get_f64(&mut self) -> Result<f64, FleetError> {

@@ -173,10 +173,16 @@ impl HealthBoard {
     }
 
     pub fn get(&self, idx: usize) -> HealthState {
+        // ordering: Acquire pairs with the Release in `set` — a router
+        // that observes Serving also observes the replica state
+        // transitions (restart, resync) that preceded the flip, so it
+        // never routes to an engine still mid-recovery.
         HealthState::from_gauge(self.states[idx].load(Ordering::Acquire))
     }
 
     pub fn set(&self, idx: usize, state: HealthState) {
+        // ordering: Release pairs with the Acquire in `get`/`route`
+        // (see `get`).
         self.states[idx].store(state.as_gauge(), Ordering::Release);
     }
 

@@ -256,6 +256,12 @@ pub struct FleetFabric {
     tracer: Option<RequestTracer>,
 }
 
+impl std::fmt::Debug for FleetFabric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FleetFabric").finish_non_exhaustive()
+    }
+}
+
 impl FleetFabric {
     /// Build the fleet: every replica bootstraps from `template`
     /// (structure + initial weights) at sequence 0.
@@ -603,10 +609,13 @@ impl FleetFabric {
             }
             Ok(CatchUpKind::Replay { updates: missed })
         } else {
+            // `full_len` above already proved a published base exists;
+            // stay fallible anyway so a logic drift surfaces as an
+            // error, not a panic mid-catch-up
             let full = self
                 .pipeline
                 .sent_bytes()
-                .expect("checked above")
+                .ok_or(FleetError::NothingPublished)?
                 .to_vec();
             let secs = self.ship_reliable_inter(dc, full.len());
             self.replicas[idx].resync(self.head, &full)?;

@@ -43,15 +43,17 @@ impl Strategy {
     }
 
     /// Parse a CLI flag value (`star|tree|auto`).
-    pub fn parse(s: &str) -> Result<Strategy, String> {
+    pub fn parse(s: &str) -> Result<Strategy, crate::config::ConfigError> {
         Ok(match s {
             "star" => Strategy::Star,
             "tree" => Strategy::Tree,
             "auto" => Strategy::Auto,
             other => {
-                return Err(format!(
-                    "unknown strategy '{other}' (star|tree|auto)"
-                ))
+                return Err(crate::config::ConfigError::UnknownValue {
+                    what: "strategy",
+                    got: other.to_string(),
+                    want: "star|tree|auto",
+                })
             }
         })
     }

@@ -47,6 +47,12 @@ pub struct FleetReplica {
     seq: u64,
 }
 
+impl std::fmt::Debug for FleetReplica {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FleetReplica").finish_non_exhaustive()
+    }
+}
+
 impl FleetReplica {
     /// Bootstrap a replica from the structural template (the model
     /// every DC starts serving at version 0, before the first round).

@@ -157,6 +157,8 @@ fn traffic_driver(
     let mut torn = 0u64;
     let mut versions = HashSet::new();
     let mut i = offset;
+    // ordering: Relaxed — the flag only ends the loop; drivers join
+    // afterwards, so no data is published through it.
     while !stop.load(Ordering::Relaxed) {
         let probe_idx = i % probes.len();
         let client = &clients[i % clients.len()];
@@ -166,7 +168,9 @@ fn traffic_driver(
             Err(_) => break, // engines shut down under us
         };
         checks += 1;
-        let reg = published.read().expect("published lock");
+        // Poison recovery: snapshots are appended whole under the
+        // guard, so a poisoned lock still holds every complete entry.
+        let reg = published.read().unwrap_or_else(|e| e.into_inner());
         match reg
             .iter()
             .rev()
@@ -235,7 +239,11 @@ pub fn run_fleet_soak(cfg: FleetSoakConfig) -> FleetSoakReport {
     let clients: Vec<ServeClient> = fabric
         .replicas()
         .iter()
-        .map(|r| r.client().expect("soak replicas serve"))
+        .map(|r| {
+            // FleetSoakConfig always sets `serve` on the fleet config
+            r.client()
+                .unwrap_or_else(|| panic!("soak replica has no serving engine"))
+        })
         .collect();
     let mut drivers = Vec::new();
     for t in 0..cfg.traffic_threads.max(1) {
@@ -247,7 +255,10 @@ pub fn run_fleet_soak(cfg: FleetSoakConfig) -> FleetSoakReport {
             std::thread::Builder::new()
                 .name(format!("fw-fleet-traffic-{t}"))
                 .spawn(move || traffic_driver(clients, probes, published, stop, t))
-                .expect("spawn traffic driver"),
+                .unwrap_or_else(|e| {
+                    // a soak without its drivers observes nothing
+                    panic!("cannot spawn traffic driver {t}: {e}")
+                }),
         );
     }
 
@@ -268,9 +279,10 @@ pub fn run_fleet_soak(cfg: FleetSoakConfig) -> FleetSoakReport {
         let outcome = fabric
             .publish_with(&trainer, |seq, fresh| {
                 let scores = probe_scores(fresh, probes_ref);
+                // poison recovery: see `traffic_driver`
                 published2
                     .write()
-                    .expect("published lock")
+                    .unwrap_or_else(|e| e.into_inner())
                     .push((seq, scores));
             })
             .unwrap_or_else(|e| panic!("{:?} round {r}: {e}", cfg.mode));
@@ -284,7 +296,9 @@ pub fn run_fleet_soak(cfg: FleetSoakConfig) -> FleetSoakReport {
     // convergence invariants (traffic still flowing)
     let reference = fabric
         .reference()
-        .expect("rounds ran")
+        .unwrap_or_else(|| {
+            panic!("{:?}: no reference model after {} rounds", cfg.mode, cfg.rounds)
+        })
         .pool
         .weights
         .clone();
@@ -308,12 +322,18 @@ pub fn run_fleet_soak(cfg: FleetSoakConfig) -> FleetSoakReport {
         }
     }
 
+    // ordering: Relaxed — see the load in `traffic_driver`.
     stop.store(true, Ordering::Relaxed);
     let mut probe_checks = 0u64;
     let mut torn_responses = 0u64;
     let mut versions = HashSet::new();
     for d in drivers {
-        let (c, t, v) = d.join().expect("traffic driver panicked");
+        let (c, t, v) = match d.join() {
+            Ok(r) => r,
+            // re-raise the driver's own panic (it carries the failed
+            // invariant) instead of a generic join failure
+            Err(payload) => std::panic::resume_unwind(payload),
+        };
         probe_checks += c;
         torn_responses += t;
         versions.extend(v);

@@ -28,6 +28,17 @@
 //!   crates (unavailable in the hermetic offline build); the default
 //!   build is dependency-free.
 
+// Every unsafe operation inside an `unsafe fn` must sit in an explicit
+// `unsafe {}` block with its own SAFETY justification — the blanket
+// unsafety of the enclosing fn is not a license (`fw audit` enforces
+// the comments; this lint enforces the blocks).
+#![deny(unsafe_op_in_unsafe_fn)]
+// Public types are debuggable: operators print engine/fleet state when
+// triaging incidents, and `#[derive(Debug)]` omissions are cheapest to
+// catch at the definition site.
+#![warn(missing_debug_implementations)]
+
+pub mod audit;
 pub mod automl;
 pub mod baselines;
 pub mod cli;

@@ -63,12 +63,56 @@ fn run(raw: Vec<String>) -> Result<(), String> {
         "patch" => cmd_patch(&args),
         "apply" => cmd_apply(&args),
         "pjrt" => cmd_pjrt(&args),
+        "audit" => cmd_audit(&args),
         "bench" => {
             println!("run `cargo bench` — one harness per paper table/figure");
             Ok(())
         }
         other => Err(format!("unknown subcommand '{other}'")),
     }
+}
+
+/// `fw audit` — run the correctness-invariant linter over the repo and
+/// exit nonzero on findings (the CI lint job runs `fw audit --json`).
+fn cmd_audit(args: &Args) -> Result<(), String> {
+    use fwumious::audit::{self, Allowlist};
+    let root = match args.flag("root") {
+        Some(r) => PathBuf::from(r),
+        None => {
+            // walk up from the working directory to the first ancestor
+            // that holds one of the scan roots, so `fw audit` works
+            // from anywhere inside the checkout
+            let mut dir = std::env::current_dir().map_err(|e| e.to_string())?;
+            loop {
+                if audit::SCAN_DIRS.iter().any(|s| dir.join(s).is_dir()) {
+                    break dir;
+                }
+                if !dir.pop() {
+                    return Err("cannot locate the repo root; pass --root DIR".into());
+                }
+            }
+        }
+    };
+    let allow_path = match args.flag("allowlist") {
+        Some(p) => PathBuf::from(p),
+        None => root.join("audit-allow.txt"),
+    };
+    let allow = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => Allowlist::parse(&text).map_err(|e| e.to_string())?,
+        // the default allowlist is optional; an explicit one must exist
+        Err(_) if args.flag("allowlist").is_none() => Allowlist::default(),
+        Err(e) => return Err(format!("cannot read {}: {e}", allow_path.display())),
+    };
+    let report = audit::run(&root, &allow).map_err(|e| e.to_string())?;
+    if args.has("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if !report.clean() {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 fn model_cfg_from_args(args: &Args, spec: &DatasetSpec) -> Result<ModelConfig, String> {
@@ -253,6 +297,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             let tick = std::time::Duration::from_millis(100);
             let period = std::time::Duration::from_secs(metrics_every);
             let mut since = std::time::Duration::ZERO;
+            // ordering: Relaxed — the flag only ends the dump loop;
+            // the dumper is joined before the final render, so no data
+            // is published through it.
             while !stop.load(Ordering::Relaxed) {
                 std::thread::sleep(tick);
                 since += tick;
@@ -300,6 +347,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let (served, scored, _unserved) = tallies;
     let secs = t.elapsed().as_secs_f64();
     let stats = engine.shutdown();
+    // ordering: Relaxed — see the load in the dumper loop above.
     stop.store(true, Ordering::Relaxed);
     if let Some(h) = dumper {
         let _ = h.join();

@@ -37,6 +37,10 @@ pub fn forward(
     if crate::simd::isa_level() == crate::simd::IsaLevel::Avx2Fma
         && (k == 4 || k % 8 == 0)
     {
+        // SAFETY: isa_level returns Avx2Fma only after runtime CPUID
+        // confirmed avx2+fma (every avx2 CPU also has sse4.1); the k
+        // guard above and the caller's layout/shape contract satisfy
+        // forward_avx2's remaining preconditions.
         return unsafe { forward_avx2(weights, layout, fields, k, ex, pairs) };
     }
     forward_generic(weights, layout, fields, k, ex, pairs)
@@ -89,6 +93,13 @@ pub fn forward_generic(
 /// Whole-loop AVX2 kernel: prefetches all F latent rows, then runs the
 /// masked pair loop with vector dots (SSE4.1 `dpps` for K=4, 256-bit
 /// FMA + horizontal sum for K multiple of 8).
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma+sse4.1
+/// (runtime-detected), `k == 4 || k % 8 == 0`,
+/// `ex.slots.len() == fields`, `pairs.len() == fields*(fields-1)/2`,
+/// and every slot bucket within the layout's FFM table so
+/// `base + bucket*fk + fk <= weights.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma,sse4.1")]
 unsafe fn forward_avx2(
@@ -107,11 +118,15 @@ unsafe fn forward_avx2(
     // overlaps the misses with compute.
     for s in &ex.slots {
         if s.value != 0.0 {
-            let row = weights.as_ptr().add(base + s.bucket as usize * fk);
-            let mut off = 0usize;
-            while off < fk {
-                _mm_prefetch::<_MM_HINT_T0>(row.add(off) as *const i8);
-                off += 16; // one cache line of f32
+            // SAFETY: bucket is within the FFM table (fn contract), so
+            // row..row+fk stays inside `weights`.
+            unsafe {
+                let row = weights.as_ptr().add(base + s.bucket as usize * fk);
+                let mut off = 0usize;
+                while off < fk {
+                    _mm_prefetch::<_MM_HINT_T0>(row.add(off) as *const i8);
+                    off += 16; // one cache line of f32
+                }
             }
         }
     }
@@ -125,7 +140,9 @@ unsafe fn forward_avx2(
             p += n;
             continue;
         }
-        let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
+        // SAFETY: bucket within the FFM table bounds row_i (fn
+        // contract).
+        let row_i = unsafe { weights.as_ptr().add(base + si.bucket as usize * fk) };
         for j in (i + 1)..fields {
             let sj = &ex.slots[j];
             if sj.value == 0.0 {
@@ -133,21 +150,29 @@ unsafe fn forward_avx2(
                 p += 1;
                 continue;
             }
-            let row_j = weights.as_ptr().add(base + sj.bucket as usize * fk);
-            let a = row_i.add(j * k);
-            let b = row_j.add(i * k);
+            // SAFETY: bucket bounds row_j; i, j < fields keep both
+            // k-strips (offset j*k resp. i*k, length k) inside their
+            // fk-float rows.
+            let (a, b) = unsafe {
+                let row_j =
+                    weights.as_ptr().add(base + sj.bucket as usize * fk);
+                (row_i.add(j * k), row_j.add(i * k))
+            };
             let d = if k == 4 {
-                let va = _mm_loadu_ps(a);
-                let vb = _mm_loadu_ps(b);
+                // SAFETY: k == 4 bounds both 4-lane unaligned loads.
+                let (va, vb) = unsafe { (_mm_loadu_ps(a), _mm_loadu_ps(b)) };
                 _mm_cvtss_f32(_mm_dp_ps::<0xF1>(va, vb))
             } else {
                 // k % 8 == 0
                 let mut acc = _mm256_setzero_ps();
                 let mut kk = 0;
                 while kk < k {
-                    let va = _mm256_loadu_ps(a.add(kk));
-                    let vb = _mm256_loadu_ps(b.add(kk));
-                    acc = _mm256_fmadd_ps(va, vb, acc);
+                    // SAFETY: kk + 8 <= k bounds both 8-lane loads.
+                    unsafe {
+                        let va = _mm256_loadu_ps(a.add(kk));
+                        let vb = _mm256_loadu_ps(b.add(kk));
+                        acc = _mm256_fmadd_ps(va, vb, acc);
+                    }
                     kk += 8;
                 }
                 let hi = _mm256_extractf128_ps::<1>(acc);
@@ -183,6 +208,10 @@ pub fn forward_partial(
     if crate::simd::isa_level() == crate::simd::IsaLevel::Avx2Fma
         && (k == 4 || k % 8 == 0)
     {
+        // SAFETY: isa_level returns Avx2Fma only after runtime CPUID
+        // confirmed avx2+fma (every avx2 CPU also has sse4.1); the k
+        // guard above and the caller's layout/shape contract satisfy
+        // forward_partial_avx2's remaining preconditions.
         unsafe {
             forward_partial_avx2(weights, layout, fields, k, ctx_len, all_slots, pairs)
         };
@@ -229,6 +258,13 @@ pub fn forward_partial_generic(
 }
 
 /// AVX2 partial pair loop with candidate-row prefetch.
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma+sse4.1
+/// (runtime-detected), `k == 4 || k % 8 == 0`,
+/// `all_slots.len() == fields`, `pairs.len() == fields*(fields-1)/2`,
+/// and every slot bucket within the layout's FFM table so
+/// `base + bucket*fk + fk <= weights.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma,sse4.1")]
 unsafe fn forward_partial_avx2(
@@ -245,11 +281,15 @@ unsafe fn forward_partial_avx2(
     let base = layout.ffm_off;
     for s in &all_slots[ctx_len..] {
         if s.value != 0.0 {
-            let row = weights.as_ptr().add(base + s.bucket as usize * fk);
-            let mut off = 0usize;
-            while off < fk {
-                _mm_prefetch::<_MM_HINT_T0>(row.add(off) as *const i8);
-                off += 16;
+            // SAFETY: bucket is within the FFM table (fn contract), so
+            // row..row+fk stays inside `weights`.
+            unsafe {
+                let row = weights.as_ptr().add(base + s.bucket as usize * fk);
+                let mut off = 0usize;
+                while off < fk {
+                    _mm_prefetch::<_MM_HINT_T0>(row.add(off) as *const i8);
+                    off += 16;
+                }
             }
         }
     }
@@ -261,7 +301,9 @@ unsafe fn forward_partial_avx2(
             pairs[row_base + (j0 - i - 1)..row_base + (fields - i - 1)].fill(0.0);
             continue;
         }
-        let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
+        // SAFETY: bucket within the FFM table bounds row_i (fn
+        // contract).
+        let row_i = unsafe { weights.as_ptr().add(base + si.bucket as usize * fk) };
         for j in j0..fields {
             let sj = &all_slots[j];
             let pi = row_base + (j - i - 1);
@@ -269,20 +311,29 @@ unsafe fn forward_partial_avx2(
                 pairs[pi] = 0.0;
                 continue;
             }
-            let row_j = weights.as_ptr().add(base + sj.bucket as usize * fk);
-            let a = row_i.add(j * k);
-            let b = row_j.add(i * k);
+            // SAFETY: bucket bounds row_j; i, j < fields keep both
+            // k-strips inside their fk-float rows.
+            let (a, b) = unsafe {
+                let row_j =
+                    weights.as_ptr().add(base + sj.bucket as usize * fk);
+                (row_i.add(j * k), row_j.add(i * k))
+            };
             let d = if k == 4 {
-                _mm_cvtss_f32(_mm_dp_ps::<0xF1>(_mm_loadu_ps(a), _mm_loadu_ps(b)))
+                // SAFETY: k == 4 bounds both 4-lane unaligned loads.
+                let (va, vb) = unsafe { (_mm_loadu_ps(a), _mm_loadu_ps(b)) };
+                _mm_cvtss_f32(_mm_dp_ps::<0xF1>(va, vb))
             } else {
                 let mut acc = _mm256_setzero_ps();
                 let mut kk = 0;
                 while kk < k {
-                    acc = _mm256_fmadd_ps(
-                        _mm256_loadu_ps(a.add(kk)),
-                        _mm256_loadu_ps(b.add(kk)),
-                        acc,
-                    );
+                    // SAFETY: kk + 8 <= k bounds both 8-lane loads.
+                    unsafe {
+                        acc = _mm256_fmadd_ps(
+                            _mm256_loadu_ps(a.add(kk)),
+                            _mm256_loadu_ps(b.add(kk)),
+                            acc,
+                        );
+                    }
                     kk += 8;
                 }
                 let hi = _mm256_extractf128_ps::<1>(acc);
@@ -334,6 +385,11 @@ pub fn forward_partial_batch(
     if crate::simd::isa_level() == crate::simd::IsaLevel::Avx2Fma
         && (k == 4 || k % 8 == 0)
     {
+        // SAFETY: isa_level returns Avx2Fma only after runtime CPUID
+        // confirmed avx2+fma (every avx2 CPU also has sse4.1); the k
+        // guard above, the ctx_len < fields guard, and the caller's
+        // layout/shape contract satisfy forward_partial_batch_avx2's
+        // remaining preconditions.
         unsafe {
             forward_partial_batch_avx2(
                 weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
@@ -427,6 +483,14 @@ pub fn forward_partial_batch_generic(
 /// four candidates at a time through one batched horizontal sum
 /// (`hadd` tree — the remainder path uses the same per-dot tree so any
 /// candidate's value is independent of where it lands in the batch).
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma+sse4.1
+/// (runtime-detected), `k == 4 || k % 8 == 0`, `ctx_len < fields`,
+/// `ctx_slots.len() == ctx_len`, `cand_slots.len()` a multiple of
+/// `fields - ctx_len`, `pairs.len() == batch * fields*(fields-1)/2`,
+/// and every slot bucket within the layout's FFM table so
+/// `base + bucket*fk + fk <= weights.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma,sse4.1")]
 #[allow(clippy::too_many_arguments)]
@@ -444,6 +508,10 @@ unsafe fn forward_partial_batch_avx2(
 
     /// Σ over one 8-lane accumulator via the `hadd` tree:
     /// `((x0+x1)+(x2+x3)) + ((x4+x5)+(x6+x7))`.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports avx2 — the body is
+    /// value-only intrinsics (no memory access).
     #[target_feature(enable = "avx2,fma")]
     #[inline]
     unsafe fn hsum8_tree(v: __m256) -> f32 {
@@ -456,6 +524,10 @@ unsafe fn forward_partial_batch_avx2(
 
     /// Four accumulators reduced at once; lane r of the result equals
     /// `hsum8_tree(acc_r)` bit for bit.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports avx2 — the body is
+    /// value-only intrinsics (no memory access).
     #[target_feature(enable = "avx2,fma")]
     #[inline]
     unsafe fn hsum4x8_tree(a: __m256, b: __m256, c: __m256, d: __m256) -> __m128 {
@@ -474,11 +546,15 @@ unsafe fn forward_partial_batch_avx2(
     // every candidate row, instead of one pass per candidate.
     for s in ctx_slots.iter().chain(cand_slots.iter()) {
         if s.value != 0.0 {
-            let row = weights.as_ptr().add(base + s.bucket as usize * fk);
-            let mut off = 0usize;
-            while off < fk {
-                _mm_prefetch::<_MM_HINT_T0>(row.add(off) as *const i8);
-                off += 16;
+            // SAFETY: bucket is within the FFM table (fn contract), so
+            // row..row+fk stays inside `weights`.
+            unsafe {
+                let row = weights.as_ptr().add(base + s.bucket as usize * fk);
+                let mut off = 0usize;
+                while off < fk {
+                    _mm_prefetch::<_MM_HINT_T0>(row.add(off) as *const i8);
+                    off += 16;
+                }
             }
         }
     }
@@ -493,17 +569,26 @@ unsafe fn forward_partial_batch_avx2(
             continue;
         }
         let vi = si.value;
-        let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
+        // SAFETY: bucket within the FFM table bounds row_i (fn
+        // contract).
+        let row_i = unsafe { weights.as_ptr().add(base + si.bucket as usize * fk) };
         for jj in 0..cw {
             let j = ctx_len + jj;
-            let a = row_i.add(j * k);
+            // SAFETY: j < fields keeps the k-strip j*k..j*k+k inside
+            // the fk-float row.
+            let a = unsafe { row_i.add(j * k) };
             if k == 4 {
-                let va = _mm_loadu_ps(a);
+                // SAFETY: k == 4 bounds the 4-lane load from strip `a`.
+                let va = unsafe { _mm_loadu_ps(a) };
                 for b in 0..batch {
                     let sj = &cand_slots[b * cw + jj];
-                    let row_j =
-                        weights.as_ptr().add(base + sj.bucket as usize * fk);
-                    let vb = _mm_loadu_ps(row_j.add(i * k));
+                    // SAFETY: bucket bounds row_j; i < fields and
+                    // k == 4 bound the 4-lane load at offset i*k.
+                    let vb = unsafe {
+                        let row_j =
+                            weights.as_ptr().add(base + sj.bucket as usize * fk);
+                        _mm_loadu_ps(row_j.add(i * k))
+                    };
                     let d = _mm_cvtss_f32(_mm_dp_ps::<0xF1>(va, vb));
                     pairs[b * np + po + jj] = d * vi * sj.value;
                 }
@@ -517,26 +602,35 @@ unsafe fn forward_partial_batch_avx2(
                 for (r, (av, vv)) in acc.iter_mut().zip(vals.iter_mut()).enumerate() {
                     let sj = &cand_slots[(b + r) * cw + jj];
                     *vv = sj.value;
-                    let row_j = weights
-                        .as_ptr()
-                        .add(base + sj.bucket as usize * fk + i * k);
-                    let mut kk = 0usize;
-                    while kk < k {
-                        *av = _mm256_fmadd_ps(
-                            _mm256_loadu_ps(a.add(kk)),
-                            _mm256_loadu_ps(row_j.add(kk)),
-                            *av,
-                        );
-                        kk += 8;
+                    // SAFETY: bucket bounds the candidate row, i <
+                    // fields offsets its k-strip, and kk + 8 <= k
+                    // bounds every 8-lane load from both strips.
+                    unsafe {
+                        let row_j = weights
+                            .as_ptr()
+                            .add(base + sj.bucket as usize * fk + i * k);
+                        let mut kk = 0usize;
+                        while kk < k {
+                            *av = _mm256_fmadd_ps(
+                                _mm256_loadu_ps(a.add(kk)),
+                                _mm256_loadu_ps(row_j.add(kk)),
+                                *av,
+                            );
+                            kk += 8;
+                        }
                     }
                 }
-                let d4 = hsum4x8_tree(acc[0], acc[1], acc[2], acc[3]);
+                // SAFETY: avx2 is enabled per this fn's contract
+                // (hsum4x8_tree is value-only).
+                let d4 = unsafe { hsum4x8_tree(acc[0], acc[1], acc[2], acc[3]) };
                 let prod = _mm_mul_ps(
                     _mm_mul_ps(d4, _mm_set1_ps(vi)),
                     _mm_set_ps(vals[3], vals[2], vals[1], vals[0]),
                 );
                 let mut tmp = [0f32; 4];
-                _mm_storeu_ps(tmp.as_mut_ptr(), prod);
+                // SAFETY: tmp is a 4-float stack array — exactly the
+                // 128-bit store width.
+                unsafe { _mm_storeu_ps(tmp.as_mut_ptr(), prod) };
                 for (r, &t) in tmp.iter().enumerate() {
                     pairs[(b + r) * np + po + jj] = t;
                 }
@@ -544,20 +638,27 @@ unsafe fn forward_partial_batch_avx2(
             }
             while b < batch {
                 let sj = &cand_slots[b * cw + jj];
-                let row_j = weights
-                    .as_ptr()
-                    .add(base + sj.bucket as usize * fk + i * k);
                 let mut acc = _mm256_setzero_ps();
-                let mut kk = 0usize;
-                while kk < k {
-                    acc = _mm256_fmadd_ps(
-                        _mm256_loadu_ps(a.add(kk)),
-                        _mm256_loadu_ps(row_j.add(kk)),
-                        acc,
-                    );
-                    kk += 8;
+                // SAFETY: bucket bounds the candidate row, i < fields
+                // offsets its k-strip, and kk + 8 <= k bounds every
+                // 8-lane load from both strips.
+                unsafe {
+                    let row_j = weights
+                        .as_ptr()
+                        .add(base + sj.bucket as usize * fk + i * k);
+                    let mut kk = 0usize;
+                    while kk < k {
+                        acc = _mm256_fmadd_ps(
+                            _mm256_loadu_ps(a.add(kk)),
+                            _mm256_loadu_ps(row_j.add(kk)),
+                            acc,
+                        );
+                        kk += 8;
+                    }
                 }
-                pairs[b * np + po + jj] = hsum8_tree(acc) * vi * sj.value;
+                // SAFETY: avx2 is enabled per this fn's contract
+                // (hsum8_tree is value-only).
+                pairs[b * np + po + jj] = unsafe { hsum8_tree(acc) } * vi * sj.value;
                 b += 1;
             }
         }
@@ -574,27 +675,40 @@ unsafe fn forward_partial_batch_avx2(
                 pairs[pb + row_base..pb + row_base + (fields - i - 1)].fill(0.0);
                 continue;
             }
-            let row_i = weights.as_ptr().add(base + si.bucket as usize * fk);
+            // SAFETY: bucket within the FFM table bounds row_i (fn
+            // contract).
+            let row_i = unsafe { weights.as_ptr().add(base + si.bucket as usize * fk) };
             for (jj, sj) in cs.iter().enumerate().skip(ii + 1) {
                 let j = ctx_len + jj;
                 let pi = pb + row_base + (j - i - 1);
-                let row_j = weights.as_ptr().add(base + sj.bucket as usize * fk);
-                let a = row_i.add(j * k);
-                let bp = row_j.add(i * k);
+                // SAFETY: bucket bounds row_j; i, j < fields keep both
+                // k-strips inside their fk-float rows.
+                let (a, bp) = unsafe {
+                    let row_j =
+                        weights.as_ptr().add(base + sj.bucket as usize * fk);
+                    (row_i.add(j * k), row_j.add(i * k))
+                };
                 let d = if k == 4 {
-                    _mm_cvtss_f32(_mm_dp_ps::<0xF1>(_mm_loadu_ps(a), _mm_loadu_ps(bp)))
+                    // SAFETY: k == 4 bounds both 4-lane loads.
+                    let (va, vb) = unsafe { (_mm_loadu_ps(a), _mm_loadu_ps(bp)) };
+                    _mm_cvtss_f32(_mm_dp_ps::<0xF1>(va, vb))
                 } else {
                     let mut acc = _mm256_setzero_ps();
                     let mut kk = 0usize;
                     while kk < k {
-                        acc = _mm256_fmadd_ps(
-                            _mm256_loadu_ps(a.add(kk)),
-                            _mm256_loadu_ps(bp.add(kk)),
-                            acc,
-                        );
+                        // SAFETY: kk + 8 <= k bounds both 8-lane loads.
+                        unsafe {
+                            acc = _mm256_fmadd_ps(
+                                _mm256_loadu_ps(a.add(kk)),
+                                _mm256_loadu_ps(bp.add(kk)),
+                                acc,
+                            );
+                        }
                         kk += 8;
                     }
-                    hsum8_tree(acc)
+                    // SAFETY: avx2 is enabled per this fn's contract
+                    // (hsum8_tree is value-only).
+                    unsafe { hsum8_tree(acc) }
                 };
                 pairs[pi] = d * si.value * sj.value;
             }
@@ -835,6 +949,9 @@ mod tests {
                 cand_slots: &[FeatureSlot],
                 pairs: &mut [f32],
             ) {
+                // SAFETY: the feature-detect guard above confirmed
+                // avx2+fma+sse4.1; the test only passes k in {4, 8}
+                // and shape-consistent slices.
                 unsafe {
                     forward_partial_batch_avx2(
                         weights, layout, fields, k, ctx_len, ctx_slots, cand_slots,

@@ -33,10 +33,13 @@ impl Counter {
     }
 
     pub fn add(&self, n: u64) {
+        // ordering: Relaxed — a metric counter publishes no other
+        // data; scrapes tolerate momentarily stale values.
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // ordering: Relaxed — statistical read, see `add`.
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -48,10 +51,13 @@ pub struct Gauge(Arc<AtomicU64>);
 
 impl Gauge {
     pub fn set(&self, v: f64) {
+        // ordering: Relaxed — last-write-wins metric cell; the store
+        // is a single u64 (never torn) and publishes nothing else.
         self.0.store(v.to_bits(), Ordering::Relaxed);
     }
 
     pub fn get(&self) -> f64 {
+        // ordering: Relaxed — statistical read, see `set`.
         f64::from_bits(self.0.load(Ordering::Relaxed))
     }
 }

@@ -96,6 +96,9 @@ impl RequestTracer {
         if self.every == 0 {
             return None;
         }
+        // ordering: Relaxed — the counter only spaces samples; exact
+        // cross-thread spacing is not required and nothing else is
+        // published through it.
         let n = self.counter.fetch_add(1, Ordering::Relaxed);
         (n % self.every == 0).then_some(n)
     }

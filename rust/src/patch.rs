@@ -29,9 +29,101 @@
 //! (appended bytes ride in a final run).
 
 use crate::util::compress as lz;
+use crate::util::compress::CompressError;
 use crate::util::varint;
 
 pub const MAGIC: &[u8; 4] = b"FWP1";
+
+/// Why a patch failed to parse, apply, or fold.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PatchError {
+    /// Zero-byte wire buffer.
+    Empty,
+    /// Unknown compression tag byte.
+    BadTag(u8),
+    /// Op stream does not start with `FWP1`.
+    BadMagic,
+    /// Stream ended inside a varint (`what` names which one).
+    Truncated(&'static str),
+    /// Patch was diffed against a different base length.
+    OldLenMismatch { expected: u64, got: usize },
+    /// A skip op walks past the end of the old buffer.
+    SkipPastEnd,
+    /// A literal run claims more bytes than the op stream holds.
+    RunPastEnd,
+    /// Applying produced a different length than the header declared.
+    LengthMismatch { got: usize, expected: u64 },
+    /// Folding needs `old_len == new_len` on every link.
+    NotInPlace,
+    /// Adjacent fold links disagree on the intermediate length.
+    ChainMismatch { a_new: u64, b_old: u64 },
+    /// `fold_chain` over zero patches.
+    EmptyChain,
+    /// Failure folding link `index` of `len`.
+    FoldLink { index: usize, len: usize, source: Box<PatchError> },
+    /// Failure applying link `index` of `len`.
+    ChainLink { index: usize, len: usize, source: Box<PatchError> },
+    /// The op stream's LZ payload was corrupt.
+    Compress(CompressError),
+}
+
+impl std::fmt::Display for PatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PatchError::Empty => write!(f, "empty patch"),
+            PatchError::BadTag(t) => write!(f, "bad compression tag {t}"),
+            PatchError::BadMagic => write!(f, "bad patch magic"),
+            PatchError::Truncated(what) => write!(f, "truncated {what}"),
+            PatchError::OldLenMismatch { expected, got } => {
+                write!(f, "patch expects old of {expected} bytes, got {got}")
+            }
+            PatchError::SkipPastEnd => write!(f, "skip past end of old"),
+            PatchError::RunPastEnd => write!(f, "run past end of patch"),
+            PatchError::LengthMismatch { got, expected } => {
+                write!(f, "patched length {got} != expected {expected}")
+            }
+            PatchError::NotInPlace => {
+                write!(f, "fold requires in-place patches (old_len == new_len)")
+            }
+            PatchError::ChainMismatch { a_new, b_old } => {
+                write!(f, "fold chain mismatch: a.new_len {a_new} != b.old_len {b_old}")
+            }
+            PatchError::EmptyChain => write!(f, "empty fold chain"),
+            PatchError::FoldLink { index, len, source } => {
+                write!(f, "fold link {index}/{len}: {source}")
+            }
+            PatchError::ChainLink { index, len, source } => {
+                write!(f, "chain link {index}/{len}: {source}")
+            }
+            PatchError::Compress(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for PatchError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PatchError::FoldLink { source, .. } | PatchError::ChainLink { source, .. } => {
+                Some(source)
+            }
+            PatchError::Compress(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CompressError> for PatchError {
+    fn from(e: CompressError) -> PatchError {
+        PatchError::Compress(e)
+    }
+}
+
+/// CLI shim: `fn main` paths print errors as strings.
+impl From<PatchError> for String {
+    fn from(e: PatchError) -> String {
+        e.to_string()
+    }
+}
 
 /// Compression applied to the op stream.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,12 +161,12 @@ impl Patch {
     }
 
     /// Parse a wire buffer.
-    pub fn from_wire(buf: &[u8]) -> Result<Patch, String> {
-        let (&tag, payload) = buf.split_first().ok_or("empty patch")?;
+    pub fn from_wire(buf: &[u8]) -> Result<Patch, PatchError> {
+        let (&tag, payload) = buf.split_first().ok_or(PatchError::Empty)?;
         let compression = match tag {
             0 => Compression::None,
             1 => Compression::Lz,
-            t => return Err(format!("bad compression tag {t}")),
+            t => return Err(PatchError::BadTag(t)),
         };
         Ok(Patch {
             compression,
@@ -137,32 +229,32 @@ pub fn diff_ops(old: &[u8], new: &[u8]) -> Vec<u8> {
 }
 
 /// Apply a raw op stream to `old`, producing the new buffer.
-pub fn apply_ops(old: &[u8], ops: &[u8]) -> Result<Vec<u8>, String> {
+pub fn apply_ops(old: &[u8], ops: &[u8]) -> Result<Vec<u8>, PatchError> {
     if ops.len() < 4 || &ops[..4] != MAGIC {
-        return Err("bad patch magic".into());
+        return Err(PatchError::BadMagic);
     }
     let mut pos = 4usize;
-    let old_len = varint::read_u64(ops, &mut pos).ok_or("truncated old_len")?;
-    let new_len = varint::read_u64(ops, &mut pos).ok_or("truncated new_len")?;
+    let old_len =
+        varint::read_u64(ops, &mut pos).ok_or(PatchError::Truncated("old_len"))?;
+    let new_len =
+        varint::read_u64(ops, &mut pos).ok_or(PatchError::Truncated("new_len"))?;
     if old_len as usize != old.len() {
-        return Err(format!(
-            "patch expects old of {} bytes, got {}",
-            old_len,
-            old.len()
-        ));
+        return Err(PatchError::OldLenMismatch { expected: old_len, got: old.len() });
     }
     let mut out = Vec::with_capacity(new_len as usize);
     let mut cursor = 0usize;
     while pos < ops.len() {
-        let skip = varint::read_u64(ops, &mut pos).ok_or("truncated skip")? as usize;
-        let run = varint::read_u64(ops, &mut pos).ok_or("truncated run")? as usize;
+        let skip =
+            varint::read_u64(ops, &mut pos).ok_or(PatchError::Truncated("skip"))? as usize;
+        let run =
+            varint::read_u64(ops, &mut pos).ok_or(PatchError::Truncated("run"))? as usize;
         let copy_end = cursor + skip;
         if copy_end > old.len() {
-            return Err("skip past end of old".into());
+            return Err(PatchError::SkipPastEnd);
         }
         out.extend_from_slice(&old[cursor..copy_end]);
         if pos + run > ops.len() {
-            return Err("run past end of patch".into());
+            return Err(PatchError::RunPastEnd);
         }
         out.extend_from_slice(&ops[pos..pos + run]);
         pos += run;
@@ -175,11 +267,7 @@ pub fn apply_ops(old: &[u8], ops: &[u8]) -> Result<Vec<u8>, String> {
         out.extend_from_slice(&old[cursor..cursor + take]);
     }
     if out.len() != new_len as usize {
-        return Err(format!(
-            "patched length {} != expected {}",
-            out.len(),
-            new_len
-        ));
+        return Err(PatchError::LengthMismatch { got: out.len(), expected: new_len });
     }
     Ok(out)
 }
@@ -191,10 +279,10 @@ fn compress(data: &[u8], c: Compression) -> Vec<u8> {
     }
 }
 
-fn decompress(data: &[u8], c: Compression) -> Result<Vec<u8>, String> {
+fn decompress(data: &[u8], c: Compression) -> Result<Vec<u8>, PatchError> {
     match c {
         Compression::None => Ok(data.to_vec()),
-        Compression::Lz => lz::decompress(data),
+        Compression::Lz => Ok(lz::decompress(data)?),
     }
 }
 
@@ -206,27 +294,31 @@ pub fn make_patch(old: &[u8], new: &[u8], c: Compression) -> Patch {
 }
 
 /// Full pipeline inverse: decompress and apply.
-pub fn apply_patch(old: &[u8], patch: &Patch) -> Result<Vec<u8>, String> {
+pub fn apply_patch(old: &[u8], patch: &Patch) -> Result<Vec<u8>, PatchError> {
     let ops = decompress(&patch.payload, patch.compression)?;
     apply_ops(old, &ops)
 }
 
 /// Parse a raw op stream into absolute replacement regions
 /// `(start, literal bytes)` plus its `(old_len, new_len)` header.
-fn parse_regions(ops: &[u8]) -> Result<(u64, u64, Vec<(usize, Vec<u8>)>), String> {
+fn parse_regions(ops: &[u8]) -> Result<(u64, u64, Vec<(usize, Vec<u8>)>), PatchError> {
     if ops.len() < 4 || &ops[..4] != MAGIC {
-        return Err("bad patch magic".into());
+        return Err(PatchError::BadMagic);
     }
     let mut pos = 4usize;
-    let old_len = varint::read_u64(ops, &mut pos).ok_or("truncated old_len")?;
-    let new_len = varint::read_u64(ops, &mut pos).ok_or("truncated new_len")?;
+    let old_len =
+        varint::read_u64(ops, &mut pos).ok_or(PatchError::Truncated("old_len"))?;
+    let new_len =
+        varint::read_u64(ops, &mut pos).ok_or(PatchError::Truncated("new_len"))?;
     let mut regions = Vec::new();
     let mut cursor = 0usize;
     while pos < ops.len() {
-        let skip = varint::read_u64(ops, &mut pos).ok_or("truncated skip")? as usize;
-        let run = varint::read_u64(ops, &mut pos).ok_or("truncated run")? as usize;
+        let skip =
+            varint::read_u64(ops, &mut pos).ok_or(PatchError::Truncated("skip"))? as usize;
+        let run =
+            varint::read_u64(ops, &mut pos).ok_or(PatchError::Truncated("run"))? as usize;
         if pos + run > ops.len() {
-            return Err("run past end of patch".into());
+            return Err(PatchError::RunPastEnd);
         }
         let start = cursor + skip;
         regions.push((start, ops[pos..pos + run].to_vec()));
@@ -245,14 +337,14 @@ fn parse_regions(ops: &[u8]) -> Result<(u64, u64, Vec<(usize, Vec<u8>)>), String
 /// simply `b`'s regions plus the parts of `a`'s regions `b` did not
 /// overwrite.  Length-changing patches are refused (callers fall back
 /// to sequential replay).
-pub fn fold_ops(a: &[u8], b: &[u8]) -> Result<Vec<u8>, String> {
+pub fn fold_ops(a: &[u8], b: &[u8]) -> Result<Vec<u8>, PatchError> {
     let (a_old, a_new, a_regions) = parse_regions(a)?;
     let (b_old, b_new, b_regions) = parse_regions(b)?;
     if a_old != a_new || b_old != b_new {
-        return Err("fold requires in-place patches (old_len == new_len)".into());
+        return Err(PatchError::NotInPlace);
     }
     if a_new != b_old {
-        return Err(format!("fold chain mismatch: a.new_len {a_new} != b.old_len {b_old}"));
+        return Err(PatchError::ChainMismatch { a_new, b_old });
     }
 
     // a's regions with every b-covered span punched out (b wins)
@@ -313,13 +405,16 @@ pub fn fold_ops(a: &[u8], b: &[u8]) -> Result<Vec<u8>, String> {
 /// catch-up replays a single hop instead of `k` sequential applies
 /// (ROADMAP item 5d).  All links must be in-place; errs otherwise
 /// (callers fall back to sequential [`apply_chain`] replay).
-pub fn fold_chain(patches: &[Patch], c: Compression) -> Result<Patch, String> {
-    let first = patches.first().ok_or("empty fold chain")?;
+pub fn fold_chain(patches: &[Patch], c: Compression) -> Result<Patch, PatchError> {
+    let first = patches.first().ok_or(PatchError::EmptyChain)?;
     let mut acc = decompress(&first.payload, first.compression)?;
     for (i, p) in patches[1..].iter().enumerate() {
         let ops = decompress(&p.payload, p.compression)?;
-        acc = fold_ops(&acc, &ops)
-            .map_err(|e| format!("fold link {}/{}: {e}", i + 1, patches.len()))?;
+        acc = fold_ops(&acc, &ops).map_err(|e| PatchError::FoldLink {
+            index: i + 1,
+            len: patches.len(),
+            source: Box::new(e),
+        })?;
     }
     let raw_len = acc.len();
     Ok(Patch { compression: c, payload: compress(&acc, c), raw_len })
@@ -332,11 +427,14 @@ pub fn fold_chain(patches: &[Patch], c: Compression) -> Result<Patch, String> {
 /// decode along the way); used directly by `fw apply` for offline
 /// chain reconstruction, and must land on bytes identical to a fresh
 /// snapshot.
-pub fn apply_chain(base: &[u8], patches: &[Patch]) -> Result<Vec<u8>, String> {
+pub fn apply_chain(base: &[u8], patches: &[Patch]) -> Result<Vec<u8>, PatchError> {
     let mut cur = base.to_vec();
     for (i, p) in patches.iter().enumerate() {
-        cur = apply_patch(&cur, p)
-            .map_err(|e| format!("chain link {i}/{}: {e}", patches.len()))?;
+        cur = apply_patch(&cur, p).map_err(|e| PatchError::ChainLink {
+            index: i,
+            len: patches.len(),
+            source: Box::new(e),
+        })?;
     }
     Ok(cur)
 }
@@ -507,7 +605,7 @@ mod tests {
         assert_eq!(&replayed, snaps.last().unwrap());
         // a broken link reports its position (wrong-length base)
         let err = apply_chain(&snaps[0][..10_000], &chain).unwrap_err();
-        assert!(err.contains("chain link 0/"), "{err}");
+        assert!(err.to_string().contains("chain link 0/"), "{err}");
     }
 
     fn mutate_in_place(rng: &mut Pcg32, buf: &mut [u8], edits: usize) {

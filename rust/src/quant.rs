@@ -146,8 +146,14 @@ pub fn quantize_headroom(
     // reuse quantize()'s rounding on the padded bounds
     let (mut h, _) = quantize(&padded, alpha, beta);
     h.n = weights.len() as u64;
-    let codes = quantize_with(&h, weights).expect("padded grid must cover");
-    (h, codes)
+    // The padded bounds bracket [lo, hi] by construction and quantize()
+    // only rounds them outward, so the grid always covers the weights;
+    // fall back to a fresh grid rather than panicking if that invariant
+    // ever slips (e.g. under pathological float rounding).
+    match quantize_with(&h, weights) {
+        Some(codes) => (h, codes),
+        None => quantize(weights, alpha, beta),
+    }
 }
 
 /// Reconstruct weights from codes: `w = min + code * bucket`.
@@ -175,26 +181,54 @@ pub fn to_bytes(header: &QuantHeader, codes: &[u16]) -> Vec<u8> {
     out
 }
 
-/// Parse the FWQ1 byte format.
-pub fn from_bytes(buf: &[u8]) -> Result<(QuantHeader, Vec<u16>), String> {
-    if buf.len() < 24 || &buf[..4] != MAGIC {
-        return Err("bad FWQ1 header".into());
+/// Why [`from_bytes`] rejected a FWQ1 buffer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QuantError {
+    /// Too short or wrong magic.
+    BadHeader,
+    /// Code payload does not match the declared weight count.
+    PayloadMismatch { payload: usize, n: u64 },
+}
+
+impl std::fmt::Display for QuantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuantError::BadHeader => write!(f, "bad FWQ1 header"),
+            QuantError::PayloadMismatch { payload, n } => {
+                write!(f, "payload {payload} bytes != 2 * n ({n})")
+            }
+        }
     }
-    let n = u64::from_le_bytes(buf[4..12].try_into().unwrap());
-    let min = f32::from_le_bytes(buf[12..16].try_into().unwrap());
-    let bucket = f32::from_le_bytes(buf[16..20].try_into().unwrap());
+}
+
+impl std::error::Error for QuantError {}
+
+/// CLI shim: `fn main` paths print errors as strings.
+impl From<QuantError> for String {
+    fn from(e: QuantError) -> String {
+        e.to_string()
+    }
+}
+
+/// Parse the FWQ1 byte format.
+pub fn from_bytes(buf: &[u8]) -> Result<(QuantHeader, Vec<u16>), QuantError> {
+    if buf.len() < 24 || &buf[..4] != MAGIC {
+        return Err(QuantError::BadHeader);
+    }
+    let n = u64::from_le_bytes([
+        buf[4], buf[5], buf[6], buf[7], buf[8], buf[9], buf[10], buf[11],
+    ]);
+    let min = f32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]);
+    let bucket = f32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]);
     let alpha = buf[20];
     let beta = buf[21];
     let payload = &buf[24..];
     if payload.len() != n as usize * 2 {
-        return Err(format!(
-            "payload {} bytes != 2 * n ({n})",
-            payload.len()
-        ));
+        return Err(QuantError::PayloadMismatch { payload: payload.len(), n });
     }
     let codes = payload
         .chunks_exact(2)
-        .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
         .collect();
     Ok((QuantHeader { n, min, bucket, alpha, beta }, codes))
 }
@@ -206,7 +240,7 @@ pub fn quantize_to_bytes(weights: &[f32], alpha: u8, beta: u8) -> Vec<u8> {
 }
 
 /// One-shot inverse.
-pub fn dequantize_from_bytes(buf: &[u8]) -> Result<Vec<f32>, String> {
+pub fn dequantize_from_bytes(buf: &[u8]) -> Result<Vec<f32>, QuantError> {
     let (h, codes) = from_bytes(buf)?;
     Ok(dequantize(&h, &codes))
 }
@@ -327,6 +361,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 10M floats + wall-clock assert: Miri is ~1000x slower
     fn quantization_throughput_fast_enough() {
         // §6: "procedure has tens of seconds at most"; we check the
         // in-process path handles ~40 MB of weights in well under 2 s.

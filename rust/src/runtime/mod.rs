@@ -109,6 +109,12 @@ pub struct PjrtEngine {
     client: xla::PjRtClient,
 }
 
+impl std::fmt::Debug for PjrtEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtEngine").finish_non_exhaustive()
+    }
+}
+
 impl PjrtEngine {
     pub fn cpu() -> Result<Self> {
         Ok(PjrtEngine { client: xla::PjRtClient::cpu()? })
@@ -138,6 +144,12 @@ impl PjrtEngine {
 pub struct CompiledModel {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for CompiledModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledModel").finish_non_exhaustive()
+    }
 }
 
 impl CompiledModel {

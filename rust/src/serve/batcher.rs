@@ -115,6 +115,12 @@ pub struct DynamicBatcher<T> {
     oldest: Option<Instant>,
 }
 
+impl<T> std::fmt::Debug for DynamicBatcher<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DynamicBatcher").finish_non_exhaustive()
+    }
+}
+
 impl<T> DynamicBatcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         DynamicBatcher {

@@ -30,6 +30,12 @@ pub struct RadixTree<V> {
     len: usize,
 }
 
+impl<V> std::fmt::Debug for RadixTree<V> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RadixTree").finish_non_exhaustive()
+    }
+}
+
 struct Node<V> {
     /// Compressed edge label leading INTO this node.
     label: Vec<u8>,
@@ -173,6 +179,12 @@ pub struct ContextCache {
     pub hits: u64,
     pub misses: u64,
     key_buf: Vec<u8>,
+}
+
+impl std::fmt::Debug for ContextCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ContextCache").finish_non_exhaustive()
+    }
 }
 
 impl ContextCache {

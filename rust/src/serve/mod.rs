@@ -122,6 +122,12 @@ pub struct ModelHandle {
     version: Arc<AtomicU64>,
 }
 
+impl std::fmt::Debug for ModelHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelHandle").finish_non_exhaustive()
+    }
+}
+
 impl ModelHandle {
     pub fn new(reg: Regressor) -> Self {
         Self::at_version(reg, 1)
@@ -140,22 +146,38 @@ impl ModelHandle {
     }
 
     /// Current model snapshot.
+    ///
+    /// Lock-poison recovery: the slot is written in one assignment
+    /// under the write guard (never left half-updated), so a poisoned
+    /// lock's `(version, Arc)` pair is still coherent — serve from it
+    /// rather than cascading one panicked thread into a fleet-wide
+    /// serving outage.
     pub fn load(&self) -> Arc<Regressor> {
-        self.inner.read().expect("model lock poisoned").1.clone()
+        self.inner
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .1
+            .clone()
     }
 
     /// Current (version, model) pair, read atomically with respect to
     /// [`swap`](Self::swap).
     pub fn load_versioned(&self) -> (u64, Arc<Regressor>) {
-        let slot = self.inner.read().expect("model lock poisoned");
+        // poison recovery: see `load`
+        let slot = self.inner.read().unwrap_or_else(|e| e.into_inner());
         (slot.0, slot.1.clone())
     }
 
     /// Swap in a new model (returns the new version).
     pub fn swap(&self, reg: Regressor) -> u64 {
-        let mut slot = self.inner.write().expect("model lock poisoned");
+        // poison recovery: see `load`
+        let mut slot = self.inner.write().unwrap_or_else(|e| e.into_inner());
         slot.0 += 1;
         slot.1 = Arc::new(reg);
+        // ordering: Release publishes the bumped version only after the
+        // slot assignment above is complete, pairing with the Acquire
+        // in `version()` so a lock-free reader that observes version N
+        // can never then read pre-N state through the lock.
         self.version.store(slot.0, Ordering::Release);
         slot.0
     }
@@ -164,6 +186,10 @@ impl ModelHandle {
     /// [`swap`](Self::swap) by an instant — key caches via
     /// [`load_versioned`](Self::load_versioned) instead.
     pub fn version(&self) -> u64 {
+        // ordering: Acquire pairs with the Release store in `swap` —
+        // observing version N here happens-after the swap that
+        // published it, so version-keyed cache invalidation is never
+        // ahead of the model it keys.
         self.version.load(Ordering::Acquire)
     }
 }

@@ -77,6 +77,12 @@ pub struct BoundedQueue<T> {
     capacity: usize,
 }
 
+impl<T> std::fmt::Debug for BoundedQueue<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BoundedQueue").finish_non_exhaustive()
+    }
+}
+
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
         BoundedQueue {
@@ -86,9 +92,18 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Recover the queue state even if a holder panicked mid-section:
+    /// every critical section here leaves the VecDeque structurally
+    /// valid (push/pop are atomic w.r.t. the guard), so a poisoned
+    /// lock's data is still consistent and serving must not deadlock
+    /// the whole worker pool over one panicked thread.
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueInner<T>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Current queue depth (gauge; racy by nature).
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("queue lock").items.len()
+        self.lock().items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -97,7 +112,7 @@ impl<T> BoundedQueue<T> {
 
     /// Admission-controlled, non-blocking push.
     pub fn push(&self, item: T, policy: ShedPolicy) -> Push<T> {
-        let mut q = self.inner.lock().expect("queue lock");
+        let mut q = self.lock();
         if q.closed {
             return Push::Closed(item);
         }
@@ -110,11 +125,18 @@ impl<T> BoundedQueue<T> {
         match policy {
             ShedPolicy::RejectNew => Push::Rejected(item),
             ShedPolicy::DropOldest => {
-                let evicted = q.items.pop_front().expect("full queue has a front");
-                q.items.push_back(item);
-                drop(q);
-                self.readable.notify_one();
-                Push::AdmittedDroppingOldest(evicted)
+                // len == capacity >= 1 here, so a front always exists;
+                // degrade to reject rather than panic a worker if the
+                // invariant ever breaks
+                match q.items.pop_front() {
+                    Some(evicted) => {
+                        q.items.push_back(item);
+                        drop(q);
+                        self.readable.notify_one();
+                        Push::AdmittedDroppingOldest(evicted)
+                    }
+                    None => Push::Rejected(item),
+                }
             }
         }
     }
@@ -122,7 +144,7 @@ impl<T> BoundedQueue<T> {
     /// Pop, waiting up to `timeout` for an item.  Returns
     /// [`Pop::Closed`] only once the queue is both closed and drained.
     pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
-        let mut q = self.inner.lock().expect("queue lock");
+        let mut q = self.lock();
         loop {
             if let Some(item) = q.items.pop_front() {
                 return Pop::Item(item);
@@ -130,10 +152,11 @@ impl<T> BoundedQueue<T> {
             if q.closed {
                 return Pop::Closed;
             }
-            let (guard, res) = self
-                .readable
-                .wait_timeout(q, timeout)
-                .expect("queue lock");
+            // same poison-recovery rationale as `lock`
+            let (guard, res) = match self.readable.wait_timeout(q, timeout) {
+                Ok(pair) => pair,
+                Err(poisoned) => poisoned.into_inner(),
+            };
             q = guard;
             if res.timed_out() {
                 return match q.items.pop_front() {
@@ -147,19 +170,19 @@ impl<T> BoundedQueue<T> {
 
     /// Non-blocking pop (shutdown drain).
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().expect("queue lock").items.pop_front()
+        self.lock().items.pop_front()
     }
 
     /// Close the queue: further pushes bounce with [`Push::Closed`],
     /// every waiting consumer wakes immediately, and pops drain the
     /// remaining items before reporting [`Pop::Closed`].
     pub fn close(&self) {
-        self.inner.lock().expect("queue lock").closed = true;
+        self.lock().closed = true;
         self.readable.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().expect("queue lock").closed
+        self.lock().closed
     }
 }
 
@@ -270,6 +293,12 @@ pub struct OverloadController {
     level: DegradeLevel,
     /// Total transitions (both directions) since construction.
     pub transitions: u64,
+}
+
+impl std::fmt::Debug for OverloadController {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OverloadController").finish_non_exhaustive()
+    }
 }
 
 impl OverloadController {

@@ -20,6 +20,12 @@ pub struct Router {
     pub shards: usize,
 }
 
+impl std::fmt::Debug for Router {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Router").finish_non_exhaustive()
+    }
+}
+
 impl Router {
     pub fn new(shards: usize) -> Self {
         Router {
@@ -39,26 +45,44 @@ impl Router {
     }
 
     /// Register (or replace) a model under `name`.
+    ///
+    /// Registry mutations are single HashMap inserts/removes under the
+    /// guard, so a poisoned lock still holds a structurally valid map;
+    /// recover it rather than taking down every serving thread that
+    /// touches the registry after one panicked writer.
     pub fn register(&self, name: &str, handle: ModelHandle) {
         self.models
             .write()
-            .expect("router lock")
+            .unwrap_or_else(|e| e.into_inner())
             .insert(name.to_string(), handle);
     }
 
     /// Remove a model; returns whether it existed.
     pub fn deregister(&self, name: &str) -> bool {
-        self.models.write().expect("router lock").remove(name).is_some()
+        self.models
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(name)
+            .is_some()
     }
 
     /// Look up a model handle.
     pub fn resolve(&self, name: &str) -> Option<ModelHandle> {
-        self.models.read().expect("router lock").get(name).cloned()
+        self.models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+            .cloned()
     }
 
     pub fn model_names(&self) -> Vec<String> {
-        let mut v: Vec<String> =
-            self.models.read().expect("router lock").keys().cloned().collect();
+        let mut v: Vec<String> = self
+            .models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .cloned()
+            .collect();
         v.sort();
         v
     }

@@ -262,6 +262,12 @@ pub struct ServeClient {
     tracer: Option<RequestTracer>,
 }
 
+impl std::fmt::Debug for ServeClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeClient").finish_non_exhaustive()
+    }
+}
+
 impl ServeClient {
     /// Submit a request; returns the reply channel.
     ///
@@ -274,6 +280,10 @@ impl ServeClient {
         &self,
         req: Request,
     ) -> Result<Receiver<Result<Response, ServeError>>, ServeError> {
+        // ordering: Acquire pairs with the Release store in `shutdown`
+        // — a submitter that observes the stop flag also observes the
+        // queue closes that preceded it, so it fails fast instead of
+        // pushing into a queue no worker will ever drain.
         if self.stop.load(Ordering::Acquire) {
             return Err(ServeError::ShutDown);
         }
@@ -337,6 +347,12 @@ pub struct ServingEngine {
     registry: Arc<ObsRegistry>,
 }
 
+impl std::fmt::Debug for ServingEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServingEngine").finish_non_exhaustive()
+    }
+}
+
 impl ServingEngine {
     /// Spawn `cfg.workers` scoring threads.
     ///
@@ -383,7 +399,11 @@ impl ServingEngine {
             let handle = std::thread::Builder::new()
                 .name(format!("fw-serve-{w}"))
                 .spawn(move || worker_loop(q2, router, cfg, sh2, epoch, eobs2, wobs))
-                .expect("spawn worker");
+                .unwrap_or_else(|e| {
+                    // an engine with fewer workers than queues would
+                    // strand shards; refuse to start half-built
+                    panic!("cannot spawn serving worker {w}: {e}")
+                });
             queues.push(queue);
             workers.push(handle);
             shared.push(sh);
@@ -435,6 +455,10 @@ impl ServingEngine {
     /// submit that follows this call sees the new epoch (queue push /
     /// pop orders the Release bump before the Acquire load).
     pub fn invalidate_caches(&self) {
+        // ordering: Release pairs with the Acquire load in
+        // `sync_cache_epoch` — a worker that observes the new epoch
+        // also observes the swap that preceded it, so the clear always
+        // reclaims the stale entries it was issued for.
         self.cache_epoch.fetch_add(1, Ordering::Release);
     }
 
@@ -455,10 +479,14 @@ impl ServingEngine {
         // Acquire ALL worker guards first — one cut across the engine.
         // Workers only ever lock their own mutex (no nesting), so grab
         // order cannot deadlock.
+        // Poison recovery: worker stats are plain counters updated
+        // under the guard; a panicked worker leaves them merely
+        // truncated, not torn, and the engine's final stats call (from
+        // `shutdown`) must still report what the healthy workers did.
         let guards: Vec<_> = self
             .shared
             .iter()
-            .map(|sh| sh.lock().expect("stats lock"))
+            .map(|sh| sh.lock().unwrap_or_else(|e| e.into_inner()))
             .collect();
         let mut out = ServeStats { latency: Some(LatencyHistogram::new()), ..Default::default() };
         // Gauges and shed counters read while every worker is paused.
@@ -490,9 +518,10 @@ impl ServingEngine {
     /// Per-worker statistics snapshots, indexed by worker/shard id
     /// (affinity observability: which worker served which context).
     pub fn worker_stats(&self) -> Vec<ServeStats> {
+        // poison recovery: see `stats`
         self.shared
             .iter()
-            .map(|sh| sh.lock().expect("stats lock").stats.clone())
+            .map(|sh| sh.lock().unwrap_or_else(|e| e.into_inner()).stats.clone())
             .collect()
     }
 
@@ -510,6 +539,9 @@ impl ServingEngine {
     /// hold the engine open — their submits bounce off the closed
     /// queues with [`ServeError::ShutDown`].
     pub fn shutdown(mut self) -> ServeStats {
+        // ordering: Release pairs with the Acquire in `submit` (see
+        // there); the queue closes below are ordered before the flag
+        // for threads that synchronize through it.
         self.client.stop.store(true, Ordering::Release);
         for q in &self.client.queues {
             q.close();
@@ -523,6 +555,8 @@ impl ServingEngine {
 
 /// Clear the worker's cache when the engine's epoch moved (model swap).
 fn sync_cache_epoch(epoch: &AtomicU64, seen: &mut u64, cache: &mut ContextCache) {
+    // ordering: Acquire pairs with the Release fetch_add in
+    // `invalidate_caches` (see there).
     let e = epoch.load(Ordering::Acquire);
     if e != *seen {
         *seen = e;
@@ -542,6 +576,8 @@ fn worker_loop(
     let mut batcher: DynamicBatcher<JobTag> =
         DynamicBatcher::new(cfg.max_batch, Duration::from_micros(cfg.max_wait_us));
     let mut cache = ContextCache::new(cfg.context_cache_entries);
+    // ordering: Acquire seeds the worker's epoch view; pairs with the
+    // Release in `invalidate_caches` like `sync_cache_epoch`.
     let mut seen_epoch = epoch.load(Ordering::Acquire);
     let mut ws = Workspace::new();
     let mut ctl = OverloadController::from_slo_us(cfg.request_slo_us);
@@ -669,6 +705,12 @@ pub struct StageProbe<'a> {
     pub kernel: &'a HistogramShard,
     /// (cache_ns, kernel_ns) of the most recently scored group.
     pub last: std::cell::Cell<(u64, u64)>,
+}
+
+impl std::fmt::Debug for StageProbe<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StageProbe").finish_non_exhaustive()
+    }
 }
 
 /// The group-scoring core behind [`score_requests_coalesced_with`]:
@@ -811,7 +853,13 @@ pub fn score_requests_coalesced(
     );
     let results = results
         .into_iter()
-        .map(|r| r.expect("every request planned into a group"))
+        .map(|r| {
+            // the planner emits every index exactly once; degrade an
+            // unplanned slot to a scoring error rather than panicking
+            r.unwrap_or_else(|| {
+                Err(ServeError::Scoring("request not planned into any group".into()))
+            })
+        })
         .collect();
     (results, plan)
 }
@@ -893,13 +941,13 @@ fn score_batch(
         let now = Instant::now();
         for g in &mut groups {
             g.members.retain(|&i| {
-                let keep = tags[i]
-                    .as_ref()
-                    .expect("deadline pass runs before scoring")
-                    .deadline
-                    .map_or(true, |d| d > now);
+                // A missing tag means the request was already answered
+                // — structurally impossible before scoring, but drop it
+                // from the group instead of panicking a worker.
+                let Some(tag) = tags[i].as_ref() else { return false };
+                let keep = tag.deadline.map_or(true, |d| d > now);
                 if !keep {
-                    let t = tags[i].take().expect("taken once");
+                    let Some(t) = tags[i].take() else { return false };
                     let waited = t.clock.submitted.elapsed();
                     let waited_ns = waited.as_nanos().min(u64::MAX as u128) as u64;
                     ctl.observe_ns(waited_ns);
@@ -972,7 +1020,9 @@ fn score_batch(
                     0
                 }
             };
-            let mut t = tags[i].take().expect("planner emits each request once");
+            // the planner emits each request exactly once; a missing
+            // tag (already answered) has nobody waiting — skip it
+            let Some(mut t) = tags[i].take() else { return };
             let total_ns = t.clock.finish_at(Instant::now());
             hist.record_ns(total_ns);
             ctl.observe_ns(total_ns);
@@ -1039,7 +1089,8 @@ fn score_batch(
     eobs.errors.add(errors);
     eobs.expired.add(expired);
 
-    let mut sh = shared.lock().expect("stats lock");
+    // poison recovery: see `ServingEngine::stats`
+    let mut sh = shared.lock().unwrap_or_else(|e| e.into_inner());
     sh.stats.requests += reqs.len() as u64;
     sh.stats.candidates += candidates;
     sh.stats.batches += 1;

@@ -25,6 +25,12 @@ pub struct TraceGenerator {
     pub ctx_universe: u64,
 }
 
+impl std::fmt::Debug for TraceGenerator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceGenerator").finish_non_exhaustive()
+    }
+}
+
 impl TraceGenerator {
     /// `buckets` must match the served model's bucket count.
     pub fn new(seed: u64, fields: usize, ctx_fields: usize, buckets: u32, fanout: usize) -> Self {

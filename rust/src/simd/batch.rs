@@ -61,6 +61,9 @@ pub fn matmul_rowmajor(
         #[cfg(target_arch = "x86_64")]
         IsaLevel::Avx2Fma => {
             if cols >= 8 {
+                // SAFETY: `isa_level` returns Avx2Fma only after
+                // runtime CPUID confirmed avx2+fma; the shape contract
+                // the kernel indexes by is asserted above.
                 unsafe { matmul_avx2(x, batch, w, rows, cols, bias, out) }
             } else {
                 matmul_scalar(x, batch, w, rows, cols, bias, out)
@@ -126,6 +129,9 @@ pub fn matmul_transposed(
         #[cfg(target_arch = "x86_64")]
         IsaLevel::Avx2Fma => {
             if cols >= 8 {
+                // SAFETY: `isa_level` returns Avx2Fma only after
+                // runtime CPUID confirmed avx2+fma; the shape contract
+                // the kernel indexes by is asserted above.
                 unsafe { matmul_transposed_avx2(dy, batch, w, rows, cols, out) }
             } else {
                 matmul_transposed_scalar(dy, batch, w, rows, cols, out)
@@ -186,6 +192,9 @@ pub fn matmul_xt_dy(
         #[cfg(target_arch = "x86_64")]
         IsaLevel::Avx2Fma => {
             if cols >= 8 {
+                // SAFETY: `isa_level` returns Avx2Fma only after
+                // runtime CPUID confirmed avx2+fma; the shape contract
+                // the kernel indexes by is asserted above.
                 unsafe { matmul_xt_dy_avx2(x, batch, dy, rows, cols, dw) }
             } else {
                 matmul_xt_dy_scalar(x, batch, dy, rows, cols, dw)
@@ -226,6 +235,9 @@ pub fn rowwise_sum(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
         #[cfg(target_arch = "x86_64")]
         IsaLevel::Avx2Fma => {
             if cols >= 8 {
+                // SAFETY: `isa_level` returns Avx2Fma only after
+                // runtime CPUID confirmed avx2+fma; the shape contract
+                // the kernel indexes by is asserted above.
                 unsafe { rowwise_sum_avx2(m, cols, out) }
             } else {
                 rowwise_sum_scalar(m, cols, out)
@@ -247,6 +259,9 @@ pub fn rowwise_sumsq(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
         #[cfg(target_arch = "x86_64")]
         IsaLevel::Avx2Fma => {
             if cols >= 8 {
+                // SAFETY: `isa_level` returns Avx2Fma only after
+                // runtime CPUID confirmed avx2+fma; the shape contract
+                // the kernel indexes by is asserted above.
                 unsafe { rowwise_sumsq_avx2(m, cols, out) }
             } else {
                 rowwise_sumsq_scalar(m, cols, out)
@@ -279,6 +294,11 @@ fn rowwise_sumsq_scalar(m: &[f32], cols: usize, out: &mut [f32]) {
 
 // ------------------------------------------------------------------ avx2
 
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma (runtime-detected) and
+/// the [`matmul_rowmajor`] shape contract: `x.len() == batch * rows`,
+/// `w.len() == rows * cols`, `out.len() == batch * cols`, and
+/// `bias.len() == cols` when given.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn matmul_avx2(
@@ -292,11 +312,14 @@ unsafe fn matmul_avx2(
 ) {
     let mut b = 0usize;
     while b + 4 <= batch {
-        mm_rows::<4>(x, b, w, rows, cols, bias, out);
+        // SAFETY: b + 4 <= batch keeps rows b..b+4 inside the caller's
+        // shape contract, which is forwarded verbatim.
+        unsafe { mm_rows::<4>(x, b, w, rows, cols, bias, out) };
         b += 4;
     }
     while b < batch {
-        mm_rows::<1>(x, b, w, rows, cols, bias, out);
+        // SAFETY: b < batch — same contract, one row.
+        unsafe { mm_rows::<1>(x, b, w, rows, cols, bias, out) };
         b += 1;
     }
 }
@@ -304,6 +327,10 @@ unsafe fn matmul_avx2(
 /// `R` batch rows through all column tiles.  Per-element accumulation
 /// order is independent of `R` (bias load, then one FMA per input row
 /// in order) — the bit-identity contract of the module.
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma, the [`matmul_avx2`]
+/// shape contract, and `b + R <= batch`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 #[inline]
@@ -321,7 +348,9 @@ unsafe fn mm_rows<const R: usize>(
     let wp = w.as_ptr();
     let mut xp = [std::ptr::null::<f32>(); R];
     for (r, p) in xp.iter_mut().enumerate() {
-        *p = x.as_ptr().add((b + r) * rows);
+        // SAFETY: b + R <= batch and x.len() == batch * rows keep each
+        // row pointer (read through offsets 0..rows below) in bounds.
+        *p = unsafe { x.as_ptr().add((b + r) * rows) };
     }
     let mut j = 0usize;
     // 16-wide column tiles: 2 weight loads serve R candidates (2R FMAs)
@@ -329,45 +358,68 @@ unsafe fn mm_rows<const R: usize>(
         let mut acc0 = [_mm256_setzero_ps(); R];
         let mut acc1 = [_mm256_setzero_ps(); R];
         if let Some(bv) = bias {
-            let b0 = _mm256_loadu_ps(bv.as_ptr().add(j));
-            let b1 = _mm256_loadu_ps(bv.as_ptr().add(j + 8));
-            for r in 0..R {
-                acc0[r] = b0;
-                acc1[r] = b1;
+            // SAFETY: j + 16 <= cols == bv.len() bounds both loads.
+            unsafe {
+                let b0 = _mm256_loadu_ps(bv.as_ptr().add(j));
+                let b1 = _mm256_loadu_ps(bv.as_ptr().add(j + 8));
+                for r in 0..R {
+                    acc0[r] = b0;
+                    acc1[r] = b1;
+                }
             }
         }
         for i in 0..rows {
-            let w0 = _mm256_loadu_ps(wp.add(i * cols + j));
-            let w1 = _mm256_loadu_ps(wp.add(i * cols + j + 8));
-            for r in 0..R {
-                let vx = _mm256_set1_ps(*xp[r].add(i));
-                acc0[r] = _mm256_fmadd_ps(vx, w0, acc0[r]);
-                acc1[r] = _mm256_fmadd_ps(vx, w1, acc1[r]);
+            // SAFETY: i < rows and j + 16 <= cols keep the two weight
+            // strips inside w (rows * cols); xp[r] reads offset
+            // i < rows of an in-bounds input row.
+            unsafe {
+                let w0 = _mm256_loadu_ps(wp.add(i * cols + j));
+                let w1 = _mm256_loadu_ps(wp.add(i * cols + j + 8));
+                for r in 0..R {
+                    let vx = _mm256_set1_ps(*xp[r].add(i));
+                    acc0[r] = _mm256_fmadd_ps(vx, w0, acc0[r]);
+                    acc1[r] = _mm256_fmadd_ps(vx, w1, acc1[r]);
+                }
             }
         }
         for r in 0..R {
-            _mm256_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j), acc0[r]);
-            _mm256_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j + 8), acc1[r]);
+            // SAFETY: b + r < batch and j + 16 <= cols keep both
+            // stores inside out (batch * cols).
+            unsafe {
+                _mm256_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j), acc0[r]);
+                _mm256_storeu_ps(
+                    out.as_mut_ptr().add((b + r) * cols + j + 8),
+                    acc1[r],
+                );
+            }
         }
         j += 16;
     }
     while j + 8 <= cols {
         let mut acc = [_mm256_setzero_ps(); R];
         if let Some(bv) = bias {
-            let b0 = _mm256_loadu_ps(bv.as_ptr().add(j));
+            // SAFETY: j + 8 <= cols == bv.len() bounds the load.
+            let b0 = unsafe { _mm256_loadu_ps(bv.as_ptr().add(j)) };
             for a in acc.iter_mut() {
                 *a = b0;
             }
         }
         for i in 0..rows {
-            let w0 = _mm256_loadu_ps(wp.add(i * cols + j));
-            for r in 0..R {
-                let vx = _mm256_set1_ps(*xp[r].add(i));
-                acc[r] = _mm256_fmadd_ps(vx, w0, acc[r]);
+            // SAFETY: i < rows, j + 8 <= cols — weight strip and input
+            // element in bounds as in the 16-wide tile above.
+            unsafe {
+                let w0 = _mm256_loadu_ps(wp.add(i * cols + j));
+                for r in 0..R {
+                    let vx = _mm256_set1_ps(*xp[r].add(i));
+                    acc[r] = _mm256_fmadd_ps(vx, w0, acc[r]);
+                }
             }
         }
         for r in 0..R {
-            _mm256_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j), acc[r]);
+            // SAFETY: b + r < batch, j + 8 <= cols — store in bounds.
+            unsafe {
+                _mm256_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j), acc[r]);
+            }
         }
         j += 8;
     }
@@ -378,7 +430,9 @@ unsafe fn mm_rows<const R: usize>(
                 None => 0.0,
             };
             for i in 0..rows {
-                s += *xp[r].add(i) * *wp.add(i * cols + j);
+                // SAFETY: i < rows, j < cols — scalar tail reads of an
+                // input element and a weight element, both in bounds.
+                s += unsafe { *xp[r].add(i) * *wp.add(i * cols + j) };
             }
             out[(b + r) * cols + j] = s;
         }
@@ -386,6 +440,10 @@ unsafe fn mm_rows<const R: usize>(
     }
 }
 
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma (runtime-detected) and
+/// the [`matmul_transposed`] shape contract: `dy.len() == batch * cols`,
+/// `w.len() == rows * cols`, `out.len() == batch * rows`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn matmul_transposed_avx2(
@@ -398,11 +456,14 @@ unsafe fn matmul_transposed_avx2(
 ) {
     let mut b = 0usize;
     while b + 4 <= batch {
-        mm_t_rows::<4>(dy, b, w, rows, cols, out);
+        // SAFETY: b + 4 <= batch keeps rows b..b+4 inside the caller's
+        // shape contract, which is forwarded verbatim.
+        unsafe { mm_t_rows::<4>(dy, b, w, rows, cols, out) };
         b += 4;
     }
     while b < batch {
-        mm_t_rows::<1>(dy, b, w, rows, cols, out);
+        // SAFETY: b < batch — same contract, one row.
+        unsafe { mm_t_rows::<1>(dy, b, w, rows, cols, out) };
         b += 1;
     }
 }
@@ -411,6 +472,10 @@ unsafe fn matmul_transposed_avx2(
 /// (vector FMAs over the 8-wide column tiles in order, one horizontal
 /// reduction, then the scalar column remainder) is independent of `R` —
 /// the bit-identity contract of the module.
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma, the
+/// [`matmul_transposed_avx2`] shape contract, and `b + R <= batch`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 #[inline]
@@ -427,29 +492,43 @@ unsafe fn mm_t_rows<const R: usize>(
     let wp = w.as_ptr();
     let mut gp = [std::ptr::null::<f32>(); R];
     for (r, p) in gp.iter_mut().enumerate() {
-        *p = dy.as_ptr().add((b + r) * cols);
+        // SAFETY: b + R <= batch and dy.len() == batch * cols keep
+        // each gradient-row pointer (read through offsets 0..cols
+        // below) in bounds.
+        *p = unsafe { dy.as_ptr().add((b + r) * cols) };
     }
     for i in 0..rows {
-        let wrow = wp.add(i * cols);
+        // SAFETY: i < rows and w.len() == rows * cols keep row i (read
+        // through offsets 0..cols below) in bounds.
+        let wrow = unsafe { wp.add(i * cols) };
         let mut acc = [_mm256_setzero_ps(); R];
         let mut j = 0usize;
         // one weight-row load serves R gradient rows (R FMAs)
         while j + 8 <= cols {
-            let wv = _mm256_loadu_ps(wrow.add(j));
-            for r in 0..R {
-                let gv = _mm256_loadu_ps(gp[r].add(j));
-                acc[r] = _mm256_fmadd_ps(gv, wv, acc[r]);
+            // SAFETY: j + 8 <= cols bounds the weight-row load and
+            // each gradient-row load.
+            unsafe {
+                let wv = _mm256_loadu_ps(wrow.add(j));
+                for r in 0..R {
+                    let gv = _mm256_loadu_ps(gp[r].add(j));
+                    acc[r] = _mm256_fmadd_ps(gv, wv, acc[r]);
+                }
             }
             j += 8;
         }
         let mut s = [0f32; R];
         for r in 0..R {
-            s[r] = hsum8(acc[r]);
+            // SAFETY: avx2 is enabled per this fn's contract (hsum8 is
+            // value-only).
+            s[r] = unsafe { hsum8(acc[r]) };
         }
         while j < cols {
-            let wj = *wrow.add(j);
-            for r in 0..R {
-                s[r] += *gp[r].add(j) * wj;
+            // SAFETY: j < cols — scalar tail reads, in bounds.
+            unsafe {
+                let wj = *wrow.add(j);
+                for r in 0..R {
+                    s[r] += *gp[r].add(j) * wj;
+                }
             }
             j += 1;
         }
@@ -459,6 +538,10 @@ unsafe fn mm_t_rows<const R: usize>(
     }
 }
 
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma (runtime-detected) and
+/// the [`matmul_xt_dy`] shape contract: `x.len() == batch * rows`,
+/// `dy.len() == batch * cols`, `dw.len() == rows * cols`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 #[allow(clippy::needless_range_loop)]
@@ -483,17 +566,31 @@ unsafe fn matmul_xt_dy_avx2(
         while j + 8 <= cols {
             let mut acc = [_mm256_setzero_ps(); 4];
             for r in 0..ri {
-                acc[r] = _mm256_loadu_ps(dw.as_ptr().add((i + r) * cols + j));
+                // SAFETY: i + r < rows and j + 8 <= cols bound the
+                // 8-lane load inside dw (rows * cols).
+                acc[r] = unsafe {
+                    _mm256_loadu_ps(dw.as_ptr().add((i + r) * cols + j))
+                };
             }
             for b in 0..batch {
-                let gv = _mm256_loadu_ps(dyp.add(b * cols + j));
-                for r in 0..ri {
-                    let vx = _mm256_set1_ps(*xp.add(b * rows + i + r));
-                    acc[r] = _mm256_fmadd_ps(vx, gv, acc[r]);
+                // SAFETY: b < batch and j + 8 <= cols bound the dy
+                // load; b < batch and i + r < rows bound the x deref.
+                unsafe {
+                    let gv = _mm256_loadu_ps(dyp.add(b * cols + j));
+                    for r in 0..ri {
+                        let vx = _mm256_set1_ps(*xp.add(b * rows + i + r));
+                        acc[r] = _mm256_fmadd_ps(vx, gv, acc[r]);
+                    }
                 }
             }
             for r in 0..ri {
-                _mm256_storeu_ps(dw.as_mut_ptr().add((i + r) * cols + j), acc[r]);
+                // SAFETY: same bounds as the matching load above.
+                unsafe {
+                    _mm256_storeu_ps(
+                        dw.as_mut_ptr().add((i + r) * cols + j),
+                        acc[r],
+                    );
+                }
             }
             j += 8;
         }
@@ -501,7 +598,11 @@ unsafe fn matmul_xt_dy_avx2(
             for r in 0..ri {
                 let mut s = dw[(i + r) * cols + j];
                 for b in 0..batch {
-                    s += *xp.add(b * rows + i + r) * *dyp.add(b * cols + j);
+                    // SAFETY: b < batch, i + r < rows, j < cols —
+                    // scalar-tail reads inside x and dy.
+                    s += unsafe {
+                        *xp.add(b * rows + i + r) * *dyp.add(b * cols + j)
+                    };
                 }
                 dw[(i + r) * cols + j] = s;
             }
@@ -511,6 +612,9 @@ unsafe fn matmul_xt_dy_avx2(
     }
 }
 
+/// # Safety
+/// Caller must ensure the CPU supports avx2 — the body is value-only
+/// intrinsics (no memory access).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 #[inline]
@@ -523,6 +627,9 @@ unsafe fn hsum8(v: std::arch::x86_64::__m256) -> f32 {
     _mm_cvtss_f32(_mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2)))
 }
 
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma (runtime-detected);
+/// slice bounds are enforced by `chunks_exact` below.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn rowwise_sum_avx2(m: &[f32], cols: usize, out: &mut [f32]) {
@@ -532,10 +639,13 @@ unsafe fn rowwise_sum_avx2(m: &[f32], cols: usize, out: &mut [f32]) {
         let mut acc = _mm256_setzero_ps();
         let mut i = 0usize;
         while i + 8 <= cols {
-            acc = _mm256_add_ps(acc, _mm256_loadu_ps(p.add(i)));
+            // SAFETY: i + 8 <= cols == row.len() bounds the 8-lane
+            // unaligned load.
+            acc = _mm256_add_ps(acc, unsafe { _mm256_loadu_ps(p.add(i)) });
             i += 8;
         }
-        let mut s = hsum8(acc);
+        // SAFETY: avx2 is enabled per this fn's contract.
+        let mut s = unsafe { hsum8(acc) };
         while i < cols {
             s += row[i];
             i += 1;
@@ -544,6 +654,9 @@ unsafe fn rowwise_sum_avx2(m: &[f32], cols: usize, out: &mut [f32]) {
     }
 }
 
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma (runtime-detected);
+/// slice bounds are enforced by `chunks_exact` below.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn rowwise_sumsq_avx2(m: &[f32], cols: usize, out: &mut [f32]) {
@@ -553,11 +666,14 @@ unsafe fn rowwise_sumsq_avx2(m: &[f32], cols: usize, out: &mut [f32]) {
         let mut acc = _mm256_setzero_ps();
         let mut i = 0usize;
         while i + 8 <= cols {
-            let v = _mm256_loadu_ps(p.add(i));
+            // SAFETY: i + 8 <= cols == row.len() bounds the 8-lane
+            // unaligned load.
+            let v = unsafe { _mm256_loadu_ps(p.add(i)) };
             acc = _mm256_fmadd_ps(v, v, acc);
             i += 8;
         }
-        let mut s = hsum8(acc);
+        // SAFETY: avx2 is enabled per this fn's contract.
+        let mut s = unsafe { hsum8(acc) };
         while i < cols {
             s += row[i] * row[i];
             i += 1;
@@ -636,6 +752,8 @@ mod tests {
                 bias: Option<&[f32]>,
                 out: &mut [f32],
             ) {
+                // SAFETY: the feature-detect guard above confirmed
+                // avx2+fma; the test passes shape-consistent slices.
                 unsafe { matmul_avx2(x, batch, w, rows, cols, bias, out) }
             }
             impls.push(("avx2", avx2));
@@ -743,6 +861,8 @@ mod tests {
                 cols: usize,
                 out: &mut [f32],
             ) {
+                // SAFETY: the feature-detect guard above confirmed
+                // avx2+fma; the test passes shape-consistent slices.
                 unsafe { matmul_transposed_avx2(dy, batch, w, rows, cols, out) }
             }
             impls.push(("avx2", avx2));
@@ -824,6 +944,8 @@ mod tests {
                 cols: usize,
                 dw: &mut [f32],
             ) {
+                // SAFETY: the feature-detect guard above confirmed
+                // avx2+fma; the test passes shape-consistent slices.
                 unsafe { matmul_xt_dy_avx2(x, batch, dy, rows, cols, dw) }
             }
             impls.push(("avx2", avx2));
@@ -891,6 +1013,8 @@ mod tests {
             && std::arch::is_x86_feature_detected!("fma")
         {
             fn avx2(m: &[f32], cols: usize, out: &mut [f32]) {
+                // SAFETY: the feature-detect guard above confirmed
+                // avx2+fma; the test passes shape-consistent slices.
                 unsafe { rowwise_sumsq_avx2(m, cols, out) }
             }
             impls.push(("avx2", avx2));

@@ -24,6 +24,9 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     match isa_level() {
         IsaLevel::Scalar => dot_scalar(a, b),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `isa_level` returns Avx2Fma only after runtime CPUID
+        // confirmed avx2+fma; equal lengths are the kernel's contract,
+        // asserted above.
         IsaLevel::Avx2Fma => unsafe { dot_avx2(a, b) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => dot_scalar(a, b),
@@ -40,6 +43,9 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     match isa_level() {
         IsaLevel::Scalar => axpy_scalar(alpha, x, y),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `isa_level` returns Avx2Fma only after runtime CPUID
+        // confirmed avx2+fma; equal lengths are the kernel's contract,
+        // asserted above.
         IsaLevel::Avx2Fma => unsafe { axpy_avx2(alpha, x, y) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => axpy_scalar(alpha, x, y),
@@ -59,6 +65,9 @@ pub fn matvec_rowmajor(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f3
     debug_assert_eq!(w.len(), x.len() * cols);
     #[cfg(target_arch = "x86_64")]
     if cols >= 8 && isa_level() == IsaLevel::Avx2Fma {
+        // SAFETY: `isa_level` returns Avx2Fma only after runtime CPUID
+        // confirmed avx2+fma; the `w.len() == x.len() * cols` shape the
+        // kernel indexes by is asserted above.
         unsafe { matvec_avx2(x, w, bias, out) };
         return;
     }
@@ -98,6 +107,9 @@ pub fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
 
 // ------------------------------------------------------------------ avx2
 
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma (runtime-detected) and
+/// `a.len() == b.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
@@ -108,18 +120,25 @@ unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
     let mut i = 0;
     // two accumulators hide FMA latency
     while i + 16 <= n {
-        let va0 = _mm256_loadu_ps(a.as_ptr().add(i));
-        let vb0 = _mm256_loadu_ps(b.as_ptr().add(i));
-        acc0 = _mm256_fmadd_ps(va0, vb0, acc0);
-        let va1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
-        let vb1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
-        acc1 = _mm256_fmadd_ps(va1, vb1, acc1);
+        // SAFETY: i + 16 <= n == a.len() == b.len() bounds all four
+        // 8-lane unaligned loads.
+        unsafe {
+            let va0 = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb0 = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc0 = _mm256_fmadd_ps(va0, vb0, acc0);
+            let va1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
+            let vb1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
+            acc1 = _mm256_fmadd_ps(va1, vb1, acc1);
+        }
         i += 16;
     }
     while i + 8 <= n {
-        let va = _mm256_loadu_ps(a.as_ptr().add(i));
-        let vb = _mm256_loadu_ps(b.as_ptr().add(i));
-        acc0 = _mm256_fmadd_ps(va, vb, acc0);
+        // SAFETY: i + 8 <= n bounds both 8-lane unaligned loads.
+        unsafe {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc0 = _mm256_fmadd_ps(va, vb, acc0);
+        }
         i += 8;
     }
     let acc = _mm256_add_ps(acc0, acc1);
@@ -136,6 +155,9 @@ unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma (runtime-detected) and
+/// `x.len() == y.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
@@ -144,9 +166,13 @@ unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
     let va = _mm256_set1_ps(alpha);
     let mut i = 0;
     while i + 8 <= n {
-        let vx = _mm256_loadu_ps(x.as_ptr().add(i));
-        let vy = _mm256_loadu_ps(y.as_ptr().add(i));
-        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(va, vx, vy));
+        // SAFETY: i + 8 <= n == x.len() == y.len() bounds the loads
+        // and the store.
+        unsafe {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(va, vx, vy));
+        }
         i += 8;
     }
     while i < n {
@@ -158,6 +184,11 @@ unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
 /// Register-blocked AVX2 matvec: for cols ≤ 64 the whole output vector
 /// lives in ymm accumulators across all rows (one load+store of `out`
 /// total); wider outputs fall back to an in-function row/axpy loop.
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx2+fma (runtime-detected),
+/// `w.len() == x.len() * out.len()` (row-major `[rows, cols]`), and
+/// `bias.len() == out.len()` when a bias is given.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn matvec_avx2(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
@@ -169,7 +200,9 @@ unsafe fn matvec_avx2(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32
         let mut acc = [_mm256_setzero_ps(); 8];
         if let Some(b) = bias {
             for (k, a) in acc.iter_mut().enumerate().take(nacc) {
-                *a = _mm256_loadu_ps(b.as_ptr().add(k * 8));
+                // SAFETY: k * 8 + 8 <= cols == b.len() (caller
+                // contract) bounds the load.
+                *a = unsafe { _mm256_loadu_ps(b.as_ptr().add(k * 8)) };
             }
         }
         for (i, &xi) in x.iter().enumerate() {
@@ -177,13 +210,19 @@ unsafe fn matvec_avx2(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32
                 continue;
             }
             let vx = _mm256_set1_ps(xi);
-            let row = w.as_ptr().add(i * cols);
+            // SAFETY: i < x.len() and w.len() == x.len() * cols keep
+            // row i (and its k*8+8 <= cols lanes below) in bounds.
+            let row = unsafe { w.as_ptr().add(i * cols) };
             for (k, a) in acc.iter_mut().enumerate().take(nacc) {
-                *a = _mm256_fmadd_ps(vx, _mm256_loadu_ps(row.add(k * 8)), *a);
+                // SAFETY: see `row` above.
+                *a = unsafe {
+                    _mm256_fmadd_ps(vx, _mm256_loadu_ps(row.add(k * 8)), *a)
+                };
             }
         }
         for (k, a) in acc.iter().enumerate().take(nacc) {
-            _mm256_storeu_ps(out.as_mut_ptr().add(k * 8), *a);
+            // SAFETY: k * 8 + 8 <= cols == out.len() bounds the store.
+            unsafe { _mm256_storeu_ps(out.as_mut_ptr().add(k * 8), *a) };
         }
         return;
     }
@@ -197,17 +236,27 @@ unsafe fn matvec_avx2(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32
         if xi == 0.0 {
             continue;
         }
-        let row = w.as_ptr().add(i * cols);
+        // SAFETY: i < x.len() and w.len() == x.len() * cols keep row i
+        // in bounds through offset cols - 1.
+        let row = unsafe { w.as_ptr().add(i * cols) };
         let vx = _mm256_set1_ps(xi);
         let mut j = 0;
         while j < vec_cols {
-            let vy = _mm256_loadu_ps(out.as_ptr().add(j));
-            let vw = _mm256_loadu_ps(row.add(j));
-            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_fmadd_ps(vx, vw, vy));
+            // SAFETY: j + 8 <= vec_cols <= cols bounds the row/out
+            // loads and the out store.
+            unsafe {
+                let vy = _mm256_loadu_ps(out.as_ptr().add(j));
+                let vw = _mm256_loadu_ps(row.add(j));
+                _mm256_storeu_ps(
+                    out.as_mut_ptr().add(j),
+                    _mm256_fmadd_ps(vx, vw, vy),
+                );
+            }
             j += 8;
         }
         while j < cols {
-            out[j] += xi * *row.add(j);
+            // SAFETY: j < cols bounds the scalar tail read of row i.
+            out[j] += xi * unsafe { *row.add(j) };
             j += 1;
         }
     }

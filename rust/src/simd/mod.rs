@@ -33,22 +33,31 @@ static RESOLVED: AtomicU8 = AtomicU8::new(UNSET);
 /// relaxed atomic load — cheap enough for per-kernel dispatch.
 #[inline]
 pub fn isa_level() -> IsaLevel {
+    // ordering: Relaxed throughout — both cells hold a self-contained
+    // one-byte dispatch decision; no other data is published through
+    // them.  Racing threads may each run the idempotent CPUID probe
+    // once, converging on the same value.
     match FORCED.load(Ordering::Relaxed) {
         0 => return IsaLevel::Scalar,
         1 => return IsaLevel::Avx2Fma,
         _ => {}
     }
+    // ordering: Relaxed — see above.
     let r = RESOLVED.load(Ordering::Relaxed);
     if r != UNSET {
         return if r == 1 { IsaLevel::Avx2Fma } else { IsaLevel::Scalar };
     }
     let d = detect();
+    // ordering: Relaxed — see above.
     RESOLVED.store(d as u8, Ordering::Relaxed);
     d
 }
 
 fn detect() -> IsaLevel {
-    #[cfg(target_arch = "x86_64")]
+    // Miri has no CPUID and cannot execute vendor intrinsics — the
+    // scalar kernels are the only sound path under the interpreter, so
+    // the probe is compiled out entirely there.
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         if std::arch::is_x86_feature_detected!("avx2")
             && std::arch::is_x86_feature_detected!("fma")
@@ -66,10 +75,10 @@ fn detect() -> IsaLevel {
 /// and benches must use [`ForcedIsaGuard`] instead, which restores the
 /// prior forced state on drop.
 pub fn force_scalar(on: bool) {
-    FORCED.store(
-        if on { IsaLevel::Scalar as u8 } else { UNSET },
-        Ordering::Relaxed,
-    );
+    let v = if on { IsaLevel::Scalar as u8 } else { UNSET };
+    // ordering: Relaxed — self-contained dispatch byte, see
+    // `isa_level`.
+    FORCED.store(v, Ordering::Relaxed);
 }
 
 /// Scoped ISA forcing: forces the scalar kernels on construction and
@@ -89,11 +98,20 @@ pub struct ForcedIsaGuard {
     prev: u8,
 }
 
+impl std::fmt::Debug for ForcedIsaGuard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ForcedIsaGuard").finish_non_exhaustive()
+    }
+}
+
 impl ForcedIsaGuard {
     /// Force the scalar kernels until the guard drops (Figure 5's
     /// SIMD-disabled control arm).
     pub fn scalar() -> Self {
         ForcedIsaGuard {
+            // ordering: Relaxed — self-contained dispatch byte, see
+            // `isa_level`; the swap makes force+remember one atomic
+            // step so LIFO-nested guards restore correctly.
             prev: FORCED.swap(IsaLevel::Scalar as u8, Ordering::Relaxed),
         }
     }
@@ -101,6 +119,8 @@ impl ForcedIsaGuard {
 
 impl Drop for ForcedIsaGuard {
     fn drop(&mut self) {
+        // ordering: Relaxed — self-contained dispatch byte, see
+        // `isa_level`.
         FORCED.store(self.prev, Ordering::Relaxed);
     }
 }

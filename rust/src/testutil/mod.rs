@@ -22,6 +22,12 @@ pub struct Gen {
     pub seed: u64,
 }
 
+impl std::fmt::Debug for Gen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Gen").finish_non_exhaustive()
+    }
+}
+
 impl Gen {
     pub fn rng(&mut self) -> &mut Pcg32 {
         &mut self.rng
@@ -71,6 +77,10 @@ impl Gen {
 
 /// Run `f` against `cases` generated cases.  Panics (with the failing
 /// seed) on the first failure.  Set `FW_PROP_SEED` to replay one case.
+///
+/// Under Miri every property shrinks to a handful of cases: the
+/// interpreter is ~3 orders of magnitude slower than native, and UB
+/// detection needs code-path coverage, not statistical case counts.
 pub fn prop(cases: usize, mut f: impl FnMut(&mut Gen)) {
     if let Ok(seed_str) = std::env::var("FW_PROP_SEED") {
         let seed: u64 = seed_str.parse().expect("FW_PROP_SEED must be u64");
@@ -78,6 +88,7 @@ pub fn prop(cases: usize, mut f: impl FnMut(&mut Gen)) {
         f(&mut g);
         return;
     }
+    let cases = if cfg!(miri) { cases.min(3) } else { cases };
     for case in 0..cases {
         let seed = 0x5eed_0000 + case as u64;
         let mut g = Gen { rng: Pcg32::seeded(seed), case, seed };
@@ -93,12 +104,42 @@ pub fn prop(cases: usize, mut f: impl FnMut(&mut Gen)) {
     }
 }
 
+/// Where a Prometheus exposition failed validation.  `line` is
+/// 1-indexed; 0 flags a whole-document failure (no samples at all).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScrapeError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ScrapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line == 0 {
+            write!(f, "{}", self.msg)
+        } else {
+            write!(f, "line {}: {}", self.line, self.msg)
+        }
+    }
+}
+
+impl std::error::Error for ScrapeError {}
+
+/// CLI shim: `fn main` paths print errors as strings.
+impl From<ScrapeError> for String {
+    fn from(e: ScrapeError) -> String {
+        e.to_string()
+    }
+}
+
 /// Validate Prometheus text exposition format (the subset
 /// `ObsRegistry::render_prometheus` emits, which is also what real
 /// scrapers require): well-formed `# HELP`/`# TYPE` lines, legal
 /// metric names, numeric sample values, and every sample covered by a
 /// preceding `# TYPE` declaration for its base family.
-pub fn check_prometheus_text(text: &str) -> Result<(), String> {
+pub fn check_prometheus_text(text: &str) -> Result<(), ScrapeError> {
+    fn fail(line: usize, msg: String) -> Result<(), ScrapeError> {
+        Err(ScrapeError { line, msg })
+    }
     fn valid_name(name: &str) -> bool {
         !name.is_empty()
             && name
@@ -123,20 +164,20 @@ pub fn check_prometheus_text(text: &str) -> Result<(), String> {
             let name = it.next().unwrap_or("");
             let kind = it.next().unwrap_or("").trim();
             if !valid_name(name) {
-                return Err(format!("line {ln}: bad metric name in TYPE: '{name}'"));
+                return fail(ln, format!("bad metric name in TYPE: '{name}'"));
             }
             if !KINDS.contains(&kind) {
-                return Err(format!("line {ln}: unknown metric type '{kind}'"));
+                return fail(ln, format!("unknown metric type '{kind}'"));
             }
             if typed.insert(name.to_string(), kind.to_string()).is_some() {
-                return Err(format!("line {ln}: duplicate TYPE for '{name}'"));
+                return fail(ln, format!("duplicate TYPE for '{name}'"));
             }
             continue;
         }
         if let Some(rest) = line.strip_prefix("# HELP ") {
             let name = rest.split(' ').next().unwrap_or("");
             if !valid_name(name) {
-                return Err(format!("line {ln}: bad metric name in HELP: '{name}'"));
+                return fail(ln, format!("bad metric name in HELP: '{name}'"));
             }
             continue;
         }
@@ -146,20 +187,20 @@ pub fn check_prometheus_text(text: &str) -> Result<(), String> {
         // sample line: name[{labels}] value
         let (name_part, value_part) = match line.rsplit_once(' ') {
             Some(p) => p,
-            None => return Err(format!("line {ln}: sample missing value: '{line}'")),
+            None => return fail(ln, format!("sample missing value: '{line}'")),
         };
         let name = name_part.split('{').next().unwrap_or("");
         if !valid_name(name) {
-            return Err(format!("line {ln}: bad sample metric name: '{name}'"));
+            return fail(ln, format!("bad sample metric name: '{name}'"));
         }
         if let Some(labels) = name_part.split_once('{').map(|(_, l)| l) {
             if !labels.ends_with('}') {
-                return Err(format!("line {ln}: unterminated label set: '{line}'"));
+                return fail(ln, format!("unterminated label set: '{line}'"));
             }
         }
         let v = value_part.trim();
         if v.parse::<f64>().is_err() && !matches!(v, "NaN" | "+Inf" | "-Inf") {
-            return Err(format!("line {ln}: non-numeric sample value '{v}'"));
+            return fail(ln, format!("non-numeric sample value '{v}'"));
         }
         // summary quantile samples and _sum/_count suffixes belong to
         // their base family's TYPE declaration
@@ -173,12 +214,12 @@ pub fn check_prometheus_text(text: &str) -> Result<(), String> {
                 .map(|b| typed.get(b).map(String::as_str) == Some("summary"))
                 .unwrap_or(false);
         if !family_typed {
-            return Err(format!("line {ln}: sample '{name}' has no TYPE declaration"));
+            return fail(ln, format!("sample '{name}' has no TYPE declaration"));
         }
         samples += 1;
     }
     if samples == 0 {
-        return Err("no samples found".to_string());
+        return fail(0, "no samples found".to_string());
     }
     Ok(())
 }

@@ -34,14 +34,24 @@ struct RacyRegressor {
     ptr: *mut Regressor,
 }
 
+// SAFETY: the pointee outlives every worker (threads are scoped inside
+// `train_chunk_batched`, which holds `&mut Regressor` for the whole
+// round) and cross-thread access follows the Hogwild contract above.
 unsafe impl Send for RacyRegressor {}
+// SAFETY: see the Send impl — shared access is the Hogwild contract.
 unsafe impl Sync for RacyRegressor {}
 
 impl RacyRegressor {
     /// # Safety
-    /// Caller must uphold the Hogwild contract described above.
+    /// Caller must uphold the Hogwild contract described above: the
+    /// returned aliasing `&mut` may only be used for plain aligned
+    /// 4-byte weight loads/stores, never structural mutation.
     #[allow(clippy::mut_from_ref)]
     unsafe fn get(&self) -> &mut Regressor {
+        // SAFETY: `ptr` was created from a live `&mut Regressor` in
+        // `train_chunk_batched` and the scoped threads it spawns cannot
+        // outlive that borrow; aliasing is the documented Hogwild
+        // trade-off (module docs).
         unsafe { &mut *self.ptr }
     }
 }
@@ -153,6 +163,10 @@ pub fn train_chunk_batched(
                 let mut scores = Vec::new();
                 let mut eval = RollingAuc::new(auc_window);
                 loop {
+                    // ordering: Relaxed — the counter only parcels out
+                    // disjoint slice bounds; the chunk itself is read
+                    // through the pre-spawn shared borrow, and weight
+                    // races are the documented Hogwild trade-off.
                     let lo = next.fetch_add(BATCH, Ordering::Relaxed);
                     if lo >= chunk.len() {
                         break;
@@ -181,7 +195,12 @@ pub fn train_chunk_batched(
             }));
         }
         for h in handles {
-            all_points.push(h.join().expect("hogwild worker panicked"));
+            match h.join() {
+                Ok(points) => all_points.push(points),
+                // re-raise the worker's own panic so the root cause
+                // (not a generic join failure) reaches the caller
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
         }
     });
     HogwildStats {

@@ -17,6 +17,12 @@ pub struct Trainer {
     pub examples_seen: usize,
 }
 
+impl std::fmt::Debug for Trainer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trainer").finish_non_exhaustive()
+    }
+}
+
 impl Trainer {
     pub fn new(reg: Regressor) -> Self {
         Self::with_window(reg, 30_000)

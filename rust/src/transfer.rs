@@ -106,16 +106,18 @@ impl UpdateMode {
     }
 
     /// Parse a CLI flag value (`raw|quant|patch|quantpatch`).
-    pub fn parse(s: &str) -> Result<UpdateMode, String> {
+    pub fn parse(s: &str) -> Result<UpdateMode, crate::config::ConfigError> {
         Ok(match s {
             "raw" => UpdateMode::Raw,
             "quant" => UpdateMode::Quant,
             "patch" => UpdateMode::PatchOnly,
             "quantpatch" | "quant+patch" => UpdateMode::QuantPatch,
             other => {
-                return Err(format!(
-                    "unknown update mode '{other}' (raw|quant|patch|quantpatch)"
-                ))
+                return Err(crate::config::ConfigError::UnknownValue {
+                    what: "update mode",
+                    got: other.to_string(),
+                    want: "raw|quant|patch|quantpatch",
+                })
             }
         })
     }
@@ -157,6 +159,12 @@ pub struct UpdatePipeline {
     /// stay inside it, so consecutive quantized files differ only where
     /// weights actually moved.
     prev_grid: Option<quant::QuantHeader>,
+}
+
+impl std::fmt::Debug for UpdatePipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("UpdatePipeline").finish_non_exhaustive()
+    }
 }
 
 impl UpdatePipeline {
@@ -268,7 +276,7 @@ impl UpdatePipeline {
         self.prev_grid = match &prev_quant {
             Some(q) => {
                 let (header, _codes) =
-                    quant::from_bytes(q).map_err(FleetError::Corrupt)?;
+                    quant::from_bytes(q).map_err(|e| FleetError::Corrupt(e.to_string()))?;
                 Some(header)
             }
             None => None,
@@ -287,6 +295,12 @@ pub struct UpdateReceiver {
     /// Structural template cloned when decoding weight-only (quantized)
     /// payloads — the serving layer always knows its model skeleton.
     template: Option<Regressor>,
+}
+
+impl std::fmt::Debug for UpdateReceiver {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("UpdateReceiver").finish_non_exhaustive()
+    }
 }
 
 impl UpdateReceiver {
@@ -356,8 +370,9 @@ impl UpdateReceiver {
                 let full = match &self.base_raw {
                     Some(prev) => {
                         let p = Patch::from_wire(&update.bytes)
-                            .map_err(FleetError::Corrupt)?;
-                        patch::apply_patch(prev, &p).map_err(FleetError::Corrupt)?
+                            .map_err(|e| FleetError::Corrupt(e.to_string()))?;
+                        patch::apply_patch(prev, &p)
+                            .map_err(|e| FleetError::Corrupt(e.to_string()))?
                     }
                     None => update.bytes.clone(),
                 };
@@ -368,8 +383,9 @@ impl UpdateReceiver {
                 let q = match &self.base_quant {
                     Some(prev) => {
                         let p = Patch::from_wire(&update.bytes)
-                            .map_err(FleetError::Corrupt)?;
-                        patch::apply_patch(prev, &p).map_err(FleetError::Corrupt)?
+                            .map_err(|e| FleetError::Corrupt(e.to_string()))?;
+                        patch::apply_patch(prev, &p)
+                            .map_err(|e| FleetError::Corrupt(e.to_string()))?
                     }
                     None => update.bytes.clone(),
                 };
@@ -380,8 +396,8 @@ impl UpdateReceiver {
     }
 
     fn decode_quant_model(&mut self, qbytes: &[u8]) -> Result<Regressor, FleetError> {
-        let weights =
-            quant::dequantize_from_bytes(qbytes).map_err(FleetError::Corrupt)?;
+        let weights = quant::dequantize_from_bytes(qbytes)
+            .map_err(|e| FleetError::Corrupt(e.to_string()))?;
         let template = self.template.as_ref().ok_or(FleetError::MissingTemplate)?;
         let mut reg = template.clone();
         if weights.len() != reg.pool.weights.len() {

@@ -103,11 +103,58 @@ pub fn compress(data: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Why a [`decompress`] rejected its input stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CompressError {
+    /// Stream ended inside a varint (`what` names which one).
+    Truncated(&'static str),
+    /// A token would decode past the declared raw length.
+    TokenOverrun,
+    /// A literal run claims more bytes than the stream holds.
+    LiteralPastEnd,
+    /// A match token exceeds the [`MAX_MATCH`] per-token cap.
+    MatchTooLong(usize),
+    /// A match distance of 0 or beyond the produced output.
+    BadDistance(usize),
+    /// The stream decoded to a different length than it declared.
+    LengthMismatch { got: usize, expected: usize },
+}
+
+impl std::fmt::Display for CompressError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompressError::Truncated(what) => write!(f, "lz: truncated {what}"),
+            CompressError::TokenOverrun => {
+                write!(f, "lz: token overruns declared length")
+            }
+            CompressError::LiteralPastEnd => {
+                write!(f, "lz: literal run past end of stream")
+            }
+            CompressError::MatchTooLong(n) => {
+                write!(f, "lz: match length {n} exceeds token cap")
+            }
+            CompressError::BadDistance(d) => write!(f, "lz: bad match distance {d}"),
+            CompressError::LengthMismatch { got, expected } => {
+                write!(f, "lz: decompressed {got} bytes, expected {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CompressError {}
+
+/// CLI shim: `fn main` paths print errors as strings.
+impl From<CompressError> for String {
+    fn from(e: CompressError) -> String {
+        e.to_string()
+    }
+}
+
 /// Decompress a [`compress`] stream.  Rejects malformed input.
-pub fn decompress(data: &[u8]) -> Result<Vec<u8>, String> {
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>, CompressError> {
     let mut pos = 0usize;
-    let raw_len =
-        varint::read_u64(data, &mut pos).ok_or("lz: truncated length")? as usize;
+    let raw_len = varint::read_u64(data, &mut pos)
+        .ok_or(CompressError::Truncated("length"))? as usize;
     // Output growth is bounded token by token: literal runs cannot
     // exceed the stream itself and match tokens are capped at
     // MAX_MATCH, so a corrupt/hostile length varint yields a clean
@@ -115,25 +162,26 @@ pub fn decompress(data: &[u8]) -> Result<Vec<u8>, String> {
     // an unbounded allocation.  Capacity is only a hint.
     let mut out: Vec<u8> = Vec::with_capacity(raw_len.min(64 << 20));
     while pos < data.len() {
-        let tag = varint::read_u64(data, &mut pos).ok_or("lz: truncated tag")?;
+        let tag =
+            varint::read_u64(data, &mut pos).ok_or(CompressError::Truncated("tag"))?;
         let n = (tag >> 1) as usize;
         if n > raw_len - out.len() {
-            return Err("lz: token overruns declared length".into());
+            return Err(CompressError::TokenOverrun);
         }
         if tag & 1 == 0 {
             if n > data.len() - pos {
-                return Err("lz: literal run past end of stream".into());
+                return Err(CompressError::LiteralPastEnd);
             }
             out.extend_from_slice(&data[pos..pos + n]);
             pos += n;
         } else {
             if n > MAX_MATCH {
-                return Err(format!("lz: match length {n} exceeds token cap"));
+                return Err(CompressError::MatchTooLong(n));
             }
-            let dist =
-                varint::read_u64(data, &mut pos).ok_or("lz: truncated distance")? as usize;
+            let dist = varint::read_u64(data, &mut pos)
+                .ok_or(CompressError::Truncated("distance"))? as usize;
             if dist == 0 || dist > out.len() {
-                return Err(format!("lz: bad match distance {dist}"));
+                return Err(CompressError::BadDistance(dist));
             }
             let start = out.len() - dist;
             // byte-by-byte: overlapping matches replicate their own tail
@@ -144,10 +192,10 @@ pub fn decompress(data: &[u8]) -> Result<Vec<u8>, String> {
         }
     }
     if out.len() != raw_len {
-        return Err(format!(
-            "lz: decompressed {} bytes, expected {raw_len}",
-            out.len()
-        ));
+        return Err(CompressError::LengthMismatch {
+            got: out.len(),
+            expected: raw_len,
+        });
     }
     Ok(out)
 }

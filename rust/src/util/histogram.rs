@@ -205,6 +205,11 @@ impl AtomicHistogram {
     /// Record one observation in nanoseconds. Never blocks.
     pub fn record_ns(&self, ns: u64) {
         let b = bucket_index(ns);
+        // ordering: Relaxed throughout — each field is an independent
+        // statistical counter; scrapers read via `snapshot`, which
+        // tolerates a mid-record view (totals may momentarily disagree
+        // by one observation, which quantile math absorbs).  No other
+        // data is published through these atomics.
         self.counts[b].fetch_add(1, Ordering::Relaxed);
         self.total.fetch_add(1, Ordering::Relaxed);
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
@@ -218,19 +223,23 @@ impl AtomicHistogram {
     }
 
     pub fn count(&self) -> u64 {
+        // ordering: Relaxed — statistical read, see `record_ns`.
         self.total.load(Ordering::Relaxed)
     }
 
     /// Fold into a plain histogram for quantiles / merging / display.
     pub fn snapshot(&self) -> LatencyHistogram {
+        // ordering: Relaxed — see `record_ns`: the snapshot is a
+        // statistical view, not a synchronization point.
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
         let mut h = LatencyHistogram::new();
         for (dst, src) in h.counts.iter_mut().zip(&self.counts) {
-            *dst = src.load(Ordering::Relaxed);
+            *dst = ld(src);
         }
-        h.total = self.total.load(Ordering::Relaxed);
-        h.sum_ns = self.sum_ns.load(Ordering::Relaxed) as u128;
-        h.max_ns = self.max_ns.load(Ordering::Relaxed);
-        h.min_ns = self.min_ns.load(Ordering::Relaxed);
+        h.total = ld(&self.total);
+        h.sum_ns = ld(&self.sum_ns) as u128;
+        h.max_ns = ld(&self.max_ns);
+        h.min_ns = ld(&self.min_ns);
         h
     }
 }

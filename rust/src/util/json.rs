@@ -154,15 +154,69 @@ pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }
 
+/// Why a document failed to parse (position = byte offset).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JsonError {
+    /// Input ended mid-value.
+    Eof,
+    /// A specific byte was required (`{`, `"`, `:`, ...).
+    Expected { what: char, pos: usize },
+    /// A well-formed value was followed by more non-whitespace bytes.
+    Trailing { pos: usize },
+    /// `true`/`false`/`null` misspelled.
+    BadLiteral { pos: usize },
+    /// Number span did not parse as f64.
+    BadNumber { pos: usize },
+    /// String ran off the end of the input.
+    UnterminatedString,
+    /// Unknown or truncated `\` escape.
+    BadEscape { pos: usize },
+    /// Raw string bytes were not valid UTF-8.
+    InvalidUtf8 { pos: usize },
+    /// Expected `,` or the closing bracket of an array/object.
+    ExpectedSep { close: char, pos: usize },
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof => write!(f, "unexpected end of input"),
+            JsonError::Expected { what, pos } => {
+                write!(f, "expected '{what}' at byte {pos}")
+            }
+            JsonError::Trailing { pos } => write!(f, "trailing data at byte {pos}"),
+            JsonError::BadLiteral { pos } => write!(f, "bad literal at byte {pos}"),
+            JsonError::BadNumber { pos } => write!(f, "bad number at byte {pos}"),
+            JsonError::UnterminatedString => write!(f, "unterminated string"),
+            JsonError::BadEscape { pos } => write!(f, "bad escape at byte {pos}"),
+            JsonError::InvalidUtf8 { pos } => {
+                write!(f, "invalid utf-8 in string at byte {pos}")
+            }
+            JsonError::ExpectedSep { close, pos } => {
+                write!(f, "expected ',' or '{close}' at byte {pos}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// CLI shim: `fn main` paths print errors as strings.
+impl From<JsonError> for String {
+    fn from(e: JsonError) -> String {
+        e.to_string()
+    }
+}
+
 /// Parse a JSON document.
-pub fn parse(input: &str) -> Result<Json, String> {
+pub fn parse(input: &str) -> Result<Json, JsonError> {
     let b = input.as_bytes();
     let mut p = Parser { b, pos: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
     if p.pos != b.len() {
-        return Err(format!("trailing data at byte {}", p.pos));
+        return Err(JsonError::Trailing { pos: p.pos });
     }
     Ok(v)
 }
@@ -187,16 +241,16 @@ impl<'a> Parser<'a> {
         self.b.get(self.pos).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
         } else {
-            Err(format!("expected '{}' at byte {}", c as char, self.pos))
+            Err(JsonError::Expected { what: c as char, pos: self.pos })
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<Json, JsonError> {
         self.skip_ws();
         match self.peek() {
             Some(b'{') => self.object(),
@@ -206,20 +260,20 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(_) => self.number(),
-            None => Err("unexpected end of input".into()),
+            None => Err(JsonError::Eof),
         }
     }
 
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
         if self.b[self.pos..].starts_with(word.as_bytes()) {
             self.pos += word.len();
             Ok(v)
         } else {
-            Err(format!("bad literal at byte {}", self.pos))
+            Err(JsonError::BadLiteral { pos: self.pos })
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
         while let Some(c) = self.peek() {
             if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
@@ -228,23 +282,26 @@ impl<'a> Parser<'a> {
                 break;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // the span is ASCII digits/signs only, scanned byte by byte above
+        let text = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| JsonError::BadNumber { pos: start })?;
         text.parse::<f64>()
             .map(Json::Num)
-            .map_err(|_| format!("bad number '{text}' at byte {start}"))
+            .map_err(|_| JsonError::BadNumber { pos: start })
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
-                None => return Err("unterminated string".into()),
+                None => return Err(JsonError::UnterminatedString),
                 Some(b'"') => {
                     self.pos += 1;
                     return Ok(out);
                 }
                 Some(b'\\') => {
+                    let esc_pos = self.pos;
                     self.pos += 1;
                     match self.peek() {
                         Some(b'"') => out.push('"'),
@@ -259,17 +316,18 @@ impl<'a> Parser<'a> {
                             let hex = self
                                 .b
                                 .get(self.pos + 1..self.pos + 5)
-                                .ok_or("truncated \\u escape")?;
+                                .ok_or(JsonError::BadEscape { pos: esc_pos })?;
                             let code = u32::from_str_radix(
-                                std::str::from_utf8(hex)
-                                    .map_err(|_| "bad \\u escape")?,
+                                std::str::from_utf8(hex).map_err(|_| {
+                                    JsonError::BadEscape { pos: esc_pos }
+                                })?,
                                 16,
                             )
-                            .map_err(|_| "bad \\u escape")?;
+                            .map_err(|_| JsonError::BadEscape { pos: esc_pos })?;
                             out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                             self.pos += 4;
                         }
-                        _ => return Err("bad escape".into()),
+                        _ => return Err(JsonError::BadEscape { pos: esc_pos }),
                     }
                     self.pos += 1;
                 }
@@ -284,14 +342,14 @@ impl<'a> Parser<'a> {
                     }
                     out.push_str(
                         std::str::from_utf8(&self.b[start..self.pos])
-                            .map_err(|_| "invalid utf-8 in string")?,
+                            .map_err(|_| JsonError::InvalidUtf8 { pos: start })?,
                     );
                 }
             }
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -310,12 +368,12 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Arr(items));
                 }
-                _ => return Err(format!("expected ',' or ']' at {}", self.pos)),
+                _ => return Err(JsonError::ExpectedSep { close: ']', pos: self.pos }),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -339,7 +397,7 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Obj(map));
                 }
-                _ => return Err(format!("expected ',' or '}}' at {}", self.pos)),
+                _ => return Err(JsonError::ExpectedSep { close: '}', pos: self.pos }),
             }
         }
     }

@@ -7,6 +7,12 @@ pub struct Stopwatch {
     start: Instant,
 }
 
+impl std::fmt::Debug for Stopwatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Stopwatch").finish_non_exhaustive()
+    }
+}
+
 impl Default for Stopwatch {
     fn default() -> Self {
         Self::new()

@@ -18,6 +18,11 @@
 //! Every run prints `chaos seed: 0x...` first; any failure reproduces
 //! from that one number (`fw fleet --chaos --seed N`).
 
+// Soak/e2e scale: far too slow under the Miri interpreter (~1000x);
+// the nightly Miri job covers the scalar kernels and unit props
+// instead.
+#![cfg(not(miri))]
+
 use fwumious::fleet::chaos::{run_chaos_soak, ChaosConfig};
 use fwumious::transfer::UpdateMode;
 

@@ -15,6 +15,11 @@
 //!   (d) the planner's tree route ships strictly fewer inter-DC bytes
 //!       than star for the same snapshots.
 
+// Soak/e2e scale: far too slow under the Miri interpreter (~1000x);
+// the nightly Miri job covers the scalar kernels and unit props
+// instead.
+#![cfg(not(miri))]
+
 use fwumious::config::ModelConfig;
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::fleet::soak::{run_fleet_soak, FleetSoakConfig};

@@ -18,6 +18,11 @@
 //!    controller back to `Full`: the ladder disengages and full slates
 //!    come back.
 
+// Soak/e2e scale: far too slow under the Miri interpreter (~1000x);
+// the nightly Miri job covers the scalar kernels and unit props
+// instead.
+#![cfg(not(miri))]
+
 use fwumious::config::{ModelConfig, ServeConfig, ShedPolicy};
 use fwumious::model::regressor::Regressor;
 use fwumious::serve::router::Router;

@@ -6,6 +6,11 @@
 //! asserting (a) reconstruction fidelity, (b) Table-4-shaped bandwidth
 //! savings, (c) the swapped model actually serves the new weights.
 
+// Soak/e2e scale: far too slow under the Miri interpreter (~1000x);
+// the nightly Miri job covers the scalar kernels and unit props
+// instead.
+#![cfg(not(miri))]
+
 use std::sync::Arc;
 
 use fwumious::config::{ModelConfig, ServeConfig};

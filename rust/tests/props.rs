@@ -115,6 +115,7 @@ fn prop_auc_invariances() {
 /// Context-cache equivalence: for any split point C, cached partial +
 /// candidate completion == full forward.
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_context_split_equivalence() {
     prop(15, |g| {
         let buckets = 1u32 << 8;
@@ -183,6 +184,7 @@ fn prop_lz_roundtrip_on_model_shaped_data() {
 /// half a quantization bucket otherwise), and the receiver's base file
 /// always mirrors the sender's bit-for-bit.
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_transfer_modes_reconstruct() {
     prop(8, |g| {
         let buckets = 1u32 << 9;
@@ -226,6 +228,7 @@ fn prop_transfer_modes_reconstruct() {
 /// replica bit-identical to a fresh full snapshot decoded straight
 /// from the sender's base file.
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_fleet_delta_chain_catchup_bit_identical() {
     prop(6, |g| {
         let buckets = 1u32 << 9;
@@ -282,6 +285,7 @@ fn prop_fleet_delta_chain_catchup_bit_identical() {
 /// crashed — head version, sender base file, every replica's weights
 /// and cursor, RNG-driven drop placement and the byte ledgers alike.
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_crash_restore_replays_bit_identically() {
     use fwumious::fleet::FabricCheckpoint;
     prop(6, |g| {
@@ -384,6 +388,7 @@ fn prop_varint_roundtrip() {
 /// Training stability: no weight ever becomes non-finite across random
 /// hyperparameters (clamped sigmoid + AdaGrad must keep things sane).
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_training_stays_finite() {
     prop(10, |g| {
         let buckets = 1u32 << 8;
@@ -408,6 +413,7 @@ fn prop_training_stays_finite() {
 /// Hogwild with any thread count produces a usable (finite, learning)
 /// model — lost updates are tolerated, corruption is not.
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_hogwild_robustness() {
     use fwumious::train::hogwild::{train_chunk, HogwildConfig};
     prop(6, |g| {
@@ -436,6 +442,7 @@ fn prop_hogwild_robustness() {
 /// at a time through `predict_with_partial`, and both match the full
 /// (uncached, unbatched) forward pass — zero-valued slots included.
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_batched_scoring_matches_sequential() {
     use fwumious::feature::{Example, FeatureSlot};
     prop(20, |g| {
@@ -507,6 +514,7 @@ fn prop_batched_scoring_matches_sequential() {
 /// fanouts k ∈ {0, 1, 2, 8} and caps small enough that hot groups hit
 /// the chunking path.
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_grouped_scoring_matches_per_request() {
     use fwumious::feature::FeatureSlot;
     use fwumious::serve::context_cache::ContextCache;
@@ -592,6 +600,7 @@ fn prop_grouped_scoring_matches_per_request() {
 /// backward passes at the same frozen weights — within fp reassociation
 /// — on all three architectures, for B ∈ {2, 4, 8}.
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_learn_batch_matches_per_example() {
     use fwumious::model::optimizer::GradRecorder;
     prop(6, |g| {
@@ -691,6 +700,7 @@ fn prop_learn_batch_matches_per_example() {
 /// (fields / latent dim / hidden widths) and different batch sizes must
 /// score bit-identically to a fresh workspace every time.
 #[test]
+#[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn workspace_survives_interleaved_model_dims() {
     use fwumious::serve::trace::TraceGenerator;
     let cfgs = [
@@ -739,4 +749,66 @@ fn workspace_survives_interleaved_model_dims() {
             );
         }
     }
+}
+
+/// Miri anchor: the dispatch entry points agree with naive reference
+/// loops.  Under the interpreter the scalar kernels are the executed
+/// path by construction (`simd::detect` compiles the CPUID probe out
+/// under `cfg(miri)`), so this is the nightly Miri job's tour of the
+/// real kernel code; natively it doubles as a dispatch-vs-reference
+/// tolerance check on whatever ISA the host has.  Deliberately no
+/// `ForcedIsaGuard` here — the dispatch atomic is process-global and
+/// forcing it would race the bit-exact props on sibling test threads.
+#[test]
+fn miri_scalar_kernels_roundtrip() {
+    use fwumious::simd::{batch, dot};
+    prop(4, |g| {
+        // single-vector kernels vs naive loops
+        let n = g.usize_in(1..40);
+        let a = g.vec_f32(n..n + 1, -1.0, 1.0);
+        let b = g.vec_f32(n..n + 1, -1.0, 1.0);
+        let want_dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot::dot(&a, &b) - want_dot).abs() < 1e-4);
+        let alpha = g.f32_in(-2.0, 2.0);
+        let mut y = b.clone();
+        dot::axpy(alpha, &a, &mut y);
+        for i in 0..n {
+            assert!((y[i] - (b[i] + alpha * a[i])).abs() < 1e-5);
+        }
+        // batched matmul vs per-row matvec
+        let (batch_n, rows, cols) =
+            (g.usize_in(1..5), g.usize_in(1..6), g.usize_in(1..12));
+        let x = g.vec_f32(batch_n * rows..batch_n * rows + 1, -1.0, 1.0);
+        let w = g.vec_f32(rows * cols..rows * cols + 1, -1.0, 1.0);
+        let bias = g.vec_f32(cols..cols + 1, -1.0, 1.0);
+        let mut out = vec![0f32; batch_n * cols];
+        batch::matmul_rowmajor(&x, batch_n, &w, rows, cols, Some(&bias), &mut out);
+        for bi in 0..batch_n {
+            let mut want = bias.clone();
+            dot::matvec_rowmajor(
+                &x[bi * rows..(bi + 1) * rows],
+                &w,
+                Some(&bias),
+                &mut want,
+            );
+            for j in 0..cols {
+                assert!(
+                    (out[bi * cols + j] - want[j]).abs() < 1e-4,
+                    "matmul row {bi} col {j}"
+                );
+            }
+        }
+        // rowwise reductions vs naive sums
+        let mut sums = vec![0f32; batch_n];
+        let mut sq = vec![0f32; batch_n];
+        batch::rowwise_sum(&out, batch_n, cols, &mut sums);
+        batch::rowwise_sumsq(&out, batch_n, cols, &mut sq);
+        for bi in 0..batch_n {
+            let row = &out[bi * cols..(bi + 1) * cols];
+            let s: f32 = row.iter().sum();
+            let s2: f32 = row.iter().map(|v| v * v).sum();
+            assert!((sums[bi] - s).abs() < 1e-4);
+            assert!((sq[bi] - s2).abs() < 1e-4);
+        }
+    });
 }

@@ -2,6 +2,11 @@
 //! SIMD on/off numeric agreement, multi-model routing, and throughput
 //! sanity on the full engine.
 
+// Soak/e2e scale: far too slow under the Miri interpreter (~1000x);
+// the nightly Miri job covers the scalar kernels and unit props
+// instead.
+#![cfg(not(miri))]
+
 use fwumious::config::{ModelConfig, ServeConfig};
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
 use fwumious::model::regressor::Regressor;
