@@ -1,26 +1,45 @@
-//! Figure 5 — SIMD-enabled vs SIMD-disabled inference (§5).
+//! Figure 5 — SIMD-enabled vs SIMD-disabled inference (§5), extended
+//! across the full ISA ladder.
 //!
 //! Paper: "SIMD intrinsics resulted in a consistent 20% speedup for all
-//! serving. Up to 25% faster inference."  The engine detects AVX2+FMA
-//! at startup and can be forced onto the scalar path — exactly the
-//! production control/treatment pair.
+//! serving. Up to 25% faster inference."  The engine detects the best
+//! rung (scalar → AVX2+FMA → AVX-512) at startup; `ForcedIsaGuard`
+//! pins each arm to one rung, so every shape gets a per-rung row — the
+//! production control/treatment pair generalized to a ladder.
+//!
+//! Three measurements:
+//!
+//! 1. **End-to-end forward per rung × latent dim**: full DeepFFM
+//!    `predict` per available rung for K ∈ {4, 8, 16} shapes.
+//! 2. **GEMM rung ratio**: the batched `matmul_rowmajor` kernel alone,
+//!    per rung.  Where the host has AVX-512 this arm must clear 1.2x
+//!    over AVX2 (the 4×32 zmm tile vs the 4×16 ymm tile); hosts
+//!    without the rung skip the assert cleanly.
+//! 3. **Const-k specialization**: the batched FFM pair kernel with the
+//!    const-`K` body (`forward_partial_batch`) vs the same rung's
+//!    runtime-`k` body (`forward_partial_batch_runtime_k`).  At k = 8
+//!    on the fastest live vector rung the specialized path must clear
+//!    1.15x (unrolled strip loops + register-hoisted context strip);
+//!    scalar-only hosts skip the floor.
 
 use fwumious::config::ModelConfig;
 use fwumious::data::synthetic::{DatasetSpec, SyntheticStream};
-use fwumious::feature::Example;
+use fwumious::feature::{Example, FeatureSlot};
 use fwumious::model::regressor::Regressor;
-use fwumious::model::Workspace;
-use fwumious::simd;
+use fwumious::model::weights::{Layout, WeightPool};
+use fwumious::model::{block_ffm, Workspace};
+use fwumious::simd::{self, ForcedIsaGuard, IsaLevel};
 use fwumious::util::bench_env;
 use fwumious::util::json::{arr, num, obj, s};
+use fwumious::util::rng::Pcg32;
 use fwumious::util::timer::median_time;
 
-fn bench_forward(reg: &Regressor, data: &[Example], scalar: bool) -> f64 {
+fn bench_forward(reg: &Regressor, data: &[Example], lvl: IsaLevel, reps: usize) -> f64 {
     // RAII forcing: restored (to unforced) when the arm ends, even on
     // a panicking measurement closure
-    let _guard = scalar.then(simd::ForcedIsaGuard::scalar);
+    let _guard = ForcedIsaGuard::force(lvl);
     let mut ws = Workspace::new();
-    median_time(1, 5, || {
+    median_time(1, reps, || {
         let mut acc = 0.0f32;
         for ex in data {
             acc += reg.predict(ex, &mut ws);
@@ -29,56 +48,275 @@ fn bench_forward(reg: &Regressor, data: &[Example], scalar: bool) -> f64 {
     })
 }
 
+/// Seconds per `matmul_rowmajor` call on a GEMM-shaped workload under a
+/// forced rung (the serving MLP's batched hidden-layer multiply).
+fn bench_gemm(lvl: IsaLevel, batch: usize, rows: usize, cols: usize, reps: usize) -> f64 {
+    let _guard = ForcedIsaGuard::force(lvl);
+    let mut rng = Pcg32::seeded(5150);
+    let x: Vec<f32> = (0..batch * rows).map(|_| rng.normal() * 0.5).collect();
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 0.5).collect();
+    let bias: Vec<f32> = (0..cols).map(|_| rng.normal() * 0.5).collect();
+    let mut out = vec![0f32; batch * cols];
+    median_time(1, reps, || {
+        fwumious::simd::batch::matmul_rowmajor(&x, batch, &w, rows, cols, Some(&bias), &mut out);
+        out[0]
+    })
+}
+
+/// FFM pair-kernel fixture for the const-k arm: a pure-FFM layout with
+/// a context strip and a candidate slate, scored through the batched
+/// partial kernel.
+struct PairFixture {
+    layout: Layout,
+    pool: WeightPool,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    ctx: Vec<FeatureSlot>,
+    cand: Vec<FeatureSlot>,
+    pairs: Vec<f32>,
+}
+
+impl PairFixture {
+    fn new(k: usize, batch: usize) -> PairFixture {
+        let fields = 6usize;
+        let ctx_len = 3usize;
+        let cfg = ModelConfig::ffm(fields, k, 1 << 12);
+        let layout = Layout::new(&cfg);
+        let mut pool = WeightPool::init(&cfg, &layout);
+        let mut rng = Pcg32::seeded(6000 + k as u64);
+        for w in &mut pool.weights[layout.ffm_off..] {
+            *w = rng.normal() * 0.3;
+        }
+        let slot = |rng: &mut Pcg32, f: usize| FeatureSlot {
+            field: f as u16,
+            bucket: rng.below(1 << 12),
+            value: 0.3 + rng.next_f32(),
+        };
+        let ctx: Vec<FeatureSlot> = (0..ctx_len).map(|f| slot(&mut rng, f)).collect();
+        let mut cand = Vec::new();
+        for _ in 0..batch {
+            for f in ctx_len..fields {
+                cand.push(slot(&mut rng, f));
+            }
+        }
+        let np = cfg.pairs();
+        PairFixture {
+            layout,
+            pool,
+            fields,
+            k,
+            ctx_len,
+            ctx,
+            cand,
+            pairs: vec![0f32; batch * np],
+        }
+    }
+
+    /// Median seconds per batched-kernel sweep (`iters` calls).
+    fn run(&mut self, lvl: IsaLevel, iters: usize, reps: usize, specialized: bool) -> f64 {
+        let _guard = ForcedIsaGuard::force(lvl);
+        median_time(1, reps, || {
+            for _ in 0..iters {
+                if specialized {
+                    block_ffm::forward_partial_batch(
+                        &self.pool.weights,
+                        &self.layout,
+                        self.fields,
+                        self.k,
+                        self.ctx_len,
+                        &self.ctx,
+                        &self.cand,
+                        &mut self.pairs,
+                    );
+                } else {
+                    block_ffm::forward_partial_batch_runtime_k(
+                        &self.pool.weights,
+                        &self.layout,
+                        self.fields,
+                        self.k,
+                        self.ctx_len,
+                        &self.ctx,
+                        &self.cand,
+                        &mut self.pairs,
+                    );
+                }
+            }
+            self.pairs[0]
+        })
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    println!("== Figure 5: SIMD-aware forward pass ==");
-    println!("detected ISA: {}", simd::isa_name());
-    if !simd::simd_active() {
-        println!("(host has no AVX2+FMA — both arms will run scalar)");
-    }
-    let n = 30_000;
+    let rungs = simd::available_levels();
+    let best = *rungs.last().expect("scalar is always available");
+    println!("== Figure 5: SIMD-aware forward pass, per ISA rung ==");
     println!(
-        "\n{:<26} {:>12} {:>12} {:>9}",
-        "model (K, hidden)", "scalar", "simd", "speedup"
+        "detected ISA: {} (rungs: {})",
+        simd::isa_name(),
+        rungs.iter().map(|l| l.name()).collect::<Vec<_>>().join(", ")
     );
+    if !simd::simd_active() {
+        println!("(host has no AVX2+FMA — every arm runs scalar)");
+    }
+
+    // -- 1. end-to-end forward, per rung × latent dim ------------------
+    let n = if smoke { 4_000 } else { 30_000 };
+    let steps = if smoke { 2_000 } else { 20_000 };
+    let reps = if smoke { 3 } else { 5 };
+    let mut header = format!("{:<26}", "model (K, hidden)");
+    for lvl in &rungs {
+        header.push_str(&format!(" {:>12}", lvl.name()));
+    }
+    println!("\n{header} {:>9}", "best/scl");
     // Larger K benefits more from vectorized latent dots; the hidden
-    // layer matvec vectorizes in all variants.
-    let mut rows = Vec::new();
+    // layer GEMM vectorizes in all variants.
+    let mut shape_rows = Vec::new();
     for (k, hidden) in [(4usize, vec![16usize]), (8, vec![16]), (16, vec![32]), (8, vec![32, 32])] {
         let spec = DatasetSpec::criteo_like();
-        let buckets = 1u32 << 18;
+        let buckets = if smoke { 1u32 << 14 } else { 1u32 << 18 };
         let cfg = ModelConfig::deep_ffm(spec.fields(), k, buckets, &hidden);
         let mut reg = Regressor::new(&cfg);
         let mut ws = Workspace::new();
-        let mut s = SyntheticStream::with_buckets(spec, 13, buckets);
-        for _ in 0..20_000 {
-            let ex = s.next_example();
+        let mut stream = SyntheticStream::with_buckets(spec, 13, buckets);
+        for _ in 0..steps {
+            let ex = stream.next_example();
             reg.learn(&ex, &mut ws);
         }
-        let data = s.take_examples(n);
-        let scalar = bench_forward(&reg, &data, true);
-        let vector = bench_forward(&reg, &data, false);
-        println!(
-            "{:<26} {:>9.1}ns {:>9.1}ns {:>8.2}x",
-            format!("K={k}, hidden {hidden:?}"),
-            scalar / n as f64 * 1e9,
-            vector / n as f64 * 1e9,
-            scalar / vector
-        );
-        rows.push(obj(vec![
+        let data = stream.take_examples(n);
+        let mut line = format!("{:<26}", format!("K={k}, hidden {hidden:?}"));
+        let mut arms = Vec::new();
+        let mut scalar_secs = f64::NAN;
+        let mut best_secs = f64::NAN;
+        for &lvl in &rungs {
+            let secs = bench_forward(&reg, &data, lvl, reps);
+            if lvl == IsaLevel::Scalar {
+                scalar_secs = secs;
+            }
+            if lvl == best {
+                best_secs = secs;
+            }
+            line.push_str(&format!(" {:>10.1}ns", secs / n as f64 * 1e9));
+            arms.push(obj(vec![
+                ("isa_rung", s(lvl.name())),
+                ("k", num(k as f64)),
+                ("ns_per_example", num(secs / n as f64 * 1e9)),
+            ]));
+        }
+        let speedup = scalar_secs / best_secs;
+        println!("{line} {speedup:>8.2}x");
+        shape_rows.push(obj(vec![
             ("latent_dim", num(k as f64)),
             ("hidden", s(&format!("{hidden:?}"))),
-            ("scalar_ns_per_example", num(scalar / n as f64 * 1e9)),
-            ("simd_ns_per_example", num(vector / n as f64 * 1e9)),
-            ("speedup", num(scalar / vector)),
+            ("arms", arr(arms)),
+            ("speedup_best_vs_scalar", num(speedup)),
         ]));
     }
+
+    // -- 2. GEMM rung ratio (the zmm tile's headline kernel) -----------
+    let (gb, gr, gc) = if smoke { (32usize, 128usize, 128usize) } else { (64, 256, 256) };
+    let gemm_reps = if smoke { 5 } else { 9 };
+    let flops = 2.0 * gb as f64 * gr as f64 * gc as f64;
+    println!("\n-- batched GEMM (matmul_rowmajor, {gb}x{gr}x{gc}) --");
+    println!("{:>12} {:>12} {:>10}", "rung", "gflop/s", "vs scalar");
+    let mut gemm_arms = Vec::new();
+    let mut gemm_secs = std::collections::BTreeMap::new();
+    for &lvl in &rungs {
+        let secs = bench_gemm(lvl, gb, gr, gc, gemm_reps);
+        gemm_secs.insert(lvl as u8, secs);
+        let base = gemm_secs[&(IsaLevel::Scalar as u8)];
+        println!(
+            "{:>12} {:>12.2} {:>9.2}x",
+            lvl.name(),
+            flops / secs / 1e9,
+            base / secs
+        );
+        gemm_arms.push(obj(vec![
+            ("isa_rung", s(lvl.name())),
+            ("gflops", num(flops / secs / 1e9)),
+            ("seconds_per_call", num(secs)),
+        ]));
+    }
+    let gemm_512_vs_2 = match (
+        gemm_secs.get(&(IsaLevel::Avx2Fma as u8)),
+        gemm_secs.get(&(IsaLevel::Avx512 as u8)),
+    ) {
+        (Some(a2), Some(a5)) => Some(a2 / a5),
+        _ => None,
+    };
+    if let Some(ratio) = gemm_512_vs_2 {
+        println!("avx512-vs-avx2 GEMM speedup: {ratio:.2}x");
+    } else {
+        println!("(no avx512 rung on this host — rung-ratio floor skipped)");
+    }
+
+    // -- 3. const-k specialization vs runtime-k, fastest rung ----------
+    let pair_batch = 64usize;
+    let pair_iters = if smoke { 100 } else { 400 };
+    let pair_reps = if smoke { 5 } else { 9 };
+    println!("\n-- const-k FFM pair kernel (batch {pair_batch}, rung {}) --", best.name());
+    println!("{:>4} {:>14} {:>14} {:>9}", "k", "runtime-k", "const-k", "speedup");
+    let mut const_k_rows = Vec::new();
+    let mut k8_speedup = None;
+    for k in [4usize, 8, 16] {
+        let mut fx = PairFixture::new(k, pair_batch);
+        let runtime = fx.run(best, pair_iters, pair_reps, false);
+        let spec = fx.run(best, pair_iters, pair_reps, true);
+        let per_call = |secs: f64| secs / pair_iters as f64 * 1e9;
+        let speedup = runtime / spec;
+        if k == 8 {
+            k8_speedup = Some(speedup);
+        }
+        println!(
+            "{k:>4} {:>12.1}ns {:>12.1}ns {speedup:>8.2}x",
+            per_call(runtime),
+            per_call(spec)
+        );
+        const_k_rows.push(obj(vec![
+            ("k", num(k as f64)),
+            ("isa_rung", s(best.name())),
+            ("runtime_k_ns_per_call", num(per_call(runtime))),
+            ("const_k_ns_per_call", num(per_call(spec))),
+            ("speedup_const_vs_runtime", num(speedup)),
+        ]));
+    }
+
     let path = bench_env::write_report(
         "fig5_simd",
         smoke,
-        vec![("examples", num(n as f64)), ("shapes", arr(rows))],
+        vec![
+            ("examples", num(n as f64)),
+            ("rungs", arr(rungs.iter().map(|l| s(l.name())).collect())),
+            ("shapes", arr(shape_rows)),
+            ("gemm", arr(gemm_arms)),
+            (
+                "gemm_speedup_avx512_vs_avx2",
+                gemm_512_vs_2.map(num).unwrap_or(fwumious::util::json::Json::Null),
+            ),
+            ("const_k", arr(const_k_rows)),
+        ],
     );
     println!("\nreport -> {path}");
     println!("paper: ~20% serving speedup, up to 25% faster inference.");
-    println!("expected: speedup ≥ 1.2x on the production-like shapes (grows with K).");
+
+    // Floors asserted after the report write so a regression still
+    // leaves the numbers on disk.
+    if let Some(ratio) = gemm_512_vs_2 {
+        assert!(
+            ratio >= 1.2,
+            "avx512 GEMM at {ratio:.2}x of avx2, below the 1.2x floor"
+        );
+    }
+    if simd::simd_active() {
+        let ks = k8_speedup.expect("k=8 arm always runs");
+        assert!(
+            ks >= 1.15,
+            "const-k path at {ks:.2}x of runtime-k (k=8, rung {}), below the \
+             1.15x floor",
+            best.name()
+        );
+    } else {
+        println!("(scalar dispatch host: const-k 1.15x floor not enforced)");
+    }
 }

@@ -37,8 +37,9 @@ use fwumious::serve::server::{score_requests_coalesced, ServingEngine};
 use fwumious::serve::trace::TraceGenerator;
 use fwumious::serve::{ModelHandle, Request};
 use fwumious::obs::{ObsOptions, ObsRegistry};
+use fwumious::simd::{ForcedIsaGuard, IsaLevel};
 use fwumious::util::bench_env;
-use fwumious::util::json::{arr, num, obj};
+use fwumious::util::json::{arr, num, obj, s};
 use fwumious::util::timer::median_time;
 
 const CTX_FIELDS: usize = 6;
@@ -266,6 +267,40 @@ fn main() {
     println!("{:>16} {:>14.0}", "batched", bat_cps);
     println!("batched-vs-sequential speedup: {speedup:.2}x");
 
+    // -- the same batched path pinned to each ISA rung (the ladder's
+    // end-to-end effect on serving, not just the kernels)
+    let rungs = fwumious::simd::available_levels();
+    let rung_reps = if smoke { 3 } else { 5 };
+    println!("\n-- per-rung batched scoring (K={}) --", reg.cfg.latent_dim);
+    println!("{:>12} {:>14} {:>10}", "rung", "cands/s", "vs scalar");
+    let mut rung_rows = Vec::new();
+    let mut scalar_rung_cps = f64::NAN;
+    for &lvl in &rungs {
+        // RAII forcing: restored (to unforced) when the arm ends
+        let _guard = ForcedIsaGuard::force(lvl);
+        // best-of-N: the arm is short and the ratio is what matters
+        let mut secs = f64::INFINITY;
+        for _ in 0..rung_reps {
+            secs = secs.min(run_batched(&reg, &reqs).0);
+        }
+        let cps = n_cands / secs;
+        if lvl == IsaLevel::Scalar {
+            scalar_rung_cps = cps;
+        }
+        println!(
+            "{:>12} {:>14.0} {:>9.2}x",
+            lvl.name(),
+            cps,
+            cps / scalar_rung_cps
+        );
+        rung_rows.push(obj(vec![
+            ("isa_rung", s(lvl.name())),
+            ("k", num(reg.cfg.latent_dim as f64)),
+            ("cands_per_sec", num(cps)),
+            ("speedup_vs_scalar", num(cps / scalar_rung_cps)),
+        ]));
+    }
+
     // -- cross-request coalescing on a duplicate-context workload
     let dup_slates_n = if smoke { 30 } else { 200 };
     let mut dup_gen =
@@ -368,6 +403,7 @@ fn main() {
             ("sequential_cands_per_sec", num(seq_cps)),
             ("batched_cands_per_sec", num(bat_cps)),
             ("speedup_batched_vs_sequential", num(speedup)),
+            ("scoring_rungs", arr(rung_rows)),
             ("dup_fanout", num(DUP_FANOUT as f64)),
             ("dup_group_size", num(DUP_GROUP as f64)),
             ("dup_requests", num(dup_reqs as f64)),

@@ -132,7 +132,11 @@ SUBCOMMANDS:
                --prefetch N  --out model.fw
     serve      score a synthetic request trace through the serving engine
                --model model.fw  --requests N  --workers N
-               --no-context-cache  --no-simd
+               --no-context-cache
+               --force-isa scalar|avx2|avx512 (clamp the SIMD
+               dispatch rung; down-only — a rung the CPU lacks falls
+               back to the best available)  --no-simd (alias for
+               --force-isa scalar)
                --max-group-candidates N (cross-request union-slate cap)
                --queue-depth N (bounded admission queue per worker)
                --shed-policy reject-new|drop-oldest (full-queue behavior)
@@ -237,5 +241,24 @@ mod tests {
         let a = parse(&["serve", "--no-simd", "--workers", "4"]);
         assert!(a.has("no-simd"));
         assert_eq!(a.flag("workers"), Some("4"));
+    }
+
+    #[test]
+    fn force_isa_value_flag_parses() {
+        // every accepted rung name maps to a level; bad names don't
+        let a = parse(&["serve", "--force-isa", "avx512"]);
+        assert_eq!(a.flag("force-isa"), Some("avx512"));
+        for name in ["scalar", "avx2", "avx512"] {
+            let a = parse(&["serve", "--force-isa", name]);
+            assert!(
+                crate::simd::IsaLevel::parse(a.flag("force-isa").unwrap()).is_some(),
+                "{name}"
+            );
+        }
+        let a = parse(&["serve", "--force-isa=sse9"]);
+        assert!(crate::simd::IsaLevel::parse(a.flag("force-isa").unwrap()).is_none());
+        // the historical alias still parses as a bare switch
+        let a = parse(&["serve", "--no-simd", "--requests", "10"]);
+        assert!(a.has("no-simd"));
     }
 }

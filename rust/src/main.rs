@@ -233,7 +233,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let metrics_every = args.usize_flag("metrics-every", 0)? as u64;
     let metrics_file = args.flag("metrics-file").map(|s| s.to_string());
     let tracer = tracer_from_args(args)?;
-    if args.has("no-simd") {
+    // --force-isa clamps the dispatch rung (down-only: a rung the CPU
+    // lacks falls back to the best available); --no-simd survives as an
+    // alias for --force-isa scalar.
+    if let Some(rung) = args.flag("force-isa") {
+        let lvl = fwumious::simd::IsaLevel::parse(rung).ok_or_else(|| {
+            format!("--force-isa wants scalar|avx2|avx512, got '{rung}'")
+        })?;
+        fwumious::simd::force_isa(Some(lvl));
+    } else if args.has("no-simd") {
         fwumious::simd::force_scalar(true);
     }
     println!("SIMD path: {}", fwumious::simd::isa_name());

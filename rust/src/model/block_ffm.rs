@@ -24,7 +24,14 @@ use crate::simd::dot;
 /// SIMD dispatch happens once per example (§5): the AVX2 kernels below
 /// prefetch every latent row up front (the pair loop's gathers are the
 /// dominant memory cost) and keep the whole O(F²) loop inside one
-/// `#[target_feature]` region.
+/// `#[target_feature]` region.  On top of the ISA rung, the hot latent
+/// dims k ∈ {4, 8, 16} select fully-unrolled `const K` kernel bodies
+/// (fwumious_wabbit's `specialize_k!` trick): the per-pair dot and its
+/// strip loads unroll with the strip resident in registers, while any
+/// other `k` takes the same body with `K = 0`, meaning runtime-`k`.
+/// The specialized body performs the identical floating-point operation
+/// sequence as the runtime one, so specialization never changes a
+/// result bit.
 pub fn forward(
     weights: &[f32],
     layout: &Layout,
@@ -34,16 +41,52 @@ pub fn forward(
     pairs: &mut [f32],
 ) -> f32 {
     #[cfg(target_arch = "x86_64")]
-    if crate::simd::isa_level() == crate::simd::IsaLevel::Avx2Fma
+    if crate::simd::isa_level() >= crate::simd::IsaLevel::Avx2Fma
         && (k == 4 || k % 8 == 0)
     {
-        // SAFETY: isa_level returns Avx2Fma only after runtime CPUID
+        // SAFETY: isa_level at or above Avx2Fma implies runtime CPUID
         // confirmed avx2+fma (every avx2 CPU also has sse4.1); the k
         // guard above and the caller's layout/shape contract satisfy
-        // forward_avx2's remaining preconditions.
-        return unsafe { forward_avx2(weights, layout, fields, k, ex, pairs) };
+        // forward_avx2's remaining preconditions, and every const-K arm
+        // passes K == k or K == 0.
+        return unsafe {
+            match k {
+                4 => forward_avx2::<4>(weights, layout, fields, k, ex, pairs),
+                8 => forward_avx2::<8>(weights, layout, fields, k, ex, pairs),
+                16 => forward_avx2::<16>(weights, layout, fields, k, ex, pairs),
+                _ => forward_avx2::<0>(weights, layout, fields, k, ex, pairs),
+            }
+        };
     }
-    forward_generic(weights, layout, fields, k, ex, pairs)
+    match k {
+        4 => forward_generic_k::<4>(weights, layout, fields, k, ex, pairs),
+        8 => forward_generic_k::<8>(weights, layout, fields, k, ex, pairs),
+        16 => forward_generic_k::<16>(weights, layout, fields, k, ex, pairs),
+        _ => forward_generic_k::<0>(weights, layout, fields, k, ex, pairs),
+    }
+}
+
+/// Bench-only entry: the dispatched rung's kernel with specialization
+/// disabled (`K = 0`, runtime-`k` body).  Exists so the Fig. 5 bench
+/// can measure the const-`k` win on identical inputs; not part of the
+/// serving API.
+#[doc(hidden)]
+pub fn forward_runtime_k(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ex: &Example,
+    pairs: &mut [f32],
+) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if crate::simd::isa_level() >= crate::simd::IsaLevel::Avx2Fma
+        && (k == 4 || k % 8 == 0)
+    {
+        // SAFETY: same contract as the dispatch in [`forward`].
+        return unsafe { forward_avx2::<0>(weights, layout, fields, k, ex, pairs) };
+    }
+    forward_generic_k::<0>(weights, layout, fields, k, ex, pairs)
 }
 
 /// Portable pair loop (also the SIMD-disabled control arm of Fig. 5).
@@ -55,7 +98,38 @@ pub fn forward_generic(
     ex: &Example,
     pairs: &mut [f32],
 ) -> f32 {
+    forward_generic_k::<0>(weights, layout, fields, k, ex, pairs)
+}
+
+/// Per-pair latent dot: unrolled `0..K` when specialized, the
+/// dispatched [`dot::dot`] when `K = 0` (runtime-`k`).  For the
+/// specialized dims (4, 8, 16 — all below the vector threshold of
+/// `dot`) both forms run the same scalar accumulation order, so the
+/// paths are bit-identical.
+#[inline(always)]
+fn pair_dot<const K: usize>(a: &[f32], b: &[f32]) -> f32 {
+    if K == 0 {
+        return dot::dot(a, b);
+    }
+    let mut s = 0.0f32;
+    for kk in 0..K {
+        s += a[kk] * b[kk];
+    }
+    s
+}
+
+/// Portable pair loop body, const-`k` specializable (`K = 0` means
+/// runtime-`k`; otherwise `K == k`).
+fn forward_generic_k<const K: usize>(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ex: &Example,
+    pairs: &mut [f32],
+) -> f32 {
     debug_assert_eq!(pairs.len(), fields * (fields - 1) / 2);
+    debug_assert!(K == 0 || K == k, "specialized K must match runtime k");
     let fk = fields * k;
     let base = layout.ffm_off;
     let mut total = 0.0f32;
@@ -81,7 +155,7 @@ pub fn forward_generic(
             // ⟨w_{i, toward j}, w_{j, toward i}⟩
             let a = &weights[row_i + j * k..row_i + j * k + k];
             let b = &weights[row_j + i * k..row_j + i * k + k];
-            let v = dot::dot(a, b) * si.value * sj.value;
+            let v = pair_dot::<K>(a, b) * si.value * sj.value;
             pairs[p] = v;
             total += v;
             p += 1;
@@ -91,18 +165,21 @@ pub fn forward_generic(
 }
 
 /// Whole-loop AVX2 kernel: prefetches all F latent rows, then runs the
-/// masked pair loop with vector dots (SSE4.1 `dpps` for K=4, 256-bit
-/// FMA + horizontal sum for K multiple of 8).
+/// masked pair loop with vector dots (SSE4.1 `dpps` for k=4, 256-bit
+/// FMA + horizontal sum for k multiple of 8).  `K` is the const-`k`
+/// specialization knob: `K == k` unrolls the strip loop and folds the
+/// k=4 branch at compile time, `K == 0` keeps the runtime-`k` body;
+/// both run the identical FP operation sequence.
 ///
 /// # Safety
 /// Caller must ensure the CPU supports avx2+fma+sse4.1
-/// (runtime-detected), `k == 4 || k % 8 == 0`,
+/// (runtime-detected), `k == 4 || k % 8 == 0`, `K == 0 || K == k`,
 /// `ex.slots.len() == fields`, `pairs.len() == fields*(fields-1)/2`,
 /// and every slot bucket within the layout's FFM table so
 /// `base + bucket*fk + fk <= weights.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma,sse4.1")]
-unsafe fn forward_avx2(
+unsafe fn forward_avx2<const K: usize>(
     weights: &[f32],
     layout: &Layout,
     fields: usize,
@@ -111,6 +188,8 @@ unsafe fn forward_avx2(
     pairs: &mut [f32],
 ) -> f32 {
     use std::arch::x86_64::*;
+    debug_assert!(K == 0 || K == k, "specialized K must match runtime k");
+    let k = if K == 0 { k } else { K };
     let fk = fields * k;
     let base = layout.ffm_off;
     // Prefetch every row referenced by this example: the pair loop
@@ -205,19 +284,46 @@ pub fn forward_partial(
     pairs: &mut [f32],
 ) {
     #[cfg(target_arch = "x86_64")]
-    if crate::simd::isa_level() == crate::simd::IsaLevel::Avx2Fma
+    if crate::simd::isa_level() >= crate::simd::IsaLevel::Avx2Fma
         && (k == 4 || k % 8 == 0)
     {
-        // SAFETY: isa_level returns Avx2Fma only after runtime CPUID
+        // SAFETY: isa_level at or above Avx2Fma implies runtime CPUID
         // confirmed avx2+fma (every avx2 CPU also has sse4.1); the k
         // guard above and the caller's layout/shape contract satisfy
-        // forward_partial_avx2's remaining preconditions.
+        // forward_partial_avx2's remaining preconditions, and every
+        // const-K arm passes K == k or K == 0.
         unsafe {
-            forward_partial_avx2(weights, layout, fields, k, ctx_len, all_slots, pairs)
+            match k {
+                4 => forward_partial_avx2::<4>(
+                    weights, layout, fields, k, ctx_len, all_slots, pairs,
+                ),
+                8 => forward_partial_avx2::<8>(
+                    weights, layout, fields, k, ctx_len, all_slots, pairs,
+                ),
+                16 => forward_partial_avx2::<16>(
+                    weights, layout, fields, k, ctx_len, all_slots, pairs,
+                ),
+                _ => forward_partial_avx2::<0>(
+                    weights, layout, fields, k, ctx_len, all_slots, pairs,
+                ),
+            }
         };
         return;
     }
-    forward_partial_generic(weights, layout, fields, k, ctx_len, all_slots, pairs);
+    match k {
+        4 => forward_partial_generic_k::<4>(
+            weights, layout, fields, k, ctx_len, all_slots, pairs,
+        ),
+        8 => forward_partial_generic_k::<8>(
+            weights, layout, fields, k, ctx_len, all_slots, pairs,
+        ),
+        16 => forward_partial_generic_k::<16>(
+            weights, layout, fields, k, ctx_len, all_slots, pairs,
+        ),
+        _ => forward_partial_generic_k::<0>(
+            weights, layout, fields, k, ctx_len, all_slots, pairs,
+        ),
+    }
 }
 
 /// Portable partial pair loop.
@@ -230,6 +336,21 @@ pub fn forward_partial_generic(
     all_slots: &[crate::feature::FeatureSlot],
     pairs: &mut [f32],
 ) {
+    forward_partial_generic_k::<0>(weights, layout, fields, k, ctx_len, all_slots, pairs)
+}
+
+/// Portable partial pair loop body, const-`k` specializable (`K = 0`
+/// means runtime-`k`; otherwise `K == k`).
+fn forward_partial_generic_k<const K: usize>(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    all_slots: &[crate::feature::FeatureSlot],
+    pairs: &mut [f32],
+) {
+    debug_assert!(K == 0 || K == k, "specialized K must match runtime k");
     let fk = fields * k;
     let base = layout.ffm_off;
     for i in 0..fields {
@@ -252,22 +373,23 @@ pub fn forward_partial_generic(
             let row_j = base + sj.bucket as usize * fk;
             let a = &weights[row_i + j * k..row_i + j * k + k];
             let b = &weights[row_j + i * k..row_j + i * k + k];
-            pairs[pi] = dot::dot(a, b) * si.value * sj.value;
+            pairs[pi] = pair_dot::<K>(a, b) * si.value * sj.value;
         }
     }
 }
 
-/// AVX2 partial pair loop with candidate-row prefetch.
+/// AVX2 partial pair loop with candidate-row prefetch.  `K` is the
+/// const-`k` specialization knob (see [`forward_avx2`]).
 ///
 /// # Safety
 /// Caller must ensure the CPU supports avx2+fma+sse4.1
-/// (runtime-detected), `k == 4 || k % 8 == 0`,
+/// (runtime-detected), `k == 4 || k % 8 == 0`, `K == 0 || K == k`,
 /// `all_slots.len() == fields`, `pairs.len() == fields*(fields-1)/2`,
 /// and every slot bucket within the layout's FFM table so
 /// `base + bucket*fk + fk <= weights.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma,sse4.1")]
-unsafe fn forward_partial_avx2(
+unsafe fn forward_partial_avx2<const K: usize>(
     weights: &[f32],
     layout: &Layout,
     fields: usize,
@@ -277,6 +399,8 @@ unsafe fn forward_partial_avx2(
     pairs: &mut [f32],
 ) {
     use std::arch::x86_64::*;
+    debug_assert!(K == 0 || K == k, "specialized K must match runtime k");
+    let k = if K == 0 { k } else { K };
     let fk = fields * k;
     let base = layout.ffm_off;
     for s in &all_slots[ctx_len..] {
@@ -382,22 +506,82 @@ pub fn forward_partial_batch(
         return;
     }
     #[cfg(target_arch = "x86_64")]
-    if crate::simd::isa_level() == crate::simd::IsaLevel::Avx2Fma
+    if crate::simd::isa_level() >= crate::simd::IsaLevel::Avx2Fma
         && (k == 4 || k % 8 == 0)
     {
-        // SAFETY: isa_level returns Avx2Fma only after runtime CPUID
+        // SAFETY: isa_level at or above Avx2Fma implies runtime CPUID
         // confirmed avx2+fma (every avx2 CPU also has sse4.1); the k
         // guard above, the ctx_len < fields guard, and the caller's
         // layout/shape contract satisfy forward_partial_batch_avx2's
-        // remaining preconditions.
+        // remaining preconditions, and every const-K arm passes K == k
+        // or K == 0.
         unsafe {
-            forward_partial_batch_avx2(
+            match k {
+                4 => forward_partial_batch_avx2::<4>(
+                    weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+                ),
+                8 => forward_partial_batch_avx2::<8>(
+                    weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+                ),
+                16 => forward_partial_batch_avx2::<16>(
+                    weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+                ),
+                _ => forward_partial_batch_avx2::<0>(
+                    weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+                ),
+            }
+        };
+        return;
+    }
+    match k {
+        4 => forward_partial_batch_generic_k::<4>(
+            weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+        ),
+        8 => forward_partial_batch_generic_k::<8>(
+            weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+        ),
+        16 => forward_partial_batch_generic_k::<16>(
+            weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+        ),
+        _ => forward_partial_batch_generic_k::<0>(
+            weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+        ),
+    }
+}
+
+/// Bench-only entry: the dispatched rung's batched kernel with
+/// specialization disabled (`K = 0`, runtime-`k` body).  Counterpart of
+/// [`forward_runtime_k`] for the serving-path kernel; not part of the
+/// serving API.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn forward_partial_batch_runtime_k(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    ctx_slots: &[crate::feature::FeatureSlot],
+    cand_slots: &[crate::feature::FeatureSlot],
+    pairs: &mut [f32],
+) {
+    if ctx_len >= fields {
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if crate::simd::isa_level() >= crate::simd::IsaLevel::Avx2Fma
+        && (k == 4 || k % 8 == 0)
+    {
+        // SAFETY: same contract as the dispatch in
+        // [`forward_partial_batch`].
+        unsafe {
+            forward_partial_batch_avx2::<0>(
                 weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
             )
         };
         return;
     }
-    forward_partial_batch_generic(
+    forward_partial_batch_generic_k::<0>(
         weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
     );
 }
@@ -414,6 +598,25 @@ pub fn forward_partial_batch_generic(
     cand_slots: &[crate::feature::FeatureSlot],
     pairs: &mut [f32],
 ) {
+    forward_partial_batch_generic_k::<0>(
+        weights, layout, fields, k, ctx_len, ctx_slots, cand_slots, pairs,
+    )
+}
+
+/// Portable batched partial pair loop body, const-`k` specializable
+/// (`K = 0` means runtime-`k`; otherwise `K == k`).
+#[allow(clippy::too_many_arguments)]
+fn forward_partial_batch_generic_k<const K: usize>(
+    weights: &[f32],
+    layout: &Layout,
+    fields: usize,
+    k: usize,
+    ctx_len: usize,
+    ctx_slots: &[crate::feature::FeatureSlot],
+    cand_slots: &[crate::feature::FeatureSlot],
+    pairs: &mut [f32],
+) {
+    debug_assert!(K == 0 || K == k, "specialized K must match runtime k");
     let cw = fields - ctx_len;
     debug_assert!(cw > 0, "no candidate fields");
     debug_assert_eq!(ctx_slots.len(), ctx_len);
@@ -446,7 +649,7 @@ pub fn forward_partial_batch_generic(
                 }
                 let row_j = base + sj.bucket as usize * fk;
                 let bv = &weights[row_j + i * k..row_j + i * k + k];
-                pairs[pi] = dot::dot(a, bv) * si.value * sj.value;
+                pairs[pi] = pair_dot::<K>(a, bv) * si.value * sj.value;
             }
         }
     }
@@ -472,7 +675,7 @@ pub fn forward_partial_batch_generic(
                 let row_j = base + sj.bucket as usize * fk;
                 let a = &weights[row_i + j * k..row_i + j * k + k];
                 let bv = &weights[row_j + i * k..row_j + i * k + k];
-                pairs[pi] = dot::dot(a, bv) * si.value * sj.value;
+                pairs[pi] = pair_dot::<K>(a, bv) * si.value * sj.value;
             }
         }
     }
@@ -484,17 +687,24 @@ pub fn forward_partial_batch_generic(
 /// (`hadd` tree — the remainder path uses the same per-dot tree so any
 /// candidate's value is independent of where it lands in the batch).
 ///
+/// `K` is the const-`k` specialization knob (see [`forward_avx2`]).
+/// When specialized (`K ∈ {8, 16}`), Phase A additionally hoists the
+/// context strip into a ymm register array once per column instead of
+/// reloading it per candidate — same FMA sequence, fewer loads, so
+/// results stay bit-identical to the runtime-`k` body.
+///
 /// # Safety
 /// Caller must ensure the CPU supports avx2+fma+sse4.1
-/// (runtime-detected), `k == 4 || k % 8 == 0`, `ctx_len < fields`,
-/// `ctx_slots.len() == ctx_len`, `cand_slots.len()` a multiple of
-/// `fields - ctx_len`, `pairs.len() == batch * fields*(fields-1)/2`,
-/// and every slot bucket within the layout's FFM table so
+/// (runtime-detected), `k == 4 || k % 8 == 0`, `K == 0 || K == k`,
+/// `ctx_len < fields`, `ctx_slots.len() == ctx_len`,
+/// `cand_slots.len()` a multiple of `fields - ctx_len`,
+/// `pairs.len() == batch * fields*(fields-1)/2`, and every slot bucket
+/// within the layout's FFM table so
 /// `base + bucket*fk + fk <= weights.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma,sse4.1")]
 #[allow(clippy::too_many_arguments)]
-unsafe fn forward_partial_batch_avx2(
+unsafe fn forward_partial_batch_avx2<const K: usize>(
     weights: &[f32],
     layout: &Layout,
     fields: usize,
@@ -505,6 +715,7 @@ unsafe fn forward_partial_batch_avx2(
     pairs: &mut [f32],
 ) {
     use std::arch::x86_64::*;
+    debug_assert!(K == 0 || K == k, "specialized K must match runtime k");
 
     /// Σ over one 8-lane accumulator via the `hadd` tree:
     /// `((x0+x1)+(x2+x3)) + ((x4+x5)+(x6+x7))`.
@@ -537,6 +748,7 @@ unsafe fn forward_partial_batch_avx2(
         _mm_add_ps(_mm256_castps256_ps128(q), _mm256_extractf128_ps::<1>(q))
     }
 
+    let k = if K == 0 { k } else { K };
     let cw = fields - ctx_len;
     let batch = cand_slots.len() / cw;
     let np = fields * (fields - 1) / 2;
@@ -595,6 +807,21 @@ unsafe fn forward_partial_batch_avx2(
                 continue;
             }
             // k % 8 == 0: four candidates per batched horizontal sum.
+            // When const-K specialized, hoist the context strip into a
+            // register array once per column; the runtime-k body
+            // (K == 0) reloads it inside the candidate loop.  The FMA
+            // sequence is identical either way.
+            let hoisted = K > 0 && k <= 16;
+            let mut areg = [_mm256_setzero_ps(); 2];
+            if hoisted {
+                let mut kk = 0usize;
+                while kk < k {
+                    // SAFETY: kk + 8 <= k <= 16 bounds the 8-lane load
+                    // from strip `a` and the areg index.
+                    areg[kk / 8] = unsafe { _mm256_loadu_ps(a.add(kk)) };
+                    kk += 8;
+                }
+            }
             let mut b = 0usize;
             while b + 4 <= batch {
                 let mut acc = [_mm256_setzero_ps(); 4];
@@ -611,8 +838,13 @@ unsafe fn forward_partial_batch_avx2(
                             .add(base + sj.bucket as usize * fk + i * k);
                         let mut kk = 0usize;
                         while kk < k {
+                            let va = if hoisted {
+                                areg[kk / 8]
+                            } else {
+                                _mm256_loadu_ps(a.add(kk))
+                            };
                             *av = _mm256_fmadd_ps(
-                                _mm256_loadu_ps(a.add(kk)),
+                                va,
                                 _mm256_loadu_ps(row_j.add(kk)),
                                 *av,
                             );
@@ -648,8 +880,13 @@ unsafe fn forward_partial_batch_avx2(
                         .add(base + sj.bucket as usize * fk + i * k);
                     let mut kk = 0usize;
                     while kk < k {
+                        let va = if hoisted {
+                            areg[kk / 8]
+                        } else {
+                            _mm256_loadu_ps(a.add(kk))
+                        };
                         acc = _mm256_fmadd_ps(
-                            _mm256_loadu_ps(a.add(kk)),
+                            va,
                             _mm256_loadu_ps(row_j.add(kk)),
                             acc,
                         );
@@ -953,13 +1190,49 @@ mod tests {
                 // avx2+fma+sse4.1; the test only passes k in {4, 8}
                 // and shape-consistent slices.
                 unsafe {
-                    forward_partial_batch_avx2(
+                    forward_partial_batch_avx2::<0>(
                         weights, layout, fields, k, ctx_len, ctx_slots, cand_slots,
                         pairs,
                     )
                 }
             }
+            fn avx2_spec(
+                weights: &[f32],
+                layout: &Layout,
+                fields: usize,
+                k: usize,
+                ctx_len: usize,
+                ctx_slots: &[FeatureSlot],
+                cand_slots: &[FeatureSlot],
+                pairs: &mut [f32],
+            ) {
+                // SAFETY: the feature-detect guard above confirmed
+                // avx2+fma+sse4.1; the test only passes k in {4, 8}
+                // and shape-consistent slices, and every const-K arm
+                // passes K == k or K == 0.
+                unsafe {
+                    match k {
+                        4 => forward_partial_batch_avx2::<4>(
+                            weights, layout, fields, k, ctx_len, ctx_slots,
+                            cand_slots, pairs,
+                        ),
+                        8 => forward_partial_batch_avx2::<8>(
+                            weights, layout, fields, k, ctx_len, ctx_slots,
+                            cand_slots, pairs,
+                        ),
+                        16 => forward_partial_batch_avx2::<16>(
+                            weights, layout, fields, k, ctx_len, ctx_slots,
+                            cand_slots, pairs,
+                        ),
+                        _ => forward_partial_batch_avx2::<0>(
+                            weights, layout, fields, k, ctx_len, ctx_slots,
+                            cand_slots, pairs,
+                        ),
+                    }
+                }
+            }
             impls.push(("avx2", avx2));
+            impls.push(("avx2-spec", avx2_spec));
         }
         for k in [4usize, 8] {
             let fields = 7;
@@ -1011,6 +1284,57 @@ mod tests {
                         }
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn const_k_specialization_is_bit_identical() {
+        // The specialized bodies run the same FP operation sequence as
+        // the runtime-k ones — dispatch on k must never change a result
+        // bit.  Serialized against rung forcing so the dispatched rung
+        // cannot flip between the paired calls.
+        let _serial = crate::simd::forcing_test_lock();
+        for k in [4usize, 8, 16] {
+            let fields = 6;
+            let (cfg, layout, pool, ex) = setup(fields, k);
+            let np = cfg.pairs();
+            let mut spec = vec![0f32; np];
+            let mut run = vec![0f32; np];
+            let t1 = forward(&pool.weights, &layout, fields, k, &ex, &mut spec);
+            let t2 =
+                forward_runtime_k(&pool.weights, &layout, fields, k, &ex, &mut run);
+            assert_eq!(t1.to_bits(), t2.to_bits(), "k={k} total");
+            for (p, (a, b)) in spec.iter().zip(&run).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "k={k} pair {p}");
+            }
+            // batched serving kernel, spec vs runtime-k dispatch
+            let ctx_len = 2;
+            let mut rng = Pcg32::seeded(300 + k as u64);
+            let slot = |rng: &mut Pcg32, f: usize| FeatureSlot {
+                field: f as u16,
+                bucket: rng.below(32),
+                value: 0.3 + rng.next_f32(),
+            };
+            let ctx: Vec<FeatureSlot> =
+                (0..ctx_len).map(|f| slot(&mut rng, f)).collect();
+            let batch = 5usize;
+            let mut cand = Vec::new();
+            for _ in 0..batch {
+                for f in ctx_len..fields {
+                    cand.push(slot(&mut rng, f));
+                }
+            }
+            let mut ps = vec![0f32; batch * np];
+            let mut pr = vec![0f32; batch * np];
+            forward_partial_batch(
+                &pool.weights, &layout, fields, k, ctx_len, &ctx, &cand, &mut ps,
+            );
+            forward_partial_batch_runtime_k(
+                &pool.weights, &layout, fields, k, ctx_len, &ctx, &cand, &mut pr,
+            );
+            for (p, (a, b)) in ps.iter().zip(&pr).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "k={k} batched pair {p}");
             }
         }
     }

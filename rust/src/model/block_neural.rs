@@ -20,6 +20,11 @@
 //!
 //! `sparse: false` runs the same math without the skips (the control
 //! arm of Table 3).
+//!
+//! All dense math routes through the [`crate::simd`] dispatchers
+//! (`matvec_rowmajor`, `matmul_rowmajor`, the transposed GEMM pair), so
+//! this block picks up whichever rung of the scalar → AVX2+FMA →
+//! AVX-512 ladder the host offers without any code here caring.
 
 use crate::model::optimizer::UpdateRule;
 use crate::model::weights::{LayerLayout, Layout};

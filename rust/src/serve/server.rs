@@ -139,11 +139,12 @@ struct EngineObs {
     flush_deadline: Counter,
     flush_drain: Counter,
     queue_depth: Gauge,
+    isa_level: Gauge,
 }
 
 impl EngineObs {
     fn new(reg: &ObsRegistry) -> Self {
-        EngineObs {
+        let obs = EngineObs {
             requests: reg.counter("fw_serve_requests_total", "requests scored or expired"),
             candidates: reg.counter("fw_serve_candidates_total", "candidates scored"),
             batches: reg.counter("fw_serve_batches_total", "batches flushed to scoring"),
@@ -185,7 +186,15 @@ impl EngineObs {
                 "fw_serve_queue_depth",
                 "jobs in worker queues at the last stats() boundary",
             ),
-        }
+            isa_level: reg.gauge(
+                "fw_isa_level",
+                "SIMD ISA rung in use (0=scalar, 1=avx2+fma, 2=avx512)",
+            ),
+        };
+        // Scrapes show which rung this replica actually dispatches —
+        // a forced-down or feature-poor host is visible fleet-wide.
+        obs.isa_level.set(crate::simd::isa_level() as u8 as f64);
+        obs
     }
 }
 

@@ -32,6 +32,14 @@
 //! one call.  That is why the kernels never take the "skip zero inputs"
 //! shortcut of the single-vector matvec, and why the remainder paths
 //! mirror the blocked paths' per-element accumulation order exactly.
+//!
+//! Every kernel exists per rung of the [`IsaLevel`] ladder.  The
+//! AVX-512 variants widen the AVX2 4×16 register tile to 4×32 (two zmm
+//! accumulators per batch row) with the same explicit reduction trees;
+//! the column tiling depends only on `cols`, never on the batch size,
+//! so the invariance contract holds on every rung independently.
+//! Outputs narrower than one zmm (cols < 16) stay on the ymm kernels —
+//! every AVX-512 CPU also has avx2+fma.
 
 use super::{isa_level, IsaLevel};
 
@@ -64,6 +72,22 @@ pub fn matmul_rowmajor(
                 // SAFETY: `isa_level` returns Avx2Fma only after
                 // runtime CPUID confirmed avx2+fma; the shape contract
                 // the kernel indexes by is asserted above.
+                unsafe { matmul_avx2(x, batch, w, rows, cols, bias, out) }
+            } else {
+                matmul_scalar(x, batch, w, rows, cols, bias, out)
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx512 => {
+            if cols >= 16 {
+                // SAFETY: `isa_level` returns Avx512 only after runtime
+                // CPUID confirmed avx512f/bw/dq/vl (+avx2+fma); the
+                // shape contract the kernel indexes by is asserted
+                // above.
+                unsafe { matmul_avx512(x, batch, w, rows, cols, bias, out) }
+            } else if cols >= 8 {
+                // SAFETY: Avx512 implies CPUID-confirmed avx2+fma; same
+                // shape contract as above.
                 unsafe { matmul_avx2(x, batch, w, rows, cols, bias, out) }
             } else {
                 matmul_scalar(x, batch, w, rows, cols, bias, out)
@@ -137,6 +161,22 @@ pub fn matmul_transposed(
                 matmul_transposed_scalar(dy, batch, w, rows, cols, out)
             }
         }
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx512 => {
+            if cols >= 16 {
+                // SAFETY: `isa_level` returns Avx512 only after runtime
+                // CPUID confirmed avx512f/bw/dq/vl (+avx2+fma); the
+                // shape contract the kernel indexes by is asserted
+                // above.
+                unsafe { matmul_transposed_avx512(dy, batch, w, rows, cols, out) }
+            } else if cols >= 8 {
+                // SAFETY: Avx512 implies CPUID-confirmed avx2+fma; same
+                // shape contract as above.
+                unsafe { matmul_transposed_avx2(dy, batch, w, rows, cols, out) }
+            } else {
+                matmul_transposed_scalar(dy, batch, w, rows, cols, out)
+            }
+        }
         #[cfg(not(target_arch = "x86_64"))]
         _ => matmul_transposed_scalar(dy, batch, w, rows, cols, out),
     }
@@ -200,6 +240,22 @@ pub fn matmul_xt_dy(
                 matmul_xt_dy_scalar(x, batch, dy, rows, cols, dw)
             }
         }
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx512 => {
+            if cols >= 16 {
+                // SAFETY: `isa_level` returns Avx512 only after runtime
+                // CPUID confirmed avx512f/bw/dq/vl (+avx2+fma); the
+                // shape contract the kernel indexes by is asserted
+                // above.
+                unsafe { matmul_xt_dy_avx512(x, batch, dy, rows, cols, dw) }
+            } else if cols >= 8 {
+                // SAFETY: Avx512 implies CPUID-confirmed avx2+fma; same
+                // shape contract as above.
+                unsafe { matmul_xt_dy_avx2(x, batch, dy, rows, cols, dw) }
+            } else {
+                matmul_xt_dy_scalar(x, batch, dy, rows, cols, dw)
+            }
+        }
         #[cfg(not(target_arch = "x86_64"))]
         _ => matmul_xt_dy_scalar(x, batch, dy, rows, cols, dw),
     }
@@ -243,6 +299,22 @@ pub fn rowwise_sum(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
                 rowwise_sum_scalar(m, cols, out)
             }
         }
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx512 => {
+            if cols >= 16 {
+                // SAFETY: `isa_level` returns Avx512 only after runtime
+                // CPUID confirmed avx512f/bw/dq/vl (+avx2+fma); the
+                // shape contract the kernel indexes by is asserted
+                // above.
+                unsafe { rowwise_sum_avx512(m, cols, out) }
+            } else if cols >= 8 {
+                // SAFETY: Avx512 implies CPUID-confirmed avx2+fma; same
+                // shape contract as above.
+                unsafe { rowwise_sum_avx2(m, cols, out) }
+            } else {
+                rowwise_sum_scalar(m, cols, out)
+            }
+        }
         #[cfg(not(target_arch = "x86_64"))]
         _ => rowwise_sum_scalar(m, cols, out),
     }
@@ -262,6 +334,22 @@ pub fn rowwise_sumsq(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
                 // SAFETY: `isa_level` returns Avx2Fma only after
                 // runtime CPUID confirmed avx2+fma; the shape contract
                 // the kernel indexes by is asserted above.
+                unsafe { rowwise_sumsq_avx2(m, cols, out) }
+            } else {
+                rowwise_sumsq_scalar(m, cols, out)
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        IsaLevel::Avx512 => {
+            if cols >= 16 {
+                // SAFETY: `isa_level` returns Avx512 only after runtime
+                // CPUID confirmed avx512f/bw/dq/vl (+avx2+fma); the
+                // shape contract the kernel indexes by is asserted
+                // above.
+                unsafe { rowwise_sumsq_avx512(m, cols, out) }
+            } else if cols >= 8 {
+                // SAFETY: Avx512 implies CPUID-confirmed avx2+fma; same
+                // shape contract as above.
                 unsafe { rowwise_sumsq_avx2(m, cols, out) }
             } else {
                 rowwise_sumsq_scalar(m, cols, out)
@@ -682,6 +770,459 @@ unsafe fn rowwise_sumsq_avx2(m: &[f32], cols: usize, out: &mut [f32]) {
     }
 }
 
+// ---------------------------------------------------------------- avx512
+
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma,
+/// runtime-detected) and the [`matmul_rowmajor`] shape contract:
+/// `x.len() == batch * rows`, `w.len() == rows * cols`,
+/// `out.len() == batch * cols`, and `bias.len() == cols` when given.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+unsafe fn matmul_avx512(
+    x: &[f32],
+    batch: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let mut b = 0usize;
+    while b + 4 <= batch {
+        // SAFETY: b + 4 <= batch keeps rows b..b+4 inside the caller's
+        // shape contract, which is forwarded verbatim.
+        unsafe { mm_rows512::<4>(x, b, w, rows, cols, bias, out) };
+        b += 4;
+    }
+    while b < batch {
+        // SAFETY: b < batch — same contract, one row.
+        unsafe { mm_rows512::<1>(x, b, w, rows, cols, bias, out) };
+        b += 1;
+    }
+}
+
+/// `R` batch rows through all column tiles — the AVX2 4×16 tile widened
+/// to 4×32 (two zmm accumulators per batch row).  Per-element
+/// accumulation order is independent of `R` and of the batch size (bias
+/// load, then one FMA per input row in order) — the bit-identity
+/// contract of the module.  Column coverage: 32-wide zmm pairs, one
+/// 16-wide zmm, one 8-wide ymm, scalar tail — a function of `cols`
+/// only.
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma),
+/// the [`matmul_avx512`] shape contract, and `b + R <= batch`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+#[inline]
+#[allow(clippy::needless_range_loop)]
+unsafe fn mm_rows512<const R: usize>(
+    x: &[f32],
+    b: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let wp = w.as_ptr();
+    let mut xp = [std::ptr::null::<f32>(); R];
+    for (r, p) in xp.iter_mut().enumerate() {
+        // SAFETY: b + R <= batch and x.len() == batch * rows keep each
+        // row pointer (read through offsets 0..rows below) in bounds.
+        *p = unsafe { x.as_ptr().add((b + r) * rows) };
+    }
+    let mut j = 0usize;
+    // 32-wide column tiles: 2 zmm weight loads serve R candidates
+    // (2R FMAs)
+    while j + 32 <= cols {
+        let mut acc0 = [_mm512_setzero_ps(); R];
+        let mut acc1 = [_mm512_setzero_ps(); R];
+        if let Some(bv) = bias {
+            // SAFETY: j + 32 <= cols == bv.len() bounds both loads.
+            unsafe {
+                let b0 = _mm512_loadu_ps(bv.as_ptr().add(j));
+                let b1 = _mm512_loadu_ps(bv.as_ptr().add(j + 16));
+                for r in 0..R {
+                    acc0[r] = b0;
+                    acc1[r] = b1;
+                }
+            }
+        }
+        for i in 0..rows {
+            // SAFETY: i < rows and j + 32 <= cols keep the two weight
+            // strips inside w (rows * cols); xp[r] reads offset
+            // i < rows of an in-bounds input row.
+            unsafe {
+                let w0 = _mm512_loadu_ps(wp.add(i * cols + j));
+                let w1 = _mm512_loadu_ps(wp.add(i * cols + j + 16));
+                for r in 0..R {
+                    let vx = _mm512_set1_ps(*xp[r].add(i));
+                    acc0[r] = _mm512_fmadd_ps(vx, w0, acc0[r]);
+                    acc1[r] = _mm512_fmadd_ps(vx, w1, acc1[r]);
+                }
+            }
+        }
+        for r in 0..R {
+            // SAFETY: b + r < batch and j + 32 <= cols keep both
+            // stores inside out (batch * cols).
+            unsafe {
+                _mm512_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j), acc0[r]);
+                _mm512_storeu_ps(
+                    out.as_mut_ptr().add((b + r) * cols + j + 16),
+                    acc1[r],
+                );
+            }
+        }
+        j += 32;
+    }
+    while j + 16 <= cols {
+        let mut acc = [_mm512_setzero_ps(); R];
+        if let Some(bv) = bias {
+            // SAFETY: j + 16 <= cols == bv.len() bounds the load.
+            let b0 = unsafe { _mm512_loadu_ps(bv.as_ptr().add(j)) };
+            for a in acc.iter_mut() {
+                *a = b0;
+            }
+        }
+        for i in 0..rows {
+            // SAFETY: i < rows, j + 16 <= cols — weight strip and input
+            // element in bounds as in the 32-wide tile above.
+            unsafe {
+                let w0 = _mm512_loadu_ps(wp.add(i * cols + j));
+                for r in 0..R {
+                    let vx = _mm512_set1_ps(*xp[r].add(i));
+                    acc[r] = _mm512_fmadd_ps(vx, w0, acc[r]);
+                }
+            }
+        }
+        for r in 0..R {
+            // SAFETY: b + r < batch, j + 16 <= cols — store in bounds.
+            unsafe {
+                _mm512_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j), acc[r]);
+            }
+        }
+        j += 16;
+    }
+    while j + 8 <= cols {
+        let mut acc = [_mm256_setzero_ps(); R];
+        if let Some(bv) = bias {
+            // SAFETY: j + 8 <= cols == bv.len() bounds the load.
+            let b0 = unsafe { _mm256_loadu_ps(bv.as_ptr().add(j)) };
+            for a in acc.iter_mut() {
+                *a = b0;
+            }
+        }
+        for i in 0..rows {
+            // SAFETY: i < rows, j + 8 <= cols — weight strip and input
+            // element in bounds as in the 32-wide tile above.
+            unsafe {
+                let w0 = _mm256_loadu_ps(wp.add(i * cols + j));
+                for r in 0..R {
+                    let vx = _mm256_set1_ps(*xp[r].add(i));
+                    acc[r] = _mm256_fmadd_ps(vx, w0, acc[r]);
+                }
+            }
+        }
+        for r in 0..R {
+            // SAFETY: b + r < batch, j + 8 <= cols — store in bounds.
+            unsafe {
+                _mm256_storeu_ps(out.as_mut_ptr().add((b + r) * cols + j), acc[r]);
+            }
+        }
+        j += 8;
+    }
+    while j < cols {
+        for r in 0..R {
+            let mut s = match bias {
+                Some(bv) => bv[j],
+                None => 0.0,
+            };
+            for i in 0..rows {
+                // SAFETY: i < rows, j < cols — scalar tail reads of an
+                // input element and a weight element, both in bounds.
+                s += unsafe { *xp[r].add(i) * *wp.add(i * cols + j) };
+            }
+            out[(b + r) * cols + j] = s;
+        }
+        j += 1;
+    }
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma,
+/// runtime-detected) and the [`matmul_transposed`] shape contract:
+/// `dy.len() == batch * cols`, `w.len() == rows * cols`,
+/// `out.len() == batch * rows`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+unsafe fn matmul_transposed_avx512(
+    dy: &[f32],
+    batch: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    let mut b = 0usize;
+    while b + 4 <= batch {
+        // SAFETY: b + 4 <= batch keeps rows b..b+4 inside the caller's
+        // shape contract, which is forwarded verbatim.
+        unsafe { mm_t_rows512::<4>(dy, b, w, rows, cols, out) };
+        b += 4;
+    }
+    while b < batch {
+        // SAFETY: b < batch — same contract, one row.
+        unsafe { mm_t_rows512::<1>(dy, b, w, rows, cols, out) };
+        b += 1;
+    }
+}
+
+/// `R` gradient rows against all weight rows, 16-lane tiles.
+/// Per-element sequence (zmm FMAs over the 16-wide column tiles in
+/// order, one deterministic [`super::dot::hsum16`] reduction, then the
+/// scalar column remainder) is independent of `R` — the bit-identity
+/// contract of the module.
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma),
+/// the [`matmul_transposed_avx512`] shape contract, and
+/// `b + R <= batch`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+#[inline]
+#[allow(clippy::needless_range_loop)]
+unsafe fn mm_t_rows512<const R: usize>(
+    dy: &[f32],
+    b: usize,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let wp = w.as_ptr();
+    let mut gp = [std::ptr::null::<f32>(); R];
+    for (r, p) in gp.iter_mut().enumerate() {
+        // SAFETY: b + R <= batch and dy.len() == batch * cols keep
+        // each gradient-row pointer (read through offsets 0..cols
+        // below) in bounds.
+        *p = unsafe { dy.as_ptr().add((b + r) * cols) };
+    }
+    for i in 0..rows {
+        // SAFETY: i < rows and w.len() == rows * cols keep row i (read
+        // through offsets 0..cols below) in bounds.
+        let wrow = unsafe { wp.add(i * cols) };
+        let mut acc = [_mm512_setzero_ps(); R];
+        let mut j = 0usize;
+        // one weight-row load serves R gradient rows (R FMAs)
+        while j + 16 <= cols {
+            // SAFETY: j + 16 <= cols bounds the weight-row load and
+            // each gradient-row load.
+            unsafe {
+                let wv = _mm512_loadu_ps(wrow.add(j));
+                for r in 0..R {
+                    let gv = _mm512_loadu_ps(gp[r].add(j));
+                    acc[r] = _mm512_fmadd_ps(gv, wv, acc[r]);
+                }
+            }
+            j += 16;
+        }
+        let mut s = [0f32; R];
+        for r in 0..R {
+            // SAFETY: avx512f+avx512dq are enabled per this fn's
+            // contract (hsum16 is value-only).
+            s[r] = unsafe { super::dot::hsum16(acc[r]) };
+        }
+        while j < cols {
+            // SAFETY: j < cols — scalar tail reads, in bounds.
+            unsafe {
+                let wj = *wrow.add(j);
+                for r in 0..R {
+                    s[r] += *gp[r].add(j) * wj;
+                }
+            }
+            j += 1;
+        }
+        for r in 0..R {
+            out[(b + r) * rows + i] = s[r];
+        }
+    }
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma,
+/// runtime-detected) and the [`matmul_xt_dy`] shape contract:
+/// `x.len() == batch * rows`, `dy.len() == batch * cols`,
+/// `dw.len() == rows * cols`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+#[allow(clippy::needless_range_loop)]
+unsafe fn matmul_xt_dy_avx512(
+    x: &[f32],
+    batch: usize,
+    dy: &[f32],
+    rows: usize,
+    cols: usize,
+    dw: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let xp = x.as_ptr();
+    let dyp = dy.as_ptr();
+    // 4 weight rows per block: one dy-row load feeds 4 FMAs.  The batch
+    // loop is innermost per element so segmented reductions replay the
+    // exact accumulation sequence (module contract).
+    let mut i = 0usize;
+    while i < rows {
+        let ri = (rows - i).min(4);
+        let mut j = 0usize;
+        while j + 16 <= cols {
+            let mut acc = [_mm512_setzero_ps(); 4];
+            for r in 0..ri {
+                // SAFETY: i + r < rows and j + 16 <= cols bound the
+                // 16-lane load inside dw (rows * cols).
+                acc[r] = unsafe {
+                    _mm512_loadu_ps(dw.as_ptr().add((i + r) * cols + j))
+                };
+            }
+            for b in 0..batch {
+                // SAFETY: b < batch and j + 16 <= cols bound the dy
+                // load; b < batch and i + r < rows bound the x deref.
+                unsafe {
+                    let gv = _mm512_loadu_ps(dyp.add(b * cols + j));
+                    for r in 0..ri {
+                        let vx = _mm512_set1_ps(*xp.add(b * rows + i + r));
+                        acc[r] = _mm512_fmadd_ps(vx, gv, acc[r]);
+                    }
+                }
+            }
+            for r in 0..ri {
+                // SAFETY: same bounds as the matching load above.
+                unsafe {
+                    _mm512_storeu_ps(
+                        dw.as_mut_ptr().add((i + r) * cols + j),
+                        acc[r],
+                    );
+                }
+            }
+            j += 16;
+        }
+        while j + 8 <= cols {
+            let mut acc = [_mm256_setzero_ps(); 4];
+            for r in 0..ri {
+                // SAFETY: i + r < rows and j + 8 <= cols bound the
+                // 8-lane load inside dw (rows * cols).
+                acc[r] = unsafe {
+                    _mm256_loadu_ps(dw.as_ptr().add((i + r) * cols + j))
+                };
+            }
+            for b in 0..batch {
+                // SAFETY: b < batch and j + 8 <= cols bound the dy
+                // load; b < batch and i + r < rows bound the x deref.
+                unsafe {
+                    let gv = _mm256_loadu_ps(dyp.add(b * cols + j));
+                    for r in 0..ri {
+                        let vx = _mm256_set1_ps(*xp.add(b * rows + i + r));
+                        acc[r] = _mm256_fmadd_ps(vx, gv, acc[r]);
+                    }
+                }
+            }
+            for r in 0..ri {
+                // SAFETY: same bounds as the matching load above.
+                unsafe {
+                    _mm256_storeu_ps(
+                        dw.as_mut_ptr().add((i + r) * cols + j),
+                        acc[r],
+                    );
+                }
+            }
+            j += 8;
+        }
+        while j < cols {
+            for r in 0..ri {
+                let mut s = dw[(i + r) * cols + j];
+                for b in 0..batch {
+                    // SAFETY: b < batch, i + r < rows, j < cols —
+                    // scalar-tail reads inside x and dy.
+                    s += unsafe {
+                        *xp.add(b * rows + i + r) * *dyp.add(b * cols + j)
+                    };
+                }
+                dw[(i + r) * cols + j] = s;
+            }
+            j += 1;
+        }
+        i += ri;
+    }
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma,
+/// runtime-detected); slice bounds are enforced by `chunks_exact`
+/// below.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+unsafe fn rowwise_sum_avx512(m: &[f32], cols: usize, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    for (row, o) in m.chunks_exact(cols).zip(out.iter_mut()) {
+        let p = row.as_ptr();
+        let mut acc = _mm512_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= cols {
+            // SAFETY: i + 16 <= cols == row.len() bounds the 16-lane
+            // unaligned load.
+            acc = _mm512_add_ps(acc, unsafe { _mm512_loadu_ps(p.add(i)) });
+            i += 16;
+        }
+        // SAFETY: avx512f+avx512dq are enabled per this fn's contract.
+        let mut s = unsafe { super::dot::hsum16(acc) };
+        while i < cols {
+            s += row[i];
+            i += 1;
+        }
+        *o = s;
+    }
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma,
+/// runtime-detected); slice bounds are enforced by `chunks_exact`
+/// below.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+unsafe fn rowwise_sumsq_avx512(m: &[f32], cols: usize, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    for (row, o) in m.chunks_exact(cols).zip(out.iter_mut()) {
+        let p = row.as_ptr();
+        let mut acc = _mm512_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= cols {
+            // SAFETY: i + 16 <= cols == row.len() bounds the 16-lane
+            // unaligned load.
+            let v = unsafe { _mm512_loadu_ps(p.add(i)) };
+            acc = _mm512_fmadd_ps(v, v, acc);
+            i += 16;
+        }
+        // SAFETY: avx512f+avx512dq are enabled per this fn's contract.
+        let mut s = unsafe { super::dot::hsum16(acc) };
+        while i < cols {
+            s += row[i] * row[i];
+            i += 1;
+        }
+        *o = s;
+    }
+}
+
+/// True when every AVX-512 feature the kernels above need is present
+/// (false under Miri, whose probe is compiled out) — the guard the
+/// concrete-kernel test impl lists use to bypass global dispatch.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn avx512_available() -> bool {
+    super::best_available() >= IsaLevel::Avx512
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -757,6 +1298,24 @@ mod tests {
                 unsafe { matmul_avx2(x, batch, w, rows, cols, bias, out) }
             }
             impls.push(("avx2", avx2));
+        }
+        #[cfg(target_arch = "x86_64")]
+        if avx512_available() {
+            fn avx512(
+                x: &[f32],
+                batch: usize,
+                w: &[f32],
+                rows: usize,
+                cols: usize,
+                bias: Option<&[f32]>,
+                out: &mut [f32],
+            ) {
+                // SAFETY: the avx512_available guard above confirmed
+                // avx512f/bw/dq/vl (+avx2+fma); the test passes
+                // shape-consistent slices.
+                unsafe { matmul_avx512(x, batch, w, rows, cols, bias, out) }
+            }
+            impls.push(("avx512", avx512));
         }
         impls
     }
@@ -867,6 +1426,23 @@ mod tests {
             }
             impls.push(("avx2", avx2));
         }
+        #[cfg(target_arch = "x86_64")]
+        if avx512_available() {
+            fn avx512(
+                dy: &[f32],
+                batch: usize,
+                w: &[f32],
+                rows: usize,
+                cols: usize,
+                out: &mut [f32],
+            ) {
+                // SAFETY: the avx512_available guard above confirmed
+                // avx512f/bw/dq/vl (+avx2+fma); the test passes
+                // shape-consistent slices.
+                unsafe { matmul_transposed_avx512(dy, batch, w, rows, cols, out) }
+            }
+            impls.push(("avx512", avx512));
+        }
         impls
     }
 
@@ -950,6 +1526,23 @@ mod tests {
             }
             impls.push(("avx2", avx2));
         }
+        #[cfg(target_arch = "x86_64")]
+        if avx512_available() {
+            fn avx512(
+                x: &[f32],
+                batch: usize,
+                dy: &[f32],
+                rows: usize,
+                cols: usize,
+                dw: &mut [f32],
+            ) {
+                // SAFETY: the avx512_available guard above confirmed
+                // avx512f/bw/dq/vl (+avx2+fma); the test passes
+                // shape-consistent slices.
+                unsafe { matmul_xt_dy_avx512(x, batch, dy, rows, cols, dw) }
+            }
+            impls.push(("avx512", avx512));
+        }
         impls
     }
 
@@ -1018,6 +1611,16 @@ mod tests {
                 unsafe { rowwise_sumsq_avx2(m, cols, out) }
             }
             impls.push(("avx2", avx2));
+        }
+        #[cfg(target_arch = "x86_64")]
+        if avx512_available() {
+            fn avx512(m: &[f32], cols: usize, out: &mut [f32]) {
+                // SAFETY: the avx512_available guard above confirmed
+                // avx512f/bw/dq/vl (+avx2+fma); the test passes
+                // shape-consistent slices.
+                unsafe { rowwise_sumsq_avx512(m, cols, out) }
+            }
+            impls.push(("avx512", avx512));
         }
         for (name, ssq) in impls {
             let mut full = vec![0f32; rows];

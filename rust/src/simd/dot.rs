@@ -1,9 +1,12 @@
-//! Vector kernels with runtime scalar/AVX2+FMA dispatch.
+//! Vector kernels with runtime scalar/AVX2+FMA/AVX-512 dispatch.
 //!
 //! These are the inner loops of both training and inference: FFM latent
 //! dot products, LR accumulation, and the neural block's dense matvec
 //! (the paper reached for BLAS here; our hand-rolled FMA matvec serves
-//! the same role without an external dependency).
+//! the same role without an external dependency).  Each kernel exists
+//! per rung of the [`IsaLevel`] ladder; the AVX-512 variants widen the
+//! 8-lane ymm loops to 16-lane zmm with the same explicit reduction
+//! trees, so within one rung results are deterministic.
 
 use super::{isa_level, IsaLevel};
 
@@ -28,6 +31,11 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         // confirmed avx2+fma; equal lengths are the kernel's contract,
         // asserted above.
         IsaLevel::Avx2Fma => unsafe { dot_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `isa_level` returns Avx512 only after runtime CPUID
+        // confirmed avx512f/bw/dq/vl (+avx2+fma); equal lengths are the
+        // kernel's contract, asserted above.
+        IsaLevel::Avx512 => unsafe { dot_avx512(a, b) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => dot_scalar(a, b),
     }
@@ -47,6 +55,11 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
         // confirmed avx2+fma; equal lengths are the kernel's contract,
         // asserted above.
         IsaLevel::Avx2Fma => unsafe { axpy_avx2(alpha, x, y) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `isa_level` returns Avx512 only after runtime CPUID
+        // confirmed avx512f/bw/dq/vl (+avx2+fma); equal lengths are the
+        // kernel's contract, asserted above.
+        IsaLevel::Avx512 => unsafe { axpy_avx512(alpha, x, y) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => axpy_scalar(alpha, x, y),
     }
@@ -64,12 +77,26 @@ pub fn matvec_rowmajor(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f3
     let cols = out.len();
     debug_assert_eq!(w.len(), x.len() * cols);
     #[cfg(target_arch = "x86_64")]
-    if cols >= 8 && isa_level() == IsaLevel::Avx2Fma {
-        // SAFETY: `isa_level` returns Avx2Fma only after runtime CPUID
-        // confirmed avx2+fma; the `w.len() == x.len() * cols` shape the
-        // kernel indexes by is asserted above.
-        unsafe { matvec_avx2(x, w, bias, out) };
-        return;
+    {
+        let lvl = isa_level();
+        if cols >= 16 && lvl == IsaLevel::Avx512 {
+            // SAFETY: `isa_level` returns Avx512 only after runtime
+            // CPUID confirmed avx512f/bw/dq/vl (+avx2+fma); the
+            // `w.len() == x.len() * cols` shape the kernel indexes by
+            // is asserted above.
+            unsafe { matvec_avx512(x, w, bias, out) };
+            return;
+        }
+        // narrow outputs on an AVX-512 host still take the ymm kernel:
+        // every AVX-512 CPU has avx2+fma, and 8-lane tiles fit cols in
+        // 8..16 better than masked zmm would.
+        if cols >= 8 && lvl >= IsaLevel::Avx2Fma {
+            // SAFETY: `isa_level` at or above Avx2Fma implies runtime
+            // CPUID confirmed avx2+fma; the `w.len() == x.len() * cols`
+            // shape the kernel indexes by is asserted above.
+            unsafe { matvec_avx2(x, w, bias, out) };
+            return;
+        }
     }
     matvec_scalar(x, w, bias, out);
 }
@@ -262,6 +289,185 @@ unsafe fn matvec_avx2(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32
     }
 }
 
+// ---------------------------------------------------------------- avx512
+
+/// Deterministic 16-lane horizontal sum: fold the zmm halves into one
+/// ymm add, then the same explicit extract/movehl/shuffle tree the
+/// AVX2 kernels use (never `_mm512_reduce_add_ps`, whose reduction
+/// order is implementation-defined — rung determinism is part of the
+/// batch-invariance contract).
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx512f+avx512dq — the body is
+/// value-only intrinsics (no memory access).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512dq,avx2,fma")]
+#[inline]
+pub(super) unsafe fn hsum16(v: std::arch::x86_64::__m512) -> f32 {
+    use std::arch::x86_64::*;
+    let hi8 = _mm512_extractf32x8_ps::<1>(v);
+    let lo8 = _mm512_castps512_ps256(v);
+    let s8 = _mm256_add_ps(hi8, lo8);
+    let hi = _mm256_extractf128_ps::<1>(s8);
+    let lo = _mm256_castps256_ps128(s8);
+    let s4 = _mm_add_ps(hi, lo);
+    let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+    _mm_cvtss_f32(_mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2)))
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma,
+/// runtime-detected) and `a.len() == b.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+unsafe fn dot_avx512(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc0 = _mm512_setzero_ps();
+    let mut acc1 = _mm512_setzero_ps();
+    let mut i = 0;
+    // two accumulators hide FMA latency
+    while i + 32 <= n {
+        // SAFETY: i + 32 <= n == a.len() == b.len() bounds all four
+        // 16-lane unaligned loads.
+        unsafe {
+            let va0 = _mm512_loadu_ps(a.as_ptr().add(i));
+            let vb0 = _mm512_loadu_ps(b.as_ptr().add(i));
+            acc0 = _mm512_fmadd_ps(va0, vb0, acc0);
+            let va1 = _mm512_loadu_ps(a.as_ptr().add(i + 16));
+            let vb1 = _mm512_loadu_ps(b.as_ptr().add(i + 16));
+            acc1 = _mm512_fmadd_ps(va1, vb1, acc1);
+        }
+        i += 32;
+    }
+    while i + 16 <= n {
+        // SAFETY: i + 16 <= n bounds both 16-lane unaligned loads.
+        unsafe {
+            let va = _mm512_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm512_loadu_ps(b.as_ptr().add(i));
+            acc0 = _mm512_fmadd_ps(va, vb, acc0);
+        }
+        i += 16;
+    }
+    // SAFETY: avx512f+avx512dq are enabled per this fn's contract
+    // (hsum16 is value-only).
+    let mut s = unsafe { hsum16(_mm512_add_ps(acc0, acc1)) };
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma,
+/// runtime-detected) and `x.len() == y.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+unsafe fn axpy_avx512(alpha: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let va = _mm512_set1_ps(alpha);
+    let mut i = 0;
+    while i + 16 <= n {
+        // SAFETY: i + 16 <= n == x.len() == y.len() bounds the loads
+        // and the store.
+        unsafe {
+            let vx = _mm512_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm512_loadu_ps(y.as_ptr().add(i));
+            _mm512_storeu_ps(y.as_mut_ptr().add(i), _mm512_fmadd_ps(va, vx, vy));
+        }
+        i += 16;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+/// Register-blocked AVX-512 matvec: for cols ≤ 128 the whole output
+/// vector lives in zmm accumulators across all rows (one load+store of
+/// `out` total); wider or non-multiple-of-16 outputs fall back to an
+/// in-function row/axpy loop with 16-lane tiles and a scalar tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports avx512f/bw/dq/vl (+avx2+fma,
+/// runtime-detected), `w.len() == x.len() * out.len()` (row-major
+/// `[rows, cols]`), and `bias.len() == out.len()` when a bias is given.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512dq,avx512vl,avx2,fma")]
+unsafe fn matvec_avx512(x: &[f32], w: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let cols = out.len();
+    let vec_cols = cols & !15; // multiple of 16 part
+    if cols % 16 == 0 && cols <= 128 {
+        let nacc = cols / 16;
+        let mut acc = [_mm512_setzero_ps(); 8];
+        if let Some(b) = bias {
+            for (k, a) in acc.iter_mut().enumerate().take(nacc) {
+                // SAFETY: k * 16 + 16 <= cols == b.len() (caller
+                // contract) bounds the load.
+                *a = unsafe { _mm512_loadu_ps(b.as_ptr().add(k * 16)) };
+            }
+        }
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let vx = _mm512_set1_ps(xi);
+            // SAFETY: i < x.len() and w.len() == x.len() * cols keep
+            // row i (and its k*16+16 <= cols lanes below) in bounds.
+            let row = unsafe { w.as_ptr().add(i * cols) };
+            for (k, a) in acc.iter_mut().enumerate().take(nacc) {
+                // SAFETY: see `row` above.
+                *a = unsafe {
+                    _mm512_fmadd_ps(vx, _mm512_loadu_ps(row.add(k * 16)), *a)
+                };
+            }
+        }
+        for (k, a) in acc.iter().enumerate().take(nacc) {
+            // SAFETY: k * 16 + 16 <= cols == out.len() bounds the
+            // store.
+            unsafe { _mm512_storeu_ps(out.as_mut_ptr().add(k * 16), *a) };
+        }
+        return;
+    }
+    // general shape: bias copy then fused per-row AXPY (still one
+    // target_feature entry for the whole matvec)
+    match bias {
+        Some(b) => out.copy_from_slice(b),
+        None => out.fill(0.0),
+    }
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        // SAFETY: i < x.len() and w.len() == x.len() * cols keep row i
+        // in bounds through offset cols - 1.
+        let row = unsafe { w.as_ptr().add(i * cols) };
+        let vx = _mm512_set1_ps(xi);
+        let mut j = 0;
+        while j < vec_cols {
+            // SAFETY: j + 16 <= vec_cols <= cols bounds the row/out
+            // loads and the out store.
+            unsafe {
+                let vy = _mm512_loadu_ps(out.as_ptr().add(j));
+                let vw = _mm512_loadu_ps(row.add(j));
+                _mm512_storeu_ps(
+                    out.as_mut_ptr().add(j),
+                    _mm512_fmadd_ps(vx, vw, vy),
+                );
+            }
+            j += 16;
+        }
+        while j < cols {
+            // SAFETY: j < cols bounds the scalar tail read of row i.
+            out[j] += xi * unsafe { *row.add(j) };
+            j += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -375,5 +581,35 @@ mod tests {
         };
         let v = dot(&a, &b);
         assert!((s - v).abs() < 1e-2 * (1.0 + s.abs()), "s={s} v={v}");
+    }
+
+    #[test]
+    fn every_available_rung_agrees_on_dot_and_matvec() {
+        let mut rng = Pcg32::seeded(6);
+        let a = randvec(&mut rng, 100);
+        let b = randvec(&mut rng, 100);
+        let (rows, cols) = (17, 48);
+        let x = randvec(&mut rng, rows);
+        let w = randvec(&mut rng, rows * cols);
+        let want_dot = dot_scalar(&a, &b);
+        let mut want_mv = vec![0.0f32; cols];
+        matvec_scalar(&x, &w, None, &mut want_mv);
+        let _serial = forcing_test_lock();
+        for lvl in crate::simd::available_levels() {
+            let _g = ForcedIsaGuard::force(lvl);
+            let got = dot(&a, &b);
+            assert!(
+                (got - want_dot).abs() < 1e-3 * (1.0 + want_dot.abs()),
+                "{lvl:?}: dot {got} vs {want_dot}"
+            );
+            let mut mv = vec![0.0f32; cols];
+            matvec_rowmajor(&x, &w, None, &mut mv);
+            for j in 0..cols {
+                assert!(
+                    (mv[j] - want_mv[j]).abs() < 1e-3 * (1.0 + want_mv[j].abs()),
+                    "{lvl:?}: matvec col {j}"
+                );
+            }
+        }
     }
 }

@@ -7,45 +7,87 @@
 //! place."
 //!
 //! This module implements exactly that: the hot kernels (dot products,
-//! axpy, dense matvec, the FFM pairwise inner loop) exist in a scalar
-//! form and an AVX2+FMA form, and a process-wide dispatch decision is
-//! taken once at startup via `is_x86_feature_detected!`.  Benchmarks
-//! (Figure 5) can force the scalar path through [`force_scalar`].
+//! axpy, dense matvec, the batched GEMM-lite spine, the FFM pairwise
+//! inner loop) exist on a ladder of ISA rungs — scalar, AVX2+FMA, and
+//! AVX-512 (F/BW/DQ/VL) — and a process-wide dispatch decision is taken
+//! once at startup via `is_x86_feature_detected!`.  Every rung above the
+//! CPU's capability falls back to the best available one, so forcing is
+//! clamp-down-only and a binary built here runs unchanged across a
+//! heterogeneous fleet.  Benchmarks (Figure 5) force specific rungs
+//! through [`ForcedIsaGuard`]; the `FW_FORCE_ISA` environment variable
+//! clamps the *detected* default the same way for whole test processes.
 
 pub mod batch;
 pub mod dot;
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
-/// Selected instruction set.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Selected instruction set, ordered weakest to strongest: dispatch
+/// sites test `isa_level() >= IsaLevel::Avx2Fma` so a stronger rung
+/// implies every weaker rung's kernels remain callable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum IsaLevel {
     Scalar = 0,
     Avx2Fma = 1,
+    Avx512 = 2,
+}
+
+impl IsaLevel {
+    /// Decode the dispatch byte stored in the atomics below; anything
+    /// out of range (notably `UNSET`) decodes to the weakest rung.
+    fn from_u8(v: u8) -> IsaLevel {
+        match v {
+            2 => IsaLevel::Avx512,
+            1 => IsaLevel::Avx2Fma,
+            _ => IsaLevel::Scalar,
+        }
+    }
+
+    /// Parse a rung name as accepted by `fw --force-isa` and
+    /// `FW_FORCE_ISA` ("scalar" | "avx2" | "avx512"; the long metric
+    /// names "avx2+fma" / "avx512vl" are accepted as aliases).
+    pub fn parse(s: &str) -> Option<IsaLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(IsaLevel::Scalar),
+            "avx2" | "avx2+fma" => Some(IsaLevel::Avx2Fma),
+            "avx512" | "avx512vl" => Some(IsaLevel::Avx512),
+            _ => None,
+        }
+    }
+
+    /// Human-readable rung name (stable: recorded in `BENCH_*.json`
+    /// envelopes and the `fw_isa_level` gauge help text).
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaLevel::Scalar => "scalar",
+            IsaLevel::Avx2Fma => "avx2+fma",
+            IsaLevel::Avx512 => "avx512",
+        }
+    }
 }
 
 const UNSET: u8 = u8::MAX;
 static FORCED: AtomicU8 = AtomicU8::new(UNSET);
 static RESOLVED: AtomicU8 = AtomicU8::new(UNSET);
+static HW_BEST: AtomicU8 = AtomicU8::new(UNSET);
 
 /// Detect the best ISA available on this machine (honouring any
 /// force).  The CPUID probe runs once; afterwards this is a single
 /// relaxed atomic load — cheap enough for per-kernel dispatch.
 #[inline]
 pub fn isa_level() -> IsaLevel {
-    // ordering: Relaxed throughout — both cells hold a self-contained
-    // one-byte dispatch decision; no other data is published through
-    // them.  Racing threads may each run the idempotent CPUID probe
-    // once, converging on the same value.
-    match FORCED.load(Ordering::Relaxed) {
-        0 => return IsaLevel::Scalar,
-        1 => return IsaLevel::Avx2Fma,
-        _ => {}
+    // ordering: Relaxed throughout — all three cells hold a
+    // self-contained one-byte dispatch decision; no other data is
+    // published through them.  Racing threads may each run the
+    // idempotent CPUID probe once, converging on the same value.
+    let f = FORCED.load(Ordering::Relaxed);
+    if f != UNSET {
+        return IsaLevel::from_u8(f);
     }
     // ordering: Relaxed — see above.
     let r = RESOLVED.load(Ordering::Relaxed);
     if r != UNSET {
-        return if r == 1 { IsaLevel::Avx2Fma } else { IsaLevel::Scalar };
+        return IsaLevel::from_u8(r);
     }
     let d = detect();
     // ordering: Relaxed — see above.
@@ -53,12 +95,54 @@ pub fn isa_level() -> IsaLevel {
     d
 }
 
-fn detect() -> IsaLevel {
+/// The strongest rung this CPU can execute, ignoring any forcing and
+/// the `FW_FORCE_ISA` clamp.  Forcing APIs clamp against this so a
+/// requested rung the hardware lacks degrades to the best available
+/// one instead of dispatching illegal instructions.
+pub fn best_available() -> IsaLevel {
+    // ordering: Relaxed — self-contained dispatch byte, see
+    // `isa_level`.
+    let c = HW_BEST.load(Ordering::Relaxed);
+    if c != UNSET {
+        return IsaLevel::from_u8(c);
+    }
+    let b = probe();
+    // ordering: Relaxed — see `isa_level`.
+    HW_BEST.store(b as u8, Ordering::Relaxed);
+    b
+}
+
+/// Every rung this CPU can run, weakest first (always starts with
+/// [`IsaLevel::Scalar`]).  Benches and the cross-rung parity property
+/// iterate this to cover the whole ladder on whatever host they run.
+pub fn available_levels() -> Vec<IsaLevel> {
+    let best = best_available();
+    let mut v = vec![IsaLevel::Scalar];
+    if best >= IsaLevel::Avx2Fma {
+        v.push(IsaLevel::Avx2Fma);
+    }
+    if best >= IsaLevel::Avx512 {
+        v.push(IsaLevel::Avx512);
+    }
+    v
+}
+
+/// One-shot CPUID probe for the strongest rung.
+fn probe() -> IsaLevel {
     // Miri has no CPUID and cannot execute vendor intrinsics — the
     // scalar kernels are the only sound path under the interpreter, so
     // the probe is compiled out entirely there.
     #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
+        if std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512bw")
+            && std::arch::is_x86_feature_detected!("avx512dq")
+            && std::arch::is_x86_feature_detected!("avx512vl")
+            && std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return IsaLevel::Avx512;
+        }
         if std::arch::is_x86_feature_detected!("avx2")
             && std::arch::is_x86_feature_detected!("fma")
         {
@@ -68,30 +152,57 @@ fn detect() -> IsaLevel {
     IsaLevel::Scalar
 }
 
-/// Force a specific ISA level (Figure 5's SIMD-disabled control runs).
+/// Resolve the process default: the hardware's best rung, clamped down
+/// by `FW_FORCE_ISA` when set to a parsable rung name (unparsable
+/// values are ignored — a fleet-wide env var must never turn into a
+/// startup failure).  The env clamp only lowers the default; it cannot
+/// enable a rung the CPU lacks, and [`ForcedIsaGuard`] still overrides
+/// it (so forcing tests behave identically under every CI matrix leg).
+fn detect() -> IsaLevel {
+    let best = best_available();
+    match std::env::var("FW_FORCE_ISA").ok().and_then(|v| IsaLevel::parse(&v)) {
+        Some(clamp) => clamp.min(best),
+        None => best,
+    }
+}
+
+/// Force a specific ISA level process-wide, clamped down to the best
+/// rung the CPU actually supports; `None` removes the force.
 ///
 /// This mutates a process-wide atomic and never restores it: reserve it
-/// for process-scoped decisions (the `fw --scalar` CLI flag).  Tests
-/// and benches must use [`ForcedIsaGuard`] instead, which restores the
-/// prior forced state on drop.
-pub fn force_scalar(on: bool) {
-    let v = if on { IsaLevel::Scalar as u8 } else { UNSET };
+/// for process-scoped decisions (the `fw serve --force-isa` CLI flag).
+/// Tests and benches must use [`ForcedIsaGuard`] instead, which
+/// restores the prior forced state on drop.
+pub fn force_isa(level: Option<IsaLevel>) {
+    let v = match level {
+        Some(l) => l.min(best_available()) as u8,
+        None => UNSET,
+    };
     // ordering: Relaxed — self-contained dispatch byte, see
     // `isa_level`.
     FORCED.store(v, Ordering::Relaxed);
 }
 
-/// Scoped ISA forcing: forces the scalar kernels on construction and
-/// restores the *previous* forced state — including "unforced" — when
-/// dropped, LIFO-nestable.
+/// Force the scalar kernels (Figure 5's SIMD-disabled control runs) —
+/// the historical single-rung forcing entry, kept as an alias of
+/// [`force_isa`].
+pub fn force_scalar(on: bool) {
+    force_isa(if on { Some(IsaLevel::Scalar) } else { None });
+}
+
+/// Scoped ISA forcing: forces a rung on construction and restores the
+/// *previous* forced state — including "unforced" — when dropped,
+/// LIFO-nestable.  Forcing is clamp-down-only: requesting a rung the
+/// CPU lacks forces the best available one instead.
 ///
-/// [`force_scalar`] leaves the process-wide dispatch atomic mutated
+/// [`force_isa`] leaves the process-wide dispatch atomic mutated
 /// forever; a test that forced scalar and forgot (or panicked before)
 /// the restore silently poisoned every concurrently-running
 /// `cargo test` thread onto the scalar path.  The guard bounds the
 /// mutation to a scope — though while it lives, *other* threads still
 /// observe the forced level (the dispatch decision is inherently
-/// process-global), so equality tests comparing forced-scalar against
+/// process-global), so forcing tests must serialize through
+/// [`forcing_lock`], and equality tests comparing forced-scalar against
 /// SIMD results should call concrete kernels directly where bit-exact
 /// dispatch matters.
 pub struct ForcedIsaGuard {
@@ -105,15 +216,21 @@ impl std::fmt::Debug for ForcedIsaGuard {
 }
 
 impl ForcedIsaGuard {
-    /// Force the scalar kernels until the guard drops (Figure 5's
-    /// SIMD-disabled control arm).
-    pub fn scalar() -> Self {
+    /// Force `level` (clamped down to [`best_available`]) until the
+    /// guard drops.
+    pub fn force(level: IsaLevel) -> Self {
         ForcedIsaGuard {
             // ordering: Relaxed — self-contained dispatch byte, see
             // `isa_level`; the swap makes force+remember one atomic
             // step so LIFO-nested guards restore correctly.
-            prev: FORCED.swap(IsaLevel::Scalar as u8, Ordering::Relaxed),
+            prev: FORCED.swap(level.min(best_available()) as u8, Ordering::Relaxed),
         }
+    }
+
+    /// Force the scalar kernels until the guard drops (Figure 5's
+    /// SIMD-disabled control arm).
+    pub fn scalar() -> Self {
+        ForcedIsaGuard::force(IsaLevel::Scalar)
     }
 }
 
@@ -125,27 +242,33 @@ impl Drop for ForcedIsaGuard {
     }
 }
 
-/// True when the AVX2+FMA path is live.
+/// True when any vector path (AVX2+FMA or stronger) is live.
 pub fn simd_active() -> bool {
-    isa_level() == IsaLevel::Avx2Fma
+    isa_level() >= IsaLevel::Avx2Fma
 }
 
-/// Human-readable description for logs/metrics.
+/// Human-readable description of the live rung for logs/metrics,
+/// exhaustive over [`IsaLevel`].
 pub fn isa_name() -> &'static str {
-    match isa_level() {
-        IsaLevel::Scalar => "scalar",
-        IsaLevel::Avx2Fma => "avx2+fma",
-    }
+    isa_level().name()
 }
 
-/// Serializes tests that mutate the process-wide `FORCED` atomic: the
-/// dispatch decision is global, so forcing tests running on parallel
-/// `cargo test` threads would otherwise observe each other's state.
-#[cfg(test)]
-pub(crate) fn forcing_test_lock() -> std::sync::MutexGuard<'static, ()> {
+/// Serializes code that mutates the process-wide forced-ISA atomic:
+/// the dispatch decision is global, so forcing tests or bench arms
+/// running on parallel threads would otherwise observe each other's
+/// state.  Any test asserting *bit-exact* equality through the
+/// dispatched entry points should either hold this lock or call the
+/// concrete kernels directly.
+pub fn forcing_lock() -> std::sync::MutexGuard<'static, ()> {
     static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    // The protected state (the FORCED atomic) stays consistent across a
+    // panicking holder — a poisoned lock only means a forcing test
+    // failed, so keep serializing instead of cascading the panic.
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
+
+#[cfg(test)]
+pub(crate) use forcing_lock as forcing_test_lock;
 
 #[cfg(test)]
 mod tests {
@@ -189,6 +312,50 @@ mod tests {
         });
         assert!(result.is_err());
         assert_eq!(FORCED.load(Ordering::Relaxed), before);
+    }
+
+    #[test]
+    fn forcing_clamps_down_to_best_available() {
+        let _serial = forcing_test_lock();
+        let best = best_available();
+        for req in [IsaLevel::Scalar, IsaLevel::Avx2Fma, IsaLevel::Avx512] {
+            let g = ForcedIsaGuard::force(req);
+            assert_eq!(
+                isa_level(),
+                req.min(best),
+                "forcing {req:?} on a host whose best rung is {best:?}"
+            );
+            drop(g);
+        }
+        // process-wide forcing clamps identically
+        force_isa(Some(IsaLevel::Avx512));
+        assert_eq!(isa_level(), IsaLevel::Avx512.min(best));
+        force_isa(None);
+    }
+
+    #[test]
+    fn available_levels_is_a_prefix_ladder() {
+        let levels = available_levels();
+        assert_eq!(levels[0], IsaLevel::Scalar);
+        assert!(levels.windows(2).all(|w| w[0] < w[1]), "{levels:?}");
+        assert_eq!(*levels.last().unwrap(), best_available());
+    }
+
+    #[test]
+    fn parse_round_trips_every_rung_name() {
+        for l in [IsaLevel::Scalar, IsaLevel::Avx2Fma, IsaLevel::Avx512] {
+            assert_eq!(IsaLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(IsaLevel::parse("avx2"), Some(IsaLevel::Avx2Fma));
+        assert_eq!(IsaLevel::parse("avx512"), Some(IsaLevel::Avx512));
+        assert_eq!(IsaLevel::parse(" AVX512 "), Some(IsaLevel::Avx512));
+        assert_eq!(IsaLevel::parse("sse9"), None);
+    }
+
+    #[test]
+    fn rung_order_matches_dispatch_tests() {
+        assert!(IsaLevel::Scalar < IsaLevel::Avx2Fma);
+        assert!(IsaLevel::Avx2Fma < IsaLevel::Avx512);
     }
 
     #[test]

@@ -230,6 +230,9 @@ fn prop_transfer_modes_reconstruct() {
 #[test]
 #[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_fleet_delta_chain_catchup_bit_identical() {
+    // bit-exact across the whole run: serialize against rung forcing
+    // (the cross-rung parity property toggles the dispatch atomic)
+    let _serial = fwumious::simd::forcing_lock();
     prop(6, |g| {
         let buckets = 1u32 << 9;
         let cfg = ModelConfig::ffm(4, 2, buckets);
@@ -288,6 +291,8 @@ fn prop_fleet_delta_chain_catchup_bit_identical() {
 #[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_crash_restore_replays_bit_identically() {
     use fwumious::fleet::FabricCheckpoint;
+    // bit-exact across the whole run: serialize against rung forcing
+    let _serial = fwumious::simd::forcing_lock();
     prop(6, |g| {
         let buckets = 1u32 << 9;
         let cfg = ModelConfig::ffm(4, 2, buckets);
@@ -521,6 +526,8 @@ fn prop_grouped_scoring_matches_per_request() {
     use fwumious::serve::router::Router;
     use fwumious::serve::server::score_requests_coalesced;
     use fwumious::serve::{ModelHandle, Request};
+    // bit-exact grouped-vs-sequential: serialize against rung forcing
+    let _serial = fwumious::simd::forcing_lock();
     prop(10, |g| {
         let buckets = 1u32 << 8;
         for arch in 0..3usize {
@@ -603,6 +610,8 @@ fn prop_grouped_scoring_matches_per_request() {
 #[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn prop_learn_batch_matches_per_example() {
     use fwumious::model::optimizer::GradRecorder;
+    // B=1 bit-identity: serialize against rung forcing
+    let _serial = fwumious::simd::forcing_lock();
     prop(6, |g| {
         let buckets = 1u32 << 8;
         let k = [2usize, 4, 8][g.usize_in(0..3)];
@@ -703,6 +712,8 @@ fn prop_learn_batch_matches_per_example() {
 #[cfg_attr(miri, ignore)] // minutes under the interpreter even at 3 cases
 fn workspace_survives_interleaved_model_dims() {
     use fwumious::serve::trace::TraceGenerator;
+    // bit-exact stale-vs-fresh workspace: serialize against rung forcing
+    let _serial = fwumious::simd::forcing_lock();
     let cfgs = [
         ModelConfig::deep_ffm(4, 2, 256, &[8]),
         ModelConfig::deep_ffm(9, 8, 512, &[32, 16]),
@@ -811,4 +822,184 @@ fn miri_scalar_kernels_roundtrip() {
             assert!((sq[bi] - s2).abs() < 1e-4);
         }
     });
+}
+
+/// The ISA-ladder contract: every rung the host offers, forced via
+/// `ForcedIsaGuard` under the process-wide forcing lock, agrees with
+/// the scalar reference on every dispatched kernel — the vector spine
+/// (`dot`/`axpy`/`matvec_rowmajor`), the batched GEMM trio, the
+/// rowwise reductions, and the FFM pair kernels at k ∈ {2, 4, 8, 16}
+/// — across ragged shapes straddling the 8/16-lane thresholds and the
+/// 32-element dot cutover.  A forced-Scalar rung must reproduce the
+/// reference bit-for-bit (same code path by construction); vector
+/// rungs get a 1e-5 relative tolerance (fp reassociation only).
+#[test]
+#[cfg_attr(miri, ignore)] // CPUID probe compiled out under Miri: one rung only
+fn prop_cross_rung_kernel_parity() {
+    use fwumious::feature::{Example, FeatureSlot};
+    use fwumious::model::block_ffm;
+    use fwumious::model::weights::{Layout, WeightPool};
+    use fwumious::simd::{self, batch, dot, ForcedIsaGuard, IsaLevel};
+    use fwumious::util::rng::Pcg32;
+
+    // the guard swaps a process-global dispatch atomic: serialize with
+    // every other bit-exact property in this binary
+    let _serial = simd::forcing_lock();
+
+    fn close(got: f32, want: f32, bit: bool, what: &str) {
+        if bit {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{what}: {got} != {want} bitwise"
+            );
+        } else {
+            assert!(
+                (got - want).abs() < 1e-5 * (1.0 + want.abs()),
+                "{what}: {got} vs {want}"
+            );
+        }
+    }
+
+    // --- the dense spine: (batch, rows, cols) ragged shapes ---
+    let shapes = [
+        (1usize, 3usize, 5usize), // everything below every threshold
+        (2, 7, 8),                // one ymm column strip exactly
+        (3, 9, 17),               // zmm strip + 1-wide tail
+        (2, 17, 33),              // dot above its scalar cutover
+        (1, 33, 48),              // register-blocked matvec shapes
+        (4, 5, 100),              // wide rows, ragged 4-lane tail
+    ];
+    let mut rng = Pcg32::seeded(0xC0FFEE);
+    for (case, &(bn, rows, cols)) in shapes.iter().enumerate() {
+        let fill = |rng: &mut Pcg32, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() * 0.5).collect()
+        };
+        let x = fill(&mut rng, bn * rows);
+        let w = fill(&mut rng, rows * cols);
+        let bias = fill(&mut rng, cols);
+        let dy = fill(&mut rng, bn * cols);
+        let va = fill(&mut rng, cols);
+        let vb = fill(&mut rng, cols);
+        let alpha = 0.75f32;
+
+        struct Ref {
+            dot: f32,
+            axpy: Vec<f32>,
+            mv: Vec<f32>,
+            mm: Vec<f32>,
+            mt: Vec<f32>,
+            xt: Vec<f32>,
+            sum: Vec<f32>,
+            sq: Vec<f32>,
+        }
+        let run = |lvl: IsaLevel| -> Ref {
+            let _g = ForcedIsaGuard::force(lvl);
+            let mut axpy = vb.clone();
+            dot::axpy(alpha, &va, &mut axpy);
+            let mut mv = vec![0f32; cols];
+            dot::matvec_rowmajor(&x[..rows], &w, Some(&bias), &mut mv);
+            let mut mm = vec![0f32; bn * cols];
+            batch::matmul_rowmajor(&x, bn, &w, rows, cols, Some(&bias), &mut mm);
+            let mut mt = vec![0f32; bn * rows];
+            batch::matmul_transposed(&dy, bn, &w, rows, cols, &mut mt);
+            let mut xt = vec![0f32; rows * cols];
+            batch::matmul_xt_dy(&x, bn, &dy, rows, cols, &mut xt);
+            let mut sum = vec![0f32; bn];
+            batch::rowwise_sum(&mm, bn, cols, &mut sum);
+            let mut sq = vec![0f32; bn];
+            batch::rowwise_sumsq(&mm, bn, cols, &mut sq);
+            Ref { dot: dot::dot(&va, &vb), axpy, mv, mm, mt, xt, sum, sq }
+        };
+
+        let want = run(IsaLevel::Scalar);
+        for lvl in simd::available_levels() {
+            let got = run(lvl);
+            let bit = lvl == IsaLevel::Scalar;
+            let tag = format!("case {case} rung {}", lvl.name());
+            close(got.dot, want.dot, bit, &format!("{tag} dot"));
+            for (name, g, r) in [
+                ("axpy", &got.axpy, &want.axpy),
+                ("matvec", &got.mv, &want.mv),
+                ("matmul", &got.mm, &want.mm),
+                ("matmul_t", &got.mt, &want.mt),
+                ("xt_dy", &got.xt, &want.xt),
+                ("rowwise_sum", &got.sum, &want.sum),
+                ("rowwise_sumsq", &got.sq, &want.sq),
+            ] {
+                assert_eq!(g.len(), r.len());
+                for (i, (a, b)) in g.iter().zip(r.iter()).enumerate() {
+                    close(*a, *b, bit, &format!("{tag} {name}[{i}]"));
+                }
+            }
+        }
+    }
+
+    // --- the FFM pair kernels, per rung × latent dim ---
+    for k in [2usize, 4, 8, 16] {
+        let fields = 6usize;
+        let ctx_len = 2usize;
+        let cfg = ModelConfig::ffm(fields, k, 64);
+        let layout = Layout::new(&cfg);
+        let mut pool = WeightPool::init(&cfg, &layout);
+        let mut rng = Pcg32::seeded(7000 + k as u64);
+        for w in &mut pool.weights[layout.ffm_off..] {
+            *w = rng.normal() * 0.3;
+        }
+        let slot = |rng: &mut Pcg32, f: usize| FeatureSlot {
+            field: f as u16,
+            bucket: rng.below(64),
+            value: if rng.below(6) == 0 { 0.0 } else { 0.3 + rng.next_f32() },
+        };
+        let slots: Vec<FeatureSlot> =
+            (0..fields).map(|f| slot(&mut rng, f)).collect();
+        let ex = Example { label: 1.0, importance: 1.0, slots };
+        let ctx: Vec<FeatureSlot> =
+            (0..ctx_len).map(|f| slot(&mut rng, f)).collect();
+        let batch_n = 5usize;
+        let cw = fields - ctx_len;
+        let mut cand = Vec::new();
+        for _ in 0..batch_n {
+            for f in ctx_len..fields {
+                cand.push(slot(&mut rng, f));
+            }
+        }
+        assert_eq!(cand.len(), batch_n * cw);
+        let np = cfg.pairs();
+
+        let run = |lvl: IsaLevel| -> (f32, Vec<f32>, Vec<f32>) {
+            let _g = ForcedIsaGuard::force(lvl);
+            let mut pairs = vec![0f32; np];
+            let total =
+                block_ffm::forward(&pool.weights, &layout, fields, k, &ex, &mut pairs);
+            // ctx×ctx entries stay at the init value on every rung, so
+            // a plain element-wise compare covers them too
+            let mut bp = vec![0f32; batch_n * np];
+            block_ffm::forward_partial_batch(
+                &pool.weights,
+                &layout,
+                fields,
+                k,
+                ctx_len,
+                &ctx,
+                &cand,
+                &mut bp,
+            );
+            (total, pairs, bp)
+        };
+
+        let (wt, wp, wbp) = run(IsaLevel::Scalar);
+        for lvl in simd::available_levels() {
+            let (gt, gp, gbp) = run(lvl);
+            let bit = lvl == IsaLevel::Scalar;
+            let tag = format!("ffm k={k} rung {}", lvl.name());
+            close(gt, wt, bit, &format!("{tag} total"));
+            for (i, (a, b)) in gp.iter().zip(wp.iter()).enumerate() {
+                close(*a, *b, bit, &format!("{tag} pair[{i}]"));
+            }
+            for (i, (a, b)) in gbp.iter().zip(wbp.iter()).enumerate() {
+                close(*a, *b, bit, &format!("{tag} batch-pair[{i}]"));
+            }
+        }
+    }
 }
